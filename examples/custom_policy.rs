@@ -1,0 +1,106 @@
+//! Writing a new scheduling policy in a dozen lines (paper §6.2 / Fig. 6).
+//!
+//! Implements the paper's Figure-6 policy — boost one high-priority
+//! session and migrate it away from busy instances — and shows it acting
+//! on a live deployment. The `tick` body is 12 lines, mirroring the
+//! paper's claim that operators explore policies in ~12 LoC.
+//!
+//! Run: `cargo run --release --example custom_policy`
+
+use std::time::Duration;
+
+use nalar::coordinator::{ClusterView, Policy, PolicyApi};
+use nalar::ids::SessionId;
+use nalar::json;
+use nalar::server::Deployment;
+use nalar::workflow::{Env, WorkflowKind};
+
+/// Figure 6: request prioritization for one VIP session.
+struct VipSession {
+    session: SessionId,
+}
+
+impl Policy for VipSession {
+    fn name(&self) -> &'static str {
+        "vip_session"
+    }
+
+    // -- the 12 lines ----------------------------------------------------
+    fn tick(&mut self, view: &ClusterView, api: &mut PolicyApi) {
+        api.set_priority(self.session, 10);
+        for agent in view.instances.iter() {
+            if agent.m.waiting_sessions.iter().any(|(s, _)| *s == self.session) {
+                if let Some(idle) = view
+                    .instances_of(&agent.m.agent)
+                    .find(|o| o.id != agent.id && o.m.queue_len == 0)
+                {
+                    api.migrate(self.session, agent.id.clone(), idle.id.clone());
+                }
+            }
+        }
+    }
+    // ---------------------------------------------------------------------
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = WorkflowKind::Financial.config();
+    cfg.time_scale = 0.002;
+    cfg.policies.clear(); // only the custom policy acts
+    let d = Deployment::launch(cfg)?;
+
+    let vip = d.new_session();
+    println!("installing VipSession policy for {vip}");
+    // Install by driving the global controller manually each period
+    // (operators normally list the policy in the config; this shows the
+    // same objects wired by hand).
+    let global = d.global();
+    let mut policy = VipSession { session: vip };
+
+    // Background load from other sessions.
+    let mut handles = Vec::new();
+    for _ in 0..6 {
+        let session = d.new_session();
+        let env = Env::new(&d, session);
+        handles.push(std::thread::spawn(move || {
+            let f = env.ctx.agent("analyst").call(
+                "summarize",
+                json!({"prompt": "background load", "max_new_tokens": 200}),
+            );
+            let _ = f.value(Duration::from_secs(30));
+        }));
+    }
+    std::thread::sleep(Duration::from_millis(30));
+
+    // The VIP request arrives while instances are busy.
+    let env = Env::new(&d, vip);
+    let f = env.ctx.agent("analyst").call(
+        "summarize",
+        json!({"prompt": "urgent: board meeting", "max_new_tokens": 60}),
+    );
+    // Run a few policy ticks while the request is in flight.
+    for _ in 0..10 {
+        let view = global.collect();
+        let mut api = PolicyApi::new();
+        policy.tick(&view, &mut api);
+        let n = api.commands().len();
+        global.apply(api.take_commands());
+        if n > 0 {
+            println!("tick issued {n} command(s)");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        if f.available() {
+            break;
+        }
+    }
+    let out = f.value(Duration::from_secs(30))?;
+    println!(
+        "VIP request served: {} tokens (priority path)",
+        out.get("generated_tokens").as_i64().unwrap_or(0)
+    );
+    for h in handles {
+        let _ = h.join();
+    }
+    d.shutdown();
+    println!("OK");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Financial-analyst workflow under load (Fig. 9a scenario, sim engine).
+//!
+//! Serves the stateful analyst workflow at a configurable rate and prints
+//! the Fig-9a row (avg/P50/P95/P99 in paper-equivalent seconds) plus
+//! migration and KV-policy counters — NALAR vs a chosen baseline.
+//!
+//! Run: `cargo run --release --example financial_analyst -- --rps 4 --system nalar`
+
+use std::time::Duration;
+
+use nalar::baselines::SystemUnderTest;
+use nalar::server::Deployment;
+use nalar::util::cli::Args;
+use nalar::workflow::{run_open_loop, RunConfig, WorkflowKind};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let rps = args.f64_or("rps", 4.0);
+    let secs = args.u64_or("secs", 5);
+    let system = match args.str_or("system", "nalar").as_str() {
+        "ayo" => SystemUnderTest::AyoLike,
+        "crew" => SystemUnderTest::CrewLike,
+        "autogen" => SystemUnderTest::AutoGenLike,
+        _ => SystemUnderTest::Nalar,
+    };
+
+    let cfg = WorkflowKind::Financial.config();
+    let scale = cfg.time_scale;
+    println!(
+        "== financial analyst | {} | {} wall-RPS ({:.0} paper-RPS) | {}s ==",
+        system.name(),
+        rps,
+        rps * scale,
+        secs
+    );
+    let d = Deployment::launch_as(cfg, system)?;
+
+    let rc = RunConfig {
+        workflow: WorkflowKind::Financial,
+        rps,
+        duration: Duration::from_secs(secs),
+        session_pool: 32,
+        request_timeout: Duration::from_secs(60),
+        seed: 11,
+    };
+    let (stats, rec) = run_open_loop(&d, &rc);
+    let paper = rec.summary_scaled(1.0 / stats.time_scale);
+
+    println!("completed {} / failed {}", stats.completed, stats.failed);
+    println!(
+        "latency (paper-s): avg {:.0}  p50 {:.0}  p95 {:.0}  p99 {:.0}",
+        paper.avg, paper.p50, paper.p95, paper.p99
+    );
+    println!("analyst load imbalance: {:.2}x", stats.imbalance);
+
+    let view = d.global().collect();
+    let (mut mig_in, mut mig_out) = (0, 0);
+    for i in &view.instances {
+        mig_in += i.m.migrated_in;
+        mig_out += i.m.migrated_out;
+    }
+    println!("migrations: {mig_out} out / {mig_in} in");
+    d.shutdown();
+    Ok(())
+}

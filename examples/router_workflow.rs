@@ -1,0 +1,51 @@
+//! Router workflow under shifting load (Fig. 9b scenario).
+//!
+//! The Azure-like trace flips from chat-heavy to coder-heavy mid-run;
+//! NALAR's resource_realloc policy kills idle chat instances and
+//! provisions coder instances, while baselines ride out the imbalance.
+//!
+//! Run: `cargo run --release --example router_workflow -- --rps 40`
+
+use std::time::Duration;
+
+use nalar::baselines::SystemUnderTest;
+use nalar::server::Deployment;
+use nalar::util::cli::Args;
+use nalar::workflow::{run_open_loop, RunConfig, WorkflowKind};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let rps = args.f64_or("rps", 40.0);
+    let secs = args.u64_or("secs", 6);
+
+    for system in [SystemUnderTest::Nalar, SystemUnderTest::AutoGenLike] {
+        let cfg = WorkflowKind::Router.config();
+        let d = Deployment::launch_as(cfg, system)?;
+        let rc = RunConfig {
+            workflow: WorkflowKind::Router,
+            rps,
+            duration: Duration::from_secs(secs),
+            session_pool: 64,
+            request_timeout: Duration::from_secs(30),
+            seed: 22,
+        };
+        let (stats, rec) = run_open_loop(&d, &rc);
+        let paper = rec.summary_scaled(1.0 / stats.time_scale);
+        let view = d.global().collect();
+        let chat = view.instances_of("chat").count();
+        let coder = view.instances_of("coder").count();
+        println!(
+            "{:<13} avg {:>6.1} p99 {:>7.1} (paper-s) | ok {:>4} fail {:>3} | imbalance {:.2}x | final chat={} coder={}",
+            system.name(),
+            paper.avg,
+            paper.p99,
+            stats.completed,
+            stats.failed,
+            stats.imbalance,
+            chat,
+            coder,
+        );
+        d.shutdown();
+    }
+    Ok(())
+}

@@ -1,0 +1,183 @@
+"""AOT compile path: lower the L2 model to HLO text + weight blob.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Outputs (consumed by the Rust runtime, ``rust/src/runtime/``):
+
+* ``artifacts/<entry>.hlo.txt`` — one HLO module per (phase, batch) variant.
+  HLO **text** is the interchange format, not a serialized ``HloModuleProto``:
+  jax >= 0.5 emits protos with 64-bit instruction ids that the ``xla``
+  crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+  parser reassigns ids and round-trips cleanly.
+* ``artifacts/params.bin`` — all weights, f32 little-endian, concatenated in
+  :func:`compile.model.param_spec` order.
+* ``artifacts/manifest.json`` — model config, weight layout, and the
+  input/output signature of every entry point.
+
+Every entry takes the weights as *leading* runtime inputs (same order for
+every variant), then the data inputs. Entries are lowered with
+``return_tuple=True`` so the Rust side unwraps one tuple.
+"""
+
+import argparse
+import functools
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import ModelConfig, decode, embed, flat_params, init_params, param_spec, prefill
+
+PREFILL_BATCHES = (1, 2, 4)
+DECODE_BATCHES = (1, 2, 4, 8)
+EMBED_BATCHES = (1, 4)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_specs(cfg):
+    return [_spec(shape) for _, shape in param_spec(cfg)]
+
+
+def _rebuild(cfg, flat):
+    names = [name for name, _ in param_spec(cfg)]
+    return dict(zip(names, flat))
+
+
+def build_entries(cfg: ModelConfig):
+    """Yield ``(name, fn(*flat_params, *data), data_specs, data_names)``."""
+    n_params = len(list(param_spec(cfg)))
+    t, s = cfg.max_seq, cfg.max_seq
+    kv_shape = lambda b: (cfg.n_layers, 2, b, cfg.n_heads, s, cfg.head_dim)
+
+    def prefill_fn(*args):
+        params = _rebuild(cfg, args[:n_params])
+        tokens, length = args[n_params:]
+        return prefill(params, tokens, length, cfg)
+
+    def decode_fn(*args):
+        params = _rebuild(cfg, args[:n_params])
+        token, pos, kv = args[n_params:]
+        return decode(params, token, pos, kv, cfg)
+
+    def embed_fn(*args):
+        params = _rebuild(cfg, args[:n_params])
+        tokens, length = args[n_params:]
+        return (embed(params, tokens, length, cfg),)
+
+    for b in PREFILL_BATCHES:
+        yield (
+            f"prefill_b{b}",
+            prefill_fn,
+            [_spec((b, t), jnp.int32), _spec((b,), jnp.int32)],
+            ["tokens", "length"],
+            [("logits", (b, cfg.vocab), "f32"), ("kv", kv_shape(b), "f32")],
+        )
+    for b in DECODE_BATCHES:
+        yield (
+            f"decode_b{b}",
+            decode_fn,
+            [_spec((b,), jnp.int32), _spec((b,), jnp.int32), _spec(kv_shape(b))],
+            ["token", "pos", "kv"],
+            [("logits", (b, cfg.vocab), "f32"), ("kv", kv_shape(b), "f32")],
+        )
+    for b in EMBED_BATCHES:
+        yield (
+            f"embed_b{b}",
+            embed_fn,
+            [_spec((b, t), jnp.int32), _spec((b,), jnp.int32)],
+            ["tokens", "length"],
+            [("embedding", (b, cfg.d_model), "f32")],
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    cfg = ModelConfig()
+    params = init_params(cfg, seed=args.seed)
+    flat = flat_params(params, cfg)
+
+    # --- weights blob -----------------------------------------------------
+    layout, offset = [], 0
+    for name, shape in param_spec(cfg):
+        n = int(np.prod(shape))
+        layout.append({"name": name, "shape": list(shape), "offset": offset, "len": n})
+        offset += n
+    blob = np.concatenate([np.asarray(a, np.float32).ravel() for a in flat])
+    assert blob.size == offset
+    blob.tofile(out / "params.bin")
+
+    # --- HLO variants ------------------------------------------------------
+    pspecs = _param_specs(cfg)
+    entries = []
+    for name, fn, data_specs, data_names, outputs in build_entries(cfg):
+        lowered = jax.jit(fn, keep_unused=True).lower(*pspecs, *data_specs)
+        text = to_hlo_text(lowered)
+        (out / f"{name}.hlo.txt").write_text(text)
+        entries.append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "data_inputs": [
+                    {
+                        "name": dn,
+                        "shape": list(ds.shape),
+                        "dtype": "i32" if ds.dtype == jnp.int32 else "f32",
+                    }
+                    for dn, ds in zip(data_names, data_specs)
+                ],
+                "outputs": [
+                    {"name": on, "shape": list(os_), "dtype": od} for on, os_, od in outputs
+                ],
+            }
+        )
+        print(f"  lowered {name}: {len(text)} chars")
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim,
+            "n_layers": cfg.n_layers,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+            "bos": cfg.BOS,
+            "eos": cfg.EOS,
+            "pad": cfg.PAD,
+            "seed": args.seed,
+        },
+        "params_file": "params.bin",
+        "param_count": offset,
+        "params": layout,
+        "entries": entries,
+    }
+    # Manifest written last: it is the Makefile's up-to-dateness witness.
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {len(entries)} entries + {offset} weights to {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,212 @@
+"""L1 Pallas attention kernels (flash prefill + cached decode).
+
+These are the compute hot-spot of NALAR's LLM agents. The paper's serving
+testbed uses CUDA GPUs via vLLM; per the hardware-adaptation rule we rethink
+the flash-attention structure for the TPU model instead of porting CUDA
+idioms:
+
+* the HBM<->VMEM schedule that CUDA expresses with threadblocks + shared
+  memory is expressed here with a Pallas ``grid`` over (batch, head,
+  q-block) and ``BlockSpec`` index maps — each program instance sees one q
+  tile in VMEM-resident refs while K/V are streamed block-by-block;
+* the online-softmax accumulator (running max ``m``, denominator ``l``,
+  weighted sum ``acc``) keeps the live footprint at O(BLOCK_Q * Dh) instead
+  of O(T^2) — the core flash-attention insight, expressed as VMEM tiling;
+* matmuls are shaped for the MXU systolic array
+  (``[BLOCK_Q, Dh] x [Dh, BLOCK_K]``), accumulating in f32 regardless of
+  the input dtype (bf16 inputs supported).
+
+Kernels are lowered with ``interpret=True`` — the CPU PJRT plugin cannot run
+Mosaic custom-calls; real-TPU perf is estimated analytically in
+EXPERIMENTS.md §Perf from :func:`vmem_footprint_bytes` and
+:func:`mxu_utilization_estimate`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+# Default tile sizes. One program's q/k/v tiles plus f32 accumulators must
+# fit the ~16 MiB VMEM budget; see vmem_footprint_bytes().
+DEFAULT_BLOCK_Q = 32
+DEFAULT_BLOCK_K = 32
+
+
+def _prefill_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, t_total):
+    """One (batch, head, q-block) program of causal flash attention.
+
+    Refs (shapes after BlockSpec slicing):
+      len_ref: [B]                 per-batch valid lengths (full array)
+      q_ref:   [1, 1, block_q, dh] the q tile for this program
+      k_ref:   [1, 1, t, dh]       full K for this (batch, head)
+      v_ref:   [1, 1, t, dh]       full V for this (batch, head)
+      o_ref:   [1, 1, block_q, dh] output tile
+    """
+    b = pl.program_id(0)
+    qi = pl.program_id(2)
+    length = len_ref[b]
+    q = q_ref[0, 0].astype(jnp.float32)  # [block_q, dh]
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=jnp.float32))
+    q = q * scale
+
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)  # absolute q rows
+
+    def body(kb, carry):
+        acc, m, l = carry
+        k_start = kb * block_k
+        k_blk = jax.lax.dynamic_slice_in_dim(k_ref[0, 0], k_start, block_k, axis=0).astype(jnp.float32)
+        v_blk = jax.lax.dynamic_slice_in_dim(v_ref[0, 0], k_start, block_k, axis=0).astype(jnp.float32)
+        k_pos = k_start + jax.lax.iota(jnp.int32, block_k)
+        s = q @ k_blk.T  # [block_q, block_k] — MXU-shaped
+        mask = (k_pos[None, :] <= q_pos[:, None]) & (k_pos[None, :] < length)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v_blk
+        return acc_new, m_new, l_new
+
+    # Causality: rows in this q tile never see keys past the tile's last row,
+    # so only stream k blocks up to that point (ceil: a partial block is
+    # still needed when block_q < block_k; the mask trims the overshoot).
+    n_kblocks = (jnp.minimum((qi + 1) * block_q, t_total) + block_k - 1) // block_k
+    init = (
+        jnp.zeros((block_q, dh), jnp.float32),
+        jnp.full((block_q,), NEG_INF, jnp.float32),
+        jnp.zeros((block_q,), jnp.float32),
+    )
+    acc, m, l = jax.lax.fori_loop(0, n_kblocks, body, init)
+    l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows (pad region) -> zeros
+    o_ref[0, 0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_prefill(q, k, v, length, *, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K):
+    """Batched causal flash attention.
+
+    Args:
+      q, k, v: ``[B, H, T, Dh]``; ``T`` must be divisible by the block sizes
+               (they are shrunk to ``T`` if larger).
+      length:  ``[B]`` int32 — valid token count per batch element; keys at
+               positions ``>= length[b]`` are masked.
+
+    Returns ``[B, H, T, Dh]``, matching a vmapped
+    :func:`ref.attention_prefill_ref`.
+    """
+    b, h, t, dh = q.shape
+    block_q = min(block_q, t)
+    block_k = min(block_k, t)
+    if t % block_q or t % block_k:
+        raise ValueError(f"T={t} not tileable by ({block_q},{block_k})")
+    grid = (b, h, t // block_q)
+    kernel = functools.partial(_prefill_kernel, block_q=block_q, block_k=block_k, t_total=t)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b,), lambda bb, hh, qq: (0,)),
+            pl.BlockSpec((1, 1, block_q, dh), lambda bb, hh, qq: (bb, hh, qq, 0)),
+            pl.BlockSpec((1, 1, t, dh), lambda bb, hh, qq: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, t, dh), lambda bb, hh, qq: (bb, hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh), lambda bb, hh, qq: (bb, hh, qq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, t, dh), q.dtype),
+        interpret=True,
+    )(length, q, k, v)
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, block_k, s_total):
+    """One (batch, head) program of single-position decode attention.
+
+    Refs: pos_ref [B]; q_ref [1, 1, 1, dh]; k_ref/v_ref [1, 1, s, dh];
+    o_ref [1, 1, 1, dh].
+    """
+    b = pl.program_id(0)
+    pos = pos_ref[b]
+    q = q_ref[0, 0].astype(jnp.float32)  # [1, dh]
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=jnp.float32))
+    q = q * scale
+
+    def body(kb, carry):
+        acc, m, l = carry
+        k_start = kb * block_k
+        k_blk = jax.lax.dynamic_slice_in_dim(k_ref[0, 0], k_start, block_k, axis=0).astype(jnp.float32)
+        v_blk = jax.lax.dynamic_slice_in_dim(v_ref[0, 0], k_start, block_k, axis=0).astype(jnp.float32)
+        k_pos = k_start + jax.lax.iota(jnp.int32, block_k)
+        s = (q @ k_blk.T)[0]  # [block_k]
+        s = jnp.where(k_pos <= pos, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max())
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum()
+        acc_new = acc * alpha + p @ v_blk
+        return acc_new, m_new, l_new
+
+    # Only stream K/V blocks that can contain positions <= pos.
+    n_kblocks = jnp.minimum(pos // block_k + 1, s_total // block_k)
+    init = (jnp.zeros((dh,), jnp.float32), jnp.float32(NEG_INF), jnp.float32(0.0))
+    acc, m, l = jax.lax.fori_loop(0, n_kblocks, body, init)
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0, 0] = (acc / l)[None, :].astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, pos, *, block_k=DEFAULT_BLOCK_K):
+    """Batched cached decode attention.
+
+    Args:
+      q:    ``[B, H, Dh]`` query at position ``pos[b]`` per batch element.
+      k, v: ``[B, H, S, Dh]`` KV caches; ``S`` divisible by ``block_k``.
+      pos:  ``[B]`` int32 current positions (attends to ``0..=pos[b]``).
+
+    Returns ``[B, H, Dh]``, matching a vmapped
+    :func:`ref.attention_decode_ref`.
+    """
+    b, h, s, dh = k.shape
+    block_k = min(block_k, s)
+    if s % block_k:
+        raise ValueError(f"S={s} not tileable by block_k={block_k}")
+    grid = (b, h)
+    kernel = functools.partial(_decode_kernel, block_k=block_k, s_total=s)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b,), lambda bb, hh: (0,)),
+            pl.BlockSpec((1, 1, 1, dh), lambda bb, hh: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, s, dh), lambda bb, hh: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, s, dh), lambda bb, hh: (bb, hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, dh), lambda bb, hh: (bb, hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, dh), q.dtype),
+        interpret=True,
+    )(pos, q[:, :, None, :], k, v)
+    return out[:, :, 0, :]
+
+
+def vmem_footprint_bytes(block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K, dh=16, t=128, dtype_bytes=4):
+    """Analytic VMEM footprint of one prefill program instance.
+
+    q tile + full-head K/V (streamed view) + output tile + f32 accumulators.
+    Used by EXPERIMENTS.md §Perf to justify tile sizes against a ~16 MiB
+    VMEM budget.
+    """
+    tiles = (block_q + 2 * t + block_q) * dh * dtype_bytes
+    acc = block_q * dh * 4 + 2 * block_q * 4
+    return tiles + acc
+
+
+def mxu_utilization_estimate(block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K, dh=16):
+    """Fraction of idealized 128x128x128 MXU passes kept busy by the two
+    matmuls of one inner step. Structural estimate only (interpret mode has
+    no hardware counters)."""
+    busy = 2 * block_q * dh * block_k  # QK^T + PV multiply-accumulates
+    passes_qk = -(-block_q // 128) * -(-block_k // 128) * -(-dh // 128)
+    passes_pv = -(-block_q // 128) * -(-dh // 128) * -(-block_k // 128)
+    ideal = (passes_qk + passes_pv) * 128 ** 3
+    return busy / ideal

@@ -1,0 +1,61 @@
+"""Pure-jnp reference oracles for the L1 Pallas attention kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle to float tolerance across shapes, lengths and dtypes
+(see python/tests/test_kernel.py, which sweeps with hypothesis).
+
+The oracles are deliberately naive — full score matrices, explicit masks —
+so they are easy to audit against the standard attention definition.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative mask value (not -inf: avoids NaN on all-masked rows)
+
+
+def attention_prefill_ref(q, k, v, length):
+    """Causal + padding-masked multi-head attention (one batch element).
+
+    Args:
+      q, k, v: ``[H, T, Dh]`` float arrays.
+      length:  scalar int — number of valid (non-pad) positions; positions
+               ``>= length`` are masked out as keys.
+
+    Returns:
+      ``[H, T, Dh]`` attention output. Rows at/after ``length`` attend only
+      to valid keys so they stay finite; consumers ignore them.
+    """
+    h, t, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=jnp.float32))
+    scores = jnp.einsum("htd,hsd->hts", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    ti = jnp.arange(t)
+    causal = ti[:, None] >= ti[None, :]  # query i sees key j iff j <= i
+    valid = ti[None, :] < length  # key j must be a real token
+    mask = jnp.logical_and(causal, valid)[None, :, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("hts,hsd->htd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_decode_ref(q, k, v, pos):
+    """Single-position decode attention over a KV cache (one batch element).
+
+    Args:
+      q:   ``[H, Dh]`` query for the token at position ``pos``.
+      k,v: ``[H, S, Dh]`` KV cache; entries at positions ``> pos`` are stale.
+      pos: scalar int — index of the current token (attends to ``0..=pos``).
+
+    Returns:
+      ``[H, Dh]`` attention output.
+    """
+    h, s, dh = k.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=jnp.float32))
+    scores = jnp.einsum("hd,hsd->hs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    valid = jnp.arange(s)[None, :] <= pos
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("hs,hsd->hd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,189 @@
+"""L2: the JAX transformer LM served by NALAR's LLM agents.
+
+A small byte-level decoder-only transformer with three AOT entry points:
+
+* :func:`prefill` — ``(params, tokens[B,T], length[B]) -> (logits[B,V], kv)``
+* :func:`decode`  — ``(params, token[B], pos[B], kv) -> (logits[B,V], kv')``
+* :func:`embed`   — ``(params, tokens[B,T], length[B]) -> [B,D]`` mean-pooled
+  hidden states, used by the Rust vector store (ChromaDB substitute).
+
+Attention runs through the L1 Pallas kernels
+(:mod:`compile.kernels.attention`), so the kernels lower into the same HLO
+the Rust runtime executes. The KV cache is an explicit input/output
+(``[L, 2, B, H, S, Dh]``) so the Rust engine owns cache placement — that
+ownership is what NALAR's K,V-cache policy layer (paper §4.3.2) controls.
+
+Weights are *runtime inputs* (not baked constants): ``aot.py`` writes them
+to ``artifacts/params.bin`` and the Rust runtime feeds them as leading
+arguments. This keeps the HLO text small and lets one artifact serve any
+checkpoint with the same architecture.
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import decode_attention, flash_attention_prefill
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters of the served LM."""
+
+    vocab: int = 259  # 256 bytes + BOS(256) + EOS(257) + PAD(258)
+    d_model: int = 64
+    n_heads: int = 4
+    head_dim: int = 16
+    n_layers: int = 2
+    d_ff: int = 256
+    max_seq: int = 128
+
+    BOS: int = field(default=256, init=False)
+    EOS: int = field(default=257, init=False)
+    PAD: int = field(default=258, init=False)
+
+
+# Deterministic parameter order — the contract between aot.py (which writes
+# params.bin) and the Rust runtime (which feeds them as leading inputs).
+def param_spec(cfg: ModelConfig):
+    """Yield ``(name, shape)`` for every weight, in AOT argument order."""
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.n_heads * cfg.head_dim
+    yield "tok_emb", (cfg.vocab, d)
+    yield "pos_emb", (cfg.max_seq, d)
+    for i in range(cfg.n_layers):
+        yield f"l{i}.ln1", (d,)
+        yield f"l{i}.wq", (d, hd)
+        yield f"l{i}.wk", (d, hd)
+        yield f"l{i}.wv", (d, hd)
+        yield f"l{i}.wo", (hd, d)
+        yield f"l{i}.ln2", (d,)
+        yield f"l{i}.w1", (d, f)
+        yield f"l{i}.w2", (f, d)
+    yield "ln_f", (d,)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Deterministic scaled-gaussian init; returns ``{name: array}``."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2")) or name == "ln_f":
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(jnp.float32(fan_in))
+            )
+    return params
+
+
+def _rms_norm(x, w, eps=1e-6):
+    return x * w * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def _split_heads(x, cfg):
+    # [..., H*Dh] -> [..., H, Dh] -> heads-leading
+    *lead, _ = x.shape
+    return x.reshape(*lead, cfg.n_heads, cfg.head_dim)
+
+
+def _trunk_prefill(params, tokens, length, cfg: ModelConfig, use_pallas=True):
+    """Shared transformer trunk over a full (padded) sequence.
+
+    Returns final hidden states ``[B, T, D]`` and per-layer K/V stacked as
+    ``[L, 2, B, H, T, Dh]``.
+    """
+    b, t = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :t, :]
+    kvs = []
+    for i in range(cfg.n_layers):
+        h = _rms_norm(x, params[f"l{i}.ln1"])
+        q = _split_heads(h @ params[f"l{i}.wq"], cfg).transpose(0, 2, 1, 3)  # [B,H,T,Dh]
+        k = _split_heads(h @ params[f"l{i}.wk"], cfg).transpose(0, 2, 1, 3)
+        v = _split_heads(h @ params[f"l{i}.wv"], cfg).transpose(0, 2, 1, 3)
+        if use_pallas:
+            attn = flash_attention_prefill(q, k, v, length)
+        else:
+            from .kernels.ref import attention_prefill_ref
+
+            attn = jax.vmap(attention_prefill_ref)(q, k, v, length)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, t, -1)
+        x = x + attn @ params[f"l{i}.wo"]
+        h2 = _rms_norm(x, params[f"l{i}.ln2"])
+        x = x + jax.nn.gelu(h2 @ params[f"l{i}.w1"]) @ params[f"l{i}.w2"]
+        kvs.append(jnp.stack([k, v]))  # [2, B, H, T, Dh]
+    return x, jnp.stack(kvs)  # [L, 2, B, H, T, Dh]
+
+
+def prefill(params, tokens, length, cfg: ModelConfig, use_pallas=True):
+    """Prefill a padded prompt batch.
+
+    Args:
+      tokens: ``[B, T]`` int32, padded with ``cfg.PAD`` past ``length[b]``.
+      length: ``[B]`` int32 valid lengths (>=1).
+
+    Returns:
+      ``(logits[B, vocab], kv[L, 2, B, H, T, Dh])`` — logits for the *next*
+      token after position ``length[b]-1``.
+    """
+    x, kv = _trunk_prefill(params, tokens, length, cfg, use_pallas)
+    x = _rms_norm(x, params["ln_f"])
+    last = jnp.take_along_axis(x, (length - 1)[:, None, None], axis=1)[:, 0, :]  # [B, D]
+    logits = last @ params["tok_emb"].T
+    return logits, kv
+
+
+def decode(params, token, pos, kv, cfg: ModelConfig, use_pallas=True):
+    """One decode step over an explicit KV cache.
+
+    Args:
+      token: ``[B]`` int32 current tokens (at position ``pos[b]``).
+      pos:   ``[B]`` int32 positions in ``0..max_seq``.
+      kv:    ``[L, 2, B, H, S, Dh]`` cache; positions ``> pos`` are stale.
+
+    Returns ``(logits[B, vocab], kv')`` with the new K/V written at ``pos``.
+    """
+    b = token.shape[0]
+    x = params["tok_emb"][token] + params["pos_emb"][pos]  # [B, D]
+    new_kv = []
+    for i in range(cfg.n_layers):
+        h = _rms_norm(x, params[f"l{i}.ln1"])
+        q = _split_heads(h @ params[f"l{i}.wq"], cfg)  # [B, H, Dh]
+        k_new = _split_heads(h @ params[f"l{i}.wk"], cfg)
+        v_new = _split_heads(h @ params[f"l{i}.wv"], cfg)
+
+        def write(cache, new, p):
+            # cache [H, S, Dh], new [H, Dh] -> write row at position p
+            return jax.lax.dynamic_update_slice(cache, new[:, None, :], (0, p, 0))
+
+        k_cache = jax.vmap(write)(kv[i, 0], k_new, pos)  # [B, H, S, Dh]
+        v_cache = jax.vmap(write)(kv[i, 1], v_new, pos)
+        if use_pallas:
+            attn = decode_attention(q, k_cache, v_cache, pos)  # [B, H, Dh]
+        else:
+            from .kernels.ref import attention_decode_ref
+
+            attn = jax.vmap(attention_decode_ref)(q, k_cache, v_cache, pos)
+        x = x + attn.reshape(b, -1) @ params[f"l{i}.wo"]
+        h2 = _rms_norm(x, params[f"l{i}.ln2"])
+        x = x + jax.nn.gelu(h2 @ params[f"l{i}.w1"]) @ params[f"l{i}.w2"]
+        new_kv.append(jnp.stack([k_cache, v_cache]))
+    x = _rms_norm(x, params["ln_f"])
+    logits = x @ params["tok_emb"].T
+    return logits, jnp.stack(new_kv)
+
+
+def embed(params, tokens, length, cfg: ModelConfig, use_pallas=True):
+    """Mean-pooled final hidden states for retrieval (``[B, D]``, L2-normed)."""
+    x, _ = _trunk_prefill(params, tokens, length, cfg, use_pallas)
+    t = tokens.shape[1]
+    mask = (jnp.arange(t)[None, :] < length[:, None]).astype(jnp.float32)
+    pooled = (x * mask[:, :, None]).sum(axis=1) / length[:, None].astype(jnp.float32)
+    return pooled / jnp.linalg.norm(pooled, axis=-1, keepdims=True).clip(1e-6)
+
+
+def flat_params(params, cfg: ModelConfig):
+    """Weights as a list in :func:`param_spec` order (AOT argument order)."""
+    return [params[name] for name, _ in param_spec(cfg)]

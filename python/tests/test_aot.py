@@ -1,0 +1,77 @@
+"""AOT path: manifest integrity + HLO text round-trip sanity.
+
+Full numerics of the artifact (HLO executed through PJRT vs the jax model)
+are validated on the Rust side (rust/tests/runtime_numerics.rs); here we
+check the build outputs are structurally sound without re-lowering.
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from compile.aot import DECODE_BATCHES, EMBED_BATCHES, PREFILL_BATCHES
+from compile.model import ModelConfig, param_spec
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ART / "manifest.json").exists(), reason="run `make artifacts` first"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    return json.loads((ART / "manifest.json").read_text())
+
+
+def test_manifest_lists_all_variants(manifest):
+    names = {e["name"] for e in manifest["entries"]}
+    for b in PREFILL_BATCHES:
+        assert f"prefill_b{b}" in names
+    for b in DECODE_BATCHES:
+        assert f"decode_b{b}" in names
+    for b in EMBED_BATCHES:
+        assert f"embed_b{b}" in names
+
+
+def test_hlo_files_exist_and_parse_shape(manifest):
+    for e in manifest["entries"]:
+        text = (ART / e["file"]).read_text()
+        assert "ENTRY" in text and "HloModule" in text
+        # every data input shape should appear in the entry signature
+        for di in e["data_inputs"]:
+            dims = "," .join(str(d) for d in di["shape"])
+            token = f"{'s32' if di['dtype']=='i32' else 'f32'}[{dims}]"
+            assert token in text, f"{e['name']}: missing {token}"
+
+
+def test_params_bin_matches_layout(manifest):
+    blob = np.fromfile(ART / manifest["params_file"], np.float32)
+    assert blob.size == manifest["param_count"]
+    total = sum(p["len"] for p in manifest["params"])
+    assert total == blob.size
+    # layout offsets are contiguous and ordered like param_spec
+    cfg = ModelConfig()
+    spec_names = [n for n, _ in param_spec(cfg)]
+    assert [p["name"] for p in manifest["params"]] == spec_names
+    off = 0
+    for p in manifest["params"]:
+        assert p["offset"] == off
+        assert p["len"] == int(np.prod(p["shape"]))
+        off += p["len"]
+
+
+def test_model_config_roundtrip(manifest):
+    cfg = ModelConfig()
+    m = manifest["model"]
+    assert m["vocab"] == cfg.vocab
+    assert m["max_seq"] == cfg.max_seq
+    assert m["pad"] == cfg.PAD
+
+
+def test_weights_finite_and_nontrivial(manifest):
+    blob = np.fromfile(ART / manifest["params_file"], np.float32)
+    assert np.all(np.isfinite(blob))
+    assert blob.std() > 0.01  # not all zeros

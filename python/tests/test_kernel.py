@@ -1,0 +1,153 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the core correctness signal for the compute layer. Hypothesis
+sweeps shapes, lengths, block sizes and dtypes; fixed cases pin the
+regression corners (length==1, length==T, pos==0, pos==S-1).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import (
+    decode_attention,
+    flash_attention_prefill,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+def assert_prefill_matches(b, h, t, dh, lengths, dtype, block_q=32, block_k=32, seed=0):
+    q = _rand(seed, (b, h, t, dh), dtype)
+    k = _rand(seed + 1, (b, h, t, dh), dtype)
+    v = _rand(seed + 2, (b, h, t, dh), dtype)
+    length = jnp.asarray(lengths, jnp.int32)
+    out = flash_attention_prefill(q, k, v, length, block_q=block_q, block_k=block_k)
+    want = jax.vmap(ref.attention_prefill_ref)(q, k, v, length)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    for i in range(b):
+        # only rows < length are consumed downstream
+        np.testing.assert_allclose(
+            np.asarray(out[i, :, : lengths[i]], np.float32),
+            np.asarray(want[i, :, : lengths[i]], np.float32),
+            rtol=tol,
+            atol=tol,
+        )
+
+
+def assert_decode_matches(b, h, s, dh, poss, dtype, block_k=32, seed=0):
+    q = _rand(seed, (b, h, dh), dtype)
+    k = _rand(seed + 1, (b, h, s, dh), dtype)
+    v = _rand(seed + 2, (b, h, s, dh), dtype)
+    pos = jnp.asarray(poss, jnp.int32)
+    out = decode_attention(q, k, v, pos, block_k=block_k)
+    want = jax.vmap(ref.attention_decode_ref)(q, k, v, pos)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+# ---------------------------------------------------------------- fixed pins
+class TestPrefillPinned:
+    def test_basic(self):
+        assert_prefill_matches(2, 4, 64, 16, [40, 64], jnp.float32)
+
+    def test_length_one(self):
+        assert_prefill_matches(1, 2, 32, 8, [1], jnp.float32)
+
+    def test_full_length(self):
+        assert_prefill_matches(2, 2, 32, 8, [32, 32], jnp.float32)
+
+    def test_single_head(self):
+        assert_prefill_matches(1, 1, 32, 16, [17], jnp.float32)
+
+    def test_block_larger_than_t(self):
+        # block sizes shrink to T
+        assert_prefill_matches(1, 2, 16, 8, [9], jnp.float32, block_q=64, block_k=64)
+
+    def test_uneven_blocks(self):
+        assert_prefill_matches(1, 2, 64, 16, [33], jnp.float32, block_q=16, block_k=32)
+
+    def test_bf16(self):
+        assert_prefill_matches(2, 4, 64, 16, [50, 64], jnp.bfloat16)
+
+    def test_model_shape(self):
+        # exact shape used by the served LM
+        assert_prefill_matches(4, 4, 128, 16, [1, 37, 100, 128], jnp.float32)
+
+    def test_non_tileable_raises(self):
+        q = jnp.zeros((1, 1, 48, 8), jnp.float32)
+        with pytest.raises(ValueError):
+            flash_attention_prefill(q, q, q, jnp.array([48], jnp.int32), block_q=32, block_k=32)
+
+
+class TestDecodePinned:
+    def test_basic(self):
+        assert_decode_matches(2, 4, 64, 16, [5, 63], jnp.float32)
+
+    def test_pos_zero(self):
+        assert_decode_matches(1, 2, 32, 8, [0], jnp.float32)
+
+    def test_pos_last(self):
+        assert_decode_matches(1, 2, 32, 8, [31], jnp.float32)
+
+    def test_bf16(self):
+        assert_decode_matches(2, 4, 64, 16, [10, 50], jnp.bfloat16)
+
+    def test_model_shape(self):
+        assert_decode_matches(8, 4, 128, 16, [0, 1, 17, 31, 64, 100, 126, 127], jnp.float32)
+
+    def test_small_block(self):
+        assert_decode_matches(1, 4, 64, 16, [20], jnp.float32, block_k=8)
+
+
+# ------------------------------------------------------------ hypothesis sweeps
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    t_blocks=st.integers(1, 4),
+    dh=st.sampled_from([8, 16]),
+    data=st.data(),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_prefill_sweep(b, h, t_blocks, dh, data, dtype):
+    t = 16 * t_blocks
+    lengths = [data.draw(st.integers(1, t)) for _ in range(b)]
+    assert_prefill_matches(b, h, t, dh, lengths, dtype, block_q=16, block_k=16)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(1, 4),
+    s_blocks=st.integers(1, 4),
+    dh=st.sampled_from([8, 16]),
+    data=st.data(),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_decode_sweep(b, h, s_blocks, dh, data, dtype):
+    s = 16 * s_blocks
+    poss = [data.draw(st.integers(0, s - 1)) for _ in range(b)]
+    assert_decode_matches(b, h, s, dh, poss, dtype, block_k=16)
+
+
+# ------------------------------------------------------------- perf estimates
+def test_vmem_footprint_within_budget():
+    # default tiles for the served model must fit a 16 MiB VMEM with slack
+    assert vmem_footprint_bytes(dh=16, t=128) < 16 * 2**20 // 8
+
+
+def test_mxu_estimate_monotone_in_tiles():
+    assert mxu_utilization_estimate(64, 64, 16) >= mxu_utilization_estimate(32, 32, 16)
+    assert 0 < mxu_utilization_estimate() <= 1

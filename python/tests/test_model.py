@@ -1,0 +1,135 @@
+"""L2 correctness: the transformer trunk, prefill/decode consistency, embed."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (
+    ModelConfig,
+    decode,
+    embed,
+    flat_params,
+    init_params,
+    param_spec,
+    prefill,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = ModelConfig()
+PARAMS = init_params(CFG)
+
+
+def _prompt_batch(texts):
+    b = len(texts)
+    tokens = np.full((b, CFG.max_seq), CFG.PAD, np.int32)
+    lengths = np.zeros((b,), np.int32)
+    for i, s in enumerate(texts):
+        ids = [CFG.BOS] + list(s.encode())[: CFG.max_seq - 1]
+        tokens[i, : len(ids)] = ids
+        lengths[i] = len(ids)
+    return jnp.asarray(tokens), jnp.asarray(lengths)
+
+
+class TestShapes:
+    def test_prefill_shapes(self):
+        tokens, length = _prompt_batch(["hello", "hi"])
+        logits, kv = prefill(PARAMS, tokens, length, CFG)
+        assert logits.shape == (2, CFG.vocab)
+        assert kv.shape == (CFG.n_layers, 2, 2, CFG.n_heads, CFG.max_seq, CFG.head_dim)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_decode_shapes(self):
+        tokens, length = _prompt_batch(["abc"])
+        logits, kv = prefill(PARAMS, tokens, length, CFG)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        logits2, kv2 = decode(PARAMS, nxt, length, kv, CFG)
+        assert logits2.shape == (1, CFG.vocab)
+        assert kv2.shape == kv.shape
+
+    def test_embed_unit_norm(self):
+        tokens, length = _prompt_batch(["market analysis", "q"])
+        e = embed(PARAMS, tokens, length, CFG)
+        assert e.shape == (2, CFG.d_model)
+        np.testing.assert_allclose(np.linalg.norm(np.asarray(e), axis=-1), 1.0, rtol=1e-5)
+
+
+class TestConsistency:
+    """The invariant that makes the Rust engine's incremental decoding valid:
+    decode over the prefill KV must equal a longer prefill."""
+
+    def test_decode_matches_extended_prefill(self):
+        tokens, length = _prompt_batch(["the quick brown fox", "pay"])
+        logits, kv = prefill(PARAMS, tokens, length, CFG)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        step_logits, _ = decode(PARAMS, nxt, length, kv, CFG)
+
+        ext = tokens
+        for i in range(2):
+            ext = ext.at[i, int(length[i])].set(int(nxt[i]))
+        full_logits, _ = prefill(PARAMS, ext, length + 1, CFG)
+        np.testing.assert_allclose(
+            np.asarray(step_logits), np.asarray(full_logits), rtol=3e-4, atol=3e-4
+        )
+
+    def test_multi_step_decode_consistency(self):
+        tokens, length = _prompt_batch(["ab"])
+        logits, kv = prefill(PARAMS, tokens, length, CFG)
+        pos = length
+        ext = tokens
+        for _ in range(4):
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            ext = ext.at[0, int(pos[0])].set(int(nxt[0]))
+            logits, kv = decode(PARAMS, nxt, pos, kv, CFG)
+            pos = pos + 1
+        full_logits, _ = prefill(PARAMS, ext, pos, CFG)
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full_logits), rtol=1e-3, atol=1e-3
+        )
+
+    def test_pallas_matches_ref_trunk(self):
+        tokens, length = _prompt_batch(["compare paths", "x"])
+        lp, kvp = prefill(PARAMS, tokens, length, CFG, use_pallas=True)
+        lr, kvr = prefill(PARAMS, tokens, length, CFG, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(lr), rtol=2e-4, atol=2e-4)
+
+    def test_padding_invariance(self):
+        # logits must not depend on what sits in the PAD region
+        tokens, length = _prompt_batch(["stable"])
+        noisy = tokens.at[0, int(length[0]) :].set(77)
+        l1, _ = prefill(PARAMS, tokens, length, CFG)
+        l2, _ = prefill(PARAMS, noisy, length, CFG)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-4, atol=1e-4)
+
+
+class TestParams:
+    def test_param_spec_order_stable(self):
+        names = [n for n, _ in param_spec(CFG)]
+        assert names[0] == "tok_emb" and names[-1] == "ln_f"
+        assert len(names) == len(set(names))
+
+    def test_flat_params_roundtrip(self):
+        flat = flat_params(PARAMS, CFG)
+        assert len(flat) == len(list(param_spec(CFG)))
+        for arr, (_, shape) in zip(flat, param_spec(CFG)):
+            assert arr.shape == shape
+
+    def test_init_deterministic(self):
+        p2 = init_params(CFG, seed=0)
+        for k in PARAMS:
+            np.testing.assert_array_equal(np.asarray(PARAMS[k]), np.asarray(p2[k]))
+
+    def test_different_seed_differs(self):
+        p2 = init_params(CFG, seed=1)
+        assert not np.allclose(np.asarray(PARAMS["tok_emb"]), np.asarray(p2["tok_emb"]))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.text(alphabet=st.characters(codec="ascii"), min_size=1, max_size=40), min_size=1, max_size=2))
+def test_embed_sweep_finite_unit(texts):
+    tokens, length = _prompt_batch(texts)
+    e = embed(PARAMS, tokens, length, CFG)
+    assert bool(jnp.all(jnp.isfinite(e)))
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(e), axis=-1), 1.0, rtol=1e-4)

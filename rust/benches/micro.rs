@@ -1,0 +1,128 @@
+//! Micro-benchmarks of the hot-path substrates (§Perf baseline numbers).
+//!
+//! Covers every operation on the request fast path: future create/resolve,
+//! stub call end-to-end, routing, node-store ops, managed state, KV-cache
+//! residency, JSON parse, and the sim-engine step machinery.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use nalar::coordinator::{LoadMap, Router};
+use nalar::futures::{FutureCell, FutureMeta, FutureTable};
+use nalar::ids::*;
+use nalar::json;
+use nalar::nodestore::NodeStore;
+use nalar::state::kvcache::{KvCacheManager, KvPolicy};
+use nalar::state::ManagedList;
+use nalar::transport::Bus;
+use nalar::util::bench::bench;
+
+fn meta(id: u64) -> FutureMeta {
+    FutureMeta::new(
+        FutureId(id),
+        SessionId(id % 64),
+        RequestId(id % 256),
+        AgentType::new("dev"),
+        "m",
+        Location::Driver(RequestId(0)),
+    )
+}
+
+fn main() {
+    let budget = Duration::from_millis(300);
+    println!("=== micro benches (hot path) ===");
+
+    // futures
+    let mut i = 0u64;
+    bench("future: create cell", 100, budget, || {
+        i += 1;
+        std::hint::black_box(FutureCell::new(meta(i)));
+    });
+    bench("future: create+resolve+read", 100, budget, || {
+        i += 1;
+        let c = FutureCell::new(meta(i));
+        c.resolve(json!({"text": "done"}), 5);
+        std::hint::black_box(c.try_value());
+    });
+    let table = FutureTable::new();
+    bench("future table: insert+get+remove", 100, budget, || {
+        i += 1;
+        let c = FutureCell::new(meta(i));
+        table.insert(c);
+        std::hint::black_box(table.get(FutureId(i)));
+        table.remove(FutureId(i));
+    });
+
+    // routing
+    let bus = Bus::new(Duration::ZERO);
+    let loads = LoadMap::new();
+    for a in 0..8 {
+        let id = InstanceId::new("dev", a);
+        let _rx = Box::leak(Box::new(bus.register(id.clone(), NodeId(a % 2))));
+        loads.register(id);
+    }
+    let router = Router::new(bus.clone(), loads, 3);
+    bench("router: least-loaded route", 100, budget, || {
+        i += 1;
+        std::hint::black_box(router.route(SessionId(i), "dev", false).unwrap());
+    });
+    bench("router: sticky route (hit)", 100, budget, || {
+        std::hint::black_box(router.route(SessionId(1), "dev", true).unwrap());
+    });
+
+    // node store
+    let store = NodeStore::new();
+    bench("nodestore: put", 100, budget, || {
+        i += 1;
+        store.put(&format!("k{}", i % 1024), i);
+    });
+    bench("nodestore: get", 100, budget, || {
+        i += 1;
+        std::hint::black_box(store.get::<u64>(&format!("k{}", i % 1024)));
+    });
+    for k in 0..256 {
+        store.put(&format!("metrics/a{k}"), k as u64);
+    }
+    bench("nodestore: scan 256-key prefix", 20, budget, || {
+        std::hint::black_box(store.scan::<u64>("metrics/"));
+    });
+
+    // managed state
+    let s = Arc::new(NodeStore::new());
+    let list = ManagedList::bind(s, SessionId(1), "hist");
+    bench("managed list: push", 100, budget, || {
+        list.push(json!(1));
+    });
+
+    // kv cache
+    let kv = KvCacheManager::new(64 << 20, 512 << 20, KvPolicy::HintDriven);
+    bench("kvcache: ensure_resident (hit)", 100, budget, || {
+        i += 1;
+        std::hint::black_box(kv.ensure_resident(SessionId(i % 16), 1 << 20, 64));
+    });
+
+    // json
+    let text = r#"{"prompt": "analyze the market", "max_new_tokens": 96, "nested": {"a": [1,2,3]}}"#;
+    bench("json: parse call args", 100, budget, || {
+        std::hint::black_box(nalar::util::json::parse(text).unwrap());
+    });
+    let v = nalar::util::json::parse(text).unwrap();
+    bench("json: serialize call args", 100, budget, || {
+        std::hint::black_box(v.to_string());
+    });
+
+    // end-to-end stub call against a live instance (queue + resolve path)
+    let cfg = nalar::config::DeploymentConfig::from_json(
+        r#"{"time_scale": 0.00001,
+            "agents": [{"name": "echo", "kind": "web_search", "instances": 2,
+                        "profile": {"base_s": 0.0}, "methods": ["search"]}]}"#,
+    )
+    .unwrap();
+    let d = nalar::server::Deployment::launch(cfg).unwrap();
+    bench("stub call -> tool exec -> resolve", 20, budget, || {
+        let ctx = d.ctx(SessionId(0));
+        let f = ctx.agent("echo").call("search", json!({"query": "q"}));
+        std::hint::black_box(f.value(Duration::from_secs(5)).unwrap());
+    });
+    d.shutdown();
+}

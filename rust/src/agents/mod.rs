@@ -1,0 +1,267 @@
+//! Agent/tool execution backends + the stub layer (paper §3.1).
+//!
+//! In the paper, developers write agents as ordinary Python classes and a
+//! stub-generation tool turns each declared callable into an importable
+//! module whose methods return futures. Here the declaration lives in the
+//! deployment config ([`crate::config::AgentConfig`]); [`stub::AgentStub`]
+//! is the generated-stub analog (method call -> future), and this module
+//! provides what executes *behind* the stub:
+//!
+//! * [`Backend`] — what a component controller drives: an LLM engine core
+//!   (batched, continuous) or a serial tool executor.
+//! * Tool executors: documentation lookup over the vector store, a web
+//!   search with canned results, and a test harness with a configurable
+//!   failure rate (the SWE workflow's retry driver).
+
+pub mod stub;
+
+pub use stub::{AgentStub, CallCtx};
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::config::{AgentConfig, AgentKind, LatencyProfile};
+use crate::engine::EngineCore;
+use crate::error::{Error, Result};
+use crate::futures::Value;
+use crate::json;
+use crate::util::rng::Rng;
+use crate::vectorstore::{HashEmbedder, VectorStore};
+
+/// What a component controller executes.
+pub enum Backend {
+    /// LLM agent: continuous-batching engine core.
+    Engine(Box<dyn EngineCore>),
+    /// Tool: serial request/response executor.
+    Tool(Box<dyn ToolExec>),
+}
+
+/// A serial tool executor. `execute` blocks for the tool's (scaled)
+/// service time and returns the result value.
+pub trait ToolExec: Send {
+    fn execute(&mut self, method: &str, args: &Value) -> Result<Value>;
+}
+
+fn scaled_sleep(profile: &LatencyProfile, time_scale: f64, extra_s: f64) {
+    let d = Duration::from_secs_f64(((profile.base_s + extra_s) * time_scale).max(0.0));
+    if !d.is_zero() {
+        std::thread::sleep(d);
+    }
+}
+
+// ------------------------------------------------------------------ tools
+
+/// Documentation lookup over the vector store (ChromaDB substitute) —
+/// paper Fig. 1 step 3.
+pub struct VectorStoreTool {
+    pub store: Arc<VectorStore>,
+    pub embedder: HashEmbedder,
+    pub profile: LatencyProfile,
+    pub time_scale: f64,
+}
+
+impl ToolExec for VectorStoreTool {
+    fn execute(&mut self, method: &str, args: &Value) -> Result<Value> {
+        match method {
+            "get" | "query" => {
+                let query = args.get("query").as_str().unwrap_or_default();
+                let k = args.get("k").as_usize().unwrap_or(3);
+                scaled_sleep(&self.profile, self.time_scale, 0.0);
+                let hits = self.store.query(&self.embedder.embed(query), k);
+                Ok(Value::Arr(
+                    hits.into_iter()
+                        .map(|h| json!({"id": h.id, "score": h.score as f64, "text": h.text}))
+                        .collect(),
+                ))
+            }
+            "add" => {
+                let text = args.get("text").as_str().unwrap_or_default().to_string();
+                let id = self.store.add(text.clone(), self.embedder.embed(&text));
+                Ok(json!({"id": id}))
+            }
+            other => Err(Error::UnknownAgent(format!("vector_store.{other}"))),
+        }
+    }
+}
+
+/// Web-search API simulation (paper Fig. 1 step 4): canned, deterministic
+/// results with external-API latency.
+pub struct WebSearchTool {
+    pub profile: LatencyProfile,
+    pub time_scale: f64,
+    pub rng: Rng,
+}
+
+impl ToolExec for WebSearchTool {
+    fn execute(&mut self, method: &str, args: &Value) -> Result<Value> {
+        if method != "search" {
+            return Err(Error::UnknownAgent(format!("web_search.{method}")));
+        }
+        let query = args.get("query").as_str().unwrap_or_default();
+        // external APIs have heavy-tailed latency
+        let extra = self.rng.lognormal_mean(self.profile.base_s.max(0.05), 0.8);
+        scaled_sleep(&self.profile, self.time_scale, extra);
+        let n = 2 + (query.len() % 3);
+        Ok(Value::Arr(
+            (0..n)
+                .map(|i| {
+                    json!({
+                        "title": format!("result {i} for `{query}`"),
+                        "snippet": format!("snippet {i}: {query} ...")
+                    })
+                })
+                .collect(),
+        ))
+    }
+}
+
+/// Test-harness tool (paper Fig. 1 steps 5-8): runs "tests" with a
+/// configured failure probability — the source of SWE-workflow retries.
+pub struct TestHarnessTool {
+    pub profile: LatencyProfile,
+    pub time_scale: f64,
+    pub failure_rate: f64,
+    pub rng: Rng,
+}
+
+impl ToolExec for TestHarnessTool {
+    fn execute(&mut self, method: &str, args: &Value) -> Result<Value> {
+        if method != "unit_test" && method != "integration_test" {
+            return Err(Error::UnknownAgent(format!("test_harness.{method}")));
+        }
+        let code = args.get("code").as_str().unwrap_or_default();
+        scaled_sleep(&self.profile, self.time_scale, 0.001 * code.len() as f64);
+        // retry_count lowers the failure odds: later attempts carry more
+        // accumulated context (docs, traces) — mirrors the corrective loop.
+        let attempt = args.get("attempt").as_u64().unwrap_or(0);
+        let p = self.failure_rate / (1.0 + attempt as f64);
+        let pass = !self.rng.bool_with(p);
+        Ok(json!({
+            "result": if pass { "Pass" } else { "Fail" },
+            "tests_run": 1 + code.len() % 7,
+        }))
+    }
+}
+
+/// Instantiate the backend for an agent declaration.
+pub struct BackendFactory {
+    pub time_scale: f64,
+    pub vector_store: Arc<VectorStore>,
+    pub seed: u64,
+}
+
+impl BackendFactory {
+    pub fn build(
+        &self,
+        cfg: &AgentConfig,
+        instance_index: u32,
+        engine: impl FnOnce() -> Box<dyn EngineCore>,
+    ) -> Backend {
+        let seed = self
+            .seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(instance_index as u64);
+        match cfg.kind {
+            AgentKind::Llm => Backend::Engine(engine()),
+            AgentKind::VectorStore => Backend::Tool(Box::new(VectorStoreTool {
+                store: self.vector_store.clone(),
+                embedder: HashEmbedder::new(self.vector_store.dim()),
+                profile: cfg.profile.clone(),
+                time_scale: self.time_scale,
+            })),
+            AgentKind::WebSearch => Backend::Tool(Box::new(WebSearchTool {
+                profile: cfg.profile.clone(),
+                time_scale: self.time_scale,
+                rng: Rng::new(seed),
+            })),
+            AgentKind::TestHarness => Backend::Tool(Box::new(TestHarnessTool {
+                profile: cfg.profile.clone(),
+                time_scale: self.time_scale,
+                failure_rate: cfg.failure_rate,
+                rng: Rng::new(seed),
+            })),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_profile() -> LatencyProfile {
+        LatencyProfile { base_s: 0.0, ..Default::default() }
+    }
+
+    #[test]
+    fn vector_store_tool_query() {
+        let store = Arc::new(VectorStore::new(64));
+        let e = HashEmbedder::new(64);
+        store.add("oauth docs", e.embed("oauth docs"));
+        store.add("db docs", e.embed("db docs"));
+        let mut tool = VectorStoreTool {
+            store,
+            embedder: e,
+            profile: fast_profile(),
+            time_scale: 0.0,
+        };
+        let out = tool
+            .execute("get", &json!({"query": "oauth", "k": 1}))
+            .unwrap();
+        assert_eq!(out.as_arr().unwrap().len(), 1);
+        assert!(out.idx(0).get("text").as_str().unwrap().contains("oauth"));
+        assert!(tool.execute("nope", &json!({})).is_err());
+    }
+
+    #[test]
+    fn web_search_returns_results() {
+        let mut tool = WebSearchTool {
+            profile: fast_profile(),
+            time_scale: 0.0,
+            rng: Rng::new(1),
+        };
+        let out = tool.execute("search", &json!({"query": "rates"})).unwrap();
+        assert!(out.as_arr().unwrap().len() >= 2);
+    }
+
+    #[test]
+    fn test_harness_fails_at_configured_rate() {
+        let mut tool = TestHarnessTool {
+            profile: fast_profile(),
+            time_scale: 0.0,
+            failure_rate: 0.5,
+            rng: Rng::new(2),
+        };
+        let mut fails = 0;
+        for _ in 0..200 {
+            let out = tool
+                .execute("unit_test", &json!({"code": "fn x() {}", "attempt": 0}))
+                .unwrap();
+            if out.get("result").as_str() == Some("Fail") {
+                fails += 1;
+            }
+        }
+        assert!((60..140).contains(&fails), "fail rate off: {fails}/200");
+    }
+
+    #[test]
+    fn retries_fail_less() {
+        let count_fails = |attempt: u64| {
+            let mut tool = TestHarnessTool {
+                profile: fast_profile(),
+                time_scale: 0.0,
+                failure_rate: 0.6,
+                rng: Rng::new(3),
+            };
+            (0..300)
+                .filter(|_| {
+                    tool.execute("unit_test", &json!({"code": "x", "attempt": attempt}))
+                        .unwrap()
+                        .get("result")
+                        .as_str()
+                        == Some("Fail")
+                })
+                .count()
+        };
+        assert!(count_fails(3) < count_fails(0));
+    }
+}

@@ -1,0 +1,221 @@
+//! Auto-generated-stub analog: agent method calls that return futures.
+//!
+//! Paper §3.1: a stub-generation tool turns each declared agent callable
+//! into a module whose methods "do not execute the underlying logic;
+//! instead, they create and return future objects that encode the call's
+//! metadata". [`AgentStub::call`] is exactly that: it allocates the future
+//! cell with Table-3 metadata, routes it (late binding via the shared
+//! [`Router`]), registers it in the future table + dependency graph, and
+//! hands the call to the executor's component controller — all
+//! non-blocking (Op 1).
+
+use std::sync::Arc;
+
+use crate::config::{AgentConfig, DeploymentConfig};
+use crate::futures::{DepGraph, FutureCell, FutureHandle, FutureMeta, FutureTable, Value};
+use crate::ids::{AgentType, FutureId, IdGen, Location, RequestId, SessionId};
+use crate::coordinator::Router;
+use crate::error::{Error, Result};
+use crate::transport::{Bus, CallMsg, Message};
+
+/// Shared runtime context the stubs operate against (cheap clone).
+#[derive(Clone)]
+pub struct CallCtx {
+    pub session: SessionId,
+    pub request: RequestId,
+    /// Call-graph depth of the calling frame; stubs stamp `stage+1`.
+    pub stage: u32,
+    pub bus: Bus,
+    pub router: Arc<Router>,
+    pub graph: Arc<DepGraph>,
+    pub table: Arc<FutureTable>,
+    pub ids: Arc<IdGen>,
+    pub cfg: Arc<DeploymentConfig>,
+}
+
+impl CallCtx {
+    /// The stub for `agent` (errors later if the agent is undeclared —
+    /// mirrors importing a generated module that doesn't exist).
+    pub fn agent(&self, agent: &str) -> AgentStub {
+        AgentStub { agent: AgentType::new(agent), ctx: self.clone() }
+    }
+
+    /// Child context for a deeper call frame (agent-internal workflows).
+    pub fn deeper(&self) -> CallCtx {
+        let mut c = self.clone();
+        c.stage += 1;
+        c
+    }
+
+    fn holder(&self) -> Location {
+        Location::Driver(self.request)
+    }
+}
+
+/// The generated-stub analog for one agent type.
+pub struct AgentStub {
+    agent: AgentType,
+    ctx: CallCtx,
+}
+
+impl AgentStub {
+    /// Invoke `method` — returns a future immediately (Op 1, non-blocking).
+    pub fn call(&self, method: &str, args: Value) -> FutureHandle {
+        self.call_with(method, args, &[], 0)
+    }
+
+    /// Invoke with explicit dependencies (futures whose values feed this
+    /// call) and a retry count (drivers bump it on relaunch — LPT signal).
+    pub fn call_with(
+        &self,
+        method: &str,
+        args: Value,
+        deps: &[FutureId],
+        retry_count: u32,
+    ) -> FutureHandle {
+        let id = self.ctx.ids.future();
+        let mut meta = FutureMeta::new(
+            id,
+            self.ctx.session,
+            self.ctx.request,
+            self.agent.clone(),
+            method,
+            self.ctx.holder(),
+        );
+        meta.dependencies = deps.to_vec();
+        meta.stage = self.ctx.stage + 1;
+        meta.retry_count = retry_count;
+
+        let acfg = self.ctx.cfg.agent(self.agent.as_str());
+        if let Some(a) = acfg {
+            meta.est_cost = a.profile.base_s
+                + a.profile.mean_output_tokens * a.profile.per_output_token_s;
+            if !a.methods.is_empty() && !a.methods.iter().any(|m| m == method) {
+                let cell = FutureCell::new(meta);
+                cell.fail(format!("agent `{}` has no method `{method}`", self.agent));
+                return FutureHandle::new(cell, self.ctx.holder());
+            }
+        }
+
+        let cell = FutureCell::new(meta);
+        self.ctx.table.insert(cell.clone());
+        self.ctx
+            .graph
+            .on_create(id, self.ctx.request, deps, self.ctx.stage + 1);
+
+        match self.route_and_send(&cell, args, acfg) {
+            Ok(()) => {}
+            Err(e) => cell.fail(e.to_string()),
+        }
+        FutureHandle::new(cell.clone(), self.ctx.holder())
+    }
+
+    fn route_and_send(
+        &self,
+        cell: &Arc<FutureCell>,
+        args: Value,
+        acfg: Option<&AgentConfig>,
+    ) -> Result<()> {
+        let pin = acfg
+            .map(|a| a.directives.stateful || a.directives.managed_state)
+            .unwrap_or(false);
+        let instance = self
+            .ctx
+            .router
+            .route(self.ctx.session, self.agent.as_str(), pin)?;
+        cell.mark_queued(instance.clone());
+        let ok = self.ctx.bus.send(
+            &instance,
+            Message::Call(CallMsg { cell: cell.clone(), args }),
+        );
+        if !ok {
+            return Err(Error::InstanceKilled(instance));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::LoadMap;
+    use crate::ids::{InstanceId, NodeId};
+    use crate::json;
+    use std::time::Duration;
+
+    fn ctx_with_instance() -> (CallCtx, std::sync::mpsc::Receiver<Message>) {
+        let bus = Bus::new(Duration::ZERO);
+        let loads = LoadMap::new();
+        let inst = InstanceId::new("dev", 0);
+        let rx = bus.register(inst.clone(), NodeId(0));
+        loads.register(inst);
+        let cfg = DeploymentConfig::from_json(
+            r#"{"agents": [{"name": "dev", "kind": "llm", "methods": ["implement"]}]}"#,
+        )
+        .unwrap();
+        let ctx = CallCtx {
+            session: SessionId(1),
+            request: RequestId(2),
+            stage: 0,
+            bus: bus.clone(),
+            router: Arc::new(Router::new(bus, loads, 1)),
+            graph: Arc::new(DepGraph::new()),
+            table: Arc::new(FutureTable::new()),
+            ids: Arc::new(IdGen::new()),
+            cfg: Arc::new(cfg),
+        };
+        (ctx, rx)
+    }
+
+    #[test]
+    fn call_creates_future_and_delivers() {
+        let (ctx, rx) = ctx_with_instance();
+        let f = ctx.agent("dev").call("implement", json!({"prompt": "x"}));
+        assert!(!f.available(), "Op 1 is non-blocking");
+        // delivered to the instance inbox with metadata intact
+        match rx.try_recv().unwrap() {
+            Message::Call(c) => {
+                let m = c.cell.meta();
+                assert_eq!(m.agent.as_str(), "dev");
+                assert_eq!(m.method, "implement");
+                assert_eq!(m.stage, 1);
+                assert_eq!(m.executor.as_ref().unwrap().to_string(), "dev:0");
+                assert_eq!(c.args.get("prompt").as_str(), Some("x"));
+            }
+            _ => panic!(),
+        }
+        assert_eq!(ctx.table.len(), 1);
+        assert_eq!(ctx.graph.len(), 1);
+    }
+
+    #[test]
+    fn unknown_agent_fails_future_not_panics() {
+        let (ctx, _rx) = ctx_with_instance();
+        let f = ctx.agent("ghost").call("x", json!({}));
+        assert!(f.available());
+        assert!(f.try_value().unwrap().is_err());
+    }
+
+    #[test]
+    fn undeclared_method_fails() {
+        let (ctx, _rx) = ctx_with_instance();
+        let f = ctx.agent("dev").call("not_a_method", json!({}));
+        assert!(matches!(f.try_value(), Some(Err(_))));
+    }
+
+    #[test]
+    fn deps_and_stage_recorded() {
+        let (ctx, _rx) = ctx_with_instance();
+        let f1 = ctx.agent("dev").call("implement", json!({}));
+        let deeper = ctx.deeper();
+        let f2 = deeper
+            .agent("dev")
+            .call_with("implement", json!({}), &[f1.id()], 2);
+        let m = f2.meta();
+        assert_eq!(m.dependencies, vec![f1.id()]);
+        assert_eq!(m.stage, 2);
+        assert_eq!(m.retry_count, 2);
+        assert_eq!(ctx.graph.dependents(f1.id()), vec![f2.id()]);
+        assert!(m.est_cost > 0.0);
+    }
+}

@@ -1,0 +1,135 @@
+//! Baseline serving modes (paper §2.3, §6.1).
+//!
+//! The paper compares NALAR against three systems. We reproduce their
+//! *serving-relevant* behaviours as deployment configurations of the same
+//! runtime — the standard emulation approach for closed systems, and the
+//! only fair one here since all systems share the substrate:
+//!
+//! * **Ayo-like** (static-graph end-to-end framework): parallel execution
+//!   and pipelining work (the runtime gives those for free), but the graph
+//!   is fixed at submission — no migration, no priority changes, no
+//!   reallocation; sessions stay where first placed (sticky KV).
+//! * **CrewAI-like** (specification-only library): whole-workflow
+//!   replication — a session hashes to one replica for *all* its agents;
+//!   no resource management at all.
+//! * **AutoGen-like** (event-driven messaging): best-effort FCFS dispatch
+//!   round-robin across instances, no global coordination, sticky sessions
+//!   (its async messaging engine exposes no policy control, §6.2).
+//!
+//! NALAR mode = the paper's three default policies + migration enabled.
+
+use crate::config::DeploymentConfig;
+use crate::coordinator::router::FallbackMode;
+
+/// Which system a deployment emulates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SystemUnderTest {
+    Nalar,
+    AyoLike,
+    CrewLike,
+    AutoGenLike,
+}
+
+impl SystemUnderTest {
+    pub fn all() -> [SystemUnderTest; 4] {
+        [
+            SystemUnderTest::Nalar,
+            SystemUnderTest::AyoLike,
+            SystemUnderTest::CrewLike,
+            SystemUnderTest::AutoGenLike,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SystemUnderTest::Nalar => "NALAR",
+            SystemUnderTest::AyoLike => "Ayo-like",
+            SystemUnderTest::CrewLike => "CrewAI-like",
+            SystemUnderTest::AutoGenLike => "AutoGen-like",
+        }
+    }
+
+    /// Mutate a deployment config to emulate this system.
+    pub fn apply(&self, cfg: &mut DeploymentConfig) {
+        match self {
+            SystemUnderTest::Nalar => {
+                if cfg.policies.is_empty() {
+                    cfg.policies = vec![
+                        "load_balance".into(),
+                        "hol_migration".into(),
+                        "resource_realloc".into(),
+                    ];
+                }
+                cfg.control.enable_migration = true;
+                cfg.engine.kv_policy = "hint".into();
+            }
+            SystemUnderTest::AyoLike => {
+                cfg.policies.clear();
+                cfg.control.enable_migration = false;
+                cfg.engine.kv_policy = "lru".into();
+            }
+            SystemUnderTest::CrewLike => {
+                cfg.policies.clear();
+                cfg.control.enable_migration = false;
+                cfg.engine.kv_policy = "lru".into();
+            }
+            SystemUnderTest::AutoGenLike => {
+                cfg.policies.clear();
+                cfg.control.enable_migration = false;
+                cfg.engine.kv_policy = "lru".into();
+            }
+        }
+    }
+
+    /// Router behaviour for this system (applied by the deployment).
+    pub fn router_mode(&self) -> (bool, FallbackMode) {
+        match self {
+            SystemUnderTest::Nalar => (false, FallbackMode::LeastLoaded),
+            // Ayo binds placement when the (static) graph is instantiated.
+            SystemUnderTest::AyoLike => (true, FallbackMode::LeastLoaded),
+            // CrewAI replicates the whole workflow; a session lives on one
+            // replica for everything.
+            SystemUnderTest::CrewLike => (true, FallbackMode::HashSession),
+            // AutoGen dispatches as messages arrive, no load awareness.
+            SystemUnderTest::AutoGenLike => (true, FallbackMode::RoundRobin),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_cfg() -> DeploymentConfig {
+        DeploymentConfig::from_json(r#"{"agents": [{"name": "a", "kind": "llm"}]}"#).unwrap()
+    }
+
+    #[test]
+    fn nalar_gets_default_policies() {
+        let mut cfg = base_cfg();
+        SystemUnderTest::Nalar.apply(&mut cfg);
+        assert_eq!(cfg.policies.len(), 3);
+        assert!(cfg.control.enable_migration);
+        assert_eq!(cfg.engine.kv_policy, "hint");
+    }
+
+    #[test]
+    fn baselines_lose_control() {
+        for s in [SystemUnderTest::AyoLike, SystemUnderTest::CrewLike, SystemUnderTest::AutoGenLike] {
+            let mut cfg = base_cfg();
+            cfg.policies = vec!["load_balance".into()];
+            s.apply(&mut cfg);
+            assert!(cfg.policies.is_empty(), "{}", s.name());
+            assert!(!cfg.control.enable_migration);
+            let (sticky, _) = s.router_mode();
+            assert!(sticky, "{} must be session-sticky", s.name());
+        }
+    }
+
+    #[test]
+    fn names_distinct() {
+        let names: std::collections::HashSet<_> =
+            SystemUnderTest::all().iter().map(|s| s.name()).collect();
+        assert_eq!(names.len(), 4);
+    }
+}

@@ -1,0 +1,421 @@
+//! Deployment configuration (JSON) — agents, directives, policies, engine.
+//!
+//! This is the serving-side analog of the paper's deployment setup: the
+//! stub-generation declaration lists agents/tools and their callable
+//! methods (§3.1 — YAML in the paper, JSON here: the offline toolchain has
+//! no YAML parser and JSON is isomorphic for these declarations), the
+//! `init(...)` runtime directives map to [`Directives`] (Table 1), and the
+//! operator picks control policies by name (§4.2).
+//!
+//! See `configs/*.json` for the three evaluation workflows.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+/// Top-level deployment config.
+#[derive(Debug, Clone)]
+pub struct DeploymentConfig {
+    /// Emulated node count.
+    pub nodes: u32,
+    /// Paper-seconds → real-seconds multiplier for simulated service times
+    /// (0.01 = 100x speedup; metrics are reported scaled back).
+    pub time_scale: f64,
+    /// One-way cross-node message latency (µs) injected by the bus.
+    pub cross_node_latency_us: u64,
+    pub control: ControlConfig,
+    pub agents: Vec<AgentConfig>,
+    /// Global-controller policies, by registry name (§4.2). Order matters:
+    /// later policies see earlier policies' effects next tick.
+    pub policies: Vec<String>,
+    pub engine: EngineConfig,
+    pub seed: u64,
+}
+
+/// Two-level control plane knobs (§4.1).
+#[derive(Debug, Clone)]
+pub struct ControlConfig {
+    /// Global controller period (ms). The paper's loop is periodic; local
+    /// controllers are event-driven.
+    pub global_period_ms: u64,
+    /// Disable to emulate baselines without migration.
+    pub enable_migration: bool,
+    /// Queue-wait threshold (wall-clock ms) that flags head-of-line blocking.
+    pub hol_threshold_ms: u64,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig { global_period_ms: 100, enable_migration: true, hol_threshold_ms: 250 }
+    }
+}
+
+/// What computes behind an agent type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AgentKind {
+    /// LLM-backed agent served by the engine (vLLM substitute).
+    Llm,
+    /// Documentation lookup over the vector store (ChromaDB substitute).
+    VectorStore,
+    /// External web-search API (simulated latency + canned results).
+    WebSearch,
+    /// Test harness tool (simulated pass/fail with configured rate).
+    TestHarness,
+}
+
+impl AgentKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "llm" => AgentKind::Llm,
+            "vector_store" => AgentKind::VectorStore,
+            "web_search" => AgentKind::WebSearch,
+            "test_harness" => AgentKind::TestHarness,
+            other => return Err(Error::Config(format!("unknown agent kind `{other}`"))),
+        })
+    }
+}
+
+/// Runtime directives — paper Table 1, passed at `agent.init(...)`.
+#[derive(Debug, Clone)]
+pub struct Directives {
+    /// All requests of a session are ordered + routed to one instance; the
+    /// session may NOT be migrated (strict form, §5 Discussion).
+    pub stateful: bool,
+    /// The instance can execute a batch of compatible requests together.
+    pub batchable: bool,
+    /// Running requests may be preempted.
+    pub preemptable: bool,
+    pub min_instances: u32,
+    pub max_instances: u32,
+    /// Resource demands per instance, e.g. {"GPU": 1, "CPU": 2}.
+    pub resources: HashMap<String, f64>,
+    /// Uses managed state: sessions route sticky but MAY migrate with
+    /// their state (relaxed form, §5 Discussion).
+    pub managed_state: bool,
+}
+
+impl Default for Directives {
+    fn default() -> Self {
+        Directives {
+            stateful: false,
+            batchable: false,
+            preemptable: false,
+            min_instances: 1,
+            max_instances: 8,
+            resources: HashMap::new(),
+            managed_state: false,
+        }
+    }
+}
+
+/// Service-time profile for the Sim executor (calibrated against the PJRT
+/// path; see EXPERIMENTS.md §Calibration). Times are in *paper seconds*;
+/// the deployment's `time_scale` converts to wall clock.
+#[derive(Debug, Clone)]
+pub struct LatencyProfile {
+    /// Fixed overhead per call.
+    pub base_s: f64,
+    /// Prefill cost per prompt token.
+    pub per_prompt_token_s: f64,
+    /// Decode cost per generated token (at batch size 1).
+    pub per_output_token_s: f64,
+    /// Mean generated tokens (lognormal).
+    pub mean_output_tokens: f64,
+    /// Lognormal sigma of generated tokens.
+    pub output_sigma: f64,
+    /// Batching efficiency: a decode step with batch size `b` costs
+    /// `1 + batch_slope*(b-1)` step-times, so per-request cost shrinks.
+    pub batch_slope: f64,
+}
+
+impl Default for LatencyProfile {
+    fn default() -> Self {
+        LatencyProfile {
+            base_s: 0.2,
+            per_prompt_token_s: 0.001,
+            per_output_token_s: 0.03,
+            mean_output_tokens: 120.0,
+            output_sigma: 0.6,
+            batch_slope: 0.15,
+        }
+    }
+}
+
+/// One agent/tool declaration (the stub-generation declaration of §3.1).
+#[derive(Debug, Clone)]
+pub struct AgentConfig {
+    pub name: String,
+    pub kind: AgentKind,
+    /// Initial instance count (between min/max_instances).
+    pub instances: u32,
+    pub directives: Directives,
+    pub profile: LatencyProfile,
+    /// Methods callable through the generated stub.
+    pub methods: Vec<String>,
+    /// TestHarness: probability a run fails (drives SWE retries).
+    pub failure_rate: f64,
+}
+
+/// LLM engine settings (vLLM substitute).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub max_batch: usize,
+    /// Executor: `sim` (profiled latency) or `pjrt` (real AOT compute).
+    pub executor: String,
+    pub kv_hbm_bytes: u64,
+    pub kv_dram_bytes: u64,
+    /// `lru` or `hint` KV policy (§4.3.2).
+    pub kv_policy: String,
+    /// Artifacts directory for the pjrt executor.
+    pub artifacts_dir: String,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            max_batch: 8,
+            executor: "sim".into(),
+            kv_hbm_bytes: 64 << 20,
+            kv_dram_bytes: 512 << 20,
+            kv_policy: "hint".into(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl DeploymentConfig {
+    pub fn from_json_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&text)
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        let cfg = Self::from_value(&v)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let control = {
+            let c = v.get("control");
+            ControlConfig {
+                global_period_ms: c.u64_or("global_period_ms", 100),
+                enable_migration: c.bool_or("enable_migration", true),
+                hol_threshold_ms: c.u64_or("hol_threshold_ms", 250),
+            }
+        };
+        let engine = {
+            let e = v.get("engine");
+            EngineConfig {
+                max_batch: e.u64_or("max_batch", 8) as usize,
+                executor: e.str_or("executor", "sim").to_string(),
+                kv_hbm_bytes: e.u64_or("kv_hbm_bytes", 64 << 20),
+                kv_dram_bytes: e.u64_or("kv_dram_bytes", 512 << 20),
+                kv_policy: e.str_or("kv_policy", "hint").to_string(),
+                artifacts_dir: e.str_or("artifacts_dir", "artifacts").to_string(),
+            }
+        };
+        let agents = v
+            .get("agents")
+            .as_arr()
+            .ok_or_else(|| Error::Config("`agents` must be an array".into()))?
+            .iter()
+            .map(Self::agent_from_value)
+            .collect::<Result<Vec<_>>>()?;
+        let policies = v
+            .get("policies")
+            .as_arr()
+            .map(|a| {
+                a.iter()
+                    .filter_map(|p| p.as_str().map(String::from))
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(DeploymentConfig {
+            nodes: v.u64_or("nodes", 2) as u32,
+            time_scale: v.f64_or("time_scale", 0.01),
+            cross_node_latency_us: v.u64_or("cross_node_latency_us", 200),
+            control,
+            agents,
+            policies,
+            engine,
+            seed: v.u64_or("seed", 0),
+        })
+    }
+
+    fn agent_from_value(v: &Value) -> Result<AgentConfig> {
+        let name = v
+            .get("name")
+            .as_str()
+            .ok_or_else(|| Error::Config("agent missing `name`".into()))?
+            .to_string();
+        let kind = AgentKind::parse(v.str_or("kind", "llm"))?;
+        let d = v.get("directives");
+        let mut resources = HashMap::new();
+        if let Some(obj) = d.get("resources").as_obj() {
+            for (k, rv) in obj {
+                resources.insert(k.clone(), rv.as_f64().unwrap_or(0.0));
+            }
+        }
+        let directives = Directives {
+            stateful: d.bool_or("stateful", false),
+            batchable: d.bool_or("batchable", false),
+            preemptable: d.bool_or("preemptable", false),
+            min_instances: d.u64_or("min_instances", 1) as u32,
+            max_instances: d.u64_or("max_instances", 8) as u32,
+            resources,
+            managed_state: d.bool_or("managed_state", false),
+        };
+        let p = v.get("profile");
+        let dp = LatencyProfile::default();
+        let profile = LatencyProfile {
+            base_s: p.f64_or("base_s", dp.base_s),
+            per_prompt_token_s: p.f64_or("per_prompt_token_s", dp.per_prompt_token_s),
+            per_output_token_s: p.f64_or("per_output_token_s", dp.per_output_token_s),
+            mean_output_tokens: p.f64_or("mean_output_tokens", dp.mean_output_tokens),
+            output_sigma: p.f64_or("output_sigma", dp.output_sigma),
+            batch_slope: p.f64_or("batch_slope", dp.batch_slope),
+        };
+        let methods = v
+            .get("methods")
+            .as_arr()
+            .map(|a| a.iter().filter_map(|m| m.as_str().map(String::from)).collect())
+            .unwrap_or_default();
+        Ok(AgentConfig {
+            name,
+            kind,
+            instances: v.u64_or("instances", 1) as u32,
+            directives,
+            profile,
+            methods,
+            failure_rate: v.f64_or("failure_rate", 0.0),
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes == 0 {
+            return Err(Error::Config("nodes must be >= 1".into()));
+        }
+        if !(self.time_scale > 0.0) {
+            return Err(Error::Config("time_scale must be > 0".into()));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for a in &self.agents {
+            if !seen.insert(&a.name) {
+                return Err(Error::Config(format!("duplicate agent `{}`", a.name)));
+            }
+            let d = &a.directives;
+            if d.min_instances > d.max_instances {
+                return Err(Error::Config(format!(
+                    "{}: min_instances > max_instances",
+                    a.name
+                )));
+            }
+            if a.instances < d.min_instances || a.instances > d.max_instances {
+                return Err(Error::Config(format!(
+                    "{}: instances {} outside [{}, {}]",
+                    a.name, a.instances, d.min_instances, d.max_instances
+                )));
+            }
+            // §5 Discussion: managed state cannot combine with batching —
+            // batching mixes sessions, making state attribution impossible.
+            if d.managed_state && d.batchable {
+                return Err(Error::Config(format!(
+                    "{}: managed_state is incompatible with batchable (paper §5)",
+                    a.name
+                )));
+            }
+            if !(0.0..=1.0).contains(&a.failure_rate) {
+                return Err(Error::Config(format!("{}: failure_rate out of range", a.name)));
+            }
+        }
+        if self.agents.is_empty() {
+            return Err(Error::Config("no agents declared".into()));
+        }
+        Ok(())
+    }
+
+    pub fn agent(&self, name: &str) -> Option<&AgentConfig> {
+        self.agents.iter().find(|a| a.name == name)
+    }
+
+    /// Scale a paper-seconds duration to wall clock.
+    pub fn scaled(&self, paper_seconds: f64) -> std::time::Duration {
+        std::time::Duration::from_secs_f64((paper_seconds * self.time_scale).max(0.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINIMAL: &str = r#"{"agents": [{"name": "planner", "kind": "llm", "methods": ["plan"]}]}"#;
+
+    #[test]
+    fn minimal_defaults() {
+        let c = DeploymentConfig::from_json(MINIMAL).unwrap();
+        assert_eq!(c.nodes, 2);
+        assert_eq!(c.control.global_period_ms, 100);
+        assert_eq!(c.agents[0].instances, 1);
+        assert!(!c.agents[0].directives.stateful);
+        assert_eq!(c.agents[0].methods, vec!["plan"]);
+    }
+
+    #[test]
+    fn rejects_managed_state_plus_batchable() {
+        let y = r#"{"agents": [{"name": "a", "kind": "llm",
+                     "directives": {"managed_state": true, "batchable": true}}]}"#;
+        assert!(DeploymentConfig::from_json(y).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_agents() {
+        let y = r#"{"agents": [{"name": "a", "kind": "llm"}, {"name": "a", "kind": "llm"}]}"#;
+        assert!(DeploymentConfig::from_json(y).is_err());
+    }
+
+    #[test]
+    fn rejects_instances_outside_bounds() {
+        let y = r#"{"agents": [{"name": "a", "kind": "llm", "instances": 9,
+                     "directives": {"max_instances": 4}}]}"#;
+        assert!(DeploymentConfig::from_json(y).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let y = r#"{"agents": [{"name": "a", "kind": "quantum"}]}"#;
+        assert!(DeploymentConfig::from_json(y).is_err());
+    }
+
+    #[test]
+    fn scaled_duration() {
+        let c = DeploymentConfig::from_json(MINIMAL).unwrap();
+        assert_eq!(c.scaled(2.0), std::time::Duration::from_millis(20));
+    }
+
+    #[test]
+    fn full_roundtrip() {
+        let y = r#"{
+            "nodes": 4,
+            "time_scale": 0.005,
+            "policies": ["load_balance", "hol_migration"],
+            "control": {"global_period_ms": 50, "enable_migration": true},
+            "engine": {"max_batch": 4, "executor": "sim", "kv_policy": "lru"},
+            "agents": [{
+                "name": "dev", "kind": "llm", "instances": 2,
+                "directives": {"batchable": true, "max_instances": 4, "resources": {"GPU": 1}},
+                "profile": {"mean_output_tokens": 200},
+                "methods": ["implement_and_test"]
+            }]
+        }"#;
+        let c = DeploymentConfig::from_json(y).unwrap();
+        assert_eq!(c.nodes, 4);
+        assert_eq!(c.agent("dev").unwrap().profile.mean_output_tokens, 200.0);
+        assert_eq!(c.agent("dev").unwrap().directives.resources["GPU"], 1.0);
+        assert_eq!(c.policies.len(), 2);
+        assert_eq!(c.engine.kv_policy, "lru");
+    }
+}

@@ -1,0 +1,479 @@
+//! The component-level controller (paper §4.1).
+//!
+//! One per agent instance, running the instance's thread. Three roles
+//! (paper): (1) local scheduling under installed policy, plus future
+//! metadata upkeep and readiness propagation; (2) the interface between
+//! stubs and the runtime — every stub call lands in this inbox; (3)
+//! serving-time telemetry into the node store.
+//!
+//! The controller is *event-driven*: it reacts to arriving calls,
+//! engine-step completions and migration commands immediately; periodic
+//! decision-making lives in the global controller.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::agents::Backend;
+use crate::config::Directives;
+use crate::coordinator::router::{InstanceLoad, LoadMap, Router};
+use crate::coordinator::InstanceMetrics;
+use crate::engine::EngineReq;
+use crate::futures::{DepGraph, FutureState};
+use crate::ids::{InstanceId, NodeId, SessionId};
+use crate::json;
+use crate::nodestore::{keys, NodeStore, StoreDirectory, Subscription};
+use crate::state::kvcache::KvCacheManager;
+use crate::state::migrate_session_state;
+use crate::transport::{Bus, CallMsg, Message, MigratePayload};
+
+/// Queue ordering installed by the global controller (`policy/{instance}`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LocalOrder {
+    /// First come, first served (baseline; LangGraph-style).
+    #[default]
+    Fcfs,
+    /// Highest priority first, FIFO within a priority (enables
+    /// `set_priority`-based policies: SRTF, LPT, per-session boosts).
+    Priority,
+}
+
+/// Handle returned by `ComponentController::spawn`.
+pub struct InstanceHandle {
+    pub id: InstanceId,
+    pub node: NodeId,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl InstanceHandle {
+    /// Request stop and wait for the thread (used by `kill` / shutdown).
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for InstanceHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// See module docs.
+pub struct ComponentController {
+    pub id: InstanceId,
+    pub node: NodeId,
+    backend: Backend,
+    directives: Directives,
+    inbox: mpsc::Receiver<Message>,
+    bus: Bus,
+    store: Arc<NodeStore>,
+    stores: StoreDirectory,
+    router: Arc<Router>,
+    load: Arc<InstanceLoad>,
+    graph: Arc<DepGraph>,
+    queue: VecDeque<CallMsg>,
+    /// tag -> in-flight call (engine backends).
+    inflight: std::collections::HashMap<u64, CallMsg>,
+    next_tag: u64,
+    order: LocalOrder,
+    policy_sub: Subscription,
+    stop: Arc<AtomicBool>,
+    // telemetry
+    completed: u64,
+    failed: u64,
+    migrated_in: u64,
+    migrated_out: u64,
+    busy_ewma: f64,
+    last_telemetry: Instant,
+}
+
+impl ComponentController {
+    /// Launch the instance: registers on the bus and load map, subscribes
+    /// to its policy key, and spawns the event loop thread.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn(
+        id: InstanceId,
+        node: NodeId,
+        backend: Backend,
+        directives: Directives,
+        bus: Bus,
+        stores: StoreDirectory,
+        router: Arc<Router>,
+        loads: &LoadMap,
+        graph: Arc<DepGraph>,
+    ) -> InstanceHandle {
+        let inbox = bus.register(id.clone(), node);
+        let load = loads.register(id.clone());
+        let store = stores.node(node);
+        let policy_sub = store.subscribe(&keys::policy(&id));
+        let stop = Arc::new(AtomicBool::new(false));
+        let ctl = ComponentController {
+            id: id.clone(),
+            node,
+            backend,
+            directives,
+            inbox,
+            bus,
+            store,
+            stores,
+            router,
+            load,
+            graph,
+            queue: VecDeque::new(),
+            inflight: std::collections::HashMap::new(),
+            next_tag: 1,
+            order: LocalOrder::Fcfs,
+            policy_sub,
+            stop: stop.clone(),
+            completed: 0,
+            failed: 0,
+            migrated_in: 0,
+            migrated_out: 0,
+            busy_ewma: 0.0,
+            last_telemetry: Instant::now(),
+        };
+        let join = std::thread::Builder::new()
+            .name(format!("nalar-{id}"))
+            .spawn(move || ctl.run())
+            .expect("spawn component controller");
+        InstanceHandle { id, node, stop, join: Some(join) }
+    }
+
+    fn run(mut self) {
+        while !self.stop.load(Ordering::Relaxed) {
+            let worked = self.drain_inbox();
+            self.apply_policy_updates();
+
+            let stepped = match &mut self.backend {
+                Backend::Engine(_) => self.engine_turn(),
+                Backend::Tool(_) => self.tool_turn(),
+            };
+
+            self.maybe_push_telemetry();
+
+            if !worked && !stepped {
+                // idle: block briefly on the inbox
+                match self.inbox.recv_timeout(Duration::from_millis(2)) {
+                    Ok(msg) => self.handle(msg),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+        // Deregister, then fail whatever is left (paper §5: report, don't mask).
+        self.bus.deregister(&self.id);
+        for msg in self.queue.drain(..) {
+            msg.cell.fail(format!("instance {} stopped", self.id));
+        }
+        for (_, msg) in self.inflight.drain() {
+            msg.cell.fail(format!("instance {} stopped", self.id));
+        }
+        self.push_telemetry();
+    }
+
+    // ------------------------------------------------------------ inbox
+    fn drain_inbox(&mut self) -> bool {
+        let mut any = false;
+        while let Ok(msg) = self.inbox.try_recv() {
+            any = true;
+            self.handle(msg);
+        }
+        any
+    }
+
+    fn handle(&mut self, msg: Message) {
+        match msg {
+            Message::Call(call) => {
+                call.cell.mark_queued(self.id.clone());
+                self.load.queued.fetch_add(1, Ordering::Relaxed);
+                self.queue.push_back(call);
+            }
+            Message::MigrateOut { session, to } => self.migrate_out(session, to),
+            Message::MigrateIn(payload) => self.migrate_in(payload),
+            Message::Shutdown => {
+                self.stop.store(true, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn apply_policy_updates(&mut self) {
+        for (_k, v) in self.policy_sub.drain() {
+            if let Ok(order) = v.downcast::<LocalOrder>() {
+                self.order = *order;
+            }
+        }
+    }
+
+    // ------------------------------------------------------- scheduling
+    /// Pop the next runnable call per the installed order. Preserves
+    /// per-session arrival order (stateful guarantee, §3.4): a session's
+    /// call is only eligible if it is that session's oldest queued call.
+    fn pop_next(&mut self) -> Option<CallMsg> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let idx = match self.order {
+            LocalOrder::Fcfs => 0,
+            LocalOrder::Priority => {
+                let mut best = 0usize;
+                let mut best_prio = i32::MIN;
+                let mut seen_sessions = std::collections::HashSet::new();
+                for (i, m) in self.queue.iter().enumerate() {
+                    let session = m.cell.session();
+                    if !seen_sessions.insert(session) {
+                        continue; // an earlier call of this session exists
+                    }
+                    let p = m.cell.priority();
+                    if p > best_prio {
+                        best_prio = p;
+                        best = i;
+                    }
+                }
+                best
+            }
+        };
+        let msg = self.queue.remove(idx)?;
+        self.load.queued.fetch_sub(1, Ordering::Relaxed);
+        Some(msg)
+    }
+
+    // ---------------------------------------------------------- engine
+    fn engine_turn(&mut self) -> bool {
+        let Backend::Engine(core) = &mut self.backend else { return false };
+        // admit up to batch capacity (batchable) or one at a time
+        let cap = if self.directives.batchable { core.max_batch() } else { 1 };
+        while core.active() < cap {
+            let Some(msg) = ({
+                // inline pop_next to appease the borrow checker
+                if self.queue.is_empty() {
+                    None
+                } else {
+                    let idx = match self.order {
+                        LocalOrder::Fcfs => 0,
+                        LocalOrder::Priority => {
+                            let mut best = 0usize;
+                            let mut best_prio = i32::MIN;
+                            let mut seen = std::collections::HashSet::new();
+                            for (i, m) in self.queue.iter().enumerate() {
+                                if !seen.insert(m.cell.session()) {
+                                    continue;
+                                }
+                                let p = m.cell.priority();
+                                if p > best_prio {
+                                    best_prio = p;
+                                    best = i;
+                                }
+                            }
+                            best
+                        }
+                    };
+                    let m = self.queue.remove(idx);
+                    if m.is_some() {
+                        self.load.queued.fetch_sub(1, Ordering::Relaxed);
+                    }
+                    m
+                }
+            }) else {
+                break;
+            };
+            msg.cell.mark_running();
+            self.load.active.fetch_add(1, Ordering::Relaxed);
+            let tag = self.next_tag;
+            self.next_tag += 1;
+            let meta = msg.cell.meta();
+            core.admit(EngineReq {
+                tag,
+                session: meta.session,
+                prompt: msg.args.get("prompt").as_str().unwrap_or_default().to_string(),
+                history_tokens: msg.args.get("history_tokens").as_usize().unwrap_or(0),
+                max_new_tokens: msg.args.get("max_new_tokens").as_usize().unwrap_or(64),
+            });
+            self.inflight.insert(tag, msg);
+        }
+
+        if core.active() == 0 {
+            return false;
+        }
+        let t0 = Instant::now();
+        let done = core.step();
+        let busy = t0.elapsed().as_secs_f64();
+        self.busy_ewma = 0.95 * self.busy_ewma + 0.05 * busy.min(1.0) * 20.0; // ~per-50ms window
+        self.busy_ewma = self.busy_ewma.min(1.0);
+
+        for d in done {
+            let Some(msg) = self.inflight.remove(&d.tag) else { continue };
+            self.load.active.fetch_sub(1, Ordering::Relaxed);
+            match d.result {
+                Ok(out) => {
+                    self.completed += 1;
+                    self.graph.on_resolve(msg.cell.id);
+                    msg.cell.resolve(
+                        json!({
+                            "text": out.text,
+                            "prompt_tokens": out.prompt_tokens,
+                            "generated_tokens": out.generated_tokens,
+                            "kv": out.kv_outcome,
+                        }),
+                        (busy * 1e6) as u64,
+                    );
+                }
+                Err(e) => {
+                    self.failed += 1;
+                    msg.cell.fail(e.to_string());
+                }
+            }
+        }
+        true
+    }
+
+    // ------------------------------------------------------------ tools
+    fn tool_turn(&mut self) -> bool {
+        let Some(msg) = self.pop_next() else { return false };
+        msg.cell.mark_running();
+        self.load.active.fetch_add(1, Ordering::Relaxed);
+        let meta = msg.cell.meta();
+        let t0 = Instant::now();
+        let Backend::Tool(tool) = &mut self.backend else { unreachable!() };
+        let result = tool.execute(&meta.method, &msg.args);
+        let service = t0.elapsed();
+        self.busy_ewma = 0.9 * self.busy_ewma + 0.1 * (service.as_secs_f64() * 20.0).min(1.0);
+        self.load.active.fetch_sub(1, Ordering::Relaxed);
+        match result {
+            Ok(v) => {
+                self.completed += 1;
+                self.graph.on_resolve(msg.cell.id);
+                msg.cell.resolve(v, service.as_micros() as u64);
+            }
+            Err(e) => {
+                self.failed += 1;
+                msg.cell.fail(e.to_string());
+            }
+        }
+        true
+    }
+
+    // -------------------------------------------------------- migration
+    /// Fig. 8 source side: extract queued (never running) work + state for
+    /// `session`, repoint metadata, transfer to `to`.
+    fn migrate_out(&mut self, session: SessionId, to: InstanceId) {
+        if self.directives.stateful {
+            return; // strict stateful agents never migrate (§5)
+        }
+        if to == self.id || !self.bus.is_registered(&to) {
+            return;
+        }
+        // steps 2-3: collect queued calls of the session; running work stays.
+        let mut calls = Vec::new();
+        let mut i = 0;
+        while i < self.queue.len() {
+            if self.queue[i].cell.session() == session {
+                let msg = self.queue.remove(i).unwrap();
+                self.load.queued.fetch_sub(1, Ordering::Relaxed);
+                msg.cell.set_executor(to.clone()); // mutable metadata (Property 1)
+                calls.push(msg);
+            } else {
+                i += 1;
+            }
+        }
+        // engine-side KV moves with the session
+        let kv_bytes = match &mut self.backend {
+            Backend::Engine(core) => {
+                let moved = core.kv_manager().migrate_out(session);
+                core.evict_session(session);
+                moved.map(|(b, _, _)| b).unwrap_or(0)
+            }
+            Backend::Tool(_) => 0,
+        };
+        // step 5: managed state moves between node stores
+        let state = {
+            let target_node = self.bus.node_of(&to).unwrap_or(self.node);
+            if target_node != self.node {
+                let dst = self.stores.node(target_node);
+                migrate_session_state(&self.store, &dst, session);
+            }
+            Vec::new() // state moved store-to-store; payload carries size only
+        };
+        // step 4: creator learns the executor changed -> future routes repin
+        self.router.repin_session(session, self.id.agent.as_str(), to.clone());
+        self.migrated_out += 1;
+        let n = calls.len();
+        let payload = MigratePayload { session, calls, state, kv_bytes };
+        if !self.bus.send_from(Some(self.node), &to, Message::MigrateIn(payload)) && n > 0 {
+            // target vanished between check and send: the futures fail (§5)
+        }
+    }
+
+    /// Fig. 8 destination side (step 6): activate the migrated work.
+    fn migrate_in(&mut self, payload: MigratePayload) {
+        if let Backend::Engine(core) = &mut self.backend {
+            if payload.kv_bytes > 0 {
+                core.kv_manager().migrate_in(payload.session, payload.kv_bytes, 0);
+            }
+        }
+        for (k, v) in payload.state {
+            self.store.put(&k, v);
+        }
+        for msg in payload.calls {
+            msg.cell.mark_queued(self.id.clone());
+            self.load.queued.fetch_add(1, Ordering::Relaxed);
+            self.queue.push_back(msg);
+        }
+        self.migrated_in += 1;
+    }
+
+    // -------------------------------------------------------- telemetry
+    fn maybe_push_telemetry(&mut self) {
+        if self.last_telemetry.elapsed() >= Duration::from_millis(20) {
+            self.push_telemetry();
+        }
+    }
+
+    fn push_telemetry(&mut self) {
+        self.last_telemetry = Instant::now();
+        let mut waiting: Vec<(SessionId, u64)> = self
+            .queue
+            .iter()
+            .map(|m| (m.cell.session(), m.cell.queue_wait().as_millis() as u64))
+            .collect();
+        waiting.sort_by_key(|(_, w)| std::cmp::Reverse(*w));
+        waiting.truncate(16);
+        let oldest = waiting.first().map(|(_, w)| *w).unwrap_or(0);
+        let m = InstanceMetrics {
+            agent: self.id.agent.as_str().to_string(),
+            node: self.node.0,
+            queue_len: self.queue.len(),
+            active: self.inflight.len()
+                + matches!(self.backend, Backend::Tool(_)) as usize * 0,
+            completed: self.completed,
+            failed: self.failed,
+            migrated_in: self.migrated_in,
+            migrated_out: self.migrated_out,
+            busy_ewma: self.busy_ewma,
+            oldest_wait_ms: oldest,
+            waiting_sessions: waiting,
+        };
+        self.store.put(&keys::instance_metrics(&self.id), m);
+    }
+
+    /// KV manager access for tests / policy assertions.
+    pub fn kv_manager(&self) -> Option<&Arc<KvCacheManager>> {
+        match &self.backend {
+            Backend::Engine(core) => Some(core.kv_manager()),
+            Backend::Tool(_) => None,
+        }
+    }
+
+    /// The future-state snapshot used by telemetry tests.
+    pub fn queue_states(&self) -> Vec<FutureState> {
+        self.queue.iter().map(|m| m.cell.state()).collect()
+    }
+}

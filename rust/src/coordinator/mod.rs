@@ -1,0 +1,51 @@
+//! NALAR's two-level control architecture (paper §4).
+//!
+//! * [`component`] — the event-driven **component-level controller**: one
+//!   per agent instance, co-located with its executor. It schedules futures
+//!   from its local queue under the policy the global controller installed,
+//!   maintains future metadata, propagates readiness, manages the agent's
+//!   state/KV, executes migrations (Fig. 8) and pushes telemetry into the
+//!   node store.
+//! * [`global`] — the periodic **global controller**: aggregates telemetry
+//!   through the node stores, runs operator policies over the cluster view,
+//!   and pushes decisions (route / set_priority / migrate / kill /
+//!   provision — Table 2) back down. Never on the request fast path.
+//! * [`policy`] — the policy interface (§4.2): `Policy::tick(view, api)`
+//!   with the Table-2 primitives on [`policy::PolicyApi`].
+//! * [`policies`] — the paper's three default policies (§6.1) plus the
+//!   §6.2 SRTF/LPT studies and baseline orders.
+//! * [`router`] — routing state shared by the stubs: session stickiness,
+//!   installed weights, least-loaded fallback (late binding happens here).
+
+pub mod component;
+pub mod global;
+pub mod policies;
+pub mod policy;
+pub mod router;
+
+pub use component::{ComponentController, InstanceHandle, LocalOrder};
+pub use global::{ClusterView, GlobalController, InstanceView};
+pub use policy::{make_policy, Policy, PolicyApi, PolicyCmd};
+pub use router::{LoadMap, Router};
+
+use crate::ids::SessionId;
+
+/// Telemetry one component controller pushes per tick (node store
+/// `metrics/{instance}`). This is what the global controller aggregates.
+#[derive(Debug, Clone, Default)]
+pub struct InstanceMetrics {
+    pub agent: String,
+    pub node: u32,
+    pub queue_len: usize,
+    pub active: usize,
+    pub completed: u64,
+    pub failed: u64,
+    pub migrated_in: u64,
+    pub migrated_out: u64,
+    /// Exponentially-weighted busy fraction (0..1).
+    pub busy_ewma: f64,
+    /// Longest queue wait among queued futures (ms) — HOL signal.
+    pub oldest_wait_ms: u64,
+    /// Sessions currently waiting in this instance's queue, with wait ms.
+    pub waiting_sessions: Vec<(SessionId, u64)>,
+}

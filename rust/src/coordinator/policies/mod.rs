@@ -1,0 +1,359 @@
+//! Operator policies (paper §4.2, §6).
+//!
+//! The three **defaults** used in the end-to-end evaluation (§6.1, "<100
+//! lines cumulatively"): [`LoadBalance`] (routing by load), [`HolMigration`]
+//! (migrate sessions stuck behind head-of-line blocking), and
+//! [`ResourceRealloc`] (move instances from cold to hot agent types).
+//!
+//! The two **§6.2 studies**, each the paper's "12 lines of Python" in
+//! spirit — the `tick` bodies here are the same dozen lines of logic:
+//! [`Srtf`] (minimize JCT: prioritize later-stage calls) and [`Lpt`]
+//! (control makespan: prioritize jobs that re-entered the graph).
+//!
+//! [`Fcfs`] is the do-nothing baseline order (LangGraph-style).
+
+use std::collections::HashSet;
+
+use crate::coordinator::component::LocalOrder;
+use crate::coordinator::global::ClusterView;
+use crate::coordinator::policy::{Policy, PolicyApi};
+use crate::ids::InstanceId;
+
+/// Route each agent type's traffic inversely to instance load.
+#[derive(Default)]
+pub struct LoadBalance;
+
+impl Policy for LoadBalance {
+    fn name(&self) -> &'static str {
+        "load_balance"
+    }
+
+    fn tick(&mut self, view: &ClusterView, api: &mut PolicyApi) {
+        for agent in view.agents() {
+            let insts: Vec<_> = view.instances_of(&agent).collect();
+            if insts.len() < 2 {
+                continue;
+            }
+            let weights: Vec<(InstanceId, f64)> = insts
+                .iter()
+                .map(|i| {
+                    let load = (i.m.queue_len + i.m.active) as f64;
+                    (i.id.clone(), 1.0 / (1.0 + load * load))
+                })
+                .collect();
+            api.route_weights(&agent, weights);
+        }
+    }
+}
+
+/// Migrate the longest-waiting session away from instances showing
+/// head-of-line blocking (paper §4.1's motivating example; also the shape
+/// of Figure 6's example policy).
+pub struct HolMigration {
+    /// Queue-wait (ms, wall clock) that counts as HOL-blocked.
+    pub threshold_ms: u64,
+}
+
+impl Default for HolMigration {
+    fn default() -> Self {
+        HolMigration { threshold_ms: 150 }
+    }
+}
+
+impl Policy for HolMigration {
+    fn name(&self) -> &'static str {
+        "hol_migration"
+    }
+
+    fn tick(&mut self, view: &ClusterView, api: &mut PolicyApi) {
+        for agent in view.agents() {
+            let insts: Vec<_> = view.instances_of(&agent).collect();
+            if insts.len() < 2 {
+                continue;
+            }
+            // damping: at most one migration per agent type per tick —
+            // repeated commands within one period thrash (observed in the
+            // Fig-9a tuning; see EXPERIMENTS.md §Perf).
+            let mut migrated = false;
+            for blocked in &insts {
+                if migrated || blocked.m.oldest_wait_ms < self.threshold_ms {
+                    continue;
+                }
+                // a strictly less-loaded peer is the migration target
+                let Some(target) = insts
+                    .iter()
+                    .filter(|t| t.id != blocked.id)
+                    .min_by_key(|t| t.m.queue_len + t.m.active)
+                else {
+                    continue;
+                };
+                if target.m.queue_len + target.m.active + 1
+                    >= blocked.m.queue_len + blocked.m.active
+                {
+                    continue; // no imbalance worth a migration
+                }
+                if let Some((session, _wait)) = blocked.m.waiting_sessions.first() {
+                    api.migrate(*session, blocked.id.clone(), target.id.clone());
+                    migrated = true;
+                }
+            }
+        }
+    }
+}
+
+/// Reassign instances from under-loaded agent types to overloaded ones
+/// (paper §6.1: the router/SWE workflows win through dynamic reallocation).
+pub struct ResourceRealloc {
+    /// Mean load above which an agent type is "hot".
+    pub hot: f64,
+    /// Mean load below which an agent type is "cold".
+    pub cold: f64,
+    /// Ticks to wait between reallocation actions (damping).
+    pub cooldown: u32,
+    since_last: u32,
+}
+
+impl Default for ResourceRealloc {
+    fn default() -> Self {
+        ResourceRealloc { hot: 4.0, cold: 0.5, cooldown: 3, since_last: u32::MAX / 2 }
+    }
+}
+
+impl Policy for ResourceRealloc {
+    fn name(&self) -> &'static str {
+        "resource_realloc"
+    }
+
+    fn tick(&mut self, view: &ClusterView, api: &mut PolicyApi) {
+        self.since_last = self.since_last.saturating_add(1);
+        if self.since_last < self.cooldown {
+            return;
+        }
+        let agents = view.agents();
+        let hot = agents
+            .iter()
+            .filter(|a| view.mean_load(a) >= self.hot)
+            .max_by(|a, b| view.mean_load(a).total_cmp(&view.mean_load(b)));
+        let cold = agents
+            .iter()
+            .filter(|a| view.mean_load(a) <= self.cold && view.instances_of(a).count() > 1)
+            .min_by(|a, b| view.mean_load(a).total_cmp(&view.mean_load(b)));
+        if let (Some(hot), Some(cold)) = (hot, cold) {
+            if hot != cold {
+                // free a slot from the cold type, give it to the hot one
+                if let Some(idle) = view
+                    .instances_of(cold)
+                    .filter(|i| i.m.queue_len + i.m.active == 0)
+                    .last()
+                {
+                    api.kill(idle.id.clone());
+                    api.provision(hot);
+                    self.since_last = 0;
+                }
+            }
+        }
+    }
+}
+
+/// §6.2 "Minimize JCT": SRTF via the call-graph stage heuristic — calls
+/// from later stages of the graph have the least remaining work, so they
+/// get higher priority. (The paper: 12 lines; so is this tick.)
+#[derive(Default)]
+pub struct Srtf {
+    installed: HashSet<InstanceId>,
+}
+
+impl Policy for Srtf {
+    fn name(&self) -> &'static str {
+        "srtf"
+    }
+
+    fn tick(&mut self, view: &ClusterView, api: &mut PolicyApi) {
+        for i in &view.instances {
+            if self.installed.insert(i.id.clone()) {
+                api.install_order(i.id.clone(), LocalOrder::Priority);
+            }
+        }
+        for i in &view.instances {
+            for (session, _wait) in &i.m.waiting_sessions {
+                // stage encoded by the stub on each future; boosting the
+                // session boosts its later-stage (deepest pending) calls
+                api.set_priority_at(*session, 1, &i.m.agent);
+            }
+        }
+    }
+}
+
+/// §6.2 "Control Makespan": LPT — jobs that re-entered the graph (failed
+/// and requeued) are the longest-processing; run them first.
+#[derive(Default)]
+pub struct Lpt {
+    installed: HashSet<InstanceId>,
+}
+
+impl Policy for Lpt {
+    fn name(&self) -> &'static str {
+        "lpt"
+    }
+
+    fn tick(&mut self, view: &ClusterView, api: &mut PolicyApi) {
+        for i in &view.instances {
+            if self.installed.insert(i.id.clone()) {
+                api.install_order(i.id.clone(), LocalOrder::Priority);
+            }
+        }
+        // Retried futures carry retry_count in their metadata; the apply
+        // step maps session priority onto them. Sessions still waiting
+        // after a retry are exactly the re-entrants.
+        for i in &view.instances {
+            for (session, wait) in &i.m.waiting_sessions {
+                if *wait > 0 {
+                    api.set_priority(*session, (*wait / 100) as i32);
+                }
+            }
+        }
+    }
+}
+
+/// Baseline: best-effort FCFS, no control (LangGraph-style, §2.3).
+pub struct Fcfs;
+
+impl Policy for Fcfs {
+    fn name(&self) -> &'static str {
+        "fcfs"
+    }
+
+    fn tick(&mut self, _view: &ClusterView, _api: &mut PolicyApi) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::global::InstanceView;
+    use crate::coordinator::policy::PolicyCmd;
+    use crate::coordinator::InstanceMetrics;
+    use crate::ids::{NodeId, SessionId};
+
+    fn iv(agent: &str, idx: u32, queue: usize, oldest_ms: u64) -> InstanceView {
+        InstanceView {
+            id: InstanceId::new(agent, idx),
+            node: NodeId(0),
+            m: InstanceMetrics {
+                agent: agent.into(),
+                queue_len: queue,
+                oldest_wait_ms: oldest_ms,
+                waiting_sessions: if queue > 0 {
+                    vec![(SessionId(idx as u64), oldest_ms)]
+                } else {
+                    vec![]
+                },
+                ..Default::default()
+            },
+        }
+    }
+
+    fn view(instances: Vec<InstanceView>) -> ClusterView {
+        ClusterView { instances, ..Default::default() }
+    }
+
+    #[test]
+    fn load_balance_prefers_idle() {
+        let v = view(vec![iv("dev", 0, 10, 0), iv("dev", 1, 0, 0)]);
+        let mut api = PolicyApi::new();
+        LoadBalance.tick(&v, &mut api);
+        let PolicyCmd::RouteWeights { weights, .. } = &api.commands()[0] else {
+            panic!()
+        };
+        let w0 = weights.iter().find(|(i, _)| i.index == 0).unwrap().1;
+        let w1 = weights.iter().find(|(i, _)| i.index == 1).unwrap().1;
+        assert!(w1 > 10.0 * w0, "idle instance should dominate: {w0} vs {w1}");
+    }
+
+    #[test]
+    fn hol_migrates_from_blocked_to_idle() {
+        let v = view(vec![iv("dev", 0, 8, 500), iv("dev", 1, 0, 0)]);
+        let mut api = PolicyApi::new();
+        HolMigration::default().tick(&v, &mut api);
+        assert!(api
+            .commands()
+            .iter()
+            .any(|c| matches!(c, PolicyCmd::Migrate { from, to, .. }
+                if from.index == 0 && to.index == 1)));
+    }
+
+    #[test]
+    fn hol_no_migration_when_balanced() {
+        let v = view(vec![iv("dev", 0, 3, 500), iv("dev", 1, 3, 480)]);
+        let mut api = PolicyApi::new();
+        HolMigration::default().tick(&v, &mut api);
+        assert!(api.commands().is_empty());
+    }
+
+    #[test]
+    fn realloc_moves_capacity_to_hot_agent() {
+        let v = view(vec![
+            iv("coder", 0, 10, 0),
+            iv("chat", 0, 0, 0),
+            iv("chat", 1, 0, 0),
+        ]);
+        let mut api = PolicyApi::new();
+        ResourceRealloc::default().tick(&v, &mut api);
+        let cmds = api.commands();
+        assert!(cmds.iter().any(|c| matches!(c, PolicyCmd::Kill(i) if i.agent.as_str() == "chat")));
+        assert!(cmds
+            .iter()
+            .any(|c| matches!(c, PolicyCmd::Provision { agent } if agent == "coder")));
+    }
+
+    #[test]
+    fn realloc_never_kills_last_instance() {
+        let v = view(vec![iv("coder", 0, 10, 0), iv("chat", 0, 0, 0)]);
+        let mut api = PolicyApi::new();
+        ResourceRealloc::default().tick(&v, &mut api);
+        assert!(api.commands().is_empty(), "chat has only one instance");
+    }
+
+    #[test]
+    fn realloc_cooldown_damps() {
+        let v = view(vec![
+            iv("coder", 0, 10, 0),
+            iv("chat", 0, 0, 0),
+            iv("chat", 1, 0, 0),
+        ]);
+        let mut p = ResourceRealloc::default();
+        let mut api = PolicyApi::new();
+        p.tick(&v, &mut api);
+        let first = api.commands().len();
+        let mut api2 = PolicyApi::new();
+        p.tick(&v, &mut api2); // immediately after acting: cooldown
+        assert!(first > 0 && api2.commands().is_empty());
+    }
+
+    #[test]
+    fn srtf_installs_priority_order_once() {
+        let v = view(vec![iv("dev", 0, 1, 10)]);
+        let mut p = Srtf::default();
+        let mut api = PolicyApi::new();
+        p.tick(&v, &mut api);
+        let installs = api
+            .commands()
+            .iter()
+            .filter(|c| matches!(c, PolicyCmd::InstallOrder { .. }))
+            .count();
+        assert_eq!(installs, 1);
+        let mut api2 = PolicyApi::new();
+        p.tick(&v, &mut api2);
+        assert!(!api2
+            .commands()
+            .iter()
+            .any(|c| matches!(c, PolicyCmd::InstallOrder { .. })));
+    }
+
+    #[test]
+    fn fcfs_is_inert() {
+        let v = view(vec![iv("dev", 0, 5, 999)]);
+        let mut api = PolicyApi::new();
+        Fcfs.tick(&v, &mut api);
+        assert!(api.commands().is_empty());
+    }
+}

@@ -1,0 +1,129 @@
+//! The policy interface (paper §4.2, Table 2).
+//!
+//! Policies are programs that inspect the cluster view and invoke a small
+//! set of primitives. The global controller runs them single-threaded in a
+//! push-based loop: one decision-maker, one authoritative update stream;
+//! enforcement happens at the component controllers.
+
+use crate::coordinator::component::LocalOrder;
+use crate::coordinator::global::ClusterView;
+use crate::ids::{InstanceId, SessionId};
+
+/// Buffered control decisions — paper Table 2.
+#[derive(Debug, Clone)]
+pub enum PolicyCmd {
+    /// `route(session-id, agent-type, agent-instance)`.
+    RouteSession { session: SessionId, agent: String, instance: InstanceId },
+    /// `route(agent-type, instances, weights)`.
+    RouteWeights { agent: String, weights: Vec<(InstanceId, f64)> },
+    /// `set_priority(session-id, value[, agent])`.
+    SetPriority { session: SessionId, priority: i32, agent: Option<String> },
+    /// `migrate(session-id, current-location, destination)`.
+    Migrate { session: SessionId, from: InstanceId, to: InstanceId },
+    /// `kill(agent-instance)`.
+    Kill(InstanceId),
+    /// `provision(agent-type)`.
+    Provision { agent: String },
+    /// Install a local queue order at a component controller.
+    InstallOrder { instance: InstanceId, order: LocalOrder },
+}
+
+/// The API handed to `Policy::tick` — method-per-primitive, buffering
+/// commands that the global controller applies after the tick.
+#[derive(Default)]
+pub struct PolicyApi {
+    pub(crate) cmds: Vec<PolicyCmd>,
+}
+
+impl PolicyApi {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn route(&mut self, session: SessionId, agent: &str, instance: InstanceId) {
+        self.cmds.push(PolicyCmd::RouteSession { session, agent: agent.into(), instance });
+    }
+
+    pub fn route_weights(&mut self, agent: &str, weights: Vec<(InstanceId, f64)>) {
+        self.cmds.push(PolicyCmd::RouteWeights { agent: agent.into(), weights });
+    }
+
+    pub fn set_priority(&mut self, session: SessionId, priority: i32) {
+        self.cmds.push(PolicyCmd::SetPriority { session, priority, agent: None });
+    }
+
+    pub fn set_priority_at(&mut self, session: SessionId, priority: i32, agent: &str) {
+        self.cmds.push(PolicyCmd::SetPriority { session, priority, agent: Some(agent.into()) });
+    }
+
+    pub fn migrate(&mut self, session: SessionId, from: InstanceId, to: InstanceId) {
+        self.cmds.push(PolicyCmd::Migrate { session, from, to });
+    }
+
+    pub fn kill(&mut self, instance: InstanceId) {
+        self.cmds.push(PolicyCmd::Kill(instance));
+    }
+
+    pub fn provision(&mut self, agent: &str) {
+        self.cmds.push(PolicyCmd::Provision { agent: agent.into() });
+    }
+
+    pub fn install_order(&mut self, instance: InstanceId, order: LocalOrder) {
+        self.cmds.push(PolicyCmd::InstallOrder { instance, order });
+    }
+
+    pub fn commands(&self) -> &[PolicyCmd] {
+        &self.cmds
+    }
+
+    /// Consume the buffered commands (e.g. to hand to
+    /// `GlobalController::apply` when driving policies by hand).
+    pub fn take_commands(self) -> Vec<PolicyCmd> {
+        self.cmds
+    }
+}
+
+/// An operator policy. `tick` runs once per global-controller period with
+/// a fresh cluster view; decisions go through the [`PolicyApi`].
+pub trait Policy: Send {
+    fn name(&self) -> &'static str;
+    fn tick(&mut self, view: &ClusterView, api: &mut PolicyApi);
+}
+
+/// Policy registry (config `policies: [...]` resolves here).
+pub fn make_policy(name: &str) -> Option<Box<dyn Policy>> {
+    use crate::coordinator::policies::*;
+    Some(match name {
+        "load_balance" => Box::new(LoadBalance::default()),
+        "hol_migration" => Box::new(HolMigration::default()),
+        "resource_realloc" => Box::new(ResourceRealloc::default()),
+        "srtf" => Box::new(Srtf::default()),
+        "lpt" => Box::new(Lpt::default()),
+        "fcfs" => Box::new(Fcfs),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn api_buffers_commands_in_order() {
+        let mut api = PolicyApi::new();
+        api.set_priority(SessionId(1), 10);
+        api.migrate(SessionId(1), InstanceId::new("a", 0), InstanceId::new("a", 1));
+        api.provision("dev");
+        assert_eq!(api.commands().len(), 3);
+        assert!(matches!(api.commands()[0], PolicyCmd::SetPriority { priority: 10, .. }));
+        assert!(matches!(api.commands()[2], PolicyCmd::Provision { .. }));
+    }
+
+    #[test]
+    fn registry_resolves_known_policies() {
+        for p in ["load_balance", "hol_migration", "resource_realloc", "srtf", "lpt", "fcfs"] {
+            assert!(make_policy(p).is_some(), "{p} missing");
+        }
+        assert!(make_policy("nope").is_none());
+    }
+}

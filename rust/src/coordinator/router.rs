@@ -1,0 +1,316 @@
+//! Routing state shared by stubs and controllers — where late binding lands.
+//!
+//! Resolution order for a call to agent type `A` in session `S`:
+//!
+//! 1. **Sticky route**: if `S` has a pinned instance for `A` (stateful or
+//!    managed-state agents, or a policy `route(session, ...)` command),
+//!    use it. Migration rewrites this pin (Fig. 8 step 4's "executor
+//!    changed" notification).
+//! 2. **Installed weights**: if the global controller installed
+//!    `route(agent, instances, weights)`, sample accordingly.
+//! 3. **Least-loaded fallback**: pick the instance with the smallest
+//!    (queued + active) from the live load map.
+//!
+//! The load map holds per-instance atomic counters updated by component
+//! controllers on every enqueue/start/finish — the "queue length" signal
+//! the paper's local schedulers expose, without telemetry staleness.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::error::{Error, Result};
+use crate::ids::{InstanceId, SessionId};
+use crate::transport::Bus;
+use crate::util::rng::Rng;
+
+/// Live per-instance load counters.
+#[derive(Default, Debug)]
+pub struct InstanceLoad {
+    pub queued: AtomicUsize,
+    pub active: AtomicUsize,
+}
+
+impl InstanceLoad {
+    pub fn total(&self) -> usize {
+        self.queued.load(Ordering::Relaxed) + self.active.load(Ordering::Relaxed)
+    }
+}
+
+/// Registry of live load counters (instances register at launch).
+#[derive(Default, Clone)]
+pub struct LoadMap {
+    inner: Arc<RwLock<HashMap<InstanceId, Arc<InstanceLoad>>>>,
+}
+
+impl LoadMap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&self, id: InstanceId) -> Arc<InstanceLoad> {
+        let load = Arc::new(InstanceLoad::default());
+        self.inner.write().unwrap().insert(id, load.clone());
+        load
+    }
+
+    pub fn deregister(&self, id: &InstanceId) {
+        self.inner.write().unwrap().remove(id);
+    }
+
+    pub fn get(&self, id: &InstanceId) -> Option<Arc<InstanceLoad>> {
+        self.inner.read().unwrap().get(id).cloned()
+    }
+
+    pub fn total_of(&self, id: &InstanceId) -> usize {
+        self.get(id).map(|l| l.total()).unwrap_or(usize::MAX)
+    }
+}
+
+/// Fallback choice when neither sticky pin nor weights apply. The
+/// non-default modes emulate baseline systems (paper §2.3 / §6):
+/// hash-of-session models whole-workflow replication (CrewAI-like),
+/// round-robin models uncoordinated event-driven dispatch (AutoGen-like).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FallbackMode {
+    #[default]
+    LeastLoaded,
+    HashSession,
+    RoundRobin,
+}
+
+/// See module docs.
+pub struct Router {
+    bus: Bus,
+    loads: LoadMap,
+    sticky: RwLock<HashMap<(SessionId, String), InstanceId>>,
+    weights: RwLock<HashMap<String, Vec<(InstanceId, f64)>>>,
+    rng: Mutex<Rng>,
+    /// Baselines: sessions always pin to the first-chosen instance (their
+    /// KV caches bind them to "the GPU originally assigned", §6.1).
+    pub force_sticky: std::sync::atomic::AtomicBool,
+    fallback: Mutex<FallbackMode>,
+    rr_counter: std::sync::atomic::AtomicUsize,
+}
+
+impl Router {
+    pub fn new(bus: Bus, loads: LoadMap, seed: u64) -> Self {
+        Router {
+            bus,
+            loads,
+            sticky: RwLock::new(HashMap::new()),
+            weights: RwLock::new(HashMap::new()),
+            rng: Mutex::new(Rng::new(seed)),
+            force_sticky: std::sync::atomic::AtomicBool::new(false),
+            fallback: Mutex::new(FallbackMode::LeastLoaded),
+            rr_counter: std::sync::atomic::AtomicUsize::new(0),
+        }
+    }
+
+    pub fn set_fallback(&self, mode: FallbackMode) {
+        *self.fallback.lock().unwrap() = mode;
+    }
+
+    /// Route one call. `pin_session` pins the chosen instance for future
+    /// calls of this session (stateful / managed-state agents).
+    pub fn route(&self, session: SessionId, agent: &str, pin_session: bool) -> Result<InstanceId> {
+        let pin_session =
+            pin_session || self.force_sticky.load(std::sync::atomic::Ordering::Relaxed);
+        // 1. sticky
+        if let Some(pin) = self
+            .sticky
+            .read()
+            .unwrap()
+            .get(&(session, agent.to_string()))
+            .cloned()
+        {
+            if self.bus.is_registered(&pin) {
+                return Ok(pin);
+            }
+            // pinned instance died: fall through and re-pin
+        }
+        let chosen = self.choose(agent, session)?;
+        if pin_session {
+            self.sticky
+                .write()
+                .unwrap()
+                .insert((session, agent.to_string()), chosen.clone());
+        }
+        Ok(chosen)
+    }
+
+    fn choose(&self, agent: &str, session: SessionId) -> Result<InstanceId> {
+        // 2. installed weights
+        if let Some(w) = self.weights.read().unwrap().get(agent) {
+            let live: Vec<&(InstanceId, f64)> = w
+                .iter()
+                .filter(|(i, wt)| *wt > 0.0 && self.bus.is_registered(i))
+                .collect();
+            if !live.is_empty() {
+                let total: f64 = live.iter().map(|(_, wt)| wt).sum();
+                let mut x = self.rng.lock().unwrap().f64() * total;
+                for (i, wt) in &live {
+                    x -= wt;
+                    if x <= 0.0 {
+                        return Ok(i.clone());
+                    }
+                }
+                return Ok(live[live.len() - 1].0.clone());
+            }
+        }
+        // 3. fallback — allocation-free over the bus's agent index (§Perf)
+        let mode = *self.fallback.lock().unwrap();
+        let chosen = self.bus.with_instances_of(agent, |instances| {
+            if instances.is_empty() {
+                return None;
+            }
+            Some(match mode {
+                FallbackMode::LeastLoaded => instances
+                    .iter()
+                    .min_by_key(|i| self.loads.total_of(i))
+                    .unwrap()
+                    .clone(),
+                FallbackMode::HashSession => {
+                    instances[(session.0 as usize) % instances.len()].clone()
+                }
+                FallbackMode::RoundRobin => {
+                    let idx = self
+                        .rr_counter
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+                        % instances.len();
+                    instances[idx].clone()
+                }
+            })
+        });
+        chosen.ok_or_else(|| Error::NoInstance(agent.to_string()))
+    }
+
+    // --------------------------------------------- policy-facing mutators
+    /// Table 2 `route(session-id, agent-type, agent-instance)`.
+    pub fn pin(&self, session: SessionId, agent: &str, instance: InstanceId) {
+        self.sticky
+            .write()
+            .unwrap()
+            .insert((session, agent.to_string()), instance);
+    }
+
+    /// Table 2 `route(agent-type, instances, weights)`.
+    pub fn set_weights(&self, agent: &str, weights: Vec<(InstanceId, f64)>) {
+        self.weights
+            .write()
+            .unwrap()
+            .insert(agent.to_string(), weights);
+    }
+
+    /// Repoint every sticky route of `session` at `agent` (migration
+    /// completion, Fig. 8 step 4).
+    pub fn repin_session(&self, session: SessionId, agent: &str, to: InstanceId) {
+        self.pin(session, agent, to);
+    }
+
+    pub fn sticky_of(&self, session: SessionId, agent: &str) -> Option<InstanceId> {
+        self.sticky
+            .read()
+            .unwrap()
+            .get(&(session, agent.to_string()))
+            .cloned()
+    }
+
+    pub fn clear_session(&self, session: SessionId) {
+        self.sticky.write().unwrap().retain(|(s, _), _| *s != session);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ids::NodeId;
+    use std::time::Duration;
+
+    fn setup(n: u32) -> (Bus, LoadMap, Router, Vec<std::sync::mpsc::Receiver<crate::transport::Message>>) {
+        let bus = Bus::new(Duration::ZERO);
+        let loads = LoadMap::new();
+        let mut rxs = Vec::new();
+        for i in 0..n {
+            let id = InstanceId::new("dev", i);
+            rxs.push(bus.register(id.clone(), NodeId(i % 2)));
+            loads.register(id);
+        }
+        let router = Router::new(bus.clone(), loads.clone(), 42);
+        (bus, loads, router, rxs)
+    }
+
+    #[test]
+    fn least_loaded_fallback() {
+        let (_bus, loads, router, _rxs) = setup(3);
+        loads
+            .get(&InstanceId::new("dev", 0))
+            .unwrap()
+            .queued
+            .store(5, Ordering::Relaxed);
+        loads
+            .get(&InstanceId::new("dev", 2))
+            .unwrap()
+            .queued
+            .store(1, Ordering::Relaxed);
+        let got = router.route(SessionId(1), "dev", false).unwrap();
+        assert_eq!(got.index, 1, "dev:1 has zero load");
+    }
+
+    #[test]
+    fn sticky_pins_and_survives_load_changes() {
+        let (_bus, loads, router, _rxs) = setup(2);
+        let first = router.route(SessionId(7), "dev", true).unwrap();
+        // make the pinned instance look busy — sticky must still win
+        loads.get(&first).unwrap().queued.store(100, Ordering::Relaxed);
+        let second = router.route(SessionId(7), "dev", true).unwrap();
+        assert_eq!(first, second);
+        // other sessions avoid the busy one
+        let other = router.route(SessionId(8), "dev", false).unwrap();
+        assert_ne!(other, first);
+    }
+
+    #[test]
+    fn dead_pin_reroutes() {
+        let (bus, _loads, router, _rxs) = setup(2);
+        router.pin(SessionId(1), "dev", InstanceId::new("dev", 0));
+        bus.deregister(&InstanceId::new("dev", 0));
+        let got = router.route(SessionId(1), "dev", true).unwrap();
+        assert_eq!(got.index, 1);
+    }
+
+    #[test]
+    fn weights_respected() {
+        let (_bus, _loads, router, _rxs) = setup(2);
+        router.set_weights(
+            "dev",
+            vec![
+                (InstanceId::new("dev", 0), 0.0),
+                (InstanceId::new("dev", 1), 1.0),
+            ],
+        );
+        for s in 0..20 {
+            let got = router.route(SessionId(s), "dev", false).unwrap();
+            assert_eq!(got.index, 1, "zero-weight instance must never be chosen");
+        }
+    }
+
+    #[test]
+    fn unknown_agent_errors() {
+        let (_bus, _loads, router, _rxs) = setup(1);
+        assert!(matches!(
+            router.route(SessionId(0), "nope", false),
+            Err(Error::NoInstance(_))
+        ));
+    }
+
+    #[test]
+    fn repin_moves_session() {
+        let (_bus, _loads, router, _rxs) = setup(2);
+        router.pin(SessionId(3), "dev", InstanceId::new("dev", 0));
+        router.repin_session(SessionId(3), "dev", InstanceId::new("dev", 1));
+        assert_eq!(router.sticky_of(SessionId(3), "dev").unwrap().index, 1);
+        router.clear_session(SessionId(3));
+        assert!(router.sticky_of(SessionId(3), "dev").is_none());
+    }
+}

@@ -1,0 +1,77 @@
+//! Continuous-batching LLM engine — the vLLM substitute (DESIGN.md §3).
+//!
+//! Each LLM agent instance owns one engine core and drives it from its
+//! event loop: `admit` new generation requests at any time, `step` advances
+//! every active sequence by one token (continuous batching — new arrivals
+//! join between steps, finished sequences leave). Two cores:
+//!
+//! * [`PjrtCore`] — real compute: byte-level tokenizer + the AOT transformer
+//!   through [`crate::runtime::PjrtModel`]. Session KV caches are kept
+//!   per-sequence and re-entered into the batch on continuation, managed by
+//!   [`crate::state::kvcache::KvCacheManager`] (hit = incremental decode of
+//!   the new prompt; miss = full re-prefill — exactly the recompute penalty
+//!   the paper's KV policy avoids).
+//! * [`SimCore`] — profiled latency model (calibrated against the PJRT
+//!   path) for the rate-sweep benches, mirroring the paper's own use of
+//!   emulation in §6.3. Identical interface, identical KV accounting.
+
+pub mod pjrt_core;
+pub mod sim;
+pub mod tokenizer;
+
+pub use pjrt_core::PjrtCore;
+pub use sim::SimCore;
+pub use tokenizer::Tokenizer;
+
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::ids::SessionId;
+use crate::state::kvcache::KvCacheManager;
+
+/// A generation request admitted to an engine.
+#[derive(Debug, Clone)]
+pub struct EngineReq {
+    /// Correlates the completion with the future being served.
+    pub tag: u64,
+    pub session: SessionId,
+    pub prompt: String,
+    /// Session history length in tokens (0 for fresh sessions). On a KV
+    /// hit the history is *not* recomputed; on a miss it is.
+    pub history_tokens: usize,
+    pub max_new_tokens: usize,
+}
+
+/// Completion payload.
+#[derive(Debug, Clone)]
+pub struct GenOut {
+    pub text: String,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    /// "hit" | "promoted" | "miss" — KV residency at admission.
+    pub kv_outcome: &'static str,
+}
+
+/// A finished sequence handed back from `step`.
+pub struct EngineDone {
+    pub tag: u64,
+    pub session: SessionId,
+    pub result: Result<GenOut>,
+}
+
+/// The engine interface the agent instance drives.
+pub trait EngineCore: Send {
+    /// Accept a request (prefill happens on the next `step`).
+    fn admit(&mut self, req: EngineReq);
+    /// Advance all active sequences one token; returns completions.
+    /// Blocking: real compute (pjrt) or modeled step time (sim).
+    fn step(&mut self) -> Vec<EngineDone>;
+    /// Sequences currently generating (admitted and unfinished).
+    fn active(&self) -> usize;
+    /// Largest batch the core can decode at once.
+    fn max_batch(&self) -> usize;
+    /// The tiered KV manager (policy hooks live here).
+    fn kv_manager(&self) -> &Arc<KvCacheManager>;
+    /// Drop a session's engine-side state (session end / migration out).
+    fn evict_session(&mut self, session: SessionId);
+}

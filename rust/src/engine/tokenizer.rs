@@ -1,0 +1,106 @@
+//! Byte-level tokenizer for the served LM (vocab = 256 bytes + specials).
+
+use crate::runtime::manifest::ModelDims;
+
+/// Stateless byte tokenizer; ids 0..255 are raw bytes, then BOS/EOS/PAD.
+#[derive(Debug, Clone, Copy)]
+pub struct Tokenizer {
+    pub bos: i32,
+    pub eos: i32,
+    pub pad: i32,
+    pub max_seq: usize,
+}
+
+impl Tokenizer {
+    pub fn new(dims: &ModelDims) -> Self {
+        Tokenizer { bos: dims.bos, eos: dims.eos, pad: dims.pad, max_seq: dims.max_seq }
+    }
+
+    /// `[BOS] + bytes`, truncated so at least `reserve` positions remain
+    /// for generation.
+    pub fn encode(&self, text: &str, reserve: usize) -> Vec<i32> {
+        let budget = self.max_seq.saturating_sub(reserve).max(1);
+        let mut out = Vec::with_capacity(budget.min(text.len() + 1));
+        out.push(self.bos);
+        for &b in text.as_bytes().iter().take(budget.saturating_sub(1)) {
+            out.push(b as i32);
+        }
+        out
+    }
+
+    /// Decode generated ids back to text (stops at EOS, skips specials).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut bytes = Vec::with_capacity(ids.len());
+        for &id in ids {
+            if id == self.eos {
+                break;
+            }
+            if (0..256).contains(&id) {
+                bytes.push(id as u8);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn is_special(&self, id: i32) -> bool {
+        id == self.bos || id == self.eos || id == self.pad
+    }
+}
+
+/// Greedy argmax sampling (deterministic serving).
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer { bos: 256, eos: 257, pad: 258, max_seq: 16 }
+    }
+
+    #[test]
+    fn encode_roundtrip() {
+        let t = tok();
+        let ids = t.encode("hi", 4);
+        assert_eq!(ids, vec![256, b'h' as i32, b'i' as i32]);
+        assert_eq!(t.decode(&ids[1..]), "hi");
+    }
+
+    #[test]
+    fn encode_truncates_with_reserve() {
+        let t = tok();
+        let ids = t.encode("abcdefghijklmnopqrstuvwxyz", 8);
+        assert_eq!(ids.len(), 8); // 16 - 8 budget
+        assert_eq!(ids[0], 256);
+    }
+
+    #[test]
+    fn decode_stops_at_eos_and_skips_specials() {
+        let t = tok();
+        assert_eq!(t.decode(&[b'a' as i32, 257, b'b' as i32]), "a");
+        assert_eq!(t.decode(&[258, b'x' as i32]), "x");
+    }
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn specials() {
+        let t = tok();
+        assert!(t.is_special(256) && t.is_special(257) && t.is_special(258));
+        assert!(!t.is_special(65));
+    }
+}

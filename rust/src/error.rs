@@ -1,0 +1,95 @@
+//! Error type for the NALAR runtime.
+//!
+//! Per the paper's fault-tolerance stance (§5): NALAR does not mask faults;
+//! failed requests are reported back to the driver with the workflow path,
+//! the failing agent and the underlying cause, and the driver decides
+//! whether to retry.
+
+use crate::ids::{FutureId, InstanceId};
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("future {0} failed at {agent}: {cause}", agent = .1, cause = .2)]
+    FutureFailed(FutureId, InstanceId, String),
+
+    #[error("future {0} timed out after {1:?}")]
+    FutureTimeout(FutureId, std::time::Duration),
+
+    #[error("no instance available for agent type `{0}`")]
+    NoInstance(String),
+
+    #[error("unknown agent type `{0}`")]
+    UnknownAgent(String),
+
+    #[error("instance {0} was killed")]
+    InstanceKilled(InstanceId),
+
+    #[error("engine error: {0}")]
+    Engine(String),
+
+    #[error("runtime (PJRT) error: {0}")]
+    Runtime(String),
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("state error: {0}")]
+    State(String),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json: {0}")]
+    Json(#[from] crate::util::json::ParseError),
+
+    #[error("{0}")]
+    Msg(String),
+}
+
+impl Error {
+    pub fn msg(s: impl Into<String>) -> Self {
+        Error::Msg(s.into())
+    }
+
+    /// True when the driver may meaningfully retry (per-§5 semantics).
+    pub fn retryable(&self) -> bool {
+        matches!(
+            self,
+            Error::FutureFailed(..)
+                | Error::FutureTimeout(..)
+                | Error::InstanceKilled(..)
+                | Error::NoInstance(..)
+        )
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retryable_classification() {
+        assert!(Error::FutureTimeout(FutureId(1), std::time::Duration::from_secs(1)).retryable());
+        assert!(Error::NoInstance("x".into()).retryable());
+        assert!(!Error::Config("bad".into()).retryable());
+        assert!(!Error::Engine("x".into()).retryable());
+    }
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::FutureFailed(FutureId(7), InstanceId::new("dev", 1), "oom".into());
+        let s = e.to_string();
+        assert!(s.contains("f7") && s.contains("dev:1") && s.contains("oom"));
+    }
+}

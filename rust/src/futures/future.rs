@@ -1,0 +1,459 @@
+//! The future cell: immutable-once value, mutable metadata, push readiness.
+//!
+//! Threads-and-condvars implementation: every component controller, driver
+//! and engine runs on OS threads (the runtime substrate is built from
+//! scratch; see DESIGN.md §3), so `value(timeout)` blocks the calling
+//! thread exactly like the paper's `future.value(timeout=t)` blocks the
+//! Python caller.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::ids::{AgentType, FutureId, InstanceId, Location, RequestId, SessionId};
+use crate::util::json;
+
+/// Payload carried by a resolved future. JSON keeps the driver programming
+/// model close to the paper's "ordinary Python" values.
+pub type Value = json::Value;
+
+/// Lifecycle of a future. `Ready`/`Failed` are terminal; the value never
+/// changes after either (Property 1: immutable data).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FutureState {
+    /// Created by a stub, not yet accepted by a component controller.
+    Created,
+    /// In some instance's local queue.
+    Queued,
+    /// Executing on its `executor` instance.
+    Running,
+    /// Value materialized and pushed to consumers.
+    Ready,
+    /// Failed; drivers observe the error and may retry (paper §5).
+    Failed,
+}
+
+/// Structured metadata (paper Table 3) — everything component-level
+/// controllers need to route, migrate and propagate without the global
+/// controller supervising each step.
+#[derive(Debug, Clone)]
+pub struct FutureMeta {
+    pub id: FutureId,
+    pub session: SessionId,
+    pub request: RequestId,
+    /// Agent type that computes this future.
+    pub agent: AgentType,
+    /// Method name on the agent (from the stub's declaration).
+    pub method: String,
+    /// Who created the call (Table 3 `creator`).
+    pub creator: Location,
+    /// Where it is slated to execute (Table 3 `executor`) — mutable until
+    /// the future starts running; migration rewrites it.
+    pub executor: Option<InstanceId>,
+    /// Registered consumers (Table 3 `consumers`) — mutable.
+    pub consumers: Vec<Location>,
+    /// Upstream futures whose values feed this call (Table 3 `dependencies`).
+    pub dependencies: Vec<FutureId>,
+    /// Scheduling priority (higher = sooner); set by `set_priority`.
+    pub priority: i32,
+    /// Call-graph depth of the creating frame (SRTF stage heuristic, §6.2).
+    pub stage: u32,
+    /// How many times this logical task re-entered the graph (LPT, §6.2).
+    pub retry_count: u32,
+    /// Estimated service cost in scaled seconds (engine profile estimate).
+    pub est_cost: f64,
+    /// When the future was created (queue-wait measurement).
+    pub created_at: Instant,
+}
+
+impl FutureMeta {
+    pub fn new(
+        id: FutureId,
+        session: SessionId,
+        request: RequestId,
+        agent: AgentType,
+        method: impl Into<String>,
+        creator: Location,
+    ) -> Self {
+        FutureMeta {
+            id,
+            session,
+            request,
+            agent,
+            method: method.into(),
+            creator,
+            executor: None,
+            consumers: Vec::new(),
+            dependencies: Vec::new(),
+            priority: 0,
+            stage: 0,
+            retry_count: 0,
+            est_cost: 0.0,
+            created_at: Instant::now(),
+        }
+    }
+}
+
+struct Inner {
+    state: FutureState,
+    value: Option<Arc<Value>>,
+    error: Option<String>,
+    meta: FutureMeta,
+    /// Busy-time actually spent executing (telemetry).
+    service_us: u64,
+}
+
+/// Shared future cell. Producers resolve it exactly once; consumers block
+/// on the condvar until push-based readiness. All metadata mutation goes
+/// through here so controllers and drivers see one consistent view.
+pub struct FutureCell {
+    pub id: FutureId,
+    inner: Mutex<Inner>,
+    ready: Condvar,
+}
+
+impl FutureCell {
+    pub fn new(meta: FutureMeta) -> Arc<Self> {
+        Arc::new(FutureCell {
+            id: meta.id,
+            inner: Mutex::new(Inner {
+                state: FutureState::Created,
+                value: None,
+                error: None,
+                meta,
+                service_us: 0,
+            }),
+            ready: Condvar::new(),
+        })
+    }
+
+    // ----------------------------------------------------------- state
+    pub fn state(&self) -> FutureState {
+        self.inner.lock().unwrap().state
+    }
+
+    /// `future.available()` from the paper's futures API.
+    pub fn available(&self) -> bool {
+        matches!(self.state(), FutureState::Ready | FutureState::Failed)
+    }
+
+    pub fn mark_queued(&self, instance: InstanceId) {
+        let mut i = self.inner.lock().unwrap();
+        if matches!(i.state, FutureState::Created | FutureState::Queued) {
+            i.state = FutureState::Queued;
+            i.meta.executor = Some(instance);
+        }
+    }
+
+    pub fn mark_running(&self) {
+        let mut i = self.inner.lock().unwrap();
+        if i.state == FutureState::Queued {
+            i.state = FutureState::Running;
+        }
+    }
+
+    /// Time spent waiting so far (HOL-blocking detection).
+    pub fn queue_wait(&self) -> Duration {
+        let i = self.inner.lock().unwrap();
+        match i.state {
+            FutureState::Created | FutureState::Queued => i.meta.created_at.elapsed(),
+            _ => Duration::ZERO,
+        }
+    }
+
+    /// Materialize the value (Op 3 producer side). The value is immutable:
+    /// a second resolution is ignored (debug-asserted) — Property 1.
+    pub fn resolve(&self, value: Value, service_us: u64) {
+        let mut i = self.inner.lock().unwrap();
+        if matches!(i.state, FutureState::Ready | FutureState::Failed) {
+            debug_assert!(false, "double resolve of {}", self.id);
+            return;
+        }
+        i.value = Some(Arc::new(value));
+        i.state = FutureState::Ready;
+        i.service_us = service_us;
+        drop(i);
+        self.ready.notify_all();
+    }
+
+    pub fn fail(&self, err: impl Into<String>) {
+        let mut i = self.inner.lock().unwrap();
+        if matches!(i.state, FutureState::Ready | FutureState::Failed) {
+            return;
+        }
+        i.error = Some(err.into());
+        i.state = FutureState::Failed;
+        drop(i);
+        self.ready.notify_all();
+    }
+
+    // ----------------------------------------------------------- metadata
+    pub fn meta(&self) -> FutureMeta {
+        self.inner.lock().unwrap().meta.clone()
+    }
+
+    pub fn with_meta<R>(&self, f: impl FnOnce(&FutureMeta) -> R) -> R {
+        f(&self.inner.lock().unwrap().meta)
+    }
+
+    pub fn executor(&self) -> Option<InstanceId> {
+        self.inner.lock().unwrap().meta.executor.clone()
+    }
+
+    pub fn session(&self) -> SessionId {
+        self.inner.lock().unwrap().meta.session
+    }
+
+    pub fn priority(&self) -> i32 {
+        self.inner.lock().unwrap().meta.priority
+    }
+
+    pub fn set_priority(&self, p: i32) {
+        self.inner.lock().unwrap().meta.priority = p;
+    }
+
+    /// Rewrite the slated executor (late binding / migration). Only legal
+    /// before the future starts running; returns false otherwise.
+    pub fn set_executor(&self, instance: InstanceId) -> bool {
+        let mut i = self.inner.lock().unwrap();
+        match i.state {
+            FutureState::Created | FutureState::Queued => {
+                i.meta.executor = Some(instance);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Op 2: record a consumer (first value access registers the caller).
+    pub fn register_consumer(&self, who: Location) {
+        let mut i = self.inner.lock().unwrap();
+        if !i.meta.consumers.contains(&who) {
+            i.meta.consumers.push(who);
+        }
+    }
+
+    pub fn service_us(&self) -> u64 {
+        self.inner.lock().unwrap().service_us
+    }
+
+    // ----------------------------------------------------------- value
+    pub fn try_value(&self) -> Option<Result<Arc<Value>>> {
+        let i = self.inner.lock().unwrap();
+        Self::terminal_result(&i, self.id)
+    }
+
+    fn terminal_result(i: &Inner, id: FutureId) -> Option<Result<Arc<Value>>> {
+        match i.state {
+            FutureState::Ready => Some(Ok(i.value.clone().expect("ready without value"))),
+            FutureState::Failed => Some(Err(Error::FutureFailed(
+                id,
+                i.meta
+                    .executor
+                    .clone()
+                    .unwrap_or_else(|| InstanceId::new("?", 0)),
+                i.error.clone().unwrap_or_default(),
+            ))),
+            _ => None,
+        }
+    }
+
+    /// Op 3: block until materialized, up to `timeout`.
+    pub fn value(&self, timeout: Duration) -> Result<Arc<Value>> {
+        let deadline = Instant::now() + timeout;
+        let mut i = self.inner.lock().unwrap();
+        loop {
+            if let Some(v) = Self::terminal_result(&i, self.id) {
+                return v;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(Error::FutureTimeout(self.id, timeout));
+            }
+            let (guard, res) = self
+                .ready
+                .wait_timeout(i, deadline - now)
+                .expect("future lock poisoned");
+            i = guard;
+            if res.timed_out() {
+                if let Some(v) = Self::terminal_result(&i, self.id) {
+                    return v;
+                }
+                return Err(Error::FutureTimeout(self.id, timeout));
+            }
+        }
+    }
+}
+
+/// What driver code holds: a cheap handle mirroring the paper's two-method
+/// futures API (`available()` / `value(timeout)`), plus consumer
+/// registration on first access.
+#[derive(Clone)]
+pub struct FutureHandle {
+    pub cell: Arc<FutureCell>,
+    /// Identity of the holder, recorded as consumer on first access.
+    holder: Location,
+}
+
+impl FutureHandle {
+    pub fn new(cell: Arc<FutureCell>, holder: Location) -> Self {
+        FutureHandle { cell, holder }
+    }
+
+    pub fn id(&self) -> FutureId {
+        self.cell.id
+    }
+
+    /// `future.available()` — non-blocking readiness probe.
+    pub fn available(&self) -> bool {
+        self.cell.available()
+    }
+
+    /// `future.value(timeout=t)` — registers the holder as consumer (Op 2)
+    /// then blocks until push-based readiness (Op 3).
+    pub fn value(&self, timeout: Duration) -> Result<Arc<Value>> {
+        self.cell.register_consumer(self.holder.clone());
+        self.cell.value(timeout)
+    }
+
+    /// Non-blocking value probe (drivers polling a retry loop, Fig. 4 #3).
+    pub fn try_value(&self) -> Option<Result<Arc<Value>>> {
+        self.cell.register_consumer(self.holder.clone());
+        self.cell.try_value()
+    }
+
+    pub fn meta(&self) -> FutureMeta {
+        self.cell.meta()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    fn meta(id: u64) -> FutureMeta {
+        FutureMeta::new(
+            FutureId(id),
+            SessionId(0),
+            RequestId(0),
+            AgentType::new("dev"),
+            "implement",
+            Location::Driver(RequestId(0)),
+        )
+    }
+
+    #[test]
+    fn resolve_then_value() {
+        let c = FutureCell::new(meta(1));
+        assert!(!c.available());
+        c.resolve(json!({"ok": true}), 10);
+        assert!(c.available());
+        let v = c.value(Duration::from_millis(10)).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true));
+        assert_eq!(c.service_us(), 10);
+    }
+
+    #[test]
+    fn value_blocks_until_push() {
+        let c = FutureCell::new(meta(2));
+        let c2 = c.clone();
+        let waiter = std::thread::spawn(move || c2.value(Duration::from_secs(2)));
+        std::thread::sleep(Duration::from_millis(20));
+        c.resolve(json!(42), 0);
+        let v = waiter.join().unwrap().unwrap();
+        assert_eq!(v.as_i64(), Some(42));
+    }
+
+    #[test]
+    fn timeout_errors() {
+        let c = FutureCell::new(meta(3));
+        let t0 = Instant::now();
+        let e = c.value(Duration::from_millis(30)).unwrap_err();
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        assert!(matches!(e, Error::FutureTimeout(..)));
+        assert!(e.retryable());
+    }
+
+    #[test]
+    fn failure_propagates() {
+        let c = FutureCell::new(meta(4));
+        c.mark_queued(InstanceId::new("dev", 1));
+        c.fail("boom");
+        let e = c.value(Duration::from_millis(10)).unwrap_err();
+        match e {
+            Error::FutureFailed(id, inst, msg) => {
+                assert_eq!(id, FutureId(4));
+                assert_eq!(inst.to_string(), "dev:1");
+                assert_eq!(msg, "boom");
+            }
+            other => panic!("wrong error {other:?}"),
+        }
+    }
+
+    #[test]
+    fn value_immutable_after_ready() {
+        let c = FutureCell::new(meta(5));
+        c.resolve(json!(1), 0);
+        // late failure must not clobber the value
+        c.fail("late");
+        assert_eq!(c.try_value().unwrap().unwrap().as_i64(), Some(1));
+        assert_eq!(c.state(), FutureState::Ready);
+    }
+
+    #[test]
+    fn executor_mutable_until_running() {
+        let c = FutureCell::new(meta(6));
+        assert!(c.set_executor(InstanceId::new("dev", 0)));
+        c.mark_queued(InstanceId::new("dev", 0));
+        assert!(c.set_executor(InstanceId::new("dev", 1)), "queued is still migratable");
+        c.mark_running();
+        assert!(!c.set_executor(InstanceId::new("dev", 2)), "running is pinned");
+        assert_eq!(c.executor().unwrap().to_string(), "dev:1");
+    }
+
+    #[test]
+    fn consumer_registration_dedup() {
+        let c = FutureCell::new(meta(7));
+        let d = Location::Driver(RequestId(9));
+        c.register_consumer(d.clone());
+        c.register_consumer(d);
+        assert_eq!(c.meta().consumers.len(), 1);
+    }
+
+    #[test]
+    fn handle_registers_consumer_on_access() {
+        let c = FutureCell::new(meta(8));
+        let h = FutureHandle::new(c.clone(), Location::Driver(RequestId(3)));
+        c.resolve(json!("x"), 0);
+        let _ = h.value(Duration::from_millis(5)).unwrap();
+        assert_eq!(c.meta().consumers, vec![Location::Driver(RequestId(3))]);
+    }
+
+    #[test]
+    fn queue_wait_tracks_unstarted_only() {
+        let c = FutureCell::new(meta(9));
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(c.queue_wait() >= Duration::from_millis(4));
+        c.mark_queued(InstanceId::new("dev", 0));
+        c.mark_running();
+        assert_eq!(c.queue_wait(), Duration::ZERO);
+    }
+
+    #[test]
+    fn many_waiters_all_wake() {
+        let c = FutureCell::new(meta(10));
+        let mut joins = vec![];
+        for _ in 0..8 {
+            let c2 = c.clone();
+            joins.push(std::thread::spawn(move || {
+                c2.value(Duration::from_secs(2)).unwrap().as_i64()
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(10));
+        c.resolve(json!(7), 0);
+        for j in joins {
+            assert_eq!(j.join().unwrap(), Some(7));
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! Dynamic dependency-graph extraction (paper §4.3.1, Property 2).
+//!
+//! NALAR never asks the developer for a DAG. Instead it reconstructs the
+//! workflow's dataflow graph from the three observed future operations:
+//! creation (node + dependency edges), consumer registration (consumer
+//! edges) and resolution. Policies read the graph to reason about stages
+//! (SRTF prioritizes later stages, §6.2) and re-entry (LPT prioritizes
+//! retried jobs).
+
+use std::collections::{HashMap, HashSet};
+
+use std::sync::RwLock;
+
+use crate::ids::{FutureId, Location, RequestId};
+
+#[derive(Debug, Default, Clone)]
+struct Node {
+    deps: Vec<FutureId>,
+    dependents: Vec<FutureId>,
+    consumers: Vec<Location>,
+    request: Option<RequestId>,
+    stage: u32,
+    resolved: bool,
+}
+
+/// Append-only view of the evolving computation graph.
+#[derive(Default)]
+pub struct DepGraph {
+    nodes: RwLock<HashMap<FutureId, Node>>,
+}
+
+impl DepGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Op 1 observed: future created with explicit dependencies.
+    /// `stage` is the creator's call-graph depth + 1.
+    pub fn on_create(&self, id: FutureId, request: RequestId, deps: &[FutureId], stage: u32) {
+        let mut g = self.nodes.write().unwrap();
+        for d in deps {
+            g.entry(*d).or_default().dependents.push(id);
+        }
+        let node = g.entry(id).or_default();
+        node.deps = deps.to_vec();
+        node.request = Some(request);
+        node.stage = stage;
+    }
+
+    /// Op 2 observed: someone consumed the future.
+    pub fn on_consume(&self, id: FutureId, who: Location) {
+        let mut g = self.nodes.write().unwrap();
+        let node = g.entry(id).or_default();
+        if !node.consumers.contains(&who) {
+            node.consumers.push(who);
+        }
+    }
+
+    /// Op 3 observed.
+    pub fn on_resolve(&self, id: FutureId) {
+        if let Some(n) = self.nodes.write().unwrap().get_mut(&id) {
+            n.resolved = true;
+        }
+    }
+
+    pub fn stage(&self, id: FutureId) -> u32 {
+        self.nodes.read().unwrap().get(&id).map(|n| n.stage).unwrap_or(0)
+    }
+
+    pub fn dependencies(&self, id: FutureId) -> Vec<FutureId> {
+        self.nodes.read().unwrap().get(&id).map(|n| n.deps.clone()).unwrap_or_default()
+    }
+
+    pub fn dependents(&self, id: FutureId) -> Vec<FutureId> {
+        self.nodes
+            .read().unwrap()
+            .get(&id)
+            .map(|n| n.dependents.clone())
+            .unwrap_or_default()
+    }
+
+    /// All unresolved deps — a future is ready-to-run when this is empty.
+    pub fn unresolved_deps(&self, id: FutureId) -> Vec<FutureId> {
+        let g = self.nodes.read().unwrap();
+        g.get(&id)
+            .map(|n| {
+                n.deps
+                    .iter()
+                    .filter(|d| g.get(d).map(|dn| !dn.resolved).unwrap_or(true))
+                    .cloned()
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Remaining-work estimate for a request: unresolved futures reachable
+    /// downstream of any of the request's unresolved futures. SRTF uses
+    /// this to rank requests by least remaining work.
+    pub fn remaining_futures(&self, request: RequestId) -> usize {
+        let g = self.nodes.read().unwrap();
+        let mut seen: HashSet<FutureId> = HashSet::new();
+        let mut stack: Vec<FutureId> = g
+            .iter()
+            .filter(|(_, n)| n.request == Some(request) && !n.resolved)
+            .map(|(id, _)| *id)
+            .collect();
+        while let Some(id) = stack.pop() {
+            if !seen.insert(id) {
+                continue;
+            }
+            if let Some(n) = g.get(&id) {
+                for d in &n.dependents {
+                    if g.get(d).map(|dn| !dn.resolved).unwrap_or(false) {
+                        stack.push(*d);
+                    }
+                }
+            }
+        }
+        seen.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn create_records_edges_both_ways() {
+        let g = DepGraph::new();
+        g.on_create(FutureId(1), RequestId(0), &[], 1);
+        g.on_create(FutureId(2), RequestId(0), &[FutureId(1)], 2);
+        assert_eq!(g.dependencies(FutureId(2)), vec![FutureId(1)]);
+        assert_eq!(g.dependents(FutureId(1)), vec![FutureId(2)]);
+        assert_eq!(g.stage(FutureId(2)), 2);
+    }
+
+    #[test]
+    fn readiness_via_unresolved_deps() {
+        let g = DepGraph::new();
+        g.on_create(FutureId(1), RequestId(0), &[], 1);
+        g.on_create(FutureId(2), RequestId(0), &[FutureId(1)], 2);
+        assert_eq!(g.unresolved_deps(FutureId(2)), vec![FutureId(1)]);
+        g.on_resolve(FutureId(1));
+        assert!(g.unresolved_deps(FutureId(2)).is_empty());
+    }
+
+    #[test]
+    fn remaining_work_shrinks() {
+        let g = DepGraph::new();
+        let r = RequestId(7);
+        g.on_create(FutureId(1), r, &[], 1);
+        g.on_create(FutureId(2), r, &[FutureId(1)], 2);
+        g.on_create(FutureId(3), r, &[FutureId(1)], 2);
+        assert_eq!(g.remaining_futures(r), 3);
+        g.on_resolve(FutureId(1));
+        assert_eq!(g.remaining_futures(r), 2);
+        g.on_resolve(FutureId(2));
+        g.on_resolve(FutureId(3));
+        assert_eq!(g.remaining_futures(r), 0);
+    }
+
+    #[test]
+    fn consumer_edges_dedup() {
+        let g = DepGraph::new();
+        g.on_create(FutureId(1), RequestId(0), &[], 0);
+        let who = Location::Driver(RequestId(0));
+        g.on_consume(FutureId(1), who.clone());
+        g.on_consume(FutureId(1), who);
+        let nodes = g.nodes.read().unwrap();
+        assert_eq!(nodes[&FutureId(1)].consumers.len(), 1);
+    }
+}

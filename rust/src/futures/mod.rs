@@ -1,0 +1,23 @@
+//! Futures as first-class runtime objects (paper §3.2, §4.3.1).
+//!
+//! A NALAR future represents one long-running agent/tool invocation. Unlike
+//! Ray/CIEL futures it is *selectively mutable*: the value is immutable once
+//! materialized, but metadata (executor, consumers, priority) stays mutable
+//! so the control plane can late-bind and migrate work after it has been
+//! routed (Property 1). The three runtime operations (Figure 7):
+//!
+//! * **Op 1 — create** (non-blocking): the stub allocates the cell and hands
+//!   the call to the target's component controller.
+//! * **Op 2 — register consumer** (non-blocking): first access from a driver
+//!   or agent records it in `consumers`, feeding dynamic dependency-graph
+//!   extraction (Property 2).
+//! * **Op 3 — return** (blocking): `value().await` parks on the cell until
+//!   the producer pushes readiness (Property 3).
+
+mod future;
+mod graph;
+mod table;
+
+pub use future::{FutureCell, FutureHandle, FutureMeta, FutureState, Value};
+pub use graph::DepGraph;
+pub use table::FutureTable;

@@ -1,0 +1,149 @@
+//! Sharded registry of live futures (per node).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use std::sync::RwLock;
+
+use crate::futures::{FutureCell, FutureState};
+use crate::ids::FutureId;
+
+const SHARDS: usize = 32;
+
+/// Sharded `FutureId -> Arc<FutureCell>` map. The global controller scans
+/// it (via telemetry snapshots, not directly) while component controllers
+/// insert/resolve at event rate — sharding keeps those paths from
+/// contending (§Perf: the Fig-10 loop reads while 128 agents write).
+pub struct FutureTable {
+    shards: Vec<RwLock<HashMap<FutureId, Arc<FutureCell>>>>,
+}
+
+impl Default for FutureTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FutureTable {
+    pub fn new() -> Self {
+        FutureTable {
+            shards: (0..SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+        }
+    }
+
+    fn shard(&self, id: FutureId) -> &RwLock<HashMap<FutureId, Arc<FutureCell>>> {
+        &self.shards[(id.0 as usize) % SHARDS]
+    }
+
+    pub fn insert(&self, cell: Arc<FutureCell>) {
+        self.shard(cell.id).write().unwrap().insert(cell.id, cell);
+    }
+
+    pub fn get(&self, id: FutureId) -> Option<Arc<FutureCell>> {
+        self.shard(id).read().unwrap().get(&id).cloned()
+    }
+
+    pub fn remove(&self, id: FutureId) -> Option<Arc<FutureCell>> {
+        self.shard(id).write().unwrap().remove(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Count by state (telemetry snapshot for the global controller).
+    pub fn state_counts(&self) -> HashMap<FutureState, usize> {
+        let mut out = HashMap::new();
+        for shard in &self.shards {
+            for cell in shard.read().unwrap().values() {
+                *out.entry(cell.state()).or_insert(0) += 1;
+            }
+        }
+        out
+    }
+
+    /// Visit all live futures (used by policy loops and GC).
+    pub fn for_each(&self, mut f: impl FnMut(&Arc<FutureCell>)) {
+        for shard in &self.shards {
+            for cell in shard.read().unwrap().values() {
+                f(cell);
+            }
+        }
+    }
+
+    /// Drop terminal futures older than keeping is useful; returns count
+    /// removed. (The paper scales to 131K live futures; GC keeps bench
+    /// memory bounded.)
+    pub fn gc_terminal(&self) -> usize {
+        let mut removed = 0;
+        for shard in &self.shards {
+            let mut m = shard.write().unwrap();
+            let before = m.len();
+            m.retain(|_, c| !matches!(c.state(), FutureState::Ready | FutureState::Failed));
+            removed += before - m.len();
+        }
+        removed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::futures::FutureMeta;
+    use crate::ids::*;
+
+    fn cell(id: u64) -> Arc<FutureCell> {
+        FutureCell::new(FutureMeta::new(
+            FutureId(id),
+            SessionId(0),
+            RequestId(0),
+            AgentType::new("a"),
+            "m",
+            Location::Global,
+        ))
+    }
+
+    #[test]
+    fn insert_get_remove() {
+        let t = FutureTable::new();
+        t.insert(cell(1));
+        t.insert(cell(2));
+        assert_eq!(t.len(), 2);
+        assert!(t.get(FutureId(1)).is_some());
+        assert!(t.remove(FutureId(1)).is_some());
+        assert!(t.get(FutureId(1)).is_none());
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn state_counts_and_gc() {
+        let t = FutureTable::new();
+        for i in 0..10 {
+            let c = cell(i);
+            if i < 4 {
+                c.resolve(crate::json!(i), 0);
+            }
+            t.insert(c);
+        }
+        let counts = t.state_counts();
+        assert_eq!(counts[&FutureState::Ready], 4);
+        assert_eq!(counts[&FutureState::Created], 6);
+        assert_eq!(t.gc_terminal(), 4);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    fn for_each_visits_all() {
+        let t = FutureTable::new();
+        for i in 0..100 {
+            t.insert(cell(i));
+        }
+        let mut n = 0;
+        t.for_each(|_| n += 1);
+        assert_eq!(n, 100);
+    }
+}

@@ -1,0 +1,183 @@
+//! Identifier newtypes used across the NALAR runtime.
+//!
+//! Sessions, requests and futures follow the paper's terminology (§2
+//! footnotes): a *request* is a single user inference request entering a
+//! workflow; a *session* is a series of requests sharing context (e.g. a
+//! chat); a *future* is the coordination handle for one agent/tool call.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+
+macro_rules! id_u64 {
+    ($(#[$doc:meta])* $name:ident, $prefix:literal) => {
+        $(#[$doc])*
+        #[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+        pub struct $name(pub u64);
+
+        impl fmt::Debug for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, concat!($prefix, "{}"), self.0)
+            }
+        }
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, concat!($prefix, "{}"), self.0)
+            }
+        }
+    };
+}
+
+id_u64!(
+    /// A user session: multiple requests sharing context (chat history, KV caches).
+    SessionId, "s"
+);
+id_u64!(
+    /// One user request entering a workflow driver.
+    RequestId, "r"
+);
+id_u64!(
+    /// One agent/tool invocation's coordination handle.
+    FutureId, "f"
+);
+
+/// An emulated node of the cluster (owns a node store + instances).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl fmt::Debug for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "n{}", self.0)
+    }
+}
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "n{}", self.0)
+    }
+}
+
+/// Agent/tool type name (e.g. `"developer"`). Cheap to clone.
+#[derive(Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AgentType(pub Arc<str>);
+
+impl AgentType {
+    pub fn new(name: &str) -> Self {
+        AgentType(Arc::from(name))
+    }
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+impl From<&str> for AgentType {
+    fn from(s: &str) -> Self {
+        AgentType::new(s)
+    }
+}
+impl fmt::Debug for AgentType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl fmt::Display for AgentType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// A concrete agent instance: `agent_type:index` pinned to a node.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct InstanceId {
+    pub agent: AgentType,
+    pub index: u32,
+}
+
+impl InstanceId {
+    pub fn new(agent: impl Into<AgentType>, index: u32) -> Self {
+        InstanceId { agent: agent.into(), index }
+    }
+}
+impl fmt::Debug for InstanceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.agent, self.index)
+    }
+}
+impl fmt::Display for InstanceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.agent, self.index)
+    }
+}
+
+/// Where a controller lives: an agent instance or a workflow driver
+/// (drivers are addressed per request). Futures' `creator`/`consumers`
+/// metadata (paper Table 3) are `Location`s.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub enum Location {
+    Instance(InstanceId),
+    Driver(RequestId),
+    Global,
+}
+
+impl fmt::Display for Location {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Location::Instance(i) => write!(f, "{i}"),
+            Location::Driver(r) => write!(f, "driver[{r}]"),
+            Location::Global => write!(f, "global"),
+        }
+    }
+}
+
+/// Monotonic id generator shared by a deployment.
+#[derive(Default)]
+pub struct IdGen {
+    session: AtomicU64,
+    request: AtomicU64,
+    future: AtomicU64,
+}
+
+impl IdGen {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn session(&self) -> SessionId {
+        SessionId(self.session.fetch_add(1, Ordering::Relaxed))
+    }
+    pub fn request(&self) -> RequestId {
+        RequestId(self.request.fetch_add(1, Ordering::Relaxed))
+    }
+    pub fn future(&self) -> FutureId {
+        FutureId(self.future.fetch_add(1, Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(SessionId(3).to_string(), "s3");
+        assert_eq!(InstanceId::new("dev", 2).to_string(), "dev:2");
+        assert_eq!(
+            Location::Instance(InstanceId::new("dev", 0)).to_string(),
+            "dev:0"
+        );
+    }
+
+    #[test]
+    fn idgen_monotonic_unique() {
+        let g = IdGen::new();
+        let a = g.future();
+        let b = g.future();
+        assert!(b.0 > a.0);
+    }
+
+    #[test]
+    fn agent_type_cheap_clone_eq() {
+        let a = AgentType::new("planner");
+        let b = a.clone();
+        assert_eq!(a, b);
+        assert_eq!(a.as_str(), "planner");
+    }
+}

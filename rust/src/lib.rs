@@ -1,0 +1,64 @@
+//! # NALAR — a serving framework for agent workflows
+//!
+//! Reproduction of "NALAR: A Serving Framework for Agent Workflows"
+//! (Laju et al., CS.DC 2026) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: a futures-centric
+//!   coordinator with a two-level control plane (periodic global controller
+//!   + event-driven component controllers), a managed state layer, and a
+//!   policy interface (`route` / `set_priority` / `migrate` / `kill` /
+//!   `provision`).
+//! * **Layer 2** — a JAX transformer LM (`python/compile/model.py`) lowered
+//!   AOT to HLO text in `artifacts/`, loaded and executed from Rust through
+//!   PJRT ([`runtime`]).
+//! * **Layer 1** — Pallas attention kernels (`python/compile/kernels/`),
+//!   validated against a pure-jnp oracle and lowered (interpret mode) into
+//!   the same HLO.
+//!
+//! Python never runs on the request path: `make artifacts` is build-time
+//! only, and the `nalar` binary is self-contained afterwards.
+//!
+//! The build environment is fully offline (only `xla`, `anyhow`,
+//! `thiserror` are vendorable), so the ecosystem crates a serving stack
+//! normally leans on are implemented from scratch in [`util`], [`testkit`],
+//! [`nodestore`] and [`transport`] — see DESIGN.md §3 for the substitution
+//! table.
+//!
+//! ## Crate map
+//!
+//! | module | paper section | role |
+//! |---|---|---|
+//! | [`agents`] | §3.1 | agent specs, stub registry, instance event loops |
+//! | [`futures`] | §3.2, §4.3.1 | futures with mutable metadata, dep graph |
+//! | [`state`] | §3.3, §4.3.2 | managed lists/dicts, tiered KV cache |
+//! | [`coordinator`] | §4 | two-level control plane + policy interface |
+//! | [`nodestore`] | §4.1 | telemetry/decision broker (Redis substitute) |
+//! | [`transport`] | impl | in-proc bus (gRPC substitute) |
+//! | [`engine`] | impl | continuous-batching LLM engine (vLLM substitute) |
+//! | [`runtime`] | impl | PJRT loader/executor for the AOT artifacts |
+//! | [`vectorstore`] | impl | cosine top-k index (ChromaDB substitute) |
+//! | [`workflow`] | §6 | the three evaluation workflows |
+//! | [`workload`] | §6 | arrival processes + synthetic corpora |
+//! | [`baselines`] | §6 | Ayo/CrewAI/AutoGen-like serving modes |
+
+pub mod agents;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod error;
+pub mod futures;
+pub mod ids;
+pub mod metrics;
+pub mod nodestore;
+pub mod runtime;
+pub mod server;
+pub mod state;
+pub mod testkit;
+pub mod transport;
+pub mod util;
+pub mod vectorstore;
+pub mod workflow;
+pub mod workload;
+
+pub use error::{Error, Result};

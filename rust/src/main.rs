@@ -1,0 +1,102 @@
+//! `nalar` CLI: launch deployments, run workloads, inspect the system.
+//!
+//! ```text
+//! nalar run   --workflow financial|router|swe --system nalar|ayo|crew|autogen
+//!             [--rps 8] [--secs 5] [--config path.json]
+//! nalar info  [--config path.json]      # validate + describe a deployment
+//! ```
+
+use std::time::Duration;
+
+use nalar::baselines::SystemUnderTest;
+use nalar::config::DeploymentConfig;
+use nalar::server::Deployment;
+use nalar::util::cli::Args;
+use nalar::workflow::{run_open_loop, RunConfig, WorkflowKind};
+
+fn parse_system(s: &str) -> SystemUnderTest {
+    match s {
+        "ayo" => SystemUnderTest::AyoLike,
+        "crew" => SystemUnderTest::CrewLike,
+        "autogen" => SystemUnderTest::AutoGenLike,
+        _ => SystemUnderTest::Nalar,
+    }
+}
+
+fn parse_workflow(s: &str) -> WorkflowKind {
+    match s {
+        "router" => WorkflowKind::Router,
+        "swe" => WorkflowKind::Swe,
+        _ => WorkflowKind::Financial,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!("usage: nalar <run|info> [--workflow financial|router|swe] [--system nalar|ayo|crew|autogen] [--rps N] [--secs N] [--config file.json]");
+            Ok(())
+        }
+    }
+}
+
+fn load_config(args: &Args, wf: WorkflowKind) -> anyhow::Result<DeploymentConfig> {
+    Ok(match args.get("config") {
+        Some(path) => DeploymentConfig::from_json_file(path)?,
+        None => wf.config(),
+    })
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let wf = parse_workflow(&args.str_or("workflow", "financial"));
+    let system = parse_system(&args.str_or("system", "nalar"));
+    let cfg = load_config(args, wf)?;
+    let scale = cfg.time_scale;
+    let d = Deployment::launch_as(cfg, system)?;
+    let rc = RunConfig {
+        workflow: wf,
+        rps: args.f64_or("rps", 8.0),
+        duration: Duration::from_secs(args.u64_or("secs", 5)),
+        session_pool: args.usize_or("sessions", 32),
+        request_timeout: Duration::from_secs(args.u64_or("timeout", 60)),
+        seed: args.u64_or("seed", 7),
+    };
+    println!(
+        "running {} on {} at {} wall-RPS for {:?} (time_scale {})",
+        wf.name(),
+        system.name(),
+        rc.rps,
+        rc.duration,
+        scale
+    );
+    let (stats, rec) = run_open_loop(&d, &rc);
+    let paper = rec.summary_scaled(1.0 / stats.time_scale);
+    println!(
+        "completed {} failed {} | paper-s avg {:.1} p50 {:.1} p95 {:.1} p99 {:.1} | imbalance {:.2}x",
+        stats.completed, stats.failed, paper.avg, paper.p50, paper.p95, paper.p99, stats.imbalance
+    );
+    d.shutdown();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let wf = parse_workflow(&args.str_or("workflow", "financial"));
+    let cfg = load_config(args, wf)?;
+    println!("nodes: {}  time_scale: {}  policies: {:?}", cfg.nodes, cfg.time_scale, cfg.policies);
+    for a in &cfg.agents {
+        println!(
+            "  {:<16} {:?} x{}  stateful={} batchable={} managed_state={} max={}",
+            a.name,
+            a.kind,
+            a.instances,
+            a.directives.stateful,
+            a.directives.batchable,
+            a.directives.managed_state,
+            a.directives.max_instances
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,161 @@
+//! Serving metrics: latency quantiles, throughput, load imbalance.
+//!
+//! The evaluation (paper §6.1, Figure 9) reports average / P50 / P95 / P99
+//! end-to-end latency per request rate, plus a load-imbalance factor for
+//! the router and SWE workflows. `LatencyRecorder` backs those tables;
+//! `summary_scaled` converts the testbed's scaled milliseconds back into
+//! "paper-equivalent" seconds (see DESIGN.md §3 substitution table).
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+
+/// Collects latency samples and computes the Fig-9 summary row.
+#[derive(Default, Debug)]
+pub struct LatencyRecorder {
+    samples: Mutex<Vec<f64>>, // seconds
+}
+
+/// One Fig-9 row: the summary statistics for a (workflow, rate, system) cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub avg: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, latency: Duration) {
+        self.samples.lock().unwrap().push(latency.as_secs_f64());
+    }
+
+    pub fn record_secs(&self, secs: f64) {
+        self.samples.lock().unwrap().push(secs);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Summary with all values multiplied by `scale` (use `1.0 /
+    /// time_scale` to report paper-equivalent seconds).
+    pub fn summary_scaled(&self, scale: f64) -> LatencySummary {
+        let mut s = self.samples.lock().unwrap().clone();
+        if s.is_empty() {
+            return LatencySummary { count: 0, avg: 0.0, p50: 0.0, p95: 0.0, p99: 0.0, max: 0.0 };
+        }
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| -> f64 {
+            let idx = ((s.len() as f64 - 1.0) * p).round() as usize;
+            s[idx] * scale
+        };
+        LatencySummary {
+            count: s.len(),
+            avg: s.iter().sum::<f64>() / s.len() as f64 * scale,
+            p50: q(0.50),
+            p95: q(0.95),
+            p99: q(0.99),
+            max: s[s.len() - 1] * scale,
+        }
+    }
+
+    pub fn summary(&self) -> LatencySummary {
+        self.summary_scaled(1.0)
+    }
+}
+
+/// Load imbalance across instances: `max(busy) / mean(busy)` (>= 1.0).
+///
+/// The paper reports baselines showing ">2.1x higher load-imbalance" on the
+/// SWE workflow and >90% branch imbalance in the Azure traces (§6.1).
+pub fn load_imbalance(busy_fractions: &[f64]) -> f64 {
+    if busy_fractions.is_empty() {
+        return 1.0;
+    }
+    let mean = busy_fractions.iter().sum::<f64>() / busy_fractions.len() as f64;
+    if mean <= f64::EPSILON {
+        return 1.0;
+    }
+    let max = busy_fractions.iter().cloned().fold(f64::MIN, f64::max);
+    max / mean
+}
+
+/// Per-instance serving counters pushed into the node store as telemetry.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Counters {
+    pub enqueued: u64,
+    pub started: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub migrated_in: u64,
+    pub migrated_out: u64,
+    pub busy_time_us: u64,
+}
+
+impl Counters {
+    pub fn busy_fraction(&self, window: Duration) -> f64 {
+        if window.is_zero() {
+            return 0.0;
+        }
+        (self.busy_time_us as f64 / window.as_micros() as f64).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_ordered() {
+        let r = LatencyRecorder::new();
+        for i in 1..=100 {
+            r.record_secs(i as f64);
+        }
+        let s = r.summary();
+        assert_eq!(s.count, 100);
+        assert!((s.avg - 50.5).abs() < 1e-9);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        assert_eq!(s.max, 100.0);
+    }
+
+    #[test]
+    fn scaled_summary() {
+        let r = LatencyRecorder::new();
+        r.record_secs(2.0);
+        let s = r.summary_scaled(100.0);
+        assert_eq!(s.avg, 200.0);
+    }
+
+    #[test]
+    fn empty_summary_zeroes() {
+        let r = LatencyRecorder::new();
+        let s = r.summary();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p99, 0.0);
+    }
+
+    #[test]
+    fn imbalance() {
+        assert_eq!(load_imbalance(&[]), 1.0);
+        assert_eq!(load_imbalance(&[0.5, 0.5]), 1.0);
+        assert!((load_imbalance(&[0.9, 0.1]) - 1.8).abs() < 1e-9);
+        assert_eq!(load_imbalance(&[0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn busy_fraction_capped() {
+        let c = Counters { busy_time_us: 2_000_000, ..Default::default() };
+        assert_eq!(c.busy_fraction(Duration::from_secs(1)), 1.0);
+    }
+}

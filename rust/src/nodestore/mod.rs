@@ -1,0 +1,111 @@
+//! Node store: the low-latency metadata + telemetry substrate (paper §4.1).
+//!
+//! The paper's prototype uses one Redis per node as a "telemetry-and-
+//! decision broker": component-level controllers push metrics and local
+//! observations *up*, the global controller writes policy updates *down*,
+//! and neither side synchronizes with the other directly. This module is
+//! that substrate built from scratch (substitution table, DESIGN.md §3):
+//!
+//! * sharded in-memory keyspace with per-key versions (optimistic reads),
+//! * prefix scans (the global controller's aggregation primitive),
+//! * prefix pub/sub so component controllers consume policy changes
+//!   asynchronously — the global controller is never on the critical path.
+//!
+//! Values are `Arc<dyn Any + Send + Sync>`: control-plane structs move
+//! through the store without serialization (the §Perf pass measured JSON
+//! serialization dominating the Fig-10 loop; typed values removed it).
+
+mod store;
+
+pub use store::{NodeStore, StoreValue, Subscription};
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::ids::NodeId;
+
+/// One store per emulated node, plus a directory for cross-node access.
+///
+/// In the paper each node's controllers talk only to the local store while
+/// the global controller reads all of them; `StoreDirectory` gives it that
+/// reach.
+#[derive(Clone)]
+pub struct StoreDirectory {
+    stores: Arc<HashMap<NodeId, Arc<NodeStore>>>,
+}
+
+impl StoreDirectory {
+    pub fn new(nodes: &[NodeId]) -> Self {
+        let stores = nodes
+            .iter()
+            .map(|&n| (n, Arc::new(NodeStore::new())))
+            .collect();
+        StoreDirectory { stores: Arc::new(stores) }
+    }
+
+    pub fn node(&self, node: NodeId) -> Arc<NodeStore> {
+        self.stores
+            .get(&node)
+            .cloned()
+            .unwrap_or_else(|| panic!("no store for node {node}"))
+    }
+
+    pub fn nodes(&self) -> impl Iterator<Item = (NodeId, &Arc<NodeStore>)> {
+        self.stores.iter().map(|(k, v)| (*k, v))
+    }
+
+    pub fn len(&self) -> usize {
+        self.stores.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stores.is_empty()
+    }
+}
+
+/// Canonical key layout used by the controllers.
+pub mod keys {
+    use crate::ids::{FutureId, InstanceId, SessionId};
+
+    pub fn instance_metrics(i: &InstanceId) -> String {
+        format!("metrics/{i}")
+    }
+    pub const METRICS_PREFIX: &str = "metrics/";
+
+    pub fn policy(i: &InstanceId) -> String {
+        format!("policy/{i}")
+    }
+    pub const POLICY_PREFIX: &str = "policy/";
+
+    pub fn future_meta(f: FutureId) -> String {
+        format!("future/{f}")
+    }
+    pub const FUTURE_PREFIX: &str = "future/";
+
+    pub fn session_state(s: SessionId, key: &str) -> String {
+        format!("state/{s}/{key}")
+    }
+    pub fn session_prefix(s: SessionId) -> String {
+        format!("state/{s}/")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn directory_per_node_isolated() {
+        let dir = StoreDirectory::new(&[NodeId(0), NodeId(1)]);
+        dir.node(NodeId(0)).put("k", 1u64);
+        assert_eq!(dir.node(NodeId(0)).get::<u64>("k"), Some(Arc::new(1u64)));
+        assert!(dir.node(NodeId(1)).get::<u64>("k").is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn missing_node_panics() {
+        let dir = StoreDirectory::new(&[NodeId(0)]);
+        dir.node(NodeId(9));
+    }
+}

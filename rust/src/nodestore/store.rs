@@ -1,0 +1,282 @@
+//! The sharded KV + pub/sub store backing one emulated node.
+
+use std::any::Any;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Type-erased stored value. Control-plane structs are stored as-is (no
+/// serialization on the telemetry path).
+pub type StoreValue = Arc<dyn Any + Send + Sync>;
+
+const SHARDS: usize = 16;
+
+#[derive(Clone)]
+struct Entry {
+    value: StoreValue,
+    version: u64,
+}
+
+struct Shard {
+    map: RwLock<HashMap<String, Entry>>,
+}
+
+/// A live prefix subscription; receives `(key, value)` for every put whose
+/// key starts with the subscribed prefix.
+pub struct Subscription {
+    pub rx: mpsc::Receiver<(String, StoreValue)>,
+}
+
+impl Subscription {
+    /// Drain everything currently delivered.
+    pub fn drain(&self) -> Vec<(String, StoreValue)> {
+        let mut out = Vec::new();
+        while let Ok(item) = self.rx.try_recv() {
+            out.push(item);
+        }
+        out
+    }
+}
+
+struct Subscriber {
+    prefix: String,
+    tx: mpsc::Sender<(String, StoreValue)>,
+}
+
+/// See module docs ([`crate::nodestore`]).
+pub struct NodeStore {
+    shards: Vec<Shard>,
+    subscribers: Mutex<Vec<Subscriber>>,
+    version: std::sync::atomic::AtomicU64,
+}
+
+impl Default for NodeStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NodeStore {
+    pub fn new() -> Self {
+        NodeStore {
+            shards: (0..SHARDS)
+                .map(|_| Shard { map: RwLock::new(HashMap::new()) })
+                .collect(),
+            subscribers: Mutex::new(Vec::new()),
+            version: std::sync::atomic::AtomicU64::new(1),
+        }
+    }
+
+    fn shard(&self, key: &str) -> &Shard {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % SHARDS]
+    }
+
+    /// Insert/replace `key`; bumps the key version and notifies prefix
+    /// subscribers. Accepts any `'static` value.
+    pub fn put<V: Any + Send + Sync>(&self, key: &str, value: V) {
+        self.put_arc(key, Arc::new(value))
+    }
+
+    pub fn put_arc(&self, key: &str, value: StoreValue) {
+        let version = self
+            .version
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        {
+            let mut map = self.shard(key).map.write().unwrap();
+            map.insert(key.to_string(), Entry { value: value.clone(), version });
+        }
+        let mut subs = self.subscribers.lock().unwrap();
+        subs.retain(|s| {
+            if key.starts_with(&s.prefix) {
+                s.tx.send((key.to_string(), value.clone())).is_ok()
+            } else {
+                true
+            }
+        });
+    }
+
+    /// Typed read; `None` if absent or a different type is stored.
+    pub fn get<V: Any + Send + Sync>(&self, key: &str) -> Option<Arc<V>> {
+        let map = self.shard(key).map.read().unwrap();
+        map.get(key)?.value.clone().downcast::<V>().ok()
+    }
+
+    /// Read with the key's version (for optimistic re-checks).
+    pub fn get_versioned<V: Any + Send + Sync>(&self, key: &str) -> Option<(Arc<V>, u64)> {
+        let map = self.shard(key).map.read().unwrap();
+        let e = map.get(key)?;
+        Some((e.value.clone().downcast::<V>().ok()?, e.version))
+    }
+
+    pub fn remove(&self, key: &str) -> bool {
+        self.shard(key).map.write().unwrap().remove(key).is_some()
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.shard(key).map.read().unwrap().contains_key(key)
+    }
+
+    /// All `(key, value)` pairs under a prefix, typed; silently skips
+    /// entries of other types. This is the global controller's aggregation
+    /// primitive (e.g. `scan::<InstanceMetrics>("metrics/")`).
+    pub fn scan<V: Any + Send + Sync>(&self, prefix: &str) -> Vec<(String, Arc<V>)> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let map = shard.map.read().unwrap();
+            for (k, e) in map.iter() {
+                if k.starts_with(prefix) {
+                    if let Ok(v) = e.value.clone().downcast::<V>() {
+                        out.push((k.clone(), v));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.map.read().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Subscribe to every put under `prefix`. Component controllers use
+    /// this to consume policy updates asynchronously (paper §4.1: "without
+    /// placing the global controller on the critical path").
+    pub fn subscribe(&self, prefix: &str) -> Subscription {
+        let (tx, rx) = mpsc::channel();
+        self.subscribers
+            .lock()
+            .unwrap()
+            .push(Subscriber { prefix: prefix.to_string(), tx });
+        Subscription { rx }
+    }
+
+    /// Atomic read-modify-write on one key (the store's "transactional
+    /// support" in the prototype's Redis terms).
+    pub fn update<V, F>(&self, key: &str, default: V, f: F)
+    where
+        V: Any + Send + Sync + Clone,
+        F: FnOnce(&mut V),
+    {
+        let version = self
+            .version
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let mut map = self.shard(key).map.write().unwrap();
+        let entry = map.entry(key.to_string()).or_insert_with(|| Entry {
+            value: Arc::new(default),
+            version,
+        });
+        let mut current: V = entry
+            .value
+            .clone()
+            .downcast::<V>()
+            .map(|a| (*a).clone())
+            .unwrap_or_else(|_| panic!("update: type mismatch at {key}"));
+        f(&mut current);
+        entry.value = Arc::new(current);
+        entry.version = version;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_typed() {
+        let s = NodeStore::new();
+        s.put("a", 42u32);
+        assert_eq!(s.get::<u32>("a"), Some(Arc::new(42)));
+        assert!(s.get::<u64>("a").is_none(), "wrong type must not downcast");
+        assert!(s.get::<u32>("b").is_none());
+    }
+
+    #[test]
+    fn versions_increase() {
+        let s = NodeStore::new();
+        s.put("k", 1u8);
+        let (_, v1) = s.get_versioned::<u8>("k").unwrap();
+        s.put("k", 2u8);
+        let (val, v2) = s.get_versioned::<u8>("k").unwrap();
+        assert_eq!(*val, 2);
+        assert!(v2 > v1);
+    }
+
+    #[test]
+    fn scan_prefix_typed() {
+        let s = NodeStore::new();
+        s.put("metrics/a:0", 1u64);
+        s.put("metrics/a:1", 2u64);
+        s.put("policy/a:0", 9u64);
+        s.put("metrics/other", "str");
+        let mut got = s.scan::<u64>("metrics/");
+        got.sort_by(|a, b| a.0.cmp(&b.0));
+        assert_eq!(got.len(), 2);
+        assert_eq!(*got[0].1, 1);
+    }
+
+    #[test]
+    fn pubsub_prefix() {
+        let s = NodeStore::new();
+        let sub = s.subscribe("policy/");
+        s.put("policy/dev:0", 7u64);
+        s.put("metrics/dev:0", 8u64); // not delivered
+        let (k, v) = sub.rx.recv().unwrap();
+        assert_eq!(k, "policy/dev:0");
+        assert_eq!(*v.downcast::<u64>().unwrap(), 7);
+        assert!(sub.rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn subscription_drain() {
+        let s = NodeStore::new();
+        let sub = s.subscribe("p/");
+        s.put("p/1", 1u64);
+        s.put("p/2", 2u64);
+        assert_eq!(sub.drain().len(), 2);
+        assert_eq!(sub.drain().len(), 0);
+    }
+
+    #[test]
+    fn update_rmw() {
+        let s = NodeStore::new();
+        s.update("cnt", 0u64, |v| *v += 1);
+        s.update("cnt", 0u64, |v| *v += 1);
+        assert_eq!(*s.get::<u64>("cnt").unwrap(), 2);
+    }
+
+    #[test]
+    fn remove_contains() {
+        let s = NodeStore::new();
+        s.put("x", 1i32);
+        assert!(s.contains("x"));
+        assert!(s.remove("x"));
+        assert!(!s.contains("x"));
+        assert!(!s.remove("x"));
+    }
+
+    #[test]
+    fn concurrent_puts() {
+        let s = Arc::new(NodeStore::new());
+        let mut handles = vec![];
+        for t in 0..8 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000 {
+                    s.put(&format!("k{}/{}", t, i), i as u64);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.len(), 8000);
+    }
+}

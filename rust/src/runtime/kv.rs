@@ -1,0 +1,140 @@
+//! KV-cache tensor packing.
+//!
+//! The HLO decode entries take/return the cache as one `[L, 2, B, H, S, Dh]`
+//! f32 tensor. The engine keeps each *sequence's* cache separately (so
+//! sessions can be retained, offloaded or migrated independently — that is
+//! the whole point of NALAR's KV layer) and gathers/scatters them around
+//! each batched step.
+
+use crate::runtime::manifest::ModelDims;
+
+/// One sequence's KV cache: `[L, 2, H, S, Dh]` flattened.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeqKv {
+    pub data: Vec<f32>,
+    pub pos: usize,
+}
+
+impl SeqKv {
+    pub fn zeros(dims: &ModelDims) -> Self {
+        SeqKv { data: vec![0.0; dims.kv_floats_per_seq()], pos: 0 }
+    }
+}
+
+/// A batched KV tensor in HLO layout `[L, 2, B, H, S, Dh]`.
+pub struct KvBatch {
+    pub data: Vec<f32>,
+    pub batch: usize,
+}
+
+impl KvBatch {
+    pub fn zeros(dims: &ModelDims, batch: usize) -> Self {
+        KvBatch { data: vec![0.0; dims.kv_floats_per_seq() * batch], batch }
+    }
+
+    /// Floats per (layer, k/v, batch-element) block: `H * S * Dh`.
+    fn block(dims: &ModelDims) -> usize {
+        dims.n_heads * dims.max_seq * dims.head_dim
+    }
+
+    /// Copy sequence `seq`'s cache into batch slot `slot`.
+    pub fn scatter(&mut self, dims: &ModelDims, slot: usize, seq: &SeqKv) {
+        assert!(slot < self.batch);
+        let block = Self::block(dims);
+        let planes = dims.n_layers * 2;
+        for p in 0..planes {
+            let src = &seq.data[p * block..(p + 1) * block];
+            let dst_off = (p * self.batch + slot) * block;
+            self.data[dst_off..dst_off + block].copy_from_slice(src);
+        }
+    }
+
+    /// Extract batch slot `slot` into a per-sequence cache.
+    pub fn gather(&self, dims: &ModelDims, slot: usize, pos: usize) -> SeqKv {
+        assert!(slot < self.batch);
+        let block = Self::block(dims);
+        let planes = dims.n_layers * 2;
+        let mut data = vec![0.0; planes * block];
+        for p in 0..planes {
+            let src_off = (p * self.batch + slot) * block;
+            data[p * block..(p + 1) * block]
+                .copy_from_slice(&self.data[src_off..src_off + block]);
+        }
+        SeqKv { data, pos }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 259,
+            d_model: 64,
+            n_heads: 2,
+            head_dim: 4,
+            n_layers: 2,
+            max_seq: 8,
+            bos: 256,
+            eos: 257,
+            pad: 258,
+        }
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip() {
+        let d = dims();
+        let mut seq = SeqKv::zeros(&d);
+        for (i, x) in seq.data.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        seq.pos = 5;
+        let mut batch = KvBatch::zeros(&d, 4);
+        batch.scatter(&d, 2, &seq);
+        let back = batch.gather(&d, 2, 5);
+        assert_eq!(back, seq);
+        // other slots untouched
+        let empty = batch.gather(&d, 0, 0);
+        assert!(empty.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn distinct_slots_dont_alias() {
+        let d = dims();
+        let mut a = SeqKv::zeros(&d);
+        a.data.fill(1.0);
+        let mut b = SeqKv::zeros(&d);
+        b.data.fill(2.0);
+        let mut batch = KvBatch::zeros(&d, 2);
+        batch.scatter(&d, 0, &a);
+        batch.scatter(&d, 1, &b);
+        assert!(batch.gather(&d, 0, 0).data.iter().all(|&x| x == 1.0));
+        assert!(batch.gather(&d, 1, 0).data.iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    fn hlo_layout_interleaving() {
+        // For [L,2,B,...] layout, plane p of slot s sits at (p*B + s)*block.
+        let d = dims();
+        let mut seq = SeqKv::zeros(&d);
+        seq.data.fill(7.0);
+        let mut batch = KvBatch::zeros(&d, 2);
+        batch.scatter(&d, 1, &seq);
+        let block = d.n_heads * d.max_seq * d.head_dim;
+        // plane 0 slot 0 is zeros, plane 0 slot 1 is sevens
+        assert_eq!(batch.data[0], 0.0);
+        assert_eq!(batch.data[block], 7.0);
+        // plane 1 slot 0 zeros again
+        assert_eq!(batch.data[2 * block], 0.0);
+        assert_eq!(batch.data[3 * block], 7.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_slot_panics() {
+        let d = dims();
+        let mut batch = KvBatch::zeros(&d, 2);
+        batch.scatter(&d, 2, &SeqKv::zeros(&d));
+    }
+}

@@ -1,0 +1,253 @@
+//! `artifacts/manifest.json` — the contract between aot.py and the runtime.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json;
+
+/// Model architecture constants (must match `compile.model.ModelConfig`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub bos: i32,
+    pub eos: i32,
+    pub pad: i32,
+}
+
+impl ModelDims {
+    /// Floats in one sequence's KV cache: `L * 2 * H * S * Dh`.
+    pub fn kv_floats_per_seq(&self) -> usize {
+        self.n_layers * 2 * self.n_heads * self.max_seq * self.head_dim
+    }
+
+    /// Bytes of one sequence's KV cache (f32).
+    pub fn kv_bytes_per_seq(&self) -> u64 {
+        (self.kv_floats_per_seq() * 4) as u64
+    }
+}
+
+/// One weight tensor's slice of `params.bin`.
+#[derive(Debug, Clone)]
+pub struct ParamSlice {
+    pub name: String,
+    pub shape: Vec<i64>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// One compiled entry point (e.g. `decode_b4`).
+#[derive(Debug, Clone)]
+pub struct EntrySig {
+    pub name: String,
+    pub file: String,
+    /// `(name, shape, is_int)` for each data input, in call order after
+    /// the weights.
+    pub data_inputs: Vec<(String, Vec<i64>, bool)>,
+}
+
+impl EntrySig {
+    /// Batch size encoded in the entry name (`prefill_b4` -> 4).
+    pub fn batch(&self) -> usize {
+        self.name
+            .rsplit_once('b')
+            .and_then(|(_, b)| b.parse().ok())
+            .unwrap_or(1)
+    }
+
+    pub fn phase(&self) -> &str {
+        self.name.split('_').next().unwrap_or("")
+    }
+}
+
+/// Parsed manifest + weight blob.
+pub struct Manifest {
+    pub dims: ModelDims,
+    pub params: Vec<ParamSlice>,
+    pub entries: Vec<EntrySig>,
+    pub weights: Vec<f32>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::Artifact(format!(
+                "{}: {e} (run `make artifacts` first)",
+                dir.join("manifest.json").display()
+            ))
+        })?;
+        let v = json::parse(&text)?;
+        let m = v.get("model");
+        let dims = ModelDims {
+            vocab: m.u64_or("vocab", 0) as usize,
+            d_model: m.u64_or("d_model", 0) as usize,
+            n_heads: m.u64_or("n_heads", 0) as usize,
+            head_dim: m.u64_or("head_dim", 0) as usize,
+            n_layers: m.u64_or("n_layers", 0) as usize,
+            max_seq: m.u64_or("max_seq", 0) as usize,
+            bos: m.u64_or("bos", 256) as i32,
+            eos: m.u64_or("eos", 257) as i32,
+            pad: m.u64_or("pad", 258) as i32,
+        };
+        if dims.vocab == 0 || dims.max_seq == 0 {
+            return Err(Error::Artifact("manifest missing model dims".into()));
+        }
+
+        let params = v
+            .get("params")
+            .as_arr()
+            .ok_or_else(|| Error::Artifact("manifest missing params".into()))?
+            .iter()
+            .map(|p| ParamSlice {
+                name: p.str_or("name", "").to_string(),
+                shape: p
+                    .get("shape")
+                    .as_arr()
+                    .map(|a| a.iter().filter_map(|d| d.as_i64()).collect())
+                    .unwrap_or_default(),
+                offset: p.u64_or("offset", 0) as usize,
+                len: p.u64_or("len", 0) as usize,
+            })
+            .collect::<Vec<_>>();
+
+        let entries = v
+            .get("entries")
+            .as_arr()
+            .ok_or_else(|| Error::Artifact("manifest missing entries".into()))?
+            .iter()
+            .map(|e| EntrySig {
+                name: e.str_or("name", "").to_string(),
+                file: e.str_or("file", "").to_string(),
+                data_inputs: e
+                    .get("data_inputs")
+                    .as_arr()
+                    .map(|a| {
+                        a.iter()
+                            .map(|di| {
+                                (
+                                    di.str_or("name", "").to_string(),
+                                    di.get("shape")
+                                        .as_arr()
+                                        .map(|s| s.iter().filter_map(|d| d.as_i64()).collect())
+                                        .unwrap_or_default(),
+                                    di.str_or("dtype", "f32") == "i32",
+                                )
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+            })
+            .collect::<Vec<_>>();
+
+        // Weights blob: f32 little-endian, validated against the layout.
+        let total: usize = v.u64_or("param_count", 0) as usize;
+        let blob = std::fs::read(dir.join(v.str_or("params_file", "params.bin")))?;
+        if blob.len() != total * 4 {
+            return Err(Error::Artifact(format!(
+                "params.bin is {} bytes, expected {}",
+                blob.len(),
+                total * 4
+            )));
+        }
+        let mut weights = Vec::with_capacity(total);
+        for chunk in blob.chunks_exact(4) {
+            weights.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+
+        Ok(Manifest { dims, params, entries, weights, dir })
+    }
+
+    /// The smallest compiled variant of `phase` with batch >= `n`.
+    pub fn pick_entry(&self, phase: &str, n: usize) -> Option<&EntrySig> {
+        self.entries
+            .iter()
+            .filter(|e| e.phase() == phase && e.batch() >= n)
+            .min_by_key(|e| e.batch())
+    }
+
+    /// Largest compiled batch for a phase.
+    pub fn max_batch(&self, phase: &str) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| e.phase() == phase)
+            .map(|e| e.batch())
+            .max()
+            .unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        art_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(art_dir()).unwrap();
+        assert_eq!(m.dims.vocab, 259);
+        assert_eq!(m.dims.max_seq, 128);
+        assert!(m.weights.len() > 100_000);
+        assert_eq!(m.params[0].name, "tok_emb");
+        // contiguous layout
+        let mut off = 0;
+        for p in &m.params {
+            assert_eq!(p.offset, off);
+            off += p.len;
+        }
+        assert_eq!(off, m.weights.len());
+    }
+
+    #[test]
+    fn entry_selection() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(art_dir()).unwrap();
+        assert_eq!(m.pick_entry("decode", 3).unwrap().batch(), 4);
+        assert_eq!(m.pick_entry("decode", 1).unwrap().batch(), 1);
+        assert_eq!(m.pick_entry("prefill", 4).unwrap().batch(), 4);
+        assert!(m.pick_entry("decode", 99).is_none());
+        assert_eq!(m.max_batch("decode"), 8);
+    }
+
+    #[test]
+    fn kv_sizing() {
+        let dims = ModelDims {
+            vocab: 259,
+            d_model: 64,
+            n_heads: 4,
+            head_dim: 16,
+            n_layers: 2,
+            max_seq: 128,
+            bos: 256,
+            eos: 257,
+            pad: 258,
+        };
+        assert_eq!(dims.kv_floats_per_seq(), 2 * 2 * 4 * 128 * 16);
+        assert_eq!(dims.kv_bytes_per_seq(), 2 * 2 * 4 * 128 * 16 * 4);
+    }
+
+    #[test]
+    fn entry_sig_parsing() {
+        let e = EntrySig { name: "decode_b8".into(), file: "x".into(), data_inputs: vec![] };
+        assert_eq!(e.batch(), 8);
+        assert_eq!(e.phase(), "decode");
+    }
+}

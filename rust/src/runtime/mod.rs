@@ -1,0 +1,24 @@
+//! PJRT runtime: load and execute the AOT artifacts from Rust.
+//!
+//! The compile path (`python/compile/aot.py`, run once by `make artifacts`)
+//! lowers the L2 JAX model — with its L1 Pallas attention kernels — to HLO
+//! *text* plus a raw weights blob. This module is the serving-side half:
+//!
+//! * [`manifest`] parses `artifacts/manifest.json` (entry signatures,
+//!   weight layout, model dims);
+//! * [`pjrt`] owns a dedicated executor thread that builds the
+//!   `PjRtClient`, uploads the weights once, compiles every HLO entry, and
+//!   serves prefill/decode/embed calls over a channel (the `xla` crate's
+//!   handles hold raw pointers and are not `Send`, so all PJRT state lives
+//!   on that one thread — matching "one GPU, one engine" anyway);
+//! * [`kv`] packs/unpacks per-sequence KV caches in and out of the batched
+//!   `[L, 2, B, H, S, Dh]` tensors the HLO expects — the Rust engine owns
+//!   cache placement (paper §4.3.2).
+
+pub mod kv;
+pub mod manifest;
+pub mod pjrt;
+
+pub use kv::{KvBatch, SeqKv};
+pub use manifest::{EntrySig, Manifest, ModelDims};
+pub use pjrt::{DecodeOut, PjrtModel, PrefillOut};

@@ -1,0 +1,312 @@
+//! The PJRT executor thread: compile once, serve prefill/decode/embed.
+//!
+//! `PjrtModel::load` spawns the thread, which builds a CPU `PjRtClient`,
+//! uploads the weights blob as literals, compiles every manifest entry
+//! (HLO text -> `HloModuleProto::from_text_file` -> `client.compile`), and
+//! then loops on a channel serving execution requests. The public handle
+//! is `Clone + Send` so multiple engine instances can share one device.
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::runtime::kv::KvBatch;
+use crate::runtime::manifest::{Manifest, ModelDims};
+
+/// Prefill result: next-token logits per sequence + the batched KV tensor.
+pub struct PrefillOut {
+    pub logits: Vec<Vec<f32>>,
+    pub kv: KvBatch,
+}
+
+/// Decode result: logits per sequence + updated KV tensor.
+pub struct DecodeOut {
+    pub logits: Vec<Vec<f32>>,
+    pub kv: KvBatch,
+}
+
+enum Cmd {
+    Prefill {
+        tokens: Vec<Vec<i32>>, // padded to max_seq by the thread
+        lengths: Vec<i32>,
+        reply: mpsc::Sender<Result<PrefillOut>>,
+    },
+    Decode {
+        token: Vec<i32>,
+        pos: Vec<i32>,
+        kv: KvBatch,
+        reply: mpsc::Sender<Result<DecodeOut>>,
+    },
+    Embed {
+        tokens: Vec<Vec<i32>>,
+        lengths: Vec<i32>,
+        reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+    },
+}
+
+/// Cloneable, `Send` handle to the executor thread.
+#[derive(Clone)]
+pub struct PjrtModel {
+    tx: mpsc::Sender<Cmd>,
+    dims: ModelDims,
+    // Serializes callers so replies pair with requests (the device is a
+    // single serial executor anyway).
+    call_lock: Arc<Mutex<()>>,
+}
+
+impl PjrtModel {
+    /// Load artifacts and start the executor thread. Fails fast if the
+    /// manifest is missing or any entry fails to compile.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?; // parse on caller thread: fail early
+        let dims = manifest.dims;
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("nalar-pjrt".into())
+            .spawn(move || executor_thread(manifest, rx, ready_tx))
+            .map_err(|e| Error::Runtime(e.to_string()))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Runtime("pjrt thread died during init".into()))??;
+        Ok(PjrtModel { tx, dims, call_lock: Arc::new(Mutex::new(())) })
+    }
+
+    pub fn dims(&self) -> ModelDims {
+        self.dims
+    }
+
+    /// Prefill a batch of token prompts (unpadded); returns per-sequence
+    /// next-token logits and the batched KV (batch = compiled variant size,
+    /// callers use the first `tokens.len()` slots).
+    pub fn prefill(&self, tokens: &[Vec<i32>]) -> Result<PrefillOut> {
+        let lengths: Vec<i32> = tokens.iter().map(|t| t.len().max(1) as i32).collect();
+        let padded = tokens
+            .iter()
+            .map(|t| self.pad(t))
+            .collect::<Result<Vec<_>>>()?;
+        let _g = self.call_lock.lock().unwrap();
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Prefill { tokens: padded, lengths, reply })
+            .map_err(|_| Error::Runtime("pjrt thread gone".into()))?;
+        rx.recv().map_err(|_| Error::Runtime("pjrt thread gone".into()))?
+    }
+
+    /// One decode step. `kv` must come from a prior prefill/decode with the
+    /// same batch size.
+    pub fn decode(&self, token: &[i32], pos: &[i32], kv: KvBatch) -> Result<DecodeOut> {
+        let _g = self.call_lock.lock().unwrap();
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Decode { token: token.to_vec(), pos: pos.to_vec(), kv, reply })
+            .map_err(|_| Error::Runtime("pjrt thread gone".into()))?;
+        rx.recv().map_err(|_| Error::Runtime("pjrt thread gone".into()))?
+    }
+
+    /// Mean-pooled unit-norm embeddings (vector-store path).
+    pub fn embed(&self, tokens: &[Vec<i32>]) -> Result<Vec<Vec<f32>>> {
+        let lengths: Vec<i32> = tokens.iter().map(|t| t.len().max(1) as i32).collect();
+        let padded = tokens
+            .iter()
+            .map(|t| self.pad(t))
+            .collect::<Result<Vec<_>>>()?;
+        let _g = self.call_lock.lock().unwrap();
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Embed { tokens: padded, lengths, reply })
+            .map_err(|_| Error::Runtime("pjrt thread gone".into()))?;
+        rx.recv().map_err(|_| Error::Runtime("pjrt thread gone".into()))?
+    }
+
+    fn pad(&self, t: &[i32]) -> Result<Vec<i32>> {
+        if t.len() > self.dims.max_seq {
+            return Err(Error::Engine(format!(
+                "prompt of {} tokens exceeds max_seq {}",
+                t.len(),
+                self.dims.max_seq
+            )));
+        }
+        let mut out = vec![self.dims.pad; self.dims.max_seq];
+        out[..t.len()].copy_from_slice(t);
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------- thread
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    batch: usize,
+    phase: String,
+}
+
+fn executor_thread(manifest: Manifest, rx: mpsc::Receiver<Cmd>, ready: mpsc::Sender<Result<()>>) {
+    let state = match init(&manifest) {
+        Ok(s) => {
+            let _ = ready.send(Ok(()));
+            s
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let (client, params, compiled) = state;
+    let dims = manifest.dims;
+    let _ = &client; // keep alive for the executables' lifetime
+
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Prefill { tokens, lengths, reply } => {
+                let _ = reply.send(run_prefill(&dims, &params, &compiled, tokens, lengths));
+            }
+            Cmd::Decode { token, pos, kv, reply } => {
+                let _ = reply.send(run_decode(&dims, &params, &compiled, token, pos, kv));
+            }
+            Cmd::Embed { tokens, lengths, reply } => {
+                let _ = reply.send(run_embed(&dims, &params, &compiled, tokens, lengths));
+            }
+        }
+    }
+}
+
+type InitState = (xla::PjRtClient, Vec<xla::Literal>, Vec<Compiled>);
+
+fn init(manifest: &Manifest) -> Result<InitState> {
+    let client = xla::PjRtClient::cpu()?;
+    // Upload weights once, in param_spec order.
+    let mut params = Vec::with_capacity(manifest.params.len());
+    for p in &manifest.params {
+        let slice = &manifest.weights[p.offset..p.offset + p.len];
+        let lit = xla::Literal::vec1(slice).reshape(&p.shape)?;
+        params.push(lit);
+    }
+    // Compile every entry (HLO text interchange — see aot.py docstring).
+    let mut compiled = Vec::new();
+    for e in &manifest.entries {
+        let path = manifest.dir.join(&e.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        compiled.push(Compiled { exe, batch: e.batch(), phase: e.phase().to_string() });
+    }
+    Ok((client, params, compiled))
+}
+
+fn pick<'a>(compiled: &'a [Compiled], phase: &str, n: usize) -> Result<&'a Compiled> {
+    compiled
+        .iter()
+        .filter(|c| c.phase == phase && c.batch >= n)
+        .min_by_key(|c| c.batch)
+        .ok_or_else(|| Error::Runtime(format!("no compiled `{phase}` variant for batch {n}")))
+}
+
+/// Execute with weights + data args, unwrap the 1-tuple-of-N output.
+fn exec(params: &[xla::Literal], exe: &xla::PjRtLoadedExecutable, data: Vec<xla::Literal>) -> Result<Vec<xla::Literal>> {
+    let mut args: Vec<&xla::Literal> = params.iter().collect();
+    args.extend(data.iter());
+    let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+    Ok(result.to_tuple()?)
+}
+
+fn run_prefill(
+    dims: &ModelDims,
+    params: &[xla::Literal],
+    compiled: &[Compiled],
+    mut tokens: Vec<Vec<i32>>,
+    mut lengths: Vec<i32>,
+) -> Result<PrefillOut> {
+    let n = tokens.len();
+    let c = pick(compiled, "prefill", n)?;
+    // pad batch with dummy single-BOS rows
+    while tokens.len() < c.batch {
+        let mut row = vec![dims.pad; dims.max_seq];
+        row[0] = dims.bos;
+        tokens.push(row);
+        lengths.push(1);
+    }
+    let flat: Vec<i32> = tokens.concat();
+    let tok_lit = xla::Literal::vec1(&flat).reshape(&[c.batch as i64, dims.max_seq as i64])?;
+    let len_lit = xla::Literal::vec1(&lengths);
+    let out = exec(params, &c.exe, vec![tok_lit, len_lit])?;
+    let logits_flat = out[0].to_vec::<f32>()?;
+    let kv_flat = out[1].to_vec::<f32>()?;
+    let logits = logits_flat
+        .chunks(dims.vocab)
+        .take(n)
+        .map(|c| c.to_vec())
+        .collect();
+    Ok(PrefillOut { logits, kv: KvBatch { data: kv_flat, batch: c.batch } })
+}
+
+fn run_decode(
+    dims: &ModelDims,
+    params: &[xla::Literal],
+    compiled: &[Compiled],
+    mut token: Vec<i32>,
+    mut pos: Vec<i32>,
+    kv: KvBatch,
+) -> Result<DecodeOut> {
+    let n = token.len();
+    let c = pick(compiled, "decode", n)?;
+    let mut kv = kv;
+    if kv.batch != c.batch {
+        // re-pack into the compiled batch size
+        let mut bigger = KvBatch::zeros(dims, c.batch);
+        for slot in 0..kv.batch.min(c.batch) {
+            let seq = kv.gather(dims, slot, 0);
+            bigger.scatter(dims, slot, &seq);
+        }
+        kv = bigger;
+    }
+    while token.len() < c.batch {
+        token.push(dims.pad);
+        pos.push(0);
+    }
+    let kv_dims = [
+        dims.n_layers as i64,
+        2,
+        c.batch as i64,
+        dims.n_heads as i64,
+        dims.max_seq as i64,
+        dims.head_dim as i64,
+    ];
+    let tok_lit = xla::Literal::vec1(&token);
+    let pos_lit = xla::Literal::vec1(&pos);
+    let kv_lit = xla::Literal::vec1(&kv.data).reshape(&kv_dims)?;
+    let out = exec(params, &c.exe, vec![tok_lit, pos_lit, kv_lit])?;
+    let logits_flat = out[0].to_vec::<f32>()?;
+    let kv_flat = out[1].to_vec::<f32>()?;
+    let logits = logits_flat
+        .chunks(dims.vocab)
+        .take(n)
+        .map(|c| c.to_vec())
+        .collect();
+    Ok(DecodeOut { logits, kv: KvBatch { data: kv_flat, batch: c.batch } })
+}
+
+fn run_embed(
+    dims: &ModelDims,
+    params: &[xla::Literal],
+    compiled: &[Compiled],
+    mut tokens: Vec<Vec<i32>>,
+    mut lengths: Vec<i32>,
+) -> Result<Vec<Vec<f32>>> {
+    let n = tokens.len();
+    let c = pick(compiled, "embed", n)?;
+    while tokens.len() < c.batch {
+        let mut row = vec![dims.pad; dims.max_seq];
+        row[0] = dims.bos;
+        tokens.push(row);
+        lengths.push(1);
+    }
+    let flat: Vec<i32> = tokens.concat();
+    let tok_lit = xla::Literal::vec1(&flat).reshape(&[c.batch as i64, dims.max_seq as i64])?;
+    let len_lit = xla::Literal::vec1(&lengths);
+    let out = exec(params, &c.exe, vec![tok_lit, len_lit])?;
+    let flat = out[0].to_vec::<f32>()?;
+    Ok(flat.chunks(dims.d_model).take(n).map(|c| c.to_vec()).collect())
+}

@@ -1,0 +1,290 @@
+//! Deployment: assemble and run a NALAR cluster (paper Fig. 2 "At
+//! deployment, NALAR launches and manages the runtime").
+//!
+//! `Deployment::launch` builds the emulated cluster from a
+//! [`DeploymentConfig`]: node stores, bus, router, future table/graph,
+//! agent instances with their component controllers (round-robin placed
+//! across nodes), and the global controller with the configured policies.
+//! Workflow drivers get a [`CallCtx`] per request and run on caller
+//! threads; `kill`/`provision` lifecycle hooks route back here.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::agents::{Backend, BackendFactory, CallCtx};
+use crate::baselines::SystemUnderTest;
+use crate::config::{AgentConfig, DeploymentConfig};
+use crate::coordinator::{
+    make_policy, ComponentController, GlobalController, InstanceHandle, LoadMap, Policy, Router,
+};
+use crate::engine::{EngineCore, PjrtCore, SimCore};
+use crate::error::{Error, Result};
+use crate::futures::{DepGraph, FutureTable};
+use crate::ids::{IdGen, InstanceId, NodeId, RequestId, SessionId};
+use crate::metrics::LatencyRecorder;
+use crate::nodestore::StoreDirectory;
+use crate::runtime::PjrtModel;
+use crate::state::kvcache::{KvCacheManager, KvPolicy};
+use crate::transport::Bus;
+use crate::vectorstore::VectorStore;
+
+/// A running NALAR cluster.
+pub struct Deployment {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    cfg: Arc<DeploymentConfig>,
+    bus: Bus,
+    stores: StoreDirectory,
+    loads: LoadMap,
+    router: Arc<Router>,
+    graph: Arc<DepGraph>,
+    table: Arc<FutureTable>,
+    ids: Arc<IdGen>,
+    vector_store: Arc<VectorStore>,
+    pjrt: Mutex<Option<PjrtModel>>,
+    instances: Mutex<Vec<InstanceHandle>>,
+    next_index: Mutex<HashMap<String, u32>>,
+    next_node: AtomicU32,
+    global: Mutex<Option<Arc<GlobalController>>>,
+    global_stop: Arc<AtomicBool>,
+    global_join: Mutex<Option<std::thread::JoinHandle<()>>>,
+    pub latency: LatencyRecorder,
+}
+
+impl Deployment {
+    /// Launch in NALAR mode.
+    pub fn launch(cfg: DeploymentConfig) -> Result<Deployment> {
+        Self::launch_as(cfg, SystemUnderTest::Nalar)
+    }
+
+    /// Launch emulating a given system (NALAR or a baseline, §6.1).
+    pub fn launch_as(mut cfg: DeploymentConfig, system: SystemUnderTest) -> Result<Deployment> {
+        system.apply(&mut cfg);
+        cfg.validate()?;
+        let nodes: Vec<NodeId> = (0..cfg.nodes).map(NodeId).collect();
+        let bus = Bus::new(Duration::from_micros(cfg.cross_node_latency_us));
+        let stores = StoreDirectory::new(&nodes);
+        let loads = LoadMap::new();
+        let router = Arc::new(Router::new(bus.clone(), loads.clone(), cfg.seed ^ 0xB0B0));
+        let (sticky, fallback) = system.router_mode();
+        router
+            .force_sticky
+            .store(sticky, Ordering::Relaxed);
+        router.set_fallback(fallback);
+
+        let inner = Arc::new(Inner {
+            cfg: Arc::new(cfg),
+            bus,
+            stores,
+            loads,
+            router,
+            graph: Arc::new(DepGraph::new()),
+            table: Arc::new(FutureTable::new()),
+            ids: Arc::new(IdGen::new()),
+            vector_store: Arc::new(VectorStore::new(64)),
+            pjrt: Mutex::new(None),
+            instances: Mutex::new(Vec::new()),
+            next_index: Mutex::new(HashMap::new()),
+            next_node: AtomicU32::new(0),
+            global: Mutex::new(None),
+            global_stop: Arc::new(AtomicBool::new(false)),
+            global_join: Mutex::new(None),
+            latency: LatencyRecorder::new(),
+        });
+
+        let d = Deployment { inner };
+        // initial instances
+        for a in d.inner.cfg.agents.clone() {
+            for _ in 0..a.instances {
+                d.spawn_instance(&a.name)?;
+            }
+        }
+        d.start_global()?;
+        Ok(d)
+    }
+
+    fn start_global(&self) -> Result<()> {
+        let cfg = &self.inner.cfg;
+        let mut policies: Vec<Box<dyn Policy>> = Vec::new();
+        for name in &cfg.policies {
+            policies.push(
+                make_policy(name)
+                    .ok_or_else(|| Error::Config(format!("unknown policy `{name}`")))?,
+            );
+        }
+        let weak = Arc::downgrade(&self.inner);
+        let provision = Arc::new(move |agent: &str| -> Option<InstanceId> {
+            let inner = weak.upgrade()?;
+            Deployment { inner }.spawn_instance(agent).ok()
+        });
+        let global = GlobalController::new(
+            self.inner.bus.clone(),
+            self.inner.stores.clone(),
+            self.inner.router.clone(),
+            self.inner.loads.clone(),
+            self.inner.table.clone(),
+            policies,
+            provision,
+        );
+        *self.inner.global.lock().unwrap() = Some(global.clone());
+        let period = Duration::from_millis(cfg.control.global_period_ms);
+        let stop = self.inner.global_stop.clone();
+        let join = std::thread::Builder::new()
+            .name("nalar-global".into())
+            .spawn(move || global.run(period, stop))
+            .map_err(|e| Error::Msg(e.to_string()))?;
+        *self.inner.global_join.lock().unwrap() = Some(join);
+        Ok(())
+    }
+
+    /// The `provision` primitive: launch one more instance of `agent`,
+    /// honoring `max_instances`. Round-robin node placement.
+    pub fn spawn_instance(&self, agent: &str) -> Result<InstanceId> {
+        let acfg: AgentConfig = self
+            .inner
+            .cfg
+            .agent(agent)
+            .ok_or_else(|| Error::UnknownAgent(agent.into()))?
+            .clone();
+        let live = self.inner.bus.instances_of(agent).len() as u32;
+        if live >= acfg.directives.max_instances {
+            return Err(Error::Config(format!(
+                "{agent}: max_instances {} reached",
+                acfg.directives.max_instances
+            )));
+        }
+        let index = {
+            let mut m = self.inner.next_index.lock().unwrap();
+            let e = m.entry(agent.to_string()).or_insert(0);
+            let i = *e;
+            *e += 1;
+            i
+        };
+        let id = InstanceId::new(agent, index);
+        let node = NodeId(self.inner.next_node.fetch_add(1, Ordering::Relaxed) % self.inner.cfg.nodes);
+
+        let factory = BackendFactory {
+            time_scale: self.inner.cfg.time_scale,
+            vector_store: self.inner.vector_store.clone(),
+            seed: self.inner.cfg.seed ^ (index as u64) << 8,
+        };
+        let inner = &self.inner;
+        let engine_builder = || -> Box<dyn EngineCore> {
+            let ecfg = &inner.cfg.engine;
+            let policy = if ecfg.kv_policy == "lru" { KvPolicy::Lru } else { KvPolicy::HintDriven };
+            let kv = Arc::new(KvCacheManager::new(ecfg.kv_hbm_bytes, ecfg.kv_dram_bytes, policy));
+            if ecfg.executor == "pjrt" {
+                let mut guard = inner.pjrt.lock().unwrap();
+                if guard.is_none() {
+                    *guard = Some(
+                        PjrtModel::load(&ecfg.artifacts_dir)
+                            .expect("pjrt executor requested but artifacts failed to load"),
+                    );
+                }
+                Box::new(PjrtCore::new(guard.clone().unwrap(), kv))
+            } else {
+                Box::new(SimCore::new(
+                    acfg.profile.clone(),
+                    inner.cfg.time_scale,
+                    inner.cfg.engine.max_batch,
+                    kv,
+                    inner.cfg.seed ^ 0x5eed ^ index as u64,
+                ))
+            }
+        };
+        let backend: Backend = factory.build(&acfg, index, engine_builder);
+
+        let handle = ComponentController::spawn(
+            id.clone(),
+            node,
+            backend,
+            acfg.directives.clone(),
+            self.inner.bus.clone(),
+            self.inner.stores.clone(),
+            self.inner.router.clone(),
+            &self.inner.loads,
+            self.inner.graph.clone(),
+        );
+        self.inner.instances.lock().unwrap().push(handle);
+        Ok(id)
+    }
+
+    /// New user session.
+    pub fn new_session(&self) -> SessionId {
+        self.inner.ids.session()
+    }
+
+    /// New request context for a workflow driver.
+    pub fn ctx(&self, session: SessionId) -> CallCtx {
+        let request: RequestId = self.inner.ids.request();
+        CallCtx {
+            session,
+            request,
+            stage: 0,
+            bus: self.inner.bus.clone(),
+            router: self.inner.router.clone(),
+            graph: self.inner.graph.clone(),
+            table: self.inner.table.clone(),
+            ids: self.inner.ids.clone(),
+            cfg: self.inner.cfg.clone(),
+        }
+    }
+
+    // ------------------------------------------------------------ access
+    pub fn cfg(&self) -> &DeploymentConfig {
+        &self.inner.cfg
+    }
+    pub fn bus(&self) -> &Bus {
+        &self.inner.bus
+    }
+    pub fn stores(&self) -> &StoreDirectory {
+        &self.inner.stores
+    }
+    pub fn router(&self) -> &Arc<Router> {
+        &self.inner.router
+    }
+    pub fn table(&self) -> &Arc<FutureTable> {
+        &self.inner.table
+    }
+    pub fn graph(&self) -> &Arc<DepGraph> {
+        &self.inner.graph
+    }
+    pub fn vector_store(&self) -> &Arc<VectorStore> {
+        &self.inner.vector_store
+    }
+    pub fn latency(&self) -> &LatencyRecorder {
+        &self.inner.latency
+    }
+    pub fn global(&self) -> Arc<GlobalController> {
+        self.inner.global.lock().unwrap().clone().expect("global running")
+    }
+    pub fn loads(&self) -> &LoadMap {
+        &self.inner.loads
+    }
+
+    /// Per-instance busy fractions (load-imbalance metric, §6.1).
+    pub fn busy_fractions(&self, agent: &str) -> Vec<f64> {
+        self.global()
+            .collect()
+            .instances_of(agent)
+            .map(|i| i.m.busy_ewma)
+            .collect()
+    }
+
+    /// Shut everything down (global first, then instances).
+    pub fn shutdown(self) {
+        self.inner.global_stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.inner.global_join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+        let handles: Vec<InstanceHandle> =
+            std::mem::take(&mut *self.inner.instances.lock().unwrap());
+        for h in handles {
+            h.stop();
+        }
+    }
+}

@@ -1,0 +1,383 @@
+//! Tiered K,V-cache manager with policy hooks — the LMCache substitute.
+//!
+//! Paper §4.3.2: LLM engines (vLLM/SGLang) manage KV caches with generic
+//! heuristics (prefix caching + LRU) because no one tells them which
+//! sessions will return. NALAR *does* know — it tracks futures and pending
+//! work — so it extends the cache layer with hooks the global controller
+//! drives:
+//!
+//! * `hint_retain` — this session's cache is about to be reused; keep it.
+//! * `hint_release` — session ended; the cache is immediately evictable.
+//! * `offload` / `migrate_out`+`migrate_in` — explicit placement control,
+//!   which is what frees NALAR from session-sticky routing (Fig. 9a).
+//!
+//! Three tiers model the memory hierarchy: device HBM (fast, scarce),
+//! host DRAM (offload target), and Far (remote/disk; effectively a
+//! recompute-or-slow-fetch tier). Transfer costs come from a bandwidth
+//! model so benches see realistic penalties.
+
+use std::collections::HashMap;
+
+use std::sync::Mutex;
+
+use crate::ids::SessionId;
+
+/// Cache residency tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    DeviceHbm,
+    HostDram,
+    Far,
+}
+
+/// Eviction policy: the paper's baseline vs NALAR's hint-driven policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvPolicy {
+    /// Generic LRU (what vLLM/SGLang do absent workflow knowledge).
+    Lru,
+    /// NALAR: never evict sessions with a live retain hint if avoidable;
+    /// prefer evicting released sessions first, then LRU among the rest.
+    HintDriven,
+}
+
+#[derive(Debug, Clone)]
+struct KvEntry {
+    bytes: u64,
+    seq_len: u32,
+    tier: Tier,
+    last_used_us: u64,
+    /// Global-controller hint: pending/imminent reuse.
+    retain: bool,
+    /// Session explicitly finished; evict first.
+    released: bool,
+}
+
+/// Outcome of an HBM residency request, with the modeled cost.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Residency {
+    /// Already in HBM.
+    Hit,
+    /// Promoted from a colder tier; pay the transfer time.
+    Promoted { from: Tier, transfer_us: u64 },
+    /// Not cached anywhere — the engine must re-prefill (recompute).
+    Miss,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct KvStats {
+    pub hits: u64,
+    pub promotions: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub offloads: u64,
+    pub hinted_evictions_avoided: u64,
+    pub hbm_used: u64,
+    pub dram_used: u64,
+}
+
+/// Per-LLM-instance cache manager (the "GPU" view), with a host tier.
+pub struct KvCacheManager {
+    inner: Mutex<Inner>,
+    hbm_capacity: u64,
+    dram_capacity: u64,
+    policy: KvPolicy,
+    /// Bandwidths in bytes/us (defaults ~ 20 GB/s HBM<->DRAM, 2 GB/s far).
+    dram_bw: f64,
+    far_bw: f64,
+}
+
+struct Inner {
+    entries: HashMap<SessionId, KvEntry>,
+    stats: KvStats,
+    clock_us: u64,
+}
+
+impl KvCacheManager {
+    pub fn new(hbm_capacity: u64, dram_capacity: u64, policy: KvPolicy) -> Self {
+        KvCacheManager {
+            inner: Mutex::new(Inner {
+                entries: HashMap::new(),
+                stats: KvStats::default(),
+                clock_us: 1,
+            }),
+            hbm_capacity,
+            dram_capacity,
+            policy,
+            dram_bw: 20_000.0, // bytes per microsecond = 20 GB/s
+            far_bw: 2_000.0,
+        }
+    }
+
+    pub fn policy(&self) -> KvPolicy {
+        self.policy
+    }
+
+    fn used(entries: &HashMap<SessionId, KvEntry>, tier: Tier) -> u64 {
+        entries.values().filter(|e| e.tier == tier).map(|e| e.bytes).sum()
+    }
+
+    /// Request `bytes` of KV for `session` resident in HBM, evicting /
+    /// offloading colder sessions as needed. The returned cost is what the
+    /// engine adds to the request's service time.
+    pub fn ensure_resident(&self, session: SessionId, bytes: u64, seq_len: u32) -> Residency {
+        let mut g = self.inner.lock().unwrap();
+        g.clock_us += 1;
+        let now = g.clock_us;
+
+        let existing = g.entries.get(&session).map(|e| (e.tier, e.bytes));
+        let outcome = match existing {
+            Some((Tier::DeviceHbm, _)) => {
+                g.stats.hits += 1;
+                Residency::Hit
+            }
+            Some((from @ (Tier::HostDram | Tier::Far), b)) => {
+                let bw = if from == Tier::HostDram { self.dram_bw } else { self.far_bw };
+                g.stats.promotions += 1;
+                Residency::Promoted { from, transfer_us: (b as f64 / bw) as u64 }
+            }
+            None => {
+                g.stats.misses += 1;
+                Residency::Miss
+            }
+        };
+
+        // Make room in HBM, then install/refresh the entry.
+        self.make_room_locked(&mut g, bytes, session);
+        let entry = g.entries.entry(session).or_insert(KvEntry {
+            bytes,
+            seq_len,
+            tier: Tier::DeviceHbm,
+            last_used_us: now,
+            retain: false,
+            released: false,
+        });
+        entry.tier = Tier::DeviceHbm;
+        entry.bytes = bytes.max(entry.bytes);
+        entry.seq_len = seq_len.max(entry.seq_len);
+        entry.last_used_us = now;
+        entry.released = false;
+        g.stats.hbm_used = Self::used(&g.entries, Tier::DeviceHbm);
+        g.stats.dram_used = Self::used(&g.entries, Tier::HostDram);
+        outcome
+    }
+
+    /// Demote victims until `need` fits in HBM. Victim order depends on the
+    /// policy; the protected `session` is never selected.
+    fn make_room_locked(&self, g: &mut Inner, need: u64, protect: SessionId) {
+        loop {
+            let used = Self::used(&g.entries, Tier::DeviceHbm);
+            if used + need <= self.hbm_capacity {
+                return;
+            }
+            let victim = {
+                let candidates = g
+                    .entries
+                    .iter()
+                    .filter(|(s, e)| **s != protect && e.tier == Tier::DeviceHbm);
+                match self.policy {
+                    KvPolicy::Lru => candidates.min_by_key(|(_, e)| e.last_used_us).map(|(s, _)| *s),
+                    KvPolicy::HintDriven => candidates
+                        .min_by_key(|(_, e)| {
+                            // released first, then un-retained LRU, retained last
+                            let class = if e.released { 0u64 } else if !e.retain { 1 } else { 2 };
+                            (class, e.last_used_us)
+                        })
+                        .map(|(s, _)| *s),
+                }
+            };
+            let Some(victim) = victim else { return }; // nothing evictable
+            if self.policy == KvPolicy::HintDriven && !g.entries[&victim].retain {
+                // a retained session survived because a colder victim existed
+                if g.entries.values().any(|e| e.tier == Tier::DeviceHbm && e.retain) {
+                    g.stats.hinted_evictions_avoided += 1;
+                }
+            }
+            let dram_used = Self::used(&g.entries, Tier::HostDram);
+            let e = g.entries.get_mut(&victim).unwrap();
+            if dram_used + e.bytes <= self.dram_capacity {
+                e.tier = Tier::HostDram;
+                g.stats.offloads += 1;
+            } else {
+                e.tier = Tier::Far;
+                g.stats.evictions += 1;
+            }
+        }
+    }
+
+    // ---------------------------------------------------------- hint hooks
+    pub fn hint_retain(&self, session: SessionId) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(e) = g.entries.get_mut(&session) {
+            e.retain = true;
+            e.released = false;
+        }
+    }
+
+    pub fn hint_release(&self, session: SessionId) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(e) = g.entries.get_mut(&session) {
+            e.retain = false;
+            e.released = true;
+        }
+    }
+
+    /// Push a session's cache out of HBM proactively (policy `offload`).
+    pub fn offload(&self, session: SessionId) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let dram_used = Self::used(&g.entries, Tier::HostDram);
+        let dram_cap = self.dram_capacity;
+        if let Some(e) = g.entries.get_mut(&session) {
+            if e.tier == Tier::DeviceHbm {
+                e.tier = if dram_used + e.bytes <= dram_cap { Tier::HostDram } else { Tier::Far };
+                g.stats.offloads += 1;
+                g.stats.hbm_used = Self::used(&g.entries, Tier::DeviceHbm);
+                return true;
+            }
+        }
+        false
+    }
+
+    // ----------------------------------------------------------- migration
+    /// Remove the session's cache for transfer to another instance.
+    /// Returns `(bytes, seq_len, transfer_us)`.
+    pub fn migrate_out(&self, session: SessionId) -> Option<(u64, u32, u64)> {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.entries.remove(&session)?;
+        let bw = match e.tier {
+            Tier::DeviceHbm | Tier::HostDram => self.dram_bw,
+            Tier::Far => self.far_bw,
+        };
+        g.stats.hbm_used = Self::used(&g.entries, Tier::DeviceHbm);
+        Some((e.bytes, e.seq_len, (e.bytes as f64 / bw) as u64))
+    }
+
+    /// Install a migrated-in cache (lands in HBM, evicting as needed).
+    pub fn migrate_in(&self, session: SessionId, bytes: u64, seq_len: u32) {
+        let mut g = self.inner.lock().unwrap();
+        g.clock_us += 1;
+        let now = g.clock_us;
+        self.make_room_locked(&mut g, bytes, session);
+        g.entries.insert(
+            session,
+            KvEntry { bytes, seq_len, tier: Tier::DeviceHbm, last_used_us: now, retain: false, released: false },
+        );
+        g.stats.hbm_used = Self::used(&g.entries, Tier::DeviceHbm);
+    }
+
+    pub fn drop_session(&self, session: SessionId) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let removed = g.entries.remove(&session).is_some();
+        g.stats.hbm_used = Self::used(&g.entries, Tier::DeviceHbm);
+        removed
+    }
+
+    pub fn tier_of(&self, session: SessionId) -> Option<Tier> {
+        self.inner.lock().unwrap().entries.get(&session).map(|e| e.tier)
+    }
+
+    pub fn stats(&self) -> KvStats {
+        let g = self.inner.lock().unwrap();
+        let mut s = g.stats;
+        s.hbm_used = Self::used(&g.entries, Tier::DeviceHbm);
+        s.dram_used = Self::used(&g.entries, Tier::HostDram);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: u64 = 1 << 20;
+
+    #[test]
+    fn hit_promote_miss() {
+        let m = KvCacheManager::new(10 * MB, 100 * MB, KvPolicy::Lru);
+        assert_eq!(m.ensure_resident(SessionId(1), MB, 10), Residency::Miss);
+        assert_eq!(m.ensure_resident(SessionId(1), MB, 10), Residency::Hit);
+        assert!(m.offload(SessionId(1)));
+        match m.ensure_resident(SessionId(1), MB, 10) {
+            Residency::Promoted { from: Tier::HostDram, transfer_us } => {
+                assert!(transfer_us > 0)
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let m = KvCacheManager::new(3 * MB, 100 * MB, KvPolicy::Lru);
+        m.ensure_resident(SessionId(1), MB, 1);
+        m.ensure_resident(SessionId(2), MB, 1);
+        m.ensure_resident(SessionId(3), MB, 1);
+        m.ensure_resident(SessionId(1), MB, 1); // refresh 1 → LRU victim is 2
+        m.ensure_resident(SessionId(4), MB, 1);
+        assert_eq!(m.tier_of(SessionId(2)), Some(Tier::HostDram));
+        assert_eq!(m.tier_of(SessionId(1)), Some(Tier::DeviceHbm));
+    }
+
+    #[test]
+    fn hints_protect_imminent_reuse() {
+        let m = KvCacheManager::new(3 * MB, 100 * MB, KvPolicy::HintDriven);
+        m.ensure_resident(SessionId(1), MB, 1);
+        m.ensure_resident(SessionId(2), MB, 1);
+        m.ensure_resident(SessionId(3), MB, 1);
+        // LRU would evict 1; the retain hint redirects eviction to 2.
+        m.hint_retain(SessionId(1));
+        m.ensure_resident(SessionId(4), MB, 1);
+        assert_eq!(m.tier_of(SessionId(1)), Some(Tier::DeviceHbm));
+        assert_ne!(m.tier_of(SessionId(2)), Some(Tier::DeviceHbm));
+    }
+
+    #[test]
+    fn released_evicted_first() {
+        let m = KvCacheManager::new(3 * MB, 100 * MB, KvPolicy::HintDriven);
+        m.ensure_resident(SessionId(1), MB, 1);
+        m.ensure_resident(SessionId(2), MB, 1);
+        m.ensure_resident(SessionId(3), MB, 1);
+        m.hint_release(SessionId(3)); // newest but finished
+        m.ensure_resident(SessionId(4), MB, 1);
+        assert_ne!(m.tier_of(SessionId(3)), Some(Tier::DeviceHbm));
+        assert_eq!(m.tier_of(SessionId(1)), Some(Tier::DeviceHbm));
+    }
+
+    #[test]
+    fn migration_roundtrip() {
+        let src = KvCacheManager::new(10 * MB, 100 * MB, KvPolicy::HintDriven);
+        let dst = KvCacheManager::new(10 * MB, 100 * MB, KvPolicy::HintDriven);
+        src.ensure_resident(SessionId(7), 2 * MB, 64);
+        let (bytes, seq, cost) = src.migrate_out(SessionId(7)).unwrap();
+        assert_eq!(bytes, 2 * MB);
+        assert_eq!(seq, 64);
+        assert!(cost > 0);
+        assert!(src.tier_of(SessionId(7)).is_none());
+        dst.migrate_in(SessionId(7), bytes, seq);
+        assert_eq!(dst.tier_of(SessionId(7)), Some(Tier::DeviceHbm));
+        assert_eq!(dst.ensure_resident(SessionId(7), bytes, seq), Residency::Hit);
+    }
+
+    #[test]
+    fn dram_overflow_goes_far() {
+        let m = KvCacheManager::new(MB, MB, KvPolicy::Lru);
+        m.ensure_resident(SessionId(1), MB, 1);
+        m.ensure_resident(SessionId(2), MB, 1); // 1 → DRAM
+        m.ensure_resident(SessionId(3), MB, 1); // 2 → Far (DRAM full)
+        let tiers: Vec<_> = [1, 2, 3]
+            .iter()
+            .map(|&s| m.tier_of(SessionId(s)).unwrap())
+            .collect();
+        assert!(tiers.contains(&Tier::Far));
+        assert_eq!(m.tier_of(SessionId(3)), Some(Tier::DeviceHbm));
+    }
+
+    #[test]
+    fn stats_track() {
+        let m = KvCacheManager::new(10 * MB, 100 * MB, KvPolicy::Lru);
+        m.ensure_resident(SessionId(1), MB, 1);
+        m.ensure_resident(SessionId(1), MB, 1);
+        let s = m.stats();
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.hbm_used, MB);
+    }
+}

@@ -1,0 +1,242 @@
+//! `managedList` / `managedDict` — session-scoped state in the node store.
+
+use std::sync::Arc;
+
+use crate::futures::Value;
+use crate::ids::SessionId;
+use crate::nodestore::{keys, NodeStore};
+use crate::util::json::Map;
+
+/// A session-bound list stored in the node store. Used like an ordinary
+/// list; the framework owns placement, consistency and lifetime.
+#[derive(Clone)]
+pub struct ManagedList {
+    store: Arc<NodeStore>,
+    key: String,
+}
+
+impl ManagedList {
+    /// Bind (creating if absent) the list `name` for `session` on the local
+    /// node store. Component controllers call this when materializing state
+    /// for a request (paper: "reconstructs the appropriate managed lists").
+    pub fn bind(store: Arc<NodeStore>, session: SessionId, name: &str) -> Self {
+        let key = keys::session_state(session, name);
+        ManagedList { store, key }
+    }
+
+    pub fn push(&self, v: Value) {
+        self.store.update(&self.key, Vec::<Value>::new(), |l| l.push(v));
+    }
+
+    pub fn get(&self, idx: usize) -> Option<Value> {
+        self.snapshot().get(idx).cloned()
+    }
+
+    pub fn set(&self, idx: usize, v: Value) -> bool {
+        let mut ok = false;
+        self.store.update(&self.key, Vec::<Value>::new(), |l| {
+            if idx < l.len() {
+                l[idx] = v;
+                ok = true;
+            }
+        });
+        ok
+    }
+
+    pub fn len(&self) -> usize {
+        self.snapshot().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn snapshot(&self) -> Vec<Value> {
+        self.store
+            .get::<Vec<Value>>(&self.key)
+            .map(|a| (*a).clone())
+            .unwrap_or_default()
+    }
+}
+
+/// A session-bound dictionary in the node store.
+#[derive(Clone)]
+pub struct ManagedDict {
+    store: Arc<NodeStore>,
+    key: String,
+}
+
+impl ManagedDict {
+    pub fn bind(store: Arc<NodeStore>, session: SessionId, name: &str) -> Self {
+        let key = keys::session_state(session, name);
+        ManagedDict { store, key }
+    }
+
+    pub fn insert(&self, k: &str, v: Value) {
+        let k = k.to_string();
+        self.store.update(&self.key, Map::new(), |m| {
+            m.insert(k, v);
+        });
+    }
+
+    pub fn get(&self, k: &str) -> Option<Value> {
+        self.store
+            .get::<Map>(&self.key)
+            .and_then(|m| m.get(k).cloned())
+    }
+
+    pub fn remove(&self, k: &str) -> bool {
+        let k = k.to_string();
+        let mut removed = false;
+        self.store.update(&self.key, Map::new(), |m| {
+            removed = m.remove(&k).is_some();
+        });
+        removed
+    }
+
+    pub fn contains(&self, k: &str) -> bool {
+        self.get(k).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.store.get::<Map>(&self.key).map(|m| m.len()).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn snapshot(&self) -> Map {
+        self.store
+            .get::<Map>(&self.key)
+            .map(|a| (*a).clone())
+            .unwrap_or_default()
+    }
+}
+
+/// Relocate every `state/{session}/*` entry from `src` to `dst` (Fig. 8
+/// step 5). Returns `(entries_moved, approx_bytes)` — the byte estimate
+/// feeds the migration cost model.
+pub fn migrate_session_state(src: &NodeStore, dst: &NodeStore, session: SessionId) -> (usize, u64) {
+    let prefix = keys::session_prefix(session);
+    let mut moved = 0usize;
+    let mut bytes = 0u64;
+    // lists
+    for (k, v) in src.scan::<Vec<Value>>(&prefix) {
+        bytes += v.iter().map(|x| estimate_bytes(x) as u64).sum::<u64>();
+        dst.put_arc(&k, v);
+        src.remove(&k);
+        moved += 1;
+    }
+    // dicts
+    for (k, v) in src.scan::<Map>(&prefix) {
+        bytes += v
+            .iter()
+            .map(|(k2, v2)| (k2.len() + estimate_bytes(v2)) as u64)
+            .sum::<u64>();
+        dst.put_arc(&k, v);
+        src.remove(&k);
+        moved += 1;
+    }
+    (moved, bytes)
+}
+
+/// Rough wire-size estimate of a JSON value (migration cost model).
+pub fn estimate_bytes(v: &Value) -> usize {
+    match v {
+        Value::Null => 4,
+        Value::Bool(_) => 1,
+        Value::Num(_) => 8,
+        Value::Str(s) => s.len(),
+        Value::Arr(a) => a.iter().map(estimate_bytes).sum(),
+        Value::Obj(o) => o.iter().map(|(k, v)| k.len() + estimate_bytes(v)).sum(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    fn store() -> Arc<NodeStore> {
+        Arc::new(NodeStore::new())
+    }
+
+    #[test]
+    fn list_like_a_list() {
+        let s = store();
+        let l = ManagedList::bind(s.clone(), SessionId(1), "drafts");
+        assert!(l.is_empty());
+        l.push(json!("draft-0"));
+        l.push(json!("draft-1"));
+        assert_eq!(l.len(), 2);
+        assert_eq!(l.get(0), Some(json!("draft-0")));
+        assert!(l.set(1, json!("draft-1b")));
+        assert!(!l.set(5, json!("nope")));
+        assert_eq!(l.snapshot(), vec![json!("draft-0"), json!("draft-1b")]);
+    }
+
+    #[test]
+    fn dict_like_a_dict() {
+        let s = store();
+        let d = ManagedDict::bind(s.clone(), SessionId(1), "docs");
+        d.insert("oauth", json!({"hits": 3}));
+        assert!(d.contains("oauth"));
+        assert_eq!(d.get("oauth").unwrap().get("hits").as_i64(), Some(3));
+        assert!(d.remove("oauth"));
+        assert!(!d.remove("oauth"));
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn sessions_isolated() {
+        let s = store();
+        let a = ManagedList::bind(s.clone(), SessionId(1), "x");
+        let b = ManagedList::bind(s.clone(), SessionId(2), "x");
+        a.push(json!(1));
+        assert_eq!(b.len(), 0);
+    }
+
+    #[test]
+    fn concurrent_pushes_all_land() {
+        let s = store();
+        let mut joins = vec![];
+        for t in 0..4 {
+            let l = ManagedList::bind(s.clone(), SessionId(5), "shared");
+            joins.push(std::thread::spawn(move || {
+                for i in 0..100 {
+                    l.push(json!(t * 1000 + i));
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(
+            ManagedList::bind(s, SessionId(5), "shared").len(),
+            400,
+            "update() must be atomic RMW"
+        );
+    }
+
+    #[test]
+    fn migration_moves_everything() {
+        let src = store();
+        let dst = store();
+        let l = ManagedList::bind(src.clone(), SessionId(9), "traces");
+        l.push(json!("t1"));
+        let d = ManagedDict::bind(src.clone(), SessionId(9), "cache");
+        d.insert("k", json!("v"));
+        // unrelated session untouched
+        ManagedList::bind(src.clone(), SessionId(8), "other").push(json!(0));
+
+        let (moved, bytes) = migrate_session_state(&src, &dst, SessionId(9));
+        assert_eq!(moved, 2);
+        assert!(bytes > 0);
+        // rebinding at the destination sees the data (transparent to devs)
+        let l2 = ManagedList::bind(dst.clone(), SessionId(9), "traces");
+        assert_eq!(l2.get(0), Some(json!("t1")));
+        assert!(!src.contains(&keys::session_state(SessionId(9), "traces")));
+        assert!(src.contains(&keys::session_state(SessionId(8), "other")));
+    }
+}

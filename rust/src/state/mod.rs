@@ -1,0 +1,21 @@
+//! Managed state layer (paper §3.3, §4.3.2).
+//!
+//! Agentic workflows accumulate session state (lists/dicts in the paper's
+//! GitHub survey) and KV caches. NALAR decouples that *logical* state from
+//! physical placement: state lives in the node store under
+//! `state/{session}/{key}`, tagged with the session the local controller
+//! already knows for every request, so the runtime can relocate sessions —
+//! requests *and* their state — without developer involvement.
+//!
+//! * [`ManagedList`]/[`ManagedDict`]: the developer-facing abstractions.
+//!   Handles are constructed per request execution by the component
+//!   controller, so after a migration the next request transparently binds
+//!   to the state's new home.
+//! * [`kvcache`]: the LMCache substitute — a tiered K,V cache with the
+//!   policy hooks NALAR's global controller drives (retain / offload /
+//!   migrate), versus the generic LRU the paper criticizes.
+
+pub mod kvcache;
+mod managed;
+
+pub use managed::{migrate_session_state, ManagedDict, ManagedList};

@@ -1,0 +1,109 @@
+//! Delayed-delivery timer thread for cross-node latency injection.
+//!
+//! A single background thread owns a deadline-ordered queue; `deliver_after`
+//! enqueues and wakes it. FIFO per (deadline, seq) keeps per-edge ordering
+//! for equal latencies — matching TCP/gRPC in-order delivery. One thread
+//! for the whole bus (not one per message) keeps the §Perf hot path free of
+//! thread spawns.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::Message;
+
+struct Item {
+    due: Instant,
+    seq: u64,
+    tx: mpsc::Sender<Message>,
+    msg: Message,
+}
+
+// Order by (due, seq) — BinaryHeap is a max-heap, so wrap in Reverse at use.
+impl PartialEq for Item {
+    fn eq(&self, other: &Self) -> bool {
+        self.due == other.due && self.seq == other.seq
+    }
+}
+impl Eq for Item {}
+impl PartialOrd for Item {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Item {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.due, self.seq).cmp(&(other.due, other.seq))
+    }
+}
+
+#[derive(Default)]
+struct Shared {
+    heap: Mutex<BinaryHeap<Reverse<Item>>>,
+    cv: Condvar,
+}
+
+/// Handle to the timer thread (spawned lazily on first delayed send).
+pub(super) struct DelayLine {
+    shared: Arc<Shared>,
+    seq: std::sync::atomic::AtomicU64,
+    started: std::sync::Once,
+}
+
+impl DelayLine {
+    pub fn new() -> Self {
+        DelayLine {
+            shared: Arc::new(Shared::default()),
+            seq: std::sync::atomic::AtomicU64::new(0),
+            started: std::sync::Once::new(),
+        }
+    }
+
+    pub fn deliver_after(&self, delay: Duration, tx: mpsc::Sender<Message>, msg: Message) {
+        self.started.call_once(|| {
+            let shared = self.shared.clone();
+            std::thread::Builder::new()
+                .name("nalar-netdelay".into())
+                .spawn(move || run(shared))
+                .expect("spawn delay thread");
+        });
+        let item = Item {
+            due: Instant::now() + delay,
+            seq: self.seq.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            tx,
+            msg,
+        };
+        self.shared.heap.lock().unwrap().push(Reverse(item));
+        self.shared.cv.notify_one();
+    }
+}
+
+fn run(shared: Arc<Shared>) {
+    let mut heap = shared.heap.lock().unwrap();
+    loop {
+        let now = Instant::now();
+        // Deliver everything due.
+        while heap.peek().map(|Reverse(i)| i.due <= now).unwrap_or(false) {
+            let Reverse(item) = heap.pop().unwrap();
+            let _ = item.tx.send(item.msg); // receiver may be gone: drop
+        }
+        match heap.peek() {
+            Some(Reverse(next)) => {
+                let wait = next.due.saturating_duration_since(Instant::now());
+                let (g, _) = shared.cv.wait_timeout(heap, wait).unwrap();
+                heap = g;
+            }
+            None => {
+                // Idle: park until a new item arrives (checked periodically
+                // so the daemon thread can't deadlock a shutdown).
+                let (g, _) = shared
+                    .cv
+                    .wait_timeout(heap, Duration::from_millis(100))
+                    .unwrap();
+                heap = g;
+            }
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! Message types exchanged between component-level controllers.
+
+use std::sync::Arc;
+
+use crate::futures::{FutureCell, Value};
+use crate::ids::SessionId;
+
+/// An agent/tool invocation in flight: the shared future cell plus the
+/// call arguments. The cell carries all Table-3 metadata; passing the Arc
+/// is the in-process analog of sending the future's metadata over gRPC.
+pub struct CallMsg {
+    pub cell: Arc<FutureCell>,
+    pub args: Value,
+}
+
+/// Session state + queued work transferred during migration (Fig. 8 step 5).
+pub struct MigratePayload {
+    pub session: SessionId,
+    /// Queued (not yet running) calls being moved.
+    pub calls: Vec<CallMsg>,
+    /// Serialized managed state snapshot (`state/` entries).
+    pub state: Vec<(String, Value)>,
+    /// Approximate KV-cache bytes that move with the session (cost model).
+    pub kv_bytes: u64,
+}
+
+/// Inbox protocol of a component-level controller.
+pub enum Message {
+    /// New invocation from a stub (Op 1 reached the executor).
+    Call(CallMsg),
+    /// Global-controller command (Fig. 8 step 1): hand this session's
+    /// queued work + state to `to`. The component controllers coordinate
+    /// the rest among themselves.
+    MigrateOut { session: SessionId, to: crate::ids::InstanceId },
+    /// Migration (Fig. 8 step 5): receive a session's queued work + state.
+    MigrateIn(MigratePayload),
+    /// Graceful stop (the `kill` primitive drains via this).
+    Shutdown,
+}

@@ -1,0 +1,152 @@
+//! Micro/macro benchmark harness (criterion substitute).
+//!
+//! `cargo bench` targets are plain binaries (`harness = false`); each uses
+//! these helpers: warmup + timed iterations with mean/p50/p99, and an
+//! aligned table printer for the paper-figure reproductions.
+
+use std::time::{Duration, Instant};
+
+/// Result of a timed micro-benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Timing {
+    pub fn per_iter_ns(&self) -> f64 {
+        self.mean.as_nanos() as f64
+    }
+}
+
+impl std::fmt::Display for Timing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {:>10} p50 {:>10} p99 {:>10} (n={})",
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p99),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+/// Time `f` for ~`budget` (after `warmup` iterations); per-iteration stats.
+pub fn bench<F: FnMut()>(name: &str, warmup: u64, budget: Duration, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 10 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+        if samples.len() >= 5_000_000 {
+            break;
+        }
+    }
+    let t = summarize(&mut samples);
+    println!("  {name:<44} {t}");
+    t
+}
+
+/// Summarize a set of duration samples.
+pub fn summarize(samples: &mut [Duration]) -> Timing {
+    samples.sort();
+    let n = samples.len().max(1);
+    let total: Duration = samples.iter().sum();
+    let q = |p: f64| samples[(((n - 1) as f64) * p).round() as usize];
+    Timing {
+        iters: n as u64,
+        mean: total / n as u32,
+        p50: q(0.50),
+        p99: q(0.99),
+        min: samples.first().copied().unwrap_or_default(),
+        max: samples.last().copied().unwrap_or_default(),
+    }
+}
+
+/// Aligned table printer for figure/table reproductions.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", widths.iter().map(|w| "-".repeat(*w + 2)).collect::<String>());
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let t = bench("noop-ish", 5, Duration::from_millis(20), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(t.iters >= 10);
+        assert!(t.min <= t.p50 && t.p50 <= t.p99 && t.p99 <= t.max);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".to_string()]);
+    }
+}

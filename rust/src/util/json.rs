@@ -1,0 +1,637 @@
+//! Minimal-but-complete JSON: value model, parser, writer, `json!` macro.
+//!
+//! Future payloads, managed state, configs and the AOT manifest all move
+//! through [`Value`]. The parser is a recursive-descent implementation of
+//! RFC 8259 (escapes, `\uXXXX` incl. surrogate pairs, exponents); the
+//! writer emits compact or pretty text. Object keys keep insertion order
+//! irrelevant by using a BTreeMap (deterministic output for tests/goldens).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+pub type Map = BTreeMap<String, Value>;
+
+/// A JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(Map),
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("json parse error at byte {pos}: {msg}")]
+pub struct ParseError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+static NULL: Value = Value::Null;
+
+impl Value {
+    // ------------------------------------------------------------ accessors
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null)
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_f64().map(|f| f as i64)
+    }
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().and_then(|f| if f >= 0.0 { Some(f as u64) } else { None })
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|u| u as usize)
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&Vec<Value>> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn as_obj(&self) -> Option<&Map> {
+        match self {
+            Value::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Object field access (`Value::Null` if absent / not an object).
+    pub fn get(&self, key: &str) -> &Value {
+        match self {
+            Value::Obj(m) => m.get(key).unwrap_or(&NULL),
+            _ => &NULL,
+        }
+    }
+
+    /// Array element access.
+    pub fn idx(&self, i: usize) -> &Value {
+        match self {
+            Value::Arr(a) => a.get(i).unwrap_or(&NULL),
+            _ => &NULL,
+        }
+    }
+
+    /// Typed convenience getters with defaults (config parsing).
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).as_str().unwrap_or(default)
+    }
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).as_f64().unwrap_or(default)
+    }
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).as_u64().unwrap_or(default)
+    }
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).as_bool().unwrap_or(default)
+    }
+
+    pub fn insert(&mut self, key: &str, v: impl Into<Value>) {
+        if let Value::Obj(m) = self {
+            m.insert(key.to_string(), v.into());
+        }
+    }
+
+    pub fn push(&mut self, v: impl Into<Value>) {
+        if let Value::Arr(a) = self {
+            a.push(v.into());
+        }
+    }
+
+    // ------------------------------------------------------------- writing
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, None, 0);
+        s
+    }
+
+    pub fn pretty(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, Some(2), 0);
+        s
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(true) => out.push_str("true"),
+            Value::Bool(false) => out.push_str("false"),
+            Value::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else if n.is_finite() {
+                    out.push_str(&format!("{n}"));
+                } else {
+                    out.push_str("null"); // JSON has no Inf/NaN
+                }
+            }
+            Value::Str(s) => write_escaped(out, s),
+            Value::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, depth + 1);
+                    v.write(out, indent, depth + 1);
+                }
+                if !a.is_empty() {
+                    newline_indent(out, indent, depth);
+                }
+                out.push(']');
+            }
+            Value::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, depth + 1);
+                    write_escaped(out, k);
+                    out.push(':');
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    v.write(out, indent, depth + 1);
+                }
+                if !m.is_empty() {
+                    newline_indent(out, indent, depth);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
+    if let Some(w) = indent {
+        out.push('\n');
+        for _ in 0..w * depth {
+            out.push(' ');
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_string())
+    }
+}
+
+// ------------------------------------------------------------------ parser
+pub fn parse(text: &str) -> Result<Value, ParseError> {
+    let mut p = Parser { b: text.as_bytes(), pos: 0 };
+    p.ws();
+    let v = p.value()?;
+    p.ws();
+    if p.pos != p.b.len() {
+        return Err(p.err("trailing characters"));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> ParseError {
+        ParseError { pos: self.pos, msg: msg.to_string() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), ParseError> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", c as char)))
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Value) -> Result<Value, ParseError> {
+        if self.b[self.pos..].starts_with(s.as_bytes()) {
+            self.pos += s.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected `{s}`")))
+        }
+    }
+
+    fn value(&mut self) -> Result<Value, ParseError> {
+        match self.peek() {
+            Some(b'n') => self.lit("null", Value::Null),
+            Some(b't') => self.lit("true", Value::Bool(true)),
+            Some(b'f') => self.lit("false", Value::Bool(false)),
+            Some(b'"') => Ok(Value::Str(self.string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(self.err("expected a JSON value")),
+        }
+    }
+
+    fn array(&mut self) -> Result<Value, ParseError> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Value::Arr(out));
+        }
+        loop {
+            self.ws();
+            out.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Value::Arr(out));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Value, ParseError> {
+        self.expect(b'{')?;
+        let mut out = Map::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Value::Obj(out));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            self.ws();
+            out.insert(k, self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Value::Obj(out));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, ParseError> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(s);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => s.push('"'),
+                        Some(b'\\') => s.push('\\'),
+                        Some(b'/') => s.push('/'),
+                        Some(b'n') => s.push('\n'),
+                        Some(b't') => s.push('\t'),
+                        Some(b'r') => s.push('\r'),
+                        Some(b'b') => s.push('\u{0008}'),
+                        Some(b'f') => s.push('\u{000C}'),
+                        Some(b'u') => {
+                            self.pos += 1;
+                            let hi = self.hex4()?;
+                            let c = if (0xD800..0xDC00).contains(&hi) {
+                                // surrogate pair
+                                if self.b[self.pos..].starts_with(b"\\u") {
+                                    self.pos += 2;
+                                    let lo = self.hex4()?;
+                                    let v = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                                    char::from_u32(v).ok_or_else(|| self.err("bad surrogate"))?
+                                } else {
+                                    return Err(self.err("lone high surrogate"));
+                                }
+                            } else {
+                                char::from_u32(hi).ok_or_else(|| self.err("bad \\u escape"))?
+                            };
+                            s.push(c);
+                            continue; // hex4 advanced pos already
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // consume one UTF-8 char
+                    let rest = &self.b[self.pos..];
+                    let text = std::str::from_utf8(rest).map_err(|_| self.err("bad utf8"))?;
+                    let c = text.chars().next().unwrap();
+                    s.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, ParseError> {
+        if self.pos + 4 > self.b.len() {
+            return Err(self.err("short \\u escape"));
+        }
+        let hx = std::str::from_utf8(&self.b[self.pos..self.pos + 4])
+            .map_err(|_| self.err("bad hex"))?;
+        let v = u32::from_str_radix(hx, 16).map_err(|_| self.err("bad hex"))?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Value, ParseError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        text.parse::<f64>()
+            .map(Value::Num)
+            .map_err(|_| self.err("bad number"))
+    }
+}
+
+// -------------------------------------------------------------- conversions
+impl From<bool> for Value {
+    fn from(b: bool) -> Self {
+        Value::Bool(b)
+    }
+}
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::Str(s.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::Str(s)
+    }
+}
+macro_rules! from_num {
+    ($($t:ty),*) => {$(
+        impl From<$t> for Value {
+            fn from(n: $t) -> Self { Value::Num(n as f64) }
+        }
+    )*};
+}
+from_num!(f64, f32, i64, i32, u64, u32, usize, u16, i16, u8);
+impl<T: Into<Value>> From<Vec<T>> for Value {
+    fn from(v: Vec<T>) -> Self {
+        Value::Arr(v.into_iter().map(Into::into).collect())
+    }
+}
+impl<T: Into<Value> + Clone> From<&[T]> for Value {
+    fn from(v: &[T]) -> Self {
+        Value::Arr(v.iter().cloned().map(Into::into).collect())
+    }
+}
+impl<T: Into<Value>> From<Option<T>> for Value {
+    fn from(v: Option<T>) -> Self {
+        v.map(Into::into).unwrap_or(Value::Null)
+    }
+}
+
+/// `json!` literal macro (serde_json-style):
+/// `json!(null)`, `json!(3)`, `json!("s")`, `json!([a, b.c()])`,
+/// `json!({"k": some.expr(), "nested": {"x": 1}, "list": [1, 2]})`.
+/// Values interpolate via `Into<Value>`; nested `{}`/`[]` literals recurse.
+#[macro_export]
+macro_rules! json {
+    (null) => { $crate::util::json::Value::Null };
+    ([]) => { $crate::util::json::Value::Arr(Vec::new()) };
+    ({}) => { $crate::util::json::Value::Obj($crate::util::json::Map::new()) };
+    ([ $($tt:tt)+ ]) => {{
+        let mut a: Vec<$crate::util::json::Value> = Vec::new();
+        $crate::json_arr_internal!(a; $($tt)+);
+        $crate::util::json::Value::Arr(a)
+    }};
+    ({ $($tt:tt)+ }) => {{
+        let mut m = $crate::util::json::Map::new();
+        $crate::json_obj_internal!(m; $($tt)+);
+        $crate::util::json::Value::Obj(m)
+    }};
+    ($other:expr) => { $crate::util::json::Value::from($other) };
+}
+
+/// Internal muncher for `json!` object bodies.
+#[doc(hidden)]
+#[macro_export]
+macro_rules! json_obj_internal {
+    ($m:ident;) => {};
+    ($m:ident; $k:literal : null $(, $($rest:tt)*)?) => {
+        $m.insert($k.to_string(), $crate::util::json::Value::Null);
+        $crate::json_obj_internal!($m; $($($rest)*)?);
+    };
+    ($m:ident; $k:literal : { $($inner:tt)* } $(, $($rest:tt)*)?) => {
+        $m.insert($k.to_string(), $crate::json!({ $($inner)* }));
+        $crate::json_obj_internal!($m; $($($rest)*)?);
+    };
+    ($m:ident; $k:literal : [ $($inner:tt)* ] $(, $($rest:tt)*)?) => {
+        $m.insert($k.to_string(), $crate::json!([ $($inner)* ]));
+        $crate::json_obj_internal!($m; $($($rest)*)?);
+    };
+    ($m:ident; $k:literal : $v:expr , $($rest:tt)*) => {
+        $m.insert($k.to_string(), $crate::util::json::Value::from($v));
+        $crate::json_obj_internal!($m; $($rest)*);
+    };
+    ($m:ident; $k:literal : $v:expr) => {
+        $m.insert($k.to_string(), $crate::util::json::Value::from($v));
+    };
+}
+
+/// Internal muncher for `json!` array bodies.
+#[doc(hidden)]
+#[macro_export]
+macro_rules! json_arr_internal {
+    ($a:ident;) => {};
+    ($a:ident; null $(, $($rest:tt)*)?) => {
+        $a.push($crate::util::json::Value::Null);
+        $crate::json_arr_internal!($a; $($($rest)*)?);
+    };
+    ($a:ident; { $($inner:tt)* } $(, $($rest:tt)*)?) => {
+        $a.push($crate::json!({ $($inner)* }));
+        $crate::json_arr_internal!($a; $($($rest)*)?);
+    };
+    ($a:ident; [ $($inner:tt)* ] $(, $($rest:tt)*)?) => {
+        $a.push($crate::json!([ $($inner)* ]));
+        $crate::json_arr_internal!($a; $($($rest)*)?);
+    };
+    ($a:ident; $v:expr , $($rest:tt)*) => {
+        $a.push($crate::util::json::Value::from($v));
+        $crate::json_arr_internal!($a; $($rest)*);
+    };
+    ($a:ident; $v:expr) => {
+        $a.push($crate::util::json::Value::from($v));
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_everything() {
+        let text = r#"{"a": [1, 2.5, -3e2], "b": {"nested": true}, "c": null, "d": "hi\n\"q\""}"#;
+        let v = parse(text).unwrap();
+        assert_eq!(v.get("a").idx(1).as_f64(), Some(2.5));
+        assert_eq!(v.get("a").idx(2).as_f64(), Some(-300.0));
+        assert_eq!(v.get("b").get("nested").as_bool(), Some(true));
+        assert!(v.get("c").is_null());
+        assert_eq!(v.get("d").as_str(), Some("hi\n\"q\""));
+        let re = parse(&v.to_string()).unwrap();
+        assert_eq!(v, re);
+        let re2 = parse(&v.pretty()).unwrap();
+        assert_eq!(v, re2);
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        let v = parse(r#""é😀""#).unwrap();
+        assert_eq!(v.as_str(), Some("é😀"));
+        // non-ascii passthrough
+        let v2 = parse("\"héllo\"").unwrap();
+        assert_eq!(v2.as_str(), Some("héllo"));
+    }
+
+    #[test]
+    fn errors_have_positions() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("tru").is_err());
+        assert!(parse("1 2").is_err());
+        assert!(parse(r#"{"a" 1}"#).is_err());
+        assert!(parse("\"\\u12\"").is_err());
+    }
+
+    #[test]
+    fn json_macro() {
+        let v = json!({
+            "name": "dev",
+            "n": 3,
+            "list": [1, 2, "x"],
+            "inner": {"ok": true},
+            "nil": null
+        });
+        assert_eq!(v.get("n").as_i64(), Some(3));
+        assert_eq!(v.get("list").idx(2).as_str(), Some("x"));
+        assert_eq!(v.get("inner").get("ok").as_bool(), Some(true));
+        assert!(v.get("nil").is_null());
+        let expr = 41 + 1;
+        assert_eq!(json!(expr).as_i64(), Some(42));
+    }
+
+    #[test]
+    fn missing_paths_are_null() {
+        let v = json!({"a": 1});
+        assert!(v.get("zz").is_null());
+        assert!(v.get("zz").get("deeper").is_null());
+        assert!(v.idx(0).is_null());
+    }
+
+    #[test]
+    fn integers_print_clean() {
+        assert_eq!(json!(5).to_string(), "5");
+        assert_eq!(json!(5.5).to_string(), "5.5");
+        assert_eq!(json!(-1).to_string(), "-1");
+    }
+
+    #[test]
+    fn defaults_helpers() {
+        let v = json!({"x": 2, "s": "y", "b": true});
+        assert_eq!(v.f64_or("x", 0.0), 2.0);
+        assert_eq!(v.f64_or("missing", 7.0), 7.0);
+        assert_eq!(v.str_or("s", "d"), "y");
+        assert_eq!(v.bool_or("b", false), true);
+        assert_eq!(v.u64_or("missing", 9), 9);
+    }
+
+    #[test]
+    fn deep_nesting() {
+        let mut text = String::new();
+        for _ in 0..100 {
+            text.push('[');
+        }
+        text.push('1');
+        for _ in 0..100 {
+            text.push(']');
+        }
+        let mut v = &parse(&text).unwrap();
+        for _ in 0..100 {
+            v = v.idx(0);
+        }
+        assert_eq!(v.as_i64(), Some(1));
+    }
+}

@@ -1,0 +1,202 @@
+//! In-memory vector search — the ChromaDB substitute (DESIGN.md §3).
+//!
+//! The SWE workflow's documentation tool (paper Fig. 1 step 3) stores API
+//! docs here and retrieves top-k by cosine similarity. Embeddings come
+//! either from the real L2 `embed` entry (PJRT mode) or from the
+//! deterministic [`HashEmbedder`] (sim mode) — both produce unit-norm
+//! vectors, so the index code is identical.
+
+use std::sync::RwLock;
+
+/// Deterministic character-trigram hashing embedder (sim mode). Produces
+/// unit-norm `dim`-vectors with the property that texts sharing trigrams
+/// are closer — enough signal for retrieval-shaped workloads.
+#[derive(Debug, Clone, Copy)]
+pub struct HashEmbedder {
+    pub dim: usize,
+}
+
+impl HashEmbedder {
+    pub fn new(dim: usize) -> Self {
+        HashEmbedder { dim }
+    }
+
+    pub fn embed(&self, text: &str) -> Vec<f32> {
+        let mut v = vec![0f32; self.dim];
+        let bytes = text.as_bytes();
+        if bytes.is_empty() {
+            v[0] = 1.0;
+            return v;
+        }
+        for w in bytes.windows(3.min(bytes.len())) {
+            // FNV-1a over the trigram
+            let mut h: u64 = 0xcbf29ce484222325;
+            for &b in w {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+            let idx = (h % self.dim as u64) as usize;
+            let sign = if (h >> 63) & 1 == 1 { 1.0 } else { -1.0 };
+            v[idx] += sign;
+        }
+        normalize(&mut v);
+        v
+    }
+}
+
+fn normalize(v: &mut [f32]) {
+    let n: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if n > 1e-9 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    } else {
+        v[0] = 1.0;
+    }
+}
+
+/// A stored document.
+#[derive(Debug, Clone)]
+pub struct Doc {
+    pub id: u64,
+    pub text: String,
+    pub embedding: Vec<f32>,
+}
+
+/// A search hit.
+#[derive(Debug, Clone)]
+pub struct Hit {
+    pub id: u64,
+    pub score: f32,
+    pub text: String,
+}
+
+/// Thread-safe cosine top-k index (exact, brute force — document counts in
+/// the workflows are small; ANN would be over-engineering the substitute).
+pub struct VectorStore {
+    docs: RwLock<Vec<Doc>>,
+    dim: usize,
+}
+
+impl VectorStore {
+    pub fn new(dim: usize) -> Self {
+        VectorStore { docs: RwLock::new(Vec::new()), dim }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Insert a document with a precomputed (unit-norm) embedding.
+    pub fn add(&self, text: impl Into<String>, mut embedding: Vec<f32>) -> u64 {
+        assert_eq!(embedding.len(), self.dim, "embedding dim mismatch");
+        normalize(&mut embedding);
+        let mut docs = self.docs.write().unwrap();
+        let id = docs.len() as u64;
+        docs.push(Doc { id, text: text.into(), embedding });
+        id
+    }
+
+    /// Cosine top-k (dot product of unit vectors), highest first.
+    pub fn query(&self, embedding: &[f32], k: usize) -> Vec<Hit> {
+        assert_eq!(embedding.len(), self.dim, "query dim mismatch");
+        let docs = self.docs.read().unwrap();
+        let mut scored: Vec<(f32, usize)> = docs
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                let s: f32 = d
+                    .embedding
+                    .iter()
+                    .zip(embedding.iter())
+                    .map(|(a, b)| a * b)
+                    .sum();
+                (s, i)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        scored
+            .into_iter()
+            .take(k)
+            .map(|(score, i)| Hit { id: docs[i].id, score, text: docs[i].text.clone() })
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.docs.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_embedder_unit_norm_deterministic() {
+        let e = HashEmbedder::new(64);
+        let a = e.embed("oauth login flow");
+        let b = e.embed("oauth login flow");
+        assert_eq!(a, b);
+        let n: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((n - 1.0).abs() < 1e-5);
+        assert!(!e.embed("").iter().any(|x| x.is_nan()));
+    }
+
+    #[test]
+    fn similar_texts_score_higher() {
+        let e = HashEmbedder::new(128);
+        let store = VectorStore::new(128);
+        store.add("oauth2 token refresh documentation", e.embed("oauth2 token refresh documentation"));
+        store.add("database connection pooling guide", e.embed("database connection pooling guide"));
+        store.add("oauth login setup for web apps", e.embed("oauth login setup for web apps"));
+
+        let hits = store.query(&e.embed("how to set up oauth login"), 2);
+        assert_eq!(hits.len(), 2);
+        assert!(
+            hits[0].text.contains("oauth"),
+            "top hit should be oauth-related, got `{}`",
+            hits[0].text
+        );
+        assert!(hits[0].score >= hits[1].score);
+    }
+
+    #[test]
+    fn topk_bounds() {
+        let e = HashEmbedder::new(32);
+        let store = VectorStore::new(32);
+        store.add("a", e.embed("a"));
+        assert_eq!(store.query(&e.embed("a"), 10).len(), 1);
+        assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dim_mismatch_panics() {
+        let store = VectorStore::new(8);
+        store.add("x", vec![1.0; 16]);
+    }
+
+    #[test]
+    fn concurrent_add_query() {
+        let e = HashEmbedder::new(32);
+        let store = std::sync::Arc::new(VectorStore::new(32));
+        let mut handles = vec![];
+        for t in 0..4 {
+            let store = store.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    store.add(format!("doc {t} {i}"), HashEmbedder::new(32).embed(&format!("doc {t} {i}")));
+                    store.query(&HashEmbedder::new(32).embed("doc"), 3);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(store.len(), 200);
+    }
+}

@@ -1,0 +1,124 @@
+//! Financial-analyst workflow (paper §6, Fig. 9a).
+//!
+//! An analyst agent fans out to stock / bond / market-research agents and
+//! a web/news search, then summarizes for the user. Sessions are stateful
+//! — the user issues follow-ups after long delays, and the summary history
+//! lives in a `managedList` so NALAR (not the developer) owns its
+//! placement; the analyst's KV cache makes session placement matter.
+
+use std::time::Duration;
+
+use crate::error::Result;
+use crate::futures::Value;
+use crate::json;
+use crate::workflow::Env;
+
+const ANALYSTS: [&str; 3] = ["stock_analysis", "bond_market", "market_research"];
+
+/// One user request (initial question or follow-up) through the workflow.
+pub fn run(env: &Env, input: &Value, timeout: Duration) -> Result<Value> {
+    let question = input.get("question").as_str().unwrap_or("market update");
+    // Generation budget: small in PJRT quickstarts (so multi-turn sessions
+    // fit the model context and KV reuse shows), full-size in sim runs.
+    let max_new = input.get("max_new").as_usize().unwrap_or(128);
+
+    // Fan out to the specialist agents + web search — all futures, all
+    // non-blocking (Op 1); the driver blocks only when joining.
+    let specialists: Vec<_> = ANALYSTS
+        .iter()
+        .map(|a| {
+            env.ctx.agent(a).call(
+                "analyze",
+                json!({"prompt": question, "max_new_tokens": max_new.min(96)}),
+            )
+        })
+        .collect();
+    let web = env
+        .ctx
+        .agent("web_search")
+        .call("search", json!({"query": question}));
+
+    // Join. Specialist failures are fatal (retryable by the caller); a web
+    // failure degrades gracefully — exactly the "driver decides" model.
+    let mut parts: Vec<String> = Vec::new();
+    for f in &specialists {
+        let v = f.value(timeout)?;
+        parts.push(v.get("text").as_str().unwrap_or_default().to_string());
+    }
+    let web_part = web
+        .value(timeout)
+        .map(|v| v.to_string())
+        .unwrap_or_else(|_| "[web search unavailable]".into());
+
+    // Session history: managed state, not driver-managed placement (§3.3).
+    let history = env.state_list("history");
+    let history_tokens = 48 * history.len(); // prior summaries in the KV context
+
+    let deps: Vec<_> = specialists.iter().map(|f| f.id()).collect();
+    let summary = env.ctx.deeper().agent("analyst").call_with(
+        "summarize",
+        json!({
+            "prompt": format!("{question}\n{}\n{web_part}", parts.join("\n")),
+            "max_new_tokens": max_new,
+            "history_tokens": history_tokens,
+        }),
+        &deps,
+        0,
+    );
+    let out = summary.value(timeout)?;
+
+    history.push(json!({
+        "question": question,
+        "summary": out.get("text").as_str().unwrap_or_default(),
+    }));
+
+    Ok(json!({
+        "summary": out.get("text").as_str().unwrap_or_default(),
+        "kv": out.get("kv").as_str().unwrap_or(""),
+        "turn": history.len(),
+        "specialists": parts.len(),
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::Deployment;
+    use crate::workflow::WorkflowKind;
+
+    #[test]
+    fn end_to_end_with_followup() {
+        let mut cfg = WorkflowKind::Financial.config();
+        cfg.time_scale = 0.0005; // fast test
+        let d = Deployment::launch(cfg).unwrap();
+        let session = d.new_session();
+        let timeout = Duration::from_secs(20);
+
+        let env = Env::new(&d, session);
+        let out = run(&env, &json!({"question": "How did FCF change?"}), timeout).unwrap();
+        assert_eq!(out.get("turn").as_i64(), Some(1));
+        assert_eq!(out.get("specialists").as_i64(), Some(3));
+
+        // follow-up in the same session sees the history
+        let env2 = Env::new(&d, session);
+        let out2 = run(&env2, &json!({"question": "break that down"}), timeout).unwrap();
+        assert_eq!(out2.get("turn").as_i64(), Some(2));
+        d.shutdown();
+    }
+
+    #[test]
+    fn sessions_are_sticky_on_analyst() {
+        let mut cfg = WorkflowKind::Financial.config();
+        cfg.time_scale = 0.0005;
+        let d = Deployment::launch(cfg).unwrap();
+        let session = d.new_session();
+        let timeout = Duration::from_secs(20);
+        for _ in 0..2 {
+            let env = Env::new(&d, session);
+            run(&env, &json!({"question": "q"}), timeout).unwrap();
+        }
+        // managed-state agent => session pinned to one instance
+        assert!(d.router().sticky_of(session, "analyst").is_some());
+        d.shutdown();
+    }
+}

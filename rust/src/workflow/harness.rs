@@ -1,0 +1,220 @@
+//! Open-loop serving harness: Poisson arrivals -> driver threads -> stats.
+//!
+//! This regenerates the Fig-9 cells: for a (workflow, system, rate) tuple
+//! it drives the deployment at `rps` for `duration`, then reports
+//! avg/P50/P95/P99 latency (scaled back to paper-equivalent seconds),
+//! completion/failure counts and the load-imbalance factor.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::ids::SessionId;
+use crate::json;
+use crate::metrics::{LatencyRecorder, LatencySummary};
+use crate::server::Deployment;
+use crate::util::rng::Rng;
+use crate::workflow::{run_request, WorkflowKind};
+use crate::workload;
+
+/// One Fig-9 cell's run parameters.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub workflow: WorkflowKind,
+    /// Wall-clock requests/second (scale by `time_scale` to compare with
+    /// the paper's paper-seconds axis).
+    pub rps: f64,
+    /// Wall-clock measurement window.
+    pub duration: Duration,
+    /// Session pool size (stateful workflows draw sessions Zipf-skewed).
+    pub session_pool: usize,
+    /// Per-request timeout (requests past it count as failures — the
+    /// "fails under load" signal of §6.1).
+    pub request_timeout: Duration,
+    pub seed: u64,
+}
+
+impl RunConfig {
+    pub fn quick(workflow: WorkflowKind, rps: f64) -> Self {
+        RunConfig {
+            workflow,
+            rps,
+            duration: Duration::from_secs(3),
+            session_pool: 24,
+            request_timeout: Duration::from_secs(30),
+            seed: 7,
+        }
+    }
+}
+
+/// Results of one harness run.
+#[derive(Debug, Clone)]
+pub struct RunStats {
+    /// Latency summary in wall-clock seconds (use `scaled_summary` for
+    /// paper-equivalent units).
+    pub latency: LatencySummary,
+    pub completed: u64,
+    pub failed: u64,
+    /// max/mean busy across the workflow's LLM instances (>=1).
+    pub imbalance: f64,
+    /// Completed requests per wall-clock second.
+    pub throughput: f64,
+    pub time_scale: f64,
+}
+
+impl RunStats {
+    /// Latency in paper-equivalent seconds (divide by `time_scale`).
+    pub fn paper_latency(&self, recorder: &LatencyRecorder) -> LatencySummary {
+        recorder.summary_scaled(1.0 / self.time_scale)
+    }
+
+    pub fn failure_rate(&self) -> f64 {
+        let total = self.completed + self.failed;
+        if total == 0 {
+            0.0
+        } else {
+            self.failed as f64 / total as f64
+        }
+    }
+}
+
+fn input_for(kind: WorkflowKind, progress: f64, turn: u64, rng: &mut Rng) -> crate::futures::Value {
+    match kind {
+        WorkflowKind::Financial => {
+            let q = if turn == 0 {
+                workload::finqa_question(rng)
+            } else {
+                workload::finqa_followup(rng)
+            };
+            json!({"question": q})
+        }
+        WorkflowKind::Router => {
+            let class = workload::azure_like_class(progress, rng);
+            let prompt = if class == "coder" {
+                workload::swe_task(rng)
+            } else {
+                workload::chat_prompt(rng)
+            };
+            json!({"prompt": prompt, "class": class})
+        }
+        WorkflowKind::Swe => json!({"task": workload::swe_task(rng)}),
+    }
+}
+
+/// LLM agent types whose instances define the imbalance metric.
+fn imbalance_agents(kind: WorkflowKind) -> &'static [&'static str] {
+    match kind {
+        WorkflowKind::Financial => &["analyst"],
+        WorkflowKind::Router => &["chat", "coder"],
+        WorkflowKind::Swe => &["developer"],
+    }
+}
+
+/// Run the open-loop experiment. Returns stats plus the raw recorder (for
+/// paper-scaled reporting).
+pub fn run_open_loop(d: &Deployment, rc: &RunConfig) -> (RunStats, Arc<LatencyRecorder>) {
+    let mut arrivals = workload::Arrivals::new(rc.rps, rc.seed);
+    let schedule = arrivals.schedule(rc.duration);
+    let recorder = Arc::new(LatencyRecorder::new());
+    let completed = Arc::new(AtomicU64::new(0));
+    let failed = Arc::new(AtomicU64::new(0));
+    let mut rng = Rng::new(rc.seed ^ 0xFEED);
+
+    // Pre-create the session pool; per-session turn counters drive
+    // follow-up questions (human-in-the-loop).
+    let sessions: Vec<SessionId> = (0..rc.session_pool.max(1)).map(|_| d.new_session()).collect();
+    let turns: Arc<Vec<AtomicU64>> =
+        Arc::new((0..sessions.len()).map(|_| AtomicU64::new(0)).collect());
+
+    let start = Instant::now();
+    // The deployment is shared by reference across driver threads via a
+    // scope; drivers block on futures, threads are cheap here. The scope
+    // joins every driver before returning.
+    std::thread::scope(|scope| {
+        for at in &schedule {
+            let wait = at.saturating_sub(start.elapsed());
+            if !wait.is_zero() {
+                std::thread::sleep(wait);
+            }
+            let progress = start.elapsed().as_secs_f64() / rc.duration.as_secs_f64();
+            let sidx = rng.zipf(sessions.len(), 1.1);
+            let session = sessions[sidx];
+            let turn = turns[sidx].fetch_add(1, Ordering::Relaxed);
+            let input = input_for(rc.workflow, progress.min(1.0), turn, &mut rng);
+
+            let recorder = recorder.clone();
+            let completed = completed.clone();
+            let failed = failed.clone();
+            let kind = rc.workflow;
+            let timeout = rc.request_timeout;
+            scope.spawn(move || {
+                let t0 = Instant::now();
+                match run_request(d, kind, session, &input, timeout) {
+                    Ok(_) => {
+                        recorder.record(t0.elapsed());
+                        completed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        // timeouts/failures also contribute tail latency
+                        recorder.record(t0.elapsed());
+                        failed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    let elapsed = start.elapsed().as_secs_f64();
+
+    // Load imbalance over completed work per instance.
+    let view = d.global().collect();
+    let mut per_instance: Vec<f64> = Vec::new();
+    for agent in imbalance_agents(rc.workflow) {
+        for i in view.instances_of(agent) {
+            per_instance.push(i.m.completed as f64);
+        }
+    }
+    let imbalance = crate::metrics::load_imbalance(&per_instance);
+
+    let stats = RunStats {
+        latency: recorder.summary(),
+        completed: completed.load(Ordering::Relaxed),
+        failed: failed.load(Ordering::Relaxed),
+        imbalance,
+        throughput: completed.load(Ordering::Relaxed) as f64 / elapsed.max(1e-9),
+        time_scale: d.cfg().time_scale,
+    };
+    (stats, recorder)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harness_runs_router_workflow() {
+        let mut cfg = WorkflowKind::Router.config();
+        cfg.time_scale = 0.0005;
+        let d = Deployment::launch(cfg).unwrap();
+        let rc = RunConfig {
+            workflow: WorkflowKind::Router,
+            rps: 30.0,
+            duration: Duration::from_secs(2),
+            session_pool: 8,
+            request_timeout: Duration::from_secs(20),
+            seed: 3,
+        };
+        let (stats, _rec) = run_open_loop(&d, &rc);
+        assert!(stats.completed >= 20, "completed only {}", stats.completed);
+        assert_eq!(stats.failed, 0, "unexpected failures");
+        assert!(stats.latency.p99 >= stats.latency.p50);
+        assert!(stats.imbalance >= 1.0);
+        d.shutdown();
+    }
+
+    #[test]
+    fn harness_deterministic_arrivals() {
+        let a = workload::Arrivals::new(50.0, 9).schedule(Duration::from_secs(1));
+        let b = workload::Arrivals::new(50.0, 9).schedule(Duration::from_secs(1));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,224 @@
+//! The three evaluation workflows (paper §6) + the serving harness.
+//!
+//! Workflow drivers are ordinary Rust functions over the stub API — the
+//! analog of the paper's "drivers are ordinary Python" (§3.1): they call
+//! agents through [`CallCtx::agent`], get futures back, branch on values,
+//! and implement their own retry logic (Fig. 4 #3). NALAR never sees a
+//! static graph; structure is extracted from the futures at runtime.
+
+pub mod financial;
+pub mod harness;
+pub mod router;
+pub mod swe;
+
+pub use harness::{run_open_loop, RunConfig, RunStats};
+
+use std::time::Duration;
+
+use crate::agents::CallCtx;
+use crate::config::DeploymentConfig;
+use crate::error::Result;
+use crate::futures::Value;
+use crate::ids::SessionId;
+use crate::server::Deployment;
+use crate::state::{ManagedDict, ManagedList};
+
+/// Which paper workflow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkflowKind {
+    /// §6 Financial Analyst: stateful, human-in-the-loop, fan-out + join.
+    Financial,
+    /// §6 Router-based: classify then branch (chat vs coding).
+    Router,
+    /// §6 Software Engineering: recursive plan/implement/test with retries.
+    Swe,
+}
+
+impl WorkflowKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkflowKind::Financial => "financial",
+            WorkflowKind::Router => "router",
+            WorkflowKind::Swe => "swe",
+        }
+    }
+
+    /// Reference deployment config for this workflow (sim executor; the
+    /// quickstart example swaps in `pjrt`). Mirrors `configs/*.json`.
+    pub fn config(&self) -> DeploymentConfig {
+        let text = match self {
+            WorkflowKind::Financial => configs::FINANCIAL,
+            WorkflowKind::Router => configs::ROUTER,
+            WorkflowKind::Swe => configs::SWE,
+        };
+        DeploymentConfig::from_json(text).expect("builtin config is valid")
+    }
+}
+
+/// Per-request environment handed to a driver: the call context plus
+/// managed-state bindings for the session.
+pub struct Env {
+    pub ctx: CallCtx,
+    session_store: std::sync::Arc<crate::nodestore::NodeStore>,
+}
+
+impl Env {
+    pub fn new(d: &Deployment, session: SessionId) -> Env {
+        // Session state's home store; migrations move entries between
+        // stores, rebinding happens per request (see state::managed docs).
+        let node = crate::ids::NodeId((session.0 % d.cfg().nodes as u64) as u32);
+        Env { ctx: d.ctx(session), session_store: d.stores().node(node) }
+    }
+
+    pub fn session(&self) -> SessionId {
+        self.ctx.session
+    }
+
+    /// `managedList` bound to this session (paper §3.3).
+    pub fn state_list(&self, name: &str) -> ManagedList {
+        ManagedList::bind(self.session_store.clone(), self.ctx.session, name)
+    }
+
+    /// `managedDict` bound to this session.
+    pub fn state_dict(&self, name: &str) -> ManagedDict {
+        ManagedDict::bind(self.session_store.clone(), self.ctx.session, name)
+    }
+}
+
+/// Dispatch one request through the chosen workflow driver.
+pub fn run_request(
+    d: &Deployment,
+    kind: WorkflowKind,
+    session: SessionId,
+    input: &Value,
+    timeout: Duration,
+) -> Result<Value> {
+    let env = Env::new(d, session);
+    match kind {
+        WorkflowKind::Financial => financial::run(&env, input, timeout),
+        WorkflowKind::Router => router::run(&env, input, timeout),
+        WorkflowKind::Swe => swe::run(&env, input, timeout),
+    }
+}
+
+/// Built-in deployment configs (also shipped as `configs/*.json`).
+pub mod configs {
+    pub const FINANCIAL: &str = r#"{
+  "nodes": 2,
+  "time_scale": 0.01,
+  "seed": 11,
+  "control": {"global_period_ms": 40, "hol_threshold_ms": 120},
+  "engine": {"max_batch": 8, "executor": "sim", "kv_policy": "hint"},
+  "agents": [
+    {"name": "stock_analysis", "kind": "llm", "instances": 1,
+     "directives": {"batchable": true, "max_instances": 2, "resources": {"GPU": 1}},
+     "profile": {"base_s": 0.3, "mean_output_tokens": 90, "per_output_token_s": 0.01, "output_sigma": 0.5},
+     "methods": ["analyze"]},
+    {"name": "bond_market", "kind": "llm", "instances": 1,
+     "directives": {"batchable": true, "max_instances": 2, "resources": {"GPU": 1}},
+     "profile": {"base_s": 0.3, "mean_output_tokens": 90, "per_output_token_s": 0.01, "output_sigma": 0.5},
+     "methods": ["analyze"]},
+    {"name": "market_research", "kind": "llm", "instances": 1,
+     "directives": {"batchable": true, "max_instances": 2, "resources": {"GPU": 1}},
+     "profile": {"base_s": 0.3, "mean_output_tokens": 110, "per_output_token_s": 0.01, "output_sigma": 0.6},
+     "methods": ["analyze"]},
+    {"name": "web_search", "kind": "web_search", "instances": 2,
+     "directives": {"max_instances": 4},
+     "profile": {"base_s": 0.5},
+     "methods": ["search"]},
+    {"name": "analyst", "kind": "llm", "instances": 4,
+     "directives": {"managed_state": true, "max_instances": 6, "resources": {"GPU": 1}},
+     "profile": {"base_s": 0.4, "mean_output_tokens": 220, "per_output_token_s": 0.012, "output_sigma": 0.8},
+     "methods": ["summarize"]}
+  ],
+  "policies": ["load_balance", "hol_migration"]
+}"#;
+
+    pub const ROUTER: &str = r#"{
+  "nodes": 2,
+  "time_scale": 0.01,
+  "seed": 22,
+  "control": {"global_period_ms": 40, "hol_threshold_ms": 120},
+  "engine": {"max_batch": 8, "executor": "sim", "kv_policy": "hint"},
+  "agents": [
+    {"name": "router", "kind": "llm", "instances": 1,
+     "directives": {"batchable": true, "max_instances": 2, "resources": {"GPU": 0.25}},
+     "profile": {"base_s": 0.05, "mean_output_tokens": 6, "per_output_token_s": 0.01, "output_sigma": 0.3},
+     "methods": ["classify"]},
+    {"name": "chat", "kind": "llm", "instances": 4,
+     "directives": {"batchable": true, "min_instances": 1, "max_instances": 7, "resources": {"GPU": 1}},
+     "profile": {"base_s": 0.2, "mean_output_tokens": 110, "per_output_token_s": 0.009, "output_sigma": 0.6},
+     "methods": ["reply"]},
+    {"name": "coder", "kind": "llm", "instances": 3,
+     "directives": {"batchable": true, "min_instances": 1, "max_instances": 7, "resources": {"GPU": 1}},
+     "profile": {"base_s": 0.3, "mean_output_tokens": 260, "per_output_token_s": 0.011, "output_sigma": 0.7},
+     "methods": ["implement"]},
+    {"name": "test_harness", "kind": "test_harness", "instances": 2,
+     "directives": {"max_instances": 4},
+     "profile": {"base_s": 0.3},
+     "failure_rate": 0.15,
+     "methods": ["unit_test"]}
+  ],
+  "policies": ["load_balance", "hol_migration", "resource_realloc"]
+}"#;
+
+    pub const SWE: &str = r#"{
+  "nodes": 2,
+  "time_scale": 0.01,
+  "seed": 33,
+  "control": {"global_period_ms": 40, "hol_threshold_ms": 120},
+  "engine": {"max_batch": 8, "executor": "sim", "kv_policy": "hint"},
+  "agents": [
+    {"name": "planner", "kind": "llm", "instances": 1,
+     "directives": {"batchable": true, "max_instances": 2, "resources": {"GPU": 1}},
+     "profile": {"base_s": 0.3, "mean_output_tokens": 60, "per_output_token_s": 0.008, "output_sigma": 0.4},
+     "methods": ["plan"]},
+    {"name": "developer", "kind": "llm", "instances": 3,
+     "directives": {"batchable": true, "min_instances": 1, "max_instances": 6, "resources": {"GPU": 1}},
+     "profile": {"base_s": 0.4, "mean_output_tokens": 240, "per_output_token_s": 0.011, "output_sigma": 0.7},
+     "methods": ["implement"]},
+    {"name": "documentation", "kind": "vector_store", "instances": 2,
+     "directives": {"max_instances": 4},
+     "profile": {"base_s": 0.15},
+     "methods": ["get", "add", "query"]},
+    {"name": "web_search", "kind": "web_search", "instances": 1,
+     "directives": {"max_instances": 2},
+     "profile": {"base_s": 0.5},
+     "methods": ["search"]},
+    {"name": "test_harness", "kind": "test_harness", "instances": 2,
+     "directives": {"min_instances": 1, "max_instances": 4},
+     "profile": {"base_s": 0.6},
+     "failure_rate": 0.35,
+     "methods": ["unit_test", "integration_test"]}
+  ],
+  "policies": ["load_balance", "hol_migration", "resource_realloc"]
+}"#;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_configs_parse_and_validate() {
+        for k in [WorkflowKind::Financial, WorkflowKind::Router, WorkflowKind::Swe] {
+            let cfg = k.config();
+            assert!(!cfg.agents.is_empty(), "{}", k.name());
+            assert!(cfg.policies.len() >= 2, "{} needs its default policies", k.name());
+        }
+    }
+
+    #[test]
+    fn financial_analyst_uses_managed_state_not_batchable() {
+        let cfg = WorkflowKind::Financial.config();
+        let analyst = cfg.agent("analyst").unwrap();
+        assert!(analyst.directives.managed_state);
+        assert!(!analyst.directives.batchable, "§5: incompatible with managed state");
+    }
+
+    #[test]
+    fn swe_test_harness_fails_often_enough_to_recurse() {
+        let cfg = WorkflowKind::Swe.config();
+        assert!(cfg.agent("test_harness").unwrap().failure_rate > 0.2);
+    }
+}

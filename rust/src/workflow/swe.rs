@@ -1,0 +1,185 @@
+//! Software-engineering workflow (paper Fig. 1 / Fig. 4, §6, Fig. 9c).
+//!
+//! The Fig. 4 driver, faithfully: a planner decomposes the request into
+//! subtasks; each subtask goes to a developer agent (documentation lookup
+//! feeding the implementation), whose output runs through the test
+//! harness; failed subtasks are *relaunched by the driver* — the
+//! fine-grained retry loop over `future.available()` / non-blocking value
+//! probes that makes the workflow recursive and load non-deterministic.
+
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::futures::{FutureHandle, Value};
+use crate::ids::FutureId;
+use crate::json;
+use crate::workflow::Env;
+
+const MAX_RETRIES: u32 = 3;
+
+struct SubtaskRun {
+    test: FutureHandle,
+    code_future: FutureId,
+    attempt: u32,
+}
+
+/// One coding request through plan -> implement -> test -> (retry).
+pub fn run(env: &Env, input: &Value, timeout: Duration) -> Result<Value> {
+    let task = input.get("task").as_str().unwrap_or("fix the bug");
+
+    // #1 — planner decomposes the request (Fig. 4 lines 9-12: we block on
+    // the plan because the subtask count is data-dependent).
+    let plan = env
+        .ctx
+        .agent("planner")
+        .call("plan", json!({"prompt": task, "max_new_tokens": 48}));
+    let plan_out = plan.value(timeout)?;
+    let plan_tokens = plan_out.get("generated_tokens").as_u64().unwrap_or(8);
+    let n_subtasks = 2 + (plan_tokens % 3) as usize; // 2-4, model-driven
+
+    // #2 — launch every subtask in parallel (non-blocking).
+    let deeper = env.ctx.deeper();
+    let launch = |attempt: u32| -> Vec<SubtaskRun> {
+        (0..n_subtasks)
+            .map(|i| {
+                let docs = deeper.agent("documentation").call(
+                    "get",
+                    json!({"query": format!("{task} (part {i})"), "k": 2}),
+                );
+                let code = deeper.agent("developer").call_with(
+                    "implement",
+                    json!({
+                        "prompt": format!("{task} — subtask {i}"),
+                        "max_new_tokens": 160,
+                    }),
+                    &[plan.id(), docs.id()],
+                    attempt,
+                );
+                let test = deeper.agent("test_harness").call_with(
+                    "unit_test",
+                    json!({"code": format!("subtask-{i}"), "attempt": attempt}),
+                    &[code.id()],
+                    attempt,
+                );
+                SubtaskRun { test, code_future: code.id(), attempt }
+            })
+            .collect()
+    };
+
+    let mut runs = launch(0);
+    let mut done = vec![false; n_subtasks];
+    let mut passed_codes: Vec<FutureId> = vec![FutureId(0); n_subtasks];
+    let mut total_attempts = n_subtasks as u32;
+    let deadline = std::time::Instant::now() + timeout;
+
+    // #3 — the Fig. 4 retry loop: poll non-blocking, relaunch failures.
+    while done.iter().any(|d| !d) {
+        if std::time::Instant::now() >= deadline {
+            return Err(Error::msg(format!("swe request timed out ({task})")));
+        }
+        let mut progressed = false;
+        for i in 0..n_subtasks {
+            if done[i] {
+                continue;
+            }
+            let Some(result) = runs[i].test.try_value() else { continue };
+            progressed = true;
+            let passed = match result {
+                Ok(v) => v.get("result").as_str() == Some("Pass"),
+                Err(_) => false, // system error: driver retries (§5)
+            };
+            if passed {
+                done[i] = true;
+                passed_codes[i] = runs[i].code_future;
+            } else {
+                let attempt = runs[i].attempt + 1;
+                if attempt > MAX_RETRIES {
+                    return Err(Error::msg(format!(
+                        "failed to implement `{task}` subtask {i} after {MAX_RETRIES} retries"
+                    )));
+                }
+                // relaunch just this subtask (re-enters the graph: the LPT
+                // policy's signal).
+                let docs = deeper.agent("documentation").call(
+                    "get",
+                    json!({"query": format!("{task} (part {i}, retry)"), "k": 2}),
+                );
+                let code = deeper.agent("developer").call_with(
+                    "implement",
+                    json!({
+                        "prompt": format!("{task} — subtask {i} retry {attempt}"),
+                        "max_new_tokens": 160,
+                    }),
+                    &[docs.id()],
+                    attempt,
+                );
+                let test = deeper.agent("test_harness").call_with(
+                    "unit_test",
+                    json!({"code": format!("subtask-{i}"), "attempt": attempt}),
+                    &[code.id()],
+                    attempt,
+                );
+                runs[i] = SubtaskRun { test, code_future: code.id(), attempt };
+                total_attempts += 1;
+            }
+        }
+        if !progressed {
+            std::thread::sleep(Duration::from_micros(300));
+        }
+    }
+
+    // #4 — merge.
+    Ok(json!({
+        "task": task,
+        "subtasks": n_subtasks,
+        "attempts": total_attempts,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::Deployment;
+    use crate::workflow::WorkflowKind;
+
+    #[test]
+    fn completes_with_retries() {
+        let mut cfg = WorkflowKind::Swe.config();
+        cfg.time_scale = 0.0005;
+        let d = Deployment::launch(cfg).unwrap();
+        let env = Env::new(&d, d.new_session());
+        let out = run(
+            &env,
+            &json!({"task": "Enable OAuth login for the website"}),
+            Duration::from_secs(30),
+        )
+        .unwrap();
+        let subtasks = out.get("subtasks").as_u64().unwrap();
+        let attempts = out.get("attempts").as_u64().unwrap();
+        assert!((2..=4).contains(&subtasks));
+        assert!(attempts >= subtasks, "attempts {attempts} < subtasks {subtasks}");
+        d.shutdown();
+    }
+
+    #[test]
+    fn retries_recorded_in_graph_metadata() {
+        let mut cfg = WorkflowKind::Swe.config();
+        cfg.time_scale = 0.0005;
+        cfg.agents
+            .iter_mut()
+            .find(|a| a.name == "test_harness")
+            .unwrap()
+            .failure_rate = 0.9; // force retries
+        let d = Deployment::launch(cfg).unwrap();
+        let env = Env::new(&d, d.new_session());
+        // may exhaust retries; both outcomes legal, but the future table
+        // must contain retried futures either way
+        let _ = run(&env, &json!({"task": "t"}), Duration::from_secs(30));
+        let mut max_retry = 0;
+        d.table().for_each(|c| {
+            max_retry = max_retry.max(c.meta().retry_count);
+        });
+        assert!(max_retry >= 1, "no retried futures recorded");
+        d.shutdown();
+    }
+}

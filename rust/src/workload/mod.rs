@@ -1,0 +1,181 @@
+//! Workload generation: arrival processes + synthetic corpora (paper §6).
+//!
+//! Substitutions (DESIGN.md §3): FinQA -> a financial-question generator
+//! with matched length spread; Azure LLM traces -> a two-class trace with
+//! the >90% branch imbalance §6.1 reports; SWE-bench -> coding-task
+//! prompts with configurable failure/retry behaviour (failures come from
+//! the test-harness tool, not the corpus).
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Open-loop Poisson arrival process: exponential inter-arrival gaps at
+/// `rate` requests/second (wall clock).
+pub struct Arrivals {
+    rng: Rng,
+    rate: f64,
+}
+
+impl Arrivals {
+    pub fn new(rate: f64, seed: u64) -> Self {
+        assert!(rate > 0.0);
+        Arrivals { rng: Rng::new(seed), rate }
+    }
+
+    /// Next inter-arrival gap.
+    pub fn next_gap(&mut self) -> Duration {
+        Duration::from_secs_f64(self.rng.exp(self.rate))
+    }
+
+    /// All arrival offsets within `duration`.
+    pub fn schedule(&mut self, duration: Duration) -> Vec<Duration> {
+        let mut out = Vec::new();
+        let mut t = Duration::ZERO;
+        loop {
+            t += self.next_gap();
+            if t >= duration {
+                return out;
+            }
+            out.push(t);
+        }
+    }
+}
+
+/// Two-class trace with time-shifting imbalance, following the Azure agent
+/// traces' shape (§6.1: "imbalance can exceed 90%"). Phase 1 is chat-heavy,
+/// phase 2 flips toward coding — the router workflow's stress case.
+pub fn azure_like_class(progress: f64, rng: &mut Rng) -> &'static str {
+    let p_coder = if progress < 0.5 { 0.05 } else { 0.75 };
+    if rng.bool_with(p_coder) {
+        "coder"
+    } else {
+        "chat"
+    }
+}
+
+/// FinQA-flavoured financial questions (drives the stateful analyst
+/// workflow; lengths spread like short analyst queries).
+pub fn finqa_question(rng: &mut Rng) -> String {
+    const SUBJECTS: &[&str] = &[
+        "net interest margin", "free cash flow", "operating leverage",
+        "bond ladder duration", "dividend payout ratio", "EBITDA growth",
+        "working capital turns", "treasury yield spread", "capex intensity",
+    ];
+    const FRAMES: &[&str] = &[
+        "How did {s} change year over year, and what drove it?",
+        "Compare {s} against the sector median for the last 3 quarters.",
+        "What is the impact of rate cuts on {s} for this portfolio?",
+        "Summarize the risk to {s} if revenue declines 10%.",
+        "Given the 10-K excerpts, compute {s} and explain the trend.",
+    ];
+    let s = rng.choice(SUBJECTS);
+    let mut q = rng.choice(FRAMES).replace("{s}", s);
+    // occasional long, multi-part analyst question (heavy tail)
+    if rng.bool_with(0.2) {
+        q.push_str(" Then reconcile with the cash flow statement and flag any anomalies in footnotes.");
+    }
+    q
+}
+
+/// Follow-up question in an ongoing session (human-in-the-loop step 11).
+pub fn finqa_followup(rng: &mut Rng) -> String {
+    const FOLLOW: &[&str] = &[
+        "Can you break that down by segment?",
+        "What about the previous fiscal year?",
+        "Redo that assuming a 50bp rate hike.",
+        "Which line items are you least confident about?",
+    ];
+    rng.choice(FOLLOW).to_string()
+}
+
+/// SWE-bench-flavoured coding tasks (drives the recursive SWE workflow).
+pub fn swe_task(rng: &mut Rng) -> String {
+    const TASKS: &[&str] = &[
+        "Enable OAuth login for the website",
+        "Fix the race condition in the job scheduler's requeue path",
+        "Add pagination to the /orders REST endpoint",
+        "Migrate the session store from memcached to redis",
+        "Support unicode filenames in the upload handler",
+        "Add exponential backoff to the webhook dispatcher",
+        "Fix the off-by-one in the report date-range filter",
+    ];
+    rng.choice(TASKS).to_string()
+}
+
+/// Chat prompts for the router workflow's conversational branch.
+pub fn chat_prompt(rng: &mut Rng) -> String {
+    const PROMPTS: &[&str] = &[
+        "Explain the difference between threads and processes",
+        "Draft a polite reply declining the meeting",
+        "What are good interview questions for an SRE role?",
+        "Summarize the attached doc in three bullet points",
+    ];
+    rng.choice(PROMPTS).to_string()
+}
+
+/// Seed documents for the documentation vector store (SWE workflow).
+pub fn seed_docs() -> Vec<String> {
+    [
+        "OAuth2 authorization code flow: redirect the user to the provider, exchange the code for tokens, validate the state parameter.",
+        "Session middleware API: session.get(key), session.set(key, value), session.regenerate() on privilege change.",
+        "REST pagination conventions: limit/offset query params, Link headers for next/prev, stable sort keys.",
+        "Redis client: connection pooling, pipelining, SETEX for TTL keys, MULTI/EXEC transactions.",
+        "Webhook retry guidance: exponential backoff with jitter, idempotency keys, dead-letter queues after N attempts.",
+        "Unicode handling: normalize NFC on input, percent-encode filenames in content-disposition headers.",
+        "Date-range filters: half-open intervals [start, end), timezone-normalize to UTC before comparison.",
+        "Job scheduler requeue semantics: visibility timeout, at-least-once delivery, fencing tokens against double-run.",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_match_rate() {
+        let mut a = Arrivals::new(100.0, 1);
+        let sched = a.schedule(Duration::from_secs(10));
+        // ~1000 arrivals expected; allow wide tolerance
+        assert!((800..1200).contains(&sched.len()), "{}", sched.len());
+        // monotonic
+        for w in sched.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn azure_imbalance_flips() {
+        let mut rng = Rng::new(2);
+        let early: usize = (0..1000)
+            .filter(|_| azure_like_class(0.2, &mut rng) == "coder")
+            .count();
+        let late: usize = (0..1000)
+            .filter(|_| azure_like_class(0.8, &mut rng) == "coder")
+            .count();
+        assert!(early < 120, "phase 1 must be chat-heavy: {early}");
+        assert!(late > 600, "phase 2 must be coder-heavy: {late}");
+    }
+
+    #[test]
+    fn corpora_nonempty_and_vary() {
+        let mut rng = Rng::new(3);
+        let qs: std::collections::HashSet<String> =
+            (0..50).map(|_| finqa_question(&mut rng)).collect();
+        assert!(qs.len() > 10, "questions should vary");
+        assert!(!swe_task(&mut rng).is_empty());
+        assert!(!chat_prompt(&mut rng).is_empty());
+        assert!(!finqa_followup(&mut rng).is_empty());
+        assert!(seed_docs().len() >= 8);
+    }
+
+    #[test]
+    fn arrivals_deterministic_by_seed() {
+        let s1 = Arrivals::new(10.0, 7).schedule(Duration::from_secs(5));
+        let s2 = Arrivals::new(10.0, 7).schedule(Duration::from_secs(5));
+        assert_eq!(s1, s2);
+    }
+}

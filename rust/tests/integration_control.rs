@@ -1,0 +1,204 @@
+//! Integration tests over the full deployment: migration (Fig. 8),
+//! kill/provision, baseline behaviours, failure injection.
+
+use std::time::Duration;
+
+use nalar::baselines::SystemUnderTest;
+use nalar::config::DeploymentConfig;
+use nalar::coordinator::PolicyCmd;
+use nalar::ids::{InstanceId, SessionId};
+use nalar::json;
+use nalar::server::Deployment;
+use nalar::workflow::{Env, WorkflowKind};
+
+fn fast(cfg: &mut DeploymentConfig) {
+    cfg.time_scale = 0.0005;
+    cfg.control.global_period_ms = 10;
+}
+
+#[test]
+fn migration_moves_queued_session_work() {
+    // one slow agent with 2 instances; flood instance 0 via sticky pins,
+    // then migrate a session and verify it completes on instance 1.
+    let mut cfg = DeploymentConfig::from_json(
+        r#"{"agents": [{"name": "a", "kind": "llm", "instances": 2,
+             "directives": {"managed_state": true, "max_instances": 2},
+             "profile": {"base_s": 0.2, "mean_output_tokens": 200}, "methods": ["m"]}],
+            "policies": []}"#,
+    )
+    .unwrap();
+    fast(&mut cfg);
+    let d = Deployment::launch(cfg).unwrap();
+
+    // Pin sessions 1..4 to a:0 and enqueue work there.
+    let i0 = InstanceId::new("a", 0);
+    let i1 = InstanceId::new("a", 1);
+    let mut futs = Vec::new();
+    for s in 1..=4u64 {
+        d.router().pin(SessionId(s), "a", i0.clone());
+        let ctx = d.ctx(SessionId(s));
+        futs.push(ctx.agent("a").call("m", json!({"prompt": "work", "max_new_tokens": 64})));
+    }
+    // Migrate session 4 (queued behind the others) to a:1.
+    std::thread::sleep(Duration::from_millis(20));
+    d.global().apply(vec![PolicyCmd::Migrate {
+        session: SessionId(4),
+        from: i0.clone(),
+        to: i1.clone(),
+    }]);
+
+    for f in &futs {
+        f.value(Duration::from_secs(20)).unwrap();
+    }
+    // Fig. 8 step 4: the session's sticky route now points at the target.
+    assert_eq!(d.router().sticky_of(SessionId(4), "a"), Some(i1.clone()));
+    let view = d.global().collect();
+    let m1 = view.instances.iter().find(|i| i.id == i1).unwrap();
+    assert!(m1.m.migrated_in >= 1, "target never received the migration");
+    d.shutdown();
+}
+
+#[test]
+fn kill_and_provision_lifecycle() {
+    let mut cfg = DeploymentConfig::from_json(
+        r#"{"agents": [{"name": "a", "kind": "web_search", "instances": 2,
+             "directives": {"min_instances": 1, "max_instances": 3},
+             "profile": {"base_s": 0.0}, "methods": ["search"]}],
+            "policies": []}"#,
+    )
+    .unwrap();
+    fast(&mut cfg);
+    let d = Deployment::launch(cfg).unwrap();
+    assert_eq!(d.bus().instances_of("a").len(), 2);
+
+    // kill a:1
+    d.global().apply(vec![PolicyCmd::Kill(InstanceId::new("a", 1))]);
+    let deadline = std::time::Instant::now() + Duration::from_secs(2);
+    while d.bus().instances_of("a").len() != 1 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(d.bus().instances_of("a").len(), 1);
+
+    // provision a new one (gets a fresh index)
+    d.global().apply(vec![PolicyCmd::Provision { agent: "a".into() }]);
+    let deadline = std::time::Instant::now() + Duration::from_secs(2);
+    while d.bus().instances_of("a").len() != 2 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(d.bus().instances_of("a").len(), 2);
+
+    // calls still served after the churn
+    let ctx = d.ctx(d.new_session());
+    let f = ctx.agent("a").call("search", json!({"query": "q"}));
+    assert!(f.value(Duration::from_secs(5)).is_ok());
+    d.shutdown();
+}
+
+#[test]
+fn provision_respects_max_instances() {
+    let mut cfg = DeploymentConfig::from_json(
+        r#"{"agents": [{"name": "a", "kind": "web_search", "instances": 1,
+             "directives": {"max_instances": 1}, "profile": {"base_s": 0.0},
+             "methods": ["search"]}], "policies": []}"#,
+    )
+    .unwrap();
+    fast(&mut cfg);
+    let d = Deployment::launch(cfg).unwrap();
+    assert!(d.spawn_instance("a").is_err(), "must refuse beyond max_instances");
+    assert!(d.spawn_instance("ghost").is_err());
+    d.shutdown();
+}
+
+#[test]
+fn killed_instance_fails_pending_futures_reported_to_driver() {
+    let mut cfg = DeploymentConfig::from_json(
+        r#"{"agents": [{"name": "a", "kind": "llm", "instances": 1,
+             "directives": {"max_instances": 1},
+             "profile": {"base_s": 1.0, "mean_output_tokens": 500}, "methods": ["m"]}],
+            "policies": []}"#,
+    )
+    .unwrap();
+    fast(&mut cfg);
+    let d = Deployment::launch(cfg).unwrap();
+    let ctx = d.ctx(d.new_session());
+    // enqueue a few; kill the instance while they're pending
+    let futs: Vec<_> = (0..3)
+        .map(|_| ctx.agent("a").call("m", json!({"prompt": "x", "max_new_tokens": 400})))
+        .collect();
+    std::thread::sleep(Duration::from_millis(10));
+    d.global().apply(vec![PolicyCmd::Kill(InstanceId::new("a", 0))]);
+    let mut failures = 0;
+    for f in &futs {
+        if f.value(Duration::from_secs(3)).is_err() {
+            failures += 1;
+        }
+    }
+    assert!(failures >= 1, "paper §5: failures must surface to the driver");
+    d.shutdown();
+}
+
+#[test]
+fn baselines_stay_sticky_nalar_does_not() {
+    for (system, expect_sticky) in [
+        (SystemUnderTest::CrewLike, true),
+        (SystemUnderTest::Nalar, false),
+    ] {
+        let mut cfg = DeploymentConfig::from_json(
+            r#"{"agents": [{"name": "a", "kind": "web_search", "instances": 2,
+                 "directives": {"max_instances": 2}, "profile": {"base_s": 0.0},
+                 "methods": ["search"]}], "policies": []}"#,
+        )
+        .unwrap();
+        fast(&mut cfg);
+        cfg.policies.clear();
+        let d = Deployment::launch_as(cfg, system).unwrap();
+        let session = d.new_session();
+        for _ in 0..3 {
+            let ctx = d.ctx(session);
+            let f = ctx.agent("a").call("search", json!({"query": "q"}));
+            f.value(Duration::from_secs(5)).unwrap();
+        }
+        let pinned = d.router().sticky_of(session, "a").is_some();
+        assert_eq!(pinned, expect_sticky, "{}", system.name());
+        d.shutdown();
+    }
+}
+
+#[test]
+fn resource_realloc_provisions_hot_agent_under_imbalance() {
+    // chat idle with 2 instances, coder overloaded with 1: the policy
+    // should kill a chat instance and provision a coder.
+    let mut cfg = DeploymentConfig::from_json(
+        r#"{"control": {"global_period_ms": 10},
+            "agents": [
+              {"name": "chat", "kind": "llm", "instances": 2,
+               "directives": {"min_instances": 1, "max_instances": 3},
+               "profile": {"base_s": 0.05, "mean_output_tokens": 20}, "methods": ["m"]},
+              {"name": "coder", "kind": "llm", "instances": 1,
+               "directives": {"min_instances": 1, "max_instances": 3},
+               "profile": {"base_s": 0.3, "mean_output_tokens": 300}, "methods": ["m"]}],
+            "policies": ["resource_realloc"]}"#,
+    )
+    .unwrap();
+    cfg.time_scale = 0.002;
+    let d = Deployment::launch(cfg).unwrap();
+    // flood coder
+    let ctx = d.ctx(d.new_session());
+    let futs: Vec<_> = (0..24)
+        .map(|_| ctx.agent("coder").call("m", json!({"prompt": "x", "max_new_tokens": 300})))
+        .collect();
+    let deadline = std::time::Instant::now() + Duration::from_secs(8);
+    let mut reallocated = false;
+    while std::time::Instant::now() < deadline {
+        if d.bus().instances_of("coder").len() > 1 {
+            reallocated = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(reallocated, "resource_realloc never provisioned a coder instance");
+    for f in futs {
+        let _ = f.value(Duration::from_secs(20));
+    }
+    d.shutdown();
+}

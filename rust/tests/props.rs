@@ -1,0 +1,154 @@
+//! Property-based tests (testkit) on coordinator invariants:
+//! routing, scheduling order, state management, JSON round-trips.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use nalar::coordinator::{LoadMap, Router};
+use nalar::futures::{FutureCell, FutureMeta};
+use nalar::ids::*;
+use nalar::nodestore::NodeStore;
+use nalar::state::{migrate_session_state, ManagedList};
+use nalar::testkit::{check, check_n};
+use nalar::transport::Bus;
+use nalar::util::json::{self, Value};
+use nalar::util::rng::Rng;
+
+fn rand_value(r: &mut Rng, depth: usize) -> Value {
+    match r.below(if depth > 2 { 4 } else { 6 }) {
+        0 => Value::Null,
+        1 => Value::Bool(r.bool_with(0.5)),
+        2 => Value::Num((r.next_u64() % 1_000_000) as f64 / 8.0),
+        3 => Value::Str(
+            (0..r.below(12)).map(|_| (b'a' + r.below(26) as u8) as char).collect(),
+        ),
+        4 => Value::Arr((0..r.below(4)).map(|_| rand_value(r, depth + 1)).collect()),
+        _ => {
+            let mut m = json::Map::new();
+            for _ in 0..r.below(4) {
+                let k: String =
+                    (0..1 + r.below(6)).map(|_| (b'a' + r.below(26) as u8) as char).collect();
+                m.insert(k, rand_value(r, depth + 1));
+            }
+            Value::Obj(m)
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    check("json parse(to_string(v)) == v", |r, _s| rand_value(r, 0), |v| {
+        json::parse(&v.to_string()).map(|w| w == *v).unwrap_or(false)
+            && json::parse(&v.pretty()).map(|w| w == *v).unwrap_or(false)
+    });
+}
+
+#[test]
+fn prop_router_only_returns_live_instances() {
+    check_n("router returns registered instance", 64, |r, s| {
+        let n = 1 + (s.0 % 6) as u32;
+        let kill = r.below(n as u64) as u32;
+        let sessions: Vec<u64> = (0..8).map(|_| r.below(32)).collect();
+        (n, kill, sessions)
+    }, |(n, kill, sessions)| {
+        let bus = Bus::new(Duration::ZERO);
+        let loads = LoadMap::new();
+        let mut rxs = Vec::new();
+        for i in 0..*n {
+            let id = InstanceId::new("a", i);
+            rxs.push(bus.register(id.clone(), NodeId(i % 2)));
+            loads.register(id);
+        }
+        let router = Router::new(bus.clone(), loads, 5);
+        if *n > 1 {
+            bus.deregister(&InstanceId::new("a", *kill));
+        }
+        sessions.iter().all(|s| match router.route(SessionId(*s), "a", s % 2 == 0) {
+            Ok(inst) => bus.is_registered(&inst),
+            Err(_) => *n == 1, // only legal if we killed the single instance
+        })
+    });
+}
+
+#[test]
+fn prop_sticky_sessions_stable_under_load_changes() {
+    check_n("sticky pin survives arbitrary load", 48, |r, _| {
+        let loads: Vec<(u32, usize)> = (0..4).map(|i| (i, r.below(100) as usize)).collect();
+        let session = r.below(1000);
+        (loads, session)
+    }, |(load_vec, session)| {
+        let bus = Bus::new(Duration::ZERO);
+        let loads = LoadMap::new();
+        let mut rxs = Vec::new();
+        for i in 0..4u32 {
+            let id = InstanceId::new("a", i);
+            rxs.push(bus.register(id.clone(), NodeId(0)));
+            loads.register(id);
+        }
+        let router = Router::new(bus, loads.clone(), 5);
+        let first = router.route(SessionId(*session), "a", true).unwrap();
+        for (i, l) in load_vec {
+            loads
+                .get(&InstanceId::new("a", *i))
+                .unwrap()
+                .queued
+                .store(*l, std::sync::atomic::Ordering::Relaxed);
+        }
+        router.route(SessionId(*session), "a", true).unwrap() == first
+    });
+}
+
+#[test]
+fn prop_future_value_immutable_after_first_resolution() {
+    check_n("first resolve wins", 64, |r, _| {
+        (r.below(1000), r.below(1000), r.bool_with(0.5))
+    }, |(a, b, fail_second)| {
+        let cell = FutureCell::new(FutureMeta::new(
+            FutureId(1),
+            SessionId(0),
+            RequestId(0),
+            AgentType::new("a"),
+            "m",
+            Location::Global,
+        ));
+        cell.resolve(Value::Num(*a as f64), 0);
+        if *fail_second {
+            cell.fail("late");
+        } else {
+            // second resolve is a programming error upstream; in release
+            // builds it must be ignored (debug builds assert).
+            if !cfg!(debug_assertions) {
+                cell.resolve(Value::Num(*b as f64), 0);
+            }
+        }
+        cell.try_value().unwrap().unwrap().as_u64() == Some(*a)
+    });
+}
+
+#[test]
+fn prop_managed_list_migration_preserves_content() {
+    check_n("state migration is content-preserving", 48, |r, s| {
+        let items: Vec<u64> = (0..s.0 % 20).map(|_| r.next_u64() % 1000).collect();
+        let session = r.below(64);
+        (items, session)
+    }, |(items, session)| {
+        let src = Arc::new(NodeStore::new());
+        let dst = Arc::new(NodeStore::new());
+        let l = ManagedList::bind(src.clone(), SessionId(*session), "xs");
+        for x in items {
+            l.push(Value::Num(*x as f64));
+        }
+        migrate_session_state(&src, &dst, SessionId(*session));
+        let l2 = ManagedList::bind(dst, SessionId(*session), "xs");
+        let got: Vec<u64> = l2.snapshot().iter().filter_map(|v| v.as_u64()).collect();
+        got == *items
+    });
+}
+
+#[test]
+fn prop_rng_zipf_and_below_in_range() {
+    check_n("samplers stay in range", 64, |r, _| (r.next_u64(), 1 + r.below(40) as usize), |(seed, n)| {
+        let mut r = Rng::new(*seed);
+        (0..50).all(|_| r.zipf(*n, 1.2) < *n && (r.below(*n as u64) as usize) < *n)
+    });
+}

@@ -1,0 +1,122 @@
+//! End-to-end numerics of the AOT path: the HLO artifacts executed through
+//! PJRT from Rust must behave like a real LM runtime — deterministic
+//! logits, prefill/decode consistency, working embeddings.
+//!
+//! (Cross-checking exact values against jax happens in the python suite;
+//! here we verify the runtime-visible *invariants* of the same artifacts.)
+
+use nalar::engine::tokenizer::{argmax, Tokenizer};
+use nalar::runtime::{KvBatch, PjrtModel};
+
+fn artifacts() -> Option<PjrtModel> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(PjrtModel::load(dir).expect("artifacts load"))
+}
+
+#[test]
+fn prefill_decode_consistency() {
+    let Some(model) = artifacts() else { return };
+    let dims = model.dims();
+    let tok = Tokenizer::new(&dims);
+
+    // Prefill a prompt, then: decoding the argmax token must equal
+    // prefilling the prompt+token (same invariant as python/tests).
+    let prompt = tok.encode("the quick brown fox", 16);
+    let out = model.prefill(&[prompt.clone()]).unwrap();
+    assert_eq!(out.logits[0].len(), dims.vocab);
+    let next = argmax(&out.logits[0]);
+
+    // decode path
+    let seq = out.kv.gather(&dims, 0, prompt.len());
+    let mut kvb = KvBatch::zeros(&dims, 1);
+    kvb.scatter(&dims, 0, &seq);
+    let dec = model
+        .decode(&[next], &[prompt.len() as i32], kvb)
+        .unwrap();
+
+    // extended prefill path
+    let mut ext = prompt.clone();
+    ext.push(next);
+    let out2 = model.prefill(&[ext]).unwrap();
+
+    let a = &dec.logits[0];
+    let b = &out2.logits[0];
+    let mut max_diff = 0f32;
+    for (x, y) in a.iter().zip(b.iter()) {
+        max_diff = max_diff.max((x - y).abs());
+    }
+    assert!(
+        max_diff < 2e-3,
+        "decode vs extended-prefill logits diverge: {max_diff}"
+    );
+}
+
+#[test]
+fn prefill_deterministic_and_batch_consistent() {
+    let Some(model) = artifacts() else { return };
+    let dims = model.dims();
+    let tok = Tokenizer::new(&dims);
+    let p1 = tok.encode("hello world", 8);
+    let p2 = tok.encode("pay down the bond ladder", 8);
+
+    let single = model.prefill(&[p1.clone()]).unwrap();
+    let again = model.prefill(&[p1.clone()]).unwrap();
+    assert_eq!(single.logits[0], again.logits[0], "prefill must be deterministic");
+
+    // batch-of-2 must match per-sequence results
+    let batched = model.prefill(&[p1.clone(), p2.clone()]).unwrap();
+    let solo2 = model.prefill(&[p2]).unwrap();
+    let diff = |a: &[f32], b: &[f32]| {
+        a.iter()
+            .zip(b.iter())
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max)
+    };
+    assert!(diff(&batched.logits[0], &single.logits[0]) < 1e-3);
+    assert!(diff(&batched.logits[1], &solo2.logits[0]) < 1e-3);
+}
+
+#[test]
+fn multi_step_generation_terminates() {
+    let Some(model) = artifacts() else { return };
+    let dims = model.dims();
+    let tok = Tokenizer::new(&dims);
+    let prompt = tok.encode("generate", 32);
+    let out = model.prefill(&[prompt.clone()]).unwrap();
+    let mut kv = out.kv;
+    let mut t = argmax(&out.logits[0]);
+    let mut pos = prompt.len() as i32;
+    for _ in 0..8 {
+        let dec = model.decode(&[t], &[pos], kv).unwrap();
+        t = argmax(&dec.logits[0]);
+        kv = dec.kv;
+        pos += 1;
+        assert!(dec.logits[0].iter().all(|x| x.is_finite()));
+    }
+}
+
+#[test]
+fn embeddings_unit_norm_and_discriminative() {
+    let Some(model) = artifacts() else { return };
+    let dims = model.dims();
+    let tok = Tokenizer::new(&dims);
+    let a = tok.encode("market analysis of bond yields", 1);
+    let b = tok.encode("market analysis of bond yields", 1);
+    let c = tok.encode("zzzzzz totally unrelated !!!", 1);
+    let embs = model.embed(&[a, b, c]).unwrap();
+    assert_eq!(embs.len(), 3);
+    for e in &embs {
+        assert_eq!(e.len(), dims.d_model);
+        let n: f32 = e.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((n - 1.0).abs() < 1e-3, "norm {n}");
+    }
+    let dot = |x: &[f32], y: &[f32]| -> f32 { x.iter().zip(y).map(|(a, b)| a * b).sum() };
+    let same = dot(&embs[0], &embs[1]);
+    let diffr = dot(&embs[0], &embs[2]);
+    assert!(same > 0.999, "identical texts must embed identically ({same})");
+    assert!(same > diffr, "identical texts must be closer than unrelated");
+}
