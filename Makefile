@@ -1,0 +1,38 @@
+# Local entrypoints — identical to what CI runs (.github/workflows/ci.yml).
+
+.PHONY: build test fmt clippy lint bench bench-quick artifacts clean
+
+build:
+	cargo build --release --all-targets
+
+test:
+	cargo test -q
+
+fmt:
+	cargo fmt --all -- --check
+
+clippy:
+	cargo clippy --all-targets -- -D warnings
+
+lint: fmt clippy
+
+# Full paper reproduction: writes BENCH_fig9.json, BENCH_fig10.json,
+# BENCH_table4.json, BENCH_sec62.json at the repo root (minutes).
+bench:
+	cargo run --release -- bench
+
+# CI-smoke profile (seconds) + schema validation — what bench-smoke runs.
+bench-quick:
+	cargo run --release -- bench --quick
+	cargo run --release -- bench --check-only
+
+# OPTIONAL / offline-skippable: lowers the L2 JAX transformer (with the L1
+# Pallas attention kernels) to HLO text + a weights blob for the PJRT
+# executor. Requires python3 + jax; nothing in the build, tests or benches
+# depends on it — the `sim` executor serves every benchmark, and
+# `tests/runtime_numerics.rs` skips cleanly when artifacts are missing.
+artifacts:
+	cd python/compile && python3 aot.py --out-dir ../../rust/artifacts
+
+clean:
+	cargo clean

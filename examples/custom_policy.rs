@@ -42,7 +42,7 @@ impl Policy for VipSession {
     // ---------------------------------------------------------------------
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> nalar::Result<()> {
     let mut cfg = WorkflowKind::Financial.config();
     cfg.time_scale = 0.002;
     cfg.policies.clear(); // only the custom policy acts

@@ -43,10 +43,10 @@ const CONFIG: &str = r#"{
   "policies": ["load_balance", "hol_migration"]
 }"#;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> nalar::Result<()> {
     println!("== NALAR quickstart: PJRT-backed financial-analyst workflow ==");
     if !std::path::Path::new("artifacts/manifest.json").exists() {
-        anyhow::bail!("artifacts missing — run `make artifacts` first");
+        return Err(nalar::Error::msg("artifacts missing — run `make artifacts` first"));
     }
 
     let cfg = DeploymentConfig::from_json(CONFIG)?;

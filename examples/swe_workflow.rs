@@ -13,7 +13,7 @@ use nalar::server::Deployment;
 use nalar::util::cli::Args;
 use nalar::workflow::{run_open_loop, RunConfig, WorkflowKind};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> nalar::Result<()> {
     let args = Args::from_env();
     let rps = args.f64_or("rps", 6.0);
     let secs = args.u64_or("secs", 6);

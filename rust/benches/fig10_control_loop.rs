@@ -1,106 +1,20 @@
 //! Figure 10 reproduction: global control-loop latency vs live futures.
 //!
 //! Emulates the paper's setup — 64 nodes / 128 agents and 32 nodes / 64
-//! agents — then grows the future count 1K -> 131K and measures one
-//! global-controller iteration (collect + SRTF-style policy + apply),
-//! reporting the breakdown. Paper: 464 ms at 131K futures on 64 nodes,
-//! >65% in policy logic, and node-count-independence.
+//! agents — then grows the future count 1K -> 131K and measures global
+//! controller iterations (collect + SRTF-style policy + apply), reporting
+//! the breakdown plus p50/p95/p99 per point. Paper: 464 ms at 131K futures
+//! on 64 nodes, >65% in policy logic, and node-count-independence.
+//!
+//! Thin wrapper over [`nalar::bench::fig10`] — the same code path as
+//! `nalar bench --only fig10`; writes `BENCH_fig10.json`.
 
-use std::sync::Arc;
-use std::time::Duration;
-
-use nalar::coordinator::{GlobalController, InstanceMetrics, LoadMap, Router};
-use nalar::coordinator::policy::make_policy;
-use nalar::futures::{FutureCell, FutureMeta, FutureTable};
-use nalar::ids::*;
-use nalar::nodestore::{keys, StoreDirectory};
-use nalar::transport::Bus;
-use nalar::util::bench::Table;
-
-fn setup(nodes: u32, agents: u32, futures: usize) -> Arc<GlobalController> {
-    let node_ids: Vec<NodeId> = (0..nodes).map(NodeId).collect();
-    let bus = Bus::new(Duration::ZERO);
-    let stores = StoreDirectory::new(&node_ids);
-    let loads = LoadMap::new();
-    let table = Arc::new(FutureTable::new());
-    let router = Arc::new(Router::new(bus.clone(), loads.clone(), 1));
-
-    // agents spread over nodes, with telemetry in their node stores
-    for a in 0..agents {
-        let id = InstanceId::new("agent", a);
-        let node = NodeId(a % nodes);
-        let _rx = Box::leak(Box::new(bus.register(id.clone(), node)));
-        loads.register(id.clone());
-        stores.node(node).put(
-            &keys::instance_metrics(&id),
-            InstanceMetrics {
-                agent: "agent".into(),
-                node: node.0,
-                queue_len: (a % 7) as usize,
-                waiting_sessions: vec![(SessionId(a as u64), 50 + a as u64)],
-                oldest_wait_ms: 50 + a as u64,
-                ..Default::default()
-            },
-        );
-    }
-    // live futures
-    for i in 0..futures {
-        let mut meta = FutureMeta::new(
-            FutureId(i as u64),
-            SessionId((i % 1024) as u64),
-            RequestId((i % 4096) as u64),
-            AgentType::new("agent"),
-            "m",
-            Location::Driver(RequestId(0)),
-        );
-        meta.stage = (i % 5) as u32;
-        table.insert(FutureCell::new(meta));
-    }
-    GlobalController::new(
-        bus,
-        stores,
-        router,
-        loads,
-        table,
-        vec![make_policy("srtf").unwrap()],
-        Arc::new(|_| None),
-    )
-}
+use std::path::Path;
 
 fn main() {
-    println!("=== Fig 10 — global control loop latency vs #futures ===");
-    let mut table = Table::new(&[
-        "nodes", "agents", "futures", "collect(ms)", "policy(ms)", "apply(ms)", "total(ms)", "policy%",
-    ]);
-    let sweep: &[usize] = &[1024, 4096, 16384, 65536, 131072];
-    for (nodes, agents) in [(32u32, 64u32), (64, 128)] {
-        for &futures in sweep {
-            let g = setup(nodes, agents, futures);
-            // warm + take the median of 3 iterations
-            g.tick();
-            let mut totals = Vec::new();
-            let mut last = None;
-            for _ in 0..3 {
-                let t = g.tick();
-                totals.push(t.total());
-                last = Some(t);
-            }
-            totals.sort();
-            let t = last.unwrap();
-            let total = totals[1];
-            let policy_pct = 100.0 * t.policy.as_secs_f64() / t.total().as_secs_f64().max(1e-12);
-            table.row(&[
-                nodes.to_string(),
-                agents.to_string(),
-                futures.to_string(),
-                format!("{:.1}", t.collect.as_secs_f64() * 1e3),
-                format!("{:.1}", t.policy.as_secs_f64() * 1e3),
-                format!("{:.1}", t.apply.as_secs_f64() * 1e3),
-                format!("{:.1}", total.as_secs_f64() * 1e3),
-                format!("{:.0}%", policy_pct),
-            ]);
-        }
-    }
-    table.print();
-    println!("\npaper reference: 64 nodes/131K futures => 464ms total, >65% policy; collect 76ms@1K -> 151ms@130K");
+    let quick = std::env::var("NALAR_BENCH_QUICK").is_ok();
+    let report = nalar::bench::fig10(quick).expect("fig10 reproduction failed");
+    nalar::bench::validate(&report).expect("fig10 report schema");
+    let path = nalar::bench::write_report(Path::new("."), "fig10", &report).expect("write report");
+    println!("wrote {}", path.display());
 }

@@ -1,71 +1,19 @@
 //! Figure 9 reproduction: end-to-end latency vs request rate, for all
 //! three workflows × {NALAR, Ayo-like, CrewAI-like, AutoGen-like}.
 //!
-//! Prints one row per (workflow, system, rate) with avg/P50/P95/P99 in
-//! paper-equivalent seconds plus failures and load imbalance — the same
-//! cells the paper's bars+whiskers encode.
+//! Thin wrapper over [`nalar::bench::fig9`] — the same code path as
+//! `nalar bench --only fig9`. Prints the per-cell table and writes a
+//! schema-validated `BENCH_fig9.json` in the working directory.
 //!
-//! Rates are paper-RPS *for this testbed's capacity*; the paper's absolute
-//! axis (2-8 / 20-80 RPS on 8xA100) maps to our emulated capacity as
-//! documented in EXPERIMENTS.md. `NALAR_BENCH_FULL=1` runs longer windows.
+//! `NALAR_BENCH_QUICK=1` runs the CI-smoke profile; `NALAR_BENCH_FULL=1`
+//! extends the measurement windows.
 
-use std::time::Duration;
-
-use nalar::baselines::SystemUnderTest;
-use nalar::server::Deployment;
-use nalar::util::bench::Table;
-use nalar::workflow::{run_open_loop, RunConfig, WorkflowKind};
-
-fn full() -> bool {
-    std::env::var("NALAR_BENCH_FULL").is_ok()
-}
+use std::path::Path;
 
 fn main() {
-    let secs = if full() { 10 } else { 4 };
-    // (workflow, wall-RPS grid). time_scale = 0.01 => paper-RPS = wall/100.
-    let plan: [(WorkflowKind, &[f64]); 3] = [
-        (WorkflowKind::Financial, &[40.0, 80.0, 120.0, 160.0]),
-        (WorkflowKind::Router, &[120.0, 240.0, 360.0, 480.0]),
-        (WorkflowKind::Swe, &[20.0, 40.0, 60.0, 80.0]),
-    ];
-
-    for (wf, rates) in plan {
-        println!("\n=== Fig 9{} — {} workflow ===", match wf {
-            WorkflowKind::Financial => 'a',
-            WorkflowKind::Router => 'b',
-            WorkflowKind::Swe => 'c',
-        }, wf.name());
-        let mut table = Table::new(&[
-            "system", "rate", "avg(s)", "p50(s)", "p95(s)", "p99(s)", "ok", "fail", "imbalance",
-        ]);
-        for &rps in rates {
-            for system in SystemUnderTest::all() {
-                let cfg = wf.config();
-                let d = Deployment::launch_as(cfg, system).expect("launch");
-                let rc = RunConfig {
-                    workflow: wf,
-                    rps,
-                    duration: Duration::from_secs(secs),
-                    session_pool: 48,
-                    request_timeout: Duration::from_secs(6),
-                    seed: 0xF19,
-                };
-                let (stats, rec) = run_open_loop(&d, &rc);
-                let paper = rec.summary_scaled(1.0 / stats.time_scale);
-                table.row(&[
-                    system.name().to_string(),
-                    format!("{:.1}", rps * stats.time_scale),
-                    format!("{:.0}", paper.avg),
-                    format!("{:.0}", paper.p50),
-                    format!("{:.0}", paper.p95),
-                    format!("{:.0}", paper.p99),
-                    stats.completed.to_string(),
-                    stats.failed.to_string(),
-                    format!("{:.2}", stats.imbalance),
-                ]);
-                d.shutdown();
-            }
-        }
-        table.print();
-    }
+    let quick = std::env::var("NALAR_BENCH_QUICK").is_ok();
+    let report = nalar::bench::fig9(quick).expect("fig9 reproduction failed");
+    nalar::bench::validate(&report).expect("fig9 report schema");
+    let path = nalar::bench::write_report(Path::new("."), "fig9", &report).expect("write report");
+    println!("wrote {}", path.display());
 }

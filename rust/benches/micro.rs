@@ -2,7 +2,9 @@
 //!
 //! Covers every operation on the request fast path: future create/resolve,
 //! stub call end-to-end, routing, node-store ops, managed state, KV-cache
-//! residency, JSON parse, and the sim-engine step machinery.
+//! residency, JSON parse, and the sim-engine step machinery. Each line
+//! reports mean/p50/p95/p99 via [`nalar::util::bench::Timing`]; the
+//! figure-level reproductions live in `nalar bench` (`nalar::bench`).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -102,7 +104,8 @@ fn main() {
     });
 
     // json
-    let text = r#"{"prompt": "analyze the market", "max_new_tokens": 96, "nested": {"a": [1,2,3]}}"#;
+    let text =
+        r#"{"prompt": "analyze the market", "max_new_tokens": 96, "nested": {"a": [1,2,3]}}"#;
     bench("json: parse call args", 100, budget, || {
         std::hint::black_box(nalar::util::json::parse(text).unwrap());
     });

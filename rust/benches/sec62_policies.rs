@@ -4,107 +4,16 @@
 //!   financial workflow: paper reports avg JCT -2.4%, P95 +3.3%.
 //! * Control makespan — LPT (prioritize re-entrant jobs) vs FCFS on the
 //!   SWE workflow, closed batch: paper reports makespan -5.8%, P95 +2.6%.
+//!
+//! Thin wrapper over [`nalar::bench::sec62`] — the same code path as
+//! `nalar bench --only sec62`; writes `BENCH_sec62.json`.
 
-use std::time::{Duration, Instant};
-
-use nalar::baselines::SystemUnderTest;
-use nalar::json;
-use nalar::server::Deployment;
-use nalar::util::bench::Table;
-use nalar::util::rng::Rng;
-use nalar::workflow::{run_open_loop, run_request, RunConfig, WorkflowKind};
-use nalar::workload;
-
-fn jct_study() {
-    println!("=== §6.2 Minimize JCT — SRTF vs FCFS (financial) ===");
-    let mut table = Table::new(&["policy", "avg JCT(s)", "p95(s)", "ok"]);
-    let mut results = Vec::new();
-    for policy in ["fcfs", "srtf"] {
-        let mut cfg = WorkflowKind::Financial.config();
-        cfg.policies = vec!["load_balance".into(), policy.into()];
-        let d = Deployment::launch_as(cfg, SystemUnderTest::Nalar).unwrap();
-        let rc = RunConfig {
-            workflow: WorkflowKind::Financial,
-            rps: 110.0,
-            duration: Duration::from_secs(5),
-            session_pool: 48,
-            request_timeout: Duration::from_secs(8),
-            seed: 62,
-        };
-        let (stats, rec) = run_open_loop(&d, &rc);
-        let paper = rec.summary_scaled(1.0 / stats.time_scale);
-        table.row(&[
-            policy.to_string(),
-            format!("{:.1}", paper.avg),
-            format!("{:.1}", paper.p95),
-            stats.completed.to_string(),
-        ]);
-        results.push((paper.avg, paper.p95));
-        d.shutdown();
-    }
-    table.print();
-    if results.len() == 2 {
-        println!(
-            "SRTF vs FCFS: avg JCT {:+.1}%  p95 {:+.1}%   (paper: -2.4% / +3.3%)",
-            100.0 * (results[1].0 - results[0].0) / results[0].0,
-            100.0 * (results[1].1 - results[0].1) / results[0].1
-        );
-    }
-}
-
-fn makespan_study() {
-    println!("\n=== §6.2 Control Makespan — LPT vs FCFS (SWE, closed batch) ===");
-    let batch = 36;
-    let mut table = Table::new(&["policy", "makespan(s)", "p95 JCT(s)", "ok"]);
-    let mut results = Vec::new();
-    for policy in ["fcfs", "lpt"] {
-        let mut cfg = WorkflowKind::Swe.config();
-        cfg.policies = vec!["load_balance".into(), policy.into()];
-        let d = Deployment::launch_as(cfg, SystemUnderTest::Nalar).unwrap();
-        let mut rng = Rng::new(62);
-        let t0 = Instant::now();
-        let mut lat = Vec::new();
-        std::thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for _ in 0..batch {
-                let session = d.new_session();
-                let input = json!({"task": workload::swe_task(&mut rng)});
-                let d = &d;
-                handles.push(scope.spawn(move || {
-                    let t = Instant::now();
-                    let ok = run_request(d, WorkflowKind::Swe, session, &input, Duration::from_secs(30)).is_ok();
-                    (t.elapsed(), ok)
-                }));
-            }
-            for h in handles {
-                lat.push(h.join().unwrap());
-            }
-        });
-        let makespan = t0.elapsed().as_secs_f64() / d.cfg().time_scale;
-        let ok = lat.iter().filter(|(_, o)| *o).count();
-        let mut l: Vec<f64> = lat.iter().map(|(d_, _)| d_.as_secs_f64()).collect();
-        l.sort_by(|a, b| a.total_cmp(b));
-        let p95 = l[(l.len() - 1) * 95 / 100] / d.cfg().time_scale;
-        table.row(&[
-            policy.to_string(),
-            format!("{makespan:.1}"),
-            format!("{p95:.1}"),
-            ok.to_string(),
-        ]);
-        results.push((makespan, p95));
-        d.shutdown();
-    }
-    table.print();
-    if results.len() == 2 {
-        println!(
-            "LPT vs FCFS: makespan {:+.1}%  p95 {:+.1}%   (paper: -5.8% / +2.6%)",
-            100.0 * (results[1].0 - results[0].0) / results[0].0,
-            100.0 * (results[1].1 - results[0].1) / results[0].1
-        );
-    }
-}
+use std::path::Path;
 
 fn main() {
-    jct_study();
-    makespan_study();
+    let quick = std::env::var("NALAR_BENCH_QUICK").is_ok();
+    let report = nalar::bench::sec62(quick).expect("sec62 reproduction failed");
+    nalar::bench::validate(&report).expect("sec62 report schema");
+    let path = nalar::bench::write_report(Path::new("."), "sec62", &report).expect("write report");
+    println!("wrote {}", path.display());
 }

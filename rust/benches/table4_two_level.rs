@@ -1,87 +1,21 @@
 //! Table 4 reproduction: one-level vs two-level control.
 //!
 //! Measures the time to schedule one token/future when (a) a single
-//! centralized global controller routes *every* future through its one
-//! decision queue — a new arrival waits behind all pending work — versus
-//! (b) NALAR's two-level design, where component-level controllers route
-//! independently under installed policies and a new future's scheduling
-//! latency is one local decision.
+//! centralized controller routes *every* future through one decision
+//! queue versus (b) NALAR's two-level design, where component-level
+//! controllers route independently and a new future's scheduling latency
+//! is one local decision. Paper: one-level 1.2ms@1K -> 72.3ms@131K;
+//! two-level flat 0.1-0.4ms.
 //!
-//! Paper: one-level 1.2ms@1K -> 72.3ms@131K; two-level flat 0.1-0.4ms.
+//! Thin wrapper over [`nalar::bench::table4`] — the same code path as
+//! `nalar bench --only table4`; writes `BENCH_table4.json`.
 
-use std::sync::Arc;
-use std::time::{Duration, Instant};
-
-use nalar::coordinator::{LoadMap, Router};
-use nalar::ids::*;
-use nalar::transport::Bus;
-use nalar::util::bench::Table;
-
-const AGENTS: u32 = 128;
-const LOCAL_CONTROLLERS: usize = 128;
-
-fn mk_router() -> (Bus, Arc<Router>) {
-    let bus = Bus::new(Duration::ZERO);
-    let loads = LoadMap::new();
-    for a in 0..AGENTS {
-        let id = InstanceId::new("agent", a);
-        let _rx = Box::leak(Box::new(bus.register(id.clone(), NodeId(a % 64))));
-        loads.register(id);
-    }
-    (bus.clone(), Arc::new(Router::new(bus, loads, 9)))
-}
-
-/// One-level: all pending futures drain through one decision loop; a probe
-/// future submitted at the back observes the queueing delay.
-fn one_level(pending: usize, router: &Router) -> Duration {
-    let t0 = Instant::now();
-    for i in 0..pending {
-        let _ = router.route(SessionId(i as u64), "agent", false);
-    }
-    // the probe token: scheduled only after everything ahead of it
-    let _ = router.route(SessionId(pending as u64), "agent", false);
-    t0.elapsed()
-}
-
-/// Two-level: the same pending work is split across component-level
-/// controllers running concurrently; the probe only waits for its local
-/// controller's share of one queue position.
-fn two_level(pending: usize, router: &Arc<Router>) -> Duration {
-    let per = pending / LOCAL_CONTROLLERS;
-    std::thread::scope(|scope| {
-        for c in 0..LOCAL_CONTROLLERS {
-            let router = router.clone();
-            scope.spawn(move || {
-                for i in 0..per {
-                    let _ = router.route(SessionId((c * per + i) as u64), "agent", false);
-                }
-            });
-        }
-        // probe routes locally, concurrent with the fleet
-        let t0 = Instant::now();
-        let _ = router.route(SessionId(u64::MAX), "agent", false);
-        t0.elapsed()
-    })
-}
+use std::path::Path;
 
 fn main() {
-    println!("=== Table 4 — per-token scheduling: one-level vs two-level ===");
-    let mut table = Table::new(&["futures", "one-level(ms)", "two-level(ms)", "ratio"]);
-    for futures in [1024usize, 2048, 4096, 8192, 16384, 32768, 65536, 131072] {
-        let (_b1, r1) = mk_router();
-        let one = one_level(futures, &r1);
-        let (_b2, r2) = mk_router();
-        // median of 3 for the (tiny) two-level number
-        let mut twos: Vec<Duration> = (0..3).map(|_| two_level(futures, &r2)).collect();
-        twos.sort();
-        let two = twos[1];
-        table.row(&[
-            futures.to_string(),
-            format!("{:.2}", one.as_secs_f64() * 1e3),
-            format!("{:.3}", two.as_secs_f64() * 1e3),
-            format!("{:.0}x", one.as_secs_f64() / two.as_secs_f64().max(1e-9)),
-        ]);
-    }
-    table.print();
-    println!("\npaper reference: one-level 1.2 -> 72.3 ms; two-level 0.1 -> 0.4 ms");
+    let quick = std::env::var("NALAR_BENCH_QUICK").is_ok();
+    let report = nalar::bench::table4(quick).expect("table4 reproduction failed");
+    nalar::bench::validate(&report).expect("table4 report schema");
+    let path = nalar::bench::write_report(Path::new("."), "table4", &report).expect("write report");
+    println!("wrote {}", path.display());
 }

@@ -12,10 +12,10 @@
 use std::sync::Arc;
 
 use crate::config::{AgentConfig, DeploymentConfig};
-use crate::futures::{DepGraph, FutureCell, FutureHandle, FutureMeta, FutureTable, Value};
-use crate::ids::{AgentType, FutureId, IdGen, Location, RequestId, SessionId};
 use crate::coordinator::Router;
 use crate::error::{Error, Result};
+use crate::futures::{DepGraph, FutureCell, FutureHandle, FutureMeta, FutureTable, Value};
+use crate::ids::{AgentType, FutureId, IdGen, Location, RequestId, SessionId};
 use crate::transport::{Bus, CallMsg, Message};
 
 /// Shared runtime context the stubs operate against (cheap clone).

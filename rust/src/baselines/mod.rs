@@ -115,7 +115,9 @@ mod tests {
 
     #[test]
     fn baselines_lose_control() {
-        for s in [SystemUnderTest::AyoLike, SystemUnderTest::CrewLike, SystemUnderTest::AutoGenLike] {
+        let baselines =
+            [SystemUnderTest::AyoLike, SystemUnderTest::CrewLike, SystemUnderTest::AutoGenLike];
+        for s in baselines {
             let mut cfg = base_cfg();
             cfg.policies = vec!["load_balance".into()];
             s.apply(&mut cfg);

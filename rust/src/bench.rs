@@ -1,0 +1,714 @@
+//! `nalar bench` — the paper-figure reporting subsystem.
+//!
+//! One entrypoint ([`run`]) reproduces the paper's headline measurements
+//! headlessly and emits machine-readable reports at the repo root:
+//!
+//! * `BENCH_fig9.json` — end-to-end latency vs request rate, three
+//!   workflows × four systems (paper Fig. 9);
+//! * `BENCH_fig10.json` — global control-loop latency vs live futures,
+//!   up to 131K futures / 128 agents (paper Fig. 10: 464 ms at 131K);
+//! * `BENCH_table4.json` — one-level vs two-level per-future scheduling
+//!   latency (paper Table 4);
+//! * `BENCH_sec62.json` — the §6.2 SRTF/LPT policy studies.
+//!
+//! Every report follows one stable schema (`nalar-bench/v1`, DESIGN.md §4):
+//! a top-level `schema`/`bench`/`quick`/`latency_unit` header plus a
+//! `points` array in which **every point carries a `latency` object with
+//! `p50`/`p95`/`p99`** (computed via [`crate::metrics::LatencyRecorder`])
+//! and the sweep coordinates that produced it. [`validate`] enforces the
+//! schema; CI's bench-smoke job fails on invalid output, and future PRs
+//! regress against these files as the perf trajectory.
+//!
+//! `--quick` scales every reproduction down to CI-smoke size (seconds, not
+//! minutes); the full profile reproduces the paper's sweep ranges.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::baselines::SystemUnderTest;
+use crate::coordinator::policy::make_policy;
+use crate::coordinator::{GlobalController, InstanceMetrics, LoadMap, Router};
+use crate::error::{Error, Result};
+use crate::futures::{FutureCell, FutureMeta, FutureTable};
+use crate::ids::{AgentType, FutureId, InstanceId, Location, NodeId, RequestId, SessionId};
+use crate::json;
+use crate::metrics::LatencyRecorder;
+use crate::nodestore::{keys, StoreDirectory};
+use crate::server::Deployment;
+use crate::transport::{Bus, Message};
+use crate::util::bench::Table;
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+use crate::workflow::{run_open_loop, run_request, RunConfig, WorkflowKind};
+use crate::workload;
+
+/// Schema tag stamped on every report.
+pub const SCHEMA: &str = "nalar-bench/v1";
+
+/// Report names in execution order.
+pub const ALL: &[&str] = &["fig9", "fig10", "table4", "sec62"];
+
+/// Options for one `nalar bench` invocation.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    /// CI-smoke profile: scaled-down sweeps, shorter windows.
+    pub quick: bool,
+    /// Where `BENCH_*.json` files land (repo root by default).
+    pub out_dir: PathBuf,
+    /// Subset of [`ALL`] to run (`None` = everything).
+    pub only: Option<Vec<String>>,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { quick: false, out_dir: PathBuf::from("."), only: None }
+    }
+}
+
+impl BenchOpts {
+    fn selected(&self, name: &str) -> bool {
+        match &self.only {
+            Some(list) => list.iter().any(|n| n == name),
+            None => true,
+        }
+    }
+}
+
+fn check_known(names: &[String]) -> Result<()> {
+    for n in names {
+        if !ALL.contains(&n.as_str()) {
+            return Err(Error::Config(format!(
+                "unknown bench `{n}` (known: {})",
+                ALL.join(", ")
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Run the selected reproductions, validate each report against the
+/// schema, and write `BENCH_<name>.json` files. Returns the paths written.
+pub fn run(opts: &BenchOpts) -> Result<Vec<PathBuf>> {
+    if let Some(list) = &opts.only {
+        check_known(list)?;
+    }
+    let mut written = Vec::new();
+    for name in ALL {
+        if !opts.selected(name) {
+            continue;
+        }
+        let t0 = Instant::now();
+        let report = match *name {
+            "fig9" => fig9(opts.quick)?,
+            "fig10" => fig10(opts.quick)?,
+            "table4" => table4(opts.quick)?,
+            "sec62" => sec62(opts.quick)?,
+            _ => unreachable!("ALL out of sync with run()"),
+        };
+        validate(&report)?;
+        let path = write_report(&opts.out_dir, name, &report)?;
+        println!("[bench] {name} done in {:.1?} -> {}", t0.elapsed(), path.display());
+        written.push(path);
+    }
+    if written.is_empty() {
+        return Err(Error::Config(format!(
+            "no benches selected (known: {})",
+            ALL.join(", ")
+        )));
+    }
+    Ok(written)
+}
+
+/// Canonical report location for a bench name.
+pub fn report_path(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("BENCH_{name}.json"))
+}
+
+/// Serialize a validated report to its canonical path.
+pub fn write_report(dir: &Path, name: &str, report: &Value) -> Result<PathBuf> {
+    let path = report_path(dir, name);
+    std::fs::write(&path, report.pretty() + "\n")?;
+    Ok(path)
+}
+
+/// Re-validate reports already on disk (CI's schema gate).
+pub fn check_files(dir: &Path, names: &[&str]) -> Result<()> {
+    let owned: Vec<String> = names.iter().map(|n| n.to_string()).collect();
+    check_known(&owned)?;
+    for name in names {
+        let path = report_path(dir, name);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Msg(format!("{}: {e}", path.display())))?;
+        let report = crate::util::json::parse(&text)?;
+        validate(&report)
+            .map_err(|e| Error::Msg(format!("{}: {e}", path.display())))?;
+        println!("[bench] {} schema ok", path.display());
+    }
+    Ok(())
+}
+
+/// Enforce the `nalar-bench/v1` schema. Every point must carry its sweep
+/// coordinates and a `latency` object with numeric `p50`/`p95`/`p99`.
+pub fn validate(report: &Value) -> Result<()> {
+    let fail = |msg: String| Error::Msg(format!("bench schema: {msg}"));
+    if report.get("schema").as_str() != Some(SCHEMA) {
+        return Err(fail(format!("`schema` must be \"{SCHEMA}\"")));
+    }
+    let bench = report
+        .get("bench")
+        .as_str()
+        .ok_or_else(|| fail("missing `bench`".into()))?;
+    if report.get("quick").as_bool().is_none() {
+        return Err(fail("missing bool `quick`".into()));
+    }
+    if report.get("latency_unit").as_str().is_none() {
+        return Err(fail("missing `latency_unit`".into()));
+    }
+    let points = report
+        .get("points")
+        .as_arr()
+        .ok_or_else(|| fail("missing `points` array".into()))?;
+    if points.is_empty() {
+        return Err(fail("`points` is empty".into()));
+    }
+    let required: &[&str] = match bench {
+        "fig9" => &["workflow", "system", "rps_wall", "rps_paper", "completed", "failed"],
+        "fig10" => &["nodes", "agents", "futures"],
+        "table4" => &["futures", "one_level", "speedup"],
+        "sec62" => &["study", "policy"],
+        other => return Err(fail(format!("unknown bench `{other}`"))),
+    };
+    for (i, p) in points.iter().enumerate() {
+        for key in required {
+            if p.get(key).is_null() {
+                return Err(fail(format!("{bench} point {i}: missing `{key}`")));
+            }
+        }
+        let lat = p.get("latency");
+        for q in ["p50", "p95", "p99"] {
+            if lat.get(q).as_f64().is_none() {
+                return Err(fail(format!("{bench} point {i}: latency.{q} not numeric")));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn report(bench: &str, quick: bool, latency_unit: &str, points: Vec<Value>) -> Value {
+    let mut v = json!({
+        "schema": SCHEMA,
+        "bench": bench,
+        "quick": quick,
+        "latency_unit": latency_unit
+    });
+    v.insert("points", Value::Arr(points));
+    v
+}
+
+fn full_env() -> bool {
+    std::env::var("NALAR_BENCH_FULL").is_ok()
+}
+
+// ------------------------------------------------------------------- fig 9
+
+/// Fig. 9: end-to-end latency vs request rate, three workflows × systems.
+/// Latencies are reported in paper-equivalent seconds.
+pub fn fig9(quick: bool) -> Result<Value> {
+    let plan: Vec<(WorkflowKind, Vec<f64>)> = if quick {
+        vec![
+            (WorkflowKind::Financial, vec![40.0]),
+            (WorkflowKind::Router, vec![120.0]),
+            (WorkflowKind::Swe, vec![20.0]),
+        ]
+    } else {
+        vec![
+            (WorkflowKind::Financial, vec![40.0, 80.0, 120.0, 160.0]),
+            (WorkflowKind::Router, vec![120.0, 240.0, 360.0, 480.0]),
+            (WorkflowKind::Swe, vec![20.0, 40.0, 60.0, 80.0]),
+        ]
+    };
+    let systems: Vec<SystemUnderTest> = if quick {
+        vec![SystemUnderTest::Nalar, SystemUnderTest::AutoGenLike]
+    } else {
+        SystemUnderTest::all().to_vec()
+    };
+    let secs = if quick {
+        1
+    } else if full_env() {
+        10
+    } else {
+        4
+    };
+
+    let mut points = Vec::new();
+    for (wf, rates) in &plan {
+        let mut table = Table::new(&[
+            "system", "rate", "avg(s)", "p50(s)", "p95(s)", "p99(s)", "ok", "fail", "imbalance",
+        ]);
+        for &rps in rates {
+            for &system in &systems {
+                let mut cfg = wf.config();
+                if quick {
+                    cfg.time_scale = 0.002;
+                }
+                let d = Deployment::launch_as(cfg, system)?;
+                let rc = RunConfig {
+                    workflow: *wf,
+                    rps,
+                    duration: Duration::from_secs(secs),
+                    session_pool: if quick { 16 } else { 48 },
+                    request_timeout: Duration::from_secs(6),
+                    seed: 0xF19,
+                };
+                let (stats, rec) = run_open_loop(&d, &rc);
+                let paper = rec.summary_scaled(1.0 / stats.time_scale);
+                table.row(&[
+                    system.name().to_string(),
+                    format!("{:.1}", rps * stats.time_scale),
+                    format!("{:.0}", paper.avg),
+                    format!("{:.0}", paper.p50),
+                    format!("{:.0}", paper.p95),
+                    format!("{:.0}", paper.p99),
+                    stats.completed.to_string(),
+                    stats.failed.to_string(),
+                    format!("{:.2}", stats.imbalance),
+                ]);
+                let mut p = json!({
+                    "workflow": wf.name(),
+                    "system": system.name(),
+                    "rps_wall": rps,
+                    "rps_paper": rps * stats.time_scale,
+                    "duration_s": secs,
+                    "completed": stats.completed,
+                    "failed": stats.failed,
+                    "imbalance": stats.imbalance
+                });
+                p.insert("latency", paper.to_json());
+                points.push(p);
+                d.shutdown();
+            }
+        }
+        println!("\n=== Fig 9 — {} workflow ===", wf.name());
+        table.print();
+    }
+    Ok(report("fig9", quick, "paper_s", points))
+}
+
+// ------------------------------------------------------------------ fig 10
+
+/// Build the Fig-10 control plane: `agents` instances spread over `nodes`
+/// emulated nodes with telemetry in place, plus `futures` live futures in
+/// the table, under an SRTF policy. The receivers keep the bus endpoints
+/// deliverable for the measurement's lifetime.
+fn control_plane(
+    nodes: u32,
+    agents: u32,
+    futures: usize,
+) -> (Arc<GlobalController>, Vec<Receiver<Message>>) {
+    let node_ids: Vec<NodeId> = (0..nodes).map(NodeId).collect();
+    let bus = Bus::new(Duration::ZERO);
+    let stores = StoreDirectory::new(&node_ids);
+    let loads = LoadMap::new();
+    let table = Arc::new(FutureTable::new());
+    let router = Arc::new(Router::new(bus.clone(), loads.clone(), 1));
+
+    let mut rxs = Vec::with_capacity(agents as usize);
+    for a in 0..agents {
+        let id = InstanceId::new("agent", a);
+        let node = NodeId(a % nodes);
+        rxs.push(bus.register(id.clone(), node));
+        loads.register(id.clone());
+        stores.node(node).put(
+            &keys::instance_metrics(&id),
+            InstanceMetrics {
+                agent: "agent".into(),
+                node: node.0,
+                queue_len: (a % 7) as usize,
+                waiting_sessions: vec![(SessionId(a as u64), 50 + a as u64)],
+                oldest_wait_ms: 50 + a as u64,
+                ..Default::default()
+            },
+        );
+    }
+    for i in 0..futures {
+        let mut meta = FutureMeta::new(
+            FutureId(i as u64),
+            SessionId((i % 1024) as u64),
+            RequestId((i % 4096) as u64),
+            AgentType::new("agent"),
+            "m",
+            Location::Driver(RequestId(0)),
+        );
+        meta.stage = (i % 5) as u32;
+        table.insert(FutureCell::new(meta));
+    }
+    let g = GlobalController::new(
+        bus,
+        stores,
+        router,
+        loads,
+        table,
+        vec![make_policy("srtf").expect("srtf registered")],
+        Arc::new(|_| None),
+    );
+    (g, rxs)
+}
+
+/// Fig. 10: global control-loop latency vs live futures. The full profile
+/// reaches the paper's 131K futures / 128 agents point; latencies are in
+/// milliseconds per loop iteration.
+pub fn fig10(quick: bool) -> Result<Value> {
+    let configs: &[(u32, u32)] = if quick { &[(8, 16)] } else { &[(32, 64), (64, 128)] };
+    let sweep: &[usize] = if quick {
+        &[1024, 8192]
+    } else {
+        &[1024, 4096, 16384, 65536, 131072]
+    };
+    let iters = if quick { 3u32 } else { 5 };
+
+    let mut table = Table::new(&[
+        "nodes", "agents", "futures", "collect(ms)", "policy(ms)", "apply(ms)", "p50(ms)",
+        "p99(ms)",
+    ]);
+    let mut points = Vec::new();
+    for &(nodes, agents) in configs {
+        for &futures in sweep {
+            let (g, _rxs) = control_plane(nodes, agents, futures);
+            g.tick(); // warm
+            let rec = LatencyRecorder::new();
+            let (mut collect_s, mut policy_s, mut apply_s) = (0.0f64, 0.0, 0.0);
+            for _ in 0..iters {
+                let t = g.tick();
+                rec.record(t.total());
+                collect_s += t.collect.as_secs_f64();
+                policy_s += t.policy.as_secs_f64();
+                apply_s += t.apply.as_secs_f64();
+            }
+            let ms = rec.summary_scaled(1e3);
+            let n = iters as f64;
+            table.row(&[
+                nodes.to_string(),
+                agents.to_string(),
+                futures.to_string(),
+                format!("{:.1}", collect_s / n * 1e3),
+                format!("{:.1}", policy_s / n * 1e3),
+                format!("{:.1}", apply_s / n * 1e3),
+                format!("{:.1}", ms.p50),
+                format!("{:.1}", ms.p99),
+            ]);
+            let mut p = json!({
+                "nodes": nodes,
+                "agents": agents,
+                "futures": futures,
+                "iters": iters,
+                "collect_ms_avg": collect_s / n * 1e3,
+                "policy_ms_avg": policy_s / n * 1e3,
+                "apply_ms_avg": apply_s / n * 1e3
+            });
+            p.insert("latency", ms.to_json());
+            points.push(p);
+        }
+    }
+    println!("\n=== Fig 10 — global control loop latency vs #futures ===");
+    table.print();
+    println!("paper reference: 64 nodes/131K futures => 464ms total, >65% policy");
+    Ok(report("fig10", quick, "ms", points))
+}
+
+// ----------------------------------------------------------------- table 4
+
+fn table4_router(agents: u32) -> (Bus, Arc<Router>, Vec<Receiver<Message>>) {
+    let bus = Bus::new(Duration::ZERO);
+    let loads = LoadMap::new();
+    let mut rxs = Vec::with_capacity(agents as usize);
+    for a in 0..agents {
+        let id = InstanceId::new("agent", a);
+        rxs.push(bus.register(id.clone(), NodeId(a % 64)));
+        loads.register(id);
+    }
+    let router = Arc::new(Router::new(bus.clone(), loads, 9));
+    (bus, router, rxs)
+}
+
+/// One-level: all pending futures drain through one decision loop; a probe
+/// future submitted at the back observes the queueing delay.
+fn one_level(pending: usize, router: &Router) -> Duration {
+    let t0 = Instant::now();
+    for i in 0..pending {
+        let _ = router.route(SessionId(i as u64), "agent", false);
+    }
+    let _ = router.route(SessionId(pending as u64), "agent", false);
+    t0.elapsed()
+}
+
+/// Two-level: the same pending work is split across component-level
+/// controllers running concurrently; the probe only waits for one local
+/// decision.
+fn two_level(pending: usize, controllers: usize, router: &Arc<Router>) -> Duration {
+    let per = pending / controllers.max(1);
+    std::thread::scope(|scope| {
+        for c in 0..controllers {
+            let router = router.clone();
+            scope.spawn(move || {
+                for i in 0..per {
+                    let _ = router.route(SessionId((c * per + i) as u64), "agent", false);
+                }
+            });
+        }
+        let t0 = Instant::now();
+        let _ = router.route(SessionId(u64::MAX), "agent", false);
+        t0.elapsed()
+    })
+}
+
+/// Table 4: per-future scheduling latency, one-level vs two-level, swept
+/// over the pending-future count. Latencies are in milliseconds.
+pub fn table4(quick: bool) -> Result<Value> {
+    let agents: u32 = if quick { 32 } else { 128 };
+    let controllers: usize = agents as usize;
+    let sweep: &[usize] = if quick {
+        &[1024, 8192]
+    } else {
+        &[1024, 2048, 4096, 8192, 16384, 32768, 65536, 131072]
+    };
+    let reps = 3;
+
+    let mut table = Table::new(&["futures", "one-level(ms)", "two-level p50(ms)", "ratio"]);
+    let mut points = Vec::new();
+    for &futures in sweep {
+        let one_rec = LatencyRecorder::new();
+        let two_rec = LatencyRecorder::new();
+        for _ in 0..reps {
+            let (_bus1, r1, _rx1) = table4_router(agents);
+            one_rec.record(one_level(futures, &r1));
+            let (_bus2, r2, _rx2) = table4_router(agents);
+            two_rec.record(two_level(futures, controllers, &r2));
+        }
+        let one_ms = one_rec.summary_scaled(1e3);
+        let two_ms = two_rec.summary_scaled(1e3);
+        let speedup = one_ms.p50 / two_ms.p50.max(1e-9);
+        table.row(&[
+            futures.to_string(),
+            format!("{:.2}", one_ms.p50),
+            format!("{:.3}", two_ms.p50),
+            format!("{speedup:.0}x"),
+        ]);
+        let mut p = json!({
+            "futures": futures,
+            "agents": agents,
+            "reps": reps,
+            "speedup": speedup
+        });
+        p.insert("one_level", one_ms.to_json());
+        // `latency` is the two-level (NALAR) number — the regression target.
+        p.insert("latency", two_ms.to_json());
+        points.push(p);
+    }
+    println!("\n=== Table 4 — per-future scheduling: one-level vs two-level ===");
+    table.print();
+    println!("paper reference: one-level 1.2 -> 72.3 ms; two-level 0.1 -> 0.4 ms");
+    Ok(report("table4", quick, "ms", points))
+}
+
+// ------------------------------------------------------------------- §6.2
+
+/// §6.2: SRTF-vs-FCFS (minimize JCT, financial workflow) and LPT-vs-FCFS
+/// (control makespan, SWE closed batch). Latencies in paper seconds.
+pub fn sec62(quick: bool) -> Result<Value> {
+    let mut points = Vec::new();
+
+    // Minimize JCT — open loop on the financial workflow.
+    let mut jct_results: Vec<(f64, f64)> = Vec::new(); // (avg, p95) paper-s
+    for policy in ["fcfs", "srtf"] {
+        let mut cfg = WorkflowKind::Financial.config();
+        cfg.policies = vec!["load_balance".into(), policy.into()];
+        if quick {
+            cfg.time_scale = 0.002;
+        }
+        let d = Deployment::launch_as(cfg, SystemUnderTest::Nalar)?;
+        let rc = RunConfig {
+            workflow: WorkflowKind::Financial,
+            rps: if quick { 60.0 } else { 110.0 },
+            duration: Duration::from_secs(if quick { 1 } else { 5 }),
+            session_pool: if quick { 16 } else { 48 },
+            request_timeout: Duration::from_secs(8),
+            seed: 62,
+        };
+        let (stats, rec) = run_open_loop(&d, &rc);
+        let paper = rec.summary_scaled(1.0 / stats.time_scale);
+        println!(
+            "[sec62/jct] {policy}: avg {:.1} p95 {:.1} paper-s over {} requests",
+            paper.avg, paper.p95, stats.completed
+        );
+        let mut p = json!({
+            "study": "jct",
+            "workflow": "financial",
+            "policy": policy,
+            "completed": stats.completed,
+            "failed": stats.failed
+        });
+        p.insert("latency", paper.to_json());
+        jct_results.push((paper.avg, paper.p95));
+        points.push(p);
+        d.shutdown();
+    }
+    // §6.2 headline: the SRTF-vs-FCFS deltas (paper: avg -2.4% / p95 +3.3%).
+    if let [(avg_f, p95_f), (avg_s, p95_s)] = jct_results[..] {
+        let avg_delta = 100.0 * (avg_s - avg_f) / avg_f.max(1e-9);
+        let p95_delta = 100.0 * (p95_s - p95_f) / p95_f.max(1e-9);
+        println!(
+            "SRTF vs FCFS: avg JCT {avg_delta:+.1}%  p95 {p95_delta:+.1}%  \
+             (paper: -2.4% / +3.3%)"
+        );
+        if let Some(p) = points.last_mut() {
+            p.insert("avg_delta_pct_vs_fcfs", avg_delta);
+            p.insert("p95_delta_pct_vs_fcfs", p95_delta);
+        }
+    }
+
+    // Control makespan — closed batch on the SWE workflow.
+    let batch = if quick { 8 } else { 36 };
+    let mut makespan_results: Vec<(f64, f64)> = Vec::new(); // (makespan, p95)
+    for policy in ["fcfs", "lpt"] {
+        let mut cfg = WorkflowKind::Swe.config();
+        cfg.policies = vec!["load_balance".into(), policy.into()];
+        if quick {
+            cfg.time_scale = 0.002;
+        }
+        let d = Deployment::launch_as(cfg, SystemUnderTest::Nalar)?;
+        let time_scale = d.cfg().time_scale;
+        let mut rng = Rng::new(62);
+        let rec = LatencyRecorder::new();
+        let ok = std::sync::atomic::AtomicU64::new(0);
+        let t0 = Instant::now();
+        let timeout = Duration::from_secs(30);
+        std::thread::scope(|scope| {
+            for _ in 0..batch {
+                let session = d.new_session();
+                let input = json!({"task": workload::swe_task(&mut rng)});
+                let d = &d;
+                let rec = &rec;
+                let ok = &ok;
+                scope.spawn(move || {
+                    let t = Instant::now();
+                    let res = run_request(d, WorkflowKind::Swe, session, &input, timeout);
+                    rec.record(t.elapsed());
+                    if res.is_ok() {
+                        ok.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        let makespan = t0.elapsed().as_secs_f64() / time_scale;
+        let paper = rec.summary_scaled(1.0 / time_scale);
+        println!(
+            "[sec62/makespan] {policy}: makespan {makespan:.1} p95 JCT {:.1} paper-s ({}/{batch} ok)",
+            paper.p95,
+            ok.load(std::sync::atomic::Ordering::Relaxed)
+        );
+        let mut p = json!({
+            "study": "makespan",
+            "workflow": "swe",
+            "policy": policy,
+            "batch": batch,
+            "completed": ok.load(std::sync::atomic::Ordering::Relaxed),
+            "makespan_paper_s": makespan
+        });
+        p.insert("latency", paper.to_json());
+        makespan_results.push((makespan, paper.p95));
+        points.push(p);
+        d.shutdown();
+    }
+    // §6.2 headline: the LPT-vs-FCFS deltas (paper: makespan -5.8% / p95 +2.6%).
+    if let [(mk_f, p95_f), (mk_l, p95_l)] = makespan_results[..] {
+        let mk_delta = 100.0 * (mk_l - mk_f) / mk_f.max(1e-9);
+        let p95_delta = 100.0 * (p95_l - p95_f) / p95_f.max(1e-9);
+        println!(
+            "LPT vs FCFS: makespan {mk_delta:+.1}%  p95 {p95_delta:+.1}%  \
+             (paper: -5.8% / +2.6%)"
+        );
+        if let Some(p) = points.last_mut() {
+            p.insert("makespan_delta_pct_vs_fcfs", mk_delta);
+            p.insert("p95_delta_pct_vs_fcfs", p95_delta);
+        }
+    }
+
+    Ok(report("sec62", quick, "paper_s", points))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    fn minimal_report(bench: &str, point: Value) -> Value {
+        report(bench, true, "ms", vec![point])
+    }
+
+    fn lat() -> Value {
+        json!({"count": 3, "avg": 1.0, "p50": 1.0, "p95": 2.0, "p99": 2.0, "max": 2.0})
+    }
+
+    #[test]
+    fn validate_accepts_well_formed_reports() {
+        let mut p = json!({"nodes": 8, "agents": 16, "futures": 1024});
+        p.insert("latency", lat());
+        validate(&minimal_report("fig10", p)).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_missing_quantiles() {
+        let mut p = json!({"nodes": 8, "agents": 16, "futures": 1024});
+        p.insert("latency", json!({"p50": 1.0}));
+        let err = validate(&minimal_report("fig10", p)).unwrap_err();
+        assert!(err.to_string().contains("p95"));
+    }
+
+    #[test]
+    fn validate_rejects_missing_sweep_keys() {
+        let mut p = json!({"nodes": 8, "agents": 16});
+        p.insert("latency", lat());
+        let err = validate(&minimal_report("fig10", p)).unwrap_err();
+        assert!(err.to_string().contains("futures"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_wrong_schema_and_empty_points() {
+        let bad = json!({"schema": "nope", "bench": "fig10", "quick": true});
+        assert!(validate(&bad).is_err());
+        let empty = report("fig10", true, "ms", vec![]);
+        assert!(validate(&empty).is_err());
+    }
+
+    #[test]
+    fn table4_quick_report_is_schema_valid() {
+        let r = table4(true).unwrap();
+        validate(&r).unwrap();
+        assert_eq!(r.get("bench").as_str(), Some("table4"));
+        assert!(r.get("points").as_arr().unwrap().len() >= 2);
+    }
+
+    #[test]
+    fn fig10_quick_report_is_schema_valid() {
+        let r = fig10(true).unwrap();
+        validate(&r).unwrap();
+        let pts = r.get("points").as_arr().unwrap().clone();
+        assert!(pts.iter().all(|p| p.get("latency").get("p99").as_f64().is_some()));
+    }
+
+    #[test]
+    fn write_and_check_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("nalar-bench-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut p = json!({"futures": 1024, "agents": 4, "reps": 1, "speedup": 2.0});
+        p.insert("one_level", lat());
+        p.insert("latency", lat());
+        let r = minimal_report("table4", p);
+        write_report(&dir, "table4", &r).unwrap();
+        check_files(&dir, &["table4"]).unwrap();
+        assert!(check_files(&dir, &["fig9"]).is_err(), "missing file must fail");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

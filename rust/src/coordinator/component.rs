@@ -451,8 +451,10 @@ impl ComponentController {
             agent: self.id.agent.as_str().to_string(),
             node: self.node.0,
             queue_len: self.queue.len(),
-            active: self.inflight.len()
-                + matches!(self.backend, Backend::Tool(_)) as usize * 0,
+            // Tool backends execute synchronously inside the turn, so at
+            // telemetry time their in-flight count is always zero; engine
+            // backends report admitted-but-unfinished sequences.
+            active: self.inflight.len(),
             completed: self.completed,
             failed: self.failed,
             migrated_in: self.migrated_in,

@@ -42,7 +42,10 @@ pub struct ClusterView {
 }
 
 impl ClusterView {
-    pub fn instances_of<'a>(&'a self, agent: &'a str) -> impl Iterator<Item = &'a InstanceView> + 'a {
+    pub fn instances_of<'a>(
+        &'a self,
+        agent: &'a str,
+    ) -> impl Iterator<Item = &'a InstanceView> + 'a {
         self.instances.iter().filter(move |i| i.m.agent == agent)
     }
 
@@ -217,16 +220,27 @@ impl GlobalController {
         }
         if !priorities.is_empty() {
             self.table.for_each(|cell| {
-                cell.with_meta(|m| priorities.get(&m.session).map(|rules| (m.agent.clone(), rules.clone())))
-                    .map(|(agent, rules)| {
-                        for (filter, priority) in rules {
-                            if filter.as_deref().map(|a| agent.as_str() == a).unwrap_or(true) {
-                                cell.set_priority(priority);
-                            }
+                let matched = cell.with_meta(|m| {
+                    priorities.get(&m.session).map(|rules| (m.agent.clone(), rules.clone()))
+                });
+                if let Some((agent, rules)) = matched {
+                    for (filter, priority) in rules {
+                        let applies = match &filter {
+                            Some(a) => agent.as_str() == a.as_str(),
+                            None => true,
+                        };
+                        if applies {
+                            cell.set_priority(priority);
                         }
-                    });
+                    }
+                }
             });
         }
+    }
+
+    /// Snapshot of every recorded loop timing (Fig-10 reporting).
+    pub fn timings_snapshot(&self) -> Vec<LoopTiming> {
+        self.timings.lock().unwrap().clone()
     }
 
     /// Run the periodic loop until `stop` (spawned by the deployment).
@@ -252,7 +266,9 @@ mod tests {
     use crate::futures::{FutureCell, FutureMeta};
     use crate::ids::*;
 
-    fn mk_global(policies: Vec<Box<dyn Policy>>) -> (Arc<GlobalController>, Bus, StoreDirectory, Arc<FutureTable>) {
+    type Globals = (Arc<GlobalController>, Bus, StoreDirectory, Arc<FutureTable>);
+
+    fn mk_global(policies: Vec<Box<dyn Policy>>) -> Globals {
         let bus = Bus::new(Duration::ZERO);
         let stores = StoreDirectory::new(&[NodeId(0), NodeId(1)]);
         let loads = LoadMap::new();

@@ -227,7 +227,10 @@ mod tests {
     use crate::ids::NodeId;
     use std::time::Duration;
 
-    fn setup(n: u32) -> (Bus, LoadMap, Router, Vec<std::sync::mpsc::Receiver<crate::transport::Message>>) {
+    type Inbox = std::sync::mpsc::Receiver<crate::transport::Message>;
+    type Setup = (Bus, LoadMap, Router, Vec<Inbox>);
+
+    fn setup(n: u32) -> Setup {
         let bus = Bus::new(Duration::ZERO);
         let loads = LoadMap::new();
         let mut rxs = Vec::new();

@@ -56,7 +56,12 @@ impl PjrtCore {
     }
 
     /// Prefill a fresh (or evicted) context and activate the sequence.
-    fn start_fresh(&mut self, req: &EngineReq, tokens: Vec<i32>, kv_outcome: &'static str) -> Result<()> {
+    fn start_fresh(
+        &mut self,
+        req: &EngineReq,
+        tokens: Vec<i32>,
+        kv_outcome: &'static str,
+    ) -> Result<()> {
         let out = self.model.prefill(&[tokens.clone()])?;
         let dims = self.model.dims();
         let kv = out.kv.gather(&dims, 0, tokens.len());
@@ -84,16 +89,21 @@ impl EngineCore for PjrtCore {
 
         let result: Result<()> = (|| {
             match self.saved.remove(&req.session) {
-                Some((kv, history)) if history.len() + new_tokens.len() < dims.max_seq - reserve => {
+                Some((kv, history))
+                    if history.len() + new_tokens.len() < dims.max_seq - reserve =>
+                {
                     let ctx_bytes = dims.kv_bytes_per_seq();
-                    match self.kv_mgr.ensure_resident(req.session, ctx_bytes, history.len() as u32) {
+                    let residency =
+                        self.kv_mgr.ensure_resident(req.session, ctx_bytes, history.len() as u32);
+                    match residency {
                         Residency::Hit | Residency::Promoted { .. } => {
                             // Incremental: feed only the new prompt tokens.
                             self.active.push(ActiveSeq {
                                 tag: req.tag,
                                 session: req.session,
                                 kv,
-                                pending_prompt: new_tokens[1..].to_vec(), // skip BOS (already in ctx)
+                                // skip BOS: already in the saved context
+                                pending_prompt: new_tokens[1..].to_vec(),
                                 last_token: *new_tokens.get(1).unwrap_or(&dims.bos),
                                 generated: Vec::new(),
                                 prompt_tokens: new_tokens.len(),

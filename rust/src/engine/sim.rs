@@ -91,11 +91,11 @@ impl EngineCore for SimCore {
             Residency::Miss => ("miss", total_context, Duration::ZERO),
         };
 
+        let cap = (4.0 * self.profile.mean_output_tokens).max(1.0);
         let target = self
             .rng
             .lognormal_mean(self.profile.mean_output_tokens, self.profile.output_sigma)
-            .max(1.0)
-            .min(4.0 * self.profile.mean_output_tokens) as usize;
+            .clamp(1.0, cap) as usize;
         let pending = self.scaled(
             self.profile.base_s + self.profile.per_prompt_token_s * prefill_tokens as f64,
         ) + transfer;

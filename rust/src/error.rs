@@ -4,51 +4,82 @@
 //! failed requests are reported back to the driver with the workflow path,
 //! the failing agent and the underlying cause, and the driver decides
 //! whether to retry.
+//!
+//! The offline build has no `thiserror`/`anyhow`; `Display`, `Error` and
+//! the `From` conversions are written out by hand (DESIGN.md §3).
+
+use std::fmt;
 
 use crate::ids::{FutureId, InstanceId};
 
 pub type Result<T> = std::result::Result<T, Error>;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("future {0} failed at {agent}: {cause}", agent = .1, cause = .2)]
+    /// `(future, failing instance, cause)`.
     FutureFailed(FutureId, InstanceId, String),
-
-    #[error("future {0} timed out after {1:?}")]
     FutureTimeout(FutureId, std::time::Duration),
-
-    #[error("no instance available for agent type `{0}`")]
     NoInstance(String),
-
-    #[error("unknown agent type `{0}`")]
     UnknownAgent(String),
-
-    #[error("instance {0} was killed")]
     InstanceKilled(InstanceId),
-
-    #[error("engine error: {0}")]
     Engine(String),
-
-    #[error("runtime (PJRT) error: {0}")]
     Runtime(String),
-
-    #[error("artifact error: {0}")]
     Artifact(String),
-
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("state error: {0}")]
     State(String),
-
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("json: {0}")]
-    Json(#[from] crate::util::json::ParseError),
-
-    #[error("{0}")]
+    Io(std::io::Error),
+    Json(crate::util::json::ParseError),
     Msg(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::FutureFailed(id, agent, cause) => {
+                write!(f, "future {id} failed at {agent}: {cause}")
+            }
+            Error::FutureTimeout(id, after) => write!(f, "future {id} timed out after {after:?}"),
+            Error::NoInstance(agent) => write!(f, "no instance available for agent type `{agent}`"),
+            Error::UnknownAgent(agent) => write!(f, "unknown agent type `{agent}`"),
+            Error::InstanceKilled(i) => write!(f, "instance {i} was killed"),
+            Error::Engine(e) => write!(f, "engine error: {e}"),
+            Error::Runtime(e) => write!(f, "runtime (PJRT) error: {e}"),
+            Error::Artifact(e) => write!(f, "artifact error: {e}"),
+            Error::Config(e) => write!(f, "config error: {e}"),
+            Error::State(e) => write!(f, "state error: {e}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Json(e) => write!(f, "json: {e}"),
+            Error::Msg(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            Error::Json(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<crate::util::json::ParseError> for Error {
+    fn from(e: crate::util::json::ParseError) -> Self {
+        Error::Json(e)
+    }
+}
+
+impl From<crate::runtime::xla::Error> for Error {
+    fn from(e: crate::runtime::xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
 }
 
 impl Error {
@@ -65,12 +96,6 @@ impl Error {
                 | Error::InstanceKilled(..)
                 | Error::NoInstance(..)
         )
-    }
-}
-
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Runtime(e.to_string())
     }
 }
 
@@ -91,5 +116,14 @@ mod tests {
         let e = Error::FutureFailed(FutureId(7), InstanceId::new("dev", 1), "oom".into());
         let s = e.to_string();
         assert!(s.contains("f7") && s.contains("dev:1") && s.contains("oom"));
+    }
+
+    #[test]
+    fn io_and_json_sources_chain() {
+        let io = Error::from(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        assert!(std::error::Error::source(&io).is_some());
+        assert!(io.to_string().contains("gone"));
+        let js = Error::from(crate::util::json::parse("{").unwrap_err());
+        assert!(js.to_string().contains("json"));
     }
 }

@@ -9,7 +9,6 @@ use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-
 macro_rules! id_u64 {
     ($(#[$doc:meta])* $name:ident, $prefix:literal) => {
         $(#[$doc])*

@@ -18,11 +18,13 @@
 //! Python never runs on the request path: `make artifacts` is build-time
 //! only, and the `nalar` binary is self-contained afterwards.
 //!
-//! The build environment is fully offline (only `xla`, `anyhow`,
-//! `thiserror` are vendorable), so the ecosystem crates a serving stack
-//! normally leans on are implemented from scratch in [`util`], [`testkit`],
-//! [`nodestore`] and [`transport`] — see DESIGN.md §3 for the substitution
-//! table.
+//! The build environment is fully offline (zero external dependencies),
+//! so the ecosystem crates a serving stack normally leans on are
+//! implemented from scratch in [`util`], [`testkit`], [`nodestore`],
+//! [`transport`] and [`runtime::xla`] — see DESIGN.md §3 for the
+//! substitution table. `nalar bench` ([`bench`]) reproduces the paper's
+//! Fig-9 / Fig-10 / Table-4 / §6.2 numbers headlessly and writes
+//! `BENCH_*.json` reports at the repo root.
 //!
 //! ## Crate map
 //!
@@ -43,6 +45,7 @@
 
 pub mod agents;
 pub mod baselines;
+pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod engine;

@@ -1,14 +1,18 @@
-//! `nalar` CLI: launch deployments, run workloads, inspect the system.
+//! `nalar` CLI: launch deployments, run workloads, reproduce the paper.
 //!
 //! ```text
-//! nalar run   --workflow financial|router|swe --system nalar|ayo|crew|autogen
-//!             [--rps 8] [--secs 5] [--config path.json]
-//! nalar info  [--config path.json]      # validate + describe a deployment
+//! nalar run    --workflow financial|router|swe --system nalar|ayo|crew|autogen
+//!              [--rps 8] [--secs 5] [--config path.json]
+//! nalar info   [--config path.json]      # validate + describe a deployment
+//! nalar bench  [--quick] [--only fig9,fig10,table4,sec62] [--out DIR]
+//!              [--check-only]            # writes/validates BENCH_*.json
 //! ```
 
+use std::path::PathBuf;
 use std::time::Duration;
 
 use nalar::baselines::SystemUnderTest;
+use nalar::bench::{self, BenchOpts};
 use nalar::config::DeploymentConfig;
 use nalar::server::Deployment;
 use nalar::util::cli::Args;
@@ -31,26 +35,31 @@ fn parse_workflow(s: &str) -> WorkflowKind {
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> nalar::Result<()> {
     let args = Args::from_env();
     match args.positional.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&args),
         Some("info") => cmd_info(&args),
+        Some("bench") => cmd_bench(&args),
         _ => {
-            eprintln!("usage: nalar <run|info> [--workflow financial|router|swe] [--system nalar|ayo|crew|autogen] [--rps N] [--secs N] [--config file.json]");
+            eprintln!(
+                "usage: nalar <run|info|bench> [--workflow financial|router|swe] \
+                 [--system nalar|ayo|crew|autogen] [--rps N] [--secs N] [--config file.json] \
+                 | bench [--quick] [--only fig9,fig10,table4,sec62] [--out DIR] [--check-only]"
+            );
             Ok(())
         }
     }
 }
 
-fn load_config(args: &Args, wf: WorkflowKind) -> anyhow::Result<DeploymentConfig> {
+fn load_config(args: &Args, wf: WorkflowKind) -> nalar::Result<DeploymentConfig> {
     Ok(match args.get("config") {
         Some(path) => DeploymentConfig::from_json_file(path)?,
         None => wf.config(),
     })
 }
 
-fn cmd_run(args: &Args) -> anyhow::Result<()> {
+fn cmd_run(args: &Args) -> nalar::Result<()> {
     let wf = parse_workflow(&args.str_or("workflow", "financial"));
     let system = parse_system(&args.str_or("system", "nalar"));
     let cfg = load_config(args, wf)?;
@@ -82,7 +91,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_info(args: &Args) -> anyhow::Result<()> {
+fn cmd_info(args: &Args) -> nalar::Result<()> {
     let wf = parse_workflow(&args.str_or("workflow", "financial"));
     let cfg = load_config(args, wf)?;
     println!("nodes: {}  time_scale: {}  policies: {:?}", cfg.nodes, cfg.time_scale, cfg.policies);
@@ -97,6 +106,34 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
             a.directives.managed_state,
             a.directives.max_instances
         );
+    }
+    Ok(())
+}
+
+/// `nalar bench`: the one-command reproduction of the paper's numbers
+/// (Fig. 9, Fig. 10, Table 4, §6.2), emitting schema-validated
+/// `BENCH_*.json` reports. `--quick` is the CI-smoke profile.
+fn cmd_bench(args: &Args) -> nalar::Result<()> {
+    let out_dir = PathBuf::from(args.str_or("out", "."));
+    let only: Option<Vec<String>> = args
+        .get("only")
+        .map(|s| s.split(',').map(|p| p.trim().to_string()).collect());
+    if args.flag("check-only") {
+        let names: Vec<&str> = match &only {
+            Some(list) => list.iter().map(|s| s.as_str()).collect(),
+            None => bench::ALL.to_vec(),
+        };
+        return bench::check_files(&out_dir, &names);
+    }
+    let opts = BenchOpts {
+        quick: args.flag("quick") || std::env::var("NALAR_BENCH_QUICK").is_ok(),
+        out_dir,
+        only,
+    };
+    let written = bench::run(&opts)?;
+    println!("bench reports written:");
+    for p in written {
+        println!("  {}", p.display());
     }
     Ok(())
 }

@@ -9,6 +9,7 @@
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::util::json::Value;
 
 /// Collects latency samples and computes the Fig-9 summary row.
 #[derive(Default, Debug)]
@@ -25,6 +26,21 @@ pub struct LatencySummary {
     pub p95: f64,
     pub p99: f64,
     pub max: f64,
+}
+
+impl LatencySummary {
+    /// Stable JSON form used by the `nalar bench` reports (DESIGN.md §4):
+    /// every report point carries exactly these quantile fields.
+    pub fn to_json(&self) -> Value {
+        crate::json!({
+            "count": self.count,
+            "avg": self.avg,
+            "p50": self.p50,
+            "p95": self.p95,
+            "p99": self.p99,
+            "max": self.max
+        })
+    }
 }
 
 impl LatencyRecorder {
@@ -157,5 +173,19 @@ mod tests {
     fn busy_fraction_capped() {
         let c = Counters { busy_time_us: 2_000_000, ..Default::default() };
         assert_eq!(c.busy_fraction(Duration::from_secs(1)), 1.0);
+    }
+
+    #[test]
+    fn summary_to_json_has_quantile_fields() {
+        let r = LatencyRecorder::new();
+        for i in 1..=10 {
+            r.record_secs(i as f64);
+        }
+        let v = r.summary().to_json();
+        for key in ["count", "avg", "p50", "p95", "p99", "max"] {
+            assert!(!v.get(key).is_null(), "missing `{key}`");
+        }
+        assert_eq!(v.get("count").as_usize(), Some(10));
+        assert_eq!(v.get("max").as_f64(), Some(10.0));
     }
 }

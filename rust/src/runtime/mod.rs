@@ -8,9 +8,12 @@
 //!   weight layout, model dims);
 //! * [`pjrt`] owns a dedicated executor thread that builds the
 //!   `PjRtClient`, uploads the weights once, compiles every HLO entry, and
-//!   serves prefill/decode/embed calls over a channel (the `xla` crate's
+//!   serves prefill/decode/embed calls over a channel (a real XLA binding's
 //!   handles hold raw pointers and are not `Send`, so all PJRT state lives
 //!   on that one thread — matching "one GPU, one engine" anyway);
+//! * [`xla`] is the offline stub for that binding: it mirrors the consumed
+//!   API and fails fast at client construction (DESIGN.md §PJRT), so the
+//!   `sim` executor carries every benchmark until a binding is vendored;
 //! * [`kv`] packs/unpacks per-sequence KV caches in and out of the batched
 //!   `[L, 2, B, H, S, Dh]` tensors the HLO expects — the Rust engine owns
 //!   cache placement (paper §4.3.2).
@@ -18,6 +21,7 @@
 pub mod kv;
 pub mod manifest;
 pub mod pjrt;
+pub mod xla;
 
 pub use kv::{KvBatch, SeqKv};
 pub use manifest::{EntrySig, Manifest, ModelDims};

@@ -13,6 +13,7 @@ use std::sync::{Arc, Mutex};
 use crate::error::{Error, Result};
 use crate::runtime::kv::KvBatch;
 use crate::runtime::manifest::{Manifest, ModelDims};
+use crate::runtime::xla;
 
 /// Prefill result: next-token logits per sequence + the batched KV tensor.
 pub struct PrefillOut {
@@ -205,7 +206,11 @@ fn pick<'a>(compiled: &'a [Compiled], phase: &str, n: usize) -> Result<&'a Compi
 }
 
 /// Execute with weights + data args, unwrap the 1-tuple-of-N output.
-fn exec(params: &[xla::Literal], exe: &xla::PjRtLoadedExecutable, data: Vec<xla::Literal>) -> Result<Vec<xla::Literal>> {
+fn exec(
+    params: &[xla::Literal],
+    exe: &xla::PjRtLoadedExecutable,
+    data: Vec<xla::Literal>,
+) -> Result<Vec<xla::Literal>> {
     let mut args: Vec<&xla::Literal> = params.iter().collect();
     args.extend(data.iter());
     let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;

@@ -1,0 +1,119 @@
+//! Offline stand-in for the `xla` (PJRT) bindings.
+//!
+//! The build environment cannot vendor a real XLA binding, so this module
+//! mirrors exactly the API surface [`crate::runtime::pjrt`] consumes and
+//! reports the backend as unavailable at client construction. Everything
+//! downstream (deployment launch with `executor: "pjrt"`, the quickstart
+//! example, `tests/runtime_numerics.rs`) degrades into a clean "backend
+//! unavailable" error instead of a link failure, and the `sim` executor
+//! serves all benchmarks. Dropping a real binding in means replacing this
+//! module body; no call site changes.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error raised by every entry point of the stub.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl Error {
+    fn unavailable() -> Self {
+        Error(
+            "XLA/PJRT backend not vendored in this build; use the `sim` executor \
+             (see DESIGN.md §PJRT)"
+                .into(),
+        )
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Host-side literal (tensor) handle.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Device buffer returned by an execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Computation wrapper accepted by `PjRtClient::compile`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Device client. `cpu()` is the stub's single failure point: it errors
+/// before any weights are uploaded or HLO parsed, so callers fail fast.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error::unavailable())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_fast_with_context() {
+        let err = PjRtClient::cpu().err().expect("stub must not hand out clients");
+        assert!(err.to_string().contains("not vendored"));
+        assert!(Literal::vec1(&[1.0f32]).reshape(&[1]).is_err());
+        assert!(HloModuleProto::from_text_file("nope.hlo.txt").is_err());
+    }
+}

@@ -71,9 +71,7 @@ impl Deployment {
         let loads = LoadMap::new();
         let router = Arc::new(Router::new(bus.clone(), loads.clone(), cfg.seed ^ 0xB0B0));
         let (sticky, fallback) = system.router_mode();
-        router
-            .force_sticky
-            .store(sticky, Ordering::Relaxed);
+        router.force_sticky.store(sticky, Ordering::Relaxed);
         router.set_fallback(fallback);
 
         let inner = Arc::new(Inner {
@@ -165,12 +163,13 @@ impl Deployment {
             i
         };
         let id = InstanceId::new(agent, index);
-        let node = NodeId(self.inner.next_node.fetch_add(1, Ordering::Relaxed) % self.inner.cfg.nodes);
+        let node =
+            NodeId(self.inner.next_node.fetch_add(1, Ordering::Relaxed) % self.inner.cfg.nodes);
 
         let factory = BackendFactory {
             time_scale: self.inner.cfg.time_scale,
             vector_store: self.inner.vector_store.clone(),
-            seed: self.inner.cfg.seed ^ (index as u64) << 8,
+            seed: self.inner.cfg.seed ^ ((index as u64) << 8),
         };
         let inner = &self.inner;
         let engine_builder = || -> Box<dyn EngineCore> {
@@ -264,6 +263,20 @@ impl Deployment {
     }
     pub fn loads(&self) -> &LoadMap {
         &self.inner.loads
+    }
+
+    /// Snapshot of the deployment-lifetime latency recorder in
+    /// paper-equivalent seconds (`nalar bench` / operator dashboards).
+    /// The open-loop harness records every request it drives in here.
+    pub fn latency_paper_summary(&self) -> crate::metrics::LatencySummary {
+        let paper_scale = 1.0 / self.inner.cfg.time_scale;
+        self.inner.latency.summary_scaled(paper_scale)
+    }
+
+    /// Snapshot of the global controller's per-tick timing breakdown
+    /// (collect/policy/apply — the Fig-10 metric) since launch.
+    pub fn control_timings(&self) -> Vec<crate::coordinator::global::LoopTiming> {
+        self.global().timings_snapshot()
     }
 
     /// Per-instance busy fractions (load-imbalance metric, §6.1).

@@ -175,7 +175,9 @@ impl KvCacheManager {
                     .iter()
                     .filter(|(s, e)| **s != protect && e.tier == Tier::DeviceHbm);
                 match self.policy {
-                    KvPolicy::Lru => candidates.min_by_key(|(_, e)| e.last_used_us).map(|(s, _)| *s),
+                    KvPolicy::Lru => {
+                        candidates.min_by_key(|(_, e)| e.last_used_us).map(|(s, _)| *s)
+                    }
                     KvPolicy::HintDriven => candidates
                         .min_by_key(|(_, e)| {
                             // released first, then un-retained LRU, retained last
@@ -259,7 +261,14 @@ impl KvCacheManager {
         self.make_room_locked(&mut g, bytes, session);
         g.entries.insert(
             session,
-            KvEntry { bytes, seq_len, tier: Tier::DeviceHbm, last_used_us: now, retain: false, released: false },
+            KvEntry {
+                bytes,
+                seq_len,
+                tier: Tier::DeviceHbm,
+                last_used_us: now,
+                retain: false,
+                released: false,
+            },
         );
         g.stats.hbm_used = Self::used(&g.entries, Tier::DeviceHbm);
     }

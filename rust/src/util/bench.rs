@@ -1,8 +1,10 @@
 //! Micro/macro benchmark harness (criterion substitute).
 //!
 //! `cargo bench` targets are plain binaries (`harness = false`); each uses
-//! these helpers: warmup + timed iterations with mean/p50/p99, and an
-//! aligned table printer for the paper-figure reproductions.
+//! these helpers: warmup + timed iterations with mean/p50/p95/p99, and an
+//! aligned table printer for the paper-figure reproductions. The figure
+//! reproductions themselves live in [`crate::bench`], which layers a
+//! machine-readable report (`BENCH_*.json`) on top of these primitives.
 
 use std::time::{Duration, Instant};
 
@@ -12,6 +14,7 @@ pub struct Timing {
     pub iters: u64,
     pub mean: Duration,
     pub p50: Duration,
+    pub p95: Duration,
     pub p99: Duration,
     pub min: Duration,
     pub max: Duration,
@@ -27,9 +30,10 @@ impl std::fmt::Display for Timing {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "mean {:>10} p50 {:>10} p99 {:>10} (n={})",
+            "mean {:>10} p50 {:>10} p95 {:>10} p99 {:>10} (n={})",
             fmt_dur(self.mean),
             fmt_dur(self.p50),
+            fmt_dur(self.p95),
             fmt_dur(self.p99),
             self.iters
         )
@@ -47,6 +51,15 @@ pub fn fmt_dur(d: Duration) -> String {
     } else {
         format!("{:.2}s", ns as f64 / 1e9)
     }
+}
+
+/// Nearest-rank quantile over a **sorted** slice (`p` in `[0, 1]`).
+pub fn quantile_sorted(sorted: &[Duration], p: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let idx = (((sorted.len() - 1) as f64) * p).round() as usize;
+    sorted[idx]
 }
 
 /// Time `f` for ~`budget` (after `warmup` iterations); per-iteration stats.
@@ -74,12 +87,12 @@ pub fn summarize(samples: &mut [Duration]) -> Timing {
     samples.sort();
     let n = samples.len().max(1);
     let total: Duration = samples.iter().sum();
-    let q = |p: f64| samples[(((n - 1) as f64) * p).round() as usize];
     Timing {
         iters: n as u64,
         mean: total / n as u32,
-        p50: q(0.50),
-        p99: q(0.99),
+        p50: quantile_sorted(samples, 0.50),
+        p95: quantile_sorted(samples, 0.95),
+        p99: quantile_sorted(samples, 0.99),
         min: samples.first().copied().unwrap_or_default(),
         max: samples.last().copied().unwrap_or_default(),
     }
@@ -133,7 +146,7 @@ mod tests {
             std::hint::black_box(1 + 1);
         });
         assert!(t.iters >= 10);
-        assert!(t.min <= t.p50 && t.p50 <= t.p99 && t.p99 <= t.max);
+        assert!(t.min <= t.p50 && t.p50 <= t.p95 && t.p95 <= t.p99 && t.p99 <= t.max);
     }
 
     #[test]
@@ -141,6 +154,15 @@ mod tests {
         assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
         assert!(fmt_dur(Duration::from_micros(1500)).ends_with("ms"));
         assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+
+    #[test]
+    fn quantiles_on_sorted_samples() {
+        let xs: Vec<Duration> = (1..=100u64).map(Duration::from_millis).collect();
+        assert_eq!(quantile_sorted(&xs, 0.0), Duration::from_millis(1));
+        assert_eq!(quantile_sorted(&xs, 1.0), Duration::from_millis(100));
+        assert!(quantile_sorted(&xs, 0.95) >= quantile_sorted(&xs, 0.50));
+        assert_eq!(quantile_sorted(&[], 0.5), Duration::ZERO);
     }
 
     #[test]

@@ -86,9 +86,13 @@ mod tests {
 
     #[test]
     fn flag_before_positional() {
-        // `--flag value` consumes value; use --flag= or trailing flags
+        // A `--flag` followed by another `--opt` stays a flag; a `--flag`
+        // followed by a bare word consumes it as a value, so positionals
+        // that must survive go before the flag (or use `--opt=value`).
         let a = parse("--dry-run --out=file.txt pos");
-        assert!(a.get("dry-run").is_some() || a.flag("dry-run") || a.str_or("dry-run", "") == "pos" || true);
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.str_or("out", ""), "file.txt");
+        assert_eq!(a.positional, vec!["pos"]);
         let b = parse("pos --verbose");
         assert!(b.flag("verbose"));
         assert_eq!(b.positional, vec!["pos"]);

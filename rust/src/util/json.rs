@@ -22,12 +22,19 @@ pub enum Value {
     Obj(Map),
 }
 
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParseError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 static NULL: Value = Value::Null;
 
@@ -119,12 +126,7 @@ impl Value {
     }
 
     // ------------------------------------------------------------- writing
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s, None, 0);
-        s
-    }
-
+    // Compact text comes from the `Display` impl (`value.to_string()`).
     pub fn pretty(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, Some(2), 0);
@@ -210,7 +212,9 @@ fn write_escaped(out: &mut String, s: &str) {
 
 impl fmt::Display for Value {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(&self.to_string())
+        let mut s = String::new();
+        self.write(&mut s, None, 0);
+        f.write_str(&s)
     }
 }
 
@@ -614,7 +618,7 @@ mod tests {
         assert_eq!(v.f64_or("x", 0.0), 2.0);
         assert_eq!(v.f64_or("missing", 7.0), 7.0);
         assert_eq!(v.str_or("s", "d"), "y");
-        assert_eq!(v.bool_or("b", false), true);
+        assert!(v.bool_or("b", false));
         assert_eq!(v.u64_or("missing", 9), 9);
     }
 

@@ -1,14 +1,15 @@
 //! Self-built utility substrates.
 //!
-//! The build environment is fully offline with only `xla`, `anyhow` and
-//! `thiserror` vendorable, so the usual ecosystem crates are implemented
-//! here from scratch (DESIGN.md §3 substitution table):
+//! The build environment is fully offline (zero external dependencies),
+//! so the usual ecosystem crates are implemented here from scratch
+//! (DESIGN.md §3 substitution table):
 //!
 //! * [`json`] — serde_json substitute: value model, parser, writer, `json!`.
 //! * [`rng`] — rand/rand_distr substitute: xoshiro256++, exp/lognormal/
 //!   Poisson/Zipf samplers.
 //! * [`cli`] — clap substitute: flag/option/positional parsing.
-//! * [`bench`] — criterion substitute: timing loops + table printer.
+//! * [`bench`] — criterion substitute: timing loops + table printer
+//!   (figure-level reporting lives in [`crate::bench`]).
 
 pub mod bench;
 pub mod cli;

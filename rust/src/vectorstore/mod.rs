@@ -150,9 +150,13 @@ mod tests {
     fn similar_texts_score_higher() {
         let e = HashEmbedder::new(128);
         let store = VectorStore::new(128);
-        store.add("oauth2 token refresh documentation", e.embed("oauth2 token refresh documentation"));
-        store.add("database connection pooling guide", e.embed("database connection pooling guide"));
-        store.add("oauth login setup for web apps", e.embed("oauth login setup for web apps"));
+        for text in [
+            "oauth2 token refresh documentation",
+            "database connection pooling guide",
+            "oauth login setup for web apps",
+        ] {
+            store.add(text, e.embed(text));
+        }
 
         let hits = store.query(&e.embed("how to set up oauth login"), 2);
         assert_eq!(hits.len(), 2);
@@ -188,9 +192,10 @@ mod tests {
         for t in 0..4 {
             let store = store.clone();
             handles.push(std::thread::spawn(move || {
+                let e = HashEmbedder::new(32);
                 for i in 0..50 {
-                    store.add(format!("doc {t} {i}"), HashEmbedder::new(32).embed(&format!("doc {t} {i}")));
-                    store.query(&HashEmbedder::new(32).embed("doc"), 3);
+                    store.add(format!("doc {t} {i}"), e.embed(&format!("doc {t} {i}")));
+                    store.query(&e.embed("doc"), 3);
                 }
             }));
         }

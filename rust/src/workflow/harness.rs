@@ -149,14 +149,18 @@ pub fn run_open_loop(d: &Deployment, rc: &RunConfig) -> (RunStats, Arc<LatencyRe
             let timeout = rc.request_timeout;
             scope.spawn(move || {
                 let t0 = Instant::now();
-                match run_request(d, kind, session, &input, timeout) {
+                let outcome = run_request(d, kind, session, &input, timeout);
+                let elapsed = t0.elapsed();
+                // per-run recorder (this experiment's cell) plus the
+                // deployment-lifetime recorder exposed by the server.
+                recorder.record(elapsed);
+                d.latency().record(elapsed);
+                match outcome {
                     Ok(_) => {
-                        recorder.record(t0.elapsed());
                         completed.fetch_add(1, Ordering::Relaxed);
                     }
                     Err(_) => {
                         // timeouts/failures also contribute tail latency
-                        recorder.record(t0.elapsed());
                         failed.fetch_add(1, Ordering::Relaxed);
                     }
                 }
@@ -208,6 +212,9 @@ mod tests {
         assert_eq!(stats.failed, 0, "unexpected failures");
         assert!(stats.latency.p99 >= stats.latency.p50);
         assert!(stats.imbalance >= 1.0);
+        // the deployment-lifetime recorder saw every request too
+        assert_eq!(d.latency().len() as u64, stats.completed + stats.failed);
+        assert!(d.latency_paper_summary().p99 > 0.0);
         d.shutdown();
     }
 

@@ -73,7 +73,9 @@ pub fn finqa_question(rng: &mut Rng) -> String {
     let mut q = rng.choice(FRAMES).replace("{s}", s);
     // occasional long, multi-part analyst question (heavy tail)
     if rng.bool_with(0.2) {
-        q.push_str(" Then reconcile with the cash flow statement and flag any anomalies in footnotes.");
+        q.push_str(
+            " Then reconcile with the cash flow statement and flag any anomalies in footnotes.",
+        );
     }
     q
 }

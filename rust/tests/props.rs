@@ -147,8 +147,13 @@ fn prop_managed_list_migration_preserves_content() {
 
 #[test]
 fn prop_rng_zipf_and_below_in_range() {
-    check_n("samplers stay in range", 64, |r, _| (r.next_u64(), 1 + r.below(40) as usize), |(seed, n)| {
-        let mut r = Rng::new(*seed);
-        (0..50).all(|_| r.zipf(*n, 1.2) < *n && (r.below(*n as u64) as usize) < *n)
-    });
+    check_n(
+        "samplers stay in range",
+        64,
+        |r, _| (r.next_u64(), 1 + r.below(40) as usize),
+        |(seed, n)| {
+            let mut r = Rng::new(*seed);
+            (0..50).all(|_| r.zipf(*n, 1.2) < *n && (r.below(*n as u64) as usize) < *n)
+        },
+    );
 }

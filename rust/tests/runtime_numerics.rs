@@ -4,17 +4,32 @@
 //!
 //! (Cross-checking exact values against jax happens in the python suite;
 //! here we verify the runtime-visible *invariants* of the same artifacts.)
+//!
+//! Gating: the whole suite compiles only with `--features pjrt`, and each
+//! test skips cleanly when `artifacts/` is missing or the PJRT backend is
+//! the offline stub. Set `NALAR_REQUIRE_ARTIFACTS=1` to turn those skips
+//! into hard failures (for environments that promise a real backend).
+#![cfg(feature = "pjrt")]
 
 use nalar::engine::tokenizer::{argmax, Tokenizer};
 use nalar::runtime::{KvBatch, PjrtModel};
 
 fn artifacts() -> Option<PjrtModel> {
+    let required = std::env::var("NALAR_REQUIRE_ARTIFACTS").is_ok();
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
+        assert!(!required, "NALAR_REQUIRE_ARTIFACTS set but artifacts/ is missing");
         eprintln!("skipping: run `make artifacts` first");
         return None;
     }
-    Some(PjrtModel::load(dir).expect("artifacts load"))
+    match PjrtModel::load(dir) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            assert!(!required, "NALAR_REQUIRE_ARTIFACTS set but PJRT load failed: {e}");
+            eprintln!("skipping: PJRT backend unavailable ({e})");
+            None
+        }
+    }
 }
 
 #[test]
