@@ -1,6 +1,6 @@
 # Local entrypoints — identical to what CI runs (.github/workflows/ci.yml).
 
-.PHONY: build test fmt clippy lint bench bench-quick artifacts clean
+.PHONY: build test fmt clippy lint bench bench-quick loadgen loadgen-quick artifacts clean
 
 build:
 	cargo build --release --all-targets
@@ -25,6 +25,16 @@ bench:
 bench-quick:
 	cargo run --release -- bench --quick
 	cargo run --release -- bench --check-only
+
+# Full §6 saturation sweep through the ingress front door: writes
+# BENCH_rps_sweep.json at the repo root (minutes).
+loadgen:
+	cargo run --release -- loadgen
+
+# CI-smoke sweep (seconds) + schema validation — what loadgen-smoke runs.
+loadgen-quick:
+	cargo run --release -- loadgen --quick
+	cargo run --release -- loadgen --check-only
 
 # OPTIONAL / offline-skippable: lowers the L2 JAX transformer (with the L1
 # Pallas attention kernels) to HLO text + a weights blob for the PJRT

@@ -67,16 +67,19 @@ impl SystemUnderTest {
                 cfg.policies.clear();
                 cfg.control.enable_migration = false;
                 cfg.engine.kv_policy = "lru".into();
+                cfg.ingress.policy = "unbounded".into();
             }
             SystemUnderTest::CrewLike => {
                 cfg.policies.clear();
                 cfg.control.enable_migration = false;
                 cfg.engine.kv_policy = "lru".into();
+                cfg.ingress.policy = "unbounded".into();
             }
             SystemUnderTest::AutoGenLike => {
                 cfg.policies.clear();
                 cfg.control.enable_migration = false;
                 cfg.engine.kv_policy = "lru".into();
+                cfg.ingress.policy = "unbounded".into();
             }
         }
     }
@@ -111,6 +114,7 @@ mod tests {
         assert_eq!(cfg.policies.len(), 3);
         assert!(cfg.control.enable_migration);
         assert_eq!(cfg.engine.kv_policy, "hint");
+        assert_eq!(cfg.ingress.policy, "bounded", "NALAR keeps admission control");
     }
 
     #[test]
@@ -123,6 +127,7 @@ mod tests {
             s.apply(&mut cfg);
             assert!(cfg.policies.is_empty(), "{}", s.name());
             assert!(!cfg.control.enable_migration);
+            assert_eq!(cfg.ingress.policy, "unbounded", "{} has no admission control", s.name());
             let (sticky, _) = s.router_mode();
             assert!(sticky, "{} must be session-sticky", s.name());
         }

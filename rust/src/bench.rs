@@ -50,6 +50,10 @@ pub const SCHEMA: &str = "nalar-bench/v1";
 /// Report names in execution order.
 pub const ALL: &[&str] = &["fig9", "fig10", "table4", "sec62"];
 
+/// The §6 saturation sweep written by `nalar loadgen` (not part of
+/// [`ALL`]: it has its own subcommand), validated by the same schema gate.
+pub const RPS_SWEEP: &str = "rps_sweep";
+
 /// Options for one `nalar bench` invocation.
 #[derive(Debug, Clone)]
 pub struct BenchOpts {
@@ -76,23 +80,30 @@ impl BenchOpts {
     }
 }
 
-fn check_known(names: &[String]) -> Result<()> {
+fn check_known(names: &[String], known: &[&str]) -> Result<()> {
     for n in names {
-        if !ALL.contains(&n.as_str()) {
+        if !known.contains(&n.as_str()) {
             return Err(Error::Config(format!(
                 "unknown bench `{n}` (known: {})",
-                ALL.join(", ")
+                known.join(", ")
             )));
         }
     }
     Ok(())
 }
 
+/// Every report name the schema gate accepts (`ALL` + the loadgen sweep).
+fn known_reports() -> Vec<&'static str> {
+    let mut v = ALL.to_vec();
+    v.push(RPS_SWEEP);
+    v
+}
+
 /// Run the selected reproductions, validate each report against the
 /// schema, and write `BENCH_<name>.json` files. Returns the paths written.
 pub fn run(opts: &BenchOpts) -> Result<Vec<PathBuf>> {
     if let Some(list) = &opts.only {
-        check_known(list)?;
+        check_known(list, ALL)?;
     }
     let mut written = Vec::new();
     for name in ALL {
@@ -136,7 +147,7 @@ pub fn write_report(dir: &Path, name: &str, report: &Value) -> Result<PathBuf> {
 /// Re-validate reports already on disk (CI's schema gate).
 pub fn check_files(dir: &Path, names: &[&str]) -> Result<()> {
     let owned: Vec<String> = names.iter().map(|n| n.to_string()).collect();
-    check_known(&owned)?;
+    check_known(&owned, &known_reports())?;
     for name in names {
         let path = report_path(dir, name);
         let text = std::fs::read_to_string(&path)
@@ -178,6 +189,18 @@ pub fn validate(report: &Value) -> Result<()> {
         "fig10" => &["nodes", "agents", "futures"],
         "table4" => &["futures", "one_level", "speedup"],
         "sec62" => &["study", "policy"],
+        "rps_sweep" => &[
+            "workflow",
+            "system",
+            "rps_wall",
+            "rps_paper",
+            "offered",
+            "completed",
+            "failed",
+            "shed",
+            "goodput_rps",
+            "shed_rate",
+        ],
         other => return Err(fail(format!("unknown bench `{other}`"))),
     };
     for (i, p) in points.iter().enumerate() {
@@ -196,7 +219,7 @@ pub fn validate(report: &Value) -> Result<()> {
     Ok(())
 }
 
-fn report(bench: &str, quick: bool, latency_unit: &str, points: Vec<Value>) -> Value {
+pub(crate) fn report(bench: &str, quick: bool, latency_unit: &str, points: Vec<Value>) -> Value {
     let mut v = json!({
         "schema": SCHEMA,
         "bench": bench,
@@ -680,6 +703,20 @@ mod tests {
         assert!(validate(&bad).is_err());
         let empty = report("fig10", true, "ms", vec![]);
         assert!(validate(&empty).is_err());
+    }
+
+    #[test]
+    fn validate_accepts_rps_sweep_points() {
+        let mut p = json!({
+            "workflow": "router", "system": "NALAR", "rps_wall": 80.0, "rps_paper": 8.0,
+            "offered": 640, "completed": 600, "failed": 10, "shed": 30,
+            "goodput_rps": 75.0, "shed_rate": 0.047
+        });
+        p.insert("latency", lat());
+        validate(&minimal_report("rps_sweep", p)).unwrap();
+        let mut missing = json!({"workflow": "router", "system": "NALAR"});
+        missing.insert("latency", lat());
+        assert!(validate(&minimal_report("rps_sweep", missing)).is_err());
     }
 
     #[test]

@@ -31,6 +31,7 @@ pub struct DeploymentConfig {
     /// later policies see earlier policies' effects next tick.
     pub policies: Vec<String>,
     pub engine: EngineConfig,
+    pub ingress: IngressSettings,
     pub seed: u64,
 }
 
@@ -158,6 +159,37 @@ pub struct AgentConfig {
     pub failure_rate: f64,
 }
 
+/// Ingress front-door settings (the open-loop serving mode; see
+/// [`crate::ingress`]). Baselines are forced to `unbounded` admission by
+/// [`crate::baselines::SystemUnderTest::apply`] — none of the compared
+/// systems ships an admission controller.
+#[derive(Debug, Clone)]
+pub struct IngressSettings {
+    /// Admission policy: `unbounded` | `bounded` | `token_bucket`.
+    pub policy: String,
+    /// Bounded-queue capacity per workflow queue.
+    pub queue_cap: usize,
+    /// Driver-pool worker threads draining the queues.
+    pub workers: usize,
+    /// Token-bucket refill rate (requests/second, wall clock). 0 means
+    /// unlimited (the bucket never runs dry).
+    pub token_rate: f64,
+    /// Token-bucket burst size.
+    pub token_burst: f64,
+}
+
+impl Default for IngressSettings {
+    fn default() -> Self {
+        IngressSettings {
+            policy: "bounded".into(),
+            queue_cap: 256,
+            workers: 64,
+            token_rate: 0.0,
+            token_burst: 32.0,
+        }
+    }
+}
+
 /// LLM engine settings (vLLM substitute).
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -218,6 +250,17 @@ impl DeploymentConfig {
                 artifacts_dir: e.str_or("artifacts_dir", "artifacts").to_string(),
             }
         };
+        let ingress = {
+            let i = v.get("ingress");
+            let di = IngressSettings::default();
+            IngressSettings {
+                policy: i.str_or("policy", &di.policy).to_string(),
+                queue_cap: i.u64_or("queue_cap", di.queue_cap as u64) as usize,
+                workers: i.u64_or("workers", di.workers as u64) as usize,
+                token_rate: i.f64_or("token_rate", di.token_rate),
+                token_burst: i.f64_or("token_burst", di.token_burst),
+            }
+        };
         let agents = v
             .get("agents")
             .as_arr()
@@ -242,6 +285,7 @@ impl DeploymentConfig {
             agents,
             policies,
             engine,
+            ingress,
             seed: v.u64_or("seed", 0),
         })
     }
@@ -335,6 +379,15 @@ impl DeploymentConfig {
         if self.agents.is_empty() {
             return Err(Error::Config("no agents declared".into()));
         }
+        if !["unbounded", "bounded", "token_bucket"].contains(&self.ingress.policy.as_str()) {
+            return Err(Error::Config(format!(
+                "unknown ingress policy `{}`",
+                self.ingress.policy
+            )));
+        }
+        if self.ingress.workers == 0 {
+            return Err(Error::Config("ingress.workers must be >= 1".into()));
+        }
         Ok(())
     }
 
@@ -362,6 +415,23 @@ mod tests {
         assert_eq!(c.agents[0].instances, 1);
         assert!(!c.agents[0].directives.stateful);
         assert_eq!(c.agents[0].methods, vec!["plan"]);
+        assert_eq!(c.ingress.policy, "bounded");
+        assert_eq!(c.ingress.queue_cap, 256);
+    }
+
+    #[test]
+    fn ingress_section_parses_and_validates() {
+        let y = r#"{"ingress": {"policy": "token_bucket", "queue_cap": 32, "workers": 8,
+                     "token_rate": 50.0, "token_burst": 10.0},
+                    "agents": [{"name": "a", "kind": "llm", "methods": ["m"]}]}"#;
+        let c = DeploymentConfig::from_json(y).unwrap();
+        assert_eq!(c.ingress.policy, "token_bucket");
+        assert_eq!(c.ingress.queue_cap, 32);
+        assert_eq!(c.ingress.workers, 8);
+        assert_eq!(c.ingress.token_rate, 50.0);
+        let bad = r#"{"ingress": {"policy": "magic"},
+                      "agents": [{"name": "a", "kind": "llm"}]}"#;
+        assert!(DeploymentConfig::from_json(bad).is_err());
     }
 
     #[test]

@@ -26,7 +26,6 @@ use crate::ids::{InstanceId, NodeId, SessionId};
 use crate::json;
 use crate::nodestore::{keys, NodeStore, StoreDirectory, Subscription};
 use crate::state::kvcache::KvCacheManager;
-use crate::state::migrate_session_state;
 use crate::transport::{Bus, CallMsg, Message, MigratePayload};
 
 /// Queue ordering installed by the global controller (`policy/{instance}`).
@@ -393,13 +392,14 @@ impl ComponentController {
             }
             Backend::Tool(_) => 0,
         };
-        // step 5: managed state moves between node stores
+        // step 5: managed state moves between node stores. The session's
+        // state is not necessarily on *this* instance's node (its home is
+        // `session % nodes`, and prior migrations may have moved it), so
+        // the directory resolves the current source and records the new
+        // location for future binds.
         let state = {
             let target_node = self.bus.node_of(&to).unwrap_or(self.node);
-            if target_node != self.node {
-                let dst = self.stores.node(target_node);
-                migrate_session_state(&self.store, &dst, session);
-            }
+            self.stores.migrate_session(session, target_node);
             Vec::new() // state moved store-to-store; payload carries size only
         };
         // step 4: creator learns the executor changed -> future routes repin

@@ -17,7 +17,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::component::LocalOrder;
 use crate::coordinator::policy::{Policy, PolicyApi, PolicyCmd};
 use crate::coordinator::router::{LoadMap, Router};
-use crate::coordinator::InstanceMetrics;
+use crate::coordinator::{IngressMetrics, InstanceMetrics};
 use crate::futures::{FutureState, FutureTable};
 use crate::ids::{InstanceId, NodeId};
 use crate::nodestore::{keys, StoreDirectory};
@@ -35,6 +35,9 @@ pub struct InstanceView {
 #[derive(Debug, Clone, Default)]
 pub struct ClusterView {
     pub instances: Vec<InstanceView>,
+    /// Ingress front-door queues (one entry per workflow), when an
+    /// [`crate::ingress::Ingress`] is serving this deployment.
+    pub ingress: Vec<IngressMetrics>,
     pub future_counts: HashMap<FutureState, usize>,
     pub total_futures: usize,
     /// Telemetry collection time for this tick (Fig. 10 breakdown).
@@ -143,10 +146,18 @@ impl GlobalController {
         instances.sort_by(|a, b| {
             (a.id.agent.as_str(), a.id.index).cmp(&(b.id.agent.as_str(), b.id.index))
         });
+        let mut ingress: Vec<IngressMetrics> = Vec::new();
+        for (_node, store) in self.stores.nodes() {
+            for (_key, m) in store.scan::<IngressMetrics>(keys::INGRESS_PREFIX) {
+                ingress.push((*m).clone());
+            }
+        }
+        ingress.sort_by(|a, b| a.workflow.cmp(&b.workflow));
         let future_counts = self.table.state_counts();
         let total_futures = future_counts.values().sum();
         ClusterView {
             instances,
+            ingress,
             future_counts,
             total_futures,
             collect_time: t0.elapsed(),
@@ -305,6 +316,29 @@ mod tests {
         assert_eq!(view.instances.len(), 2);
         assert_eq!(view.mean_load("b"), 5.0);
         assert_eq!(view.agents(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn collect_surfaces_ingress_telemetry() {
+        let (g, _bus, stores, _t) = mk_global(vec![]);
+        stores.node(NodeId(0)).put(
+            &keys::ingress("router"),
+            IngressMetrics {
+                workflow: "router".into(),
+                depth: 17,
+                cap: 64,
+                policy: "bounded".into(),
+                accepted: 100,
+                shed: 9,
+                ..Default::default()
+            },
+        );
+        let view = g.collect();
+        assert_eq!(view.ingress.len(), 1);
+        let ing = &view.ingress[0];
+        assert_eq!(ing.workflow, "router");
+        assert_eq!(ing.depth, 17);
+        assert_eq!(ing.shed, 9, "shed counts must reach policies");
     }
 
     #[test]

@@ -49,3 +49,22 @@ pub struct InstanceMetrics {
     /// Sessions currently waiting in this instance's queue, with wait ms.
     pub waiting_sessions: Vec<(SessionId, u64)>,
 }
+
+/// Telemetry the ingress front door pushes per workflow queue (node store
+/// `ingress/{workflow}`). The global controller aggregates these alongside
+/// [`InstanceMetrics`], so overload-aware policies see queue depth and shed
+/// pressure in the same [`global::ClusterView`] they already consume.
+#[derive(Debug, Clone, Default)]
+pub struct IngressMetrics {
+    pub workflow: String,
+    /// Requests waiting in the front-door queue right now.
+    pub depth: usize,
+    /// Bounded-queue capacity (0 = unbounded).
+    pub cap: usize,
+    /// Admission-policy name ("unbounded" | "bounded" | "token_bucket").
+    pub policy: String,
+    pub accepted: u64,
+    pub shed: u64,
+    pub completed: u64,
+    pub failed: u64,
+}

@@ -155,6 +155,75 @@ impl Policy for ResourceRealloc {
     }
 }
 
+/// React to ingress overload: when the front door reports deep queues or
+/// fresh sheds, provision another instance of the hottest agent type. This
+/// is the control loop that lets NALAR *absorb* load the admission
+/// controller would otherwise keep shedding — the paper's "sustains 80 RPS
+/// where baselines fail" capacity story (§6): baselines have neither the
+/// telemetry nor the `provision` primitive.
+pub struct OverloadProvision {
+    /// Fraction of a bounded queue's cap that counts as overloaded.
+    pub depth_frac: f64,
+    /// Absolute depth that counts as overloaded on unbounded queues.
+    pub depth_abs: usize,
+    /// Ticks to wait between provisions (damping).
+    pub cooldown: u32,
+    since_last: u32,
+    last_shed: u64,
+}
+
+impl Default for OverloadProvision {
+    fn default() -> Self {
+        OverloadProvision {
+            depth_frac: 0.5,
+            depth_abs: 64,
+            cooldown: 5,
+            since_last: u32::MAX / 2,
+            last_shed: 0,
+        }
+    }
+}
+
+impl Policy for OverloadProvision {
+    fn name(&self) -> &'static str {
+        "overload_provision"
+    }
+
+    fn tick(&mut self, view: &ClusterView, api: &mut PolicyApi) {
+        self.since_last = self.since_last.saturating_add(1);
+        if self.since_last < self.cooldown {
+            // don't commit `last_shed` while cooling down: sheds observed
+            // in the window still count at the first post-cooldown tick
+            return;
+        }
+        let total_shed: u64 = view.ingress.iter().map(|i| i.shed).sum();
+        let shedding = total_shed > self.last_shed;
+        self.last_shed = total_shed;
+        let deep = view.ingress.iter().any(|i| {
+            if i.cap > 0 {
+                i.depth as f64 >= self.depth_frac * i.cap as f64
+            } else {
+                i.depth >= self.depth_abs
+            }
+        });
+        if !(shedding || deep) {
+            return;
+        }
+        // The bottleneck is the agent type with the highest mean queue —
+        // give it capacity. `provision` is a no-op past max_instances.
+        let hottest = view
+            .agents()
+            .into_iter()
+            .max_by(|a, b| view.mean_load(a).total_cmp(&view.mean_load(b)));
+        if let Some(agent) = hottest {
+            if view.mean_load(&agent) > 0.0 {
+                api.provision(&agent);
+                self.since_last = 0;
+            }
+        }
+    }
+}
+
 /// §6.2 "Minimize JCT": SRTF via the call-graph stage heuristic — calls
 /// from later stages of the graph have the least remaining work, so they
 /// get higher priority. (The paper: 12 lines; so is this tick.)
@@ -327,6 +396,50 @@ mod tests {
         let mut api2 = PolicyApi::new();
         p.tick(&v, &mut api2); // immediately after acting: cooldown
         assert!(first > 0 && api2.commands().is_empty());
+    }
+
+    #[test]
+    fn overload_provision_reacts_to_shed_and_depth() {
+        use crate::coordinator::IngressMetrics;
+        let mut v = view(vec![iv("coder", 0, 12, 0)]);
+        v.ingress = vec![IngressMetrics {
+            workflow: "router".into(),
+            depth: 40,
+            cap: 64,
+            policy: "bounded".into(),
+            accepted: 100,
+            shed: 5,
+            ..Default::default()
+        }];
+        let mut p = OverloadProvision::default();
+        let mut api = PolicyApi::new();
+        p.tick(&v, &mut api); // first tick sees shed going 0 -> 5 and depth >= cap/2
+        assert!(api
+            .commands()
+            .iter()
+            .any(|c| matches!(c, PolicyCmd::Provision { agent } if agent == "coder")));
+        // immediately after acting: cooldown damps
+        let mut api2 = PolicyApi::new();
+        p.tick(&v, &mut api2);
+        assert!(api2.commands().is_empty());
+    }
+
+    #[test]
+    fn overload_provision_idle_ingress_is_inert() {
+        use crate::coordinator::IngressMetrics;
+        let mut v = view(vec![iv("coder", 0, 2, 0)]);
+        v.ingress = vec![IngressMetrics {
+            workflow: "router".into(),
+            depth: 1,
+            cap: 64,
+            policy: "bounded".into(),
+            accepted: 100,
+            ..Default::default()
+        }];
+        let mut p = OverloadProvision::default();
+        let mut api = PolicyApi::new();
+        p.tick(&v, &mut api);
+        assert!(api.commands().is_empty(), "no shed, shallow queue: no action");
     }
 
     #[test]

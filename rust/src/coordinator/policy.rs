@@ -97,6 +97,7 @@ pub fn make_policy(name: &str) -> Option<Box<dyn Policy>> {
         "load_balance" => Box::new(LoadBalance::default()),
         "hol_migration" => Box::new(HolMigration::default()),
         "resource_realloc" => Box::new(ResourceRealloc::default()),
+        "overload_provision" => Box::new(OverloadProvision::default()),
         "srtf" => Box::new(Srtf::default()),
         "lpt" => Box::new(Lpt::default()),
         "fcfs" => Box::new(Fcfs),
@@ -121,7 +122,15 @@ mod tests {
 
     #[test]
     fn registry_resolves_known_policies() {
-        for p in ["load_balance", "hol_migration", "resource_realloc", "srtf", "lpt", "fcfs"] {
+        for p in [
+            "load_balance",
+            "hol_migration",
+            "resource_realloc",
+            "overload_provision",
+            "srtf",
+            "lpt",
+            "fcfs",
+        ] {
             assert!(make_policy(p).is_some(), "{p} missing");
         }
         assert!(make_policy("nope").is_none());

@@ -21,6 +21,13 @@ pub enum Error {
     FutureTimeout(FutureId, std::time::Duration),
     NoInstance(String),
     UnknownAgent(String),
+    /// Admission control rejected the request at the ingress front door
+    /// (`(workflow, reason)`). Always retryable: the request never entered
+    /// the system, so the caller may back off and resubmit.
+    Shed(String, String),
+    /// The request's end-to-end deadline expired before (or while) a
+    /// driver ran it.
+    Deadline(std::time::Duration),
     InstanceKilled(InstanceId),
     Engine(String),
     Runtime(String),
@@ -40,6 +47,10 @@ impl fmt::Display for Error {
             }
             Error::FutureTimeout(id, after) => write!(f, "future {id} timed out after {after:?}"),
             Error::NoInstance(agent) => write!(f, "no instance available for agent type `{agent}`"),
+            Error::Shed(workflow, reason) => {
+                write!(f, "request shed at ingress for `{workflow}`: {reason}")
+            }
+            Error::Deadline(after) => write!(f, "request deadline expired after {after:?}"),
             Error::UnknownAgent(agent) => write!(f, "unknown agent type `{agent}`"),
             Error::InstanceKilled(i) => write!(f, "instance {i} was killed"),
             Error::Engine(e) => write!(f, "engine error: {e}"),
@@ -95,6 +106,8 @@ impl Error {
                 | Error::FutureTimeout(..)
                 | Error::InstanceKilled(..)
                 | Error::NoInstance(..)
+                | Error::Shed(..)
+                | Error::Deadline(..)
         )
     }
 }
@@ -107,6 +120,8 @@ mod tests {
     fn retryable_classification() {
         assert!(Error::FutureTimeout(FutureId(1), std::time::Duration::from_secs(1)).retryable());
         assert!(Error::NoInstance("x".into()).retryable());
+        assert!(Error::Shed("router".into(), "queue full".into()).retryable());
+        assert!(Error::Deadline(std::time::Duration::from_secs(3)).retryable());
         assert!(!Error::Config("bad".into()).retryable());
         assert!(!Error::Engine("x".into()).retryable());
     }

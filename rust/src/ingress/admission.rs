@@ -1,0 +1,174 @@
+//! Admission control at the serving front door.
+//!
+//! Open-loop traffic does not slow down when the system does — arrivals
+//! keep coming, and something must give: either the queue (bounded
+//! shedding), the arrival rate (token bucket), or latency (unbounded, the
+//! baseline failure mode the §6 saturation sweep exposes). One
+//! [`AdmissionController`] guards each workflow queue; its accept/shed
+//! counters flow into [`crate::coordinator::IngressMetrics`] telemetry.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::config::IngressSettings;
+
+/// How the front door decides accept-vs-shed at submit time.
+#[derive(Debug, Clone)]
+pub enum AdmissionPolicy {
+    /// Accept everything. The queue absorbs overload and latency diverges
+    /// instead — how every compared baseline behaves (§2.3).
+    Unbounded,
+    /// Shed when the target queue already holds `cap` requests: bounds
+    /// both queue memory and worst-case queueing delay, and turns
+    /// overload into fast, retryable rejections.
+    Bounded { cap: usize },
+    /// Token bucket: admit at most `rate` requests/second (wall clock),
+    /// with bursts up to `burst` tokens.
+    TokenBucket { rate: f64, burst: f64 },
+}
+
+impl AdmissionPolicy {
+    /// Resolve the configured policy (`DeploymentConfig.ingress`).
+    pub fn from_settings(s: &IngressSettings) -> AdmissionPolicy {
+        match s.policy.as_str() {
+            "unbounded" => AdmissionPolicy::Unbounded,
+            "token_bucket" => AdmissionPolicy::TokenBucket {
+                rate: if s.token_rate > 0.0 { s.token_rate } else { f64::INFINITY },
+                burst: s.token_burst.max(1.0),
+            },
+            _ => AdmissionPolicy::Bounded { cap: s.queue_cap.max(1) },
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Unbounded => "unbounded",
+            AdmissionPolicy::Bounded { .. } => "bounded",
+            AdmissionPolicy::TokenBucket { .. } => "token_bucket",
+        }
+    }
+
+    /// Queue cap this policy enforces (0 = unbounded).
+    pub fn cap(&self) -> usize {
+        match self {
+            AdmissionPolicy::Bounded { cap } => *cap,
+            _ => 0,
+        }
+    }
+}
+
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// Accept/shed decision state for one workflow queue.
+pub struct AdmissionController {
+    policy: AdmissionPolicy,
+    bucket: Mutex<Bucket>,
+    pub accepted: AtomicU64,
+    pub shed: AtomicU64,
+}
+
+impl AdmissionController {
+    pub fn new(policy: AdmissionPolicy) -> AdmissionController {
+        let burst = match &policy {
+            AdmissionPolicy::TokenBucket { burst, .. } => *burst,
+            _ => 0.0,
+        };
+        AdmissionController {
+            policy,
+            bucket: Mutex::new(Bucket { tokens: burst, last: Instant::now() }),
+            accepted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+        }
+    }
+
+    pub fn policy(&self) -> &AdmissionPolicy {
+        &self.policy
+    }
+
+    /// Decide for one request given the current queue `depth`. Updates the
+    /// accept/shed counters; `Err` carries the shed reason.
+    pub fn admit(&self, depth: usize) -> Result<(), String> {
+        let verdict = match &self.policy {
+            AdmissionPolicy::Unbounded => Ok(()),
+            AdmissionPolicy::Bounded { cap } => {
+                if depth >= *cap {
+                    Err(format!("queue full ({depth}/{cap})"))
+                } else {
+                    Ok(())
+                }
+            }
+            AdmissionPolicy::TokenBucket { rate, burst } => {
+                let mut b = self.bucket.lock().unwrap();
+                let now = Instant::now();
+                let refill = now.duration_since(b.last).as_secs_f64() * rate;
+                b.tokens = (b.tokens + refill).min(*burst);
+                b.last = now;
+                if b.tokens >= 1.0 {
+                    b.tokens -= 1.0;
+                    Ok(())
+                } else {
+                    Err(format!("rate limit ({rate:.1} rps)"))
+                }
+            }
+        };
+        match &verdict {
+            Ok(()) => self.accepted.fetch_add(1, Ordering::Relaxed),
+            Err(_) => self.shed.fetch_add(1, Ordering::Relaxed),
+        };
+        verdict
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_settings_resolves_names() {
+        let mut s = IngressSettings::default();
+        assert!(matches!(AdmissionPolicy::from_settings(&s), AdmissionPolicy::Bounded { .. }));
+        s.policy = "unbounded".into();
+        assert!(matches!(AdmissionPolicy::from_settings(&s), AdmissionPolicy::Unbounded));
+        s.policy = "token_bucket".into();
+        s.token_rate = 10.0;
+        assert!(matches!(
+            AdmissionPolicy::from_settings(&s),
+            AdmissionPolicy::TokenBucket { .. }
+        ));
+    }
+
+    #[test]
+    fn unbounded_accepts_any_depth() {
+        let c = AdmissionController::new(AdmissionPolicy::Unbounded);
+        for depth in [0, 10, 100_000] {
+            assert!(c.admit(depth).is_ok());
+        }
+        assert_eq!(c.accepted.load(Ordering::Relaxed), 3);
+        assert_eq!(c.shed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn bounded_sheds_at_cap() {
+        let c = AdmissionController::new(AdmissionPolicy::Bounded { cap: 4 });
+        assert!(c.admit(3).is_ok());
+        let err = c.admit(4).unwrap_err();
+        assert!(err.contains("queue full"), "{err}");
+        assert!(c.admit(5).is_err());
+        assert_eq!(c.accepted.load(Ordering::Relaxed), 1);
+        assert_eq!(c.shed.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn token_bucket_enforces_burst_then_rate() {
+        // negligible refill rate: only the initial burst admits
+        let c = AdmissionController::new(AdmissionPolicy::TokenBucket { rate: 1e-9, burst: 2.0 });
+        assert!(c.admit(0).is_ok());
+        assert!(c.admit(0).is_ok());
+        let err = c.admit(0).unwrap_err();
+        assert!(err.contains("rate limit"), "{err}");
+    }
+}

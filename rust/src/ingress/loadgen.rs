@@ -1,0 +1,270 @@
+//! `nalar loadgen` — the open-loop saturation sweep (paper §6).
+//!
+//! For each (offered RPS, system) point this drives the ingress front door
+//! with a Poisson arrival process ([`Arrivals::schedule`]): submits never
+//! block on completion — exactly the open-loop discipline under which the
+//! paper's capacity claim is stated. Each point reports goodput (requests
+//! completed *within deadline* per second), shed rate, and latency
+//! quantiles; the sweep across RPS produces the §6 saturation curve where
+//! NALAR sustains 80 RPS and the baselines' goodput collapses (their
+//! unbounded queues turn overload into divergent p99 instead of sheds).
+//!
+//! Output: `BENCH_rps_sweep.json` in the `nalar-bench/v1` schema
+//! (validated by [`crate::bench::validate`]; `latency` is censored at the
+//! deadline so baseline p99 divergence is visible, `latency_ok` is
+//! completions only).
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::baselines::SystemUnderTest;
+use crate::bench;
+use crate::config::DeploymentConfig;
+use crate::error::{Error, Result};
+use crate::ids::SessionId;
+use crate::ingress::Ingress;
+use crate::json;
+use crate::metrics::{goodput, shed_rate, LatencyRecorder};
+use crate::server::Deployment;
+use crate::util::bench::Table;
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+use crate::workflow::harness::input_for;
+use crate::workflow::WorkflowKind;
+use crate::workload::Arrivals;
+
+/// One `nalar loadgen` invocation.
+#[derive(Debug, Clone)]
+pub struct LoadgenOpts {
+    pub workflow: WorkflowKind,
+    pub systems: Vec<SystemUnderTest>,
+    /// Offered load points (wall-clock requests/second).
+    pub rates: Vec<f64>,
+    /// Measurement window per point (wall-clock seconds).
+    pub secs: u64,
+    /// CI-smoke profile flag (stamped into the report).
+    pub quick: bool,
+    pub out_dir: PathBuf,
+    /// Sessions drawn Zipf-skewed, as in the Fig-9 harness.
+    pub session_pool: usize,
+    /// Per-request deadline in paper seconds (scaled by `time_scale`).
+    pub timeout_paper_s: f64,
+    /// Override the config's `time_scale` (None = keep the config's).
+    pub time_scale: Option<f64>,
+    pub seed: u64,
+    /// Deployment config file (None = the workflow's builtin config).
+    pub config: Option<PathBuf>,
+}
+
+impl LoadgenOpts {
+    /// CI-smoke profile: two points, two systems, seconds of wall time.
+    pub fn quick(workflow: WorkflowKind) -> LoadgenOpts {
+        LoadgenOpts {
+            workflow,
+            systems: vec![SystemUnderTest::Nalar, SystemUnderTest::AutoGenLike],
+            rates: vec![40.0, 80.0],
+            secs: 1,
+            quick: true,
+            out_dir: PathBuf::from("."),
+            session_pool: 16,
+            timeout_paper_s: 30.0,
+            time_scale: Some(0.002),
+            seed: 0x10AD,
+            config: None,
+        }
+    }
+
+    /// The full §6 sweep: all four systems across the saturation range.
+    /// `time_scale` 0.1 (only a 10x speedup) puts the workload's capacity
+    /// cliff inside the swept range, so 80 RPS is a genuine saturation
+    /// point rather than a trivial one.
+    pub fn full(workflow: WorkflowKind) -> LoadgenOpts {
+        LoadgenOpts {
+            workflow,
+            systems: SystemUnderTest::all().to_vec(),
+            rates: vec![20.0, 40.0, 60.0, 80.0, 100.0, 120.0, 160.0],
+            secs: 8,
+            quick: false,
+            out_dir: PathBuf::from("."),
+            session_pool: 48,
+            timeout_paper_s: 30.0,
+            time_scale: Some(0.1),
+            seed: 0x10AD,
+            config: None,
+        }
+    }
+}
+
+/// Run the sweep and write `BENCH_rps_sweep.json`. Returns the path.
+pub fn run(opts: &LoadgenOpts) -> Result<PathBuf> {
+    if opts.rates.is_empty() || opts.systems.is_empty() {
+        return Err(Error::Config("loadgen needs at least one rate and one system".into()));
+    }
+    let mut table = Table::new(&[
+        "system", "rps", "offered", "ok", "shed", "fail", "goodput", "p50(s)", "p99(s)",
+    ]);
+    let mut points = Vec::new();
+    for &rps in &opts.rates {
+        for &system in &opts.systems {
+            let t0 = Instant::now();
+            let p = run_point(opts, rps, system)?;
+            println!(
+                "[loadgen] {} {} @ {:.0} rps done in {:.1?}",
+                opts.workflow.name(),
+                system.name(),
+                rps,
+                t0.elapsed()
+            );
+            table.row(&[
+                p.get("system").as_str().unwrap_or("?").to_string(),
+                format!("{:.0}", p.get("rps_wall").as_f64().unwrap_or(0.0)),
+                p.get("offered").as_u64().unwrap_or(0).to_string(),
+                p.get("completed").as_u64().unwrap_or(0).to_string(),
+                p.get("shed").as_u64().unwrap_or(0).to_string(),
+                p.get("failed").as_u64().unwrap_or(0).to_string(),
+                format!("{:.1}", p.get("goodput_rps").as_f64().unwrap_or(0.0)),
+                format!("{:.1}", p.get("latency").get("p50").as_f64().unwrap_or(0.0)),
+                format!("{:.1}", p.get("latency").get("p99").as_f64().unwrap_or(0.0)),
+            ]);
+            points.push(p);
+        }
+    }
+    println!("\n=== RPS sweep — {} workflow, open loop ===", opts.workflow.name());
+    table.print();
+    let report = bench::report(bench::RPS_SWEEP, opts.quick, "paper_s", points);
+    bench::validate(&report)?;
+    bench::write_report(&opts.out_dir, bench::RPS_SWEEP, &report)
+}
+
+/// One (rate, system) cell of the sweep.
+fn run_point(opts: &LoadgenOpts, rps: f64, system: SystemUnderTest) -> Result<Value> {
+    let mut cfg = match &opts.config {
+        Some(path) => DeploymentConfig::from_json_file(path)?,
+        None => opts.workflow.config(),
+    };
+    if let Some(ts) = opts.time_scale {
+        cfg.time_scale = ts;
+    }
+    // Apply the system's serving mode FIRST (for NALAR this fills the
+    // default policy trio when the config declares none — pushing ours
+    // earlier would suppress that fill), then add the ingress-aware
+    // provisioning loop on top. Baselines get stripped of all policies
+    // (and admission control) by the same `apply`, which `launch_as`
+    // re-runs idempotently.
+    system.apply(&mut cfg);
+    if system == SystemUnderTest::Nalar
+        && !cfg.policies.iter().any(|p| p == "overload_provision")
+    {
+        cfg.policies.push("overload_provision".into());
+    }
+    let d = Deployment::launch_as(cfg, system)?;
+    let time_scale = d.cfg().time_scale;
+    let timeout = Duration::from_secs_f64((opts.timeout_paper_s * time_scale).max(0.001));
+    let window = Duration::from_secs(opts.secs.max(1));
+    let ingress = Ingress::start(&d, &[opts.workflow]);
+    let ingress_policy = ingress.metrics(opts.workflow).map(|m| m.policy).unwrap_or_default();
+
+    let schedule = Arrivals::new(rps, opts.seed ^ rps.to_bits()).schedule(window);
+    let offered = schedule.len() as u64;
+    let sessions: Vec<SessionId> = (0..opts.session_pool.max(1)).map(|_| d.new_session()).collect();
+    let mut turns = vec![0u64; sessions.len()];
+    let mut rng = Rng::new(opts.seed ^ 0xFEED);
+
+    // Open loop: pace submissions on the arrival schedule; never wait for
+    // completions in this loop.
+    let mut tickets = Vec::with_capacity(schedule.len());
+    let mut shed = 0u64;
+    let start = Instant::now();
+    for at in &schedule {
+        let wait = at.saturating_sub(start.elapsed());
+        if !wait.is_zero() {
+            std::thread::sleep(wait);
+        }
+        let progress = (start.elapsed().as_secs_f64() / window.as_secs_f64()).min(1.0);
+        let sidx = rng.zipf(sessions.len(), 1.1);
+        let turn = turns[sidx];
+        turns[sidx] += 1;
+        let input = input_for(opts.workflow, progress, turn, &mut rng);
+        match ingress.submit(opts.workflow, Some(sessions[sidx]), input, timeout) {
+            Ok(t) => tickets.push(t),
+            Err(_) => shed += 1, // fast retryable rejection, already counted
+        }
+    }
+
+    // Drain: every admitted request either completes or hits its deadline
+    // (the driver pool fails expired work fast, so this terminates).
+    let ok_rec = LatencyRecorder::new(); // completions within deadline
+    let tail_rec = LatencyRecorder::new(); // + timeouts censored at the deadline
+    let mut completed = 0u64;
+    let mut failed = 0u64;
+    for t in &tickets {
+        let outcome = t.wait(timeout + Duration::from_millis(50));
+        let lat = t.latency().unwrap_or(timeout);
+        match outcome {
+            Ok(_) if lat <= timeout => {
+                completed += 1;
+                ok_rec.record(lat);
+                tail_rec.record(lat);
+            }
+            _ => {
+                failed += 1;
+                tail_rec.record(lat.min(timeout));
+            }
+        }
+    }
+    ingress.stop();
+    d.shutdown();
+
+    let paper = 1.0 / time_scale;
+    let gput = goodput(completed, window);
+    let mut p = json!({
+        "workflow": opts.workflow.name(),
+        "system": system.name(),
+        "rps_wall": rps,
+        "rps_paper": rps * time_scale,
+        "duration_s": opts.secs,
+        "offered": offered,
+        "completed": completed,
+        "failed": failed,
+        "shed": shed,
+        "goodput_rps": gput,
+        "goodput_frac": gput / rps,
+        "shed_rate": shed_rate(shed, offered),
+        "timeout_paper_s": opts.timeout_paper_s,
+        "ingress_policy": ingress_policy
+    });
+    p.insert("latency", tail_rec.summary_scaled(paper).to_json());
+    p.insert("latency_ok", ok_rec.summary_scaled(paper).to_json());
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_sweep_writes_schema_valid_report() {
+        let dir = std::env::temp_dir().join(format!("nalar-loadgen-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let opts = LoadgenOpts {
+            systems: vec![SystemUnderTest::Nalar],
+            rates: vec![30.0],
+            session_pool: 8,
+            timeout_paper_s: 60.0,
+            time_scale: Some(0.0005),
+            out_dir: dir.clone(),
+            ..LoadgenOpts::quick(WorkflowKind::Router)
+        };
+        let path = run(&opts).unwrap();
+        assert!(path.ends_with("BENCH_rps_sweep.json"));
+        bench::check_files(&dir, &[bench::RPS_SWEEP]).unwrap();
+        let report = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let pts = report.get("points").as_arr().unwrap();
+        assert_eq!(pts.len(), 1);
+        let p = &pts[0];
+        assert!(p.get("completed").as_u64().unwrap() > 0, "nothing completed");
+        assert_eq!(p.get("ingress_policy").as_str(), Some("bounded"));
+        assert!(p.get("latency").get("p99").as_f64().is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,537 @@
+//! Ingress: the open-loop serving front door.
+//!
+//! Everything before this subsystem ran workflows *closed-loop*: the
+//! harness spawned one caller thread per request and each driver blocked
+//! its caller — no queueing, no admission, no way to reproduce the paper's
+//! capacity claim ("sustains 80 RPS where baselines fail", §6). Ingress is
+//! the missing front of the pipeline:
+//!
+//! * [`Ingress::submit`] accepts a workflow request asynchronously,
+//!   stamps its [`RequestId`]/[`SessionId`] at admission, and enqueues it
+//!   into a per-workflow bounded queue instead of blocking the caller —
+//!   the returned [`Ticket`] is the caller's completion handle.
+//! * an [`AdmissionController`] per queue decides accept-vs-shed
+//!   ([`AdmissionPolicy`]: unbounded / bounded / token bucket); shed
+//!   requests fail fast with a retryable [`Error::Shed`].
+//! * a **driver pool** of worker threads drains the queues onto the
+//!   existing [`crate::workflow`] drivers against the [`Deployment`] —
+//!   drivers still block, but on pool threads the operator sizes.
+//! * queue depth and accept/shed/complete counters are pushed into the
+//!   node store (`ingress/{workflow}`), where
+//!   [`crate::coordinator::GlobalController::collect`] aggregates them so
+//!   overload-aware policies (e.g.
+//!   [`crate::coordinator::policies::OverloadProvision`]) can react.
+//!
+//! [`loadgen`] drives this front door with a Poisson arrival process to
+//! produce the `BENCH_rps_sweep.json` saturation curve.
+
+pub mod admission;
+pub mod loadgen;
+
+pub use admission::{AdmissionController, AdmissionPolicy};
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::IngressMetrics;
+use crate::error::{Error, Result};
+use crate::futures::Value;
+use crate::ids::{NodeId, RequestId, SessionId};
+use crate::nodestore::keys;
+use crate::server::Deployment;
+use crate::workflow::{run_request_as, WorkflowKind};
+
+/// Completion slot shared between a [`Ticket`] and the worker that runs
+/// the request.
+struct TicketCell {
+    slot: Mutex<TicketState>,
+    cv: Condvar,
+}
+
+struct TicketState {
+    done: bool,
+    result: Option<Result<Value>>,
+    /// Submit-to-completion latency, set exactly once at fulfilment.
+    latency: Option<Duration>,
+}
+
+impl TicketCell {
+    fn new() -> Arc<TicketCell> {
+        Arc::new(TicketCell {
+            slot: Mutex::new(TicketState { done: false, result: None, latency: None }),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn fulfil(&self, result: Result<Value>, latency: Duration) {
+        let mut g = self.slot.lock().unwrap();
+        if !g.done {
+            g.done = true;
+            g.result = Some(result);
+            g.latency = Some(latency);
+        }
+        self.cv.notify_all();
+    }
+}
+
+/// The caller's handle for an admitted request. `submit` returns it
+/// immediately; the request runs whenever a pool worker picks it up.
+pub struct Ticket {
+    pub request: RequestId,
+    pub session: SessionId,
+    cell: Arc<TicketCell>,
+}
+
+impl Ticket {
+    /// Block until the request finishes or `timeout` passes. Consumes the
+    /// result: a second `wait` after a successful one errors.
+    pub fn wait(&self, timeout: Duration) -> Result<Value> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.cell.slot.lock().unwrap();
+        loop {
+            if g.done {
+                return g
+                    .result
+                    .take()
+                    .unwrap_or_else(|| Err(Error::Msg("ticket result already taken".into())));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(Error::Deadline(timeout));
+            }
+            let (g2, _) = self.cell.cv.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+    }
+
+    /// Submit-to-completion latency, once the request finished.
+    pub fn latency(&self) -> Option<Duration> {
+        self.cell.slot.lock().unwrap().latency
+    }
+}
+
+/// One queued request.
+struct Queued {
+    session: SessionId,
+    request: RequestId,
+    input: Value,
+    submitted: Instant,
+    deadline: Instant,
+    timeout: Duration,
+    cell: Arc<TicketCell>,
+}
+
+/// Telemetry publish throttle — same cadence as the component
+/// controllers' `maybe_push_telemetry`, so the hot path pays at most one
+/// store write per queue per period instead of one per event.
+const PUBLISH_PERIOD: Duration = Duration::from_millis(20);
+
+struct IngressInner {
+    d: Deployment,
+    kinds: Vec<WorkflowKind>,
+    /// One deque per entry of `kinds`, all under one lock (signalled by
+    /// `cv`); contention is negligible at front-door rates and a single
+    /// lock keeps pop-fairness across workflows trivial.
+    queues: Mutex<Vec<VecDeque<Queued>>>,
+    cv: Condvar,
+    admission: Vec<AdmissionController>,
+    completed: Vec<AtomicU64>,
+    failed: Vec<AtomicU64>,
+    last_publish: Vec<Mutex<Instant>>,
+    stop: AtomicBool,
+}
+
+impl IngressInner {
+    fn kind_index(&self, kind: WorkflowKind) -> Option<usize> {
+        self.kinds.iter().position(|k| *k == kind)
+    }
+
+    /// One queue's telemetry snapshot (shared by [`Ingress::metrics`] and
+    /// the node-store publish path — one construction site).
+    fn snapshot(&self, idx: usize) -> IngressMetrics {
+        let adm = &self.admission[idx];
+        IngressMetrics {
+            workflow: self.kinds[idx].name().to_string(),
+            depth: self.queues.lock().unwrap()[idx].len(),
+            cap: adm.policy().cap(),
+            policy: adm.policy().name().to_string(),
+            accepted: adm.accepted.load(Ordering::Relaxed),
+            shed: adm.shed.load(Ordering::Relaxed),
+            completed: self.completed[idx].load(Ordering::Relaxed),
+            failed: self.failed[idx].load(Ordering::Relaxed),
+        }
+    }
+
+    /// Push this queue's telemetry into the node store (node 0 hosts the
+    /// front door — it is "the" ingress node of the emulated cluster).
+    fn publish(&self, idx: usize) {
+        let m = self.snapshot(idx);
+        let key = keys::ingress(&m.workflow);
+        self.d.stores().node(NodeId(0)).put(&key, m);
+    }
+
+    /// Throttled [`Self::publish`]: at most one store write per queue per
+    /// [`PUBLISH_PERIOD`]. Lifecycle edges (start/stop) publish directly.
+    fn maybe_publish(&self, idx: usize) {
+        {
+            let mut last = self.last_publish[idx].lock().unwrap();
+            if last.elapsed() < PUBLISH_PERIOD {
+                return;
+            }
+            *last = Instant::now();
+        }
+        self.publish(idx);
+    }
+
+    fn worker_loop(self: Arc<Self>, worker: usize) {
+        let nkinds = self.kinds.len();
+        let mut rot = worker; // stagger the scan start per worker
+        loop {
+            if self.stop.load(Ordering::Relaxed) {
+                return;
+            }
+            let popped = {
+                let mut q = self.queues.lock().unwrap();
+                let mut found = None;
+                for i in 0..nkinds {
+                    let idx = (rot + i) % nkinds;
+                    if let Some(job) = q[idx].pop_front() {
+                        found = Some((idx, job));
+                        break;
+                    }
+                }
+                if found.is_none() {
+                    // idle: block briefly so stop/submit wake us
+                    let _ = self.cv.wait_timeout(q, Duration::from_millis(2)).unwrap();
+                }
+                found
+            };
+            let Some((idx, job)) = popped else { continue };
+            rot = rot.wrapping_add(1);
+            let now = Instant::now();
+            let result = if now >= job.deadline {
+                // expired while queued: fail fast, never start the driver
+                Err(Error::Deadline(job.timeout))
+            } else {
+                run_request_as(
+                    &self.d,
+                    self.kinds[idx],
+                    job.session,
+                    job.request,
+                    &job.input,
+                    job.deadline - now,
+                )
+            };
+            match &result {
+                Ok(_) => self.completed[idx].fetch_add(1, Ordering::Relaxed),
+                Err(_) => self.failed[idx].fetch_add(1, Ordering::Relaxed),
+            };
+            job.cell.fulfil(result, job.submitted.elapsed());
+            self.maybe_publish(idx);
+        }
+    }
+}
+
+/// See module docs.
+pub struct Ingress {
+    inner: Arc<IngressInner>,
+    joins: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Ingress {
+    /// Start a front door for `kinds` using the deployment's configured
+    /// admission settings (`DeploymentConfig.ingress`).
+    pub fn start(d: &Deployment, kinds: &[WorkflowKind]) -> Ingress {
+        let s = &d.cfg().ingress;
+        Self::start_with(d, kinds, AdmissionPolicy::from_settings(s), s.workers)
+    }
+
+    /// Start with an explicit admission policy and driver-pool size.
+    pub fn start_with(
+        d: &Deployment,
+        kinds: &[WorkflowKind],
+        policy: AdmissionPolicy,
+        workers: usize,
+    ) -> Ingress {
+        assert!(!kinds.is_empty(), "ingress needs at least one workflow");
+        let inner = Arc::new(IngressInner {
+            d: d.clone(),
+            kinds: kinds.to_vec(),
+            queues: Mutex::new(kinds.iter().map(|_| VecDeque::new()).collect()),
+            cv: Condvar::new(),
+            admission: kinds.iter().map(|_| AdmissionController::new(policy.clone())).collect(),
+            completed: kinds.iter().map(|_| AtomicU64::new(0)).collect(),
+            failed: kinds.iter().map(|_| AtomicU64::new(0)).collect(),
+            last_publish: kinds.iter().map(|_| Mutex::new(Instant::now())).collect(),
+            stop: AtomicBool::new(false),
+        });
+        let joins = (0..workers.max(1))
+            .map(|w| {
+                let inner = inner.clone();
+                std::thread::Builder::new()
+                    .name(format!("nalar-ingress-{w}"))
+                    .spawn(move || inner.worker_loop(w))
+                    .expect("spawn ingress worker")
+            })
+            .collect();
+        for idx in 0..kinds.len() {
+            inner.publish(idx); // make the queue visible to policies at once
+        }
+        Ingress { inner, joins: Mutex::new(joins) }
+    }
+
+    /// Accept or shed one request. Non-blocking: on acceptance the request
+    /// is queued and the caller gets a [`Ticket`]; on shed the caller gets
+    /// a retryable [`Error::Shed`] immediately. `session: None` opens a
+    /// fresh session. `timeout` is the request's end-to-end deadline,
+    /// counted from admission.
+    pub fn submit(
+        &self,
+        kind: WorkflowKind,
+        session: Option<SessionId>,
+        input: Value,
+        timeout: Duration,
+    ) -> Result<Ticket> {
+        let inner = &self.inner;
+        let idx = inner
+            .kind_index(kind)
+            .ok_or_else(|| Error::Config(format!("ingress does not serve `{}`", kind.name())))?;
+        let verdict = {
+            let mut q = inner.queues.lock().unwrap();
+            // Checked under the queue lock: `stop` drains the queues under
+            // this same lock after setting the flag, so a submit either
+            // lands before the drain (and is failed by it) or observes the
+            // flag here — no ticket is ever left unfulfilled.
+            if inner.stop.load(Ordering::Relaxed) {
+                return Err(Error::Shed(kind.name().into(), "ingress stopped".into()));
+            }
+            match inner.admission[idx].admit(q[idx].len()) {
+                Ok(()) => {
+                    let session = session.unwrap_or_else(|| inner.d.new_session());
+                    let request = inner.d.new_request_id();
+                    let cell = TicketCell::new();
+                    let now = Instant::now();
+                    q[idx].push_back(Queued {
+                        session,
+                        request,
+                        input,
+                        submitted: now,
+                        deadline: now + timeout,
+                        timeout,
+                        cell: cell.clone(),
+                    });
+                    Ok(Ticket { request, session, cell })
+                }
+                Err(reason) => Err(Error::Shed(kind.name().into(), reason)),
+            }
+        };
+        if verdict.is_ok() {
+            inner.cv.notify_one();
+        }
+        inner.maybe_publish(idx);
+        verdict
+    }
+
+    /// Current depth of a workflow's queue.
+    pub fn depth(&self, kind: WorkflowKind) -> usize {
+        match self.inner.kind_index(kind) {
+            Some(idx) => self.inner.queues.lock().unwrap()[idx].len(),
+            None => 0,
+        }
+    }
+
+    /// Telemetry snapshot for one workflow queue (same struct the global
+    /// controller aggregates).
+    pub fn metrics(&self, kind: WorkflowKind) -> Option<IngressMetrics> {
+        Some(self.inner.snapshot(self.inner.kind_index(kind)?))
+    }
+
+    /// Stop the pool: workers finish their in-flight request, everything
+    /// still queued fails fast (reported, not masked — §5). Idempotent;
+    /// also runs on drop.
+    pub fn stop(&self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        self.inner.cv.notify_all();
+        for j in self.joins.lock().unwrap().drain(..) {
+            let _ = j.join();
+        }
+        let drained: Vec<(usize, Vec<Queued>)> = {
+            let mut q = self.inner.queues.lock().unwrap();
+            q.iter_mut().enumerate().map(|(i, dq)| (i, dq.drain(..).collect())).collect()
+        };
+        for (idx, jobs) in drained {
+            for job in jobs {
+                self.inner.failed[idx].fetch_add(1, Ordering::Relaxed);
+                let kind = self.inner.kinds[idx].name().to_string();
+                let waited = job.submitted.elapsed();
+                job.cell.fulfil(Err(Error::Shed(kind, "ingress stopped".into())), waited);
+            }
+            self.inner.publish(idx);
+        }
+    }
+}
+
+impl Drop for Ingress {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    fn fast_router() -> Deployment {
+        let mut cfg = WorkflowKind::Router.config();
+        cfg.time_scale = 0.0005;
+        cfg.control.global_period_ms = 10;
+        Deployment::launch(cfg).unwrap()
+    }
+
+    fn router_input() -> Value {
+        json!({"prompt": "hello", "class": "chat"})
+    }
+
+    #[test]
+    fn submits_complete_through_the_driver_pool() {
+        let d = fast_router();
+        let ing = Ingress::start_with(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, 4);
+        let timeout = Duration::from_secs(20);
+        let tickets: Vec<Ticket> = (0..8)
+            .map(|_| ing.submit(WorkflowKind::Router, None, router_input(), timeout).unwrap())
+            .collect();
+        for t in &tickets {
+            let out = t.wait(timeout).unwrap();
+            assert!(!out.is_null());
+            assert!(t.latency().unwrap() > Duration::ZERO);
+        }
+        let m = ing.metrics(WorkflowKind::Router).unwrap();
+        assert_eq!(m.accepted, 8);
+        assert_eq!(m.completed, 8);
+        assert_eq!(m.shed, 0);
+        // distinct request ids were stamped at admission
+        let mut ids: Vec<u64> = tickets.iter().map(|t| t.request.0).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 8);
+        ing.stop();
+        d.shutdown();
+    }
+
+    #[test]
+    fn bounded_queue_sheds_fast_and_never_exceeds_cap() {
+        let mut cfg = WorkflowKind::Router.config();
+        cfg.time_scale = 0.002; // slow enough that 1 worker falls behind
+        let d = Deployment::launch(cfg).unwrap();
+        let cap = 4;
+        let ing =
+            Ingress::start_with(&d, &[WorkflowKind::Router], AdmissionPolicy::Bounded { cap }, 1);
+        let timeout = Duration::from_secs(30);
+        let mut tickets = Vec::new();
+        let mut sheds = 0;
+        for _ in 0..40 {
+            match ing.submit(WorkflowKind::Router, None, router_input(), timeout) {
+                Ok(t) => tickets.push(t),
+                Err(e) => {
+                    // fails fast with a retryable shed error
+                    assert!(matches!(e, Error::Shed(..)), "{e}");
+                    assert!(e.retryable());
+                    sheds += 1;
+                }
+            }
+            assert!(ing.depth(WorkflowKind::Router) <= cap, "bounded queue exceeded its cap");
+        }
+        assert!(sheds > 0, "a 1-worker pool must fall behind a 40-request burst");
+        let m = ing.metrics(WorkflowKind::Router).unwrap();
+        assert_eq!(m.shed, sheds);
+        assert_eq!(m.cap, cap);
+        for t in &tickets {
+            let _ = t.wait(timeout); // accepted work still drains
+        }
+        ing.stop();
+        d.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_fails_fast_without_running() {
+        let d = fast_router();
+        let ing = Ingress::start_with(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, 1);
+        let t = ing
+            .submit(WorkflowKind::Router, None, router_input(), Duration::ZERO)
+            .unwrap();
+        let err = t.wait(Duration::from_secs(5)).unwrap_err();
+        assert!(matches!(err, Error::Deadline(..)), "{err}");
+        assert!(err.retryable());
+        ing.stop();
+        d.shutdown();
+    }
+
+    #[test]
+    fn telemetry_lands_in_global_controller_view() {
+        let d = fast_router();
+        let ing = Ingress::start_with(
+            &d,
+            &[WorkflowKind::Router],
+            AdmissionPolicy::Bounded { cap: 64 },
+            2,
+        );
+        let timeout = Duration::from_secs(20);
+        let tickets: Vec<Ticket> = (0..4)
+            .map(|_| ing.submit(WorkflowKind::Router, None, router_input(), timeout).unwrap())
+            .collect();
+        for t in &tickets {
+            t.wait(timeout).unwrap();
+        }
+        // publishes are throttled on the hot path; stop() flushes the
+        // final state, which the global controller then aggregates.
+        ing.stop();
+        let view = d.global().collect();
+        let ingress = view
+            .ingress
+            .iter()
+            .find(|i| i.workflow == "router")
+            .expect("ingress telemetry missing from cluster view");
+        assert_eq!(ingress.accepted, 4);
+        assert_eq!(ingress.completed, 4);
+        assert_eq!(ingress.policy, "bounded");
+        assert_eq!(ingress.cap, 64);
+        d.shutdown();
+    }
+
+    #[test]
+    fn stop_fails_queued_work_and_rejects_new_submits() {
+        let mut cfg = WorkflowKind::Router.config();
+        cfg.time_scale = 0.002;
+        let d = Deployment::launch(cfg).unwrap();
+        let ing = Ingress::start_with(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, 1);
+        let timeout = Duration::from_secs(30);
+        let tickets: Vec<Ticket> = (0..10)
+            .map(|_| ing.submit(WorkflowKind::Router, None, router_input(), timeout).unwrap())
+            .collect();
+        ing.stop();
+        let failures = tickets
+            .iter()
+            .filter(|t| t.wait(Duration::from_secs(1)).is_err())
+            .count();
+        assert!(failures >= 1, "queued work must fail fast at shutdown");
+        assert!(ing
+            .submit(WorkflowKind::Router, None, router_input(), timeout)
+            .is_err());
+        d.shutdown();
+    }
+
+    #[test]
+    fn unserved_workflow_is_a_config_error() {
+        let d = fast_router();
+        let ing = Ingress::start_with(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, 1);
+        let err = ing
+            .submit(WorkflowKind::Swe, None, json!({"task": "t"}), Duration::from_secs(1))
+            .unwrap_err();
+        assert!(matches!(err, Error::Config(..)), "{err}");
+        ing.stop();
+        d.shutdown();
+    }
+}

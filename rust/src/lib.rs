@@ -39,6 +39,7 @@
 //! | [`engine`] | impl | continuous-batching LLM engine (vLLM substitute) |
 //! | [`runtime`] | impl | PJRT loader/executor for the AOT artifacts |
 //! | [`vectorstore`] | impl | cosine top-k index (ChromaDB substitute) |
+//! | [`ingress`] | §6 | open-loop front door: queues, admission, driver pool |
 //! | [`workflow`] | §6 | the three evaluation workflows |
 //! | [`workload`] | §6 | arrival processes + synthetic corpora |
 //! | [`baselines`] | §6 | Ayo/CrewAI/AutoGen-like serving modes |
@@ -52,6 +53,7 @@ pub mod engine;
 pub mod error;
 pub mod futures;
 pub mod ids;
+pub mod ingress;
 pub mod metrics;
 pub mod nodestore;
 pub mod runtime;

@@ -1,38 +1,56 @@
 //! `nalar` CLI: launch deployments, run workloads, reproduce the paper.
 //!
 //! ```text
-//! nalar run    --workflow financial|router|swe --system nalar|ayo|crew|autogen
-//!              [--rps 8] [--secs 5] [--config path.json]
-//! nalar info   [--config path.json]      # validate + describe a deployment
-//! nalar bench  [--quick] [--only fig9,fig10,table4,sec62] [--out DIR]
-//!              [--check-only]            # writes/validates BENCH_*.json
+//! nalar run     --workflow financial|router|swe --system nalar|ayo|crew|autogen
+//!               [--rps 8] [--secs 5] [--config path.json]
+//! nalar info    [--config path.json]      # validate + describe a deployment
+//! nalar bench   [--quick] [--only fig9,fig10,table4,sec62] [--out DIR]
+//!               [--check-only]            # writes/validates BENCH_*.json
+//! nalar serve   --workflow router|financial|swe [--system nalar|...] [--secs 30]
+//!               [--rps N] [--config path.json]
+//!               # hold a deployment open behind the ingress front door
+//! nalar loadgen --workload router|financial|swe [--rps 20,40,80 | 20:160:20]
+//!               [--systems nalar,ayo,crew,autogen] [--secs N] [--quick]
+//!               [--out DIR] [--config path.json] [--check-only]
+//!               # open-loop saturation sweep -> BENCH_rps_sweep.json
 //! ```
 
 use std::path::PathBuf;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use nalar::baselines::SystemUnderTest;
 use nalar::bench::{self, BenchOpts};
 use nalar::config::DeploymentConfig;
+use nalar::ingress::loadgen::{self, LoadgenOpts};
+use nalar::ingress::Ingress;
 use nalar::server::Deployment;
 use nalar::util::cli::Args;
+use nalar::util::rng::Rng;
+use nalar::workflow::harness::input_for;
 use nalar::workflow::{run_open_loop, RunConfig, WorkflowKind};
+use nalar::workload::{self, Arrivals};
 
-fn parse_system(s: &str) -> SystemUnderTest {
-    match s {
+/// Strict system-name parse: a typo must not silently change which system
+/// a run or a benchmark point measures.
+fn parse_system(s: &str) -> nalar::Result<SystemUnderTest> {
+    Ok(match s {
+        "nalar" => SystemUnderTest::Nalar,
         "ayo" => SystemUnderTest::AyoLike,
         "crew" => SystemUnderTest::CrewLike,
         "autogen" => SystemUnderTest::AutoGenLike,
-        _ => SystemUnderTest::Nalar,
-    }
+        other => {
+            return Err(nalar::Error::Config(format!(
+                "unknown system `{other}` (known: nalar, ayo, crew, autogen)"
+            )))
+        }
+    })
 }
 
-fn parse_workflow(s: &str) -> WorkflowKind {
-    match s {
-        "router" => WorkflowKind::Router,
-        "swe" => WorkflowKind::Swe,
-        _ => WorkflowKind::Financial,
-    }
+/// Strict workflow-name parse, same rationale.
+fn parse_workflow(s: &str) -> nalar::Result<WorkflowKind> {
+    WorkflowKind::parse(s).ok_or_else(|| {
+        nalar::Error::Config(format!("unknown workflow `{s}` (known: financial, router, swe)"))
+    })
 }
 
 fn main() -> nalar::Result<()> {
@@ -41,11 +59,16 @@ fn main() -> nalar::Result<()> {
         Some("run") => cmd_run(&args),
         Some("info") => cmd_info(&args),
         Some("bench") => cmd_bench(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         _ => {
             eprintln!(
-                "usage: nalar <run|info|bench> [--workflow financial|router|swe] \
+                "usage: nalar <run|info|bench|serve|loadgen> [--workflow financial|router|swe] \
                  [--system nalar|ayo|crew|autogen] [--rps N] [--secs N] [--config file.json] \
-                 | bench [--quick] [--only fig9,fig10,table4,sec62] [--out DIR] [--check-only]"
+                 | bench [--quick] [--only fig9,fig10,table4,sec62] [--out DIR] [--check-only] \
+                 | serve [--workflow ...] [--secs N] [--rps N] \
+                 | loadgen [--workload router|financial|swe] [--rps LIST|START:END:STEP] \
+                 [--systems csv] [--secs N] [--quick] [--out DIR] [--check-only]"
             );
             Ok(())
         }
@@ -60,8 +83,8 @@ fn load_config(args: &Args, wf: WorkflowKind) -> nalar::Result<DeploymentConfig>
 }
 
 fn cmd_run(args: &Args) -> nalar::Result<()> {
-    let wf = parse_workflow(&args.str_or("workflow", "financial"));
-    let system = parse_system(&args.str_or("system", "nalar"));
+    let wf = parse_workflow(&args.str_or("workflow", "financial"))?;
+    let system = parse_system(&args.str_or("system", "nalar"))?;
     let cfg = load_config(args, wf)?;
     let scale = cfg.time_scale;
     let d = Deployment::launch_as(cfg, system)?;
@@ -92,7 +115,7 @@ fn cmd_run(args: &Args) -> nalar::Result<()> {
 }
 
 fn cmd_info(args: &Args) -> nalar::Result<()> {
-    let wf = parse_workflow(&args.str_or("workflow", "financial"));
+    let wf = parse_workflow(&args.str_or("workflow", "financial"))?;
     let cfg = load_config(args, wf)?;
     println!("nodes: {}  time_scale: {}  policies: {:?}", cfg.nodes, cfg.time_scale, cfg.policies);
     for a in &cfg.agents {
@@ -135,5 +158,111 @@ fn cmd_bench(args: &Args) -> nalar::Result<()> {
     for p in written {
         println!("  {}", p.display());
     }
+    Ok(())
+}
+
+/// `nalar serve`: hold a deployment open behind the ingress front door,
+/// printing per-second front-door telemetry. `--rps N` feeds it an
+/// open-loop self-traffic stream — a stand-in for the HTTP wire protocol,
+/// which is a ROADMAP follow-on (submissions would arrive over a socket
+/// instead).
+fn cmd_serve(args: &Args) -> nalar::Result<()> {
+    let wf = parse_workflow(&args.str_or("workflow", "router"))?;
+    let system = parse_system(&args.str_or("system", "nalar"))?;
+    let cfg = load_config(args, wf)?;
+    let time_scale = cfg.time_scale;
+    let d = Deployment::launch_as(cfg, system)?;
+    let ingress = Ingress::start(&d, &[wf]);
+    let secs = args.u64_or("secs", 30);
+    let rps = args.f64_or("rps", 0.0);
+    let timeout = Duration::from_secs_f64(
+        (args.f64_or("timeout-paper-s", 30.0) * time_scale).max(0.001),
+    );
+    println!(
+        "serving `{}` on {} behind the ingress front door for {secs}s \
+         (admission {}, self-traffic {rps} rps)",
+        wf.name(),
+        system.name(),
+        d.cfg().ingress.policy
+    );
+    let window = Duration::from_secs(secs.max(1));
+    std::thread::scope(|scope| {
+        if rps > 0.0 {
+            let ingress = &ingress;
+            scope.spawn(move || {
+                let mut arrivals = Arrivals::new(rps, args.u64_or("seed", 7));
+                let mut rng = Rng::new(0x5e44e);
+                let start = Instant::now();
+                for at in arrivals.schedule(window) {
+                    let wait = at.saturating_sub(start.elapsed());
+                    if !wait.is_zero() {
+                        std::thread::sleep(wait);
+                    }
+                    let progress = (start.elapsed().as_secs_f64() / window.as_secs_f64()).min(1.0);
+                    let input = input_for(wf, progress, 0, &mut rng);
+                    let _ = ingress.submit(wf, None, input, timeout); // fire and forget
+                }
+            });
+        }
+        for _ in 0..secs.max(1) {
+            std::thread::sleep(Duration::from_secs(1));
+            if let Some(m) = ingress.metrics(wf) {
+                println!(
+                    "[serve] depth {} accepted {} shed {} completed {} failed {}",
+                    m.depth, m.accepted, m.shed, m.completed, m.failed
+                );
+            }
+        }
+    });
+    ingress.stop();
+    d.shutdown();
+    Ok(())
+}
+
+/// `nalar loadgen`: the open-loop saturation sweep through the ingress
+/// front door, emitting a schema-validated `BENCH_rps_sweep.json`.
+/// `--quick` is the CI-smoke profile; `--check-only` re-validates the
+/// report already on disk.
+fn cmd_loadgen(args: &Args) -> nalar::Result<()> {
+    let out_dir = PathBuf::from(args.str_or("out", "."));
+    if args.flag("check-only") {
+        return bench::check_files(&out_dir, &[bench::RPS_SWEEP]);
+    }
+    let wf = parse_workflow(&args.str_or("workload", "router"))?;
+    let quick = args.flag("quick") || std::env::var("NALAR_LOADGEN_QUICK").is_ok();
+    let mut opts = if quick { LoadgenOpts::quick(wf) } else { LoadgenOpts::full(wf) };
+    opts.out_dir = out_dir;
+    if let Some(spec) = args.get("rps") {
+        opts.rates = workload::parse_rps_sweep(spec)
+            .ok_or_else(|| nalar::Error::Config(format!("bad --rps spec `{spec}`")))?;
+    }
+    if let Some(csv) = args.get("systems") {
+        opts.systems = Vec::new();
+        for name in csv.split(',') {
+            let sys = parse_system(name.trim())?;
+            if !opts.systems.contains(&sys) {
+                opts.systems.push(sys);
+            }
+        }
+    }
+    if let Some(secs) = args.get("secs") {
+        opts.secs = secs
+            .parse()
+            .map_err(|_| nalar::Error::Config(format!("bad --secs `{secs}`")))?;
+    }
+    if let Some(path) = args.get("config") {
+        opts.config = Some(PathBuf::from(path));
+    }
+    opts.session_pool = args.usize_or("sessions", opts.session_pool);
+    opts.timeout_paper_s = args.f64_or("timeout-paper-s", opts.timeout_paper_s);
+    if let Some(ts) = args.get("time-scale") {
+        let scale: f64 = ts
+            .parse()
+            .map_err(|_| nalar::Error::Config(format!("bad --time-scale `{ts}`")))?;
+        opts.time_scale = Some(scale);
+    }
+    opts.seed = args.u64_or("seed", opts.seed);
+    let path = loadgen::run(&opts)?;
+    println!("rps sweep written: {}", path.display());
     Ok(())
 }

@@ -107,6 +107,25 @@ pub fn load_imbalance(busy_fractions: &[f64]) -> f64 {
     max / mean
 }
 
+/// Goodput: requests completed *within their deadline* per wall-clock
+/// second of the measurement window (the saturation-sweep y-axis — under
+/// overload, completions past the deadline no longer count).
+pub fn goodput(completed_in_deadline: u64, window: Duration) -> f64 {
+    if window.is_zero() {
+        return 0.0;
+    }
+    completed_in_deadline as f64 / window.as_secs_f64()
+}
+
+/// Fraction of offered requests rejected by admission control.
+pub fn shed_rate(shed: u64, offered: u64) -> f64 {
+    if offered == 0 {
+        0.0
+    } else {
+        shed as f64 / offered as f64
+    }
+}
+
 /// Per-instance serving counters pushed into the node store as telemetry.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct Counters {
@@ -167,6 +186,14 @@ mod tests {
         assert_eq!(load_imbalance(&[0.5, 0.5]), 1.0);
         assert!((load_imbalance(&[0.9, 0.1]) - 1.8).abs() < 1e-9);
         assert_eq!(load_imbalance(&[0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn goodput_and_shed_rate() {
+        assert_eq!(goodput(80, Duration::from_secs(4)), 20.0);
+        assert_eq!(goodput(5, Duration::ZERO), 0.0);
+        assert_eq!(shed_rate(25, 100), 0.25);
+        assert_eq!(shed_rate(0, 0), 0.0);
     }
 
     #[test]

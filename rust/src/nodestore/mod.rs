@@ -22,16 +22,21 @@ pub use store::{NodeStore, StoreValue, Subscription};
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::ids::NodeId;
+use crate::ids::{NodeId, SessionId};
 
 /// One store per emulated node, plus a directory for cross-node access.
 ///
 /// In the paper each node's controllers talk only to the local store while
 /// the global controller reads all of them; `StoreDirectory` gives it that
-/// reach.
+/// reach. The directory also tracks where each migrated session's managed
+/// state lives (`moved`), so per-request binds stay O(1) instead of
+/// scanning stores on the serving hot path.
 #[derive(Clone)]
 pub struct StoreDirectory {
     stores: Arc<HashMap<NodeId, Arc<NodeStore>>>,
+    /// Sessions whose `state/{session}/*` entries were migrated away from
+    /// their home node, and where they live now.
+    moved: Arc<std::sync::RwLock<HashMap<SessionId, NodeId>>>,
 }
 
 impl StoreDirectory {
@@ -40,7 +45,10 @@ impl StoreDirectory {
             .iter()
             .map(|&n| (n, Arc::new(NodeStore::new())))
             .collect();
-        StoreDirectory { stores: Arc::new(stores) }
+        StoreDirectory {
+            stores: Arc::new(stores),
+            moved: Arc::new(std::sync::RwLock::new(HashMap::new())),
+        }
     }
 
     pub fn node(&self, node: NodeId) -> Arc<NodeStore> {
@@ -52,6 +60,56 @@ impl StoreDirectory {
 
     pub fn nodes(&self) -> impl Iterator<Item = (NodeId, &Arc<NodeStore>)> {
         self.stores.iter().map(|(k, v)| (*k, v))
+    }
+
+    /// A session's home node — where its managed state lives unless a
+    /// migration moved it. The single source of truth for this derivation;
+    /// binds, migrations and the registry all go through it.
+    pub fn home_of(&self, session: SessionId) -> NodeId {
+        NodeId((session.0 % self.stores.len().max(1) as u64) as u32)
+    }
+
+    /// Resolve the store that actually holds `session`'s managed state.
+    ///
+    /// Sessions have a home node ([`Self::home_of`]), but migrations move
+    /// `state/{session}/*` entries between stores (Fig. 8 step 5), so a
+    /// request landing on *any* node — in particular one dispatched by the
+    /// ingress driver pool — must look the state up rather than assume the
+    /// home store. O(1): one read of the moved-session registry, falling
+    /// back to the home store for never-migrated sessions.
+    pub fn locate_session(&self, session: SessionId) -> Arc<NodeStore> {
+        match self.moved.read().unwrap().get(&session) {
+            Some(node) => self.node(*node),
+            None => self.node(self.home_of(session)),
+        }
+    }
+
+    /// Move `session`'s managed state to `to`'s node store (resolving the
+    /// current source through the registry) and record the new location so
+    /// [`Self::locate_session`] keeps resolving it. This is the
+    /// directory-aware form of [`crate::state::migrate_session_state`]
+    /// (Fig. 8 step 5); binds racing an in-flight migration may still read
+    /// the source store, as before. Returns `(entries_moved, approx_bytes)`.
+    pub fn migrate_session(&self, session: SessionId, to: NodeId) -> (usize, u64) {
+        let from = self.moved_to(session).unwrap_or_else(|| self.home_of(session));
+        let result = if from == to {
+            (0, 0)
+        } else {
+            crate::state::migrate_session_state(&self.node(from), &self.node(to), session)
+        };
+        let mut moved = self.moved.write().unwrap();
+        if to == self.home_of(session) {
+            moved.remove(&session); // back where locate_session defaults to
+        } else {
+            moved.insert(session, to);
+        }
+        result
+    }
+
+    /// Where `session`'s state currently lives, if it was migrated away
+    /// from its home node.
+    pub fn moved_to(&self, session: SessionId) -> Option<NodeId> {
+        self.moved.read().unwrap().get(&session).copied()
     }
 
     pub fn len(&self) -> usize {
@@ -88,6 +146,12 @@ pub mod keys {
     pub fn session_prefix(s: SessionId) -> String {
         format!("state/{s}/")
     }
+
+    /// Ingress front-door telemetry, one entry per workflow queue.
+    pub fn ingress(workflow: &str) -> String {
+        format!("ingress/{workflow}")
+    }
+    pub const INGRESS_PREFIX: &str = "ingress/";
 }
 
 #[cfg(test)]
@@ -107,5 +171,27 @@ mod tests {
     fn missing_node_panics() {
         let dir = StoreDirectory::new(&[NodeId(0)]);
         dir.node(NodeId(9));
+    }
+
+    #[test]
+    fn locate_session_follows_migrated_state() {
+        let dir = StoreDirectory::new(&[NodeId(0), NodeId(1)]);
+        let session = SessionId(4);
+        assert_eq!(dir.home_of(session), NodeId(0), "4 % 2 nodes");
+        let key = keys::session_state(session, "history");
+        // no migration recorded: resolve to the home store (O(1) default)
+        assert!(Arc::ptr_eq(&dir.locate_session(session), &dir.node(NodeId(0))));
+        dir.node(NodeId(0)).put(&key, vec![crate::json!(1)]);
+        // migrate to node 1: keys move and the lookup follows
+        let (moved, _bytes) = dir.migrate_session(session, NodeId(1));
+        assert_eq!(moved, 1);
+        assert!(!dir.node(NodeId(0)).contains(&key));
+        assert!(dir.node(NodeId(1)).contains(&key));
+        assert_eq!(dir.moved_to(session), Some(NodeId(1)));
+        assert!(Arc::ptr_eq(&dir.locate_session(session), &dir.node(NodeId(1))));
+        // migrate back home: registry entry cleared, default applies again
+        dir.migrate_session(session, NodeId(0));
+        assert_eq!(dir.moved_to(session), None);
+        assert!(Arc::ptr_eq(&dir.locate_session(session), &dir.node(NodeId(0))));
     }
 }

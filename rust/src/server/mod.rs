@@ -30,7 +30,10 @@ use crate::state::kvcache::{KvCacheManager, KvPolicy};
 use crate::transport::Bus;
 use crate::vectorstore::VectorStore;
 
-/// A running NALAR cluster.
+/// A running NALAR cluster. Handles are cheap clones over shared state;
+/// `shutdown` consumes one handle but stops the cluster for all of them
+/// (the ingress driver pool holds its own handle).
+#[derive(Clone)]
 pub struct Deployment {
     inner: Arc<Inner>,
 }
@@ -217,9 +220,22 @@ impl Deployment {
         self.inner.ids.session()
     }
 
+    /// Mint a request id without building a context yet. The ingress front
+    /// door assigns ids at admission so a request is traceable from the
+    /// moment it is accepted, before any driver picks it up.
+    pub fn new_request_id(&self) -> RequestId {
+        self.inner.ids.request()
+    }
+
     /// New request context for a workflow driver.
     pub fn ctx(&self, session: SessionId) -> CallCtx {
         let request: RequestId = self.inner.ids.request();
+        self.ctx_with(session, request)
+    }
+
+    /// Context for an already-assigned request id (ingress-dispatched
+    /// requests keep the id the front door stamped at admission).
+    pub fn ctx_with(&self, session: SessionId, request: RequestId) -> CallCtx {
         CallCtx {
             session,
             request,

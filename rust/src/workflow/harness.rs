@@ -78,7 +78,16 @@ impl RunStats {
     }
 }
 
-fn input_for(kind: WorkflowKind, progress: f64, turn: u64, rng: &mut Rng) -> crate::futures::Value {
+/// Synthesize one request input for `kind` from the §6 corpora. `progress`
+/// (0..1) drives the Azure-trace phase flip; `turn` > 0 draws a follow-up
+/// for stateful sessions. Shared by this closed-pool harness and the
+/// ingress load generator ([`crate::ingress::loadgen`]).
+pub fn input_for(
+    kind: WorkflowKind,
+    progress: f64,
+    turn: u64,
+    rng: &mut Rng,
+) -> crate::futures::Value {
     match kind {
         WorkflowKind::Financial => {
             let q = if turn == 0 {

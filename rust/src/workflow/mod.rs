@@ -19,7 +19,7 @@ use crate::agents::CallCtx;
 use crate::config::DeploymentConfig;
 use crate::error::Result;
 use crate::futures::Value;
-use crate::ids::SessionId;
+use crate::ids::{RequestId, SessionId};
 use crate::server::Deployment;
 use crate::state::{ManagedDict, ManagedList};
 
@@ -35,6 +35,16 @@ pub enum WorkflowKind {
 }
 
 impl WorkflowKind {
+    /// Parse a CLI/config name ("financial" | "router" | "swe").
+    pub fn parse(s: &str) -> Option<WorkflowKind> {
+        match s {
+            "financial" => Some(WorkflowKind::Financial),
+            "router" => Some(WorkflowKind::Router),
+            "swe" => Some(WorkflowKind::Swe),
+            _ => None,
+        }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             WorkflowKind::Financial => "financial",
@@ -64,10 +74,21 @@ pub struct Env {
 
 impl Env {
     pub fn new(d: &Deployment, session: SessionId) -> Env {
-        // Session state's home store; migrations move entries between
-        // stores, rebinding happens per request (see state::managed docs).
-        let node = crate::ids::NodeId((session.0 % d.cfg().nodes as u64) as u32);
-        Env { ctx: d.ctx(session), session_store: d.stores().node(node) }
+        Self::with_ctx(d, session, d.ctx(session))
+    }
+
+    /// Environment for a request whose id was already assigned (the
+    /// ingress front door stamps ids at admission).
+    pub fn with_request(d: &Deployment, session: SessionId, request: RequestId) -> Env {
+        Self::with_ctx(d, session, d.ctx_with(session, request))
+    }
+
+    fn with_ctx(d: &Deployment, session: SessionId, ctx: CallCtx) -> Env {
+        // Migrations move `state/{session}/*` between stores (Fig. 8 step
+        // 5), so the bind goes through the StoreDirectory lookup: a request
+        // landing on any node observes the state wherever it currently
+        // lives (home node by default, `moved` registry otherwise).
+        Env { ctx, session_store: d.stores().locate_session(session) }
     }
 
     pub fn session(&self) -> SessionId {
@@ -93,7 +114,23 @@ pub fn run_request(
     input: &Value,
     timeout: Duration,
 ) -> Result<Value> {
-    let env = Env::new(d, session);
+    run_env(Env::new(d, session), kind, input, timeout)
+}
+
+/// Like [`run_request`], but keeps the request id the ingress front door
+/// assigned at admission.
+pub fn run_request_as(
+    d: &Deployment,
+    kind: WorkflowKind,
+    session: SessionId,
+    request: RequestId,
+    input: &Value,
+    timeout: Duration,
+) -> Result<Value> {
+    run_env(Env::with_request(d, session, request), kind, input, timeout)
+}
+
+fn run_env(env: Env, kind: WorkflowKind, input: &Value, timeout: Duration) -> Result<Value> {
     match kind {
         WorkflowKind::Financial => financial::run(&env, input, timeout),
         WorkflowKind::Router => router::run(&env, input, timeout),
@@ -109,6 +146,7 @@ pub mod configs {
   "seed": 11,
   "control": {"global_period_ms": 40, "hol_threshold_ms": 120},
   "engine": {"max_batch": 8, "executor": "sim", "kv_policy": "hint"},
+  "ingress": {"policy": "bounded", "queue_cap": 256, "workers": 64},
   "agents": [
     {"name": "stock_analysis", "kind": "llm", "instances": 1,
      "directives": {"batchable": true, "max_instances": 2, "resources": {"GPU": 1}},
@@ -140,6 +178,7 @@ pub mod configs {
   "seed": 22,
   "control": {"global_period_ms": 40, "hol_threshold_ms": 120},
   "engine": {"max_batch": 8, "executor": "sim", "kv_policy": "hint"},
+  "ingress": {"policy": "bounded", "queue_cap": 256, "workers": 64},
   "agents": [
     {"name": "router", "kind": "llm", "instances": 1,
      "directives": {"batchable": true, "max_instances": 2, "resources": {"GPU": 0.25}},
@@ -168,6 +207,7 @@ pub mod configs {
   "seed": 33,
   "control": {"global_period_ms": 40, "hol_threshold_ms": 120},
   "engine": {"max_batch": 8, "executor": "sim", "kv_policy": "hint"},
+  "ingress": {"policy": "bounded", "queue_cap": 256, "workers": 64},
   "agents": [
     {"name": "planner", "kind": "llm", "instances": 1,
      "directives": {"batchable": true, "max_instances": 2, "resources": {"GPU": 1}},

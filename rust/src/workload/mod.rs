@@ -42,6 +42,41 @@ impl Arrivals {
     }
 }
 
+/// Parse an RPS sweep spec: either a comma list (`"20,40,80"`) or a range
+/// (`"20:120:20"` = start:end:step, inclusive). Used by `nalar loadgen
+/// --rps`. Returns `None` on malformed specs, non-positive rates, or
+/// ranges expanding past [`MAX_SWEEP_POINTS`] (each point is a full
+/// measurement window — a tiny step is always a mistake, and without the
+/// cap a sub-epsilon step would loop forever).
+pub fn parse_rps_sweep(spec: &str) -> Option<Vec<f64>> {
+    let parse_rate = |s: &str| -> Option<f64> {
+        let v: f64 = s.trim().parse().ok()?;
+        (v > 0.0 && v.is_finite()).then_some(v)
+    };
+    if let Some((start, rest)) = spec.split_once(':') {
+        let (end, step) = rest.split_once(':')?;
+        let (start, end, step) = (parse_rate(start)?, parse_rate(end)?, parse_rate(step)?);
+        if end < start {
+            return None;
+        }
+        let mut out = Vec::new();
+        let mut r = start;
+        while r <= end + 1e-9 {
+            if out.len() >= MAX_SWEEP_POINTS {
+                return None;
+            }
+            out.push(r);
+            r += step;
+        }
+        return Some(out);
+    }
+    let rates: Option<Vec<f64>> = spec.split(',').map(parse_rate).collect();
+    rates.filter(|r| !r.is_empty() && r.len() <= MAX_SWEEP_POINTS)
+}
+
+/// Most sweep points a single `--rps` spec may expand to.
+pub const MAX_SWEEP_POINTS: usize = 256;
+
 /// Two-class trace with time-shifting imbalance, following the Azure agent
 /// traces' shape (§6.1: "imbalance can exceed 90%"). Phase 1 is chat-heavy,
 /// phase 2 flips toward coding — the router workflow's stress case.
@@ -172,6 +207,25 @@ mod tests {
         assert!(!chat_prompt(&mut rng).is_empty());
         assert!(!finqa_followup(&mut rng).is_empty());
         assert!(seed_docs().len() >= 8);
+    }
+
+    #[test]
+    fn rps_sweep_specs() {
+        assert_eq!(parse_rps_sweep("20,40,80"), Some(vec![20.0, 40.0, 80.0]));
+        assert_eq!(parse_rps_sweep("80"), Some(vec![80.0]));
+        assert_eq!(
+            parse_rps_sweep("20:100:40"),
+            Some(vec![20.0, 60.0, 100.0]),
+            "range is inclusive"
+        );
+        assert!(parse_rps_sweep("").is_none());
+        assert!(parse_rps_sweep("0,40").is_none());
+        assert!(parse_rps_sweep("100:20:10").is_none());
+        assert!(parse_rps_sweep("a,b").is_none());
+        // point-count cap: tiny steps (incl. sub-epsilon non-advancing
+        // ones) are rejected instead of hanging
+        assert!(parse_rps_sweep("1:1000000:1").is_none());
+        assert!(parse_rps_sweep("20:160:0.000000000000001").is_none());
     }
 
     #[test]

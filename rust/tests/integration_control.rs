@@ -6,9 +6,10 @@ use std::time::Duration;
 use nalar::baselines::SystemUnderTest;
 use nalar::config::DeploymentConfig;
 use nalar::coordinator::PolicyCmd;
-use nalar::ids::{InstanceId, SessionId};
+use nalar::ids::{InstanceId, NodeId, SessionId};
 use nalar::json;
 use nalar::server::Deployment;
+use nalar::state::ManagedList;
 use nalar::workflow::{Env, WorkflowKind};
 
 fn fast(cfg: &mut DeploymentConfig) {
@@ -55,6 +56,69 @@ fn migration_moves_queued_session_work() {
     let view = d.global().collect();
     let m1 = view.instances.iter().find(|i| i.id == i1).unwrap();
     assert!(m1.m.migrated_in >= 1, "target never received the migration");
+    d.shutdown();
+}
+
+#[test]
+fn migration_round_trip_preserves_managed_state_and_kv() {
+    // Fig. 8 end-to-end: drive a session on a:0 (node 0), migrate it to
+    // a:1 (node 1), and assert that (a) managed state survives and is
+    // observable through the directory-aware bind from *any* node, and
+    // (b) the engine-side KV cache moved with the session (the follow-up
+    // call is a KV hit at the destination, not a recompute).
+    let mut cfg = DeploymentConfig::from_json(
+        r#"{"nodes": 2,
+            "agents": [{"name": "a", "kind": "llm", "instances": 2,
+             "directives": {"managed_state": true, "max_instances": 2},
+             "profile": {"base_s": 0.1, "mean_output_tokens": 40}, "methods": ["m"]}],
+            "policies": []}"#,
+    )
+    .unwrap();
+    fast(&mut cfg);
+    let d = Deployment::launch(cfg).unwrap();
+    let i0 = InstanceId::new("a", 0); // round-robin placement: a:0 -> node 0
+    let i1 = InstanceId::new("a", 1); // a:1 -> node 1
+    let session = SessionId(2); // home store = node 0 in a 2-node cluster
+    d.router().pin(session, "a", i0.clone());
+
+    // Turn 1: write managed state and warm the KV cache on a:0.
+    let env = Env::new(&d, session);
+    env.state_list("history").push(json!({"turn": 1}));
+    let f = d.ctx(session).agent("a").call("m", json!({"prompt": "warm", "max_new_tokens": 24}));
+    assert_eq!(f.value(Duration::from_secs(20)).unwrap().get("kv").as_str(), Some("miss"));
+
+    // MigrateOut -> MigrateIn between the component controllers.
+    d.global().apply(vec![PolicyCmd::Migrate { session, from: i0, to: i1.clone() }]);
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let view = d.global().collect();
+        let arrived =
+            view.instances.iter().find(|i| i.id == i1).is_some_and(|i| i.m.migrated_in >= 1);
+        if arrived || std::time::Instant::now() > deadline {
+            assert!(arrived, "migration never reached a:1");
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // (a) Managed state followed the session to node 1: the home store no
+    // longer has it, and the directory-aware bind still finds it.
+    let home_bind = ManagedList::bind(d.stores().node(NodeId(0)), session, "history");
+    assert!(home_bind.is_empty(), "state should have left the home store");
+    let env2 = Env::new(&d, session);
+    assert_eq!(env2.state_list("history").len(), 1, "state lost in migration");
+    env2.state_list("history").push(json!({"turn": 2}));
+    assert_eq!(env2.state_list("history").len(), 2, "binds must hit the migrated store");
+
+    // (b) KV bytes moved: the session's next call lands on a:1 (Fig. 8
+    // step 4 repinned it) and finds its cache resident.
+    assert_eq!(d.router().sticky_of(session, "a"), Some(i1));
+    let f2 = d.ctx(session).agent("a").call("m", json!({"prompt": "more", "max_new_tokens": 24}));
+    assert_eq!(
+        f2.value(Duration::from_secs(20)).unwrap().get("kv").as_str(),
+        Some("hit"),
+        "KV cache did not survive the migration"
+    );
     d.shutdown();
 }
 
