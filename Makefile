@@ -1,6 +1,6 @@
 # Local entrypoints — identical to what CI runs (.github/workflows/ci.yml).
 
-.PHONY: build test fmt clippy lint bench bench-quick loadgen loadgen-quick artifacts clean
+.PHONY: build test fmt clippy lint bench bench-quick loadgen loadgen-quick loadgen-hc artifacts clean
 
 build:
 	cargo build --release --all-targets
@@ -35,6 +35,13 @@ loadgen:
 loadgen-quick:
 	cargo run --release -- loadgen --quick
 	cargo run --release -- loadgen --check-only
+
+# High-concurrency scheduler gate (what the loadgen-smoke CI job also
+# runs): ~640 offered requests on a 4-thread scheduler; fails unless every
+# admitted request completes.
+loadgen-hc:
+	cargo run --release -- loadgen --hc-smoke --out hc-point
+	cargo run --release -- loadgen --check-only --out hc-point
 
 # OPTIONAL / offline-skippable: lowers the L2 JAX transformer (with the L1
 # Pallas attention kernels) to HLO text + a weights blob for the PJRT

@@ -197,6 +197,7 @@ pub fn validate(report: &Value) -> Result<()> {
             "offered",
             "completed",
             "failed",
+            "expired_in_queue",
             "shed",
             "goodput_rps",
             "shed_rate",
@@ -709,7 +710,7 @@ mod tests {
     fn validate_accepts_rps_sweep_points() {
         let mut p = json!({
             "workflow": "router", "system": "NALAR", "rps_wall": 80.0, "rps_paper": 8.0,
-            "offered": 640, "completed": 600, "failed": 10, "shed": 30,
+            "offered": 640, "completed": 600, "failed": 6, "expired_in_queue": 4, "shed": 30,
             "goodput_rps": 75.0, "shed_rate": 0.047
         });
         p.insert("latency", lat());

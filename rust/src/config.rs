@@ -169,8 +169,14 @@ pub struct IngressSettings {
     pub policy: String,
     /// Bounded-queue capacity per workflow queue.
     pub queue_cap: usize,
-    /// Driver-pool worker threads draining the queues.
+    /// Scheduler OS threads. This bounds *threads*, not in-flight
+    /// requests: drivers are resumable state machines, so each thread
+    /// multiplexes many parked requests (`max_in_flight` is the
+    /// concurrency bound).
     pub workers: usize,
+    /// Concurrent started (in-flight) requests across the front door —
+    /// the backpressure bound behind the admission queues.
+    pub max_in_flight: usize,
     /// Token-bucket refill rate (requests/second, wall clock). 0 means
     /// unlimited (the bucket never runs dry).
     pub token_rate: f64,
@@ -183,7 +189,8 @@ impl Default for IngressSettings {
         IngressSettings {
             policy: "bounded".into(),
             queue_cap: 256,
-            workers: 64,
+            workers: 8,
+            max_in_flight: 1024,
             token_rate: 0.0,
             token_burst: 32.0,
         }
@@ -257,6 +264,7 @@ impl DeploymentConfig {
                 policy: i.str_or("policy", &di.policy).to_string(),
                 queue_cap: i.u64_or("queue_cap", di.queue_cap as u64) as usize,
                 workers: i.u64_or("workers", di.workers as u64) as usize,
+                max_in_flight: i.u64_or("max_in_flight", di.max_in_flight as u64) as usize,
                 token_rate: i.f64_or("token_rate", di.token_rate),
                 token_burst: i.f64_or("token_burst", di.token_burst),
             }
@@ -388,6 +396,9 @@ impl DeploymentConfig {
         if self.ingress.workers == 0 {
             return Err(Error::Config("ingress.workers must be >= 1".into()));
         }
+        if self.ingress.max_in_flight == 0 {
+            return Err(Error::Config("ingress.max_in_flight must be >= 1".into()));
+        }
         Ok(())
     }
 
@@ -422,16 +433,20 @@ mod tests {
     #[test]
     fn ingress_section_parses_and_validates() {
         let y = r#"{"ingress": {"policy": "token_bucket", "queue_cap": 32, "workers": 8,
-                     "token_rate": 50.0, "token_burst": 10.0},
+                     "max_in_flight": 96, "token_rate": 50.0, "token_burst": 10.0},
                     "agents": [{"name": "a", "kind": "llm", "methods": ["m"]}]}"#;
         let c = DeploymentConfig::from_json(y).unwrap();
         assert_eq!(c.ingress.policy, "token_bucket");
         assert_eq!(c.ingress.queue_cap, 32);
         assert_eq!(c.ingress.workers, 8);
+        assert_eq!(c.ingress.max_in_flight, 96);
         assert_eq!(c.ingress.token_rate, 50.0);
         let bad = r#"{"ingress": {"policy": "magic"},
                       "agents": [{"name": "a", "kind": "llm"}]}"#;
         assert!(DeploymentConfig::from_json(bad).is_err());
+        let bad_mif = r#"{"ingress": {"max_in_flight": 0},
+                          "agents": [{"name": "a", "kind": "llm"}]}"#;
+        assert!(DeploymentConfig::from_json(bad_mif).is_err());
     }
 
     #[test]

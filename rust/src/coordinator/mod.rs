@@ -57,8 +57,14 @@ pub struct InstanceMetrics {
 #[derive(Debug, Clone, Default)]
 pub struct IngressMetrics {
     pub workflow: String,
-    /// Requests waiting in the front-door queue right now.
+    /// Requests waiting in the front-door queue right now (not started).
     pub depth: usize,
+    /// Started-but-unfinished requests (stored continuations in the
+    /// event-driven scheduler). `in_flight / workers` is the multiplexing
+    /// factor — how many requests each scheduler thread is carrying.
+    pub in_flight: usize,
+    /// Scheduler OS threads serving this front door.
+    pub workers: usize,
     /// Bounded-queue capacity (0 = unbounded).
     pub cap: usize,
     /// Admission-policy name ("unbounded" | "bounded" | "token_bucket").
@@ -66,5 +72,10 @@ pub struct IngressMetrics {
     pub accepted: u64,
     pub shed: u64,
     pub completed: u64,
+    /// Execution failures (driver errors, deadline expiry *after* start).
     pub failed: u64,
+    /// Deadline expiries before the driver ever started (shed-in-queue) —
+    /// kept apart from `failed` so a slow driver and an overloaded queue
+    /// are distinguishable in telemetry and the rps_sweep schema.
+    pub expired_in_queue: u64,
 }

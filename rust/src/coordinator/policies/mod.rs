@@ -166,6 +166,11 @@ pub struct OverloadProvision {
     pub depth_frac: f64,
     /// Absolute depth that counts as overloaded on unbounded queues.
     pub depth_abs: usize,
+    /// In-flight requests per scheduler thread that count as saturated
+    /// (the event-driven ingress parks requests instead of blocking
+    /// threads, so a high multiplexing factor means work is piling up in
+    /// the in-flight table even when the admission queue looks shallow).
+    pub sat_multiplex: f64,
     /// Ticks to wait between provisions (damping).
     pub cooldown: u32,
     since_last: u32,
@@ -177,6 +182,7 @@ impl Default for OverloadProvision {
         OverloadProvision {
             depth_frac: 0.5,
             depth_abs: 64,
+            sat_multiplex: 16.0,
             cooldown: 5,
             since_last: u32::MAX / 2,
             last_shed: 0,
@@ -206,7 +212,11 @@ impl Policy for OverloadProvision {
                 i.depth >= self.depth_abs
             }
         });
-        if !(shedding || deep) {
+        let saturated = view
+            .ingress
+            .iter()
+            .any(|i| i.workers > 0 && i.in_flight as f64 >= self.sat_multiplex * i.workers as f64);
+        if !(shedding || deep || saturated) {
             return;
         }
         // The bottleneck is the agent type with the highest mean queue —
@@ -422,6 +432,32 @@ mod tests {
         let mut api2 = PolicyApi::new();
         p.tick(&v, &mut api2);
         assert!(api2.commands().is_empty());
+    }
+
+    #[test]
+    fn overload_provision_reacts_to_multiplexing_saturation() {
+        use crate::coordinator::IngressMetrics;
+        // No sheds, shallow queue — but the in-flight table carries 16x
+        // the scheduler's threads: the thread-decoupled front door is
+        // saturated and capacity must grow.
+        let mut v = view(vec![iv("coder", 0, 9, 0)]);
+        v.ingress = vec![IngressMetrics {
+            workflow: "router".into(),
+            depth: 2,
+            in_flight: 128,
+            workers: 8,
+            cap: 256,
+            policy: "bounded".into(),
+            accepted: 500,
+            ..Default::default()
+        }];
+        let mut p = OverloadProvision::default();
+        let mut api = PolicyApi::new();
+        p.tick(&v, &mut api);
+        assert!(api
+            .commands()
+            .iter()
+            .any(|c| matches!(c, PolicyCmd::Provision { agent } if agent == "coder")));
     }
 
     #[test]

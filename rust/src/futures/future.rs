@@ -1,10 +1,16 @@
 //! The future cell: immutable-once value, mutable metadata, push readiness.
 //!
-//! Threads-and-condvars implementation: every component controller, driver
-//! and engine runs on OS threads (the runtime substrate is built from
-//! scratch; see DESIGN.md §3), so `value(timeout)` blocks the calling
-//! thread exactly like the paper's `future.value(timeout=t)` blocks the
-//! Python caller.
+//! Readiness is delivered two ways from the same resolution site:
+//!
+//! * **Blocking** (`value(timeout)`): the caller parks on the cell's
+//!   condvar exactly like the paper's `future.value(timeout=t)` blocks the
+//!   Python caller. Component controllers and the closed-loop harness use
+//!   this path — they own their threads.
+//! * **Push** (`subscribe`): a [`Waker`] callback fired exactly once when
+//!   the cell reaches a terminal state. Resumable workflow drivers
+//!   ([`crate::workflow::Driver`]) and the event-driven ingress scheduler
+//!   use this path — an in-flight request is a stored continuation, not a
+//!   parked thread, so readiness must come to *it*.
 
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -94,6 +100,12 @@ impl FutureMeta {
     }
 }
 
+/// Push-readiness callback: fired exactly once, after the cell reaches
+/// `Ready` or `Failed` (or immediately at subscription if it already has).
+/// Always invoked *outside* the cell lock, so a waker may freely take
+/// other locks (the ingress scheduler's ready-queue lock, for one).
+pub type Waker = Box<dyn FnOnce() + Send>;
+
 struct Inner {
     state: FutureState,
     value: Option<Arc<Value>>,
@@ -101,6 +113,8 @@ struct Inner {
     meta: FutureMeta,
     /// Busy-time actually spent executing (telemetry).
     service_us: u64,
+    /// Wakers to fire on the transition to a terminal state.
+    wakers: Vec<Waker>,
 }
 
 /// Shared future cell. Producers resolve it exactly once; consumers block
@@ -122,6 +136,7 @@ impl FutureCell {
                 error: None,
                 meta,
                 service_us: 0,
+                wakers: Vec::new(),
             }),
             ready: Condvar::new(),
         })
@@ -172,8 +187,12 @@ impl FutureCell {
         i.value = Some(Arc::new(value));
         i.state = FutureState::Ready;
         i.service_us = service_us;
+        let wakers = std::mem::take(&mut i.wakers);
         drop(i);
         self.ready.notify_all();
+        for w in wakers {
+            w();
+        }
     }
 
     pub fn fail(&self, err: impl Into<String>) {
@@ -183,8 +202,27 @@ impl FutureCell {
         }
         i.error = Some(err.into());
         i.state = FutureState::Failed;
+        let wakers = std::mem::take(&mut i.wakers);
         drop(i);
         self.ready.notify_all();
+        for w in wakers {
+            w();
+        }
+    }
+
+    /// Register a push-readiness callback (the event-driven counterpart of
+    /// parking on `value`). Fired exactly once when the cell turns terminal;
+    /// if it already is, the waker fires inline before `subscribe` returns —
+    /// a subscriber that checks `try_value` *after* subscribing can never
+    /// miss the wakeup.
+    pub fn subscribe(&self, waker: Waker) {
+        let mut i = self.inner.lock().unwrap();
+        if matches!(i.state, FutureState::Ready | FutureState::Failed) {
+            drop(i);
+            waker();
+            return;
+        }
+        i.wakers.push(waker);
     }
 
     // ----------------------------------------------------------- metadata
@@ -325,6 +363,54 @@ impl FutureHandle {
     pub fn meta(&self) -> FutureMeta {
         self.cell.meta()
     }
+
+    /// Register a push-readiness callback on the underlying cell.
+    pub fn subscribe(&self, waker: Waker) {
+        self.cell.subscribe(waker);
+    }
+}
+
+/// A one-thread wake flag: the bridge between push-based future readiness
+/// and a thread that still wants to block (the compat shim driving a
+/// resumable [`crate::workflow::Driver`] to completion). `wake` may be
+/// called from any number of wakers; `wait` consumes at most one wakeup.
+#[derive(Default)]
+pub struct WakeSignal {
+    woken: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl WakeSignal {
+    pub fn new() -> Arc<WakeSignal> {
+        Arc::new(WakeSignal::default())
+    }
+
+    /// Record a wakeup and rouse the waiter (idempotent).
+    pub fn wake(&self) {
+        let mut g = self.woken.lock().unwrap();
+        *g = true;
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Block until `wake` is called or `timeout` passes, then clear the
+    /// flag. A `wake` that raced ahead of `wait` is not lost: the flag
+    /// stays set until consumed here. Returns true if woken.
+    pub fn wait(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.woken.lock().unwrap();
+        while !*g {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (g2, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+        let woken = *g;
+        *g = false;
+        woken
+    }
 }
 
 #[cfg(test)]
@@ -438,6 +524,66 @@ mod tests {
         c.mark_queued(InstanceId::new("dev", 0));
         c.mark_running();
         assert_eq!(c.queue_wait(), Duration::ZERO);
+    }
+
+    #[test]
+    fn subscribe_fires_on_resolve_and_fail() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let fired = Arc::new(AtomicUsize::new(0));
+        let c = FutureCell::new(meta(11));
+        let f1 = fired.clone();
+        c.subscribe(Box::new(move || {
+            f1.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert_eq!(fired.load(Ordering::SeqCst), 0, "waker must wait for the terminal state");
+        c.resolve(json!(1), 0);
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+        // a late failure is ignored: the waker must not fire twice
+        c.fail("late");
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+
+        let failed = FutureCell::new(meta(12));
+        let f2 = fired.clone();
+        failed.subscribe(Box::new(move || {
+            f2.fetch_add(10, Ordering::SeqCst);
+        }));
+        failed.fail("boom");
+        assert_eq!(fired.load(Ordering::SeqCst), 11, "failure is terminal too");
+    }
+
+    #[test]
+    fn subscribe_after_terminal_fires_inline() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let c = FutureCell::new(meta(13));
+        c.resolve(json!("done"), 0);
+        let fired = Arc::new(AtomicBool::new(false));
+        let f = fired.clone();
+        c.subscribe(Box::new(move || f.store(true, Ordering::SeqCst)));
+        assert!(fired.load(Ordering::SeqCst), "no wakeup may be missed");
+    }
+
+    #[test]
+    fn wake_signal_is_not_lost_when_racing_ahead() {
+        let s = WakeSignal::new();
+        s.wake(); // wake before anyone waits
+        assert!(s.wait(Duration::from_millis(1)), "pre-wait wake must be consumed");
+        assert!(!s.wait(Duration::from_millis(1)), "wakeup was consumed, flag cleared");
+    }
+
+    #[test]
+    fn wake_signal_bridges_subscription_to_a_blocking_thread() {
+        let c = FutureCell::new(meta(14));
+        let s = WakeSignal::new();
+        let s2 = s.clone();
+        c.subscribe(Box::new(move || s2.wake()));
+        let c2 = c.clone();
+        let producer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            c2.resolve(json!(5), 0);
+        });
+        assert!(s.wait(Duration::from_secs(2)), "push readiness must arrive");
+        assert_eq!(c.try_value().unwrap().unwrap().as_i64(), Some(5));
+        producer.join().unwrap();
     }
 
     #[test]

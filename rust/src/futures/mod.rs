@@ -18,6 +18,6 @@ mod future;
 mod graph;
 mod table;
 
-pub use future::{FutureCell, FutureHandle, FutureMeta, FutureState, Value};
+pub use future::{FutureCell, FutureHandle, FutureMeta, FutureState, Value, WakeSignal, Waker};
 pub use graph::DepGraph;
 pub use table::FutureTable;

@@ -54,6 +54,21 @@ pub struct LoadgenOpts {
     pub seed: u64,
     /// Deployment config file (None = the workflow's builtin config).
     pub config: Option<PathBuf>,
+    /// Override the config's `ingress.workers` scheduler thread count
+    /// (None = keep the config's). The event-driven scheduler multiplexes
+    /// in-flight requests over these threads, so a small value with a
+    /// large offered load is the thread-decoupling stress test.
+    pub workers: Option<usize>,
+    /// Override the deployment's policy list (None = keep the config's /
+    /// the system's defaults). The hc gate pins this to `load_balance`
+    /// only: `resource_realloc` may kill an instance mid-run, failing its
+    /// queued futures retryably — legitimate in the saturation sweep,
+    /// noise in a must-complete-everything functional gate.
+    pub policies: Option<Vec<String>>,
+    /// Fail the run if any point completes fewer requests than it
+    /// admitted (offered − shed) — the CI gate for the scheduler: with
+    /// in-flight ≫ threads, every admitted request must still finish.
+    pub expect_admitted_complete: bool,
 }
 
 impl LoadgenOpts {
@@ -71,6 +86,9 @@ impl LoadgenOpts {
             time_scale: Some(0.002),
             seed: 0x10AD,
             config: None,
+            workers: None,
+            policies: None,
+            expect_admitted_complete: false,
         }
     }
 
@@ -91,6 +109,32 @@ impl LoadgenOpts {
             time_scale: Some(0.1),
             seed: 0x10AD,
             config: None,
+            workers: None,
+            policies: None,
+            expect_admitted_complete: false,
+        }
+    }
+
+    /// High-concurrency CI gate: one point offering ~640 requests in 2s
+    /// onto a 4-thread scheduler (in-flight ≫ threads), failing the run
+    /// if any admitted request does not complete. The generous deadline
+    /// makes this a functional gate on the event-driven scheduler, not a
+    /// latency benchmark.
+    pub fn hc_smoke(workflow: WorkflowKind) -> LoadgenOpts {
+        LoadgenOpts {
+            systems: vec![SystemUnderTest::Nalar],
+            rates: vec![320.0],
+            secs: 2,
+            session_pool: 32,
+            timeout_paper_s: 600.0,
+            time_scale: Some(0.0005),
+            workers: Some(4),
+            // `resource_realloc` may kill an instance mid-run, failing its
+            // queued futures retryably — legitimate in the saturation
+            // sweep, noise in a must-complete-everything gate.
+            policies: Some(vec!["load_balance".into()]),
+            expect_admitted_complete: true,
+            ..Self::quick(workflow)
         }
     }
 }
@@ -101,7 +145,7 @@ pub fn run(opts: &LoadgenOpts) -> Result<PathBuf> {
         return Err(Error::Config("loadgen needs at least one rate and one system".into()));
     }
     let mut table = Table::new(&[
-        "system", "rps", "offered", "ok", "shed", "fail", "goodput", "p50(s)", "p99(s)",
+        "system", "rps", "offered", "ok", "shed", "expired", "fail", "goodput", "p50(s)", "p99(s)",
     ]);
     let mut points = Vec::new();
     for &rps in &opts.rates {
@@ -121,11 +165,27 @@ pub fn run(opts: &LoadgenOpts) -> Result<PathBuf> {
                 p.get("offered").as_u64().unwrap_or(0).to_string(),
                 p.get("completed").as_u64().unwrap_or(0).to_string(),
                 p.get("shed").as_u64().unwrap_or(0).to_string(),
+                p.get("expired_in_queue").as_u64().unwrap_or(0).to_string(),
                 p.get("failed").as_u64().unwrap_or(0).to_string(),
                 format!("{:.1}", p.get("goodput_rps").as_f64().unwrap_or(0.0)),
                 format!("{:.1}", p.get("latency").get("p50").as_f64().unwrap_or(0.0)),
                 format!("{:.1}", p.get("latency").get("p99").as_f64().unwrap_or(0.0)),
             ]);
+            if opts.expect_admitted_complete {
+                let offered = p.get("offered").as_u64().unwrap_or(0);
+                let shed = p.get("shed").as_u64().unwrap_or(0);
+                let completed = p.get("completed").as_u64().unwrap_or(0);
+                if completed < offered.saturating_sub(shed) {
+                    return Err(Error::Msg(format!(
+                        "high-concurrency gate: {} {} @ {:.0} rps completed only {completed} of \
+                         {} admitted requests",
+                        opts.workflow.name(),
+                        system.name(),
+                        rps,
+                        offered.saturating_sub(shed),
+                    )));
+                }
+            }
             points.push(p);
         }
     }
@@ -133,6 +193,7 @@ pub fn run(opts: &LoadgenOpts) -> Result<PathBuf> {
     table.print();
     let report = bench::report(bench::RPS_SWEEP, opts.quick, "paper_s", points);
     bench::validate(&report)?;
+    std::fs::create_dir_all(&opts.out_dir)?;
     bench::write_report(&opts.out_dir, bench::RPS_SWEEP, &report)
 }
 
@@ -145,14 +206,20 @@ fn run_point(opts: &LoadgenOpts, rps: f64, system: SystemUnderTest) -> Result<Va
     if let Some(ts) = opts.time_scale {
         cfg.time_scale = ts;
     }
+    if let Some(w) = opts.workers {
+        cfg.ingress.workers = w.max(1);
+    }
     // Apply the system's serving mode FIRST (for NALAR this fills the
     // default policy trio when the config declares none — pushing ours
     // earlier would suppress that fill), then add the ingress-aware
     // provisioning loop on top. Baselines get stripped of all policies
     // (and admission control) by the same `apply`, which `launch_as`
-    // re-runs idempotently.
+    // re-runs idempotently. An explicit `opts.policies` override is
+    // authoritative: nothing is appended to it.
     system.apply(&mut cfg);
-    if system == SystemUnderTest::Nalar
+    if let Some(policies) = &opts.policies {
+        cfg.policies = policies.clone();
+    } else if system == SystemUnderTest::Nalar
         && !cfg.policies.iter().any(|p| p == "overload_provision")
     {
         cfg.policies.push("overload_provision".into());
@@ -192,7 +259,7 @@ fn run_point(opts: &LoadgenOpts, rps: f64, system: SystemUnderTest) -> Result<Va
     }
 
     // Drain: every admitted request either completes or hits its deadline
-    // (the driver pool fails expired work fast, so this terminates).
+    // (the scheduler's sweep fails expired work fast, so this terminates).
     let ok_rec = LatencyRecorder::new(); // completions within deadline
     let tail_rec = LatencyRecorder::new(); // + timeouts censored at the deadline
     let mut completed = 0u64;
@@ -212,6 +279,11 @@ fn run_point(opts: &LoadgenOpts, rps: f64, system: SystemUnderTest) -> Result<Va
             }
         }
     }
+    // Everything is drained, so the final snapshot splits the failures:
+    // `expired_in_queue` never started a driver (queueing shed the work),
+    // the remainder failed in execution (slow driver / agent error).
+    let m_end = ingress.metrics(opts.workflow).unwrap_or_default();
+    let expired_in_queue = m_end.expired_in_queue;
     ingress.stop();
     d.shutdown();
 
@@ -225,13 +297,15 @@ fn run_point(opts: &LoadgenOpts, rps: f64, system: SystemUnderTest) -> Result<Va
         "duration_s": opts.secs,
         "offered": offered,
         "completed": completed,
-        "failed": failed,
+        "failed": failed.saturating_sub(expired_in_queue),
+        "expired_in_queue": expired_in_queue,
         "shed": shed,
         "goodput_rps": gput,
         "goodput_frac": gput / rps,
         "shed_rate": shed_rate(shed, offered),
         "timeout_paper_s": opts.timeout_paper_s,
-        "ingress_policy": ingress_policy
+        "ingress_policy": ingress_policy,
+        "ingress_workers": m_end.workers
     });
     p.insert("latency", tail_rec.summary_scaled(paper).to_json());
     p.insert("latency_ok", ok_rec.summary_scaled(paper).to_json());
@@ -264,7 +338,34 @@ mod tests {
         let p = &pts[0];
         assert!(p.get("completed").as_u64().unwrap() > 0, "nothing completed");
         assert_eq!(p.get("ingress_policy").as_str(), Some("bounded"));
+        assert!(p.get("expired_in_queue").as_u64().is_some(), "new-schema field missing");
+        assert!(p.get("ingress_workers").as_u64().unwrap() >= 1);
         assert!(p.get("latency").get("p99").as_f64().is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hc_gate_fails_when_admitted_work_cannot_complete() {
+        // A zero-second deadline guarantees nothing completes; the
+        // completion gate must turn that into an error instead of a
+        // quietly-degraded report.
+        let dir = std::env::temp_dir().join(format!("nalar-loadgen-hc-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let opts = LoadgenOpts {
+            rates: vec![50.0],
+            secs: 1,
+            session_pool: 4,
+            // 1ms effective deadline against ~12ms of service time:
+            // nothing admitted can finish in time.
+            timeout_paper_s: 0.0,
+            time_scale: Some(0.01),
+            out_dir: dir.clone(),
+            workers: Some(2),
+            expect_admitted_complete: true,
+            ..LoadgenOpts::hc_smoke(WorkflowKind::Router)
+        };
+        let err = run(&opts).unwrap_err();
+        assert!(err.to_string().contains("high-concurrency gate"), "{err}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -13,9 +13,16 @@
 //! * an [`AdmissionController`] per queue decides accept-vs-shed
 //!   ([`AdmissionPolicy`]: unbounded / bounded / token bucket); shed
 //!   requests fail fast with a retryable [`Error::Shed`].
-//! * a **driver pool** of worker threads drains the queues onto the
-//!   existing [`crate::workflow`] drivers against the [`Deployment`] —
-//!   drivers still block, but on pool threads the operator sizes.
+//! * an **event-driven scheduler** multiplexes admitted requests over a
+//!   small fixed thread pool: each request is a resumable
+//!   [`crate::workflow::Driver`] polled until it suspends, then *parked*
+//!   in an in-flight table — occupying no thread — until a
+//!   [`crate::futures::FutureCell`] waker pushes it back onto the ready
+//!   queue. `ingress.workers` bounds *threads*; `ingress.max_in_flight`
+//!   bounds concurrent requests (the multiplexing factor in-flight ÷
+//!   threads is published as telemetry). Deadlines are enforced on parked
+//!   and queued work by a periodic sweep, again without a thread per
+//!   request.
 //! * queue depth and accept/shed/complete counters are pushed into the
 //!   node store (`ingress/{workflow}`), where
 //!   [`crate::coordinator::GlobalController::collect`] aggregates them so
@@ -30,21 +37,20 @@ pub mod loadgen;
 
 pub use admission::{AdmissionController, AdmissionPolicy};
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::IngressMetrics;
 use crate::error::{Error, Result};
-use crate::futures::Value;
+use crate::futures::{FutureCell, Value};
 use crate::ids::{NodeId, RequestId, SessionId};
 use crate::nodestore::keys;
 use crate::server::Deployment;
-use crate::workflow::{run_request_as, WorkflowKind};
+use crate::workflow::{driver_for, Driver, Env, Step, WorkflowKind};
 
-/// Completion slot shared between a [`Ticket`] and the worker that runs
-/// the request.
+/// Completion slot shared between a [`Ticket`] and the scheduler.
 struct TicketCell {
     slot: Mutex<TicketState>,
     cv: Condvar,
@@ -77,7 +83,7 @@ impl TicketCell {
 }
 
 /// The caller's handle for an admitted request. `submit` returns it
-/// immediately; the request runs whenever a pool worker picks it up.
+/// immediately; the request runs whenever the scheduler picks it up.
 pub struct Ticket {
     pub request: RequestId,
     pub session: SessionId,
@@ -112,7 +118,7 @@ impl Ticket {
     }
 }
 
-/// One queued request.
+/// One admitted request waiting to start (no driver built yet).
 struct Queued {
     session: SessionId,
     request: RequestId,
@@ -123,22 +129,110 @@ struct Queued {
     cell: Arc<TicketCell>,
 }
 
+/// One started request: a stored continuation, not a thread's stack. This
+/// is the representation the two-level control plane needs for everything
+/// downstream — it can be parked, re-enqueued, expired, (eventually)
+/// cancelled or migrated, all without owning a thread.
+struct InFlight {
+    idx: usize,
+    request: RequestId,
+    driver: Box<dyn Driver>,
+    env: Env,
+    submitted: Instant,
+    deadline: Instant,
+    timeout: Duration,
+    cell: Arc<TicketCell>,
+    /// Futures this request already holds a waker on: each is subscribed
+    /// at most once per request, so a join pending through many wake
+    /// cycles doesn't accumulate duplicate wakers (and their spurious
+    /// re-polls) on its slowest futures.
+    subscribed: HashSet<u64>,
+}
+
+/// A request whose deadline expired before completion, collected by the
+/// sweep for fulfilment outside the scheduler lock.
+struct Lapsed {
+    idx: usize,
+    submitted: Instant,
+    timeout: Duration,
+    cell: Arc<TicketCell>,
+    /// True if it never started (still in the admission queue) —
+    /// `expired_in_queue`, not an execution failure.
+    in_queue: bool,
+}
+
+/// Scheduler state under one lock: admission queues feed the in-flight
+/// table; wakers move parked continuations to the ready queue.
+struct SchedState {
+    /// One deque per entry of `kinds`; contention is negligible at
+    /// front-door rates and a single lock keeps pop-fairness trivial.
+    queues: Vec<VecDeque<Queued>>,
+    /// Runnable continuations (woken or freshly admitted).
+    ready: VecDeque<InFlight>,
+    /// Suspended continuations keyed by `RequestId.0`, waiting on wakers.
+    parked: HashMap<u64, InFlight>,
+    /// Wakeups that arrived while their request was being polled (it was
+    /// neither parked nor ready); consumed when the poll finishes.
+    woken: HashSet<u64>,
+    /// Parked continuations with nothing to subscribe to (a
+    /// shouldn't-happen): the next sweep re-polls them — a bounded 0..5ms
+    /// backoff instead of a hot requeue loop.
+    nudge: Vec<u64>,
+    /// Every started-but-unfinished request id (ready + parked + polling).
+    live: HashSet<u64>,
+    /// Started-but-unfinished count per workflow (the `in_flight` gauge).
+    in_flight: Vec<usize>,
+    /// Next deadline sweep over parked + queued work.
+    next_sweep: Instant,
+}
+
+impl SchedState {
+    fn total_in_flight(&self) -> usize {
+        self.live.len()
+    }
+}
+
+/// What one scheduler iteration decided to do.
+enum Task {
+    /// Re-poll a woken continuation.
+    Poll(InFlight),
+    /// Start a freshly admitted request (build its driver, first poll).
+    Admit(usize, Queued),
+}
+
+/// Sizing for the event-driven scheduler.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerOpts {
+    /// OS threads multiplexing the in-flight table.
+    pub workers: usize,
+    /// Concurrent started requests (the backpressure bound: admission
+    /// queues only drain while in-flight is below this).
+    pub max_in_flight: usize,
+}
+
 /// Telemetry publish throttle — same cadence as the component
 /// controllers' `maybe_push_telemetry`, so the hot path pays at most one
 /// store write per queue per period instead of one per event.
 const PUBLISH_PERIOD: Duration = Duration::from_millis(20);
 
+/// Deadline-sweep cadence: bounds how stale an expired parked/queued
+/// request can get before it is failed fast. Also the idle wait, so a
+/// missed notify never stalls the pool longer than this.
+const SWEEP_PERIOD: Duration = Duration::from_millis(5);
+
 struct IngressInner {
     d: Deployment,
     kinds: Vec<WorkflowKind>,
-    /// One deque per entry of `kinds`, all under one lock (signalled by
-    /// `cv`); contention is negligible at front-door rates and a single
-    /// lock keeps pop-fairness across workflows trivial.
-    queues: Mutex<Vec<VecDeque<Queued>>>,
+    sched: Mutex<SchedState>,
     cv: Condvar,
     admission: Vec<AdmissionController>,
     completed: Vec<AtomicU64>,
     failed: Vec<AtomicU64>,
+    /// Deadline expiries that never started a driver (satellite metric:
+    /// distinguishable from execution failures in the sweep schema).
+    expired_in_queue: Vec<AtomicU64>,
+    workers: usize,
+    max_in_flight: usize,
     last_publish: Vec<Mutex<Instant>>,
     stop: AtomicBool,
 }
@@ -152,15 +246,22 @@ impl IngressInner {
     /// the node-store publish path — one construction site).
     fn snapshot(&self, idx: usize) -> IngressMetrics {
         let adm = &self.admission[idx];
+        let (depth, in_flight) = {
+            let s = self.sched.lock().unwrap();
+            (s.queues[idx].len(), s.in_flight[idx])
+        };
         IngressMetrics {
             workflow: self.kinds[idx].name().to_string(),
-            depth: self.queues.lock().unwrap()[idx].len(),
+            depth,
+            in_flight,
+            workers: self.workers,
             cap: adm.policy().cap(),
             policy: adm.policy().name().to_string(),
             accepted: adm.accepted.load(Ordering::Relaxed),
             shed: adm.shed.load(Ordering::Relaxed),
             completed: self.completed[idx].load(Ordering::Relaxed),
             failed: self.failed[idx].load(Ordering::Relaxed),
+            expired_in_queue: self.expired_in_queue[idx].load(Ordering::Relaxed),
         }
     }
 
@@ -185,52 +286,249 @@ impl IngressInner {
         self.publish(idx);
     }
 
+    /// Scheduler worker: multiplexes the in-flight table. Priority order
+    /// per iteration: overdue deadline sweep, then woken continuations,
+    /// then admission (bounded by `max_in_flight`), else park on the
+    /// condvar until an event or the next sweep is due.
     fn worker_loop(self: Arc<Self>, worker: usize) {
         let nkinds = self.kinds.len();
-        let mut rot = worker; // stagger the scan start per worker
+        let mut rot = worker; // stagger the admission scan start per worker
         loop {
-            if self.stop.load(Ordering::Relaxed) {
-                return;
-            }
-            let popped = {
-                let mut q = self.queues.lock().unwrap();
-                let mut found = None;
-                for i in 0..nkinds {
-                    let idx = (rot + i) % nkinds;
-                    if let Some(job) = q[idx].pop_front() {
-                        found = Some((idx, job));
-                        break;
+            let mut lapsed = Vec::new();
+            let task = {
+                let mut s = self.sched.lock().unwrap();
+                if self.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                let now = Instant::now();
+                if now >= s.next_sweep {
+                    s.next_sweep = now + SWEEP_PERIOD;
+                    Self::collect_lapsed(&mut s, now, &mut lapsed);
+                    // re-poll continuations that had nothing to subscribe
+                    // to (bounded backoff; see `SchedState::nudge`)
+                    let nudge: Vec<u64> = s.nudge.drain(..).collect();
+                    for rid in nudge {
+                        if let Some(f) = s.parked.remove(&rid) {
+                            s.ready.push_back(f);
+                        }
                     }
                 }
-                if found.is_none() {
-                    // idle: block briefly so stop/submit wake us
-                    let _ = self.cv.wait_timeout(q, Duration::from_millis(2)).unwrap();
+                if let Some(f) = s.ready.pop_front() {
+                    Some(Task::Poll(f))
+                } else {
+                    let mut admitted = None;
+                    if s.total_in_flight() < self.max_in_flight {
+                        for i in 0..nkinds {
+                            let idx = (rot + i) % nkinds;
+                            if let Some(job) = s.queues[idx].pop_front() {
+                                admitted = Some((idx, job));
+                                break;
+                            }
+                        }
+                    }
+                    match admitted {
+                        Some((idx, job)) => {
+                            rot = rot.wrapping_add(1);
+                            s.live.insert(job.request.0);
+                            s.in_flight[idx] += 1;
+                            Some(Task::Admit(idx, job))
+                        }
+                        None => {
+                            // idle, or at the in-flight cap: park until a
+                            // submit/waker/capacity event or the next sweep
+                            // — unless this iteration collected lapsed
+                            // work, which must be failed fast first
+                            if lapsed.is_empty() {
+                                let _ = self.cv.wait_timeout(s, SWEEP_PERIOD).unwrap();
+                            }
+                            None
+                        }
+                    }
                 }
-                found
             };
-            let Some((idx, job)) = popped else { continue };
-            rot = rot.wrapping_add(1);
-            let now = Instant::now();
-            let result = if now >= job.deadline {
-                // expired while queued: fail fast, never start the driver
-                Err(Error::Deadline(job.timeout))
-            } else {
-                run_request_as(
-                    &self.d,
-                    self.kinds[idx],
-                    job.session,
-                    job.request,
-                    &job.input,
-                    job.deadline - now,
-                )
-            };
-            match &result {
-                Ok(_) => self.completed[idx].fetch_add(1, Ordering::Relaxed),
-                Err(_) => self.failed[idx].fetch_add(1, Ordering::Relaxed),
-            };
-            job.cell.fulfil(result, job.submitted.elapsed());
-            self.maybe_publish(idx);
+            self.fail_lapsed(lapsed);
+            match task {
+                Some(Task::Poll(f)) => Self::run_poll(&self, f),
+                Some(Task::Admit(idx, job)) => Self::admit(&self, idx, job),
+                None => {}
+            }
         }
+    }
+
+    /// Collect every queued/parked request whose deadline has passed
+    /// (fulfilment happens outside the lock, in [`Self::fail_lapsed`]).
+    fn collect_lapsed(s: &mut SchedState, now: Instant, out: &mut Vec<Lapsed>) {
+        for (idx, q) in s.queues.iter_mut().enumerate() {
+            if q.iter().all(|j| j.deadline > now) {
+                continue;
+            }
+            let mut kept = VecDeque::with_capacity(q.len());
+            for job in q.drain(..) {
+                if job.deadline <= now {
+                    out.push(Lapsed {
+                        idx,
+                        submitted: job.submitted,
+                        timeout: job.timeout,
+                        cell: job.cell,
+                        in_queue: true,
+                    });
+                } else {
+                    kept.push_back(job);
+                }
+            }
+            *q = kept;
+        }
+        let overdue: Vec<u64> =
+            s.parked.iter().filter(|(_, f)| f.deadline <= now).map(|(k, _)| *k).collect();
+        for rid in overdue {
+            let f = s.parked.remove(&rid).expect("collected above");
+            s.live.remove(&rid);
+            s.woken.remove(&rid);
+            s.in_flight[f.idx] -= 1;
+            out.push(Lapsed {
+                idx: f.idx,
+                submitted: f.submitted,
+                timeout: f.timeout,
+                cell: f.cell,
+                in_queue: false,
+            });
+        }
+    }
+
+    /// Fail expired work fast: queued expiries count as `expired_in_queue`
+    /// (the driver never ran), parked expiries as execution failures.
+    fn fail_lapsed(&self, lapsed: Vec<Lapsed>) {
+        for l in lapsed {
+            if l.in_queue {
+                self.expired_in_queue[l.idx].fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.failed[l.idx].fetch_add(1, Ordering::Relaxed);
+            }
+            l.cell.fulfil(Err(Error::Deadline(l.timeout)), l.submitted.elapsed());
+            self.maybe_publish(l.idx);
+        }
+    }
+
+    /// Start one admitted request: build its resumable driver and poll it.
+    /// (`this` instead of a receiver: wakers need the `Arc` to clone.)
+    fn admit(this: &Arc<Self>, idx: usize, job: Queued) {
+        if Instant::now() >= job.deadline {
+            // expired while queued: fail fast, never build the driver
+            this.expired_in_queue[idx].fetch_add(1, Ordering::Relaxed);
+            {
+                let mut s = this.sched.lock().unwrap();
+                s.live.remove(&job.request.0);
+                s.in_flight[idx] -= 1;
+            }
+            job.cell.fulfil(Err(Error::Deadline(job.timeout)), job.submitted.elapsed());
+            this.maybe_publish(idx);
+            this.cv.notify_one(); // in-flight capacity freed
+            return;
+        }
+        let env = Env::with_request(&this.d, job.session, job.request);
+        let driver = driver_for(this.kinds[idx], &job.input);
+        Self::run_poll(
+            this,
+            InFlight {
+                idx,
+                request: job.request,
+                driver,
+                env,
+                submitted: job.submitted,
+                deadline: job.deadline,
+                timeout: job.timeout,
+                cell: job.cell,
+                subscribed: HashSet::new(),
+            },
+        );
+    }
+
+    /// Poll one continuation: advance it as far as readiness allows, then
+    /// either finish it or park it under waker subscriptions.
+    fn run_poll(this: &Arc<Self>, mut f: InFlight) {
+        if Instant::now() >= f.deadline {
+            let timeout = f.timeout;
+            this.finish(f, Err(Error::Deadline(timeout)));
+            return;
+        }
+        match f.driver.poll(&f.env) {
+            Step::Done(result) => this.finish(f, result),
+            Step::Pending { waiting_on } => {
+                let rid = f.request.0;
+                // Resolve the not-yet-subscribed cells *before* parking:
+                // once parked, another worker may take the continuation at
+                // any moment. Already-subscribed futures keep their
+                // original waker (one per future per request).
+                let mut cells: Vec<Arc<FutureCell>> = Vec::new();
+                let mut can_wake = false;
+                for id in &waiting_on {
+                    if f.subscribed.contains(&id.0) {
+                        can_wake = true;
+                        continue;
+                    }
+                    if let Some(cell) = this.d.table().get(*id) {
+                        f.subscribed.insert(id.0);
+                        cells.push(cell);
+                        can_wake = true;
+                    }
+                }
+                {
+                    let mut s = this.sched.lock().unwrap();
+                    if s.woken.remove(&rid) {
+                        // a waker fired mid-poll: run again rather than
+                        // risk a lost wakeup
+                        s.ready.push_back(f);
+                    } else {
+                        s.parked.insert(rid, f);
+                        if !can_wake {
+                            // nothing is subscribable (a shouldn't-happen:
+                            // stubs register every future) — let the next
+                            // sweep re-poll it instead of hot-spinning
+                            s.nudge.push(rid);
+                        }
+                    }
+                }
+                // Subscribe after parking: a future that resolved in the
+                // gap fires the waker inline, which finds the parked entry
+                // and moves it to ready — no wakeup is lost.
+                for cell in cells {
+                    let inner = this.clone();
+                    cell.subscribe(Box::new(move || inner.wake(rid)));
+                }
+            }
+        }
+    }
+
+    /// Waker target: move a parked continuation to the ready queue. Fired
+    /// by future resolution from component-controller threads.
+    fn wake(&self, rid: u64) {
+        let mut s = self.sched.lock().unwrap();
+        if let Some(f) = s.parked.remove(&rid) {
+            s.ready.push_back(f);
+            drop(s);
+            self.cv.notify_one();
+        } else if s.live.contains(&rid) {
+            // being polled right now: record the wakeup for the poller
+            s.woken.insert(rid);
+        }
+        // else: the request already finished — stale waker, nothing to do
+    }
+
+    /// Account and fulfil one finished request.
+    fn finish(&self, f: InFlight, result: Result<Value>) {
+        match &result {
+            Ok(_) => self.completed[f.idx].fetch_add(1, Ordering::Relaxed),
+            Err(_) => self.failed[f.idx].fetch_add(1, Ordering::Relaxed),
+        };
+        {
+            let mut s = self.sched.lock().unwrap();
+            s.live.remove(&f.request.0);
+            s.woken.remove(&f.request.0);
+            s.in_flight[f.idx] -= 1;
+        }
+        f.cell.fulfil(result, f.submitted.elapsed());
+        self.maybe_publish(f.idx);
+        self.cv.notify_one(); // in-flight capacity freed: admit more
     }
 }
 
@@ -248,26 +546,51 @@ impl Ingress {
         Self::start_with(d, kinds, AdmissionPolicy::from_settings(s), s.workers)
     }
 
-    /// Start with an explicit admission policy and driver-pool size.
+    /// Start with an explicit admission policy and scheduler thread count
+    /// (`max_in_flight` comes from the deployment config).
     pub fn start_with(
         d: &Deployment,
         kinds: &[WorkflowKind],
         policy: AdmissionPolicy,
         workers: usize,
     ) -> Ingress {
+        let max_in_flight = d.cfg().ingress.max_in_flight;
+        Self::start_with_opts(d, kinds, policy, SchedulerOpts { workers, max_in_flight })
+    }
+
+    /// Start with explicit scheduler sizing.
+    pub fn start_with_opts(
+        d: &Deployment,
+        kinds: &[WorkflowKind],
+        policy: AdmissionPolicy,
+        opts: SchedulerOpts,
+    ) -> Ingress {
         assert!(!kinds.is_empty(), "ingress needs at least one workflow");
+        let workers = opts.workers.max(1);
         let inner = Arc::new(IngressInner {
             d: d.clone(),
             kinds: kinds.to_vec(),
-            queues: Mutex::new(kinds.iter().map(|_| VecDeque::new()).collect()),
+            sched: Mutex::new(SchedState {
+                queues: kinds.iter().map(|_| VecDeque::new()).collect(),
+                ready: VecDeque::new(),
+                parked: HashMap::new(),
+                woken: HashSet::new(),
+                nudge: Vec::new(),
+                live: HashSet::new(),
+                in_flight: vec![0; kinds.len()],
+                next_sweep: Instant::now() + SWEEP_PERIOD,
+            }),
             cv: Condvar::new(),
             admission: kinds.iter().map(|_| AdmissionController::new(policy.clone())).collect(),
             completed: kinds.iter().map(|_| AtomicU64::new(0)).collect(),
             failed: kinds.iter().map(|_| AtomicU64::new(0)).collect(),
+            expired_in_queue: kinds.iter().map(|_| AtomicU64::new(0)).collect(),
+            workers,
+            max_in_flight: opts.max_in_flight.max(1),
             last_publish: kinds.iter().map(|_| Mutex::new(Instant::now())).collect(),
             stop: AtomicBool::new(false),
         });
-        let joins = (0..workers.max(1))
+        let joins = (0..workers)
             .map(|w| {
                 let inner = inner.clone();
                 std::thread::Builder::new()
@@ -299,21 +622,21 @@ impl Ingress {
             .kind_index(kind)
             .ok_or_else(|| Error::Config(format!("ingress does not serve `{}`", kind.name())))?;
         let verdict = {
-            let mut q = inner.queues.lock().unwrap();
-            // Checked under the queue lock: `stop` drains the queues under
-            // this same lock after setting the flag, so a submit either
-            // lands before the drain (and is failed by it) or observes the
-            // flag here — no ticket is ever left unfulfilled.
+            let mut s = inner.sched.lock().unwrap();
+            // Checked under the scheduler lock: `stop` drains the queues
+            // under this same lock after setting the flag, so a submit
+            // either lands before the drain (and is failed by it) or
+            // observes the flag here — no ticket is ever left unfulfilled.
             if inner.stop.load(Ordering::Relaxed) {
                 return Err(Error::Shed(kind.name().into(), "ingress stopped".into()));
             }
-            match inner.admission[idx].admit(q[idx].len()) {
+            match inner.admission[idx].admit(s.queues[idx].len()) {
                 Ok(()) => {
                     let session = session.unwrap_or_else(|| inner.d.new_session());
                     let request = inner.d.new_request_id();
                     let cell = TicketCell::new();
                     let now = Instant::now();
-                    q[idx].push_back(Queued {
+                    s.queues[idx].push_back(Queued {
                         session,
                         request,
                         input,
@@ -334,10 +657,21 @@ impl Ingress {
         verdict
     }
 
-    /// Current depth of a workflow's queue.
+    /// Current depth of a workflow's admission queue (requests not yet
+    /// started; started work is [`Self::in_flight`]).
     pub fn depth(&self, kind: WorkflowKind) -> usize {
         match self.inner.kind_index(kind) {
-            Some(idx) => self.inner.queues.lock().unwrap()[idx].len(),
+            Some(idx) => self.inner.sched.lock().unwrap().queues[idx].len(),
+            None => 0,
+        }
+    }
+
+    /// Started-but-unfinished requests for a workflow (the multiplexing
+    /// gauge: in-flight ÷ workers is how many requests each thread is
+    /// carrying).
+    pub fn in_flight(&self, kind: WorkflowKind) -> usize {
+        match self.inner.kind_index(kind) {
+            Some(idx) => self.inner.sched.lock().unwrap().in_flight[idx],
             None => 0,
         }
     }
@@ -348,26 +682,48 @@ impl Ingress {
         Some(self.inner.snapshot(self.inner.kind_index(kind)?))
     }
 
-    /// Stop the pool: workers finish their in-flight request, everything
-    /// still queued fails fast (reported, not masked — §5). Idempotent;
-    /// also runs on drop.
+    /// Stop the scheduler: workers finish the poll they are executing;
+    /// everything queued or parked fails fast (reported, not masked — §5).
+    /// Idempotent; also runs on drop.
     pub fn stop(&self) {
         self.inner.stop.store(true, Ordering::Relaxed);
         self.inner.cv.notify_all();
         for j in self.joins.lock().unwrap().drain(..) {
             let _ = j.join();
         }
-        let drained: Vec<(usize, Vec<Queued>)> = {
-            let mut q = self.inner.queues.lock().unwrap();
-            q.iter_mut().enumerate().map(|(i, dq)| (i, dq.drain(..).collect())).collect()
-        };
-        for (idx, jobs) in drained {
-            for job in jobs {
-                self.inner.failed[idx].fetch_add(1, Ordering::Relaxed);
-                let kind = self.inner.kinds[idx].name().to_string();
-                let waited = job.submitted.elapsed();
-                job.cell.fulfil(Err(Error::Shed(kind, "ingress stopped".into())), waited);
+        // Drain under the scheduler lock (pairs with the stop check in
+        // `submit`), fulfil outside it.
+        let (queued, inflight): (Vec<(usize, Queued)>, Vec<InFlight>) = {
+            let mut s = self.inner.sched.lock().unwrap();
+            let mut queued = Vec::new();
+            for (i, dq) in s.queues.iter_mut().enumerate() {
+                for j in dq.drain(..) {
+                    queued.push((i, j));
+                }
             }
+            let mut inflight: Vec<InFlight> = s.ready.drain(..).collect();
+            inflight.extend(s.parked.drain().map(|(_, f)| f));
+            for f in &inflight {
+                s.live.remove(&f.request.0);
+                s.in_flight[f.idx] -= 1;
+            }
+            s.woken.clear();
+            s.nudge.clear();
+            (queued, inflight)
+        };
+        for (idx, job) in queued {
+            self.inner.failed[idx].fetch_add(1, Ordering::Relaxed);
+            let kind = self.inner.kinds[idx].name().to_string();
+            let waited = job.submitted.elapsed();
+            job.cell.fulfil(Err(Error::Shed(kind, "ingress stopped".into())), waited);
+        }
+        for f in inflight {
+            self.inner.failed[f.idx].fetch_add(1, Ordering::Relaxed);
+            let kind = self.inner.kinds[f.idx].name().to_string();
+            let waited = f.submitted.elapsed();
+            f.cell.fulfil(Err(Error::Shed(kind, "ingress stopped".into())), waited);
+        }
+        for idx in 0..self.inner.kinds.len() {
             self.inner.publish(idx);
         }
     }
@@ -396,7 +752,7 @@ mod tests {
     }
 
     #[test]
-    fn submits_complete_through_the_driver_pool() {
+    fn submits_complete_through_the_scheduler() {
         let d = fast_router();
         let ing = Ingress::start_with(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, 4);
         let timeout = Duration::from_secs(20);
@@ -412,6 +768,8 @@ mod tests {
         assert_eq!(m.accepted, 8);
         assert_eq!(m.completed, 8);
         assert_eq!(m.shed, 0);
+        assert_eq!(m.in_flight, 0, "everything drained");
+        assert_eq!(m.workers, 4);
         // distinct request ids were stamped at admission
         let mut ids: Vec<u64> = tickets.iter().map(|t| t.request.0).collect();
         ids.sort_unstable();
@@ -424,11 +782,16 @@ mod tests {
     #[test]
     fn bounded_queue_sheds_fast_and_never_exceeds_cap() {
         let mut cfg = WorkflowKind::Router.config();
-        cfg.time_scale = 0.002; // slow enough that 1 worker falls behind
+        cfg.time_scale = 0.002; // slow enough that a tiny scheduler falls behind
         let d = Deployment::launch(cfg).unwrap();
         let cap = 4;
-        let ing =
-            Ingress::start_with(&d, &[WorkflowKind::Router], AdmissionPolicy::Bounded { cap }, 1);
+        // One thread, two in-flight slots: the queue must back up and shed.
+        let ing = Ingress::start_with_opts(
+            &d,
+            &[WorkflowKind::Router],
+            AdmissionPolicy::Bounded { cap },
+            SchedulerOpts { workers: 1, max_in_flight: 2 },
+        );
         let timeout = Duration::from_secs(30);
         let mut tickets = Vec::new();
         let mut sheds = 0;
@@ -444,7 +807,7 @@ mod tests {
             }
             assert!(ing.depth(WorkflowKind::Router) <= cap, "bounded queue exceeded its cap");
         }
-        assert!(sheds > 0, "a 1-worker pool must fall behind a 40-request burst");
+        assert!(sheds > 0, "a 2-slot scheduler must fall behind a 40-request burst");
         let m = ing.metrics(WorkflowKind::Router).unwrap();
         assert_eq!(m.shed, sheds);
         assert_eq!(m.cap, cap);
@@ -465,6 +828,10 @@ mod tests {
         let err = t.wait(Duration::from_secs(5)).unwrap_err();
         assert!(matches!(err, Error::Deadline(..)), "{err}");
         assert!(err.retryable());
+        // counted as an in-queue expiry, NOT an execution failure
+        let m = ing.metrics(WorkflowKind::Router).unwrap();
+        assert_eq!(m.expired_in_queue, 1);
+        assert_eq!(m.failed, 0);
         ing.stop();
         d.shutdown();
     }
@@ -498,6 +865,8 @@ mod tests {
         assert_eq!(ingress.completed, 4);
         assert_eq!(ingress.policy, "bounded");
         assert_eq!(ingress.cap, 64);
+        assert_eq!(ingress.workers, 2, "thread gauge must reach policies");
+        assert_eq!(ingress.expired_in_queue, 0);
         d.shutdown();
     }
 

@@ -39,8 +39,8 @@
 //! | [`engine`] | impl | continuous-batching LLM engine (vLLM substitute) |
 //! | [`runtime`] | impl | PJRT loader/executor for the AOT artifacts |
 //! | [`vectorstore`] | impl | cosine top-k index (ChromaDB substitute) |
-//! | [`ingress`] | §6 | open-loop front door: queues, admission, driver pool |
-//! | [`workflow`] | §6 | the three evaluation workflows |
+//! | [`ingress`] | §6 | open-loop front door: admission + event-driven scheduler |
+//! | [`workflow`] | §6 | the three evaluation workflows as resumable drivers |
 //! | [`workload`] | §6 | arrival processes + synthetic corpora |
 //! | [`baselines`] | §6 | Ayo/CrewAI/AutoGen-like serving modes |
 

@@ -11,8 +11,11 @@
 //!               # hold a deployment open behind the ingress front door
 //! nalar loadgen --workload router|financial|swe [--rps 20,40,80 | 20:160:20]
 //!               [--systems nalar,ayo,crew,autogen] [--secs N] [--quick]
-//!               [--out DIR] [--config path.json] [--check-only]
-//!               # open-loop saturation sweep -> BENCH_rps_sweep.json
+//!               [--hc-smoke] [--workers N] [--out DIR] [--config path.json]
+//!               [--check-only]
+//!               # open-loop saturation sweep -> BENCH_rps_sweep.json;
+//!               # --hc-smoke gates on every admitted request completing
+//!               # with a 4-thread scheduler (in-flight >> threads)
 //! ```
 
 use std::path::PathBuf;
@@ -68,7 +71,8 @@ fn main() -> nalar::Result<()> {
                  | bench [--quick] [--only fig9,fig10,table4,sec62] [--out DIR] [--check-only] \
                  | serve [--workflow ...] [--secs N] [--rps N] \
                  | loadgen [--workload router|financial|swe] [--rps LIST|START:END:STEP] \
-                 [--systems csv] [--secs N] [--quick] [--out DIR] [--check-only]"
+                 [--systems csv] [--secs N] [--quick] [--hc-smoke] [--workers N] [--out DIR] \
+                 [--check-only]"
             );
             Ok(())
         }
@@ -208,8 +212,16 @@ fn cmd_serve(args: &Args) -> nalar::Result<()> {
             std::thread::sleep(Duration::from_secs(1));
             if let Some(m) = ingress.metrics(wf) {
                 println!(
-                    "[serve] depth {} accepted {} shed {} completed {} failed {}",
-                    m.depth, m.accepted, m.shed, m.completed, m.failed
+                    "[serve] depth {} in-flight {}/{}t accepted {} shed {} completed {} \
+                     failed {} expired {}",
+                    m.depth,
+                    m.in_flight,
+                    m.workers,
+                    m.accepted,
+                    m.shed,
+                    m.completed,
+                    m.failed,
+                    m.expired_in_queue
                 );
             }
         }
@@ -230,8 +242,19 @@ fn cmd_loadgen(args: &Args) -> nalar::Result<()> {
     }
     let wf = parse_workflow(&args.str_or("workload", "router"))?;
     let quick = args.flag("quick") || std::env::var("NALAR_LOADGEN_QUICK").is_ok();
-    let mut opts = if quick { LoadgenOpts::quick(wf) } else { LoadgenOpts::full(wf) };
+    let mut opts = if args.flag("hc-smoke") {
+        LoadgenOpts::hc_smoke(wf)
+    } else if quick {
+        LoadgenOpts::quick(wf)
+    } else {
+        LoadgenOpts::full(wf)
+    };
     opts.out_dir = out_dir;
+    if let Some(w) = args.get("workers") {
+        let workers: usize =
+            w.parse().map_err(|_| nalar::Error::Config(format!("bad --workers `{w}`")))?;
+        opts.workers = Some(workers);
+    }
     if let Some(spec) = args.get("rps") {
         opts.rates = workload::parse_rps_sweep(spec)
             .ok_or_else(|| nalar::Error::Config(format!("bad --rps spec `{spec}`")))?;

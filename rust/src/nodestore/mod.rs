@@ -74,7 +74,7 @@ impl StoreDirectory {
     /// Sessions have a home node ([`Self::home_of`]), but migrations move
     /// `state/{session}/*` entries between stores (Fig. 8 step 5), so a
     /// request landing on *any* node — in particular one dispatched by the
-    /// ingress driver pool — must look the state up rather than assume the
+    /// ingress scheduler — must look the state up rather than assume the
     /// home store. O(1): one read of the moved-session registry, falling
     /// back to the home store for never-migrated sessions.
     pub fn locate_session(&self, session: SessionId) -> Arc<NodeStore> {

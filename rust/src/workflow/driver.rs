@@ -1,0 +1,176 @@
+//! Resumable workflow drivers: the request lifecycle as a stored
+//! continuation instead of a thread's stack.
+//!
+//! The paper's scale claims (130K live futures, 80 RPS where baselines
+//! fail) rest on drivers that *suspend* on futures rather than parking OS
+//! threads. [`Driver::poll`] is that suspension point: a driver advances
+//! as far as the resolved futures allow and then returns
+//! [`Step::Pending`] naming exactly the futures it is stuck on, so a
+//! scheduler can shelve the continuation and re-run it when a
+//! [`crate::futures::FutureCell`] waker fires — no thread is occupied
+//! while the request waits on agent work.
+//!
+//! Two executors drive the same state machines:
+//!
+//! * the event-driven ingress scheduler ([`crate::ingress`]) multiplexes
+//!   thousands of in-flight drivers over a small fixed thread pool;
+//! * [`drive_blocking`] is the compat shim — poll in a loop, park the
+//!   calling thread on a [`WakeSignal`] between polls — that keeps the
+//!   blocking API (`workflow::run_request`, the closed-loop harness, the
+//!   examples) byte-compatible.
+
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::futures::{Value, WakeSignal};
+use crate::ids::FutureId;
+use crate::workflow::{financial, router, swe, Env, WorkflowKind};
+
+/// What one `poll` produced.
+pub enum Step {
+    /// The driver cannot advance until at least one of these futures
+    /// reaches a terminal state. The caller must subscribe for readiness
+    /// (or re-poll) — the driver itself holds no thread while pending.
+    Pending { waiting_on: Vec<FutureId> },
+    /// The request finished (the driver must not be polled again).
+    Done(Result<Value>),
+}
+
+/// A resumable workflow driver. `poll` must never block: it consumes
+/// whatever futures are ready (`try_value`), issues any newly unblocked
+/// agent calls, and reports `Pending`/`Done`. All request state lives in
+/// the implementor — dropping it abandons the request.
+pub trait Driver: Send {
+    fn poll(&mut self, env: &Env) -> Step;
+}
+
+/// Instantiate the resumable driver for one admitted request.
+pub fn driver_for(kind: WorkflowKind, input: &Value) -> Box<dyn Driver> {
+    match kind {
+        WorkflowKind::Financial => Box::new(financial::FinancialDriver::new(input)),
+        WorkflowKind::Router => Box::new(router::RouterDriver::new(input)),
+        WorkflowKind::Swe => Box::new(swe::SweDriver::new(input)),
+    }
+}
+
+/// Compat shim: run a resumable driver to completion on the calling
+/// thread. Between polls the thread parks on a [`WakeSignal`] subscribed
+/// to every future the driver reported waiting on — push-based readiness,
+/// not a poll interval — and the request's end-to-end `timeout` is
+/// enforced here (the paper's "driver decides" retry semantics sit above
+/// this, in the caller).
+pub fn drive_blocking(driver: &mut dyn Driver, env: &Env, timeout: Duration) -> Result<Value> {
+    let deadline = Instant::now() + timeout;
+    let signal = WakeSignal::new();
+    // Each future is subscribed at most once per request: a join pending
+    // through many wake cycles must not pile duplicate wakers (and their
+    // spurious wakeups) onto its slowest futures.
+    let mut subscribed: std::collections::HashSet<FutureId> = std::collections::HashSet::new();
+    loop {
+        match driver.poll(env) {
+            Step::Done(result) => return result,
+            Step::Pending { waiting_on } => {
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(Error::Deadline(timeout));
+                }
+                let mut can_wake = false;
+                for id in &waiting_on {
+                    if subscribed.contains(id) {
+                        can_wake = true;
+                        continue;
+                    }
+                    if let Some(cell) = env.ctx.table.get(*id) {
+                        subscribed.insert(*id);
+                        let s = signal.clone();
+                        cell.subscribe(Box::new(move || s.wake()));
+                        can_wake = true;
+                    }
+                }
+                // Subscribing to a future that resolved mid-poll fires the
+                // waker inline, and a wake that raced ahead stays latched
+                // in the signal until consumed — no lost wakeups. A future
+                // missing from the table cannot push readiness (stubs
+                // register every future, so this is a shouldn't-happen);
+                // fall back to a short re-poll interval rather than
+                // hanging until the deadline.
+                let cap = if can_wake {
+                    deadline - now
+                } else {
+                    Duration::from_millis(2).min(deadline - now)
+                };
+                signal.wait(cap);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+    use crate::server::Deployment;
+
+    /// A driver that issues one real agent call and suspends on it — the
+    /// minimal poll/waker round trip through a live deployment.
+    struct OneCall {
+        call: Option<crate::futures::FutureHandle>,
+        polls_while_pending: u32,
+    }
+
+    impl Driver for OneCall {
+        fn poll(&mut self, env: &Env) -> Step {
+            let call = self.call.get_or_insert_with(|| {
+                env.ctx
+                    .agent("router")
+                    .call("classify", json!({"prompt": "hi", "max_new_tokens": 4}))
+            });
+            match call.try_value() {
+                None => {
+                    self.polls_while_pending += 1;
+                    Step::Pending { waiting_on: vec![call.id()] }
+                }
+                Some(Ok(v)) => Step::Done(Ok(json!({
+                    "tokens": v.get("generated_tokens").as_i64().unwrap_or(0)
+                }))),
+                Some(Err(e)) => Step::Done(Err(e)),
+            }
+        }
+    }
+
+    #[test]
+    fn drive_blocking_completes_a_suspending_driver() {
+        let mut cfg = WorkflowKind::Router.config();
+        cfg.time_scale = 0.0005;
+        let d = Deployment::launch(cfg).unwrap();
+        let env = Env::new(&d, d.new_session());
+        let mut drv = OneCall { call: None, polls_while_pending: 0 };
+        let out = drive_blocking(&mut drv, &env, Duration::from_secs(20)).unwrap();
+        assert!(out.get("tokens").as_i64().is_some());
+        assert!(drv.polls_while_pending >= 1, "the driver must actually have suspended");
+        d.shutdown();
+    }
+
+    /// A driver that never finishes: the shim must enforce the deadline.
+    struct NeverDone;
+
+    impl Driver for NeverDone {
+        fn poll(&mut self, _env: &Env) -> Step {
+            Step::Pending { waiting_on: vec![FutureId(u64::MAX)] }
+        }
+    }
+
+    #[test]
+    fn drive_blocking_enforces_the_deadline() {
+        let mut cfg = WorkflowKind::Router.config();
+        cfg.time_scale = 0.0005;
+        let d = Deployment::launch(cfg).unwrap();
+        let env = Env::new(&d, d.new_session());
+        let t0 = Instant::now();
+        let err = drive_blocking(&mut NeverDone, &env, Duration::from_millis(40)).unwrap_err();
+        assert!(matches!(err, Error::Deadline(..)), "{err}");
+        assert!(t0.elapsed() >= Duration::from_millis(35));
+        assert!(t0.elapsed() < Duration::from_secs(5), "must not hang");
+        d.shutdown();
+    }
+}

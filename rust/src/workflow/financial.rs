@@ -5,79 +5,168 @@
 //! — the user issues follow-ups after long delays, and the summary history
 //! lives in a `managedList` so NALAR (not the developer) owns its
 //! placement; the analyst's KV cache makes session placement matter.
+//!
+//! Written as a resumable [`Driver`]: the fan-out join is a single
+//! `Pending` naming every unresolved specialist, so a scheduler wakes the
+//! request once per readiness push instead of a thread sleeping through
+//! the join.
 
 use std::time::Duration;
 
-use crate::error::Result;
-use crate::futures::Value;
+use crate::error::{Error, Result};
+use crate::futures::{FutureHandle, Value};
+use crate::ids::FutureId;
 use crate::json;
+use crate::workflow::driver::{drive_blocking, Driver, Step};
 use crate::workflow::Env;
 
 const ANALYSTS: [&str; 3] = ["stock_analysis", "bond_market", "market_research"];
 
 /// One user request (initial question or follow-up) through the workflow.
+/// Blocking compat shim over [`FinancialDriver`].
 pub fn run(env: &Env, input: &Value, timeout: Duration) -> Result<Value> {
-    let question = input.get("question").as_str().unwrap_or("market update");
-    // Generation budget: small in PJRT quickstarts (so multi-turn sessions
-    // fit the model context and KV reuse shows), full-size in sim runs.
-    let max_new = input.get("max_new").as_usize().unwrap_or(128);
+    drive_blocking(&mut FinancialDriver::new(input), env, timeout)
+}
 
-    // Fan out to the specialist agents + web search — all futures, all
-    // non-blocking (Op 1); the driver blocks only when joining.
-    let specialists: Vec<_> = ANALYSTS
-        .iter()
-        .map(|a| {
-            env.ctx.agent(a).call(
-                "analyze",
-                json!({"prompt": question, "max_new_tokens": max_new.min(96)}),
-            )
-        })
-        .collect();
-    let web = env
-        .ctx
-        .agent("web_search")
-        .call("search", json!({"query": question}));
+enum State {
+    Start,
+    /// Fan-out in flight; the join suspends on every unresolved future.
+    Join { specialists: Vec<FutureHandle>, web: FutureHandle },
+    /// Summary call in flight.
+    Summarize { summary: FutureHandle },
+    Finished,
+}
 
-    // Join. Specialist failures are fatal (retryable by the caller); a web
-    // failure degrades gracefully — exactly the "driver decides" model.
-    let mut parts: Vec<String> = Vec::new();
-    for f in &specialists {
-        let v = f.value(timeout)?;
-        parts.push(v.get("text").as_str().unwrap_or_default().to_string());
+/// See [`run`]; resumable form.
+pub struct FinancialDriver {
+    question: String,
+    /// Generation budget: small in PJRT quickstarts (so multi-turn
+    /// sessions fit the model context and KV reuse shows), full-size in
+    /// sim runs.
+    max_new: usize,
+    state: State,
+}
+
+impl FinancialDriver {
+    pub fn new(input: &Value) -> FinancialDriver {
+        FinancialDriver {
+            question: input.get("question").as_str().unwrap_or("market update").to_string(),
+            max_new: input.get("max_new").as_usize().unwrap_or(128),
+            state: State::Start,
+        }
     }
-    let web_part = web
-        .value(timeout)
-        .map(|v| v.to_string())
-        .unwrap_or_else(|_| "[web search unavailable]".into());
+}
 
-    // Session history: managed state, not driver-managed placement (§3.3).
-    let history = env.state_list("history");
-    let history_tokens = 48 * history.len(); // prior summaries in the KV context
+impl Driver for FinancialDriver {
+    fn poll(&mut self, env: &Env) -> Step {
+        loop {
+            match std::mem::replace(&mut self.state, State::Finished) {
+                State::Start => {
+                    // Fan out to the specialist agents + web search — all
+                    // futures, all non-blocking (Op 1); the driver suspends
+                    // only at the join.
+                    let specialists: Vec<_> = ANALYSTS
+                        .iter()
+                        .map(|a| {
+                            env.ctx.agent(a).call(
+                                "analyze",
+                                json!({
+                                    "prompt": self.question.as_str(),
+                                    "max_new_tokens": self.max_new.min(96),
+                                }),
+                            )
+                        })
+                        .collect();
+                    let web = env
+                        .ctx
+                        .agent("web_search")
+                        .call("search", json!({"query": self.question.as_str()}));
+                    self.state = State::Join { specialists, web };
+                }
+                State::Join { specialists, web } => {
+                    // Specialist failures are fatal (retryable by the
+                    // caller) and fail the request *fast* — even while
+                    // other branches are still in flight; a web failure
+                    // degrades gracefully — exactly the "driver decides"
+                    // model.
+                    let mut waiting: Vec<FutureId> = Vec::new();
+                    for f in &specialists {
+                        match f.try_value() {
+                            None => waiting.push(f.id()),
+                            Some(Err(e)) => return Step::Done(Err(e)),
+                            Some(Ok(_)) => {}
+                        }
+                    }
+                    if !web.available() {
+                        waiting.push(web.id());
+                    }
+                    if !waiting.is_empty() {
+                        self.state = State::Join { specialists, web };
+                        return Step::Pending { waiting_on: waiting };
+                    }
+                    let mut parts: Vec<String> = Vec::new();
+                    for f in &specialists {
+                        match f.try_value().expect("joined future is terminal") {
+                            Ok(v) => {
+                                parts.push(v.get("text").as_str().unwrap_or_default().to_string())
+                            }
+                            Err(e) => return Step::Done(Err(e)),
+                        }
+                    }
+                    let web_part = match web.try_value().expect("joined future is terminal") {
+                        Ok(v) => v.to_string(),
+                        Err(_) => "[web search unavailable]".to_string(),
+                    };
 
-    let deps: Vec<_> = specialists.iter().map(|f| f.id()).collect();
-    let summary = env.ctx.deeper().agent("analyst").call_with(
-        "summarize",
-        json!({
-            "prompt": format!("{question}\n{}\n{web_part}", parts.join("\n")),
-            "max_new_tokens": max_new,
-            "history_tokens": history_tokens,
-        }),
-        &deps,
-        0,
-    );
-    let out = summary.value(timeout)?;
+                    // Session history: managed state, not driver-managed
+                    // placement (§3.3).
+                    let history = env.state_list("history");
+                    let history_tokens = 48 * history.len(); // prior summaries in the KV context
 
-    history.push(json!({
-        "question": question,
-        "summary": out.get("text").as_str().unwrap_or_default(),
-    }));
-
-    Ok(json!({
-        "summary": out.get("text").as_str().unwrap_or_default(),
-        "kv": out.get("kv").as_str().unwrap_or(""),
-        "turn": history.len(),
-        "specialists": parts.len(),
-    }))
+                    let deps: Vec<_> = specialists.iter().map(|f| f.id()).collect();
+                    let summary = env.ctx.deeper().agent("analyst").call_with(
+                        "summarize",
+                        json!({
+                            "prompt": format!(
+                                "{}\n{}\n{web_part}",
+                                self.question,
+                                parts.join("\n")
+                            ),
+                            "max_new_tokens": self.max_new,
+                            "history_tokens": history_tokens,
+                        }),
+                        &deps,
+                        0,
+                    );
+                    self.state = State::Summarize { summary };
+                }
+                State::Summarize { summary } => match summary.try_value() {
+                    None => {
+                        let id = summary.id();
+                        self.state = State::Summarize { summary };
+                        return Step::Pending { waiting_on: vec![id] };
+                    }
+                    Some(Err(e)) => return Step::Done(Err(e)),
+                    Some(Ok(out)) => {
+                        let history = env.state_list("history");
+                        history.push(json!({
+                            "question": self.question.as_str(),
+                            "summary": out.get("text").as_str().unwrap_or_default(),
+                        }));
+                        return Step::Done(Ok(json!({
+                            "summary": out.get("text").as_str().unwrap_or_default(),
+                            "kv": out.get("kv").as_str().unwrap_or(""),
+                            "turn": history.len(),
+                            "specialists": ANALYSTS.len(),
+                        })));
+                    }
+                },
+                State::Finished => {
+                    return Step::Done(Err(Error::msg("financial driver polled after completion")))
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +208,34 @@ mod tests {
         }
         // managed-state agent => session pinned to one instance
         assert!(d.router().sticky_of(session, "analyst").is_some());
+        d.shutdown();
+    }
+
+    #[test]
+    fn join_reports_every_unresolved_fanout_future() {
+        // Slow specialists (200 paper-s at 0.001 = 200ms) pin the join
+        // open: the first poll must suspend on all four fan-out futures.
+        let cfg = crate::config::DeploymentConfig::from_json(
+            r#"{"time_scale": 0.001, "agents": [
+                {"name": "stock_analysis", "kind": "llm", "instances": 1,
+                 "profile": {"base_s": 200.0}, "methods": ["analyze"]},
+                {"name": "bond_market", "kind": "llm", "instances": 1,
+                 "profile": {"base_s": 200.0}, "methods": ["analyze"]},
+                {"name": "market_research", "kind": "llm", "instances": 1,
+                 "profile": {"base_s": 200.0}, "methods": ["analyze"]},
+                {"name": "web_search", "kind": "web_search", "instances": 1,
+                 "profile": {"base_s": 200.0}, "methods": ["search"]},
+                {"name": "analyst", "kind": "llm", "instances": 1,
+                 "profile": {"base_s": 0.1}, "methods": ["summarize"]}]}"#,
+        )
+        .unwrap();
+        let d = Deployment::launch(cfg).unwrap();
+        let env = Env::new(&d, d.new_session());
+        let mut drv = FinancialDriver::new(&json!({"question": "q"}));
+        let Step::Pending { waiting_on } = drv.poll(&env) else {
+            panic!("fan-out cannot be done on the first poll");
+        };
+        assert_eq!(waiting_on.len(), 4, "3 specialists + web search");
         d.shutdown();
     }
 }

@@ -1,16 +1,23 @@
 //! The three evaluation workflows (paper §6) + the serving harness.
 //!
-//! Workflow drivers are ordinary Rust functions over the stub API — the
-//! analog of the paper's "drivers are ordinary Python" (§3.1): they call
-//! agents through [`CallCtx::agent`], get futures back, branch on values,
-//! and implement their own retry logic (Fig. 4 #3). NALAR never sees a
-//! static graph; structure is extracted from the futures at runtime.
+//! Workflow drivers are ordinary Rust code over the stub API — the analog
+//! of the paper's "drivers are ordinary Python" (§3.1): they call agents
+//! through [`CallCtx::agent`], get futures back, branch on values, and
+//! implement their own retry logic (Fig. 4 #3). NALAR never sees a static
+//! graph; structure is extracted from the futures at runtime.
+//!
+//! Each workflow is written as a resumable state machine ([`Driver`]) so
+//! an in-flight request is a stored continuation rather than a parked OS
+//! thread; the blocking entry points below (`run_request`, each module's
+//! `run`) are thin compat shims over [`drive_blocking`].
 
+pub mod driver;
 pub mod financial;
 pub mod harness;
 pub mod router;
 pub mod swe;
 
+pub use driver::{drive_blocking, driver_for, Driver, Step};
 pub use harness::{run_open_loop, RunConfig, RunStats};
 
 use std::time::Duration;
@@ -131,11 +138,7 @@ pub fn run_request_as(
 }
 
 fn run_env(env: Env, kind: WorkflowKind, input: &Value, timeout: Duration) -> Result<Value> {
-    match kind {
-        WorkflowKind::Financial => financial::run(&env, input, timeout),
-        WorkflowKind::Router => router::run(&env, input, timeout),
-        WorkflowKind::Swe => swe::run(&env, input, timeout),
-    }
+    drive_blocking(driver_for(kind, input).as_mut(), &env, timeout)
 }
 
 /// Built-in deployment configs (also shipped as `configs/*.json`).
@@ -146,7 +149,7 @@ pub mod configs {
   "seed": 11,
   "control": {"global_period_ms": 40, "hol_threshold_ms": 120},
   "engine": {"max_batch": 8, "executor": "sim", "kv_policy": "hint"},
-  "ingress": {"policy": "bounded", "queue_cap": 256, "workers": 64},
+  "ingress": {"policy": "bounded", "queue_cap": 256, "workers": 8, "max_in_flight": 1024},
   "agents": [
     {"name": "stock_analysis", "kind": "llm", "instances": 1,
      "directives": {"batchable": true, "max_instances": 2, "resources": {"GPU": 1}},
@@ -178,7 +181,7 @@ pub mod configs {
   "seed": 22,
   "control": {"global_period_ms": 40, "hol_threshold_ms": 120},
   "engine": {"max_batch": 8, "executor": "sim", "kv_policy": "hint"},
-  "ingress": {"policy": "bounded", "queue_cap": 256, "workers": 64},
+  "ingress": {"policy": "bounded", "queue_cap": 256, "workers": 8, "max_in_flight": 1024},
   "agents": [
     {"name": "router", "kind": "llm", "instances": 1,
      "directives": {"batchable": true, "max_instances": 2, "resources": {"GPU": 0.25}},
@@ -207,7 +210,7 @@ pub mod configs {
   "seed": 33,
   "control": {"global_period_ms": 40, "hol_threshold_ms": 120},
   "engine": {"max_batch": 8, "executor": "sim", "kv_policy": "hint"},
-  "ingress": {"policy": "bounded", "queue_cap": 256, "workers": 64},
+  "ingress": {"policy": "bounded", "queue_cap": 256, "workers": 8, "max_in_flight": 1024},
   "agents": [
     {"name": "planner", "kind": "llm", "instances": 1,
      "directives": {"batchable": true, "max_instances": 2, "resources": {"GPU": 1}},

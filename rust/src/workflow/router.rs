@@ -6,55 +6,147 @@
 //! popularity shifts over the trace (Azure-like, >90% imbalance), which is
 //! what NALAR's resource reallocation exploits and static baselines
 //! cannot (§6.1: AutoGen/Ayo fail at 70-80 RPS).
+//!
+//! Written as a resumable [`Driver`]: each state holds the futures in
+//! flight and `poll` advances one stage per readiness push, so the
+//! request occupies no thread between stages.
 
 use std::time::Duration;
 
-use crate::error::Result;
-use crate::futures::Value;
+use crate::error::{Error, Result};
+use crate::futures::{FutureHandle, Value};
 use crate::json;
+use crate::workflow::driver::{drive_blocking, Driver, Step};
 use crate::workflow::Env;
 
-/// One request: classify, then branch.
+/// One request: classify, then branch. Blocking compat shim over
+/// [`RouterDriver`] (the closed-loop harness and examples call this).
 pub fn run(env: &Env, input: &Value, timeout: Duration) -> Result<Value> {
-    let prompt = input.get("prompt").as_str().unwrap_or("hello");
-    // Ground-truth class rides along from the trace; the router agent's
-    // (tiny) LLM call still happens — it is the classification cost.
-    let class = input.get("class").as_str().unwrap_or("chat");
+    drive_blocking(&mut RouterDriver::new(input), env, timeout)
+}
 
-    let classify = env.ctx.agent("router").call(
-        "classify",
-        json!({"prompt": prompt, "max_new_tokens": 4}),
-    );
-    let _ = classify.value(timeout)?; // classification latency is on the path
+enum State {
+    Start,
+    /// Classification in flight (its latency is on the path).
+    Classify { classify: FutureHandle },
+    /// Chat branch: the reply is in flight.
+    Chat { reply: FutureHandle },
+    /// Coder branch: the implementation is in flight.
+    Implement { code: FutureHandle },
+    /// Coder branch: the test run over the implementation is in flight.
+    Test { test: FutureHandle },
+    Finished,
+}
 
-    let deeper = env.ctx.deeper();
-    if class == "coder" {
-        let code = deeper.agent("coder").call(
-            "implement",
-            json!({"prompt": prompt, "max_new_tokens": 192}),
-        );
-        let code_out = code.value(timeout)?;
-        let test = deeper.agent("test_harness").call_with(
-            "unit_test",
-            json!({"code": code_out.get("text").as_str().unwrap_or(""), "attempt": 0}),
-            &[code.id()],
-            0,
-        );
-        let test_out = test.value(timeout)?;
-        Ok(json!({
-            "branch": "coder",
-            "test": test_out.get("result").as_str().unwrap_or("?"),
-        }))
-    } else {
-        let reply = deeper.agent("chat").call(
-            "reply",
-            json!({"prompt": prompt, "max_new_tokens": 96}),
-        );
-        let out = reply.value(timeout)?;
-        Ok(json!({
-            "branch": "chat",
-            "tokens": out.get("generated_tokens").as_i64().unwrap_or(0),
-        }))
+/// See [`run`]; resumable form.
+pub struct RouterDriver {
+    prompt: String,
+    /// Ground-truth class rides along from the trace; the router agent's
+    /// (tiny) LLM call still happens — it is the classification cost.
+    class: String,
+    state: State,
+}
+
+impl RouterDriver {
+    pub fn new(input: &Value) -> RouterDriver {
+        RouterDriver {
+            prompt: input.get("prompt").as_str().unwrap_or("hello").to_string(),
+            class: input.get("class").as_str().unwrap_or("chat").to_string(),
+            state: State::Start,
+        }
+    }
+}
+
+impl Driver for RouterDriver {
+    fn poll(&mut self, env: &Env) -> Step {
+        loop {
+            // Take the state out; every arm either installs the next state
+            // and loops, restores the current one and suspends, or finishes.
+            match std::mem::replace(&mut self.state, State::Finished) {
+                State::Start => {
+                    let classify = env.ctx.agent("router").call(
+                        "classify",
+                        json!({"prompt": self.prompt.as_str(), "max_new_tokens": 4}),
+                    );
+                    self.state = State::Classify { classify };
+                }
+                State::Classify { classify } => match classify.try_value() {
+                    None => {
+                        let id = classify.id();
+                        self.state = State::Classify { classify };
+                        return Step::Pending { waiting_on: vec![id] };
+                    }
+                    Some(Err(e)) => return Step::Done(Err(e)),
+                    Some(Ok(_)) => {
+                        let deeper = env.ctx.deeper();
+                        if self.class == "coder" {
+                            let code = deeper.agent("coder").call(
+                                "implement",
+                                json!({"prompt": self.prompt.as_str(), "max_new_tokens": 192}),
+                            );
+                            self.state = State::Implement { code };
+                        } else {
+                            let reply = deeper.agent("chat").call(
+                                "reply",
+                                json!({"prompt": self.prompt.as_str(), "max_new_tokens": 96}),
+                            );
+                            self.state = State::Chat { reply };
+                        }
+                    }
+                },
+                State::Chat { reply } => match reply.try_value() {
+                    None => {
+                        let id = reply.id();
+                        self.state = State::Chat { reply };
+                        return Step::Pending { waiting_on: vec![id] };
+                    }
+                    Some(Err(e)) => return Step::Done(Err(e)),
+                    Some(Ok(out)) => {
+                        return Step::Done(Ok(json!({
+                            "branch": "chat",
+                            "tokens": out.get("generated_tokens").as_i64().unwrap_or(0),
+                        })))
+                    }
+                },
+                State::Implement { code } => match code.try_value() {
+                    None => {
+                        let id = code.id();
+                        self.state = State::Implement { code };
+                        return Step::Pending { waiting_on: vec![id] };
+                    }
+                    Some(Err(e)) => return Step::Done(Err(e)),
+                    Some(Ok(code_out)) => {
+                        let test = env.ctx.deeper().agent("test_harness").call_with(
+                            "unit_test",
+                            json!({
+                                "code": code_out.get("text").as_str().unwrap_or(""),
+                                "attempt": 0,
+                            }),
+                            &[code.id()],
+                            0,
+                        );
+                        self.state = State::Test { test };
+                    }
+                },
+                State::Test { test } => match test.try_value() {
+                    None => {
+                        let id = test.id();
+                        self.state = State::Test { test };
+                        return Step::Pending { waiting_on: vec![id] };
+                    }
+                    Some(Err(e)) => return Step::Done(Err(e)),
+                    Some(Ok(test_out)) => {
+                        return Step::Done(Ok(json!({
+                            "branch": "coder",
+                            "test": test_out.get("result").as_str().unwrap_or("?"),
+                        })))
+                    }
+                },
+                State::Finished => {
+                    return Step::Done(Err(Error::msg("router driver polled after completion")))
+                }
+            }
+        }
     }
 }
 
@@ -80,6 +172,37 @@ mod tests {
         assert_eq!(code.get("branch").as_str(), Some("coder"));
         let t = code.get("test").as_str().unwrap();
         assert!(t == "Pass" || t == "Fail");
+        d.shutdown();
+    }
+
+    #[test]
+    fn poll_suspends_between_stages_and_names_what_it_waits_on() {
+        // The router agent is made slow enough (100 paper-s at 0.001 =
+        // 100ms wall) that two polls land while classification is in
+        // flight — the suspend point is deterministic.
+        let cfg = crate::config::DeploymentConfig::from_json(
+            r#"{"time_scale": 0.001, "agents": [
+                {"name": "router", "kind": "llm", "instances": 1,
+                 "profile": {"base_s": 100.0}, "methods": ["classify"]},
+                {"name": "chat", "kind": "llm", "instances": 1,
+                 "profile": {"base_s": 0.1}, "methods": ["reply"]}]}"#,
+        )
+        .unwrap();
+        let d = Deployment::launch(cfg).unwrap();
+        let env = Env::new(&d, d.new_session());
+        let mut drv = RouterDriver::new(&json!({"prompt": "hi", "class": "chat"}));
+        // First poll issues the classify call and suspends on it.
+        let Step::Pending { waiting_on } = drv.poll(&env) else {
+            panic!("fresh driver cannot be done");
+        };
+        assert_eq!(waiting_on.len(), 1);
+        let classify_id = waiting_on[0];
+        // Polling again while nothing resolved must stay pending on the
+        // same future (no duplicate agent calls).
+        let Step::Pending { waiting_on } = drv.poll(&env) else {
+            panic!("still pending");
+        };
+        assert_eq!(waiting_on, vec![classify_id]);
         d.shutdown();
     }
 }

@@ -4,8 +4,13 @@
 //! subtasks; each subtask goes to a developer agent (documentation lookup
 //! feeding the implementation), whose output runs through the test
 //! harness; failed subtasks are *relaunched by the driver* — the
-//! fine-grained retry loop over `future.available()` / non-blocking value
-//! probes that makes the workflow recursive and load non-deterministic.
+//! fine-grained retry loop that makes the workflow recursive and load
+//! non-deterministic.
+//!
+//! Written as a resumable [`Driver`]: the retry loop suspends on the set
+//! of outstanding test futures (`Pending { waiting_on }`) instead of
+//! spinning `try_value` with a sleep, so a relaunch costs one wakeup, not
+//! a polling thread.
 
 use std::time::Duration;
 
@@ -13,127 +18,177 @@ use crate::error::{Error, Result};
 use crate::futures::{FutureHandle, Value};
 use crate::ids::FutureId;
 use crate::json;
+use crate::workflow::driver::{drive_blocking, Driver, Step};
 use crate::workflow::Env;
 
 const MAX_RETRIES: u32 = 3;
 
 struct SubtaskRun {
     test: FutureHandle,
-    code_future: FutureId,
     attempt: u32,
 }
 
 /// One coding request through plan -> implement -> test -> (retry).
+/// Blocking compat shim over [`SweDriver`].
 pub fn run(env: &Env, input: &Value, timeout: Duration) -> Result<Value> {
-    let task = input.get("task").as_str().unwrap_or("fix the bug");
+    drive_blocking(&mut SweDriver::new(input), env, timeout)
+}
 
-    // #1 — planner decomposes the request (Fig. 4 lines 9-12: we block on
-    // the plan because the subtask count is data-dependent).
-    let plan = env
-        .ctx
-        .agent("planner")
-        .call("plan", json!({"prompt": task, "max_new_tokens": 48}));
-    let plan_out = plan.value(timeout)?;
-    let plan_tokens = plan_out.get("generated_tokens").as_u64().unwrap_or(8);
-    let n_subtasks = 2 + (plan_tokens % 3) as usize; // 2-4, model-driven
+/// The Fig. 4 retry loop's live state: one entry per subtask.
+struct Work {
+    runs: Vec<SubtaskRun>,
+    done: Vec<bool>,
+    total_attempts: u32,
+}
 
-    // #2 — launch every subtask in parallel (non-blocking).
-    let deeper = env.ctx.deeper();
-    let launch = |attempt: u32| -> Vec<SubtaskRun> {
-        (0..n_subtasks)
-            .map(|i| {
-                let docs = deeper.agent("documentation").call(
-                    "get",
-                    json!({"query": format!("{task} (part {i})"), "k": 2}),
-                );
-                let code = deeper.agent("developer").call_with(
-                    "implement",
-                    json!({
-                        "prompt": format!("{task} — subtask {i}"),
-                        "max_new_tokens": 160,
-                    }),
-                    &[plan.id(), docs.id()],
-                    attempt,
-                );
-                let test = deeper.agent("test_harness").call_with(
-                    "unit_test",
-                    json!({"code": format!("subtask-{i}"), "attempt": attempt}),
-                    &[code.id()],
-                    attempt,
-                );
-                SubtaskRun { test, code_future: code.id(), attempt }
-            })
-            .collect()
-    };
+enum State {
+    Start,
+    /// #1 — planner decomposes the request (Fig. 4 lines 9-12: we suspend
+    /// on the plan because the subtask count is data-dependent).
+    Plan { plan: FutureHandle },
+    /// #2/#3 — subtasks in flight; failures relaunch in place.
+    Loop(Work),
+    Finished,
+}
 
-    let mut runs = launch(0);
-    let mut done = vec![false; n_subtasks];
-    let mut passed_codes: Vec<FutureId> = vec![FutureId(0); n_subtasks];
-    let mut total_attempts = n_subtasks as u32;
-    let deadline = std::time::Instant::now() + timeout;
+/// See [`run`]; resumable form.
+pub struct SweDriver {
+    task: String,
+    state: State,
+}
 
-    // #3 — the Fig. 4 retry loop: poll non-blocking, relaunch failures.
-    while done.iter().any(|d| !d) {
-        if std::time::Instant::now() >= deadline {
-            return Err(Error::msg(format!("swe request timed out ({task})")));
-        }
-        let mut progressed = false;
-        for i in 0..n_subtasks {
-            if done[i] {
-                continue;
-            }
-            let Some(result) = runs[i].test.try_value() else { continue };
-            progressed = true;
-            let passed = match result {
-                Ok(v) => v.get("result").as_str() == Some("Pass"),
-                Err(_) => false, // system error: driver retries (§5)
-            };
-            if passed {
-                done[i] = true;
-                passed_codes[i] = runs[i].code_future;
-            } else {
-                let attempt = runs[i].attempt + 1;
-                if attempt > MAX_RETRIES {
-                    return Err(Error::msg(format!(
-                        "failed to implement `{task}` subtask {i} after {MAX_RETRIES} retries"
-                    )));
-                }
-                // relaunch just this subtask (re-enters the graph: the LPT
-                // policy's signal).
-                let docs = deeper.agent("documentation").call(
-                    "get",
-                    json!({"query": format!("{task} (part {i}, retry)"), "k": 2}),
-                );
-                let code = deeper.agent("developer").call_with(
-                    "implement",
-                    json!({
-                        "prompt": format!("{task} — subtask {i} retry {attempt}"),
-                        "max_new_tokens": 160,
-                    }),
-                    &[docs.id()],
-                    attempt,
-                );
-                let test = deeper.agent("test_harness").call_with(
-                    "unit_test",
-                    json!({"code": format!("subtask-{i}"), "attempt": attempt}),
-                    &[code.id()],
-                    attempt,
-                );
-                runs[i] = SubtaskRun { test, code_future: code.id(), attempt };
-                total_attempts += 1;
-            }
-        }
-        if !progressed {
-            std::thread::sleep(Duration::from_micros(300));
+impl SweDriver {
+    pub fn new(input: &Value) -> SweDriver {
+        SweDriver {
+            task: input.get("task").as_str().unwrap_or("fix the bug").to_string(),
+            state: State::Start,
         }
     }
 
-    // #4 — merge.
-    Ok(json!({
-        "task": task,
-        "subtasks": n_subtasks,
-        "attempts": total_attempts,
-    }))
+    /// Launch (or relaunch) one subtask: documentation lookup feeding the
+    /// implementation, whose output feeds the test harness. A `retry`
+    /// attempt re-enters the graph with a bumped `retry_count` — the LPT
+    /// policy's signal.
+    fn launch_subtask(
+        &self,
+        env: &Env,
+        i: usize,
+        attempt: u32,
+        plan: Option<FutureId>,
+    ) -> SubtaskRun {
+        let deeper = env.ctx.deeper();
+        let note = if attempt == 0 { String::new() } else { format!(" retry {attempt}") };
+        let docs = deeper.agent("documentation").call(
+            "get",
+            json!({"query": format!("{} (part {i}{note})", self.task), "k": 2}),
+        );
+        let mut deps = vec![docs.id()];
+        if let Some(plan) = plan {
+            deps.insert(0, plan);
+        }
+        let code = deeper.agent("developer").call_with(
+            "implement",
+            json!({
+                "prompt": format!("{} — subtask {i}{note}", self.task),
+                "max_new_tokens": 160,
+            }),
+            &deps,
+            attempt,
+        );
+        let test = deeper.agent("test_harness").call_with(
+            "unit_test",
+            json!({"code": format!("subtask-{i}"), "attempt": attempt}),
+            &[code.id()],
+            attempt,
+        );
+        SubtaskRun { test, attempt }
+    }
+}
+
+impl Driver for SweDriver {
+    fn poll(&mut self, env: &Env) -> Step {
+        loop {
+            match std::mem::replace(&mut self.state, State::Finished) {
+                State::Start => {
+                    let plan = env
+                        .ctx
+                        .agent("planner")
+                        .call("plan", json!({"prompt": self.task.as_str(), "max_new_tokens": 48}));
+                    self.state = State::Plan { plan };
+                }
+                State::Plan { plan } => match plan.try_value() {
+                    None => {
+                        let id = plan.id();
+                        self.state = State::Plan { plan };
+                        return Step::Pending { waiting_on: vec![id] };
+                    }
+                    Some(Err(e)) => return Step::Done(Err(e)),
+                    Some(Ok(out)) => {
+                        let plan_tokens = out.get("generated_tokens").as_u64().unwrap_or(8);
+                        let n_subtasks = 2 + (plan_tokens % 3) as usize; // 2-4, model-driven
+                        // #2 — launch every subtask in parallel (non-blocking).
+                        let runs: Vec<SubtaskRun> = (0..n_subtasks)
+                            .map(|i| self.launch_subtask(env, i, 0, Some(plan.id())))
+                            .collect();
+                        self.state = State::Loop(Work {
+                            done: vec![false; n_subtasks],
+                            total_attempts: n_subtasks as u32,
+                            runs,
+                        });
+                    }
+                },
+                State::Loop(mut w) => {
+                    // #3 — the Fig. 4 retry loop: consume every test that
+                    // resolved, relaunch failures, then suspend on what is
+                    // still outstanding.
+                    let mut waiting: Vec<FutureId> = Vec::new();
+                    for i in 0..w.runs.len() {
+                        if w.done[i] {
+                            continue;
+                        }
+                        let Some(result) = w.runs[i].test.try_value() else {
+                            waiting.push(w.runs[i].test.id());
+                            continue;
+                        };
+                        let passed = match result {
+                            Ok(v) => v.get("result").as_str() == Some("Pass"),
+                            Err(_) => false, // system error: driver retries (§5)
+                        };
+                        if passed {
+                            w.done[i] = true;
+                        } else {
+                            let attempt = w.runs[i].attempt + 1;
+                            if attempt > MAX_RETRIES {
+                                return Step::Done(Err(Error::msg(format!(
+                                    "failed to implement `{}` subtask {i} after \
+                                     {MAX_RETRIES} retries",
+                                    self.task
+                                ))));
+                            }
+                            // relaunch just this subtask (re-enters the
+                            // graph: the LPT policy's signal).
+                            w.runs[i] = self.launch_subtask(env, i, attempt, None);
+                            w.total_attempts += 1;
+                            waiting.push(w.runs[i].test.id());
+                        }
+                    }
+                    if w.done.iter().all(|d| *d) {
+                        // #4 — merge.
+                        return Step::Done(Ok(json!({
+                            "task": self.task.as_str(),
+                            "subtasks": w.runs.len(),
+                            "attempts": w.total_attempts,
+                        })));
+                    }
+                    self.state = State::Loop(w);
+                    return Step::Pending { waiting_on: waiting };
+                }
+                State::Finished => {
+                    return Step::Done(Err(Error::msg("swe driver polled after completion")))
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,180 @@
+//! Integration tests for the event-driven ingress scheduler: in-flight
+//! requests are stored continuations, so a small fixed thread pool must
+//! carry far more concurrent requests than it has threads, and a stalled
+//! agent type must park its requests without wedging unrelated work.
+
+use std::time::{Duration, Instant};
+
+use nalar::config::DeploymentConfig;
+use nalar::ingress::{AdmissionPolicy, Ingress, SchedulerOpts, Ticket};
+use nalar::json;
+use nalar::server::Deployment;
+use nalar::workflow::WorkflowKind;
+
+/// ≥512 concurrent in-flight requests on a 4-thread scheduler: every
+/// admitted request completes. Under the old one-request-per-thread pool
+/// this workload would need 512 OS threads (or serialize 128-deep per
+/// thread); with resumable drivers 4 threads multiplex the whole set.
+#[test]
+fn four_threads_complete_512_concurrent_requests() {
+    let mut cfg = WorkflowKind::Router.config();
+    cfg.time_scale = 0.002;
+    cfg.control.global_period_ms = 10;
+    // Keep the capacity policies out of this test: a reallocation kill
+    // would fail futures retryably, which is orthogonal to what is being
+    // proven here (thread-decoupled completion).
+    cfg.policies = vec!["load_balance".into()];
+    let d = Deployment::launch(cfg).unwrap();
+    let ing = Ingress::start_with_opts(
+        &d,
+        &[WorkflowKind::Router],
+        AdmissionPolicy::Unbounded,
+        SchedulerOpts { workers: 4, max_in_flight: 1024 },
+    );
+    let timeout = Duration::from_secs(120);
+    let tickets: Vec<Ticket> = (0..512)
+        .map(|i| {
+            let class = if i % 4 == 0 { "coder" } else { "chat" };
+            ing.submit(
+                WorkflowKind::Router,
+                None,
+                json!({"prompt": "multiplex me", "class": class}),
+                timeout,
+            )
+            .unwrap()
+        })
+        .collect();
+    // All 512 were admitted before the workload can drain: the scheduler
+    // is carrying far more live requests than it has threads.
+    let m = ing.metrics(WorkflowKind::Router).unwrap();
+    assert_eq!(m.workers, 4);
+    assert!(
+        m.in_flight + m.depth > 4 * m.workers,
+        "in-flight ({}) + queued ({}) should dwarf {} threads right after the burst",
+        m.in_flight,
+        m.depth,
+        m.workers
+    );
+    for t in &tickets {
+        t.wait(timeout).unwrap();
+    }
+    let m = ing.metrics(WorkflowKind::Router).unwrap();
+    assert_eq!(m.accepted, 512);
+    assert_eq!(m.completed, 512, "every admitted request must complete");
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.expired_in_queue, 0);
+    assert_eq!(m.in_flight, 0, "drained");
+    ing.stop();
+    d.shutdown();
+}
+
+/// Two workflows behind one 2-thread front door; the chat agent is
+/// stalled (500 paper-s per reply). The router requests park on their
+/// chat futures without occupying the scheduler's threads, so the SWE
+/// workflow's requests keep completing — head-of-line isolation that the
+/// old thread-per-request pool could not provide (6 stalled requests
+/// would have pinned both threads).
+#[test]
+fn stalled_agent_type_parks_without_wedging_other_workflows() {
+    let cfg = DeploymentConfig::from_json(
+        r#"{
+  "nodes": 2,
+  "time_scale": 0.001,
+  "seed": 5,
+  "control": {"global_period_ms": 20, "hol_threshold_ms": 120},
+  "engine": {"max_batch": 8, "executor": "sim", "kv_policy": "hint"},
+  "ingress": {"policy": "unbounded", "workers": 2, "max_in_flight": 64},
+  "policies": ["load_balance"],
+  "agents": [
+    {"name": "router", "kind": "llm", "instances": 1,
+     "profile": {"base_s": 0.05, "mean_output_tokens": 6, "per_output_token_s": 0.01},
+     "methods": ["classify"]},
+    {"name": "chat", "kind": "llm", "instances": 2,
+     "profile": {"base_s": 500.0, "mean_output_tokens": 1, "per_output_token_s": 0.0},
+     "methods": ["reply"]},
+    {"name": "coder", "kind": "llm", "instances": 1,
+     "profile": {"base_s": 0.3, "mean_output_tokens": 20, "per_output_token_s": 0.01},
+     "methods": ["implement"]},
+    {"name": "planner", "kind": "llm", "instances": 1,
+     "profile": {"base_s": 0.3, "mean_output_tokens": 60, "per_output_token_s": 0.008},
+     "methods": ["plan"]},
+    {"name": "developer", "kind": "llm", "instances": 2,
+     "profile": {"base_s": 0.4, "mean_output_tokens": 240, "per_output_token_s": 0.011},
+     "methods": ["implement"]},
+    {"name": "documentation", "kind": "vector_store", "instances": 1,
+     "profile": {"base_s": 0.15},
+     "methods": ["get", "add", "query"]},
+    {"name": "test_harness", "kind": "test_harness", "instances": 2,
+     "profile": {"base_s": 0.6},
+     "failure_rate": 0.1,
+     "methods": ["unit_test", "integration_test"]}
+  ]
+}"#,
+    )
+    .unwrap();
+    let d = Deployment::launch(cfg).unwrap();
+    let ing = Ingress::start_with_opts(
+        &d,
+        &[WorkflowKind::Router, WorkflowKind::Swe],
+        AdmissionPolicy::Unbounded,
+        SchedulerOpts { workers: 2, max_in_flight: 64 },
+    );
+    let long = Duration::from_secs(60);
+
+    // 6 requests that will all stall on the chat agent (3x the thread
+    // count: the old pool would be wedged solid).
+    let stalled: Vec<Ticket> = (0..6)
+        .map(|_| {
+            ing.submit(
+                WorkflowKind::Router,
+                None,
+                json!({"prompt": "hang", "class": "chat"}),
+                long,
+            )
+            .unwrap()
+        })
+        .collect();
+    // Wait until every stalled request has actually started (left the
+    // admission queue) so the isolation claim is about parked work, not
+    // work that merely never began.
+    let t0 = Instant::now();
+    while ing.in_flight(WorkflowKind::Router) < stalled.len() {
+        assert!(t0.elapsed() < Duration::from_secs(10), "stalled requests never started");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // An unrelated workflow must make progress on the same two threads.
+    let swe: Vec<Ticket> = (0..6)
+        .map(|_| {
+            ing.submit(WorkflowKind::Swe, None, json!({"task": "isolate me"}), long).unwrap()
+        })
+        .collect();
+    for t in &swe {
+        t.wait(long).unwrap();
+    }
+    let m_swe = ing.metrics(WorkflowKind::Swe).unwrap();
+    assert_eq!(m_swe.completed, 6, "swe must complete while router is stalled");
+    // The stall (6 chats x 0.5s wall on 2 instances = >=1.5s of chat
+    // service) must outlast the ~50ms SWE phase: stalled requests stay
+    // parked, not failed, and don't hold the scheduler's threads. Avoid
+    // asserting exactly-zero completions — on a badly overloaded runner a
+    // first chat reply may sneak in — but all 6 finishing during the SWE
+    // phase would mean the stall never happened.
+    let m_router = ing.metrics(WorkflowKind::Router).unwrap();
+    assert_eq!(m_router.failed, 0, "parked requests must not be failed");
+    assert!(
+        m_router.in_flight >= 1,
+        "stalled requests must still be parked (in_flight {}, completed {})",
+        m_router.in_flight,
+        m_router.completed
+    );
+
+    // Tear down without waiting out the stall: stop() fails parked work
+    // fast rather than masking it — no ticket may be left hanging.
+    ing.stop();
+    for t in &stalled {
+        let _ = t.wait(Duration::from_secs(1));
+        assert!(t.latency().is_some(), "every ticket must be fulfilled (ok or failed) at stop");
+    }
+    d.shutdown();
+}
