@@ -1,12 +1,21 @@
 # Local entrypoints — identical to what CI runs (.github/workflows/ci.yml).
 
-.PHONY: build test fmt clippy lint bench bench-quick loadgen loadgen-quick loadgen-hc artifacts clean
+.PHONY: build test test-scheduler fmt clippy lint bench bench-quick loadgen loadgen-quick loadgen-hc artifacts clean
 
 build:
 	cargo build --release --all-targets
 
 test:
 	cargo test -q
+
+# Deterministic scheduler suites: the Ticket::cancel race matrix + the
+# FIFO-vs-deadline_slack A/B trace (virtual clock, scripted engine) and
+# the admission-controller property tests. --test-threads pinned: the
+# lifecycle tests hold scheduler workers hostage on purpose, so they must
+# not share a runner with a dozen sibling tests fighting for cores.
+test-scheduler:
+	cargo test -q --release --test integration_scheduler -- --test-threads=2
+	cargo test -q --release --test props -- --test-threads=2
 
 fmt:
 	cargo fmt --all -- --check

@@ -68,18 +68,21 @@ impl SystemUnderTest {
                 cfg.control.enable_migration = false;
                 cfg.engine.kv_policy = "lru".into();
                 cfg.ingress.policy = "unbounded".into();
+                cfg.ingress.schedule = "fifo".into();
             }
             SystemUnderTest::CrewLike => {
                 cfg.policies.clear();
                 cfg.control.enable_migration = false;
                 cfg.engine.kv_policy = "lru".into();
                 cfg.ingress.policy = "unbounded".into();
+                cfg.ingress.schedule = "fifo".into();
             }
             SystemUnderTest::AutoGenLike => {
                 cfg.policies.clear();
                 cfg.control.enable_migration = false;
                 cfg.engine.kv_policy = "lru".into();
                 cfg.ingress.policy = "unbounded".into();
+                cfg.ingress.schedule = "fifo".into();
             }
         }
     }
@@ -128,6 +131,7 @@ mod tests {
             assert!(cfg.policies.is_empty(), "{}", s.name());
             assert!(!cfg.control.enable_migration);
             assert_eq!(cfg.ingress.policy, "unbounded", "{} has no admission control", s.name());
+            assert_eq!(cfg.ingress.schedule, "fifo", "{} has no front-door SRTF", s.name());
             let (sticky, _) = s.router_mode();
             assert!(sticky, "{} must be session-sticky", s.name());
         }

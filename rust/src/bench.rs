@@ -199,6 +199,8 @@ pub fn validate(report: &Value) -> Result<()> {
             "failed",
             "expired_in_queue",
             "shed",
+            "cancelled",
+            "schedule",
             "goodput_rps",
             "shed_rate",
         ],
@@ -710,7 +712,8 @@ mod tests {
     fn validate_accepts_rps_sweep_points() {
         let mut p = json!({
             "workflow": "router", "system": "NALAR", "rps_wall": 80.0, "rps_paper": 8.0,
-            "offered": 640, "completed": 600, "failed": 6, "expired_in_queue": 4, "shed": 30,
+            "offered": 640, "completed": 600, "failed": 4, "expired_in_queue": 4, "shed": 30,
+            "cancelled": 2, "schedule": "deadline_slack",
             "goodput_rps": 75.0, "shed_rate": 0.047
         });
         p.insert("latency", lat());
@@ -718,6 +721,15 @@ mod tests {
         let mut missing = json!({"workflow": "router", "system": "NALAR"});
         missing.insert("latency", lat());
         assert!(validate(&minimal_report("rps_sweep", missing)).is_err());
+        // pre-lifecycle reports (no `cancelled`/`schedule`) must fail now
+        let mut stale = json!({
+            "workflow": "router", "system": "NALAR", "rps_wall": 80.0, "rps_paper": 8.0,
+            "offered": 640, "completed": 600, "failed": 6, "expired_in_queue": 4, "shed": 30,
+            "goodput_rps": 75.0, "shed_rate": 0.047
+        });
+        stale.insert("latency", lat());
+        let err = validate(&minimal_report("rps_sweep", stale)).unwrap_err();
+        assert!(err.to_string().contains("cancelled"), "{err}");
     }
 
     #[test]

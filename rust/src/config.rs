@@ -167,6 +167,12 @@ pub struct AgentConfig {
 pub struct IngressSettings {
     /// Admission policy: `unbounded` | `bounded` | `token_bucket`.
     pub policy: String,
+    /// Ready/admission-queue ordering: `fifo` | `deadline_slack` (pop the
+    /// minimum `deadline − now − estimated_remaining`, SRTF at the front
+    /// door) | `stage` (drain later-stage work first). Baselines are
+    /// forced to `fifo` by `baselines::SystemUnderTest::apply` — none of
+    /// the compared systems schedules its front door.
+    pub schedule: String,
     /// Bounded-queue capacity per workflow queue.
     pub queue_cap: usize,
     /// Scheduler OS threads. This bounds *threads*, not in-flight
@@ -188,6 +194,7 @@ impl Default for IngressSettings {
     fn default() -> Self {
         IngressSettings {
             policy: "bounded".into(),
+            schedule: "fifo".into(),
             queue_cap: 256,
             workers: 8,
             max_in_flight: 1024,
@@ -262,6 +269,7 @@ impl DeploymentConfig {
             let di = IngressSettings::default();
             IngressSettings {
                 policy: i.str_or("policy", &di.policy).to_string(),
+                schedule: i.str_or("schedule", &di.schedule).to_string(),
                 queue_cap: i.u64_or("queue_cap", di.queue_cap as u64) as usize,
                 workers: i.u64_or("workers", di.workers as u64) as usize,
                 max_in_flight: i.u64_or("max_in_flight", di.max_in_flight as u64) as usize,
@@ -393,6 +401,13 @@ impl DeploymentConfig {
                 self.ingress.policy
             )));
         }
+        // One parse authority: `SchedulePolicy::parse` owns the name set.
+        if crate::ingress::SchedulePolicy::parse(&self.ingress.schedule).is_none() {
+            return Err(Error::Config(format!(
+                "unknown ingress schedule `{}` (known: fifo, deadline_slack, stage)",
+                self.ingress.schedule
+            )));
+        }
         if self.ingress.workers == 0 {
             return Err(Error::Config("ingress.workers must be >= 1".into()));
         }
@@ -427,16 +442,19 @@ mod tests {
         assert!(!c.agents[0].directives.stateful);
         assert_eq!(c.agents[0].methods, vec!["plan"]);
         assert_eq!(c.ingress.policy, "bounded");
+        assert_eq!(c.ingress.schedule, "fifo");
         assert_eq!(c.ingress.queue_cap, 256);
     }
 
     #[test]
     fn ingress_section_parses_and_validates() {
         let y = r#"{"ingress": {"policy": "token_bucket", "queue_cap": 32, "workers": 8,
-                     "max_in_flight": 96, "token_rate": 50.0, "token_burst": 10.0},
+                     "max_in_flight": 96, "token_rate": 50.0, "token_burst": 10.0,
+                     "schedule": "deadline_slack"},
                     "agents": [{"name": "a", "kind": "llm", "methods": ["m"]}]}"#;
         let c = DeploymentConfig::from_json(y).unwrap();
         assert_eq!(c.ingress.policy, "token_bucket");
+        assert_eq!(c.ingress.schedule, "deadline_slack");
         assert_eq!(c.ingress.queue_cap, 32);
         assert_eq!(c.ingress.workers, 8);
         assert_eq!(c.ingress.max_in_flight, 96);
@@ -447,6 +465,9 @@ mod tests {
         let bad_mif = r#"{"ingress": {"max_in_flight": 0},
                           "agents": [{"name": "a", "kind": "llm"}]}"#;
         assert!(DeploymentConfig::from_json(bad_mif).is_err());
+        let bad_sched = r#"{"ingress": {"schedule": "lifo"},
+                            "agents": [{"name": "a", "kind": "llm"}]}"#;
+        assert!(DeploymentConfig::from_json(bad_sched).is_err());
     }
 
     #[test]

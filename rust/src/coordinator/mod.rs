@@ -69,11 +69,20 @@ pub struct IngressMetrics {
     pub cap: usize,
     /// Admission-policy name ("unbounded" | "bounded" | "token_bucket").
     pub policy: String,
+    /// Ready/admission-queue ordering ("fifo" | "deadline_slack" |
+    /// "stage") — which front-door scheduling policy produced these
+    /// numbers.
+    pub schedule: String,
     pub accepted: u64,
     pub shed: u64,
     pub completed: u64,
     /// Execution failures (driver errors, deadline expiry *after* start).
     pub failed: u64,
+    /// Requests withdrawn by their caller (`Ticket::cancel`) before
+    /// completing — a terminal outcome of its own: not a failure (nothing
+    /// broke) and not a shed (the work was admitted and then killed on
+    /// purpose).
+    pub cancelled: u64,
     /// Deadline expiries before the driver ever started (shed-in-queue) —
     /// kept apart from `failed` so a slow driver and an overloaded queue
     /// are distinguishable in telemetry and the rps_sweep schema.

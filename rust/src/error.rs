@@ -28,6 +28,10 @@ pub enum Error {
     /// The request's end-to-end deadline expired before (or while) a
     /// driver ran it.
     Deadline(std::time::Duration),
+    /// The caller cancelled the request (`Ticket::cancel`). Terminal and
+    /// NOT retryable: the caller explicitly withdrew the work, so backing
+    /// off and resubmitting would resurrect what was just killed.
+    Cancelled,
     InstanceKilled(InstanceId),
     Engine(String),
     Runtime(String),
@@ -51,6 +55,7 @@ impl fmt::Display for Error {
                 write!(f, "request shed at ingress for `{workflow}`: {reason}")
             }
             Error::Deadline(after) => write!(f, "request deadline expired after {after:?}"),
+            Error::Cancelled => write!(f, "request cancelled by the caller"),
             Error::UnknownAgent(agent) => write!(f, "unknown agent type `{agent}`"),
             Error::InstanceKilled(i) => write!(f, "instance {i} was killed"),
             Error::Engine(e) => write!(f, "engine error: {e}"),
@@ -122,6 +127,7 @@ mod tests {
         assert!(Error::NoInstance("x".into()).retryable());
         assert!(Error::Shed("router".into(), "queue full".into()).retryable());
         assert!(Error::Deadline(std::time::Duration::from_secs(3)).retryable());
+        assert!(!Error::Cancelled.retryable(), "a cancel must not invite a resubmit");
         assert!(!Error::Config("bad".into()).retryable());
         assert!(!Error::Engine("x".into()).retryable());
     }

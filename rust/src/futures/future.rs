@@ -177,11 +177,15 @@ impl FutureCell {
     }
 
     /// Materialize the value (Op 3 producer side). The value is immutable:
-    /// a second resolution is ignored (debug-asserted) — Property 1.
+    /// a second resolution is ignored (debug-asserted) — Property 1. A
+    /// resolve *after* `fail` is also ignored, but silently: cancellation
+    /// (and instance kills) fail a future from the control plane while the
+    /// engine may legitimately still be computing it, so the engine's late
+    /// resolve is a lost race, not a programming error.
     pub fn resolve(&self, value: Value, service_us: u64) {
         let mut i = self.inner.lock().unwrap();
         if matches!(i.state, FutureState::Ready | FutureState::Failed) {
-            debug_assert!(false, "double resolve of {}", self.id);
+            debug_assert!(i.state == FutureState::Failed, "double resolve of {}", self.id);
             return;
         }
         i.value = Some(Arc::new(value));
@@ -475,6 +479,18 @@ mod tests {
             }
             other => panic!("wrong error {other:?}"),
         }
+    }
+
+    #[test]
+    fn resolve_after_fail_is_a_lost_race_not_a_panic() {
+        // Cancellation fails futures from the control plane while the
+        // engine may still be computing them; the engine's late resolve
+        // must be swallowed and the failure must stand.
+        let c = FutureCell::new(meta(15));
+        c.fail("request cancelled");
+        c.resolve(json!(99), 0);
+        assert_eq!(c.state(), FutureState::Failed);
+        assert!(c.try_value().unwrap().is_err());
     }
 
     #[test]

@@ -6,7 +6,7 @@ use std::sync::Arc;
 use std::sync::RwLock;
 
 use crate::futures::{FutureCell, FutureState};
-use crate::ids::FutureId;
+use crate::ids::{FutureId, RequestId};
 
 const SHARDS: usize = 32;
 
@@ -75,6 +75,36 @@ impl FutureTable {
         }
     }
 
+    /// Fail every non-terminal future belonging to `request` (request
+    /// cancellation via `Ticket::cancel`, or deadline expiry of a started
+    /// request): consumers observe the failure immediately instead of
+    /// waiting out an answer nobody wants. Returns how many futures were
+    /// failed. The cells are collected under the shard locks but failed
+    /// outside them — `fail` fires wakers, and a waker is free to take
+    /// unrelated locks (the ingress scheduler's, for one).
+    ///
+    /// Deliberately a full-table scan: cancels/expiries are orders of
+    /// magnitude rarer than resolves, `gc_terminal` bounds the live set,
+    /// and a by-request index would need an eviction hook the table does
+    /// not have (requests finish without telling it) — see the ROADMAP
+    /// item before reaching for one.
+    pub fn fail_request(&self, request: RequestId, reason: &str) -> usize {
+        let mut doomed: Vec<Arc<FutureCell>> = Vec::new();
+        for shard in &self.shards {
+            for cell in shard.read().unwrap().values() {
+                if !matches!(cell.state(), FutureState::Ready | FutureState::Failed)
+                    && cell.with_meta(|m| m.request) == request
+                {
+                    doomed.push(cell.clone());
+                }
+            }
+        }
+        for cell in &doomed {
+            cell.fail(reason);
+        }
+        doomed.len()
+    }
+
     /// Drop terminal futures older than keeping is useful; returns count
     /// removed. (The paper scales to 131K live futures; GC keeps bench
     /// memory bounded.)
@@ -97,10 +127,14 @@ mod tests {
     use crate::ids::*;
 
     fn cell(id: u64) -> Arc<FutureCell> {
+        cell_for(id, 0)
+    }
+
+    fn cell_for(id: u64, request: u64) -> Arc<FutureCell> {
         FutureCell::new(FutureMeta::new(
             FutureId(id),
             SessionId(0),
-            RequestId(0),
+            RequestId(request),
             AgentType::new("a"),
             "m",
             Location::Global,
@@ -134,6 +168,23 @@ mod tests {
         assert_eq!(counts[&FutureState::Created], 6);
         assert_eq!(t.gc_terminal(), 4);
         assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    fn fail_request_only_touches_the_request_and_spares_terminals() {
+        let t = FutureTable::new();
+        t.insert(cell_for(1, 7)); // doomed
+        t.insert(cell_for(2, 7)); // doomed
+        let done = cell_for(3, 7); // already terminal: untouched
+        done.resolve(crate::json!("ok"), 0);
+        t.insert(done.clone());
+        t.insert(cell_for(4, 8)); // other request: untouched
+        assert_eq!(t.fail_request(RequestId(7), "request cancelled"), 2);
+        assert!(t.get(FutureId(1)).unwrap().try_value().unwrap().is_err());
+        assert!(t.get(FutureId(2)).unwrap().try_value().unwrap().is_err());
+        assert!(done.try_value().unwrap().is_ok(), "resolved value is immutable");
+        assert_eq!(t.get(FutureId(4)).unwrap().state(), FutureState::Created);
+        assert_eq!(t.fail_request(RequestId(7), "again"), 0, "idempotent");
     }
 
     #[test]

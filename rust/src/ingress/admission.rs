@@ -92,6 +92,15 @@ impl AdmissionController {
     /// Decide for one request given the current queue `depth`. Updates the
     /// accept/shed counters; `Err` carries the shed reason.
     pub fn admit(&self, depth: usize) -> Result<(), String> {
+        self.admit_at(depth, Instant::now())
+    }
+
+    /// [`Self::admit`] against an explicit `now` — the deterministic
+    /// entry point for property tests driving the token bucket with a
+    /// virtual clock ([`crate::testkit::Clock`]): refill becomes a pure
+    /// function of the timestamps the test chooses. Time never runs
+    /// backwards (an older `now` refills nothing).
+    pub fn admit_at(&self, depth: usize, now: Instant) -> Result<(), String> {
         let verdict = match &self.policy {
             AdmissionPolicy::Unbounded => Ok(()),
             AdmissionPolicy::Bounded { cap } => {
@@ -103,10 +112,9 @@ impl AdmissionController {
             }
             AdmissionPolicy::TokenBucket { rate, burst } => {
                 let mut b = self.bucket.lock().unwrap();
-                let now = Instant::now();
-                let refill = now.duration_since(b.last).as_secs_f64() * rate;
+                let refill = now.saturating_duration_since(b.last).as_secs_f64() * rate;
                 b.tokens = (b.tokens + refill).min(*burst);
-                b.last = now;
+                b.last = b.last.max(now);
                 if b.tokens >= 1.0 {
                     b.tokens -= 1.0;
                     Ok(())

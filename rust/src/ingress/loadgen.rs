@@ -22,7 +22,7 @@ use crate::bench;
 use crate::config::DeploymentConfig;
 use crate::error::{Error, Result};
 use crate::ids::SessionId;
-use crate::ingress::Ingress;
+use crate::ingress::{Ingress, SchedulePolicy};
 use crate::json;
 use crate::metrics::{goodput, shed_rate, LatencyRecorder};
 use crate::server::Deployment;
@@ -66,9 +66,21 @@ pub struct LoadgenOpts {
     /// noise in a must-complete-everything functional gate.
     pub policies: Option<Vec<String>>,
     /// Fail the run if any point completes fewer requests than it
-    /// admitted (offered − shed) — the CI gate for the scheduler: with
-    /// in-flight ≫ threads, every admitted request must still finish.
+    /// admitted (offered − shed − cancelled) — the CI gate for the
+    /// scheduler: with in-flight ≫ threads, every admitted request must
+    /// still finish.
     pub expect_admitted_complete: bool,
+    /// Probability an admitted request is cancelled (`Ticket::cancel`)
+    /// at a seeded uniform point inside its deadline window — the
+    /// lifecycle-control knob (`--cancel-rate`): cancelled work must
+    /// neither leak scheduler-table entries nor distort the goodput
+    /// accounting of the surviving requests.
+    pub cancel_rate: f64,
+    /// Scheduling-policy axis: run every (rate, system) point once per
+    /// listed `ingress.schedule` (None = the config's). Baselines are
+    /// forced back to `fifo` by `SystemUnderTest::apply`, so the axis
+    /// measures NALAR's front-door SRTF against its own FIFO.
+    pub schedules: Option<Vec<String>>,
 }
 
 impl LoadgenOpts {
@@ -89,6 +101,8 @@ impl LoadgenOpts {
             workers: None,
             policies: None,
             expect_admitted_complete: false,
+            cancel_rate: 0.0,
+            schedules: None,
         }
     }
 
@@ -112,6 +126,8 @@ impl LoadgenOpts {
             workers: None,
             policies: None,
             expect_admitted_complete: false,
+            cancel_rate: 0.0,
+            schedules: None,
         }
     }
 
@@ -134,6 +150,10 @@ impl LoadgenOpts {
             // sweep, noise in a must-complete-everything gate.
             policies: Some(vec!["load_balance".into()]),
             expect_admitted_complete: true,
+            // Run the gate under the non-default ordering: deadline-slack
+            // pops must preserve the every-admitted-request-completes and
+            // no-table-leak invariants just like FIFO.
+            schedules: Some(vec!["deadline_slack".into()]),
             ..Self::quick(workflow)
         }
     }
@@ -145,48 +165,66 @@ pub fn run(opts: &LoadgenOpts) -> Result<PathBuf> {
         return Err(Error::Config("loadgen needs at least one rate and one system".into()));
     }
     let mut table = Table::new(&[
-        "system", "rps", "offered", "ok", "shed", "expired", "fail", "goodput", "p50(s)", "p99(s)",
+        "system", "sched", "rps", "offered", "ok", "shed", "expired", "cancel", "fail", "goodput",
+        "p50(s)", "p99(s)",
     ]);
+    // The scheduling-policy axis: None = keep whatever the config says.
+    let schedules: Vec<Option<String>> = match &opts.schedules {
+        Some(list) => list.iter().map(|s| Some(s.clone())).collect(),
+        None => vec![None],
+    };
     let mut points = Vec::new();
     for &rps in &opts.rates {
         for &system in &opts.systems {
-            let t0 = Instant::now();
-            let p = run_point(opts, rps, system)?;
-            println!(
-                "[loadgen] {} {} @ {:.0} rps done in {:.1?}",
-                opts.workflow.name(),
-                system.name(),
-                rps,
-                t0.elapsed()
-            );
-            table.row(&[
-                p.get("system").as_str().unwrap_or("?").to_string(),
-                format!("{:.0}", p.get("rps_wall").as_f64().unwrap_or(0.0)),
-                p.get("offered").as_u64().unwrap_or(0).to_string(),
-                p.get("completed").as_u64().unwrap_or(0).to_string(),
-                p.get("shed").as_u64().unwrap_or(0).to_string(),
-                p.get("expired_in_queue").as_u64().unwrap_or(0).to_string(),
-                p.get("failed").as_u64().unwrap_or(0).to_string(),
-                format!("{:.1}", p.get("goodput_rps").as_f64().unwrap_or(0.0)),
-                format!("{:.1}", p.get("latency").get("p50").as_f64().unwrap_or(0.0)),
-                format!("{:.1}", p.get("latency").get("p99").as_f64().unwrap_or(0.0)),
-            ]);
-            if opts.expect_admitted_complete {
-                let offered = p.get("offered").as_u64().unwrap_or(0);
-                let shed = p.get("shed").as_u64().unwrap_or(0);
-                let completed = p.get("completed").as_u64().unwrap_or(0);
-                if completed < offered.saturating_sub(shed) {
-                    return Err(Error::Msg(format!(
-                        "high-concurrency gate: {} {} @ {:.0} rps completed only {completed} of \
-                         {} admitted requests",
-                        opts.workflow.name(),
-                        system.name(),
-                        rps,
-                        offered.saturating_sub(shed),
-                    )));
+            for (si, sched) in schedules.iter().enumerate() {
+                // Baselines are forced back to `fifo` by `apply`, so every
+                // axis entry would measure the identical configuration —
+                // run each baseline cell once instead of once per entry.
+                if si > 0 && system != SystemUnderTest::Nalar {
+                    continue;
                 }
+                let t0 = Instant::now();
+                let p = run_point(opts, rps, system, sched.as_deref())?;
+                println!(
+                    "[loadgen] {} {} ({}) @ {:.0} rps done in {:.1?}",
+                    opts.workflow.name(),
+                    system.name(),
+                    p.get("schedule").as_str().unwrap_or("?"),
+                    rps,
+                    t0.elapsed()
+                );
+                table.row(&[
+                    p.get("system").as_str().unwrap_or("?").to_string(),
+                    p.get("schedule").as_str().unwrap_or("?").to_string(),
+                    format!("{:.0}", p.get("rps_wall").as_f64().unwrap_or(0.0)),
+                    p.get("offered").as_u64().unwrap_or(0).to_string(),
+                    p.get("completed").as_u64().unwrap_or(0).to_string(),
+                    p.get("shed").as_u64().unwrap_or(0).to_string(),
+                    p.get("expired_in_queue").as_u64().unwrap_or(0).to_string(),
+                    p.get("cancelled").as_u64().unwrap_or(0).to_string(),
+                    p.get("failed").as_u64().unwrap_or(0).to_string(),
+                    format!("{:.1}", p.get("goodput_rps").as_f64().unwrap_or(0.0)),
+                    format!("{:.1}", p.get("latency").get("p50").as_f64().unwrap_or(0.0)),
+                    format!("{:.1}", p.get("latency").get("p99").as_f64().unwrap_or(0.0)),
+                ]);
+                if opts.expect_admitted_complete {
+                    let offered = p.get("offered").as_u64().unwrap_or(0);
+                    let shed = p.get("shed").as_u64().unwrap_or(0);
+                    let cancelled = p.get("cancelled").as_u64().unwrap_or(0);
+                    let completed = p.get("completed").as_u64().unwrap_or(0);
+                    if completed < offered.saturating_sub(shed + cancelled) {
+                        return Err(Error::Msg(format!(
+                            "high-concurrency gate: {} {} @ {:.0} rps completed only \
+                             {completed} of {} admitted requests",
+                            opts.workflow.name(),
+                            system.name(),
+                            rps,
+                            offered.saturating_sub(shed + cancelled),
+                        )));
+                    }
+                }
+                points.push(p);
             }
-            points.push(p);
         }
     }
     println!("\n=== RPS sweep — {} workflow, open loop ===", opts.workflow.name());
@@ -197,8 +235,13 @@ pub fn run(opts: &LoadgenOpts) -> Result<PathBuf> {
     bench::write_report(&opts.out_dir, bench::RPS_SWEEP, &report)
 }
 
-/// One (rate, system) cell of the sweep.
-fn run_point(opts: &LoadgenOpts, rps: f64, system: SystemUnderTest) -> Result<Value> {
+/// One (rate, system, schedule) cell of the sweep.
+fn run_point(
+    opts: &LoadgenOpts,
+    rps: f64,
+    system: SystemUnderTest,
+    schedule: Option<&str>,
+) -> Result<Value> {
     let mut cfg = match &opts.config {
         Some(path) => DeploymentConfig::from_json_file(path)?,
         None => opts.workflow.config(),
@@ -208,6 +251,18 @@ fn run_point(opts: &LoadgenOpts, rps: f64, system: SystemUnderTest) -> Result<Va
     }
     if let Some(w) = opts.workers {
         cfg.ingress.workers = w.max(1);
+    }
+    if let Some(s) = schedule {
+        // Validate eagerly: the config was checked before this override.
+        if SchedulePolicy::parse(s).is_none() {
+            return Err(Error::Config(format!(
+                "unknown schedule `{s}` (known: fifo, deadline_slack, stage)"
+            )));
+        }
+        // Set BEFORE the system mode applies, so baselines are forced
+        // back to `fifo` (none of them schedules a front door) and the
+        // axis compares NALAR-with-SRTF against NALAR-with-FIFO.
+        cfg.ingress.schedule = s.to_string();
     }
     // Apply the system's serving mode FIRST (for NALAR this fills the
     // default policy trio when the config declares none — pushing ours
@@ -231,35 +286,61 @@ fn run_point(opts: &LoadgenOpts, rps: f64, system: SystemUnderTest) -> Result<Va
     let ingress = Ingress::start(&d, &[opts.workflow]);
     let ingress_policy = ingress.metrics(opts.workflow).map(|m| m.policy).unwrap_or_default();
 
-    let schedule = Arrivals::new(rps, opts.seed ^ rps.to_bits()).schedule(window);
-    let offered = schedule.len() as u64;
+    let arrivals = Arrivals::new(rps, opts.seed ^ rps.to_bits()).schedule(window);
+    let offered = arrivals.len() as u64;
     let sessions: Vec<SessionId> = (0..opts.session_pool.max(1)).map(|_| d.new_session()).collect();
     let mut turns = vec![0u64; sessions.len()];
     let mut rng = Rng::new(opts.seed ^ 0xFEED);
 
     // Open loop: pace submissions on the arrival schedule; never wait for
-    // completions in this loop.
-    let mut tickets = Vec::with_capacity(schedule.len());
+    // completions in this loop. With `--cancel-rate`, a seeded fraction
+    // of admitted requests is withdrawn at a uniform point inside its
+    // deadline window — cancellations fire between arrivals, racing the
+    // scheduler exactly like an impatient caller would.
+    let mut tickets = Vec::with_capacity(arrivals.len());
+    let mut cancels: Vec<(Duration, usize)> = Vec::new(); // (due, ticket index)
     let mut shed = 0u64;
     let start = Instant::now();
-    for at in &schedule {
+    for at in &arrivals {
         let wait = at.saturating_sub(start.elapsed());
         if !wait.is_zero() {
             std::thread::sleep(wait);
         }
-        let progress = (start.elapsed().as_secs_f64() / window.as_secs_f64()).min(1.0);
+        let now = start.elapsed();
+        cancels.retain(|(due, i)| {
+            if *due <= now {
+                let _ = tickets[*i].cancel(); // may lose to completion: fine
+                false
+            } else {
+                true
+            }
+        });
+        let progress = (now.as_secs_f64() / window.as_secs_f64()).min(1.0);
         let sidx = rng.zipf(sessions.len(), 1.1);
         let turn = turns[sidx];
         turns[sidx] += 1;
         let input = input_for(opts.workflow, progress, turn, &mut rng);
         match ingress.submit(opts.workflow, Some(sessions[sidx]), input, timeout) {
-            Ok(t) => tickets.push(t),
+            Ok(t) => {
+                tickets.push(t);
+                if opts.cancel_rate > 0.0 && rng.bool_with(opts.cancel_rate) {
+                    let frac = (rng.next_u64() % 1024) as f64 / 1024.0;
+                    cancels.push((now + timeout.mul_f64(frac), tickets.len() - 1));
+                }
+            }
             Err(_) => shed += 1, // fast retryable rejection, already counted
         }
     }
+    // Cancels due after the offered window fire at window end (the drain
+    // below would otherwise outwait them).
+    for (_, i) in cancels {
+        let _ = tickets[i].cancel();
+    }
 
-    // Drain: every admitted request either completes or hits its deadline
-    // (the scheduler's sweep fails expired work fast, so this terminates).
+    // Drain: every admitted request either completes, hits its deadline
+    // (the scheduler's sweep fails expired work fast, so this terminates)
+    // or was cancelled above. Cancelled requests are excluded from the
+    // latency distributions: they measure caller impatience, not serving.
     let ok_rec = LatencyRecorder::new(); // completions within deadline
     let tail_rec = LatencyRecorder::new(); // + timeouts censored at the deadline
     let mut completed = 0u64;
@@ -273,6 +354,7 @@ fn run_point(opts: &LoadgenOpts, rps: f64, system: SystemUnderTest) -> Result<Va
                 ok_rec.record(lat);
                 tail_rec.record(lat);
             }
+            Err(Error::Cancelled) => {}
             _ => {
                 failed += 1;
                 tail_rec.record(lat.min(timeout));
@@ -281,11 +363,33 @@ fn run_point(opts: &LoadgenOpts, rps: f64, system: SystemUnderTest) -> Result<Va
     }
     // Everything is drained, so the final snapshot splits the failures:
     // `expired_in_queue` never started a driver (queueing shed the work),
-    // the remainder failed in execution (slow driver / agent error).
+    // `cancelled` was withdrawn by its caller, the remainder failed in
+    // execution (slow driver / agent error).
     let m_end = ingress.metrics(opts.workflow).unwrap_or_default();
     let expired_in_queue = m_end.expired_in_queue;
+    let cancelled = m_end.cancelled;
+    // Table-leak gate: with every ticket fulfilled, both scheduler tables
+    // must be empty — a lingering entry is a lifecycle bug (bounded grace
+    // for sweep/poll bookkeeping that runs just after fulfilment).
+    let drained_at = Instant::now();
+    let mut leak = (m_end.in_flight, m_end.depth);
+    while leak != (0, 0) && drained_at.elapsed() < Duration::from_secs(2) {
+        std::thread::sleep(Duration::from_millis(5));
+        let m = ingress.metrics(opts.workflow).unwrap_or_default();
+        leak = (m.in_flight, m.depth);
+    }
     ingress.stop();
     d.shutdown();
+    if leak != (0, 0) {
+        return Err(Error::Msg(format!(
+            "scheduler table leak after full drain: in_flight {} depth {} ({} {} @ {:.0} rps)",
+            leak.0,
+            leak.1,
+            opts.workflow.name(),
+            system.name(),
+            rps,
+        )));
+    }
 
     let paper = 1.0 / time_scale;
     let gput = goodput(completed, window);
@@ -300,6 +404,9 @@ fn run_point(opts: &LoadgenOpts, rps: f64, system: SystemUnderTest) -> Result<Va
         "failed": failed.saturating_sub(expired_in_queue),
         "expired_in_queue": expired_in_queue,
         "shed": shed,
+        "cancelled": cancelled,
+        "cancel_rate": opts.cancel_rate,
+        "schedule": m_end.schedule.as_str(),
         "goodput_rps": gput,
         "goodput_frac": gput / rps,
         "shed_rate": shed_rate(shed, offered),
@@ -339,8 +446,50 @@ mod tests {
         assert!(p.get("completed").as_u64().unwrap() > 0, "nothing completed");
         assert_eq!(p.get("ingress_policy").as_str(), Some("bounded"));
         assert!(p.get("expired_in_queue").as_u64().is_some(), "new-schema field missing");
+        assert_eq!(p.get("cancelled").as_u64(), Some(0), "no --cancel-rate: none cancelled");
+        assert_eq!(p.get("schedule").as_str(), Some("fifo"), "config default ordering");
         assert!(p.get("ingress_workers").as_u64().unwrap() >= 1);
         assert!(p.get("latency").get("p99").as_f64().is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cancel_rate_and_schedule_axis_flow_into_the_report() {
+        let dir = std::env::temp_dir().join(format!("nalar-loadgen-cx-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // One slow worker serializes the burst, so queueing delay dwarfs
+        // service time and a fair share of the seeded cancels land while
+        // their request is still queued or parked.
+        let opts = LoadgenOpts {
+            systems: vec![SystemUnderTest::Nalar],
+            rates: vec![60.0],
+            session_pool: 8,
+            timeout_paper_s: 120.0,
+            time_scale: Some(0.01),
+            workers: Some(1),
+            out_dir: dir.clone(),
+            cancel_rate: 0.5,
+            schedules: Some(vec!["fifo".into(), "deadline_slack".into()]),
+            ..LoadgenOpts::quick(WorkflowKind::Router)
+        };
+        let path = run(&opts).unwrap();
+        let report = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let pts = report.get("points").as_arr().unwrap();
+        assert_eq!(pts.len(), 2, "one point per schedule-axis entry");
+        assert_eq!(pts[0].get("schedule").as_str(), Some("fifo"));
+        assert_eq!(pts[1].get("schedule").as_str(), Some("deadline_slack"));
+        let cancelled: u64 = pts.iter().map(|p| p.get("cancelled").as_u64().unwrap()).sum();
+        assert!(cancelled > 0, "a 50% cancel rate against a backed-up queue must land some");
+        for p in pts {
+            assert_eq!(p.get("cancel_rate").as_f64(), Some(0.5));
+            let offered = p.get("offered").as_u64().unwrap();
+            let accounted = p.get("completed").as_u64().unwrap()
+                + p.get("failed").as_u64().unwrap()
+                + p.get("expired_in_queue").as_u64().unwrap()
+                + p.get("shed").as_u64().unwrap()
+                + p.get("cancelled").as_u64().unwrap();
+            assert_eq!(accounted, offered, "every request has exactly one terminal outcome");
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

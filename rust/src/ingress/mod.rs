@@ -9,7 +9,8 @@
 //! * [`Ingress::submit`] accepts a workflow request asynchronously,
 //!   stamps its [`RequestId`]/[`SessionId`] at admission, and enqueues it
 //!   into a per-workflow bounded queue instead of blocking the caller —
-//!   the returned [`Ticket`] is the caller's completion handle.
+//!   the returned [`Ticket`] is the caller's completion handle, including
+//!   mid-flight withdrawal via [`Ticket::cancel`].
 //! * an [`AdmissionController`] per queue decides accept-vs-shed
 //!   ([`AdmissionPolicy`]: unbounded / bounded / token bucket); shed
 //!   requests fail fast with a retryable [`Error::Shed`].
@@ -23,23 +24,40 @@
 //!   threads is published as telemetry). Deadlines are enforced on parked
 //!   and queued work by a periodic sweep, again without a thread per
 //!   request.
-//! * queue depth and accept/shed/complete counters are pushed into the
-//!   node store (`ingress/{workflow}`), where
+//! * queue pops are **policy-ordered** ([`schedule`], config
+//!   `ingress.schedule`): FIFO, deadline slack (SRTF at the front door —
+//!   pop the request whose deadline minus estimated remaining work is
+//!   tightest) or stage (drain later-stage work first).
+//! * queue depth and accept/shed/complete/cancel counters are pushed into
+//!   the node store (`ingress/{workflow}`), where
 //!   [`crate::coordinator::GlobalController::collect`] aggregates them so
 //!   overload-aware policies (e.g.
 //!   [`crate::coordinator::policies::OverloadProvision`]) can react.
+//!
+//! **Request lifecycle.** A ticket observes exactly one terminal outcome,
+//! however the race between completion, deadline expiry and cancellation
+//! lands (see DESIGN.md §7 for the state machine):
+//!
+//! ```text
+//! submitted ──► queued ──► polling ◄──► parked
+//!                 │           │            │
+//!                 ▼           ▼            ▼
+//!          {expired_in_queue, done, failed, expired, cancelled}
+//! ```
 //!
 //! [`loadgen`] drives this front door with a Poisson arrival process to
 //! produce the `BENCH_rps_sweep.json` saturation curve.
 
 pub mod admission;
 pub mod loadgen;
+pub mod schedule;
 
 pub use admission::{AdmissionController, AdmissionPolicy};
+pub use schedule::SchedulePolicy;
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::IngressMetrics;
@@ -48,7 +66,10 @@ use crate::futures::{FutureCell, Value};
 use crate::ids::{NodeId, RequestId, SessionId};
 use crate::nodestore::keys;
 use crate::server::Deployment;
+use crate::util::clock::Clock;
 use crate::workflow::{driver_for, Driver, Env, Step, WorkflowKind};
+
+use schedule::{pick, Key, StageStats};
 
 /// Completion slot shared between a [`Ticket`] and the scheduler.
 struct TicketCell {
@@ -71,14 +92,21 @@ impl TicketCell {
         })
     }
 
-    fn fulfil(&self, result: Result<Value>, latency: Duration) {
+    /// Install the terminal outcome. Returns true iff *this* call won:
+    /// completion, deadline expiry and cancellation may race, and whoever
+    /// loses must not double-count — the ticket has exactly one terminal
+    /// state and the counters agree with it.
+    fn fulfil(&self, result: Result<Value>, latency: Duration) -> bool {
         let mut g = self.slot.lock().unwrap();
-        if !g.done {
+        let first = !g.done;
+        if first {
             g.done = true;
             g.result = Some(result);
             g.latency = Some(latency);
         }
+        drop(g);
         self.cv.notify_all();
+        first
     }
 }
 
@@ -88,6 +116,12 @@ pub struct Ticket {
     pub request: RequestId,
     pub session: SessionId,
     cell: Arc<TicketCell>,
+    /// Workflow-queue index, so `cancel` knows where to look.
+    idx: usize,
+    /// Back-reference to the scheduler (weak: a ticket outliving its
+    /// ingress must not keep the scheduler alive, and `cancel` on a dead
+    /// ingress is a no-op).
+    inner: Weak<IngressInner>,
 }
 
 impl Ticket {
@@ -116,13 +150,36 @@ impl Ticket {
     pub fn latency(&self) -> Option<Duration> {
         self.cell.slot.lock().unwrap().latency
     }
+
+    /// Withdraw the request: atomically remove it from whichever
+    /// scheduler table holds it (admission queue, ready queue or
+    /// parked-continuation table), fail its outstanding futures, and
+    /// fulfil the ticket with the non-retryable [`Error::Cancelled`].
+    ///
+    /// Returns true if the cancellation was *delivered* — the request was
+    /// still live somewhere. Delivery racing a concurrent completion or
+    /// deadline expiry is resolved by table ownership: exactly one
+    /// terminal outcome ever lands on the ticket (read it from
+    /// [`Self::wait`]). A cancel after the request finished (or a second
+    /// cancel) returns false and changes nothing. Agent calls already
+    /// executing on an engine are not interrupted — their futures are
+    /// failed so nothing consumes them, and their late results are
+    /// dropped (§5: report, don't mask).
+    pub fn cancel(&self) -> bool {
+        match self.inner.upgrade() {
+            Some(inner) => inner.cancel(self.idx, self.request),
+            None => false,
+        }
+    }
 }
 
-/// One admitted request waiting to start (no driver built yet).
+/// One admitted request waiting to start (driver not yet built, unless
+/// the caller handed one in via [`Ingress::submit_driver`]).
 struct Queued {
     session: SessionId,
     request: RequestId,
     input: Value,
+    driver: Option<Box<dyn Driver>>,
     submitted: Instant,
     deadline: Instant,
     timeout: Duration,
@@ -131,8 +188,8 @@ struct Queued {
 
 /// One started request: a stored continuation, not a thread's stack. This
 /// is the representation the two-level control plane needs for everything
-/// downstream — it can be parked, re-enqueued, expired, (eventually)
-/// cancelled or migrated, all without owning a thread.
+/// downstream — it can be parked, re-enqueued, expired, cancelled or
+/// (eventually) migrated, all without owning a thread.
 struct InFlight {
     idx: usize,
     request: RequestId,
@@ -147,6 +204,13 @@ struct InFlight {
     /// cycles doesn't accumulate duplicate wakers (and their spurious
     /// re-polls) on its slowest futures.
     subscribed: HashSet<u64>,
+    /// Deepest stage the driver has reported ([`Driver::stage`]) — the
+    /// scheduling key for `stage` ordering and the lookup key for the
+    /// `deadline_slack` remaining-work estimate.
+    stage: u32,
+    /// When the request entered each stage; folded into [`StageStats`]
+    /// at (successful) completion.
+    stage_entered: Vec<(u32, Instant)>,
 }
 
 /// A request whose deadline expired before completion, collected by the
@@ -156,9 +220,10 @@ struct Lapsed {
     submitted: Instant,
     timeout: Duration,
     cell: Arc<TicketCell>,
-    /// True if it never started (still in the admission queue) —
-    /// `expired_in_queue`, not an execution failure.
-    in_queue: bool,
+    /// `Some` if the request had started (a driver ran and may have
+    /// outstanding futures to bulk-fail); `None` for in-queue expiries,
+    /// which never issued a call.
+    request: Option<RequestId>,
 }
 
 /// Scheduler state under one lock: admission queues feed the in-flight
@@ -167,13 +232,19 @@ struct SchedState {
     /// One deque per entry of `kinds`; contention is negligible at
     /// front-door rates and a single lock keeps pop-fairness trivial.
     queues: Vec<VecDeque<Queued>>,
-    /// Runnable continuations (woken or freshly admitted).
+    /// Runnable continuations (woken or freshly admitted). Pop order is
+    /// the configured [`SchedulePolicy`], not necessarily front-first.
     ready: VecDeque<InFlight>,
     /// Suspended continuations keyed by `RequestId.0`, waiting on wakers.
     parked: HashMap<u64, InFlight>,
     /// Wakeups that arrived while their request was being polled (it was
     /// neither parked nor ready); consumed when the poll finishes.
     woken: HashSet<u64>,
+    /// Cancellations that arrived while their request was being polled —
+    /// the only moment a request is in no table. Consumed when the poll
+    /// finishes: a `Pending` result turns into the cancel outcome
+    /// instead of parking; a `Done` result means completion won the race.
+    cancelled: HashSet<u64>,
     /// Parked continuations with nothing to subscribe to (a
     /// shouldn't-happen): the next sweep re-polls them — a bounded 0..5ms
     /// backoff instead of a hot requeue loop.
@@ -200,14 +271,27 @@ enum Task {
     Admit(usize, Queued),
 }
 
-/// Sizing for the event-driven scheduler.
-#[derive(Debug, Clone, Copy)]
+/// Sizing + policy for the event-driven scheduler.
+#[derive(Debug, Clone)]
 pub struct SchedulerOpts {
     /// OS threads multiplexing the in-flight table.
     pub workers: usize,
     /// Concurrent started requests (the backpressure bound: admission
     /// queues only drain while in-flight is below this).
     pub max_in_flight: usize,
+    /// Queue-pop ordering override; `None` = the deployment config's
+    /// `ingress.schedule`.
+    pub schedule: Option<SchedulePolicy>,
+    /// Time source. Production uses the wall clock; deterministic
+    /// scheduler tests inject [`crate::testkit::Clock::manual`] so
+    /// deadlines and sweeps are driven by `advance()`, not `sleep()`.
+    pub clock: Clock,
+}
+
+impl SchedulerOpts {
+    pub fn new(workers: usize, max_in_flight: usize) -> SchedulerOpts {
+        SchedulerOpts { workers, max_in_flight, schedule: None, clock: Clock::wall() }
+    }
 }
 
 /// Telemetry publish throttle — same cadence as the component
@@ -231,6 +315,15 @@ struct IngressInner {
     /// Deadline expiries that never started a driver (satellite metric:
     /// distinguishable from execution failures in the sweep schema).
     expired_in_queue: Vec<AtomicU64>,
+    /// Requests withdrawn via [`Ticket::cancel`] before any other
+    /// terminal outcome landed.
+    cancelled: Vec<AtomicU64>,
+    /// Per-workflow per-stage time-to-completion EWMAs — the
+    /// `deadline_slack` policy's remaining-work estimate. Locked after
+    /// `sched` when both are needed (never the other way around).
+    stage_stats: Vec<Mutex<StageStats>>,
+    schedule: SchedulePolicy,
+    clock: Clock,
     workers: usize,
     max_in_flight: usize,
     last_publish: Vec<Mutex<Instant>>,
@@ -240,6 +333,11 @@ struct IngressInner {
 impl IngressInner {
     fn kind_index(&self, kind: WorkflowKind) -> Option<usize> {
         self.kinds.iter().position(|k| *k == kind)
+    }
+
+    /// Submit-to-now on the scheduler's clock (virtual in tests).
+    fn since(&self, submitted: Instant) -> Duration {
+        self.clock.now().saturating_duration_since(submitted)
     }
 
     /// One queue's telemetry snapshot (shared by [`Ingress::metrics`] and
@@ -257,11 +355,13 @@ impl IngressInner {
             workers: self.workers,
             cap: adm.policy().cap(),
             policy: adm.policy().name().to_string(),
+            schedule: self.schedule.name().to_string(),
             accepted: adm.accepted.load(Ordering::Relaxed),
             shed: adm.shed.load(Ordering::Relaxed),
             completed: self.completed[idx].load(Ordering::Relaxed),
             failed: self.failed[idx].load(Ordering::Relaxed),
             expired_in_queue: self.expired_in_queue[idx].load(Ordering::Relaxed),
+            cancelled: self.cancelled[idx].load(Ordering::Relaxed),
         }
     }
 
@@ -286,6 +386,44 @@ impl IngressInner {
         self.publish(idx);
     }
 
+    /// Pop the next ready continuation per the scheduling policy. The
+    /// slack estimate is re-read against the current `now` on every pop —
+    /// pushed-time priorities would go stale while a request sat ready.
+    fn pop_ready(&self, s: &mut SchedState, now: Instant) -> Option<InFlight> {
+        if s.ready.is_empty() {
+            return None;
+        }
+        let chosen = pick(
+            self.schedule,
+            now,
+            s.ready.iter().map(|f| Key {
+                deadline: f.deadline,
+                stage: f.stage,
+                est_remaining: self.stage_stats[f.idx].lock().unwrap().estimate(f.stage),
+            }),
+        )?;
+        s.ready.remove(chosen)
+    }
+
+    /// Pop the next admission-queue entry of workflow `idx` per the
+    /// scheduling policy. Queued requests are all stage 0, so `stage`
+    /// ordering degrades to FIFO here and `deadline_slack` to EDF with a
+    /// whole-request estimate.
+    fn pop_queued(&self, s: &mut SchedState, idx: usize, now: Instant) -> Option<Queued> {
+        if s.queues[idx].is_empty() {
+            return None;
+        }
+        let est = self.stage_stats[idx].lock().unwrap().estimate(0);
+        let chosen = pick(
+            self.schedule,
+            now,
+            s.queues[idx]
+                .iter()
+                .map(|j| Key { deadline: j.deadline, stage: 0, est_remaining: est }),
+        )?;
+        s.queues[idx].remove(chosen)
+    }
+
     /// Scheduler worker: multiplexes the in-flight table. Priority order
     /// per iteration: overdue deadline sweep, then woken continuations,
     /// then admission (bounded by `max_in_flight`), else park on the
@@ -300,7 +438,7 @@ impl IngressInner {
                 if self.stop.load(Ordering::Relaxed) {
                     return;
                 }
-                let now = Instant::now();
+                let now = self.clock.now();
                 if now >= s.next_sweep {
                     s.next_sweep = now + SWEEP_PERIOD;
                     Self::collect_lapsed(&mut s, now, &mut lapsed);
@@ -313,14 +451,14 @@ impl IngressInner {
                         }
                     }
                 }
-                if let Some(f) = s.ready.pop_front() {
+                if let Some(f) = self.pop_ready(&mut s, now) {
                     Some(Task::Poll(f))
                 } else {
                     let mut admitted = None;
                     if s.total_in_flight() < self.max_in_flight {
                         for i in 0..nkinds {
                             let idx = (rot + i) % nkinds;
-                            if let Some(job) = s.queues[idx].pop_front() {
+                            if let Some(job) = self.pop_queued(&mut s, idx, now) {
                                 admitted = Some((idx, job));
                                 break;
                             }
@@ -370,7 +508,7 @@ impl IngressInner {
                         submitted: job.submitted,
                         timeout: job.timeout,
                         cell: job.cell,
-                        in_queue: true,
+                        request: None,
                     });
                 } else {
                     kept.push_back(job);
@@ -378,55 +516,166 @@ impl IngressInner {
             }
             *q = kept;
         }
+        // Ready entries expire too: a non-FIFO policy (`stage`) may defer
+        // an expired entry's pop indefinitely, and an expired request must
+        // not squat on an in-flight slot until the queue happens to drain.
+        let mut i = 0;
+        while i < s.ready.len() {
+            if s.ready[i].deadline <= now {
+                let f = s.ready.remove(i).expect("index in bounds");
+                s.live.remove(&f.request.0);
+                s.woken.remove(&f.request.0);
+                s.cancelled.remove(&f.request.0);
+                s.in_flight[f.idx] -= 1;
+                out.push(Lapsed {
+                    idx: f.idx,
+                    submitted: f.submitted,
+                    timeout: f.timeout,
+                    cell: f.cell,
+                    request: Some(f.request),
+                });
+            } else {
+                i += 1;
+            }
+        }
         let overdue: Vec<u64> =
             s.parked.iter().filter(|(_, f)| f.deadline <= now).map(|(k, _)| *k).collect();
         for rid in overdue {
             let f = s.parked.remove(&rid).expect("collected above");
             s.live.remove(&rid);
             s.woken.remove(&rid);
+            s.cancelled.remove(&rid);
             s.in_flight[f.idx] -= 1;
             out.push(Lapsed {
                 idx: f.idx,
                 submitted: f.submitted,
                 timeout: f.timeout,
                 cell: f.cell,
-                in_queue: false,
+                request: Some(f.request),
             });
         }
     }
 
     /// Fail expired work fast: queued expiries count as `expired_in_queue`
-    /// (the driver never ran), parked expiries as execution failures.
+    /// (the driver never ran), parked expiries as execution failures. A
+    /// started request's outstanding futures are bulk-failed exactly like
+    /// a cancel's — expiry is the same abandonment, and dead calls must
+    /// not keep occupying engine queue slots (or holding wakers open). A
+    /// cancel that won the race first keeps its outcome — `fulfil`
+    /// arbitrates, the counters follow the winner.
     fn fail_lapsed(&self, lapsed: Vec<Lapsed>) {
         for l in lapsed {
-            if l.in_queue {
-                self.expired_in_queue[l.idx].fetch_add(1, Ordering::Relaxed);
-            } else {
-                self.failed[l.idx].fetch_add(1, Ordering::Relaxed);
+            if let Some(request) = l.request {
+                self.d.table().fail_request(request, "request deadline expired");
             }
-            l.cell.fulfil(Err(Error::Deadline(l.timeout)), l.submitted.elapsed());
+            let waited = self.since(l.submitted);
+            if l.cell.fulfil(Err(Error::Deadline(l.timeout)), waited) {
+                if l.request.is_none() {
+                    self.expired_in_queue[l.idx].fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.failed[l.idx].fetch_add(1, Ordering::Relaxed);
+                }
+            }
             self.maybe_publish(l.idx);
         }
     }
 
-    /// Start one admitted request: build its resumable driver and poll it.
-    /// (`this` instead of a receiver: wakers need the `Arc` to clone.)
-    fn admit(this: &Arc<Self>, idx: usize, job: Queued) {
-        if Instant::now() >= job.deadline {
+    /// [`Ticket::cancel`] target: remove the request from whichever table
+    /// holds it and fulfil the ticket with `Error::Cancelled`. Returns
+    /// true if the cancellation was delivered (the request was still
+    /// live). Exactly-one-terminal-outcome holds because every terminal
+    /// path owns its entry exclusively: a request is in at most one of
+    /// {queue, ready, parked, being-polled}, and removal happens under
+    /// the scheduler lock.
+    fn cancel(&self, idx: usize, request: RequestId) -> bool {
+        let rid = request.0;
+        enum Found {
+            Queued(Queued),
+            Started(InFlight),
+            /// Mid-poll mark; the payload is whether *this* call set it
+            /// (a second cancel in the same window must report false).
+            Polling(bool),
+            Gone,
+        }
+        let found = {
+            let mut s = self.sched.lock().unwrap();
+            if let Some(pos) = s.queues[idx].iter().position(|j| j.request.0 == rid) {
+                Found::Queued(s.queues[idx].remove(pos).expect("position just found"))
+            } else if let Some(f) = s.parked.remove(&rid) {
+                s.live.remove(&rid);
+                s.woken.remove(&rid);
+                s.in_flight[f.idx] -= 1;
+                Found::Started(f)
+            } else if let Some(pos) = s.ready.iter().position(|f| f.request.0 == rid) {
+                let f = s.ready.remove(pos).expect("position just found");
+                s.live.remove(&rid);
+                s.woken.remove(&rid);
+                s.in_flight[f.idx] -= 1;
+                Found::Started(f)
+            } else if s.live.contains(&rid) {
+                // Being polled right now — the only moment a live request
+                // is in no table. Leave a mark the poller consumes when
+                // the poll finishes (a Done poll means completion won).
+                Found::Polling(s.cancelled.insert(rid))
+            } else {
+                Found::Gone
+            }
+        };
+        match found {
+            Found::Queued(job) => {
+                if job.cell.fulfil(Err(Error::Cancelled), self.since(job.submitted)) {
+                    self.cancelled[idx].fetch_add(1, Ordering::Relaxed);
+                }
+                self.maybe_publish(idx);
+                true
+            }
+            Found::Started(f) => {
+                self.finish_cancelled(f);
+                true
+            }
+            Found::Polling(delivered) => delivered,
+            Found::Gone => false,
+        }
+    }
+
+    /// Terminal path for a cancelled started request (entry already
+    /// removed from the tables and gauges): bulk-fail its outstanding
+    /// futures so nothing downstream waits on withdrawn work, fulfil the
+    /// ticket, free the in-flight slot.
+    fn finish_cancelled(&self, f: InFlight) {
+        self.d.table().fail_request(f.request, "request cancelled");
+        if f.cell.fulfil(Err(Error::Cancelled), self.since(f.submitted)) {
+            self.cancelled[f.idx].fetch_add(1, Ordering::Relaxed);
+        }
+        self.maybe_publish(f.idx);
+        self.cv.notify_one(); // in-flight capacity freed
+    }
+
+    /// Start one admitted request: build its resumable driver (unless the
+    /// submitter handed one in) and poll it. (`this` instead of a
+    /// receiver: wakers need the `Arc` to clone.)
+    fn admit(this: &Arc<Self>, idx: usize, mut job: Queued) {
+        let now = this.clock.now();
+        if now >= job.deadline {
             // expired while queued: fail fast, never build the driver
-            this.expired_in_queue[idx].fetch_add(1, Ordering::Relaxed);
             {
                 let mut s = this.sched.lock().unwrap();
                 s.live.remove(&job.request.0);
+                s.cancelled.remove(&job.request.0);
                 s.in_flight[idx] -= 1;
             }
-            job.cell.fulfil(Err(Error::Deadline(job.timeout)), job.submitted.elapsed());
+            if job.cell.fulfil(Err(Error::Deadline(job.timeout)), this.since(job.submitted)) {
+                this.expired_in_queue[idx].fetch_add(1, Ordering::Relaxed);
+            }
             this.maybe_publish(idx);
             this.cv.notify_one(); // in-flight capacity freed
             return;
         }
         let env = Env::with_request(&this.d, job.session, job.request);
-        let driver = driver_for(this.kinds[idx], &job.input);
+        let driver = match job.driver.take() {
+            Some(driver) => driver,
+            None => driver_for(this.kinds[idx], &job.input),
+        };
         Self::run_poll(
             this,
             InFlight {
@@ -439,6 +688,8 @@ impl IngressInner {
                 timeout: job.timeout,
                 cell: job.cell,
                 subscribed: HashSet::new(),
+                stage: 0,
+                stage_entered: vec![(0, now)],
             },
         );
     }
@@ -446,8 +697,11 @@ impl IngressInner {
     /// Poll one continuation: advance it as far as readiness allows, then
     /// either finish it or park it under waker subscriptions.
     fn run_poll(this: &Arc<Self>, mut f: InFlight) {
-        if Instant::now() >= f.deadline {
+        if this.clock.now() >= f.deadline {
             let timeout = f.timeout;
+            // same abandonment as the sweep path: dead calls must not
+            // keep engine slots or wakers alive
+            this.d.table().fail_request(f.request, "request deadline expired");
             this.finish(f, Err(Error::Deadline(timeout)));
             return;
         }
@@ -455,6 +709,14 @@ impl IngressInner {
             Step::Done(result) => this.finish(f, result),
             Step::Pending { waiting_on } => {
                 let rid = f.request.0;
+                // Track stage progress for the scheduling policies (the
+                // driver advanced as far as readiness allowed before
+                // suspending, so `stage()` is current).
+                let stage = f.driver.stage();
+                if stage > f.stage {
+                    f.stage = stage;
+                    f.stage_entered.push((stage, this.clock.now()));
+                }
                 // Resolve the not-yet-subscribed cells *before* parking:
                 // once parked, another worker may take the continuation at
                 // any moment. Already-subscribed futures keep their
@@ -472,12 +734,20 @@ impl IngressInner {
                         can_wake = true;
                     }
                 }
-                {
+                let cancelled = {
                     let mut s = this.sched.lock().unwrap();
-                    if s.woken.remove(&rid) {
+                    if s.cancelled.remove(&rid) {
+                        // a cancel landed mid-poll: this request parks
+                        // nowhere — it is terminal now
+                        s.live.remove(&rid);
+                        s.woken.remove(&rid);
+                        s.in_flight[f.idx] -= 1;
+                        Some(f)
+                    } else if s.woken.remove(&rid) {
                         // a waker fired mid-poll: run again rather than
                         // risk a lost wakeup
                         s.ready.push_back(f);
+                        None
                     } else {
                         s.parked.insert(rid, f);
                         if !can_wake {
@@ -486,14 +756,26 @@ impl IngressInner {
                             // sweep re-poll it instead of hot-spinning
                             s.nudge.push(rid);
                         }
+                        None
                     }
+                };
+                if let Some(f) = cancelled {
+                    this.finish_cancelled(f);
+                    return;
                 }
                 // Subscribe after parking: a future that resolved in the
                 // gap fires the waker inline, which finds the parked entry
-                // and moves it to ready — no wakeup is lost.
+                // and moves it to ready — no wakeup is lost. The waker
+                // holds a Weak ref: a strong one would cycle (table →
+                // cell → waker → scheduler → deployment → table) and leak
+                // the whole deployment through any never-terminal cell.
                 for cell in cells {
-                    let inner = this.clone();
-                    cell.subscribe(Box::new(move || inner.wake(rid)));
+                    let inner = Arc::downgrade(this);
+                    cell.subscribe(Box::new(move || {
+                        if let Some(inner) = inner.upgrade() {
+                            inner.wake(rid);
+                        }
+                    }));
                 }
             }
         }
@@ -516,17 +798,28 @@ impl IngressInner {
 
     /// Account and fulfil one finished request.
     fn finish(&self, f: InFlight, result: Result<Value>) {
-        match &result {
-            Ok(_) => self.completed[f.idx].fetch_add(1, Ordering::Relaxed),
-            Err(_) => self.failed[f.idx].fetch_add(1, Ordering::Relaxed),
-        };
         {
             let mut s = self.sched.lock().unwrap();
             s.live.remove(&f.request.0);
             s.woken.remove(&f.request.0);
+            s.cancelled.remove(&f.request.0); // completion won the race
             s.in_flight[f.idx] -= 1;
         }
-        f.cell.fulfil(result, f.submitted.elapsed());
+        let now = self.clock.now();
+        let ok = result.is_ok();
+        if ok {
+            // Feed the per-stage remaining-time stats (successes only:
+            // failures truncate "remaining" and would teach the slack
+            // policy that doomed requests finish fast).
+            let mut stats = self.stage_stats[f.idx].lock().unwrap();
+            for (stage, entered) in &f.stage_entered {
+                stats.observe(*stage, now.saturating_duration_since(*entered));
+            }
+        }
+        if f.cell.fulfil(result, now.saturating_duration_since(f.submitted)) {
+            let ctr = if ok { &self.completed } else { &self.failed };
+            ctr[f.idx].fetch_add(1, Ordering::Relaxed);
+        }
         self.maybe_publish(f.idx);
         self.cv.notify_one(); // in-flight capacity freed: admit more
     }
@@ -547,7 +840,7 @@ impl Ingress {
     }
 
     /// Start with an explicit admission policy and scheduler thread count
-    /// (`max_in_flight` comes from the deployment config).
+    /// (everything else comes from the deployment config).
     pub fn start_with(
         d: &Deployment,
         kinds: &[WorkflowKind],
@@ -555,10 +848,10 @@ impl Ingress {
         workers: usize,
     ) -> Ingress {
         let max_in_flight = d.cfg().ingress.max_in_flight;
-        Self::start_with_opts(d, kinds, policy, SchedulerOpts { workers, max_in_flight })
+        Self::start_with_opts(d, kinds, policy, SchedulerOpts::new(workers, max_in_flight))
     }
 
-    /// Start with explicit scheduler sizing.
+    /// Start with explicit scheduler sizing, scheduling policy and clock.
     pub fn start_with_opts(
         d: &Deployment,
         kinds: &[WorkflowKind],
@@ -567,6 +860,9 @@ impl Ingress {
     ) -> Ingress {
         assert!(!kinds.is_empty(), "ingress needs at least one workflow");
         let workers = opts.workers.max(1);
+        let schedule =
+            opts.schedule.unwrap_or_else(|| SchedulePolicy::from_settings(&d.cfg().ingress));
+        let clock = opts.clock.clone();
         let inner = Arc::new(IngressInner {
             d: d.clone(),
             kinds: kinds.to_vec(),
@@ -575,16 +871,21 @@ impl Ingress {
                 ready: VecDeque::new(),
                 parked: HashMap::new(),
                 woken: HashSet::new(),
+                cancelled: HashSet::new(),
                 nudge: Vec::new(),
                 live: HashSet::new(),
                 in_flight: vec![0; kinds.len()],
-                next_sweep: Instant::now() + SWEEP_PERIOD,
+                next_sweep: clock.now() + SWEEP_PERIOD,
             }),
             cv: Condvar::new(),
             admission: kinds.iter().map(|_| AdmissionController::new(policy.clone())).collect(),
             completed: kinds.iter().map(|_| AtomicU64::new(0)).collect(),
             failed: kinds.iter().map(|_| AtomicU64::new(0)).collect(),
             expired_in_queue: kinds.iter().map(|_| AtomicU64::new(0)).collect(),
+            cancelled: kinds.iter().map(|_| AtomicU64::new(0)).collect(),
+            stage_stats: kinds.iter().map(|_| Mutex::new(StageStats::new())).collect(),
+            schedule,
+            clock,
             workers,
             max_in_flight: opts.max_in_flight.max(1),
             last_publish: kinds.iter().map(|_| Mutex::new(Instant::now())).collect(),
@@ -617,6 +918,33 @@ impl Ingress {
         input: Value,
         timeout: Duration,
     ) -> Result<Ticket> {
+        self.submit_inner(kind, session, input, None, timeout)
+    }
+
+    /// Like [`Self::submit`], but with a caller-built [`Driver`] instead
+    /// of the workflow's standard one — the serving-side analog of
+    /// "drivers are ordinary code": any resumable state machine can be
+    /// admitted, scheduled, expired and cancelled like the built-ins.
+    /// (The deterministic scheduler tests inject
+    /// [`crate::testkit::ScriptedEngine`] drivers through this.)
+    pub fn submit_driver(
+        &self,
+        kind: WorkflowKind,
+        session: Option<SessionId>,
+        driver: Box<dyn Driver>,
+        timeout: Duration,
+    ) -> Result<Ticket> {
+        self.submit_inner(kind, session, Value::Null, Some(driver), timeout)
+    }
+
+    fn submit_inner(
+        &self,
+        kind: WorkflowKind,
+        session: Option<SessionId>,
+        input: Value,
+        driver: Option<Box<dyn Driver>>,
+        timeout: Duration,
+    ) -> Result<Ticket> {
         let inner = &self.inner;
         let idx = inner
             .kind_index(kind)
@@ -630,22 +958,32 @@ impl Ingress {
             if inner.stop.load(Ordering::Relaxed) {
                 return Err(Error::Shed(kind.name().into(), "ingress stopped".into()));
             }
-            match inner.admission[idx].admit(s.queues[idx].len()) {
+            // `admit_at` against the scheduler's clock: a token bucket
+            // must refill on the same time axis deadlines run on, or
+            // virtual-clock tests get wall-clock-dependent verdicts.
+            match inner.admission[idx].admit_at(s.queues[idx].len(), inner.clock.now()) {
                 Ok(()) => {
                     let session = session.unwrap_or_else(|| inner.d.new_session());
                     let request = inner.d.new_request_id();
                     let cell = TicketCell::new();
-                    let now = Instant::now();
+                    let now = inner.clock.now();
                     s.queues[idx].push_back(Queued {
                         session,
                         request,
                         input,
+                        driver,
                         submitted: now,
                         deadline: now + timeout,
                         timeout,
                         cell: cell.clone(),
                     });
-                    Ok(Ticket { request, session, cell })
+                    Ok(Ticket {
+                        request,
+                        session,
+                        cell,
+                        idx,
+                        inner: Arc::downgrade(&self.inner),
+                    })
                 }
                 Err(reason) => Err(Error::Shed(kind.name().into(), reason)),
             }
@@ -708,20 +1046,23 @@ impl Ingress {
                 s.in_flight[f.idx] -= 1;
             }
             s.woken.clear();
+            s.cancelled.clear();
             s.nudge.clear();
             (queued, inflight)
         };
         for (idx, job) in queued {
-            self.inner.failed[idx].fetch_add(1, Ordering::Relaxed);
             let kind = self.inner.kinds[idx].name().to_string();
-            let waited = job.submitted.elapsed();
-            job.cell.fulfil(Err(Error::Shed(kind, "ingress stopped".into())), waited);
+            let waited = self.inner.since(job.submitted);
+            if job.cell.fulfil(Err(Error::Shed(kind, "ingress stopped".into())), waited) {
+                self.inner.failed[idx].fetch_add(1, Ordering::Relaxed);
+            }
         }
         for f in inflight {
-            self.inner.failed[f.idx].fetch_add(1, Ordering::Relaxed);
             let kind = self.inner.kinds[f.idx].name().to_string();
-            let waited = f.submitted.elapsed();
-            f.cell.fulfil(Err(Error::Shed(kind, "ingress stopped".into())), waited);
+            let waited = self.inner.since(f.submitted);
+            if f.cell.fulfil(Err(Error::Shed(kind, "ingress stopped".into())), waited) {
+                self.inner.failed[f.idx].fetch_add(1, Ordering::Relaxed);
+            }
         }
         for idx in 0..self.inner.kinds.len() {
             self.inner.publish(idx);
@@ -739,6 +1080,7 @@ impl Drop for Ingress {
 mod tests {
     use super::*;
     use crate::json;
+    use crate::testkit::ScriptedEngine;
 
     fn fast_router() -> Deployment {
         let mut cfg = WorkflowKind::Router.config();
@@ -768,8 +1110,10 @@ mod tests {
         assert_eq!(m.accepted, 8);
         assert_eq!(m.completed, 8);
         assert_eq!(m.shed, 0);
+        assert_eq!(m.cancelled, 0);
         assert_eq!(m.in_flight, 0, "everything drained");
         assert_eq!(m.workers, 4);
+        assert_eq!(m.schedule, "fifo", "configs default to FIFO");
         // distinct request ids were stamped at admission
         let mut ids: Vec<u64> = tickets.iter().map(|t| t.request.0).collect();
         ids.sort_unstable();
@@ -790,7 +1134,7 @@ mod tests {
             &d,
             &[WorkflowKind::Router],
             AdmissionPolicy::Bounded { cap },
-            SchedulerOpts { workers: 1, max_in_flight: 2 },
+            SchedulerOpts::new(1, 2),
         );
         let timeout = Duration::from_secs(30);
         let mut tickets = Vec::new();
@@ -864,9 +1208,11 @@ mod tests {
         assert_eq!(ingress.accepted, 4);
         assert_eq!(ingress.completed, 4);
         assert_eq!(ingress.policy, "bounded");
+        assert_eq!(ingress.schedule, "fifo", "scheduling policy must reach policies");
         assert_eq!(ingress.cap, 64);
         assert_eq!(ingress.workers, 2, "thread gauge must reach policies");
         assert_eq!(ingress.expired_in_queue, 0);
+        assert_eq!(ingress.cancelled, 0);
         d.shutdown();
     }
 
@@ -900,6 +1246,52 @@ mod tests {
             .submit(WorkflowKind::Swe, None, json!({"task": "t"}), Duration::from_secs(1))
             .unwrap_err();
         assert!(matches!(err, Error::Config(..)), "{err}");
+        ing.stop();
+        d.shutdown();
+    }
+
+    #[test]
+    fn custom_drivers_ride_the_same_front_door() {
+        let d = fast_router();
+        let ing = Ingress::start_with(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, 2);
+        let eng = ScriptedEngine::new();
+        let timeout = Duration::from_secs(10);
+        let t = ing
+            .submit_driver(WorkflowKind::Router, None, eng.driver("custom", 1), timeout)
+            .unwrap();
+        assert!(eng.wait_created(1, Duration::from_secs(5)), "scripted call must be issued");
+        eng.cell(0).resolve(json!("done"), 0);
+        let out = t.wait(Duration::from_secs(5)).unwrap();
+        assert_eq!(out.get("scripted").as_str(), Some("custom"));
+        let m = ing.metrics(WorkflowKind::Router).unwrap();
+        assert_eq!(m.completed, 1);
+        ing.stop();
+        d.shutdown();
+    }
+
+    #[test]
+    fn cancel_of_a_parked_request_is_terminal_and_fails_its_futures() {
+        let d = fast_router();
+        let ing = Ingress::start_with(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, 2);
+        let eng = ScriptedEngine::new();
+        let timeout = Duration::from_secs(30);
+        let t = ing
+            .submit_driver(WorkflowKind::Router, None, eng.driver("doomed", 1), timeout)
+            .unwrap();
+        assert!(eng.wait_created(1, Duration::from_secs(5)));
+        assert!(t.cancel(), "a parked request must be cancellable");
+        let err = t.wait(Duration::from_secs(5)).unwrap_err();
+        assert!(matches!(err, Error::Cancelled), "{err}");
+        assert!(!err.retryable());
+        assert!(!t.cancel(), "second cancel finds nothing");
+        // the outstanding scripted future was bulk-failed
+        assert!(eng.cell(0).try_value().unwrap().is_err());
+        let m = ing.metrics(WorkflowKind::Router).unwrap();
+        assert_eq!(m.cancelled, 1);
+        assert_eq!(m.completed, 0);
+        assert_eq!(m.failed, 0, "cancellation is not an execution failure");
+        assert_eq!(m.in_flight, 0, "no table leak");
+        assert_eq!(m.depth, 0);
         ing.stop();
         d.shutdown();
     }

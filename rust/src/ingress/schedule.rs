@@ -1,0 +1,281 @@
+//! Front-door scheduling: policy-selectable ordering for the ingress
+//! ready/admission queues.
+//!
+//! PR 3 turned every in-flight request into a stored continuation, which
+//! made the ready queue *a queue of requests the scheduler owns* — and a
+//! FIFO pop is then just one policy among several. This module is the
+//! ROADMAP's "order wakeups by deadline slack or graph stage" item:
+//!
+//! * [`SchedulePolicy::Fifo`] — arrival order (the baseline discipline).
+//! * [`SchedulePolicy::DeadlineSlack`] — pop the minimum
+//!   `deadline − now − estimated_remaining`: SRTF at the ingress layer.
+//!   The remaining-work estimate comes from [`StageStats`], per-stage
+//!   time-to-completion EWMAs learned from finished requests; until a
+//!   stage has samples the estimate is zero and the policy degrades to
+//!   EDF (earliest deadline first), which is already deadline-aware.
+//! * [`SchedulePolicy::Stage`] — drain later-stage work first (a pure
+//!   least-remaining-stages heuristic, no clock needed).
+//!
+//! [`pick`] is a pure function of (policy, now, keys) so ordering is unit
+//! tested without threads, clocks or a deployment. The linear scan is
+//! deliberate: the ready queue holds *woken* requests (typically a few),
+//! not all parked ones, and a scan re-evaluates slack against a fresh
+//! `now` every pop — a heap keyed at push time would act on stale slack.
+
+use std::time::{Duration, Instant};
+
+use crate::config::IngressSettings;
+
+/// Which ordering the front door pops queues in. See module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulePolicy {
+    Fifo,
+    DeadlineSlack,
+    Stage,
+}
+
+impl SchedulePolicy {
+    /// Parse a config/CLI name ("fifo" | "deadline_slack" | "stage").
+    pub fn parse(s: &str) -> Option<SchedulePolicy> {
+        match s {
+            "fifo" => Some(SchedulePolicy::Fifo),
+            "deadline_slack" => Some(SchedulePolicy::DeadlineSlack),
+            "stage" => Some(SchedulePolicy::Stage),
+            _ => None,
+        }
+    }
+
+    /// Resolve the configured policy (`DeploymentConfig.ingress`);
+    /// unknown names fall back to FIFO (config validation rejects them
+    /// before a deployment ever launches).
+    pub fn from_settings(s: &IngressSettings) -> SchedulePolicy {
+        Self::parse(&s.schedule).unwrap_or(SchedulePolicy::Fifo)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulePolicy::Fifo => "fifo",
+            SchedulePolicy::DeadlineSlack => "deadline_slack",
+            SchedulePolicy::Stage => "stage",
+        }
+    }
+}
+
+/// One candidate's scheduling key (position in the queue = iteration
+/// order, which FIFO and all tie-breaks preserve).
+#[derive(Debug, Clone, Copy)]
+pub struct Key {
+    pub deadline: Instant,
+    pub stage: u32,
+    /// Estimated time to completion from the request's current stage
+    /// (`None` = no samples yet: treated as zero, i.e. EDF).
+    pub est_remaining: Option<Duration>,
+}
+
+/// Signed seconds of slack: negative once the deadline passed or the
+/// estimate no longer fits — the most urgent work has the least slack.
+fn slack_secs(now: Instant, k: &Key) -> f64 {
+    let to_deadline = if k.deadline >= now {
+        k.deadline.duration_since(now).as_secs_f64()
+    } else {
+        -now.duration_since(k.deadline).as_secs_f64()
+    };
+    to_deadline - k.est_remaining.unwrap_or(Duration::ZERO).as_secs_f64()
+}
+
+/// Index of the entry `policy` pops next, or `None` on an empty queue.
+/// Ties keep arrival order (the iteration order), so every policy is
+/// FIFO among equals and starvation needs an actual priority inversion.
+pub fn pick(
+    policy: SchedulePolicy,
+    now: Instant,
+    mut keys: impl Iterator<Item = Key>,
+) -> Option<usize> {
+    match policy {
+        SchedulePolicy::Fifo => keys.next().map(|_| 0),
+        SchedulePolicy::DeadlineSlack => {
+            let mut best: Option<(usize, f64)> = None;
+            for (i, k) in keys.enumerate() {
+                let s = slack_secs(now, &k);
+                if best.map(|(_, b)| s < b).unwrap_or(true) {
+                    best = Some((i, s));
+                }
+            }
+            best.map(|(i, _)| i)
+        }
+        SchedulePolicy::Stage => {
+            let mut best: Option<(usize, u32)> = None;
+            for (i, k) in keys.enumerate() {
+                if best.map(|(_, b)| k.stage > b).unwrap_or(true) {
+                    best = Some((i, k.stage));
+                }
+            }
+            best.map(|(i, _)| i)
+        }
+    }
+}
+
+/// Stages beyond this share the last bucket (no workflow here is close).
+const MAX_STAGE: usize = 16;
+
+/// EWMA weight of a new sample (recent behaviour dominates, but one
+/// outlier request cannot swing the estimate).
+const ALPHA: f64 = 0.2;
+
+/// Per-workflow, per-stage time-to-completion statistics. The scheduler
+/// records, for each stage a finishing request passed through, how long
+/// that request still took from entering the stage; `estimate(stage)` is
+/// then the learned remaining-work term of the deadline-slack key.
+#[derive(Debug)]
+pub struct StageStats {
+    rem: Vec<Option<f64>>,
+}
+
+impl Default for StageStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StageStats {
+    pub fn new() -> StageStats {
+        StageStats { rem: vec![None; MAX_STAGE] }
+    }
+
+    fn bucket(stage: u32) -> usize {
+        (stage as usize).min(MAX_STAGE - 1)
+    }
+
+    /// A request that entered `stage` took `remaining` longer to finish.
+    pub fn observe(&mut self, stage: u32, remaining: Duration) {
+        let b = Self::bucket(stage);
+        let x = remaining.as_secs_f64();
+        self.rem[b] = Some(match self.rem[b] {
+            None => x,
+            Some(prev) => (1.0 - ALPHA) * prev + ALPHA * x,
+        });
+    }
+
+    /// Estimated remaining time for a request currently at `stage`. Falls
+    /// back to the nearest *earlier* stage with samples (an overestimate,
+    /// i.e. conservative: the request looks more urgent, not less);
+    /// `None` until any applicable stage has data.
+    pub fn estimate(&self, stage: u32) -> Option<Duration> {
+        let b = Self::bucket(stage);
+        self.rem
+            .iter()
+            .take(b + 1)
+            .rev()
+            .flatten()
+            .next()
+            .map(|s| Duration::from_secs_f64(s.max(0.0)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(deadline_in_ms: i64, stage: u32, est_ms: Option<u64>) -> (Instant, Key) {
+        let now = Instant::now();
+        let deadline = if deadline_in_ms >= 0 {
+            now + Duration::from_millis(deadline_in_ms as u64)
+        } else {
+            now - Duration::from_millis((-deadline_in_ms) as u64)
+        };
+        (now, Key { deadline, stage, est_remaining: est_ms.map(Duration::from_millis) })
+    }
+
+    fn keys(now_anchor: Instant, specs: &[(i64, u32, Option<u64>)]) -> Vec<Key> {
+        specs
+            .iter()
+            .map(|(d, stage, est)| Key {
+                deadline: if *d >= 0 {
+                    now_anchor + Duration::from_millis(*d as u64)
+                } else {
+                    now_anchor - Duration::from_millis((-*d) as u64)
+                },
+                stage: *stage,
+                est_remaining: est.map(Duration::from_millis),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parse_and_names_roundtrip() {
+        for p in [SchedulePolicy::Fifo, SchedulePolicy::DeadlineSlack, SchedulePolicy::Stage] {
+            assert_eq!(SchedulePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(SchedulePolicy::parse("lifo"), None);
+        let mut s = IngressSettings::default();
+        assert_eq!(SchedulePolicy::from_settings(&s), SchedulePolicy::Fifo);
+        s.schedule = "deadline_slack".into();
+        assert_eq!(SchedulePolicy::from_settings(&s), SchedulePolicy::DeadlineSlack);
+    }
+
+    #[test]
+    fn fifo_always_pops_the_front() {
+        let now = Instant::now();
+        let ks = keys(now, &[(500, 0, None), (1, 9, None)]);
+        assert_eq!(pick(SchedulePolicy::Fifo, now, ks.into_iter()), Some(0));
+        assert_eq!(pick(SchedulePolicy::Fifo, now, std::iter::empty()), None);
+    }
+
+    #[test]
+    fn deadline_slack_is_edf_without_estimates() {
+        let now = Instant::now();
+        let ks = keys(now, &[(500, 0, None), (20, 0, None), (300, 0, None)]);
+        assert_eq!(pick(SchedulePolicy::DeadlineSlack, now, ks.into_iter()), Some(1));
+    }
+
+    #[test]
+    fn deadline_slack_estimates_flip_pure_edf_order() {
+        let now = Instant::now();
+        // The 200ms-deadline request still needs ~190ms of work (slack
+        // ~10ms); the 100ms one is nearly done (slack ~95ms). Plain EDF
+        // would pick index 1; slack must pick index 0.
+        let ks = keys(now, &[(200, 1, Some(190)), (100, 3, Some(5))]);
+        assert_eq!(pick(SchedulePolicy::DeadlineSlack, now, ks.into_iter()), Some(0));
+    }
+
+    #[test]
+    fn expired_deadlines_are_most_urgent() {
+        let now = Instant::now();
+        let ks = keys(now, &[(50, 0, None), (-10, 0, None)]);
+        assert_eq!(pick(SchedulePolicy::DeadlineSlack, now, ks.into_iter()), Some(1));
+    }
+
+    #[test]
+    fn slack_ties_keep_arrival_order() {
+        let (now, k) = key(100, 0, None);
+        assert_eq!(pick(SchedulePolicy::DeadlineSlack, now, vec![k, k].into_iter()), Some(0));
+    }
+
+    #[test]
+    fn stage_drains_later_stage_first_with_fifo_ties() {
+        let now = Instant::now();
+        let ks = keys(now, &[(10, 1, None), (900, 3, None), (5, 3, None), (1, 0, None)]);
+        assert_eq!(pick(SchedulePolicy::Stage, now, ks.into_iter()), Some(1));
+    }
+
+    #[test]
+    fn stage_stats_learn_and_fall_back_conservatively() {
+        let mut st = StageStats::new();
+        assert_eq!(st.estimate(0), None, "cold stats must not invent estimates");
+        st.observe(1, Duration::from_millis(800));
+        // Exact stage hit.
+        assert_eq!(st.estimate(1), Some(Duration::from_millis(800)));
+        // Stage 3 has no samples: fall back to the nearest earlier stage
+        // (an overestimate — the request looks more urgent, never less).
+        assert_eq!(st.estimate(3), Some(Duration::from_millis(800)));
+        // Stage 0 precedes every sample: still cold.
+        assert_eq!(st.estimate(0), None);
+        // EWMA moves toward new samples without jumping to them.
+        st.observe(1, Duration::from_millis(300));
+        let e = st.estimate(1).unwrap().as_secs_f64();
+        assert!(e < 0.8 && e > 0.3, "EWMA must land between old and new, got {e}");
+        // Stages beyond the cap share the last bucket.
+        st.observe(99, Duration::from_millis(100));
+        assert_eq!(st.estimate(50), st.estimate(99));
+    }
+}

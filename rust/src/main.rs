@@ -11,11 +11,16 @@
 //!               # hold a deployment open behind the ingress front door
 //! nalar loadgen --workload router|financial|swe [--rps 20,40,80 | 20:160:20]
 //!               [--systems nalar,ayo,crew,autogen] [--secs N] [--quick]
-//!               [--hc-smoke] [--workers N] [--out DIR] [--config path.json]
-//!               [--check-only]
+//!               [--hc-smoke] [--workers N] [--cancel-rate 0.1]
+//!               [--schedule fifo,deadline_slack] [--out DIR]
+//!               [--config path.json] [--check-only]
 //!               # open-loop saturation sweep -> BENCH_rps_sweep.json;
 //!               # --hc-smoke gates on every admitted request completing
-//!               # with a 4-thread scheduler (in-flight >> threads)
+//!               # (and no scheduler-table leak) with a 4-thread
+//!               # deadline_slack scheduler (in-flight >> threads);
+//!               # --cancel-rate withdraws a seeded fraction of admitted
+//!               # requests mid-flight; --schedule adds a front-door
+//!               # scheduling axis (FIFO vs SRTF tail latency)
 //! ```
 
 use std::path::PathBuf;
@@ -71,8 +76,8 @@ fn main() -> nalar::Result<()> {
                  | bench [--quick] [--only fig9,fig10,table4,sec62] [--out DIR] [--check-only] \
                  | serve [--workflow ...] [--secs N] [--rps N] \
                  | loadgen [--workload router|financial|swe] [--rps LIST|START:END:STEP] \
-                 [--systems csv] [--secs N] [--quick] [--hc-smoke] [--workers N] [--out DIR] \
-                 [--check-only]"
+                 [--systems csv] [--secs N] [--quick] [--hc-smoke] [--workers N] \
+                 [--cancel-rate F] [--schedule csv] [--out DIR] [--check-only]"
             );
             Ok(())
         }
@@ -212,8 +217,9 @@ fn cmd_serve(args: &Args) -> nalar::Result<()> {
             std::thread::sleep(Duration::from_secs(1));
             if let Some(m) = ingress.metrics(wf) {
                 println!(
-                    "[serve] depth {} in-flight {}/{}t accepted {} shed {} completed {} \
-                     failed {} expired {}",
+                    "[serve] {} depth {} in-flight {}/{}t accepted {} shed {} completed {} \
+                     failed {} expired {} cancelled {}",
+                    m.schedule,
                     m.depth,
                     m.in_flight,
                     m.workers,
@@ -221,7 +227,8 @@ fn cmd_serve(args: &Args) -> nalar::Result<()> {
                     m.shed,
                     m.completed,
                     m.failed,
-                    m.expired_in_queue
+                    m.expired_in_queue,
+                    m.cancelled
                 );
             }
         }
@@ -254,6 +261,31 @@ fn cmd_loadgen(args: &Args) -> nalar::Result<()> {
         let workers: usize =
             w.parse().map_err(|_| nalar::Error::Config(format!("bad --workers `{w}`")))?;
         opts.workers = Some(workers);
+    }
+    if let Some(r) = args.get("cancel-rate") {
+        let rate: f64 =
+            r.parse().map_err(|_| nalar::Error::Config(format!("bad --cancel-rate `{r}`")))?;
+        if !(0.0..=1.0).contains(&rate) {
+            return Err(nalar::Error::Config(format!(
+                "--cancel-rate must be a probability in [0, 1], got `{r}`"
+            )));
+        }
+        opts.cancel_rate = rate;
+    }
+    if let Some(csv) = args.get("schedule") {
+        let mut schedules = Vec::new();
+        for name in csv.split(',') {
+            let name = name.trim();
+            if nalar::ingress::SchedulePolicy::parse(name).is_none() {
+                return Err(nalar::Error::Config(format!(
+                    "unknown schedule `{name}` (known: fifo, deadline_slack, stage)"
+                )));
+            }
+            if !schedules.contains(&name.to_string()) {
+                schedules.push(name.to_string());
+            }
+        }
+        opts.schedules = Some(schedules);
     }
     if let Some(spec) = args.get("rps") {
         opts.rates = workload::parse_rps_sweep(spec)

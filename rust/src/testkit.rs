@@ -1,11 +1,33 @@
-//! Property-testing kit (proptest substitute, offline build).
+//! Deterministic-testing kit (proptest substitute + scheduler harness,
+//! offline build).
 //!
-//! Runs a property against many generated cases from a deterministic seed;
-//! on failure it reports the seed + case index so the exact counterexample
-//! replays with `NALAR_PROP_SEED=<seed>`. A light "shrink" retries the
-//! failing generator with progressively smaller size hints.
+//! Three tools, all seeded and wall-clock-free:
+//!
+//! * **Property checks** ([`check`] / [`check_n`]): run a property against
+//!   many generated cases from a deterministic seed; on failure report the
+//!   seed + case index so the exact counterexample replays with
+//!   `NALAR_PROP_SEED=<seed>`. A light "shrink" retries the failing
+//!   generator with progressively smaller size hints.
+//! * **Virtual clock** ([`Clock`] / [`VirtualClock`]): an injectable time
+//!   source for the ingress scheduler. Deadline sweeps, slack ordering and
+//!   expiry races become functions of `advance()` instead of `sleep()` —
+//!   a 30-second deadline test runs in milliseconds and never flakes on a
+//!   loaded runner.
+//! * **Scripted engine** ([`ScriptedEngine`]): a driver factory whose
+//!   "agent calls" are bare [`FutureCell`]s the *test* resolves. Combined
+//!   with the virtual clock, scheduler tests control exactly when each
+//!   request parks, wakes, expires or completes — the cancel-race matrix
+//!   and the FIFO-vs-slack A/B trace are deterministic replays, not
+//!   timing hopes.
 
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::futures::{FutureCell, FutureMeta};
+use crate::ids::{AgentType, Location};
+use crate::json;
 use crate::util::rng::Rng;
+use crate::workflow::{Driver, Env, Step};
 
 /// Number of cases per property (override with NALAR_PROP_CASES).
 pub fn default_cases() -> usize {
@@ -66,6 +88,209 @@ pub fn check_n<T: std::fmt::Debug>(
     }
 }
 
+// --------------------------------------------------------- virtual clock
+
+// The injectable time source itself lives in `util::clock` (the
+// scheduler is a production consumer; test scaffolding must not be a
+// production dependency) — re-exported here because tests are where the
+// manual clock is actually driven.
+pub use crate::util::clock::{Clock, VirtualClock};
+
+// -------------------------------------------------------- scripted engine
+
+/// A latch a scripted driver can block its *first* poll on. Blocking a
+/// poll is forbidden for real drivers, which is exactly why tests want it:
+/// holding a scheduler worker hostage lets wakeups pile into the ready
+/// queue, making pop-order assertions deterministic. Capped internally so
+/// a test that forgets `open()` fails instead of hanging CI.
+pub struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    #[allow(clippy::new_ret_no_self)]
+    pub fn new() -> Arc<Gate> {
+        Arc::new(Gate { open: Mutex::new(false), cv: Condvar::new() })
+    }
+
+    pub fn open(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut g = self.open.lock().unwrap();
+        while !*g {
+            let now = Instant::now();
+            assert!(now < deadline, "testkit::Gate was never opened");
+            let (g2, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+    }
+}
+
+/// Scripted stand-in for the agent/engine stack: drivers built by
+/// [`ScriptedEngine::driver`] issue `waits` sequential "calls", each a
+/// bare [`FutureCell`] registered in the deployment's future table, and
+/// suspend on them exactly like real workflow drivers suspend on agent
+/// futures. Nothing computes the futures — the test resolves (or fails)
+/// them, deciding when each request wakes. Created cells and the
+/// completion order are recorded for assertions.
+pub struct ScriptedEngine {
+    state: Mutex<ScriptState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct ScriptState {
+    created: Vec<Arc<FutureCell>>,
+    completed: Vec<String>,
+}
+
+impl ScriptedEngine {
+    #[allow(clippy::new_ret_no_self)]
+    pub fn new() -> Arc<ScriptedEngine> {
+        Arc::new(ScriptedEngine { state: Mutex::new(ScriptState::default()), cv: Condvar::new() })
+    }
+
+    /// A driver that makes `waits` scripted calls then completes. `label`
+    /// identifies it in [`Self::completions`].
+    pub fn driver(self: &Arc<Self>, label: &str, waits: usize) -> Box<dyn Driver> {
+        self.build(label, waits, None)
+    }
+
+    /// Like [`Self::driver`], but the first poll blocks until `gate`
+    /// opens — see [`Gate`].
+    pub fn gated_driver(
+        self: &Arc<Self>,
+        label: &str,
+        waits: usize,
+        gate: Arc<Gate>,
+    ) -> Box<dyn Driver> {
+        self.build(label, waits, Some(gate))
+    }
+
+    fn build(
+        self: &Arc<Self>,
+        label: &str,
+        waits: usize,
+        gate: Option<Arc<Gate>>,
+    ) -> Box<dyn Driver> {
+        Box::new(ScriptedDriver {
+            engine: self.clone(),
+            label: label.to_string(),
+            remaining: waits,
+            consumed: 0,
+            current: None,
+            gate,
+        })
+    }
+
+    /// Block (wall clock, event-driven) until `n` scripted calls exist.
+    /// Returns false on timeout.
+    pub fn wait_created(&self, n: usize, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.state.lock().unwrap();
+        while s.created.len() < n {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (s2, _) = self.cv.wait_timeout(s, deadline - now).unwrap();
+            s = s2;
+        }
+        true
+    }
+
+    /// The `i`-th scripted call, in creation order.
+    pub fn cell(&self, i: usize) -> Arc<FutureCell> {
+        self.state.lock().unwrap().created[i].clone()
+    }
+
+    pub fn created_count(&self) -> usize {
+        self.state.lock().unwrap().created.len()
+    }
+
+    /// Labels of finished drivers, in the order their final poll ran.
+    pub fn completions(&self) -> Vec<String> {
+        self.state.lock().unwrap().completed.clone()
+    }
+
+    fn issue(&self, env: &Env, depth: u32) -> Arc<FutureCell> {
+        let id = env.ctx.ids.future();
+        let meta = FutureMeta::new(
+            id,
+            env.ctx.session,
+            env.ctx.request,
+            AgentType::new("scripted"),
+            "step",
+            Location::Driver(env.ctx.request),
+        );
+        let cell = FutureCell::new(meta);
+        env.ctx.table.insert(cell.clone());
+        env.ctx.graph.on_create(id, env.ctx.request, &[], depth);
+        let mut s = self.state.lock().unwrap();
+        s.created.push(cell.clone());
+        drop(s);
+        self.cv.notify_all();
+        cell
+    }
+
+    fn note_done(&self, label: &str) {
+        self.state.lock().unwrap().completed.push(label.to_string());
+    }
+}
+
+struct ScriptedDriver {
+    engine: Arc<ScriptedEngine>,
+    label: String,
+    remaining: usize,
+    consumed: u32,
+    current: Option<Arc<FutureCell>>,
+    gate: Option<Arc<Gate>>,
+}
+
+impl Driver for ScriptedDriver {
+    fn poll(&mut self, env: &Env) -> Step {
+        if let Some(g) = self.gate.take() {
+            g.wait();
+        }
+        loop {
+            if let Some(cell) = self.current.clone() {
+                match cell.try_value() {
+                    None => return Step::Pending { waiting_on: vec![cell.id] },
+                    Some(Err(e)) => {
+                        self.engine.note_done(&self.label);
+                        return Step::Done(Err(e));
+                    }
+                    Some(Ok(_)) => {
+                        self.current = None;
+                        self.consumed += 1;
+                    }
+                }
+            }
+            if self.remaining == 0 {
+                self.engine.note_done(&self.label);
+                return Step::Done(Ok(json!({
+                    "scripted": self.label.as_str(),
+                    "steps": self.consumed as i64,
+                })));
+            }
+            self.remaining -= 1;
+            let cell = self.engine.issue(env, self.consumed + 1);
+            self.current = Some(cell);
+        }
+    }
+
+    /// Scripted stage = calls already consumed, so the `stage` scheduling
+    /// policy sees scripted progress the same way it sees real drivers'.
+    fn stage(&self) -> u32 {
+        self.consumed
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -86,6 +311,55 @@ mod tests {
     #[should_panic(expected = "property `always-false` failed")]
     fn failing_property_reports() {
         check_n("always-false", 4, |r, _| r.next_u64(), |_| false);
+    }
+
+    #[test]
+    fn clock_reexport_reaches_the_util_implementation() {
+        // The real tests live in util::clock; this pins the re-export
+        // (scheduler tests import Clock from testkit).
+        let (clock, v) = Clock::manual();
+        let t0 = clock.now();
+        v.advance(Duration::from_secs(1));
+        assert_eq!(clock.now() - t0, Duration::from_secs(1));
+    }
+
+    #[test]
+    fn gate_releases_waiters_once_open() {
+        let g = Gate::new();
+        let g2 = g.clone();
+        let j = std::thread::spawn(move || g2.wait());
+        std::thread::sleep(Duration::from_millis(5));
+        g.open();
+        j.join().unwrap();
+        g.wait(); // already open: returns immediately
+    }
+
+    #[test]
+    fn scripted_driver_parks_on_test_resolved_cells() {
+        use crate::server::Deployment;
+        use crate::workflow::WorkflowKind;
+        let mut cfg = WorkflowKind::Router.config();
+        cfg.time_scale = 0.0005;
+        let d = Deployment::launch(cfg).unwrap();
+        let env = Env::new(&d, d.new_session());
+        let eng = ScriptedEngine::new();
+        let mut drv = eng.driver("r1", 2);
+        // First poll issues call 0 and suspends on it.
+        let Step::Pending { waiting_on } = drv.poll(&env) else { panic!("must suspend") };
+        assert_eq!(waiting_on, vec![eng.cell(0).id]);
+        assert_eq!(drv.stage(), 0);
+        // Still pending until the *test* resolves the cell.
+        assert!(matches!(drv.poll(&env), Step::Pending { .. }));
+        eng.cell(0).resolve(json!(1), 0);
+        let Step::Pending { waiting_on } = drv.poll(&env) else { panic!("second call pends") };
+        assert_eq!(waiting_on, vec![eng.cell(1).id]);
+        assert_eq!(drv.stage(), 1, "one scripted call consumed");
+        eng.cell(1).resolve(json!(2), 0);
+        let Step::Done(out) = drv.poll(&env) else { panic!("must finish") };
+        assert_eq!(out.unwrap().get("steps").as_i64(), Some(2));
+        assert_eq!(eng.completions(), vec!["r1".to_string()]);
+        assert_eq!(eng.created_count(), 2);
+        d.shutdown();
     }
 
     #[test]

@@ -1,0 +1,90 @@
+//! Injectable time source (a test-clock crate substitute, offline build).
+//!
+//! The ingress scheduler reads time through [`Clock`] instead of calling
+//! `Instant::now()` directly, so deterministic tests can freeze and
+//! `advance()` it ([`crate::testkit`] re-exports these for test code).
+//! Production constructs [`Clock::wall`]; nothing here is test-only —
+//! the scheduler genuinely runs against whichever source it is given.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// A manually-advanced time source. `now()` is a real `Instant` (base
+/// captured at construction + the advanced offset), so virtual timestamps
+/// compare and subtract exactly like wall-clock ones — code under test
+/// needs no special arithmetic, only a [`Clock`] instead of
+/// `Instant::now()`.
+pub struct VirtualClock {
+    base: Instant,
+    offset: Mutex<Duration>,
+}
+
+impl VirtualClock {
+    fn new() -> Arc<VirtualClock> {
+        Arc::new(VirtualClock { base: Instant::now(), offset: Mutex::new(Duration::ZERO) })
+    }
+
+    pub fn now(&self) -> Instant {
+        self.base + *self.offset.lock().unwrap()
+    }
+
+    /// Move virtual time forward (it never goes back).
+    pub fn advance(&self, d: Duration) {
+        *self.offset.lock().unwrap() += d;
+    }
+}
+
+/// The time source the ingress scheduler reads. Defaults to wall clock;
+/// tests swap in a [`VirtualClock`] via [`Clock::manual`].
+#[derive(Clone, Default)]
+pub struct Clock(Option<Arc<VirtualClock>>);
+
+impl Clock {
+    /// Real time (the production default).
+    pub fn wall() -> Clock {
+        Clock(None)
+    }
+
+    /// A frozen clock plus the handle that advances it.
+    pub fn manual() -> (Clock, Arc<VirtualClock>) {
+        let v = VirtualClock::new();
+        (Clock(Some(v.clone())), v)
+    }
+
+    pub fn now(&self) -> Instant {
+        match &self.0 {
+            None => Instant::now(),
+            Some(v) => v.now(),
+        }
+    }
+}
+
+impl std::fmt::Debug for Clock {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(if self.0.is_some() { "Clock(virtual)" } else { "Clock(wall)" })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_is_frozen_until_advanced() {
+        let (clock, v) = Clock::manual();
+        let t0 = clock.now();
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(clock.now(), t0, "wall time must not leak into a virtual clock");
+        v.advance(Duration::from_secs(3600));
+        assert_eq!(clock.now() - t0, Duration::from_secs(3600));
+        assert!(clock.now() > t0);
+    }
+
+    #[test]
+    fn wall_clock_moves_on_its_own() {
+        let clock = Clock::wall();
+        let t0 = clock.now();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(clock.now() > t0);
+    }
+}

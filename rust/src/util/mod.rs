@@ -10,8 +10,11 @@
 //! * [`cli`] — clap substitute: flag/option/positional parsing.
 //! * [`bench`] — criterion substitute: timing loops + table printer
 //!   (figure-level reporting lives in [`crate::bench`]).
+//! * [`clock`] — injectable time source (wall or manually-advanced) for
+//!   the ingress scheduler; [`crate::testkit`] re-exports it.
 
 pub mod bench;
 pub mod cli;
+pub mod clock;
 pub mod json;
 pub mod rng;

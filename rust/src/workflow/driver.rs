@@ -42,6 +42,17 @@ pub enum Step {
 /// the implementor — dropping it abandons the request.
 pub trait Driver: Send {
     fn poll(&mut self, env: &Env) -> Step;
+
+    /// Coarse progress index of the request's current suspension point
+    /// (0 = nothing consumed yet), monotone over the driver's life. The
+    /// front-door scheduler reads it for SRTF-style ordering: a
+    /// later-stage request has the least remaining work (`stage` policy
+    /// drains it first; `deadline_slack` keys its remaining-time estimate
+    /// on it). The default suits drivers with no meaningful notion of
+    /// progress — they sort as "not started".
+    fn stage(&self) -> u32 {
+        0
+    }
 }
 
 /// Instantiate the resumable driver for one admitted request.

@@ -167,6 +167,16 @@ impl Driver for FinancialDriver {
             }
         }
     }
+
+    /// Fan-out join is stage 1, the summary call 2 (front-door SRTF).
+    fn stage(&self) -> u32 {
+        match self.state {
+            State::Start => 0,
+            State::Join { .. } => 1,
+            State::Summarize { .. } => 2,
+            State::Finished => 3,
+        }
+    }
 }
 
 #[cfg(test)]

@@ -149,7 +149,8 @@ pub mod configs {
   "seed": 11,
   "control": {"global_period_ms": 40, "hol_threshold_ms": 120},
   "engine": {"max_batch": 8, "executor": "sim", "kv_policy": "hint"},
-  "ingress": {"policy": "bounded", "queue_cap": 256, "workers": 8, "max_in_flight": 1024},
+  "ingress": {"policy": "bounded", "schedule": "fifo", "queue_cap": 256, "workers": 8,
+              "max_in_flight": 1024},
   "agents": [
     {"name": "stock_analysis", "kind": "llm", "instances": 1,
      "directives": {"batchable": true, "max_instances": 2, "resources": {"GPU": 1}},
@@ -181,7 +182,8 @@ pub mod configs {
   "seed": 22,
   "control": {"global_period_ms": 40, "hol_threshold_ms": 120},
   "engine": {"max_batch": 8, "executor": "sim", "kv_policy": "hint"},
-  "ingress": {"policy": "bounded", "queue_cap": 256, "workers": 8, "max_in_flight": 1024},
+  "ingress": {"policy": "bounded", "schedule": "fifo", "queue_cap": 256, "workers": 8,
+              "max_in_flight": 1024},
   "agents": [
     {"name": "router", "kind": "llm", "instances": 1,
      "directives": {"batchable": true, "max_instances": 2, "resources": {"GPU": 0.25}},
@@ -210,7 +212,8 @@ pub mod configs {
   "seed": 33,
   "control": {"global_period_ms": 40, "hol_threshold_ms": 120},
   "engine": {"max_batch": 8, "executor": "sim", "kv_policy": "hint"},
-  "ingress": {"policy": "bounded", "queue_cap": 256, "workers": 8, "max_in_flight": 1024},
+  "ingress": {"policy": "bounded", "schedule": "fifo", "queue_cap": 256, "workers": 8,
+              "max_in_flight": 1024},
   "agents": [
     {"name": "planner", "kind": "llm", "instances": 1,
      "directives": {"batchable": true, "max_instances": 2, "resources": {"GPU": 1}},

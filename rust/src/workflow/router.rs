@@ -148,6 +148,19 @@ impl Driver for RouterDriver {
             }
         }
     }
+
+    /// Classification is stage 1; the branch body 2; the coder branch's
+    /// test run 3 — later stages have less remaining work (front-door
+    /// SRTF).
+    fn stage(&self) -> u32 {
+        match self.state {
+            State::Start => 0,
+            State::Classify { .. } => 1,
+            State::Chat { .. } | State::Implement { .. } => 2,
+            State::Test { .. } => 3,
+            State::Finished => 4,
+        }
+    }
 }
 
 #[cfg(test)]

@@ -189,6 +189,18 @@ impl Driver for SweDriver {
             }
         }
     }
+
+    /// Planning is stage 1; the subtask loop counts completed subtasks on
+    /// top, so a request with one test left outranks one that just
+    /// planned (front-door SRTF).
+    fn stage(&self) -> u32 {
+        match &self.state {
+            State::Start => 0,
+            State::Plan { .. } => 1,
+            State::Loop(w) => 2 + w.done.iter().filter(|d| **d).count() as u32,
+            State::Finished => u32::MAX,
+        }
+    }
 }
 
 #[cfg(test)]

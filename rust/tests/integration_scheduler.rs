@@ -1,14 +1,24 @@
 //! Integration tests for the event-driven ingress scheduler: in-flight
 //! requests are stored continuations, so a small fixed thread pool must
-//! carry far more concurrent requests than it has threads, and a stalled
-//! agent type must park its requests without wedging unrelated work.
+//! carry far more concurrent requests than it has threads, a stalled
+//! agent type must park its requests without wedging unrelated work, and
+//! the request-lifecycle API (`Ticket::cancel`, deadline expiry,
+//! policy-ordered queues) must leave exactly one terminal outcome per
+//! ticket and no entry behind in either scheduler table.
+//!
+//! The lifecycle tests run on the deterministic testkit: a virtual clock
+//! (deadlines move when the test says so, never because CI is slow) and a
+//! scripted engine (the test resolves each "agent call", so park/wake/
+//! expire/cancel interleavings are replays, not timing hopes).
 
 use std::time::{Duration, Instant};
 
 use nalar::config::DeploymentConfig;
-use nalar::ingress::{AdmissionPolicy, Ingress, SchedulerOpts, Ticket};
+use nalar::error::Error;
+use nalar::ingress::{AdmissionPolicy, Ingress, SchedulePolicy, SchedulerOpts, Ticket};
 use nalar::json;
 use nalar::server::Deployment;
+use nalar::testkit::{Clock, Gate, ScriptedEngine};
 use nalar::workflow::WorkflowKind;
 
 /// ≥512 concurrent in-flight requests on a 4-thread scheduler: every
@@ -29,7 +39,7 @@ fn four_threads_complete_512_concurrent_requests() {
         &d,
         &[WorkflowKind::Router],
         AdmissionPolicy::Unbounded,
-        SchedulerOpts { workers: 4, max_in_flight: 1024 },
+        SchedulerOpts::new(4, 1024),
     );
     let timeout = Duration::from_secs(120);
     let tickets: Vec<Ticket> = (0..512)
@@ -117,7 +127,7 @@ fn stalled_agent_type_parks_without_wedging_other_workflows() {
         &d,
         &[WorkflowKind::Router, WorkflowKind::Swe],
         AdmissionPolicy::Unbounded,
-        SchedulerOpts { workers: 2, max_in_flight: 64 },
+        SchedulerOpts::new(2, 64),
     );
     let long = Duration::from_secs(60);
 
@@ -177,4 +187,351 @@ fn stalled_agent_type_parks_without_wedging_other_workflows() {
         assert!(t.latency().is_some(), "every ticket must be fulfilled (ok or failed) at stop");
     }
     d.shutdown();
+}
+
+// ------------------------------------------------------------ lifecycle
+//
+// Everything below runs on the deterministic testkit: `Clock::manual`
+// freezes time until the test advances it, and `ScriptedEngine` drivers
+// suspend on futures the test resolves. No test in this section sleeps
+// its way to an assertion.
+
+fn fast_router() -> Deployment {
+    let mut cfg = WorkflowKind::Router.config();
+    cfg.time_scale = 0.0005;
+    cfg.control.global_period_ms = 10;
+    // Keep capacity policies out: a reallocation kill would fail futures
+    // retryably, which is orthogonal to lifecycle control.
+    cfg.policies = vec!["load_balance".into()];
+    Deployment::launch(cfg).unwrap()
+}
+
+/// Block (wall clock, bounded) until `cond` holds — scheduler bookkeeping
+/// runs on worker threads, so gauges settle an instant after fulfilment.
+fn settle(what: &str, cond: impl Fn() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < Duration::from_secs(5), "timed out settling: {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// The no-leak invariant every lifecycle path must restore: both
+/// scheduler tables empty once all tickets are terminal.
+fn assert_drained(ing: &Ingress, wf: WorkflowKind) {
+    settle("scheduler tables drain", || {
+        let m = ing.metrics(wf).unwrap();
+        m.in_flight == 0 && m.depth == 0
+    });
+}
+
+/// Race matrix #1 — cancel vs complete, many seeded rounds: whichever
+/// side wins, the ticket observes exactly one terminal outcome, the
+/// counters agree with it, and no table entry survives.
+#[test]
+fn cancel_vs_complete_yields_exactly_one_terminal_outcome() {
+    let d = fast_router();
+    let (clock, _vclock) = Clock::manual(); // frozen: deadlines stay out of this race
+    let mut opts = SchedulerOpts::new(2, 64);
+    opts.clock = clock;
+    let ing =
+        Ingress::start_with_opts(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, opts);
+    let eng = ScriptedEngine::new();
+    let rounds = 24;
+    let (mut ok, mut cancelled) = (0u64, 0u64);
+    for i in 0..rounds {
+        let t = ing
+            .submit_driver(
+                WorkflowKind::Router,
+                None,
+                eng.driver(&format!("r{i}"), 1),
+                Duration::from_secs(1000),
+            )
+            .unwrap();
+        assert!(eng.wait_created(i + 1, Duration::from_secs(5)), "round {i} never started");
+        let cell = eng.cell(i);
+        std::thread::scope(|s| {
+            s.spawn(move || cell.resolve(json!(1), 0));
+            s.spawn(|| {
+                t.cancel();
+            });
+        });
+        match t.wait(Duration::from_secs(5)) {
+            Ok(_) => ok += 1,
+            Err(Error::Cancelled) => cancelled += 1,
+            Err(e) => panic!("round {i}: impossible terminal outcome {e}"),
+        }
+    }
+    assert_eq!(ok + cancelled, rounds as u64, "exactly one outcome per ticket");
+    settle("counters agree with outcomes", || {
+        let m = ing.metrics(WorkflowKind::Router).unwrap();
+        m.completed == ok && m.cancelled == cancelled && m.failed == 0
+    });
+    assert_drained(&ing, WorkflowKind::Router);
+    ing.stop();
+    d.shutdown();
+}
+
+/// Race matrix #2 — cancel vs deadline expiry on a virtual clock: the
+/// clock jumps past the deadline while a cancel lands, repeatedly.
+/// Exactly one of `Deadline`/`Cancelled` per ticket, counters split the
+/// same way, tables drain.
+#[test]
+fn cancel_vs_deadline_expiry_yields_exactly_one_terminal_outcome() {
+    let d = fast_router();
+    let (clock, vclock) = Clock::manual();
+    let mut opts = SchedulerOpts::new(2, 64);
+    opts.clock = clock;
+    let ing =
+        Ingress::start_with_opts(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, opts);
+    let eng = ScriptedEngine::new();
+    let rounds = 16;
+    let (mut expired, mut cancelled) = (0u64, 0u64);
+    for i in 0..rounds {
+        let t = ing
+            .submit_driver(
+                WorkflowKind::Router,
+                None,
+                eng.driver(&format!("r{i}"), 1),
+                Duration::from_secs(10), // virtual seconds
+            )
+            .unwrap();
+        assert!(eng.wait_created(i + 1, Duration::from_secs(5)), "round {i} never parked");
+        std::thread::scope(|s| {
+            s.spawn(|| vclock.advance(Duration::from_secs(11)));
+            s.spawn(|| {
+                t.cancel();
+            });
+        });
+        match t.wait(Duration::from_secs(5)) {
+            Err(Error::Deadline(_)) => expired += 1,
+            Err(Error::Cancelled) => cancelled += 1,
+            other => panic!("round {i}: impossible terminal outcome {other:?}"),
+        }
+    }
+    assert_eq!(expired + cancelled, rounds as u64);
+    settle("counters agree with outcomes", || {
+        let m = ing.metrics(WorkflowKind::Router).unwrap();
+        // parked expiries count as execution failures, in-queue never
+        // happened here (every round started before the clock moved)
+        m.failed == expired && m.cancelled == cancelled && m.expired_in_queue == 0
+    });
+    assert_drained(&ing, WorkflowKind::Router);
+    ing.stop();
+    d.shutdown();
+}
+
+/// Race matrix #3 — double cancel and cancel-after-completion are
+/// observable no-ops: `cancel` reports delivery, not outcome.
+#[test]
+fn double_cancel_and_cancel_after_completion_change_nothing() {
+    let d = fast_router();
+    let ing = Ingress::start_with(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, 2);
+    let eng = ScriptedEngine::new();
+    let long = Duration::from_secs(1000);
+
+    let t1 = ing
+        .submit_driver(WorkflowKind::Router, None, eng.driver("victim", 1), long)
+        .unwrap();
+    assert!(eng.wait_created(1, Duration::from_secs(5)));
+    assert!(t1.cancel(), "first cancel is delivered");
+    assert!(!t1.cancel(), "second cancel finds nothing to remove");
+    assert!(matches!(t1.wait(Duration::from_secs(5)), Err(Error::Cancelled)));
+
+    let t2 = ing
+        .submit_driver(WorkflowKind::Router, None, eng.driver("survivor", 1), long)
+        .unwrap();
+    assert!(eng.wait_created(2, Duration::from_secs(5)));
+    eng.cell(1).resolve(json!("done"), 0);
+    t2.wait(Duration::from_secs(5)).unwrap();
+    assert!(!t2.cancel(), "cancel after completion is a no-op");
+
+    settle("counters", || {
+        let m = ing.metrics(WorkflowKind::Router).unwrap();
+        m.cancelled == 1 && m.completed == 1 && m.failed == 0
+    });
+    assert_drained(&ing, WorkflowKind::Router);
+    ing.stop();
+    d.shutdown();
+}
+
+/// Race matrix #4 — cancel while still queued: the driver must never be
+/// built, and the entry leaves the admission queue immediately.
+#[test]
+fn cancel_while_queued_never_starts_the_driver() {
+    let d = fast_router();
+    let ing = Ingress::start_with_opts(
+        &d,
+        &[WorkflowKind::Router],
+        AdmissionPolicy::Unbounded,
+        SchedulerOpts::new(1, 1),
+    );
+    let eng = ScriptedEngine::new();
+    let long = Duration::from_secs(1000);
+    // A gated blocker owns the single worker AND the single in-flight
+    // slot, so the victim cannot start.
+    let gate = Gate::new();
+    let blocker = ing
+        .submit_driver(
+            WorkflowKind::Router,
+            None,
+            eng.gated_driver("blocker", 0, gate.clone()),
+            long,
+        )
+        .unwrap();
+    settle("blocker occupies the slot", || ing.in_flight(WorkflowKind::Router) == 1);
+    let victim = ing
+        .submit_driver(WorkflowKind::Router, None, eng.driver("victim", 1), long)
+        .unwrap();
+    assert_eq!(ing.depth(WorkflowKind::Router), 1, "victim must be queued");
+    assert!(victim.cancel());
+    assert_eq!(ing.depth(WorkflowKind::Router), 0, "cancel removes the queue entry at once");
+    assert!(matches!(victim.wait(Duration::from_secs(5)), Err(Error::Cancelled)));
+    gate.open();
+    blocker.wait(Duration::from_secs(5)).unwrap();
+    assert_eq!(eng.created_count(), 0, "the cancelled driver never issued a call");
+    settle("counters", || {
+        let m = ing.metrics(WorkflowKind::Router).unwrap();
+        m.cancelled == 1 && m.completed == 1 && m.expired_in_queue == 0 && m.failed == 0
+    });
+    assert_drained(&ing, WorkflowKind::Router);
+    ing.stop();
+    d.shutdown();
+}
+
+/// Ready-queue ordering: three parked requests wake while the single
+/// worker is held hostage; under `deadline_slack` it must drain them
+/// most-urgent-first, not in wake order.
+#[test]
+fn deadline_slack_drains_ready_work_most_urgent_first() {
+    let d = fast_router();
+    let mut opts = SchedulerOpts::new(1, 8);
+    opts.schedule = Some(SchedulePolicy::DeadlineSlack);
+    let ing =
+        Ingress::start_with_opts(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, opts);
+    let eng = ScriptedEngine::new();
+    // Reverse-urgency submit order, so FIFO would be wrong.
+    let far = ing
+        .submit_driver(WorkflowKind::Router, None, eng.driver("far", 1), Duration::from_secs(1000))
+        .unwrap();
+    let mid = ing
+        .submit_driver(WorkflowKind::Router, None, eng.driver("mid", 1), Duration::from_secs(500))
+        .unwrap();
+    let near = ing
+        .submit_driver(WorkflowKind::Router, None, eng.driver("near", 1), Duration::from_secs(100))
+        .unwrap();
+    assert!(eng.wait_created(3, Duration::from_secs(5)));
+    settle("all three parked", || ing.in_flight(WorkflowKind::Router) == 3);
+    // Hold the worker, then wake all three in reverse-urgency order.
+    let gate = Gate::new();
+    let blocker = ing
+        .submit_driver(
+            WorkflowKind::Router,
+            None,
+            eng.gated_driver("blocker", 0, gate.clone()),
+            Duration::from_secs(1000),
+        )
+        .unwrap();
+    settle("worker committed to the blocker", || ing.in_flight(WorkflowKind::Router) == 4);
+    for i in 0..3 {
+        // wake all three (in whatever order they started); they pile up
+        // in the ready queue because the only worker is gated
+        eng.cell(i).resolve(json!(i as i64), 0);
+    }
+    gate.open();
+    for t in [&near, &mid, &far, &blocker] {
+        t.wait(Duration::from_secs(5)).unwrap();
+    }
+    assert_eq!(
+        eng.completions(),
+        vec!["blocker", "near", "mid", "far"],
+        "slack order, not wake order"
+    );
+    assert_drained(&ing, WorkflowKind::Router);
+    ing.stop();
+    d.shutdown();
+}
+
+/// Seeded A/B reproduction of the scheduling claim (ROADMAP "order
+/// wakeups by deadline slack or graph stage"; paper §4/§6: runtime
+/// scheduling control cuts tail latency): one 40-request mixed-deadline
+/// trace, two runs differing ONLY in `ingress.schedule`.
+///
+/// **The trace** (virtual time; submitted as one burst at t=0 behind a
+/// gate, so both runs pop from an identical 40-deep queue; one scripted
+/// call per request; the pump prices every call at exactly 2 virtual
+/// seconds; workers=1 and max_in_flight=1 make the queue discipline the
+/// only variable):
+///
+/// * requests 3, 7, 11, …, 39 (every 4th) — deadline 30 s (tight);
+/// * all others — deadline 1000 s (generous).
+///
+/// FIFO serves arrival order: request i completes at 2·(i+1) s, so the
+/// tight requests at i ≥ 15 — 7 of 10 — expire. `deadline_slack` (EDF
+/// until stage stats warm up, which only shifts every key equally here)
+/// serves the 10 tight requests first: all done by t=20 s < 30 s, the
+/// generous ones by t=80 s ≪ 1000 s. 0 misses vs 7 on the same trace.
+#[test]
+fn seeded_ab_trace_deadline_slack_strictly_reduces_deadline_misses() {
+    let fifo = run_mixed_deadline_trace(SchedulePolicy::Fifo);
+    let slack = run_mixed_deadline_trace(SchedulePolicy::DeadlineSlack);
+    assert_eq!(fifo, 7, "FIFO must miss the tail of the tight requests");
+    assert_eq!(slack, 0, "slack ordering must serve every tight request in time");
+    assert!(slack < fifo, "the scheduling claim: slack strictly reduces misses");
+}
+
+fn run_mixed_deadline_trace(schedule: SchedulePolicy) -> usize {
+    let d = fast_router();
+    let (clock, vclock) = Clock::manual();
+    let mut opts = SchedulerOpts::new(1, 1);
+    opts.schedule = Some(schedule);
+    opts.clock = clock;
+    let ing =
+        Ingress::start_with_opts(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, opts);
+    let eng = ScriptedEngine::new();
+    let gate = Gate::new();
+    let blocker = ing
+        .submit_driver(
+            WorkflowKind::Router,
+            None,
+            eng.gated_driver("blocker", 0, gate.clone()),
+            Duration::from_secs(100_000),
+        )
+        .unwrap();
+    settle("blocker holds the worker", || ing.in_flight(WorkflowKind::Router) == 1);
+    let tickets: Vec<Ticket> = (0..40)
+        .map(|i| {
+            let timeout = if i % 4 == 3 {
+                Duration::from_secs(30) // tight (virtual seconds)
+            } else {
+                Duration::from_secs(1000) // generous
+            };
+            ing.submit_driver(WorkflowKind::Router, None, eng.driver(&format!("r{i}"), 1), timeout)
+                .unwrap()
+        })
+        .collect();
+    assert_eq!(ing.depth(WorkflowKind::Router), 40, "whole trace queued before service starts");
+    gate.open();
+    // The pump: every started request's single call costs exactly 2
+    // virtual seconds; whatever the clock leaves behind in the queue,
+    // the sweep expires.
+    let mut n = 0;
+    while eng.wait_created(n + 1, Duration::from_secs(3)) {
+        vclock.advance(Duration::from_secs(2));
+        eng.cell(n).resolve(json!(n as i64), 0);
+        n += 1;
+    }
+    blocker.wait(Duration::from_secs(5)).unwrap();
+    let mut misses = 0;
+    for (i, t) in tickets.iter().enumerate() {
+        match t.wait(Duration::from_secs(5)) {
+            Ok(_) => {}
+            Err(Error::Deadline(_)) => misses += 1,
+            Err(e) => panic!("request {i}: unexpected terminal outcome {e}"),
+        }
+    }
+    assert_drained(&ing, WorkflowKind::Router);
+    ing.stop();
+    d.shutdown();
+    misses
 }
