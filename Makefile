@@ -1,6 +1,6 @@
 # Local entrypoints — identical to what CI runs (.github/workflows/ci.yml).
 
-.PHONY: build test test-scheduler fmt clippy lint bench bench-quick loadgen loadgen-quick loadgen-hc artifacts clean
+.PHONY: build test test-scheduler test-fairness fmt clippy lint bench bench-quick loadgen loadgen-quick loadgen-hc artifacts clean
 
 build:
 	cargo build --release --all-targets
@@ -16,6 +16,14 @@ test:
 test-scheduler:
 	cargo test -q --release --test integration_scheduler -- --test-threads=2
 	cargo test -q --release --test props -- --test-threads=2
+
+# Deterministic multi-tenant fairness suite: the noisy-neighbor FIFO-vs-
+# DRR A/B trace, the weighted 3:1 service-order replay and the
+# cancel-debits-the-right-sub-queue lifecycle test (virtual clock,
+# scripted engine). Same pinned --test-threads rationale as above: these
+# tests hold the single scheduler worker hostage on purpose.
+test-fairness:
+	cargo test -q --release --test integration_fairness -- --test-threads=2
 
 fmt:
 	cargo fmt --all -- --check

@@ -16,6 +16,13 @@
 //!   round-robin across instances, no global coordination, sticky sessions
 //!   (its async messaging engine exposes no policy control, §6.2).
 //!
+//! None of the baselines isolates tenants at its front door either, so
+//! `apply` also clears `ingress.tenants` — every baseline runs the
+//! implicit single-tenant queue (submitted tenant names collapse onto
+//! it), keeping the §6 fairness comparison honest: NALAR-with-DRR is
+//! measured against single-queue systems, not against a tenancy feature
+//! quietly granted to everyone.
+//!
 //! NALAR mode = the paper's three default policies + migration enabled.
 
 use crate::config::DeploymentConfig;
@@ -69,6 +76,7 @@ impl SystemUnderTest {
                 cfg.engine.kv_policy = "lru".into();
                 cfg.ingress.policy = "unbounded".into();
                 cfg.ingress.schedule = "fifo".into();
+                cfg.ingress.tenants.clear();
             }
             SystemUnderTest::CrewLike => {
                 cfg.policies.clear();
@@ -76,6 +84,7 @@ impl SystemUnderTest {
                 cfg.engine.kv_policy = "lru".into();
                 cfg.ingress.policy = "unbounded".into();
                 cfg.ingress.schedule = "fifo".into();
+                cfg.ingress.tenants.clear();
             }
             SystemUnderTest::AutoGenLike => {
                 cfg.policies.clear();
@@ -83,6 +92,7 @@ impl SystemUnderTest {
                 cfg.engine.kv_policy = "lru".into();
                 cfg.ingress.policy = "unbounded".into();
                 cfg.ingress.schedule = "fifo".into();
+                cfg.ingress.tenants.clear();
             }
         }
     }
@@ -127,14 +137,28 @@ mod tests {
         for s in baselines {
             let mut cfg = base_cfg();
             cfg.policies = vec!["load_balance".into()];
+            cfg.ingress.tenants = vec![crate::config::TenantSettings::default()];
             s.apply(&mut cfg);
             assert!(cfg.policies.is_empty(), "{}", s.name());
             assert!(!cfg.control.enable_migration);
             assert_eq!(cfg.ingress.policy, "unbounded", "{} has no admission control", s.name());
             assert_eq!(cfg.ingress.schedule, "fifo", "{} has no front-door SRTF", s.name());
+            assert!(
+                cfg.ingress.tenants.is_empty(),
+                "{} must run the single-tenant front door",
+                s.name()
+            );
             let (sticky, _) = s.router_mode();
             assert!(sticky, "{} must be session-sticky", s.name());
         }
+    }
+
+    #[test]
+    fn nalar_keeps_its_tenants() {
+        let mut cfg = base_cfg();
+        cfg.ingress.tenants = vec![crate::config::TenantSettings::default()];
+        SystemUnderTest::Nalar.apply(&mut cfg);
+        assert_eq!(cfg.ingress.tenants.len(), 1, "tenancy is a NALAR capability");
     }
 
     #[test]

@@ -201,6 +201,7 @@ pub fn validate(report: &Value) -> Result<()> {
             "shed",
             "cancelled",
             "schedule",
+            "tenants",
             "goodput_rps",
             "shed_rate",
         ],
@@ -210,6 +211,30 @@ pub fn validate(report: &Value) -> Result<()> {
         for key in required {
             if p.get(key).is_null() {
                 return Err(fail(format!("{bench} point {i}: missing `{key}`")));
+            }
+        }
+        // The per-tenant split must be a non-empty map: every point has
+        // at least the implicit `default` tenant, and each entry carries
+        // its own goodput (the ROADMAP's "report per-tenant goodput in
+        // the rps_sweep schema").
+        if bench == "rps_sweep" {
+            match p.get("tenants").as_obj() {
+                Some(m) if !m.is_empty() => {
+                    for (name, t) in m {
+                        for key in ["offered", "completed", "shed", "goodput_rps", "weight"] {
+                            if t.get(key).is_null() {
+                                return Err(fail(format!(
+                                    "{bench} point {i}: tenant `{name}` missing `{key}`"
+                                )));
+                            }
+                        }
+                    }
+                }
+                _ => {
+                    return Err(fail(format!(
+                        "{bench} point {i}: `tenants` must be a non-empty map"
+                    )))
+                }
             }
         }
         let lat = p.get("latency");
@@ -708,6 +733,13 @@ mod tests {
         assert!(validate(&empty).is_err());
     }
 
+    fn tenants_map() -> Value {
+        json!({"default": {
+            "weight": 1.0, "offered": 640, "completed": 600, "shed": 30, "cancelled": 2,
+            "missed": 8, "goodput_rps": 75.0
+        }})
+    }
+
     #[test]
     fn validate_accepts_rps_sweep_points() {
         let mut p = json!({
@@ -717,6 +749,7 @@ mod tests {
             "goodput_rps": 75.0, "shed_rate": 0.047
         });
         p.insert("latency", lat());
+        p.insert("tenants", tenants_map());
         validate(&minimal_report("rps_sweep", p)).unwrap();
         let mut missing = json!({"workflow": "router", "system": "NALAR"});
         missing.insert("latency", lat());
@@ -728,8 +761,36 @@ mod tests {
             "goodput_rps": 75.0, "shed_rate": 0.047
         });
         stale.insert("latency", lat());
+        stale.insert("tenants", tenants_map());
         let err = validate(&minimal_report("rps_sweep", stale)).unwrap_err();
         assert!(err.to_string().contains("cancelled"), "{err}");
+    }
+
+    #[test]
+    fn validate_requires_the_per_tenant_map() {
+        let base = || {
+            let mut p = json!({
+                "workflow": "router", "system": "NALAR", "rps_wall": 80.0, "rps_paper": 8.0,
+                "offered": 640, "completed": 600, "failed": 4, "expired_in_queue": 4,
+                "shed": 30, "cancelled": 2, "schedule": "fifo",
+                "goodput_rps": 75.0, "shed_rate": 0.047
+            });
+            p.insert("latency", lat());
+            p
+        };
+        // pre-tenancy reports (no map at all) fail
+        let err = validate(&minimal_report("rps_sweep", base())).unwrap_err();
+        assert!(err.to_string().contains("tenants"), "{err}");
+        // an empty map fails: every point has at least the default tenant
+        let mut empty = base();
+        empty.insert("tenants", json!({}));
+        assert!(validate(&minimal_report("rps_sweep", empty)).is_err());
+        // a tenant entry without its goodput fails
+        let mut no_goodput = base();
+        no_goodput.insert("tenants", json!({"hog": {"weight": 1.0, "offered": 10,
+            "completed": 5, "shed": 0}}));
+        let err = validate(&minimal_report("rps_sweep", no_goodput)).unwrap_err();
+        assert!(err.to_string().contains("goodput_rps"), "{err}");
     }
 
     #[test]

@@ -159,6 +159,34 @@ pub struct AgentConfig {
     pub failure_rate: f64,
 }
 
+/// One tenant sharing the ingress front door (`ingress.tenants[]`).
+///
+/// Tenancy is the §4 policy story applied to the front door itself:
+/// heterogeneous traffic classes (interactive users vs batch pipelines,
+/// or different customers) share each workflow's queue, and without
+/// isolation one aggressive tenant starves everyone behind the same
+/// admission cap. Each tenant gets a weight (deficit-round-robin share
+/// of front-door service under backlog) and, optionally, its own token
+/// bucket layered *under* the shared admission policy.
+#[derive(Debug, Clone)]
+pub struct TenantSettings {
+    pub name: String,
+    /// DRR weight: relative share of front-door service while the tenant
+    /// stays backlogged. Must be > 0; equal weights = plain round-robin.
+    pub weight: f64,
+    /// Per-tenant token-bucket refill (requests/second on the scheduler's
+    /// clock). 0 = no per-tenant bucket (the shared policy still applies).
+    pub token_rate: f64,
+    /// Per-tenant token-bucket burst size (only meaningful with a rate).
+    pub token_burst: f64,
+}
+
+impl Default for TenantSettings {
+    fn default() -> Self {
+        TenantSettings { name: "default".into(), weight: 1.0, token_rate: 0.0, token_burst: 32.0 }
+    }
+}
+
 /// Ingress front-door settings (the open-loop serving mode; see
 /// [`crate::ingress`]). Baselines are forced to `unbounded` admission by
 /// [`crate::baselines::SystemUnderTest::apply`] — none of the compared
@@ -188,6 +216,13 @@ pub struct IngressSettings {
     pub token_rate: f64,
     /// Token-bucket burst size.
     pub token_burst: f64,
+    /// Tenants sharing this front door (weighted-fair DRR queues +
+    /// per-tenant token buckets). Empty = one implicit `default` tenant,
+    /// which degenerates to the pre-tenancy single queue. Baselines are
+    /// forced back to that single tenant by
+    /// `baselines::SystemUnderTest::apply` — none of the compared systems
+    /// isolates tenants at its front door.
+    pub tenants: Vec<TenantSettings>,
 }
 
 impl Default for IngressSettings {
@@ -200,6 +235,7 @@ impl Default for IngressSettings {
             max_in_flight: 1024,
             token_rate: 0.0,
             token_burst: 32.0,
+            tenants: Vec::new(),
         }
     }
 }
@@ -267,6 +303,23 @@ impl DeploymentConfig {
         let ingress = {
             let i = v.get("ingress");
             let di = IngressSettings::default();
+            let tenants = i
+                .get("tenants")
+                .as_arr()
+                .map(|a| {
+                    a.iter()
+                        .map(|t| {
+                            let dt = TenantSettings::default();
+                            TenantSettings {
+                                name: t.str_or("name", &dt.name).to_string(),
+                                weight: t.f64_or("weight", dt.weight),
+                                token_rate: t.f64_or("token_rate", dt.token_rate),
+                                token_burst: t.f64_or("token_burst", dt.token_burst),
+                            }
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
             IngressSettings {
                 policy: i.str_or("policy", &di.policy).to_string(),
                 schedule: i.str_or("schedule", &di.schedule).to_string(),
@@ -275,6 +328,7 @@ impl DeploymentConfig {
                 max_in_flight: i.u64_or("max_in_flight", di.max_in_flight as u64) as usize,
                 token_rate: i.f64_or("token_rate", di.token_rate),
                 token_burst: i.f64_or("token_burst", di.token_burst),
+                tenants,
             }
         };
         let agents = v
@@ -395,13 +449,16 @@ impl DeploymentConfig {
         if self.agents.is_empty() {
             return Err(Error::Config("no agents declared".into()));
         }
-        if !["unbounded", "bounded", "token_bucket"].contains(&self.ingress.policy.as_str()) {
+        // One parse authority per name set: `AdmissionPolicy::parse` owns
+        // the admission names (previously a typo silently fell through
+        // `from_settings`' Bounded fallback), `SchedulePolicy::parse` the
+        // scheduling names.
+        if crate::ingress::AdmissionPolicy::parse(&self.ingress.policy).is_none() {
             return Err(Error::Config(format!(
-                "unknown ingress policy `{}`",
+                "unknown ingress policy `{}` (known: unbounded, bounded, token_bucket)",
                 self.ingress.policy
             )));
         }
-        // One parse authority: `SchedulePolicy::parse` owns the name set.
         if crate::ingress::SchedulePolicy::parse(&self.ingress.schedule).is_none() {
             return Err(Error::Config(format!(
                 "unknown ingress schedule `{}` (known: fifo, deadline_slack, stage)",
@@ -413,6 +470,33 @@ impl DeploymentConfig {
         }
         if self.ingress.max_in_flight == 0 {
             return Err(Error::Config("ingress.max_in_flight must be >= 1".into()));
+        }
+        let mut tenant_names = std::collections::HashSet::new();
+        for t in &self.ingress.tenants {
+            if t.name.is_empty() {
+                return Err(Error::Config("ingress tenant with empty name".into()));
+            }
+            if !tenant_names.insert(&t.name) {
+                return Err(Error::Config(format!("duplicate ingress tenant `{}`", t.name)));
+            }
+            if !(t.weight > 0.0 && t.weight.is_finite()) {
+                return Err(Error::Config(format!(
+                    "tenant `{}`: weight must be a finite number > 0",
+                    t.name
+                )));
+            }
+            if !(t.token_rate >= 0.0 && t.token_rate.is_finite()) {
+                return Err(Error::Config(format!(
+                    "tenant `{}`: token_rate must be a finite number >= 0",
+                    t.name
+                )));
+            }
+            if t.token_rate > 0.0 && (!t.token_burst.is_finite() || t.token_burst < 1.0) {
+                return Err(Error::Config(format!(
+                    "tenant `{}`: token_burst must be >= 1 when token_rate is set",
+                    t.name
+                )));
+            }
         }
         Ok(())
     }
@@ -468,6 +552,58 @@ mod tests {
         let bad_sched = r#"{"ingress": {"schedule": "lifo"},
                             "agents": [{"name": "a", "kind": "llm"}]}"#;
         assert!(DeploymentConfig::from_json(bad_sched).is_err());
+    }
+
+    #[test]
+    fn admission_policy_typos_fail_at_load_time() {
+        // Regression: `AdmissionPolicy::from_settings` silently mapped any
+        // unknown name to `Bounded`; validation must reject the typo
+        // before a deployment launches with the wrong admission behaviour.
+        for typo in ["bouned", "token-bucket", "Unbounded", ""] {
+            let y = format!(
+                r#"{{"ingress": {{"policy": "{typo}"}},
+                     "agents": [{{"name": "a", "kind": "llm"}}]}}"#
+            );
+            let err = DeploymentConfig::from_json(&y).unwrap_err();
+            assert!(err.to_string().contains("unknown ingress policy"), "{typo}: {err}");
+        }
+    }
+
+    #[test]
+    fn tenants_block_parses_and_validates() {
+        let y = r#"{"ingress": {"tenants": [
+                      {"name": "interactive", "weight": 3.0},
+                      {"name": "batch", "weight": 1.0, "token_rate": 20.0, "token_burst": 8.0}]},
+                    "agents": [{"name": "a", "kind": "llm", "methods": ["m"]}]}"#;
+        let c = DeploymentConfig::from_json(y).unwrap();
+        assert_eq!(c.ingress.tenants.len(), 2);
+        assert_eq!(c.ingress.tenants[0].name, "interactive");
+        assert_eq!(c.ingress.tenants[0].weight, 3.0);
+        assert_eq!(c.ingress.tenants[0].token_rate, 0.0, "no bucket unless configured");
+        assert_eq!(c.ingress.tenants[1].token_rate, 20.0);
+        assert_eq!(c.ingress.tenants[1].token_burst, 8.0);
+        // no tenants block = empty table (the ingress substitutes the
+        // implicit single `default` tenant)
+        let none = DeploymentConfig::from_json(MINIMAL).unwrap();
+        assert!(none.ingress.tenants.is_empty());
+    }
+
+    #[test]
+    fn rejects_invalid_tenants() {
+        for (tenants, what) in [
+            (r#"[{"name": "a"}, {"name": "a"}]"#, "duplicate"),
+            (r#"[{"name": ""}]"#, "empty name"),
+            (r#"[{"name": "a", "weight": 0.0}]"#, "zero weight"),
+            (r#"[{"name": "a", "weight": -2.0}]"#, "negative weight"),
+            (r#"[{"name": "a", "token_rate": -1.0}]"#, "negative rate"),
+            (r#"[{"name": "a", "token_rate": 5.0, "token_burst": 0.0}]"#, "zero burst"),
+        ] {
+            let y = format!(
+                r#"{{"ingress": {{"tenants": {tenants}}},
+                     "agents": [{{"name": "x", "kind": "llm"}}]}}"#
+            );
+            assert!(DeploymentConfig::from_json(&y).is_err(), "must reject: {what}");
+        }
     }
 
     #[test]

@@ -330,6 +330,14 @@ mod tests {
                 policy: "bounded".into(),
                 accepted: 100,
                 shed: 9,
+                tenants: vec![crate::coordinator::TenantMetrics {
+                    tenant: "batch".into(),
+                    weight: 2.0,
+                    depth: 17,
+                    accepted: 100,
+                    shed: 9,
+                    ..Default::default()
+                }],
                 ..Default::default()
             },
         );
@@ -339,6 +347,13 @@ mod tests {
         assert_eq!(ing.workflow, "router");
         assert_eq!(ing.depth, 17);
         assert_eq!(ing.shed, 9, "shed counts must reach policies");
+        // the per-tenant split rides the same snapshot: tenant-aware
+        // policies (per-tenant SLOs, weighted provisioning) need no new
+        // plumbing
+        assert_eq!(ing.tenants.len(), 1);
+        assert_eq!(ing.tenants[0].tenant, "batch");
+        assert_eq!(ing.tenants[0].weight, 2.0);
+        assert_eq!(ing.tenants[0].shed, 9, "per-tenant sheds must reach policies");
     }
 
     #[test]

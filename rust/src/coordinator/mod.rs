@@ -87,4 +87,32 @@ pub struct IngressMetrics {
     /// kept apart from `failed` so a slow driver and an overloaded queue
     /// are distinguishable in telemetry and the rps_sweep schema.
     pub expired_in_queue: u64,
+    /// Per-tenant split of this queue's traffic (weighted-fair DRR
+    /// sub-queues + per-tenant token buckets; see `ingress::fairness`).
+    /// Always at least one entry — the implicit `default` tenant when the
+    /// deployment configures no `ingress.tenants` block. The aggregate
+    /// counters above are the sums of these.
+    pub tenants: Vec<TenantMetrics>,
+}
+
+/// One tenant's slice of a workflow queue's front-door telemetry. The
+/// global controller sees these inside [`IngressMetrics`] via the same
+/// `ClusterView.ingress` it already consumes, so per-tenant-aware
+/// policies (per-tenant SLOs, tenant-weighted provisioning) need no new
+/// plumbing.
+#[derive(Debug, Clone, Default)]
+pub struct TenantMetrics {
+    pub tenant: String,
+    /// DRR weight (relative service share under backlog).
+    pub weight: f64,
+    /// Requests of this tenant waiting in its sub-queue right now.
+    pub depth: usize,
+    pub accepted: u64,
+    /// Sheds charged to this tenant — by its own token bucket or by the
+    /// shared admission policy while this tenant was submitting.
+    pub shed: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub expired_in_queue: u64,
+    pub cancelled: u64,
 }

@@ -3,7 +3,7 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use std::sync::RwLock;
+use std::sync::{Mutex, RwLock};
 
 use crate::futures::{FutureCell, FutureState};
 use crate::ids::{FutureId, RequestId};
@@ -16,6 +16,21 @@ const SHARDS: usize = 32;
 /// contending (§Perf: the Fig-10 loop reads while 128 agents write).
 pub struct FutureTable {
     shards: Vec<RwLock<HashMap<FutureId, Arc<FutureCell>>>>,
+    /// `RequestId -> FutureId`s created for it, maintained at
+    /// [`FutureTable::insert`] so [`FutureTable::fail_request`] is
+    /// O(futures-of-request) instead of a full-table scan — at the
+    /// paper's 131K-live-futures scale a cancel must not walk every
+    /// shard. Sharded by request id with the same fan-out as the cell
+    /// map: the index rides the insert hot path, and a single mutex
+    /// there would re-serialize exactly the concurrent writers the
+    /// 32-way sharding exists for. Entries are evicted by the
+    /// request-completion hook ([`FutureTable::on_request_complete`],
+    /// called by the ingress scheduler and the blocking driver shim at
+    /// every terminal outcome) or by `fail_request` itself, so the index
+    /// cannot grow unboundedly. Ids may go stale between a future's GC
+    /// and the request's end — lookups just miss; only the eviction hook
+    /// removes the entry.
+    by_request: Vec<Mutex<HashMap<RequestId, Vec<FutureId>>>>,
 }
 
 impl Default for FutureTable {
@@ -28,6 +43,7 @@ impl FutureTable {
     pub fn new() -> Self {
         FutureTable {
             shards: (0..SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+            by_request: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
         }
     }
 
@@ -35,8 +51,14 @@ impl FutureTable {
         &self.shards[(id.0 as usize) % SHARDS]
     }
 
+    fn request_shard(&self, request: RequestId) -> &Mutex<HashMap<RequestId, Vec<FutureId>>> {
+        &self.by_request[(request.0 as usize) % SHARDS]
+    }
+
     pub fn insert(&self, cell: Arc<FutureCell>) {
-        self.shard(cell.id).write().unwrap().insert(cell.id, cell);
+        let (id, request) = (cell.id, cell.with_meta(|m| m.request));
+        self.shard(id).write().unwrap().insert(id, cell);
+        self.request_shard(request).lock().unwrap().entry(request).or_default().push(id);
     }
 
     pub fn get(&self, id: FutureId) -> Option<Arc<FutureCell>> {
@@ -76,33 +98,44 @@ impl FutureTable {
     }
 
     /// Fail every non-terminal future belonging to `request` (request
-    /// cancellation via `Ticket::cancel`, or deadline expiry of a started
-    /// request): consumers observe the failure immediately instead of
-    /// waiting out an answer nobody wants. Returns how many futures were
-    /// failed. The cells are collected under the shard locks but failed
-    /// outside them — `fail` fires wakers, and a waker is free to take
+    /// cancellation via `Ticket::cancel`, deadline expiry of a started
+    /// request, or ingress shutdown): consumers observe the failure
+    /// immediately instead of waiting out an answer nobody wants.
+    /// Returns how many futures were failed. O(futures-of-request) via
+    /// the `by_request` index (this also consumes the request's index
+    /// entry — abandonment is terminal, so a second call finds nothing).
+    /// The cells are resolved outside both the index lock and the shard
+    /// locks — `fail` fires wakers, and a waker is free to take
     /// unrelated locks (the ingress scheduler's, for one).
-    ///
-    /// Deliberately a full-table scan: cancels/expiries are orders of
-    /// magnitude rarer than resolves, `gc_terminal` bounds the live set,
-    /// and a by-request index would need an eviction hook the table does
-    /// not have (requests finish without telling it) — see the ROADMAP
-    /// item before reaching for one.
     pub fn fail_request(&self, request: RequestId, reason: &str) -> usize {
-        let mut doomed: Vec<Arc<FutureCell>> = Vec::new();
-        for shard in &self.shards {
-            for cell in shard.read().unwrap().values() {
-                if !matches!(cell.state(), FutureState::Ready | FutureState::Failed)
-                    && cell.with_meta(|m| m.request) == request
-                {
-                    doomed.push(cell.clone());
-                }
-            }
-        }
+        let ids =
+            self.request_shard(request).lock().unwrap().remove(&request).unwrap_or_default();
+        let doomed: Vec<Arc<FutureCell>> = ids
+            .into_iter()
+            .filter_map(|id| self.get(id))
+            .filter(|cell| !matches!(cell.state(), FutureState::Ready | FutureState::Failed))
+            .collect();
         for cell in &doomed {
             cell.fail(reason);
         }
         doomed.len()
+    }
+
+    /// Request-completion hook: drop `request`'s entry from the
+    /// per-request index. Called on every *terminal* outcome that does
+    /// not go through [`Self::fail_request`] — ingress completion, and
+    /// the blocking driver shim's exit — so the index stays bounded by
+    /// the live request set. Idempotent; the futures themselves are
+    /// untouched (`gc_terminal` reaps them on its own schedule).
+    pub fn on_request_complete(&self, request: RequestId) {
+        self.request_shard(request).lock().unwrap().remove(&request);
+    }
+
+    /// Live entries in the per-request index (telemetry / leak gates: a
+    /// non-zero value after every request reached a terminal outcome is a
+    /// lifecycle bug).
+    pub fn request_index_len(&self) -> usize {
+        self.by_request.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
     /// Drop terminal futures older than keeping is useful; returns count
@@ -185,6 +218,36 @@ mod tests {
         assert!(done.try_value().unwrap().is_ok(), "resolved value is immutable");
         assert_eq!(t.get(FutureId(4)).unwrap().state(), FutureState::Created);
         assert_eq!(t.fail_request(RequestId(7), "again"), 0, "idempotent");
+    }
+
+    #[test]
+    fn request_index_is_maintained_and_evicted() {
+        let t = FutureTable::new();
+        // completion path: the hook alone evicts
+        t.insert(cell_for(1, 7));
+        t.insert(cell_for(2, 7));
+        t.insert(cell_for(3, 8));
+        assert_eq!(t.request_index_len(), 2, "one entry per live request");
+        t.on_request_complete(RequestId(7));
+        assert_eq!(t.request_index_len(), 1, "completion hook evicts");
+        t.on_request_complete(RequestId(7)); // idempotent
+        assert_eq!(t.request_index_len(), 1);
+        // cancel/expiry path: fail_request consumes the entry itself
+        assert_eq!(t.fail_request(RequestId(8), "request cancelled"), 1);
+        assert_eq!(t.request_index_len(), 0, "abandonment evicts");
+        // after eviction a fail_request finds no index entry and fails
+        // nothing — eviction is only correct on *terminal* requests,
+        // which is why the hook sits on the scheduler's terminal paths
+        assert_eq!(t.fail_request(RequestId(7), "request deadline expired"), 0);
+        assert_eq!(t.request_index_len(), 0);
+        // GC'd futures leave stale ids behind; failing that request later
+        // just misses them instead of erroring
+        t.insert(cell_for(10, 9));
+        t.get(FutureId(10)).unwrap().resolve(crate::json!(1), 0);
+        assert_eq!(t.gc_terminal(), 1);
+        assert_eq!(t.request_index_len(), 1, "index waits for the request hook");
+        assert_eq!(t.fail_request(RequestId(9), "late cancel"), 0, "stale id is a miss");
+        assert_eq!(t.request_index_len(), 0);
     }
 
     #[test]

@@ -40,6 +40,15 @@ id_u64!(
     /// One agent/tool invocation's coordination handle.
     FutureId, "f"
 );
+id_u64!(
+    /// A tenant sharing the serving front door: an index into the
+    /// deployment's `ingress.tenants` table, stamped on every request at
+    /// admission (`ingress::Ingress::submit_with`). Tenancy is a
+    /// front-door concept — weighted-fair queueing and per-tenant token
+    /// buckets key on it — so requests below the ingress layer carry it
+    /// only through their `RequestId`.
+    TenantId, "t"
+);
 
 /// An emulated node of the cluster (owns a node store + instances).
 #[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]

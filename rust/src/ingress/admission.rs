@@ -11,7 +11,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::config::IngressSettings;
+use crate::config::{IngressSettings, TenantSettings};
 
 /// How the front door decides accept-vs-shed at submit time.
 #[derive(Debug, Clone)]
@@ -29,15 +29,50 @@ pub enum AdmissionPolicy {
 }
 
 impl AdmissionPolicy {
-    /// Resolve the configured policy (`DeploymentConfig.ingress`).
+    /// Parse a config/CLI policy name ("unbounded" | "bounded" |
+    /// "token_bucket"). The name picks the *variant*; parameters come
+    /// from [`Self::from_settings`]. This is the name-validity authority
+    /// config validation uses (mirroring
+    /// [`crate::ingress::SchedulePolicy::parse`]), so a typo fails at
+    /// load time instead of silently running `bounded`.
+    pub fn parse(s: &str) -> Option<AdmissionPolicy> {
+        match s {
+            "unbounded" => Some(AdmissionPolicy::Unbounded),
+            "bounded" => Some(AdmissionPolicy::Bounded {
+                cap: IngressSettings::default().queue_cap,
+            }),
+            "token_bucket" => Some(AdmissionPolicy::TokenBucket {
+                rate: f64::INFINITY,
+                burst: IngressSettings::default().token_burst,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Resolve the configured policy (`DeploymentConfig.ingress`);
+    /// unknown names fall back to `Bounded` (config validation rejects
+    /// them via [`Self::parse`] before a deployment ever launches).
     pub fn from_settings(s: &IngressSettings) -> AdmissionPolicy {
-        match s.policy.as_str() {
-            "unbounded" => AdmissionPolicy::Unbounded,
-            "token_bucket" => AdmissionPolicy::TokenBucket {
+        match Self::parse(&s.policy) {
+            Some(AdmissionPolicy::Unbounded) => AdmissionPolicy::Unbounded,
+            Some(AdmissionPolicy::TokenBucket { .. }) => AdmissionPolicy::TokenBucket {
                 rate: if s.token_rate > 0.0 { s.token_rate } else { f64::INFINITY },
                 burst: s.token_burst.max(1.0),
             },
-            _ => AdmissionPolicy::Bounded { cap: s.queue_cap.max(1) },
+            Some(AdmissionPolicy::Bounded { .. }) | None => {
+                AdmissionPolicy::Bounded { cap: s.queue_cap.max(1) }
+            }
+        }
+    }
+
+    /// The admission layer one tenant adds *under* the shared policy:
+    /// its own token bucket when the tenant configures a rate, otherwise
+    /// nothing (`Unbounded` — the shared policy still applies on top).
+    pub fn for_tenant(t: &TenantSettings) -> AdmissionPolicy {
+        if t.token_rate > 0.0 {
+            AdmissionPolicy::TokenBucket { rate: t.token_rate, burst: t.token_burst.max(1.0) }
+        } else {
+            AdmissionPolicy::Unbounded
         }
     }
 
@@ -101,7 +136,20 @@ impl AdmissionController {
     /// function of the timestamps the test chooses. Time never runs
     /// backwards (an older `now` refills nothing).
     pub fn admit_at(&self, depth: usize, now: Instant) -> Result<(), String> {
-        let verdict = match &self.policy {
+        let verdict = self.decide_at(depth, now);
+        self.record(verdict.is_ok());
+        verdict
+    }
+
+    /// The decision alone, without touching the accept/shed counters.
+    /// The ingress layers per-tenant token buckets under the shared
+    /// per-workflow policy and must count each submit exactly once, on
+    /// the *composed* verdict — so it decides through this and folds the
+    /// final verdict in via [`Self::record`]. Token-bucket state still
+    /// advances on `Ok` (an admitted request consumed its token even if a
+    /// later layer sheds it: conservative under overload).
+    pub fn decide_at(&self, depth: usize, now: Instant) -> Result<(), String> {
+        match &self.policy {
             AdmissionPolicy::Unbounded => Ok(()),
             AdmissionPolicy::Bounded { cap } => {
                 if depth >= *cap {
@@ -122,12 +170,17 @@ impl AdmissionController {
                     Err(format!("rate limit ({rate:.1} rps)"))
                 }
             }
-        };
-        match &verdict {
-            Ok(()) => self.accepted.fetch_add(1, Ordering::Relaxed),
-            Err(_) => self.shed.fetch_add(1, Ordering::Relaxed),
-        };
-        verdict
+        }
+    }
+
+    /// Fold a composed verdict into the accept/shed counters (exactly
+    /// once per submit; see [`Self::decide_at`]).
+    pub fn record(&self, admitted: bool) {
+        if admitted {
+            self.accepted.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+        }
     }
 }
 
@@ -147,6 +200,50 @@ mod tests {
             AdmissionPolicy::from_settings(&s),
             AdmissionPolicy::TokenBucket { .. }
         ));
+    }
+
+    #[test]
+    fn parse_is_the_name_authority() {
+        // every known policy round-trips through its own name...
+        for name in ["unbounded", "bounded", "token_bucket"] {
+            let p = AdmissionPolicy::parse(name).expect(name);
+            assert_eq!(p.name(), name);
+        }
+        // ...and typos are rejected instead of silently becoming Bounded
+        // (the bug: `from_settings` used to eat them via its fallback arm)
+        for typo in ["bouned", "token-bucket", "Unbounded", "fifo", ""] {
+            assert!(AdmissionPolicy::parse(typo).is_none(), "{typo} must not parse");
+        }
+    }
+
+    #[test]
+    fn for_tenant_builds_a_bucket_only_when_a_rate_is_set() {
+        let mut t = TenantSettings::default();
+        assert!(matches!(AdmissionPolicy::for_tenant(&t), AdmissionPolicy::Unbounded));
+        t.token_rate = 25.0;
+        t.token_burst = 4.0;
+        match AdmissionPolicy::for_tenant(&t) {
+            AdmissionPolicy::TokenBucket { rate, burst } => {
+                assert_eq!(rate, 25.0);
+                assert_eq!(burst, 4.0);
+            }
+            other => panic!("expected a token bucket, got {}", other.name()),
+        }
+    }
+
+    #[test]
+    fn decide_then_record_matches_admit_at() {
+        // The split path (used by the ingress to compose tenant buckets
+        // with the shared policy) must count exactly once per verdict.
+        let c = AdmissionController::new(AdmissionPolicy::Bounded { cap: 2 });
+        let now = Instant::now();
+        let ok = c.decide_at(0, now);
+        c.record(ok.is_ok());
+        let shed = c.decide_at(2, now);
+        c.record(shed.is_ok());
+        assert!(ok.is_ok() && shed.is_err());
+        assert_eq!(c.accepted.load(Ordering::Relaxed), 1);
+        assert_eq!(c.shed.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -19,19 +19,73 @@ use std::time::{Duration, Instant};
 
 use crate::baselines::SystemUnderTest;
 use crate::bench;
-use crate::config::DeploymentConfig;
+use crate::config::{DeploymentConfig, TenantSettings};
 use crate::error::{Error, Result};
 use crate::ids::SessionId;
-use crate::ingress::{Ingress, SchedulePolicy};
+use crate::ingress::{Ingress, SchedulePolicy, SubmitOpts, Ticket};
 use crate::json;
 use crate::metrics::{goodput, shed_rate, LatencyRecorder};
 use crate::server::Deployment;
 use crate::util::bench::Table;
-use crate::util::json::Value;
+use crate::util::json::{self as json_util, Value};
 use crate::util::rng::Rng;
 use crate::workflow::harness::input_for;
 use crate::workflow::WorkflowKind;
 use crate::workload::Arrivals;
+
+/// One tenant of the offered load (`--tenants`): `share` splits the
+/// Poisson arrival stream (relative, not normalised), `weight` is the
+/// DRR weight installed into the deployment's `ingress.tenants`.
+#[derive(Debug, Clone)]
+pub struct TenantLoad {
+    pub name: String,
+    pub share: f64,
+    pub weight: f64,
+}
+
+/// The noisy-neighbor profile (`--tenants noisy`): two *equal-weight*
+/// tenants where `hog` offers 10x `meek`'s rate — the ISSUE's fairness
+/// scenario. Under a single shared queue the hog's backlog starves the
+/// meek tenant past its deadlines; under DRR the meek tenant's goodput
+/// tracks its weight share of capacity.
+pub fn noisy_neighbor() -> Vec<TenantLoad> {
+    vec![
+        TenantLoad { name: "hog".into(), share: 10.0, weight: 1.0 },
+        TenantLoad { name: "meek".into(), share: 1.0, weight: 1.0 },
+    ]
+}
+
+/// Parse a `--tenants` spec: the literal `noisy` (the profile above) or
+/// a comma list of `name:share[:weight]`, e.g. `a:10,b:1` or
+/// `hog:10:1,meek:1:3`. Returns `None` on malformed specs, non-positive
+/// shares/weights or duplicate names.
+pub fn parse_tenant_mix(spec: &str) -> Option<Vec<TenantLoad>> {
+    if spec == "noisy" {
+        return Some(noisy_neighbor());
+    }
+    let mut out: Vec<TenantLoad> = Vec::new();
+    for part in spec.split(',') {
+        let fields: Vec<&str> = part.trim().split(':').collect();
+        let (name, share, weight) = match fields.as_slice() {
+            [name, share] => (*name, *share, "1"),
+            [name, share, weight] => (*name, *share, *weight),
+            _ => return None,
+        };
+        if name.is_empty() || out.iter().any(|t| t.name == name) {
+            return None;
+        }
+        let share: f64 = share.parse().ok()?;
+        let weight: f64 = weight.parse().ok()?;
+        if !(share > 0.0 && share.is_finite() && weight > 0.0 && weight.is_finite()) {
+            return None;
+        }
+        out.push(TenantLoad { name: name.to_string(), share, weight });
+    }
+    if out.is_empty() {
+        return None;
+    }
+    Some(out)
+}
 
 /// One `nalar loadgen` invocation.
 #[derive(Debug, Clone)]
@@ -81,6 +135,14 @@ pub struct LoadgenOpts {
     /// forced back to `fifo` by `SystemUnderTest::apply`, so the axis
     /// measures NALAR's front-door SRTF against its own FIFO.
     pub schedules: Option<Vec<String>>,
+    /// Multi-tenant offered load (`--tenants`): splits the arrival
+    /// stream across named tenants by `share` and installs their DRR
+    /// `weight`s into `ingress.tenants`. Baselines are forced back to
+    /// the single-tenant queue by `SystemUnderTest::apply` (submitted
+    /// tenant names collapse onto it), so the per-tenant report rows
+    /// show exactly the starvation DRR prevents. None = the config's
+    /// tenants (requests submit as the default tenant).
+    pub tenants: Option<Vec<TenantLoad>>,
 }
 
 impl LoadgenOpts {
@@ -103,6 +165,7 @@ impl LoadgenOpts {
             expect_admitted_complete: false,
             cancel_rate: 0.0,
             schedules: None,
+            tenants: None,
         }
     }
 
@@ -128,6 +191,7 @@ impl LoadgenOpts {
             expect_admitted_complete: false,
             cancel_rate: 0.0,
             schedules: None,
+            tenants: None,
         }
     }
 
@@ -193,6 +257,22 @@ pub fn run(opts: &LoadgenOpts) -> Result<PathBuf> {
                     rps,
                     t0.elapsed()
                 );
+                if opts.tenants.is_some() {
+                    if let Some(tm) = p.get("tenants").as_obj() {
+                        for (name, t) in tm {
+                            println!(
+                                "[loadgen]   tenant {:<8} offered {:>5} ok {:>5} shed {:>4} \
+                                 missed {:>4} goodput {:.1} rps",
+                                name,
+                                t.get("offered").as_u64().unwrap_or(0),
+                                t.get("completed").as_u64().unwrap_or(0),
+                                t.get("shed").as_u64().unwrap_or(0),
+                                t.get("missed").as_u64().unwrap_or(0),
+                                t.get("goodput_rps").as_f64().unwrap_or(0.0),
+                            );
+                        }
+                    }
+                }
                 table.row(&[
                     p.get("system").as_str().unwrap_or("?").to_string(),
                     p.get("schedule").as_str().unwrap_or("?").to_string(),
@@ -252,6 +332,20 @@ fn run_point(
     if let Some(w) = opts.workers {
         cfg.ingress.workers = w.max(1);
     }
+    if let Some(tenants) = &opts.tenants {
+        // Install the tenant mix BEFORE the system mode applies: NALAR
+        // keeps the weighted-fair table, baselines get it cleared (their
+        // front door is single-tenant), so the per-tenant report rows
+        // compare DRR isolation against genuine shared-queue starvation.
+        cfg.ingress.tenants = tenants
+            .iter()
+            .map(|t| TenantSettings {
+                name: t.name.clone(),
+                weight: t.weight,
+                ..TenantSettings::default()
+            })
+            .collect();
+    }
     if let Some(s) = schedule {
         // Validate eagerly: the config was checked before this override.
         if SchedulePolicy::parse(s).is_none() {
@@ -292,14 +386,39 @@ fn run_point(
     let mut turns = vec![0u64; sessions.len()];
     let mut rng = Rng::new(opts.seed ^ 0xFEED);
 
+    // The logical tenant mix: submit tenant names only when `--tenants`
+    // is in play. Attribution is *client-side* (the loadgen knows which
+    // tenant each arrival belonged to), so per-tenant rows stay
+    // comparable across systems even when a baseline's single-tenant
+    // front door collapses the names server-side.
+    let mix: Vec<TenantLoad> = match &opts.tenants {
+        Some(t) => t.clone(),
+        None => vec![TenantLoad { name: "default".into(), share: 1.0, weight: 1.0 }],
+    };
+    let total_share: f64 = mix.iter().map(|t| t.share).sum();
+    let named_tenants = opts.tenants.is_some();
+    let pick_tenant = |rng: &mut Rng| -> usize {
+        let mut u = (rng.next_u64() % 1_000_000) as f64 / 1_000_000.0 * total_share;
+        for (i, t) in mix.iter().enumerate() {
+            u -= t.share;
+            if u < 0.0 {
+                return i;
+            }
+        }
+        mix.len() - 1
+    };
+
     // Open loop: pace submissions on the arrival schedule; never wait for
     // completions in this loop. With `--cancel-rate`, a seeded fraction
     // of admitted requests is withdrawn at a uniform point inside its
     // deadline window — cancellations fire between arrivals, racing the
     // scheduler exactly like an impatient caller would.
-    let mut tickets = Vec::with_capacity(arrivals.len());
+    let mut tickets: Vec<Ticket> = Vec::with_capacity(arrivals.len());
+    let mut ticket_tenant: Vec<usize> = Vec::with_capacity(arrivals.len());
     let mut cancels: Vec<(Duration, usize)> = Vec::new(); // (due, ticket index)
     let mut shed = 0u64;
+    let mut t_offered = vec![0u64; mix.len()];
+    let mut t_shed = vec![0u64; mix.len()];
     let start = Instant::now();
     for at in &arrivals {
         let wait = at.saturating_sub(start.elapsed());
@@ -320,15 +439,26 @@ fn run_point(
         let turn = turns[sidx];
         turns[sidx] += 1;
         let input = input_for(opts.workflow, progress, turn, &mut rng);
-        match ingress.submit(opts.workflow, Some(sessions[sidx]), input, timeout) {
+        let tenant = pick_tenant(&mut rng);
+        t_offered[tenant] += 1;
+        let sopts = SubmitOpts {
+            session: Some(sessions[sidx]),
+            tenant: if named_tenants { Some(mix[tenant].name.clone()) } else { None },
+        };
+        match ingress.submit_with(opts.workflow, input, timeout, sopts) {
             Ok(t) => {
                 tickets.push(t);
+                ticket_tenant.push(tenant);
                 if opts.cancel_rate > 0.0 && rng.bool_with(opts.cancel_rate) {
                     let frac = (rng.next_u64() % 1024) as f64 / 1024.0;
                     cancels.push((now + timeout.mul_f64(frac), tickets.len() - 1));
                 }
             }
-            Err(_) => shed += 1, // fast retryable rejection, already counted
+            Err(_) => {
+                // fast retryable rejection, already counted server-side
+                shed += 1;
+                t_shed[tenant] += 1;
+            }
         }
     }
     // Cancels due after the offered window fire at window end (the drain
@@ -345,18 +475,33 @@ fn run_point(
     let tail_rec = LatencyRecorder::new(); // + timeouts censored at the deadline
     let mut completed = 0u64;
     let mut failed = 0u64;
-    for t in &tickets {
+    let mut t_completed = vec![0u64; mix.len()];
+    let mut t_cancelled = vec![0u64; mix.len()];
+    let mut t_missed = vec![0u64; mix.len()];
+    let mut t_failed = vec![0u64; mix.len()];
+    for (t, &tenant) in tickets.iter().zip(&ticket_tenant) {
         let outcome = t.wait(timeout + Duration::from_millis(50));
         let lat = t.latency().unwrap_or(timeout);
         match outcome {
             Ok(_) if lat <= timeout => {
                 completed += 1;
+                t_completed[tenant] += 1;
                 ok_rec.record(lat);
                 tail_rec.record(lat);
             }
-            Err(Error::Cancelled) => {}
-            _ => {
+            Err(Error::Cancelled) => t_cancelled[tenant] += 1,
+            outcome => {
                 failed += 1;
+                // `missed` is the starvation signal: a Deadline error OR
+                // a completion that landed past its deadline (a request
+                // mid-poll at expiry can still finish Ok-but-late) both
+                // mean the tenant was served too slowly; everything else
+                // is an execution failure.
+                if matches!(outcome, Err(Error::Deadline(_))) || outcome.is_ok() {
+                    t_missed[tenant] += 1;
+                } else {
+                    t_failed[tenant] += 1;
+                }
                 tail_rec.record(lat.min(timeout));
             }
         }
@@ -369,22 +514,31 @@ fn run_point(
     let expired_in_queue = m_end.expired_in_queue;
     let cancelled = m_end.cancelled;
     // Table-leak gate: with every ticket fulfilled, both scheduler tables
-    // must be empty — a lingering entry is a lifecycle bug (bounded grace
-    // for sweep/poll bookkeeping that runs just after fulfilment).
+    // must be empty — including every per-tenant DRR sub-queue — and the
+    // future table's per-request index must hold no entry (every terminal
+    // path evicts its request). A lingering entry is a lifecycle bug
+    // (bounded grace for sweep/poll bookkeeping that runs just after
+    // fulfilment).
+    let leak_of = |m: &crate::coordinator::IngressMetrics| {
+        let tenant_depth: usize = m.tenants.iter().map(|t| t.depth).max().unwrap_or(0);
+        (m.in_flight, m.depth, tenant_depth, d.table().request_index_len())
+    };
     let drained_at = Instant::now();
-    let mut leak = (m_end.in_flight, m_end.depth);
-    while leak != (0, 0) && drained_at.elapsed() < Duration::from_secs(2) {
+    let mut leak = leak_of(&m_end);
+    while leak != (0, 0, 0, 0) && drained_at.elapsed() < Duration::from_secs(2) {
         std::thread::sleep(Duration::from_millis(5));
-        let m = ingress.metrics(opts.workflow).unwrap_or_default();
-        leak = (m.in_flight, m.depth);
+        leak = leak_of(&ingress.metrics(opts.workflow).unwrap_or_default());
     }
     ingress.stop();
     d.shutdown();
-    if leak != (0, 0) {
+    if leak != (0, 0, 0, 0) {
         return Err(Error::Msg(format!(
-            "scheduler table leak after full drain: in_flight {} depth {} ({} {} @ {:.0} rps)",
+            "scheduler table leak after full drain: in_flight {} depth {} max-tenant-sub-queue \
+             {} request-index {} ({} {} @ {:.0} rps)",
             leak.0,
             leak.1,
+            leak.2,
+            leak.3,
             opts.workflow.name(),
             system.name(),
             rps,
@@ -416,6 +570,26 @@ fn run_point(
     });
     p.insert("latency", tail_rec.summary_scaled(paper).to_json());
     p.insert("latency_ok", ok_rec.summary_scaled(paper).to_json());
+    // Per-tenant rows (client-side attribution; see `mix` above): the
+    // ROADMAP's "report per-tenant goodput in the rps_sweep schema".
+    // `missed` is deadline misses — the starvation signal the
+    // noisy-neighbor profile exists to expose.
+    let mut tmap = json_util::Map::new();
+    for (i, t) in mix.iter().enumerate() {
+        let mut row = json!({
+            "weight": t.weight,
+            "share": t.share,
+            "offered": t_offered[i],
+            "completed": t_completed[i],
+            "shed": t_shed[i],
+            "cancelled": t_cancelled[i],
+            "missed": t_missed[i],
+            "failed": t_failed[i]
+        });
+        row.insert("goodput_rps", goodput(t_completed[i], window));
+        tmap.insert(t.name.clone(), row);
+    }
+    p.insert("tenants", Value::Obj(tmap));
     Ok(p)
 }
 
@@ -450,6 +624,71 @@ mod tests {
         assert_eq!(p.get("schedule").as_str(), Some("fifo"), "config default ordering");
         assert!(p.get("ingress_workers").as_u64().unwrap() >= 1);
         assert!(p.get("latency").get("p99").as_f64().is_some());
+        // no --tenants: the per-tenant map still exists, with everything
+        // attributed to the single logical `default` tenant
+        let tenants = p.get("tenants").as_obj().expect("tenants map required");
+        assert_eq!(tenants.len(), 1);
+        let def = p.get("tenants").get("default");
+        assert_eq!(def.get("offered").as_u64(), p.get("offered").as_u64());
+        assert_eq!(def.get("completed").as_u64(), p.get("completed").as_u64());
+        assert!(def.get("goodput_rps").as_f64().unwrap() > 0.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn parse_tenant_mix_specs() {
+        let noisy = parse_tenant_mix("noisy").unwrap();
+        assert_eq!(noisy.len(), 2);
+        assert_eq!(noisy[0].name, "hog");
+        assert_eq!(noisy[0].share, 10.0);
+        assert_eq!(noisy[0].weight, noisy[1].weight, "noisy neighbors have equal weights");
+        let mix = parse_tenant_mix("a:10,b:1:3").unwrap();
+        assert_eq!(mix[0].weight, 1.0, "weight defaults to 1");
+        assert_eq!((mix[1].share, mix[1].weight), (1.0, 3.0));
+        for bad in ["", "a", "a:0", "a:-1", "a:1:0", "a:1,a:2", ":1", "a:x", "a:1:1:1"] {
+            assert!(parse_tenant_mix(bad).is_none(), "must reject `{bad}`");
+        }
+    }
+
+    #[test]
+    fn noisy_neighbor_axis_reports_per_tenant_rows() {
+        let dir = std::env::temp_dir().join(format!("nalar-loadgen-nn-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let opts = LoadgenOpts {
+            systems: vec![SystemUnderTest::Nalar],
+            rates: vec![40.0],
+            session_pool: 8,
+            timeout_paper_s: 60.0,
+            time_scale: Some(0.0005),
+            out_dir: dir.clone(),
+            tenants: Some(noisy_neighbor()),
+            ..LoadgenOpts::quick(WorkflowKind::Router)
+        };
+        let path = run(&opts).unwrap();
+        let report = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let p = &report.get("points").as_arr().unwrap()[0];
+        let tenants = p.get("tenants").as_obj().expect("per-tenant map");
+        assert_eq!(tenants.len(), 2, "hog + meek");
+        let (hog, meek) = (p.get("tenants").get("hog"), p.get("tenants").get("meek"));
+        let offered_sum =
+            hog.get("offered").as_u64().unwrap() + meek.get("offered").as_u64().unwrap();
+        assert_eq!(Some(offered_sum), p.get("offered").as_u64(), "shares partition arrivals");
+        assert!(
+            hog.get("offered").as_u64().unwrap() > meek.get("offered").as_u64().unwrap(),
+            "a 10:1 share split must make the hog dominate the offered load"
+        );
+        assert_eq!(hog.get("weight").as_f64(), Some(1.0));
+        assert!(hog.get("completed").as_u64().unwrap() > 0, "uncontended point must complete");
+        // exact per-tenant accounting: every arrival of a tenant lands in
+        // exactly one of its terminal columns
+        for row in [&hog, &meek] {
+            let accounted = row.get("completed").as_u64().unwrap()
+                + row.get("shed").as_u64().unwrap()
+                + row.get("cancelled").as_u64().unwrap()
+                + row.get("missed").as_u64().unwrap()
+                + row.get("failed").as_u64().unwrap();
+            assert_eq!(Some(accounted), row.get("offered").as_u64());
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

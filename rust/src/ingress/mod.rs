@@ -14,6 +14,14 @@
 //! * an [`AdmissionController`] per queue decides accept-vs-shed
 //!   ([`AdmissionPolicy`]: unbounded / bounded / token bucket); shed
 //!   requests fail fast with a retryable [`Error::Shed`].
+//! * the front door is **multi-tenant** ([`fairness`], config
+//!   `ingress.tenants`): every request is stamped with a
+//!   [`TenantId`] at admission ([`SubmitOpts::tenant`]), each tenant may
+//!   carry its own token bucket *under* the shared admission policy, and
+//!   each workflow queue splits into per-tenant sub-queues served by
+//!   deficit round robin — weighted-fair across tenants, while *inside* a
+//!   tenant's sub-queue the configured [`SchedulePolicy`] still orders
+//!   requests (fairness composes with SRTF, it does not replace it).
 //! * an **event-driven scheduler** multiplexes admitted requests over a
 //!   small fixed thread pool: each request is a resumable
 //!   [`crate::workflow::Driver`] polled until it suspends, then *parked*
@@ -49,10 +57,12 @@
 //! produce the `BENCH_rps_sweep.json` saturation curve.
 
 pub mod admission;
+pub mod fairness;
 pub mod loadgen;
 pub mod schedule;
 
 pub use admission::{AdmissionController, AdmissionPolicy};
+pub use fairness::Drr;
 pub use schedule::SchedulePolicy;
 
 use std::collections::{HashMap, HashSet, VecDeque};
@@ -60,10 +70,10 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::IngressMetrics;
+use crate::coordinator::{IngressMetrics, TenantMetrics};
 use crate::error::{Error, Result};
 use crate::futures::{FutureCell, Value};
-use crate::ids::{NodeId, RequestId, SessionId};
+use crate::ids::{NodeId, RequestId, SessionId, TenantId};
 use crate::nodestore::keys;
 use crate::server::Deployment;
 use crate::util::clock::Clock;
@@ -110,11 +120,36 @@ impl TicketCell {
     }
 }
 
+/// Per-submit options for [`Ingress::submit_with`] /
+/// [`Ingress::submit_driver_with`].
+#[derive(Debug, Clone, Default)]
+pub struct SubmitOpts {
+    /// Existing session to continue (`None` opens a fresh one).
+    pub session: Option<SessionId>,
+    /// Tenant to charge the request to. `None` = the deployment's first
+    /// configured tenant (the implicit `default` when no `ingress.tenants`
+    /// block exists). Unknown names are a config error when tenants are
+    /// configured — a typo must not silently share someone else's bucket;
+    /// with the implicit single-tenant table every name collapses onto it
+    /// (there is no tenancy to enforce — this is also how baselines stay
+    /// single-tenant after `baselines::SystemUnderTest::apply`).
+    pub tenant: Option<String>,
+}
+
+impl SubmitOpts {
+    /// Charge the request to the named tenant.
+    pub fn tenant(name: &str) -> SubmitOpts {
+        SubmitOpts { session: None, tenant: Some(name.to_string()) }
+    }
+}
+
 /// The caller's handle for an admitted request. `submit` returns it
 /// immediately; the request runs whenever the scheduler picks it up.
 pub struct Ticket {
     pub request: RequestId,
     pub session: SessionId,
+    /// Tenant the request was charged to, stamped at admission.
+    pub tenant: TenantId,
     cell: Arc<TicketCell>,
     /// Workflow-queue index, so `cancel` knows where to look.
     idx: usize,
@@ -178,6 +213,10 @@ impl Ticket {
 struct Queued {
     session: SessionId,
     request: RequestId,
+    /// Tenant index (into `IngressInner::tenants`) the request is charged
+    /// to — the sub-queue it waits in and the counters its outcome lands
+    /// on.
+    tenant: usize,
     input: Value,
     driver: Option<Box<dyn Driver>>,
     submitted: Instant,
@@ -193,6 +232,8 @@ struct Queued {
 struct InFlight {
     idx: usize,
     request: RequestId,
+    /// Tenant index — outcome counters are per (workflow, tenant).
+    tenant: usize,
     driver: Box<dyn Driver>,
     env: Env,
     submitted: Instant,
@@ -217,6 +258,8 @@ struct InFlight {
 /// sweep for fulfilment outside the scheduler lock.
 struct Lapsed {
     idx: usize,
+    /// Tenant index the expiry is charged to.
+    tenant: usize,
     submitted: Instant,
     timeout: Duration,
     cell: Arc<TicketCell>,
@@ -229,9 +272,13 @@ struct Lapsed {
 /// Scheduler state under one lock: admission queues feed the in-flight
 /// table; wakers move parked continuations to the ready queue.
 struct SchedState {
-    /// One deque per entry of `kinds`; contention is negligible at
-    /// front-door rates and a single lock keeps pop-fairness trivial.
-    queues: Vec<VecDeque<Queued>>,
+    /// Admission queues: `queues[workflow][tenant]` — one sub-queue per
+    /// tenant per entry of `kinds`, served weighted-fair by `drr`.
+    /// Contention is negligible at front-door rates and a single lock
+    /// keeps pop-fairness trivial.
+    queues: Vec<Vec<VecDeque<Queued>>>,
+    /// Per-workflow deficit-round-robin state over the tenant sub-queues.
+    drr: Vec<Drr>,
     /// Runnable continuations (woken or freshly admitted). Pop order is
     /// the configured [`SchedulePolicy`], not necessarily front-first.
     ready: VecDeque<InFlight>,
@@ -260,6 +307,12 @@ struct SchedState {
 impl SchedState {
     fn total_in_flight(&self) -> usize {
         self.live.len()
+    }
+
+    /// Total queued requests of one workflow (across its tenant
+    /// sub-queues) — the depth the shared admission cap bounds.
+    fn depth(&self, idx: usize) -> usize {
+        self.queues[idx].iter().map(|q| q.len()).sum()
     }
 }
 
@@ -304,20 +357,43 @@ const PUBLISH_PERIOD: Duration = Duration::from_millis(20);
 /// missed notify never stalls the pool longer than this.
 const SWEEP_PERIOD: Duration = Duration::from_millis(5);
 
+/// One tenant of the front door (resolved from `ingress.tenants`, or the
+/// implicit single `default`).
+struct TenantSpec {
+    name: String,
+    weight: f64,
+}
+
 struct IngressInner {
     d: Deployment,
     kinds: Vec<WorkflowKind>,
+    /// Tenant table shared by every workflow queue. Index = `TenantId`.
+    tenants: Vec<TenantSpec>,
+    /// Whether the deployment actually configured `ingress.tenants`
+    /// (false = the implicit single-tenant table, where any submitted
+    /// tenant name collapses onto it instead of erroring).
+    tenants_configured: bool,
     sched: Mutex<SchedState>,
     cv: Condvar,
+    /// Shared per-workflow admission policy (the bounded cap / workflow
+    /// token bucket). Decision-only: accept/shed are counted on the
+    /// per-tenant controllers below, exactly once per submit.
     admission: Vec<AdmissionController>,
-    completed: Vec<AtomicU64>,
-    failed: Vec<AtomicU64>,
+    /// Per-tenant admission layer under the shared policy:
+    /// `tenant_adm[workflow][tenant]` — a token bucket when the tenant
+    /// configures a rate, otherwise pass-through. Also the authoritative
+    /// accepted/shed counters (the aggregate is their sum).
+    tenant_adm: Vec<Vec<AdmissionController>>,
+    /// Outcome counters per (workflow, tenant); the per-workflow
+    /// aggregates the sweep schema reports are their sums.
+    completed: Vec<Vec<AtomicU64>>,
+    failed: Vec<Vec<AtomicU64>>,
     /// Deadline expiries that never started a driver (satellite metric:
     /// distinguishable from execution failures in the sweep schema).
-    expired_in_queue: Vec<AtomicU64>,
+    expired_in_queue: Vec<Vec<AtomicU64>>,
     /// Requests withdrawn via [`Ticket::cancel`] before any other
     /// terminal outcome landed.
-    cancelled: Vec<AtomicU64>,
+    cancelled: Vec<Vec<AtomicU64>>,
     /// Per-workflow per-stage time-to-completion EWMAs — the
     /// `deadline_slack` policy's remaining-work estimate. Locked after
     /// `sched` when both are needed (never the other way around).
@@ -340,28 +416,65 @@ impl IngressInner {
         self.clock.now().saturating_duration_since(submitted)
     }
 
+    /// Resolve a submitted tenant name to its table index. `None` = the
+    /// first tenant; unknown names error on a configured table and
+    /// collapse onto the implicit single `default` otherwise (see
+    /// [`SubmitOpts::tenant`]).
+    fn tenant_index(&self, name: Option<&str>) -> Result<usize> {
+        let Some(name) = name else { return Ok(0) };
+        if !self.tenants_configured {
+            return Ok(0);
+        }
+        self.tenants.iter().position(|t| t.name == name).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown tenant `{name}` (known: {})",
+                self.tenants.iter().map(|t| t.name.as_str()).collect::<Vec<_>>().join(", ")
+            ))
+        })
+    }
+
     /// One queue's telemetry snapshot (shared by [`Ingress::metrics`] and
-    /// the node-store publish path — one construction site).
+    /// the node-store publish path — one construction site). The
+    /// aggregate counters are the sums of the per-tenant split, so the
+    /// pre-tenancy schema fields keep their exact meaning.
     fn snapshot(&self, idx: usize) -> IngressMetrics {
         let adm = &self.admission[idx];
-        let (depth, in_flight) = {
+        let (tenant_depths, in_flight) = {
             let s = self.sched.lock().unwrap();
-            (s.queues[idx].len(), s.in_flight[idx])
+            let depths: Vec<usize> = s.queues[idx].iter().map(|q| q.len()).collect();
+            (depths, s.in_flight[idx])
         };
+        let tenants: Vec<TenantMetrics> = self
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(t, spec)| TenantMetrics {
+                tenant: spec.name.clone(),
+                weight: spec.weight,
+                depth: tenant_depths[t],
+                accepted: self.tenant_adm[idx][t].accepted.load(Ordering::Relaxed),
+                shed: self.tenant_adm[idx][t].shed.load(Ordering::Relaxed),
+                completed: self.completed[idx][t].load(Ordering::Relaxed),
+                failed: self.failed[idx][t].load(Ordering::Relaxed),
+                expired_in_queue: self.expired_in_queue[idx][t].load(Ordering::Relaxed),
+                cancelled: self.cancelled[idx][t].load(Ordering::Relaxed),
+            })
+            .collect();
         IngressMetrics {
             workflow: self.kinds[idx].name().to_string(),
-            depth,
+            depth: tenant_depths.iter().sum(),
             in_flight,
             workers: self.workers,
             cap: adm.policy().cap(),
             policy: adm.policy().name().to_string(),
             schedule: self.schedule.name().to_string(),
-            accepted: adm.accepted.load(Ordering::Relaxed),
-            shed: adm.shed.load(Ordering::Relaxed),
-            completed: self.completed[idx].load(Ordering::Relaxed),
-            failed: self.failed[idx].load(Ordering::Relaxed),
-            expired_in_queue: self.expired_in_queue[idx].load(Ordering::Relaxed),
-            cancelled: self.cancelled[idx].load(Ordering::Relaxed),
+            accepted: tenants.iter().map(|t| t.accepted).sum(),
+            shed: tenants.iter().map(|t| t.shed).sum(),
+            completed: tenants.iter().map(|t| t.completed).sum(),
+            failed: tenants.iter().map(|t| t.failed).sum(),
+            expired_in_queue: tenants.iter().map(|t| t.expired_in_queue).sum(),
+            cancelled: tenants.iter().map(|t| t.cancelled).sum(),
+            tenants,
         }
     }
 
@@ -405,23 +518,33 @@ impl IngressInner {
         s.ready.remove(chosen)
     }
 
-    /// Pop the next admission-queue entry of workflow `idx` per the
-    /// scheduling policy. Queued requests are all stage 0, so `stage`
-    /// ordering degrades to FIFO here and `deadline_slack` to EDF with a
-    /// whole-request estimate.
+    /// Pop the next admission-queue entry of workflow `idx`: deficit
+    /// round robin picks *which tenant* to serve (weighted-fair across
+    /// sub-queues), then the scheduling policy picks *which request*
+    /// inside that tenant's sub-queue — fairness composes with SRTF.
+    /// Queued requests are all stage 0, so `stage` ordering degrades to
+    /// FIFO here and `deadline_slack` to EDF with a whole-request
+    /// estimate.
     fn pop_queued(&self, s: &mut SchedState, idx: usize, now: Instant) -> Option<Queued> {
-        if s.queues[idx].is_empty() {
-            return None;
-        }
+        let backlog: Vec<usize> = s.queues[idx].iter().map(|q| q.len()).collect();
+        let tenant = s.drr[idx].next(&backlog)?;
         let est = self.stage_stats[idx].lock().unwrap().estimate(0);
         let chosen = pick(
             self.schedule,
             now,
-            s.queues[idx]
+            s.queues[idx][tenant]
                 .iter()
                 .map(|j| Key { deadline: j.deadline, stage: 0, est_remaining: est }),
         )?;
-        s.queues[idx].remove(chosen)
+        let job = s.queues[idx][tenant].remove(chosen);
+        if s.queues[idx][tenant].is_empty() {
+            // the pop drained this tenant: forfeit its banked deficit
+            // (classic DRR empty-queue rule — same as the cancel/expiry
+            // paths), or a bursty tenant submitting between pops would
+            // bank up to quantum−1 of entitlement earned while idle
+            s.drr[idx].on_empty(tenant);
+        }
+        job
     }
 
     /// Scheduler worker: multiplexes the in-flight table. Priority order
@@ -496,25 +619,35 @@ impl IngressInner {
     /// Collect every queued/parked request whose deadline has passed
     /// (fulfilment happens outside the lock, in [`Self::fail_lapsed`]).
     fn collect_lapsed(s: &mut SchedState, now: Instant, out: &mut Vec<Lapsed>) {
-        for (idx, q) in s.queues.iter_mut().enumerate() {
-            if q.iter().all(|j| j.deadline > now) {
-                continue;
-            }
-            let mut kept = VecDeque::with_capacity(q.len());
-            for job in q.drain(..) {
-                if job.deadline <= now {
-                    out.push(Lapsed {
-                        idx,
-                        submitted: job.submitted,
-                        timeout: job.timeout,
-                        cell: job.cell,
-                        request: None,
-                    });
-                } else {
-                    kept.push_back(job);
+        for idx in 0..s.queues.len() {
+            for tenant in 0..s.queues[idx].len() {
+                let q = &mut s.queues[idx][tenant];
+                if q.iter().all(|j| j.deadline > now) {
+                    continue;
+                }
+                let mut kept = VecDeque::with_capacity(q.len());
+                for job in q.drain(..) {
+                    if job.deadline <= now {
+                        out.push(Lapsed {
+                            idx,
+                            tenant: job.tenant,
+                            submitted: job.submitted,
+                            timeout: job.timeout,
+                            cell: job.cell,
+                            request: None,
+                        });
+                    } else {
+                        kept.push_back(job);
+                    }
+                }
+                let emptied = kept.is_empty();
+                *q = kept;
+                if emptied {
+                    // expiry emptied this tenant's sub-queue: it must not
+                    // bank its granted-but-unused DRR deficit
+                    s.drr[idx].on_empty(tenant);
                 }
             }
-            *q = kept;
         }
         // Ready entries expire too: a non-FIFO policy (`stage`) may defer
         // an expired entry's pop indefinitely, and an expired request must
@@ -529,6 +662,7 @@ impl IngressInner {
                 s.in_flight[f.idx] -= 1;
                 out.push(Lapsed {
                     idx: f.idx,
+                    tenant: f.tenant,
                     submitted: f.submitted,
                     timeout: f.timeout,
                     cell: f.cell,
@@ -548,6 +682,7 @@ impl IngressInner {
             s.in_flight[f.idx] -= 1;
             out.push(Lapsed {
                 idx: f.idx,
+                tenant: f.tenant,
                 submitted: f.submitted,
                 timeout: f.timeout,
                 cell: f.cell,
@@ -571,9 +706,9 @@ impl IngressInner {
             let waited = self.since(l.submitted);
             if l.cell.fulfil(Err(Error::Deadline(l.timeout)), waited) {
                 if l.request.is_none() {
-                    self.expired_in_queue[l.idx].fetch_add(1, Ordering::Relaxed);
+                    self.expired_in_queue[l.idx][l.tenant].fetch_add(1, Ordering::Relaxed);
                 } else {
-                    self.failed[l.idx].fetch_add(1, Ordering::Relaxed);
+                    self.failed[l.idx][l.tenant].fetch_add(1, Ordering::Relaxed);
                 }
             }
             self.maybe_publish(l.idx);
@@ -599,8 +734,17 @@ impl IngressInner {
         }
         let found = {
             let mut s = self.sched.lock().unwrap();
-            if let Some(pos) = s.queues[idx].iter().position(|j| j.request.0 == rid) {
-                Found::Queued(s.queues[idx].remove(pos).expect("position just found"))
+            let queued_at = s.queues[idx].iter().enumerate().find_map(|(t, q)| {
+                q.iter().position(|j| j.request.0 == rid).map(|pos| (t, pos))
+            });
+            if let Some((tenant, pos)) = queued_at {
+                let job = s.queues[idx][tenant].remove(pos).expect("position just found");
+                if s.queues[idx][tenant].is_empty() {
+                    // cancel drained this tenant's sub-queue: forfeit its
+                    // banked DRR deficit (same rule as the expiry sweep)
+                    s.drr[idx].on_empty(tenant);
+                }
+                Found::Queued(job)
             } else if let Some(f) = s.parked.remove(&rid) {
                 s.live.remove(&rid);
                 s.woken.remove(&rid);
@@ -624,7 +768,7 @@ impl IngressInner {
         match found {
             Found::Queued(job) => {
                 if job.cell.fulfil(Err(Error::Cancelled), self.since(job.submitted)) {
-                    self.cancelled[idx].fetch_add(1, Ordering::Relaxed);
+                    self.cancelled[idx][job.tenant].fetch_add(1, Ordering::Relaxed);
                 }
                 self.maybe_publish(idx);
                 true
@@ -645,7 +789,7 @@ impl IngressInner {
     fn finish_cancelled(&self, f: InFlight) {
         self.d.table().fail_request(f.request, "request cancelled");
         if f.cell.fulfil(Err(Error::Cancelled), self.since(f.submitted)) {
-            self.cancelled[f.idx].fetch_add(1, Ordering::Relaxed);
+            self.cancelled[f.idx][f.tenant].fetch_add(1, Ordering::Relaxed);
         }
         self.maybe_publish(f.idx);
         self.cv.notify_one(); // in-flight capacity freed
@@ -665,7 +809,7 @@ impl IngressInner {
                 s.in_flight[idx] -= 1;
             }
             if job.cell.fulfil(Err(Error::Deadline(job.timeout)), this.since(job.submitted)) {
-                this.expired_in_queue[idx].fetch_add(1, Ordering::Relaxed);
+                this.expired_in_queue[idx][job.tenant].fetch_add(1, Ordering::Relaxed);
             }
             this.maybe_publish(idx);
             this.cv.notify_one(); // in-flight capacity freed
@@ -681,6 +825,7 @@ impl IngressInner {
             InFlight {
                 idx,
                 request: job.request,
+                tenant: job.tenant,
                 driver,
                 env,
                 submitted: job.submitted,
@@ -805,6 +950,10 @@ impl IngressInner {
             s.cancelled.remove(&f.request.0); // completion won the race
             s.in_flight[f.idx] -= 1;
         }
+        // Request-completion hook: evict the per-request future index —
+        // the request is terminal, nothing will `fail_request` it, and
+        // the index must not grow unboundedly (futures::table).
+        self.d.table().on_request_complete(f.request);
         let now = self.clock.now();
         let ok = result.is_ok();
         if ok {
@@ -818,7 +967,7 @@ impl IngressInner {
         }
         if f.cell.fulfil(result, now.saturating_duration_since(f.submitted)) {
             let ctr = if ok { &self.completed } else { &self.failed };
-            ctr[f.idx].fetch_add(1, Ordering::Relaxed);
+            ctr[f.idx][f.tenant].fetch_add(1, Ordering::Relaxed);
         }
         self.maybe_publish(f.idx);
         self.cv.notify_one(); // in-flight capacity freed: admit more
@@ -863,11 +1012,39 @@ impl Ingress {
         let schedule =
             opts.schedule.unwrap_or_else(|| SchedulePolicy::from_settings(&d.cfg().ingress));
         let clock = opts.clock.clone();
+        // Tenant table: the deployment's `ingress.tenants`, or the
+        // implicit single `default` tenant — under which every structure
+        // below degenerates to the pre-tenancy single queue exactly.
+        let cfg_tenants = &d.cfg().ingress.tenants;
+        let tenants_configured = !cfg_tenants.is_empty();
+        let tenants: Vec<TenantSpec> = if tenants_configured {
+            cfg_tenants
+                .iter()
+                .map(|t| TenantSpec { name: t.name.clone(), weight: t.weight })
+                .collect()
+        } else {
+            vec![TenantSpec { name: "default".into(), weight: 1.0 }]
+        };
+        let weights: Vec<f64> = tenants.iter().map(|t| t.weight).collect();
+        let tenant_policies: Vec<AdmissionPolicy> = if tenants_configured {
+            cfg_tenants.iter().map(AdmissionPolicy::for_tenant).collect()
+        } else {
+            vec![AdmissionPolicy::Unbounded]
+        };
+        let per_tenant_u64 = |_: &WorkflowKind| -> Vec<AtomicU64> {
+            weights.iter().map(|_| AtomicU64::new(0)).collect()
+        };
         let inner = Arc::new(IngressInner {
             d: d.clone(),
             kinds: kinds.to_vec(),
+            tenants,
+            tenants_configured,
             sched: Mutex::new(SchedState {
-                queues: kinds.iter().map(|_| VecDeque::new()).collect(),
+                queues: kinds
+                    .iter()
+                    .map(|_| weights.iter().map(|_| VecDeque::new()).collect())
+                    .collect(),
+                drr: kinds.iter().map(|_| Drr::new(&weights)).collect(),
                 ready: VecDeque::new(),
                 parked: HashMap::new(),
                 woken: HashSet::new(),
@@ -879,10 +1056,19 @@ impl Ingress {
             }),
             cv: Condvar::new(),
             admission: kinds.iter().map(|_| AdmissionController::new(policy.clone())).collect(),
-            completed: kinds.iter().map(|_| AtomicU64::new(0)).collect(),
-            failed: kinds.iter().map(|_| AtomicU64::new(0)).collect(),
-            expired_in_queue: kinds.iter().map(|_| AtomicU64::new(0)).collect(),
-            cancelled: kinds.iter().map(|_| AtomicU64::new(0)).collect(),
+            tenant_adm: kinds
+                .iter()
+                .map(|_| {
+                    tenant_policies
+                        .iter()
+                        .map(|p| AdmissionController::new(p.clone()))
+                        .collect()
+                })
+                .collect(),
+            completed: kinds.iter().map(per_tenant_u64).collect(),
+            failed: kinds.iter().map(per_tenant_u64).collect(),
+            expired_in_queue: kinds.iter().map(per_tenant_u64).collect(),
+            cancelled: kinds.iter().map(per_tenant_u64).collect(),
             stage_stats: kinds.iter().map(|_| Mutex::new(StageStats::new())).collect(),
             schedule,
             clock,
@@ -918,7 +1104,20 @@ impl Ingress {
         input: Value,
         timeout: Duration,
     ) -> Result<Ticket> {
-        self.submit_inner(kind, session, input, None, timeout)
+        self.submit_inner(kind, input, None, timeout, SubmitOpts { session, tenant: None })
+    }
+
+    /// [`Self::submit`] with explicit [`SubmitOpts`] — the multi-tenant
+    /// entry point: the request is charged to `opts.tenant`'s token
+    /// bucket and queued in that tenant's DRR sub-queue.
+    pub fn submit_with(
+        &self,
+        kind: WorkflowKind,
+        input: Value,
+        timeout: Duration,
+        opts: SubmitOpts,
+    ) -> Result<Ticket> {
+        self.submit_inner(kind, input, None, timeout, opts)
     }
 
     /// Like [`Self::submit`], but with a caller-built [`Driver`] instead
@@ -934,21 +1133,41 @@ impl Ingress {
         driver: Box<dyn Driver>,
         timeout: Duration,
     ) -> Result<Ticket> {
-        self.submit_inner(kind, session, Value::Null, Some(driver), timeout)
+        self.submit_inner(
+            kind,
+            Value::Null,
+            Some(driver),
+            timeout,
+            SubmitOpts { session, tenant: None },
+        )
+    }
+
+    /// [`Self::submit_driver`] with explicit [`SubmitOpts`] (the
+    /// deterministic fairness suite submits scripted drivers per tenant
+    /// through this).
+    pub fn submit_driver_with(
+        &self,
+        kind: WorkflowKind,
+        driver: Box<dyn Driver>,
+        timeout: Duration,
+        opts: SubmitOpts,
+    ) -> Result<Ticket> {
+        self.submit_inner(kind, Value::Null, Some(driver), timeout, opts)
     }
 
     fn submit_inner(
         &self,
         kind: WorkflowKind,
-        session: Option<SessionId>,
         input: Value,
         driver: Option<Box<dyn Driver>>,
         timeout: Duration,
+        opts: SubmitOpts,
     ) -> Result<Ticket> {
         let inner = &self.inner;
         let idx = inner
             .kind_index(kind)
             .ok_or_else(|| Error::Config(format!("ingress does not serve `{}`", kind.name())))?;
+        let tenant = inner.tenant_index(opts.tenant.as_deref())?;
         let verdict = {
             let mut s = inner.sched.lock().unwrap();
             // Checked under the scheduler lock: `stop` drains the queues
@@ -958,18 +1177,29 @@ impl Ingress {
             if inner.stop.load(Ordering::Relaxed) {
                 return Err(Error::Shed(kind.name().into(), "ingress stopped".into()));
             }
-            // `admit_at` against the scheduler's clock: a token bucket
-            // must refill on the same time axis deadlines run on, or
-            // virtual-clock tests get wall-clock-dependent verdicts.
-            match inner.admission[idx].admit_at(s.queues[idx].len(), inner.clock.now()) {
+            // Composed admission, decided against the scheduler's clock
+            // (a token bucket must refill on the same time axis deadlines
+            // run on, or virtual-clock tests get wall-clock-dependent
+            // verdicts): the shared policy sees the workflow's total
+            // queued depth, then the tenant's own bucket — and the final
+            // verdict is counted exactly once, on the tenant's
+            // controller (the aggregate counters are per-tenant sums).
+            let now = inner.clock.now();
+            let decision = inner.admission[idx].decide_at(s.depth(idx), now).and_then(|()| {
+                inner.tenant_adm[idx][tenant].decide_at(0, now).map_err(|reason| {
+                    format!("tenant `{}`: {reason}", inner.tenants[tenant].name)
+                })
+            });
+            inner.tenant_adm[idx][tenant].record(decision.is_ok());
+            match decision {
                 Ok(()) => {
-                    let session = session.unwrap_or_else(|| inner.d.new_session());
+                    let session = opts.session.unwrap_or_else(|| inner.d.new_session());
                     let request = inner.d.new_request_id();
                     let cell = TicketCell::new();
-                    let now = inner.clock.now();
-                    s.queues[idx].push_back(Queued {
+                    s.queues[idx][tenant].push_back(Queued {
                         session,
                         request,
+                        tenant,
                         input,
                         driver,
                         submitted: now,
@@ -980,6 +1210,7 @@ impl Ingress {
                     Ok(Ticket {
                         request,
                         session,
+                        tenant: TenantId(tenant as u64),
                         cell,
                         idx,
                         inner: Arc::downgrade(&self.inner),
@@ -999,7 +1230,7 @@ impl Ingress {
     /// started; started work is [`Self::in_flight`]).
     pub fn depth(&self, kind: WorkflowKind) -> usize {
         match self.inner.kind_index(kind) {
-            Some(idx) => self.inner.sched.lock().unwrap().queues[idx].len(),
+            Some(idx) => self.inner.sched.lock().unwrap().depth(idx),
             None => 0,
         }
     }
@@ -1034,9 +1265,11 @@ impl Ingress {
         let (queued, inflight): (Vec<(usize, Queued)>, Vec<InFlight>) = {
             let mut s = self.inner.sched.lock().unwrap();
             let mut queued = Vec::new();
-            for (i, dq) in s.queues.iter_mut().enumerate() {
-                for j in dq.drain(..) {
-                    queued.push((i, j));
+            for (i, tqs) in s.queues.iter_mut().enumerate() {
+                for dq in tqs.iter_mut() {
+                    for j in dq.drain(..) {
+                        queued.push((i, j));
+                    }
                 }
             }
             let mut inflight: Vec<InFlight> = s.ready.drain(..).collect();
@@ -1054,14 +1287,19 @@ impl Ingress {
             let kind = self.inner.kinds[idx].name().to_string();
             let waited = self.inner.since(job.submitted);
             if job.cell.fulfil(Err(Error::Shed(kind, "ingress stopped".into())), waited) {
-                self.inner.failed[idx].fetch_add(1, Ordering::Relaxed);
+                self.inner.failed[idx][job.tenant].fetch_add(1, Ordering::Relaxed);
             }
         }
         for f in inflight {
+            // Same abandonment as cancel/expiry: a started request's
+            // outstanding futures must not keep engine slots or wakers
+            // alive through shutdown (this also evicts its entry from
+            // the per-request future index).
+            self.inner.d.table().fail_request(f.request, "ingress stopped");
             let kind = self.inner.kinds[f.idx].name().to_string();
             let waited = self.inner.since(f.submitted);
             if f.cell.fulfil(Err(Error::Shed(kind, "ingress stopped".into())), waited) {
-                self.inner.failed[f.idx].fetch_add(1, Ordering::Relaxed);
+                self.inner.failed[f.idx][f.tenant].fetch_add(1, Ordering::Relaxed);
             }
         }
         for idx in 0..self.inner.kinds.len() {
@@ -1292,6 +1530,114 @@ mod tests {
         assert_eq!(m.failed, 0, "cancellation is not an execution failure");
         assert_eq!(m.in_flight, 0, "no table leak");
         assert_eq!(m.depth, 0);
+        ing.stop();
+        d.shutdown();
+    }
+
+    #[test]
+    fn implicit_single_tenant_backs_every_plain_submit() {
+        // No `ingress.tenants` block: the table is the implicit
+        // `default`, every name collapses onto it, and the aggregate
+        // counters equal the single tenant's.
+        let mut cfg = WorkflowKind::Router.config();
+        cfg.time_scale = 0.0005;
+        cfg.control.global_period_ms = 10;
+        cfg.ingress.tenants.clear();
+        let d = Deployment::launch(cfg).unwrap();
+        let ing = Ingress::start_with(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, 2);
+        let timeout = Duration::from_secs(20);
+        let t1 = ing.submit(WorkflowKind::Router, None, router_input(), timeout).unwrap();
+        let t2 = ing
+            .submit_with(WorkflowKind::Router, router_input(), timeout, SubmitOpts::tenant("x"))
+            .unwrap();
+        assert_eq!(t1.tenant, TenantId(0));
+        assert_eq!(t2.tenant, TenantId(0), "unnamed table: any name collapses onto it");
+        t1.wait(timeout).unwrap();
+        t2.wait(timeout).unwrap();
+        let m = ing.metrics(WorkflowKind::Router).unwrap();
+        assert_eq!(m.tenants.len(), 1);
+        assert_eq!(m.tenants[0].tenant, "default");
+        assert_eq!(m.tenants[0].weight, 1.0);
+        assert_eq!(m.tenants[0].accepted, 2);
+        assert_eq!(m.tenants[0].completed, 2);
+        assert_eq!(m.accepted, 2, "aggregate = per-tenant sum");
+        ing.stop();
+        d.shutdown();
+    }
+
+    #[test]
+    fn tenant_token_bucket_sheds_only_the_offending_tenant() {
+        let mut cfg = WorkflowKind::Router.config();
+        cfg.time_scale = 0.0005;
+        cfg.control.global_period_ms = 10;
+        cfg.ingress.tenants = vec![
+            crate::config::TenantSettings {
+                name: "hog".into(),
+                weight: 1.0,
+                // negligible refill: only the 2-token burst ever admits
+                token_rate: 1e-9,
+                token_burst: 2.0,
+            },
+            crate::config::TenantSettings {
+                name: "meek".into(),
+                weight: 1.0,
+                token_rate: 0.0,
+                token_burst: 32.0,
+            },
+        ];
+        let d = Deployment::launch(cfg).unwrap();
+        let ing = Ingress::start_with(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, 2);
+        let timeout = Duration::from_secs(30);
+        let mut hog_tickets = Vec::new();
+        let mut hog_sheds = 0;
+        for _ in 0..5 {
+            match ing.submit_with(
+                WorkflowKind::Router,
+                router_input(),
+                timeout,
+                SubmitOpts::tenant("hog"),
+            ) {
+                Ok(t) => {
+                    assert_eq!(t.tenant, TenantId(0), "tenant stamped at admission");
+                    hog_tickets.push(t);
+                }
+                Err(e) => {
+                    assert!(matches!(e, Error::Shed(..)), "{e}");
+                    assert!(e.to_string().contains("tenant `hog`"), "shed names the tenant: {e}");
+                    hog_sheds += 1;
+                }
+            }
+        }
+        assert_eq!(hog_tickets.len(), 2, "only the burst admits");
+        assert_eq!(hog_sheds, 3);
+        // the meek tenant is untouched by the hog's exhausted bucket
+        let meek: Vec<Ticket> = (0..3)
+            .map(|_| {
+                ing.submit_with(
+                    WorkflowKind::Router,
+                    router_input(),
+                    timeout,
+                    SubmitOpts::tenant("meek"),
+                )
+                .unwrap()
+            })
+            .collect();
+        assert_eq!(meek[0].tenant, TenantId(1));
+        for t in hog_tickets.iter().chain(meek.iter()) {
+            t.wait(timeout).unwrap();
+        }
+        let m = ing.metrics(WorkflowKind::Router).unwrap();
+        let hog = m.tenants.iter().find(|t| t.tenant == "hog").unwrap();
+        let meek_m = m.tenants.iter().find(|t| t.tenant == "meek").unwrap();
+        assert_eq!((hog.accepted, hog.shed, hog.completed), (2, 3, 2));
+        assert_eq!((meek_m.accepted, meek_m.shed, meek_m.completed), (3, 0, 3));
+        assert_eq!(m.accepted, 5, "aggregate accepted = tenant sum");
+        assert_eq!(m.shed, 3, "aggregate shed = tenant sum");
+        // typos must not silently share someone else's bucket
+        let err = ing
+            .submit_with(WorkflowKind::Router, router_input(), timeout, SubmitOpts::tenant("hgo"))
+            .unwrap_err();
+        assert!(matches!(err, Error::Config(..)), "{err}");
         ing.stop();
         d.shutdown();
     }

@@ -12,7 +12,8 @@
 //! nalar loadgen --workload router|financial|swe [--rps 20,40,80 | 20:160:20]
 //!               [--systems nalar,ayo,crew,autogen] [--secs N] [--quick]
 //!               [--hc-smoke] [--workers N] [--cancel-rate 0.1]
-//!               [--schedule fifo,deadline_slack] [--out DIR]
+//!               [--schedule fifo,deadline_slack]
+//!               [--tenants noisy | name:share[:weight],...] [--out DIR]
 //!               [--config path.json] [--check-only]
 //!               # open-loop saturation sweep -> BENCH_rps_sweep.json;
 //!               # --hc-smoke gates on every admitted request completing
@@ -20,7 +21,10 @@
 //!               # deadline_slack scheduler (in-flight >> threads);
 //!               # --cancel-rate withdraws a seeded fraction of admitted
 //!               # requests mid-flight; --schedule adds a front-door
-//!               # scheduling axis (FIFO vs SRTF tail latency)
+//!               # scheduling axis (FIFO vs SRTF tail latency);
+//!               # --tenants splits the offered load across tenants
+//!               # (DRR weights + per-tenant goodput rows — `noisy` is
+//!               # the 10x noisy-neighbor profile at equal weights)
 //! ```
 
 use std::path::PathBuf;
@@ -77,7 +81,8 @@ fn main() -> nalar::Result<()> {
                  | serve [--workflow ...] [--secs N] [--rps N] \
                  | loadgen [--workload router|financial|swe] [--rps LIST|START:END:STEP] \
                  [--systems csv] [--secs N] [--quick] [--hc-smoke] [--workers N] \
-                 [--cancel-rate F] [--schedule csv] [--out DIR] [--check-only]"
+                 [--cancel-rate F] [--schedule csv] [--tenants noisy|name:share[:weight],...] \
+                 [--out DIR] [--check-only]"
             );
             Ok(())
         }
@@ -230,6 +235,18 @@ fn cmd_serve(args: &Args) -> nalar::Result<()> {
                     m.expired_in_queue,
                     m.cancelled
                 );
+                // per-tenant split when the front door actually has
+                // tenants (the implicit single `default` prints nothing)
+                if m.tenants.len() > 1 {
+                    for t in &m.tenants {
+                        println!(
+                            "[serve]   tenant {:<12} w {:<4} depth {} accepted {} shed {} \
+                             completed {} cancelled {}",
+                            t.tenant, t.weight, t.depth, t.accepted, t.shed, t.completed,
+                            t.cancelled
+                        );
+                    }
+                }
             }
         }
     });
@@ -286,6 +303,13 @@ fn cmd_loadgen(args: &Args) -> nalar::Result<()> {
             }
         }
         opts.schedules = Some(schedules);
+    }
+    if let Some(spec) = args.get("tenants") {
+        opts.tenants = Some(loadgen::parse_tenant_mix(spec).ok_or_else(|| {
+            nalar::Error::Config(format!(
+                "bad --tenants `{spec}` (expected `noisy` or name:share[:weight],...)"
+            ))
+        })?);
     }
     if let Some(spec) = args.get("rps") {
         opts.rates = workload::parse_rps_sweep(spec)

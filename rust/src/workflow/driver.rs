@@ -79,10 +79,17 @@ pub fn drive_blocking(driver: &mut dyn Driver, env: &Env, timeout: Duration) -> 
     let mut subscribed: std::collections::HashSet<FutureId> = std::collections::HashSet::new();
     loop {
         match driver.poll(env) {
-            Step::Done(result) => return result,
+            Step::Done(result) => {
+                // Terminal: evict the request's entry from the table's
+                // per-request future index (the shim is this request's
+                // scheduler, so the completion hook is its job here).
+                env.ctx.table.on_request_complete(env.ctx.request);
+                return result;
+            }
             Step::Pending { waiting_on } => {
                 let now = Instant::now();
                 if now >= deadline {
+                    env.ctx.table.on_request_complete(env.ctx.request);
                     return Err(Error::Deadline(timeout));
                 }
                 let mut can_wake = false;

@@ -150,7 +150,9 @@ pub mod configs {
   "control": {"global_period_ms": 40, "hol_threshold_ms": 120},
   "engine": {"max_batch": 8, "executor": "sim", "kv_policy": "hint"},
   "ingress": {"policy": "bounded", "schedule": "fifo", "queue_cap": 256, "workers": 8,
-              "max_in_flight": 1024},
+              "max_in_flight": 1024,
+              "tenants": [{"name": "interactive", "weight": 2},
+                          {"name": "batch", "weight": 1}]},
   "agents": [
     {"name": "stock_analysis", "kind": "llm", "instances": 1,
      "directives": {"batchable": true, "max_instances": 2, "resources": {"GPU": 1}},
@@ -183,7 +185,9 @@ pub mod configs {
   "control": {"global_period_ms": 40, "hol_threshold_ms": 120},
   "engine": {"max_batch": 8, "executor": "sim", "kv_policy": "hint"},
   "ingress": {"policy": "bounded", "schedule": "fifo", "queue_cap": 256, "workers": 8,
-              "max_in_flight": 1024},
+              "max_in_flight": 1024,
+              "tenants": [{"name": "interactive", "weight": 2},
+                          {"name": "batch", "weight": 1}]},
   "agents": [
     {"name": "router", "kind": "llm", "instances": 1,
      "directives": {"batchable": true, "max_instances": 2, "resources": {"GPU": 0.25}},
@@ -213,7 +217,9 @@ pub mod configs {
   "control": {"global_period_ms": 40, "hol_threshold_ms": 120},
   "engine": {"max_batch": 8, "executor": "sim", "kv_policy": "hint"},
   "ingress": {"policy": "bounded", "schedule": "fifo", "queue_cap": 256, "workers": 8,
-              "max_in_flight": 1024},
+              "max_in_flight": 1024,
+              "tenants": [{"name": "interactive", "weight": 2},
+                          {"name": "batch", "weight": 1}]},
   "agents": [
     {"name": "planner", "kind": "llm", "instances": 1,
      "directives": {"batchable": true, "max_instances": 2, "resources": {"GPU": 1}},
@@ -251,6 +257,12 @@ mod tests {
             let cfg = k.config();
             assert!(!cfg.agents.is_empty(), "{}", k.name());
             assert!(cfg.policies.len() >= 2, "{} needs its default policies", k.name());
+            // every reference deployment declares the two-tenant split
+            // (interactive 2 : batch 1) the fairness quickstart uses
+            assert_eq!(cfg.ingress.tenants.len(), 2, "{}", k.name());
+            assert_eq!(cfg.ingress.tenants[0].name, "interactive", "{}", k.name());
+            assert_eq!(cfg.ingress.tenants[0].weight, 2.0, "{}", k.name());
+            assert_eq!(cfg.ingress.tenants[1].name, "batch", "{}", k.name());
         }
     }
 

@@ -1,0 +1,380 @@
+//! Deterministic multi-tenant fairness suite for the ingress front door:
+//! weighted-fair (DRR) sub-queues + per-tenant token buckets, proven on
+//! the PR-4 testkit (virtual clock + scripted engine) rather than hoped
+//! for under timing. Companion property tests (bounded DRR unfairness,
+//! per-tenant bucket isolation) live in `tests/props.rs`.
+//!
+//! The headline A/B test replays one seeded noisy-neighbor trace twice —
+//! identical arrivals, identical service costs, identical deadlines —
+//! differing ONLY in whether the front door has the two-tenant DRR table
+//! or the single shared queue, and shows the single queue starving the
+//! meek tenant past its deadlines while DRR holds the meek tenant's
+//! completions at exactly its weight share of capacity.
+
+use std::time::{Duration, Instant};
+
+use nalar::config::TenantSettings;
+use nalar::error::Error;
+use nalar::ids::TenantId;
+use nalar::ingress::{AdmissionPolicy, Ingress, SchedulePolicy, SchedulerOpts, SubmitOpts, Ticket};
+use nalar::server::Deployment;
+use nalar::testkit::{Clock, Gate, ScriptedEngine};
+use nalar::workflow::WorkflowKind;
+
+const HOG: usize = 0;
+const MEEK: usize = 1;
+
+/// Router deployment with an explicit tenant table (empty = the
+/// pre-tenancy single shared queue). Capacity policies stay out — a
+/// reallocation kill would fail futures retryably, which is orthogonal
+/// to queue fairness.
+fn fairness_deployment(tenants: &[(&str, f64)]) -> Deployment {
+    let mut cfg = WorkflowKind::Router.config();
+    cfg.time_scale = 0.0005;
+    cfg.control.global_period_ms = 10;
+    cfg.policies = vec!["load_balance".into()];
+    cfg.ingress.tenants = tenants
+        .iter()
+        .map(|(name, weight)| TenantSettings {
+            name: name.to_string(),
+            weight: *weight,
+            ..TenantSettings::default()
+        })
+        .collect();
+    Deployment::launch(cfg).unwrap()
+}
+
+/// Block (wall clock, bounded) until `cond` holds — scheduler bookkeeping
+/// runs on worker threads, so gauges settle an instant after fulfilment.
+fn settle(what: &str, cond: impl Fn() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < Duration::from_secs(5), "timed out settling: {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// The no-leak invariant every fairness path must restore: scheduler
+/// tables (including every per-tenant sub-queue) empty, and the future
+/// table's per-request index fully evicted, once all tickets are
+/// terminal.
+fn assert_drained(d: &Deployment, ing: &Ingress, wf: WorkflowKind) {
+    settle("scheduler tables drain", || {
+        let m = ing.metrics(wf).unwrap();
+        m.in_flight == 0 && m.depth == 0 && m.tenants.iter().all(|t| t.depth == 0)
+    });
+    settle("per-request future index evicts", || d.table().request_index_len() == 0);
+}
+
+/// Per-logical-tenant outcome of one trace run (client-side attribution,
+/// so the single-queue arm — whose server collapses tenant names — is
+/// counted on the same axis as the DRR arm).
+#[derive(Debug, Default, PartialEq, Eq)]
+struct TraceOutcome {
+    completed: [u64; 2],
+    missed: [u64; 2],
+}
+
+/// One seeded noisy-neighbor trace (virtual time; submitted as one burst
+/// at t=0 behind a gate, so both arms pop from an identical 44-deep
+/// backlog; one scripted call per request priced at exactly 2 virtual
+/// seconds by the pump; workers=1 and max_in_flight=1 make the queue
+/// discipline the only variable):
+///
+/// * arrivals: 4 blocks of [10 hog requests, then 1 meek request] — the
+///   hog offers 10x the meek tenant's rate at equal weights;
+/// * every request: deadline 31 virtual seconds. With 2s service, the
+///   deadline window holds exactly 15 completions (t = 2, 4, …, 30);
+///   the 16th to start expires mid-flight and everything still queued is
+///   swept as expired-in-queue.
+///
+/// **Single queue (tenancy=false)** serves arrival order: the meek
+/// requests sit at positions 10, 21, 32, 43, so only the first (t=22)
+/// beats the deadline — the hog's backlog starves meek 3-of-4:
+///
+/// | tenant | offered | completed | missed |
+/// |--------|---------|-----------|--------|
+/// | hog    | 40      | 14        | 26     |
+/// | meek   | 4       | 1         | 3      |
+///
+/// **DRR (tenancy=true, equal weights)** alternates sub-queues while
+/// both are backlogged, so every meek request is served by t=14 — within
+/// ±1 of its weight share (min(4 offered, 15/2) = 4) — and the hog
+/// absorbs the entire overload it created:
+///
+/// | tenant | offered | completed | missed |
+/// |--------|---------|-----------|--------|
+/// | hog    | 40      | 11        | 29     |
+/// | meek   | 4       | 4         | 0      |
+fn run_noisy_neighbor_trace(tenancy: bool) -> TraceOutcome {
+    let tenants: &[(&str, f64)] = if tenancy { &[("hog", 1.0), ("meek", 1.0)] } else { &[] };
+    let d = fairness_deployment(tenants);
+    let (clock, vclock) = Clock::manual();
+    let mut opts = SchedulerOpts::new(1, 1);
+    opts.schedule = Some(SchedulePolicy::Fifo); // within-tenant order
+    opts.clock = clock;
+    let ing =
+        Ingress::start_with_opts(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, opts);
+    let eng = ScriptedEngine::new();
+    let gate = Gate::new();
+    let blocker = ing
+        .submit_driver(
+            WorkflowKind::Router,
+            None,
+            eng.gated_driver("blocker", 0, gate.clone()),
+            Duration::from_secs(100_000),
+        )
+        .unwrap();
+    settle("blocker holds the worker", || ing.in_flight(WorkflowKind::Router) == 1);
+    let deadline = Duration::from_secs(31); // virtual seconds
+    let mut tickets: Vec<(Ticket, usize)> = Vec::new();
+    for block in 0..4 {
+        for i in 0..10 {
+            let t = ing
+                .submit_driver_with(
+                    WorkflowKind::Router,
+                    eng.driver(&format!("hog-{block}-{i}"), 1),
+                    deadline,
+                    SubmitOpts::tenant("hog"),
+                )
+                .unwrap();
+            tickets.push((t, HOG));
+        }
+        let t = ing
+            .submit_driver_with(
+                WorkflowKind::Router,
+                eng.driver(&format!("meek-{block}"), 1),
+                deadline,
+                SubmitOpts::tenant("meek"),
+            )
+            .unwrap();
+        tickets.push((t, MEEK));
+    }
+    assert_eq!(ing.depth(WorkflowKind::Router), 44, "whole trace queued before service starts");
+    if tenancy {
+        assert_eq!(tickets[0].0.tenant, TenantId(HOG as u64));
+        assert_eq!(tickets[10].0.tenant, TenantId(MEEK as u64));
+    } else {
+        // single-queue arm: the names collapse onto the implicit tenant
+        assert_eq!(tickets[10].0.tenant, TenantId(0));
+    }
+    gate.open();
+    // The pump: every started request's single call costs exactly 2
+    // virtual seconds; whatever the clock leaves behind in the queues,
+    // the sweep expires.
+    let mut n = 0;
+    while eng.wait_created(n + 1, Duration::from_secs(3)) {
+        vclock.advance(Duration::from_secs(2));
+        eng.cell(n).resolve(nalar::json!(n as i64), 0);
+        n += 1;
+    }
+    blocker.wait(Duration::from_secs(5)).unwrap();
+    let mut out = TraceOutcome::default();
+    for (i, (t, tenant)) in tickets.iter().enumerate() {
+        match t.wait(Duration::from_secs(5)) {
+            Ok(_) => out.completed[*tenant] += 1,
+            Err(Error::Deadline(_)) => out.missed[*tenant] += 1,
+            Err(e) => panic!("request {i}: unexpected terminal outcome {e}"),
+        }
+    }
+    if tenancy {
+        // the server-side per-tenant telemetry must agree with the
+        // client-side attribution
+        let m = ing.metrics(WorkflowKind::Router).unwrap();
+        let hog = m.tenants.iter().find(|t| t.tenant == "hog").unwrap();
+        let meek = m.tenants.iter().find(|t| t.tenant == "meek").unwrap();
+        assert_eq!(hog.accepted, 41, "40 hog requests + the blocker");
+        assert_eq!(meek.accepted, 4);
+        assert_eq!(hog.completed, out.completed[HOG] + 1, "+1: the blocker");
+        assert_eq!(meek.completed, out.completed[MEEK]);
+        assert_eq!(meek.expired_in_queue, 0, "DRR never lets meek expire in queue");
+        assert_eq!(
+            hog.expired_in_queue + hog.failed,
+            out.missed[HOG],
+            "hog misses split between swept-in-queue and started-then-expired"
+        );
+        assert_eq!(meek.cancelled + hog.cancelled, 0);
+    }
+    assert_drained(&d, &ing, WorkflowKind::Router);
+    ing.stop();
+    d.shutdown();
+    out
+}
+
+/// The headline A/B: same trace, single queue vs DRR — FIFO starves the
+/// meek tenant past its deadlines, DRR holds it within ±1 request of its
+/// weight share, and fairness costs no capacity (15 completions in both
+/// arms).
+#[test]
+fn seeded_ab_trace_drr_unstarves_the_meek_tenant() {
+    let fifo = run_noisy_neighbor_trace(false);
+    let drr = run_noisy_neighbor_trace(true);
+    // single shared queue: the hog's backlog pushes meek past its
+    // deadlines (the documented 14/1 vs 26/3 table)
+    assert_eq!(fifo.completed[HOG], 14);
+    assert_eq!(fifo.completed[MEEK], 1, "single queue: meek starves");
+    assert_eq!(fifo.missed[MEEK], 3, "3 of 4 meek requests miss their deadlines");
+    assert_eq!(fifo.missed[HOG], 26);
+    // DRR at equal weights: meek's fair share of the 15 servable slots
+    // is min(4 offered, 7.5) = 4 — within ±1 of which it must land
+    // (exactly 4 on this deterministic trace), with zero misses.
+    assert_eq!(drr.missed[MEEK], 0, "DRR: no meek request misses its deadline");
+    let share = 4i64;
+    let got = drr.completed[MEEK] as i64;
+    assert!((got - share).abs() <= 1, "meek completions {got} not within ±1 of share {share}");
+    assert_eq!(drr.completed[MEEK], 4);
+    assert_eq!(drr.completed[HOG], 11, "the hog absorbs the overload it created");
+    // fairness is not free capacity: both disciplines fill all 15 slots
+    assert_eq!(
+        fifo.completed[HOG] + fifo.completed[MEEK],
+        drr.completed[HOG] + drr.completed[MEEK],
+        "DRR must be work-conserving"
+    );
+}
+
+/// Weighted DRR at 3:1, both tenants fully backlogged with equal offered
+/// load: the exact deterministic service order follows the quanta —
+/// tenant `a` takes 3 slots per rotation, `b` takes 1 — and total
+/// completions track the weights.
+#[test]
+fn weighted_drr_follows_the_three_to_one_quanta() {
+    let d = fairness_deployment(&[("a", 3.0), ("b", 1.0)]);
+    let (clock, vclock) = Clock::manual();
+    let mut opts = SchedulerOpts::new(1, 1);
+    opts.schedule = Some(SchedulePolicy::Fifo);
+    opts.clock = clock;
+    let ing =
+        Ingress::start_with_opts(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, opts);
+    let eng = ScriptedEngine::new();
+    let gate = Gate::new();
+    let long = Duration::from_secs(100_000);
+    // The blocker rides tenant `a`'s sub-queue (tenant None = index 0);
+    // its pop empties that sub-queue, so `a` forfeits the rest of its
+    // first granted quantum (the DRR empty-queue rule).
+    let blocker = ing
+        .submit_driver(
+            WorkflowKind::Router,
+            None,
+            eng.gated_driver("blocker", 0, gate.clone()),
+            long,
+        )
+        .unwrap();
+    settle("blocker holds the worker", || ing.in_flight(WorkflowKind::Router) == 1);
+    let mut tickets = Vec::new();
+    for i in 0..8 {
+        for name in ["a", "b"] {
+            let t = ing
+                .submit_driver_with(
+                    WorkflowKind::Router,
+                    eng.driver(&format!("{name}{i}"), 1),
+                    long,
+                    SubmitOpts::tenant(name),
+                )
+                .unwrap();
+            tickets.push(t);
+        }
+    }
+    assert_eq!(ing.depth(WorkflowKind::Router), 16);
+    gate.open();
+    let mut n = 0;
+    while eng.wait_created(n + 1, Duration::from_secs(3)) {
+        vclock.advance(Duration::from_secs(2));
+        eng.cell(n).resolve(nalar::json!(n as i64), 0);
+        n += 1;
+    }
+    for t in &tickets {
+        t.wait(Duration::from_secs(5)).unwrap();
+    }
+    // Quanta 3:1. The blocker's pop emptied `a`'s sub-queue, forfeiting
+    // the rest of `a`'s first grant — so the rotation moves to `b` first
+    // (b0); from there full rotations serve [a a a b] until `a` drains
+    // (forfeiting again at a7), after which `b` gets every slot — the
+    // DRR service order, end to end, exactly.
+    assert_eq!(
+        eng.completions(),
+        vec![
+            "blocker", "b0", "a0", "a1", "a2", "b1", "a3", "a4", "a5", "b2", "a6", "a7", "b3",
+            "b4", "b5", "b6", "b7"
+        ],
+        "service must follow the 3:1 quanta with empty-queue forfeits"
+    );
+    assert_drained(&d, &ing, WorkflowKind::Router);
+    ing.stop();
+    d.shutdown();
+}
+
+/// Lifecycle x tenancy: a cancel drains the right sub-queue, charges the
+/// right tenant's `cancelled` counter, and leaves neither a scheduler
+/// table entry nor a per-request future index entry behind.
+#[test]
+fn cancel_debits_the_cancelling_tenants_sub_queue_only() {
+    let d = fairness_deployment(&[("hog", 1.0), ("meek", 1.0)]);
+    let ing = Ingress::start_with_opts(
+        &d,
+        &[WorkflowKind::Router],
+        AdmissionPolicy::Unbounded,
+        SchedulerOpts::new(1, 1),
+    );
+    let eng = ScriptedEngine::new();
+    let gate = Gate::new();
+    let long = Duration::from_secs(1000);
+    let blocker = ing
+        .submit_driver(
+            WorkflowKind::Router,
+            None,
+            eng.gated_driver("blocker", 0, gate.clone()),
+            long,
+        )
+        .unwrap();
+    settle("blocker occupies the slot", || ing.in_flight(WorkflowKind::Router) == 1);
+    let hog_keep = ing
+        .submit_driver_with(
+            WorkflowKind::Router,
+            eng.driver("hog-keep", 1),
+            long,
+            SubmitOpts::tenant("hog"),
+        )
+        .unwrap();
+    let hog_doomed = ing
+        .submit_driver_with(
+            WorkflowKind::Router,
+            eng.driver("hog-doomed", 1),
+            long,
+            SubmitOpts::tenant("hog"),
+        )
+        .unwrap();
+    let meek = ing
+        .submit_driver_with(
+            WorkflowKind::Router,
+            eng.driver("meek-0", 1),
+            long,
+            SubmitOpts::tenant("meek"),
+        )
+        .unwrap();
+    assert_eq!(ing.depth(WorkflowKind::Router), 3);
+    assert!(hog_doomed.cancel(), "queued request must be cancellable");
+    assert_eq!(ing.depth(WorkflowKind::Router), 2, "cancel drains its sub-queue entry at once");
+    assert!(matches!(hog_doomed.wait(Duration::from_secs(5)), Err(Error::Cancelled)));
+    gate.open();
+    // the two survivors complete (the cancelled driver never issues its
+    // call, so cells are created in service order)
+    let mut n = 0;
+    while eng.wait_created(n + 1, Duration::from_secs(3)) {
+        eng.cell(n).resolve(nalar::json!(n as i64), 0);
+        n += 1;
+    }
+    blocker.wait(Duration::from_secs(5)).unwrap();
+    hog_keep.wait(Duration::from_secs(5)).unwrap();
+    meek.wait(Duration::from_secs(5)).unwrap();
+    let m = ing.metrics(WorkflowKind::Router).unwrap();
+    let hog = m.tenants.iter().find(|t| t.tenant == "hog").unwrap();
+    let meek_m = m.tenants.iter().find(|t| t.tenant == "meek").unwrap();
+    assert_eq!(hog.cancelled, 1, "the cancel lands on the cancelling tenant");
+    assert_eq!(meek_m.cancelled, 0, "the innocent tenant is untouched");
+    assert_eq!(hog.completed, 2, "hog-keep + the blocker");
+    assert_eq!(meek_m.completed, 1);
+    assert_eq!(hog.failed + meek_m.failed, 0);
+    assert_drained(&d, &ing, WorkflowKind::Router);
+    ing.stop();
+    d.shutdown();
+}
