@@ -1,6 +1,6 @@
 # Local entrypoints — identical to what CI runs (.github/workflows/ci.yml).
 
-.PHONY: build test test-scheduler test-fairness fmt clippy lint bench bench-quick loadgen loadgen-quick loadgen-hc artifacts clean
+.PHONY: build test test-scheduler test-fairness fmt clippy lint bench bench-quick loadgen loadgen-quick loadgen-hc serve-smoke artifacts clean
 
 build:
 	cargo build --release --all-targets
@@ -59,6 +59,16 @@ loadgen-quick:
 loadgen-hc:
 	cargo run --release -- loadgen --hc-smoke --out hc-point
 	cargo run --release -- loadgen --check-only --out hc-point
+
+# End-to-end gate for the HTTP serving plane (DESIGN.md §9): boots
+# `nalar serve --listen 127.0.0.1:0`, drives it with `loadgen --remote`
+# (async-park POSTs, GET polls, DELETE cancels over a real socket),
+# validates the rps_sweep report (transport=http), then stops the server
+# and asserts it exits 0 — which it only does with zero leaked
+# connections.
+serve-smoke:
+	cargo build --release --bin nalar
+	bash scripts/serve_smoke.sh
 
 # OPTIONAL / offline-skippable: lowers the L2 JAX transformer (with the L1
 # Pallas attention kernels) to HLO text + a weights blob for the PJRT

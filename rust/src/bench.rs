@@ -192,6 +192,7 @@ pub fn validate(report: &Value) -> Result<()> {
         "rps_sweep" => &[
             "workflow",
             "system",
+            "transport",
             "rps_wall",
             "rps_paper",
             "offered",
@@ -212,6 +213,16 @@ pub fn validate(report: &Value) -> Result<()> {
             if p.get(key).is_null() {
                 return Err(fail(format!("{bench} point {i}: missing `{key}`")));
             }
+        }
+        // `transport` says which submit path produced the point: the
+        // in-process API or the HTTP serving plane. Anything else is a
+        // typo the consumers downstream would silently mis-bucket.
+        if bench == "rps_sweep"
+            && !matches!(p.get("transport").as_str(), Some("inproc") | Some("http"))
+        {
+            return Err(fail(format!(
+                "{bench} point {i}: `transport` must be \"inproc\" or \"http\""
+            )));
         }
         // The per-tenant split must be a non-empty map: every point has
         // at least the implicit `default` tenant, and each entry carries
@@ -743,20 +754,28 @@ mod tests {
     #[test]
     fn validate_accepts_rps_sweep_points() {
         let mut p = json!({
-            "workflow": "router", "system": "NALAR", "rps_wall": 80.0, "rps_paper": 8.0,
+            "workflow": "router", "system": "NALAR", "transport": "inproc",
+            "rps_wall": 80.0, "rps_paper": 8.0,
             "offered": 640, "completed": 600, "failed": 4, "expired_in_queue": 4, "shed": 30,
             "cancelled": 2, "schedule": "deadline_slack",
             "goodput_rps": 75.0, "shed_rate": 0.047
         });
         p.insert("latency", lat());
         p.insert("tenants", tenants_map());
-        validate(&minimal_report("rps_sweep", p)).unwrap();
+        validate(&minimal_report("rps_sweep", p.clone())).unwrap();
+        // both transports validate; anything else is rejected
+        p.insert("transport", "http");
+        validate(&minimal_report("rps_sweep", p.clone())).unwrap();
+        p.insert("transport", "carrier-pigeon");
+        let err = validate(&minimal_report("rps_sweep", p)).unwrap_err();
+        assert!(err.to_string().contains("transport"), "{err}");
         let mut missing = json!({"workflow": "router", "system": "NALAR"});
         missing.insert("latency", lat());
         assert!(validate(&minimal_report("rps_sweep", missing)).is_err());
         // pre-lifecycle reports (no `cancelled`/`schedule`) must fail now
         let mut stale = json!({
-            "workflow": "router", "system": "NALAR", "rps_wall": 80.0, "rps_paper": 8.0,
+            "workflow": "router", "system": "NALAR", "transport": "inproc",
+            "rps_wall": 80.0, "rps_paper": 8.0,
             "offered": 640, "completed": 600, "failed": 6, "expired_in_queue": 4, "shed": 30,
             "goodput_rps": 75.0, "shed_rate": 0.047
         });
@@ -770,7 +789,8 @@ mod tests {
     fn validate_requires_the_per_tenant_map() {
         let base = || {
             let mut p = json!({
-                "workflow": "router", "system": "NALAR", "rps_wall": 80.0, "rps_paper": 8.0,
+                "workflow": "router", "system": "NALAR", "transport": "inproc",
+                "rps_wall": 80.0, "rps_paper": 8.0,
                 "offered": 640, "completed": 600, "failed": 4, "expired_in_queue": 4,
                 "shed": 30, "cancelled": 2, "schedule": "fifo",
                 "goodput_rps": 75.0, "shed_rate": 0.047

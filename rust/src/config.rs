@@ -223,6 +223,8 @@ pub struct IngressSettings {
     /// `baselines::SystemUnderTest::apply` — none of the compared systems
     /// isolates tenants at its front door.
     pub tenants: Vec<TenantSettings>,
+    /// HTTP serving-plane sizing (`nalar serve --listen`).
+    pub http: HttpSettings,
 }
 
 impl Default for IngressSettings {
@@ -236,6 +238,37 @@ impl Default for IngressSettings {
             token_rate: 0.0,
             token_burst: 32.0,
             tenants: Vec::new(),
+            http: HttpSettings::default(),
+        }
+    }
+}
+
+/// Socket front-door sizing (`ingress.http`; see [`crate::server::http`]).
+/// This sizes the wire layer only — admission, scheduling and tenancy
+/// stay with the [`IngressSettings`] fields above, exactly as for
+/// in-process submits.
+#[derive(Debug, Clone)]
+pub struct HttpSettings {
+    /// Acceptor threads pulling connections off the listener.
+    pub acceptors: usize,
+    /// Connection workers. Each owns one connection until it closes, so
+    /// this bounds concurrently *served* connections (accepted-but-queued
+    /// connections wait in the hand-off channel).
+    pub workers: usize,
+    /// Request line + headers cap (bytes); beyond it the request is
+    /// answered `431` and the connection closed.
+    pub max_header_bytes: usize,
+    /// Body cap (bytes); beyond it `413` and close.
+    pub max_body_bytes: usize,
+}
+
+impl Default for HttpSettings {
+    fn default() -> Self {
+        HttpSettings {
+            acceptors: 1,
+            workers: 16,
+            max_header_bytes: 16 << 10,
+            max_body_bytes: 1 << 20,
         }
     }
 }
@@ -320,6 +353,17 @@ impl DeploymentConfig {
                         .collect()
                 })
                 .unwrap_or_default();
+            let http = {
+                let h = i.get("http");
+                let dh = HttpSettings::default();
+                HttpSettings {
+                    acceptors: h.u64_or("acceptors", dh.acceptors as u64) as usize,
+                    workers: h.u64_or("workers", dh.workers as u64) as usize,
+                    max_header_bytes: h.u64_or("max_header_bytes", dh.max_header_bytes as u64)
+                        as usize,
+                    max_body_bytes: h.u64_or("max_body_bytes", dh.max_body_bytes as u64) as usize,
+                }
+            };
             IngressSettings {
                 policy: i.str_or("policy", &di.policy).to_string(),
                 schedule: i.str_or("schedule", &di.schedule).to_string(),
@@ -329,6 +373,7 @@ impl DeploymentConfig {
                 token_rate: i.f64_or("token_rate", di.token_rate),
                 token_burst: i.f64_or("token_burst", di.token_burst),
                 tenants,
+                http,
             }
         };
         let agents = v
@@ -471,6 +516,18 @@ impl DeploymentConfig {
         if self.ingress.max_in_flight == 0 {
             return Err(Error::Config("ingress.max_in_flight must be >= 1".into()));
         }
+        if self.ingress.http.acceptors == 0 {
+            return Err(Error::Config("ingress.http.acceptors must be >= 1".into()));
+        }
+        if self.ingress.http.workers == 0 {
+            return Err(Error::Config("ingress.http.workers must be >= 1".into()));
+        }
+        if self.ingress.http.max_header_bytes < 256 {
+            return Err(Error::Config("ingress.http.max_header_bytes must be >= 256".into()));
+        }
+        if self.ingress.http.max_body_bytes == 0 {
+            return Err(Error::Config("ingress.http.max_body_bytes must be >= 1".into()));
+        }
         let mut tenant_names = std::collections::HashSet::new();
         for t in &self.ingress.tenants {
             if t.name.is_empty() {
@@ -586,6 +643,34 @@ mod tests {
         // implicit single `default` tenant)
         let none = DeploymentConfig::from_json(MINIMAL).unwrap();
         assert!(none.ingress.tenants.is_empty());
+    }
+
+    #[test]
+    fn http_block_parses_and_validates() {
+        let y = r#"{"ingress": {"http": {"acceptors": 2, "workers": 4,
+                      "max_header_bytes": 4096, "max_body_bytes": 65536}},
+                    "agents": [{"name": "a", "kind": "llm", "methods": ["m"]}]}"#;
+        let c = DeploymentConfig::from_json(y).unwrap();
+        assert_eq!(c.ingress.http.acceptors, 2);
+        assert_eq!(c.ingress.http.workers, 4);
+        assert_eq!(c.ingress.http.max_header_bytes, 4096);
+        assert_eq!(c.ingress.http.max_body_bytes, 65536);
+        // no http block = defaults
+        let none = DeploymentConfig::from_json(MINIMAL).unwrap();
+        assert_eq!(none.ingress.http.acceptors, 1);
+        assert_eq!(none.ingress.http.workers, 16);
+        for (http, what) in [
+            (r#"{"acceptors": 0}"#, "zero acceptors"),
+            (r#"{"workers": 0}"#, "zero workers"),
+            (r#"{"max_header_bytes": 64}"#, "header cap below floor"),
+            (r#"{"max_body_bytes": 0}"#, "zero body cap"),
+        ] {
+            let y = format!(
+                r#"{{"ingress": {{"http": {http}}},
+                     "agents": [{{"name": "x", "kind": "llm"}}]}}"#
+            );
+            assert!(DeploymentConfig::from_json(&y).is_err(), "must reject: {what}");
+        }
     }
 
     #[test]

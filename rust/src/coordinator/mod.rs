@@ -95,6 +95,32 @@ pub struct IngressMetrics {
     pub tenants: Vec<TenantMetrics>,
 }
 
+impl IngressMetrics {
+    /// Wire shape for `GET /metrics` on the HTTP serving plane. The node
+    /// store holds these as typed values, not JSON, so the serialization
+    /// lives here — next to the fields — rather than in the HTTP layer.
+    pub fn to_json(&self) -> crate::futures::Value {
+        let tenants: Vec<crate::futures::Value> =
+            self.tenants.iter().map(TenantMetrics::to_json).collect();
+        crate::json!({
+            "workflow": self.workflow.clone(),
+            "depth": self.depth,
+            "in_flight": self.in_flight,
+            "workers": self.workers,
+            "cap": self.cap,
+            "policy": self.policy.clone(),
+            "schedule": self.schedule.clone(),
+            "accepted": self.accepted,
+            "shed": self.shed,
+            "completed": self.completed,
+            "failed": self.failed,
+            "cancelled": self.cancelled,
+            "expired_in_queue": self.expired_in_queue,
+            "tenants": tenants
+        })
+    }
+}
+
 /// One tenant's slice of a workflow queue's front-door telemetry. The
 /// global controller sees these inside [`IngressMetrics`] via the same
 /// `ClusterView.ingress` it already consumes, so per-tenant-aware
@@ -115,4 +141,21 @@ pub struct TenantMetrics {
     pub failed: u64,
     pub expired_in_queue: u64,
     pub cancelled: u64,
+}
+
+impl TenantMetrics {
+    /// Wire shape for one tenant entry inside [`IngressMetrics::to_json`].
+    pub fn to_json(&self) -> crate::futures::Value {
+        crate::json!({
+            "tenant": self.tenant.clone(),
+            "weight": self.weight,
+            "depth": self.depth,
+            "accepted": self.accepted,
+            "shed": self.shed,
+            "completed": self.completed,
+            "failed": self.failed,
+            "expired_in_queue": self.expired_in_queue,
+            "cancelled": self.cancelled
+        })
+    }
 }

@@ -115,6 +115,54 @@ impl Error {
                 | Error::Deadline(..)
         )
     }
+
+    /// The single wire-mapping authority: the HTTP status code the
+    /// serving plane ([`crate::server::http`]) reports for this error.
+    /// The match is exhaustive on purpose — adding a variant forces a
+    /// deliberate decision here instead of a silent 500 (DESIGN.md §9).
+    pub fn http_status(&self) -> u16 {
+        match self {
+            // The front door refused or withdrew the request.
+            Error::Shed(..) => 429,
+            Error::Deadline(..) => 408,
+            Error::Cancelled => 409,
+            // The caller's request was malformed or named unknown things.
+            Error::Config(..) | Error::Json(..) | Error::UnknownAgent(..) => 400,
+            // Capacity / placement faults: the service is temporarily
+            // unable, the caller may back off and retry.
+            Error::NoInstance(..) | Error::InstanceKilled(..) => 503,
+            Error::FutureTimeout(..) => 504,
+            // An upstream agent computed and failed.
+            Error::FutureFailed(..) => 502,
+            // Everything else is an internal fault.
+            Error::Engine(..)
+            | Error::Runtime(..)
+            | Error::Artifact(..)
+            | Error::State(..)
+            | Error::Io(..)
+            | Error::Msg(..) => 500,
+        }
+    }
+
+    /// Suggested `Retry-After` for a [`Error::Shed`] response, derived
+    /// from the shed reason. Token-bucket sheds embed their refill rate
+    /// as `rate limit ({rate:.1} rps)` (see `ingress::admission`), which
+    /// inverts to one token's refill time, clamped to [1 ms, 60 s].
+    /// Queue-full and stopped-ingress sheds carry no rate; they (and
+    /// every non-`Shed` error) fall back to a flat 1 s.
+    pub fn retry_after(&self) -> std::time::Duration {
+        const FALLBACK: std::time::Duration = std::time::Duration::from_secs(1);
+        let Error::Shed(_, reason) = self else { return FALLBACK };
+        let Some(tail) = reason.split("rate limit (").nth(1) else { return FALLBACK };
+        let Some(num) = tail.split(" rps").next() else { return FALLBACK };
+        match num.parse::<f64>() {
+            Ok(rate) if rate > 0.0 => {
+                let secs = (1.0 / rate).clamp(0.001, 60.0);
+                std::time::Duration::from_secs_f64(secs)
+            }
+            _ => FALLBACK,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -137,6 +185,57 @@ mod tests {
         let e = Error::FutureFailed(FutureId(7), InstanceId::new("dev", 1), "oom".into());
         let s = e.to_string();
         assert!(s.contains("f7") && s.contains("dev:1") && s.contains("oom"));
+    }
+
+    /// Every variant is pinned to its wire status: a new variant must
+    /// extend this table (and the `http_status` match) deliberately
+    /// rather than silently inheriting 500.
+    #[test]
+    fn http_status_covers_every_variant() {
+        use std::time::Duration;
+        let io = || std::io::Error::new(std::io::ErrorKind::NotFound, "x");
+        let json_err = || crate::util::json::parse("{").unwrap_err();
+        let table: Vec<(Error, u16)> = vec![
+            (Error::FutureFailed(FutureId(1), InstanceId::new("dev", 1), "oom".into()), 502),
+            (Error::FutureTimeout(FutureId(1), Duration::from_secs(1)), 504),
+            (Error::NoInstance("router".into()), 503),
+            (Error::UnknownAgent("router".into()), 400),
+            (Error::Shed("router".into(), "queue full (8/8)".into()), 429),
+            (Error::Deadline(Duration::from_secs(1)), 408),
+            (Error::Cancelled, 409),
+            (Error::InstanceKilled(InstanceId::new("dev", 1)), 503),
+            (Error::Engine("x".into()), 500),
+            (Error::Runtime("x".into()), 500),
+            (Error::Artifact("x".into()), 500),
+            (Error::Config("x".into()), 400),
+            (Error::State("x".into()), 500),
+            (Error::Io(io()), 500),
+            (Error::Json(json_err()), 400),
+            (Error::Msg("x".into()), 500),
+        ];
+        for (err, want) in table {
+            assert_eq!(err.http_status(), want, "{err}");
+        }
+    }
+
+    #[test]
+    fn retry_after_inverts_the_token_bucket_rate() {
+        use std::time::Duration;
+        // Matches the exact reason strings ingress::admission produces.
+        let shed = |r: &str| Error::Shed("router".into(), r.into());
+        assert_eq!(shed("rate limit (2.0 rps)").retry_after(), Duration::from_secs_f64(0.5));
+        assert_eq!(
+            shed("tenant `hog`: rate limit (4.0 rps)").retry_after(),
+            Duration::from_secs_f64(0.25)
+        );
+        // clamped: an absurdly slow refill caps at 60 s, a fast one
+        // floors at 1 ms
+        assert_eq!(shed("rate limit (0.0 rps)").retry_after(), Duration::from_secs(1));
+        assert_eq!(shed("rate limit (10000.0 rps)").retry_after(), Duration::from_millis(1));
+        // no rate to invert: flat 1 s back-off
+        assert_eq!(shed("queue full (8/8)").retry_after(), Duration::from_secs(1));
+        assert_eq!(shed("ingress stopped").retry_after(), Duration::from_secs(1));
+        assert_eq!(Error::Cancelled.retry_after(), Duration::from_secs(1));
     }
 
     #[test]

@@ -43,7 +43,7 @@ id_u64!(
 id_u64!(
     /// A tenant sharing the serving front door: an index into the
     /// deployment's `ingress.tenants` table, stamped on every request at
-    /// admission (`ingress::Ingress::submit_with`). Tenancy is a
+    /// admission (`ingress::SubmitRequest::tenant`). Tenancy is a
     /// front-door concept — weighted-fair queueing and per-tenant token
     /// buckets key on it — so requests below the ingress layer carry it
     /// only through their `RequestId`.

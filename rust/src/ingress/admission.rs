@@ -216,6 +216,24 @@ mod tests {
         }
     }
 
+    /// Wire contract with `Error::retry_after`: the shed reason is the
+    /// only channel carrying the bucket's refill rate to the HTTP layer,
+    /// so its `rate limit ({rate:.1} rps)` shape must stay parseable.
+    #[test]
+    fn shed_reasons_feed_retry_after_derivation() {
+        use crate::error::Error;
+        let ctl = AdmissionController::new(AdmissionPolicy::TokenBucket { rate: 4.0, burst: 1.0 });
+        let now = Instant::now();
+        ctl.admit_at(0, now).unwrap();
+        let reason = ctl.admit_at(0, now).unwrap_err();
+        let err = Error::Shed("router".into(), reason);
+        assert_eq!(err.retry_after(), std::time::Duration::from_secs_f64(0.25));
+        let bounded = AdmissionController::new(AdmissionPolicy::Bounded { cap: 1 });
+        let reason = bounded.admit_at(1, now).unwrap_err();
+        let err = Error::Shed("router".into(), reason);
+        assert_eq!(err.retry_after(), std::time::Duration::from_secs(1), "no rate: flat 1 s");
+    }
+
     #[test]
     fn for_tenant_builds_a_bucket_only_when_a_rate_is_set() {
         let mut t = TenantSettings::default();

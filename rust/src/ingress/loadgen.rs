@@ -22,9 +22,10 @@ use crate::bench;
 use crate::config::{DeploymentConfig, TenantSettings};
 use crate::error::{Error, Result};
 use crate::ids::SessionId;
-use crate::ingress::{Ingress, SchedulePolicy, SubmitOpts, Ticket};
+use crate::ingress::{Ingress, SchedulePolicy, SubmitRequest, Ticket};
 use crate::json;
 use crate::metrics::{goodput, shed_rate, LatencyRecorder};
+use crate::server::http::HttpClient;
 use crate::server::Deployment;
 use crate::util::bench::Table;
 use crate::util::json::{self as json_util, Value};
@@ -143,6 +144,16 @@ pub struct LoadgenOpts {
     /// show exactly the starvation DRR prevents. None = the config's
     /// tenants (requests submit as the default tenant).
     pub tenants: Option<Vec<TenantLoad>>,
+    /// Drive a live `nalar serve --listen` socket instead of an
+    /// in-process deployment (`--remote addr:port`). The sweep keeps its
+    /// open-loop discipline by submitting in async-park mode
+    /// (`X-Nalar-Wait: 0` → `202` + id) and draining via
+    /// `GET /v1/requests/{id}` polls, so every point additionally
+    /// exercises the wire protocol: 429 sheds with `Retry-After`, 408
+    /// deadline expiries, `DELETE` cancels. The server owns its own
+    /// config (system, schedule, workers, time scale), so those local
+    /// axes do not apply; report points carry `"transport": "http"`.
+    pub remote: Option<String>,
 }
 
 impl LoadgenOpts {
@@ -166,6 +177,7 @@ impl LoadgenOpts {
             cancel_rate: 0.0,
             schedules: None,
             tenants: None,
+            remote: None,
         }
     }
 
@@ -192,6 +204,7 @@ impl LoadgenOpts {
             cancel_rate: 0.0,
             schedules: None,
             tenants: None,
+            remote: None,
         }
     }
 
@@ -238,6 +251,25 @@ pub fn run(opts: &LoadgenOpts) -> Result<PathBuf> {
         None => vec![None],
     };
     let mut points = Vec::new();
+    // `--remote`: the server owns the deployment (its system, schedule
+    // and workers are whatever `nalar serve` launched), so the sweep
+    // collapses to the rate axis and every point goes over the wire.
+    if let Some(addr) = &opts.remote {
+        for &rps in &opts.rates {
+            let t0 = Instant::now();
+            let p = run_point_remote(opts, rps, addr)?;
+            println!(
+                "[loadgen] {} http://{addr} ({}) @ {:.0} rps done in {:.1?}",
+                opts.workflow.name(),
+                p.get("schedule").as_str().unwrap_or("?"),
+                rps,
+                t0.elapsed()
+            );
+            table.row(&sweep_row(&p));
+            points.push(p);
+        }
+        return write_sweep(opts, &format!("http://{addr}"), &table, points);
+    }
     for &rps in &opts.rates {
         for &system in &opts.systems {
             for (si, sched) in schedules.iter().enumerate() {
@@ -273,20 +305,7 @@ pub fn run(opts: &LoadgenOpts) -> Result<PathBuf> {
                         }
                     }
                 }
-                table.row(&[
-                    p.get("system").as_str().unwrap_or("?").to_string(),
-                    p.get("schedule").as_str().unwrap_or("?").to_string(),
-                    format!("{:.0}", p.get("rps_wall").as_f64().unwrap_or(0.0)),
-                    p.get("offered").as_u64().unwrap_or(0).to_string(),
-                    p.get("completed").as_u64().unwrap_or(0).to_string(),
-                    p.get("shed").as_u64().unwrap_or(0).to_string(),
-                    p.get("expired_in_queue").as_u64().unwrap_or(0).to_string(),
-                    p.get("cancelled").as_u64().unwrap_or(0).to_string(),
-                    p.get("failed").as_u64().unwrap_or(0).to_string(),
-                    format!("{:.1}", p.get("goodput_rps").as_f64().unwrap_or(0.0)),
-                    format!("{:.1}", p.get("latency").get("p50").as_f64().unwrap_or(0.0)),
-                    format!("{:.1}", p.get("latency").get("p99").as_f64().unwrap_or(0.0)),
-                ]);
+                table.row(&sweep_row(&p));
                 if opts.expect_admitted_complete {
                     let offered = p.get("offered").as_u64().unwrap_or(0);
                     let shed = p.get("shed").as_u64().unwrap_or(0);
@@ -307,12 +326,41 @@ pub fn run(opts: &LoadgenOpts) -> Result<PathBuf> {
             }
         }
     }
-    println!("\n=== RPS sweep — {} workflow, open loop ===", opts.workflow.name());
+    write_sweep(opts, "open loop", &table, points)
+}
+
+/// Shared tail of [`run`]: print the table, validate against the
+/// `nalar-bench/v1` schema and write `BENCH_rps_sweep.json`.
+fn write_sweep(
+    opts: &LoadgenOpts,
+    label: &str,
+    table: &Table,
+    points: Vec<Value>,
+) -> Result<PathBuf> {
+    println!("\n=== RPS sweep — {} workflow, {label} ===", opts.workflow.name());
     table.print();
     let report = bench::report(bench::RPS_SWEEP, opts.quick, "paper_s", points);
     bench::validate(&report)?;
     std::fs::create_dir_all(&opts.out_dir)?;
     bench::write_report(&opts.out_dir, bench::RPS_SWEEP, &report)
+}
+
+/// One formatted summary-table row from a report point.
+fn sweep_row(p: &Value) -> [String; 12] {
+    [
+        p.get("system").as_str().unwrap_or("?").to_string(),
+        p.get("schedule").as_str().unwrap_or("?").to_string(),
+        format!("{:.0}", p.get("rps_wall").as_f64().unwrap_or(0.0)),
+        p.get("offered").as_u64().unwrap_or(0).to_string(),
+        p.get("completed").as_u64().unwrap_or(0).to_string(),
+        p.get("shed").as_u64().unwrap_or(0).to_string(),
+        p.get("expired_in_queue").as_u64().unwrap_or(0).to_string(),
+        p.get("cancelled").as_u64().unwrap_or(0).to_string(),
+        p.get("failed").as_u64().unwrap_or(0).to_string(),
+        format!("{:.1}", p.get("goodput_rps").as_f64().unwrap_or(0.0)),
+        format!("{:.1}", p.get("latency").get("p50").as_f64().unwrap_or(0.0)),
+        format!("{:.1}", p.get("latency").get("p99").as_f64().unwrap_or(0.0)),
+    ]
 }
 
 /// One (rate, system, schedule) cell of the sweep.
@@ -441,11 +489,14 @@ fn run_point(
         let input = input_for(opts.workflow, progress, turn, &mut rng);
         let tenant = pick_tenant(&mut rng);
         t_offered[tenant] += 1;
-        let sopts = SubmitOpts {
-            session: Some(sessions[sidx]),
-            tenant: if named_tenants { Some(mix[tenant].name.clone()) } else { None },
-        };
-        match ingress.submit_with(opts.workflow, input, timeout, sopts) {
+        let mut sub = SubmitRequest::workflow(opts.workflow)
+            .input(input)
+            .session(sessions[sidx])
+            .deadline(timeout);
+        if named_tenants {
+            sub = sub.tenant(mix[tenant].name.clone());
+        }
+        match ingress.submit(sub) {
             Ok(t) => {
                 tickets.push(t);
                 ticket_tenant.push(tenant);
@@ -550,6 +601,7 @@ fn run_point(
     let mut p = json!({
         "workflow": opts.workflow.name(),
         "system": system.name(),
+        "transport": "inproc",
         "rps_wall": rps,
         "rps_paper": rps * time_scale,
         "duration_s": opts.secs,
@@ -574,6 +626,307 @@ fn run_point(
     // ROADMAP's "report per-tenant goodput in the rps_sweep schema".
     // `missed` is deadline misses — the starvation signal the
     // noisy-neighbor profile exists to expose.
+    let mut tmap = json_util::Map::new();
+    for (i, t) in mix.iter().enumerate() {
+        let mut row = json!({
+            "weight": t.weight,
+            "share": t.share,
+            "offered": t_offered[i],
+            "completed": t_completed[i],
+            "shed": t_shed[i],
+            "cancelled": t_cancelled[i],
+            "missed": t_missed[i],
+            "failed": t_failed[i]
+        });
+        row.insert("goodput_rps", goodput(t_completed[i], window));
+        tmap.insert(t.name.clone(), row);
+    }
+    p.insert("tenants", Value::Obj(tmap));
+    Ok(p)
+}
+
+/// Fetch `GET /metrics` and return `(time_scale, ingress snapshot)` for
+/// `workflow`. Errors if the server does not serve that workflow — the
+/// first thing a remote sweep checks, before offering any load.
+fn fetch_metrics(client: &mut HttpClient, workflow: &str) -> Result<(f64, Value)> {
+    let resp = client.request("GET", "/metrics", &[], "")?;
+    if resp.status != 200 {
+        return Err(Error::Msg(format!("GET /metrics -> {}", resp.status)));
+    }
+    let v = resp.json()?;
+    let time_scale = v.get("time_scale").as_f64().unwrap_or(1.0);
+    let entry = v
+        .get("ingress")
+        .as_arr()
+        .and_then(|a| a.iter().find(|m| m.get("workflow").as_str() == Some(workflow)))
+        .cloned()
+        .ok_or_else(|| Error::Msg(format!("remote server does not serve workflow `{workflow}`")))?;
+    Ok((time_scale, entry))
+}
+
+/// One rate point against a live `nalar serve --listen` socket: the same
+/// open-loop arrival discipline as [`run_point`], but every submit is a
+/// real HTTP request in async-park mode (`X-Nalar-Wait: 0` → `202` +
+/// request id), so the pacing loop never blocks on a completion.
+/// Outcomes drain through `GET /v1/requests/{id}` polls (`200` done,
+/// `202` running, `408` expired, `409` cancelled) and `--cancel-rate`
+/// withdraws via `DELETE` — the point proves the wire semantics,
+/// including `429` sheds carrying `Retry-After`, under genuine
+/// connection reuse. The server owns its deployment: `time_scale`,
+/// schedule, admission policy and worker count come back from
+/// `GET /metrics`, and its cumulative counters are differenced around
+/// the point. The `system` label is taken from the caller's `--systems`
+/// head (the wire cannot reveal what mode the server launched in).
+fn run_point_remote(opts: &LoadgenOpts, rps: f64, addr: &str) -> Result<Value> {
+    // Persistent connections the submit/drain traffic round-robins over.
+    const CONNS: usize = 8;
+    let mut clients: Vec<HttpClient> = (0..CONNS).map(|_| HttpClient::new(addr)).collect();
+    let workflow = opts.workflow.name();
+    let (time_scale, m0) = fetch_metrics(&mut clients[0], workflow)?;
+    let timeout = Duration::from_secs_f64((opts.timeout_paper_s * time_scale).max(0.001));
+    let deadline_hdr = timeout.as_millis().max(1).to_string();
+    let window = Duration::from_secs(opts.secs.max(1));
+
+    let arrivals = Arrivals::new(rps, opts.seed ^ rps.to_bits()).schedule(window);
+    let offered = arrivals.len() as u64;
+    let mut rng = Rng::new(opts.seed ^ 0xFEED);
+    let mix: Vec<TenantLoad> = match &opts.tenants {
+        Some(t) => t.clone(),
+        None => vec![TenantLoad { name: "default".into(), share: 1.0, weight: 1.0 }],
+    };
+    let total_share: f64 = mix.iter().map(|t| t.share).sum();
+    let named_tenants = opts.tenants.is_some();
+    let pick_tenant = |rng: &mut Rng| -> usize {
+        let mut u = (rng.next_u64() % 1_000_000) as f64 / 1_000_000.0 * total_share;
+        for (i, t) in mix.iter().enumerate() {
+            u -= t.share;
+            if u < 0.0 {
+                return i;
+            }
+        }
+        mix.len() - 1
+    };
+
+    struct Parked {
+        id: u64,
+        tenant: usize,
+        /// Terminal outcome already collected (a delivered `DELETE`).
+        done: bool,
+    }
+    let submit_path = format!("/v1/workflows/{workflow}/requests");
+    let mut parked: Vec<Parked> = Vec::with_capacity(arrivals.len());
+    let mut cancels: Vec<(Duration, usize)> = Vec::new(); // (due, parked index)
+    let mut shed = 0u64;
+    let mut t_offered = vec![0u64; mix.len()];
+    let mut t_shed = vec![0u64; mix.len()];
+    let mut t_cancelled = vec![0u64; mix.len()];
+    let mut next_conn = 0usize;
+    let start = Instant::now();
+    for at in &arrivals {
+        let wait = at.saturating_sub(start.elapsed());
+        if !wait.is_zero() {
+            std::thread::sleep(wait);
+        }
+        let now = start.elapsed();
+        // Fire due cancels over the wire. A DELETE may lose to
+        // completion (409) — the drain below collects the real outcome.
+        let mut due: Vec<usize> = Vec::new();
+        cancels.retain(|(when, i)| if *when <= now { due.push(*i); false } else { true });
+        for i in due {
+            let c = &mut clients[next_conn % CONNS];
+            next_conn += 1;
+            let resp = c.request("DELETE", &format!("/v1/requests/{}", parked[i].id), &[], "")?;
+            if resp.status == 200 {
+                parked[i].done = true;
+                t_cancelled[parked[i].tenant] += 1;
+            }
+        }
+        let progress = (now.as_secs_f64() / window.as_secs_f64()).min(1.0);
+        let input = input_for(opts.workflow, progress, 0, &mut rng);
+        let tenant = pick_tenant(&mut rng);
+        t_offered[tenant] += 1;
+        let tname = mix[tenant].name.clone();
+        let mut headers: Vec<(&str, &str)> =
+            vec![("x-nalar-wait", "0"), ("x-nalar-deadline-ms", &deadline_hdr)];
+        if named_tenants {
+            headers.push(("x-nalar-tenant", &tname));
+        }
+        let c = &mut clients[next_conn % CONNS];
+        next_conn += 1;
+        let resp = c.request("POST", &submit_path, &headers, &input.to_string())?;
+        match resp.status {
+            202 => {
+                let id = resp
+                    .json()?
+                    .get("request")
+                    .as_u64()
+                    .ok_or_else(|| Error::Msg("202 accepted without a request id".into()))?;
+                parked.push(Parked { id, tenant, done: false });
+                if opts.cancel_rate > 0.0 && rng.bool_with(opts.cancel_rate) {
+                    let frac = (rng.next_u64() % 1024) as f64 / 1024.0;
+                    cancels.push((now + timeout.mul_f64(frac), parked.len() - 1));
+                }
+            }
+            429 => {
+                // The shed contract on the wire: the Retry-After hint is
+                // part of a 429, not optional.
+                if resp.header("retry-after").is_none() {
+                    return Err(Error::Msg("429 shed without a Retry-After header".into()));
+                }
+                shed += 1;
+                t_shed[tenant] += 1;
+            }
+            s => {
+                return Err(Error::Msg(format!(
+                    "POST {submit_path} -> unexpected {s}: {}",
+                    resp.body
+                )))
+            }
+        }
+    }
+    // Cancels due after the offered window fire at window end.
+    for (_, i) in cancels {
+        let c = &mut clients[next_conn % CONNS];
+        next_conn += 1;
+        let resp = c.request("DELETE", &format!("/v1/requests/{}", parked[i].id), &[], "")?;
+        if resp.status == 200 {
+            parked[i].done = true;
+            t_cancelled[parked[i].tenant] += 1;
+        }
+    }
+
+    // Drain: poll every parked id until it is terminal. The server's
+    // deadline sweep turns stragglers into 408s, so this terminates; the
+    // cap is a safety net against a wedged server.
+    let ok_rec = LatencyRecorder::new();
+    let tail_rec = LatencyRecorder::new();
+    let mut completed = 0u64;
+    let mut failed = 0u64;
+    let mut t_completed = vec![0u64; mix.len()];
+    let mut t_missed = vec![0u64; mix.len()];
+    let mut t_failed = vec![0u64; mix.len()];
+    let mut open: Vec<usize> =
+        parked.iter().enumerate().filter(|(_, p)| !p.done).map(|(i, _)| i).collect();
+    let drain_start = Instant::now();
+    let drain_cap = timeout + Duration::from_secs(5);
+    while !open.is_empty() {
+        let mut still = Vec::new();
+        for &i in &open {
+            let req = &parked[i];
+            let c = &mut clients[next_conn % CONNS];
+            next_conn += 1;
+            let resp = c.request("GET", &format!("/v1/requests/{}", req.id), &[], "")?;
+            match resp.status {
+                202 => still.push(i),
+                200 => {
+                    // Server-side latency, so the distribution measures
+                    // serving (comparable to inproc points), not the
+                    // client's polling cadence.
+                    let ms = resp.json()?.get("latency_ms").as_f64().unwrap_or(0.0);
+                    let lat = Duration::from_secs_f64((ms / 1000.0).max(0.0));
+                    if lat <= timeout {
+                        completed += 1;
+                        t_completed[req.tenant] += 1;
+                        ok_rec.record(lat);
+                        tail_rec.record(lat);
+                    } else {
+                        // Finished, but past its deadline: served too slow.
+                        failed += 1;
+                        t_missed[req.tenant] += 1;
+                        tail_rec.record(timeout);
+                    }
+                }
+                408 => {
+                    failed += 1;
+                    t_missed[req.tenant] += 1;
+                    tail_rec.record(timeout);
+                }
+                409 => t_cancelled[req.tenant] += 1,
+                _ => {
+                    failed += 1;
+                    t_failed[req.tenant] += 1;
+                    tail_rec.record(timeout);
+                }
+            }
+        }
+        if still.is_empty() {
+            break;
+        }
+        if drain_start.elapsed() > drain_cap {
+            return Err(Error::Msg(format!(
+                "{} remote requests still unresolved past their deadlines",
+                still.len()
+            )));
+        }
+        open = still;
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Leak gate over the wire: with every outcome collected, the
+    // server's scheduler tables for this workflow must drain to empty
+    // (bounded grace for sweep bookkeeping, as in the inproc gate).
+    let (_, mut m1) = fetch_metrics(&mut clients[0], workflow)?;
+    let leak_of = |m: &Value| {
+        let tenant_depth = m
+            .get("tenants")
+            .as_arr()
+            .map(|a| a.iter().map(|t| t.get("depth").as_u64().unwrap_or(0)).max().unwrap_or(0))
+            .unwrap_or(0);
+        (
+            m.get("in_flight").as_u64().unwrap_or(0),
+            m.get("depth").as_u64().unwrap_or(0),
+            tenant_depth,
+        )
+    };
+    let drained_at = Instant::now();
+    while leak_of(&m1) != (0, 0, 0) && drained_at.elapsed() < Duration::from_secs(2) {
+        std::thread::sleep(Duration::from_millis(5));
+        m1 = fetch_metrics(&mut clients[0], workflow)?.1;
+    }
+    let leak = leak_of(&m1);
+    if leak != (0, 0, 0) {
+        return Err(Error::Msg(format!(
+            "remote scheduler table leak after full drain: in_flight {} depth {} \
+             max-tenant-sub-queue {} ({workflow} @ {rps:.0} rps via {addr})",
+            leak.0, leak.1, leak.2,
+        )));
+    }
+    // The server's counters are cumulative across points; deltas against
+    // the pre-point snapshot are this point's share.
+    let delta = |key: &str| {
+        m1.get(key).as_u64().unwrap_or(0).saturating_sub(m0.get(key).as_u64().unwrap_or(0))
+    };
+    let expired_in_queue = delta("expired_in_queue");
+    let cancelled = delta("cancelled");
+
+    let paper = 1.0 / time_scale;
+    let gput = goodput(completed, window);
+    let system = opts.systems.first().map(|s| s.name()).unwrap_or("nalar");
+    let mut p = json!({
+        "workflow": workflow,
+        "system": system,
+        "transport": "http",
+        "remote": addr,
+        "rps_wall": rps,
+        "rps_paper": rps * time_scale,
+        "duration_s": opts.secs,
+        "offered": offered,
+        "completed": completed,
+        "failed": failed.saturating_sub(expired_in_queue),
+        "expired_in_queue": expired_in_queue,
+        "shed": shed,
+        "cancelled": cancelled,
+        "cancel_rate": opts.cancel_rate,
+        "schedule": m1.get("schedule").as_str().unwrap_or("?"),
+        "goodput_rps": gput,
+        "goodput_frac": gput / rps,
+        "shed_rate": shed_rate(shed, offered),
+        "timeout_paper_s": opts.timeout_paper_s,
+        "ingress_policy": m1.get("policy").as_str().unwrap_or("?"),
+        "ingress_workers": m1.get("workers").as_u64().unwrap_or(0)
+    });
+    p.insert("latency", tail_rec.summary_scaled(paper).to_json());
+    p.insert("latency_ok", ok_rec.summary_scaled(paper).to_json());
     let mut tmap = json_util::Map::new();
     for (i, t) in mix.iter().enumerate() {
         let mut row = json!({
@@ -618,6 +971,7 @@ mod tests {
         assert_eq!(pts.len(), 1);
         let p = &pts[0];
         assert!(p.get("completed").as_u64().unwrap() > 0, "nothing completed");
+        assert_eq!(p.get("transport").as_str(), Some("inproc"), "local points are in-process");
         assert_eq!(p.get("ingress_policy").as_str(), Some("bounded"));
         assert!(p.get("expired_in_queue").as_u64().is_some(), "new-schema field missing");
         assert_eq!(p.get("cancelled").as_u64(), Some(0), "no --cancel-rate: none cancelled");

@@ -6,17 +6,21 @@
 //! capacity claim ("sustains 80 RPS where baselines fail", §6). Ingress is
 //! the missing front of the pipeline:
 //!
-//! * [`Ingress::submit`] accepts a workflow request asynchronously,
-//!   stamps its [`RequestId`]/[`SessionId`] at admission, and enqueues it
-//!   into a per-workflow bounded queue instead of blocking the caller —
-//!   the returned [`Ticket`] is the caller's completion handle, including
-//!   mid-flight withdrawal via [`Ticket::cancel`].
+//! * [`Ingress::submit`] — the single submit entry point, fed by a
+//!   [`SubmitRequest`] builder (workflow kind, payload, tenant, session,
+//!   deadline, optional custom driver) — accepts a workflow request
+//!   asynchronously, stamps its [`RequestId`]/[`SessionId`] at admission,
+//!   and enqueues it into a per-workflow bounded queue instead of
+//!   blocking the caller — the returned [`Ticket`] is the caller's
+//!   completion handle, including mid-flight withdrawal via
+//!   [`Ticket::cancel`]. The HTTP serving plane
+//!   ([`crate::server::http`]) maps wire requests 1:1 onto this call.
 //! * an [`AdmissionController`] per queue decides accept-vs-shed
 //!   ([`AdmissionPolicy`]: unbounded / bounded / token bucket); shed
 //!   requests fail fast with a retryable [`Error::Shed`].
 //! * the front door is **multi-tenant** ([`fairness`], config
 //!   `ingress.tenants`): every request is stamped with a
-//!   [`TenantId`] at admission ([`SubmitOpts::tenant`]), each tenant may
+//!   [`TenantId`] at admission ([`SubmitRequest::tenant`]), each tenant may
 //!   carry its own token bucket *under* the shared admission policy, and
 //!   each workflow queue splits into per-tenant sub-queues served by
 //!   deficit round robin — weighted-fair across tenants, while *inside* a
@@ -120,19 +124,15 @@ impl TicketCell {
     }
 }
 
-/// Per-submit options for [`Ingress::submit_with`] /
-/// [`Ingress::submit_driver_with`].
+/// Per-submit options for the deprecated [`Ingress::submit_with`] /
+/// [`Ingress::submit_driver_with`] shims. New code carries these fields
+/// on [`SubmitRequest`] instead; this struct remains only so the old
+/// signatures stay callable for one deprecation cycle.
 #[derive(Debug, Clone, Default)]
 pub struct SubmitOpts {
     /// Existing session to continue (`None` opens a fresh one).
     pub session: Option<SessionId>,
-    /// Tenant to charge the request to. `None` = the deployment's first
-    /// configured tenant (the implicit `default` when no `ingress.tenants`
-    /// block exists). Unknown names are a config error when tenants are
-    /// configured — a typo must not silently share someone else's bucket;
-    /// with the implicit single-tenant table every name collapses onto it
-    /// (there is no tenancy to enforce — this is also how baselines stay
-    /// single-tenant after `baselines::SystemUnderTest::apply`).
+    /// Tenant to charge the request to (see [`SubmitRequest::tenant`]).
     pub tenant: Option<String>,
 }
 
@@ -140,6 +140,95 @@ impl SubmitOpts {
     /// Charge the request to the named tenant.
     pub fn tenant(name: &str) -> SubmitOpts {
         SubmitOpts { session: None, tenant: Some(name.to_string()) }
+    }
+}
+
+/// Everything one front-door submission carries, as a builder — the
+/// consolidated submit surface (this replaced the four-way
+/// `submit`/`submit_with`/`submit_driver`/`submit_driver_with` split).
+/// Construct with [`SubmitRequest::workflow`], chain what the request
+/// needs, hand it to [`Ingress::submit`]:
+///
+/// ```ignore
+/// let ticket = ingress.submit(
+///     SubmitRequest::workflow(WorkflowKind::Router)
+///         .input(json!({"prompt": "hi"}))
+///         .tenant("meek")
+///         .deadline(Duration::from_secs(30)),
+/// )?;
+/// ```
+///
+/// The HTTP front door builds one of these per wire request
+/// (`X-Nalar-Tenant` → [`Self::tenant`], `X-Nalar-Deadline-Ms` →
+/// [`Self::deadline`], the POST body → [`Self::input`]).
+pub struct SubmitRequest {
+    kind: WorkflowKind,
+    input: Value,
+    driver: Option<Box<dyn Driver>>,
+    session: Option<SessionId>,
+    tenant: Option<String>,
+    timeout: Duration,
+}
+
+impl SubmitRequest {
+    /// Default end-to-end deadline when [`Self::deadline`] is not called.
+    pub const DEFAULT_DEADLINE: Duration = Duration::from_secs(30);
+
+    /// A submission for `kind` with `Null` input, a fresh session, the
+    /// default tenant and [`Self::DEFAULT_DEADLINE`].
+    pub fn workflow(kind: WorkflowKind) -> SubmitRequest {
+        SubmitRequest {
+            kind,
+            input: Value::Null,
+            driver: None,
+            session: None,
+            tenant: None,
+            timeout: Self::DEFAULT_DEADLINE,
+        }
+    }
+
+    /// Workflow payload (what [`crate::workflow::driver_for`] builds the
+    /// standard driver from). Ignored when [`Self::driver`] supplies a
+    /// custom one.
+    pub fn input(mut self, input: Value) -> Self {
+        self.input = input;
+        self
+    }
+
+    /// Run a caller-built resumable [`Driver`] instead of the workflow's
+    /// standard one — the serving-side analog of "drivers are ordinary
+    /// code": any state machine can be admitted, scheduled, expired and
+    /// cancelled like the built-ins. (The deterministic scheduler tests
+    /// inject [`crate::testkit::ScriptedEngine`] drivers through this.)
+    pub fn driver(mut self, driver: Box<dyn Driver>) -> Self {
+        self.driver = Some(driver);
+        self
+    }
+
+    /// Continue an existing session (default: open a fresh one).
+    pub fn session(mut self, session: SessionId) -> Self {
+        self.session = Some(session);
+        self
+    }
+
+    /// Charge the request to the named tenant: its token bucket admits,
+    /// its DRR sub-queue holds the request, its counters take the
+    /// outcome. `None`/unset = the deployment's first configured tenant
+    /// (the implicit `default` when no `ingress.tenants` block exists).
+    /// Unknown names are a config error when tenants are configured — a
+    /// typo must not silently share someone else's bucket; with the
+    /// implicit single-tenant table every name collapses onto it (there
+    /// is no tenancy to enforce — this is also how baselines stay
+    /// single-tenant after `baselines::SystemUnderTest::apply`).
+    pub fn tenant(mut self, name: impl Into<String>) -> Self {
+        self.tenant = Some(name.into());
+        self
+    }
+
+    /// End-to-end deadline, counted from admission.
+    pub fn deadline(mut self, timeout: Duration) -> Self {
+        self.timeout = timeout;
+        self
     }
 }
 
@@ -184,6 +273,22 @@ impl Ticket {
     /// Submit-to-completion latency, once the request finished.
     pub fn latency(&self) -> Option<Duration> {
         self.cell.slot.lock().unwrap().latency
+    }
+
+    /// Non-blocking probe: `None` while the request is still live,
+    /// `Some(result)` once a terminal outcome landed. Consumes the result
+    /// exactly like [`Self::wait`] (the HTTP front door polls parked
+    /// requests through this on `GET /v1/requests/{id}`).
+    pub fn try_take(&self) -> Option<Result<Value>> {
+        let mut g = self.cell.slot.lock().unwrap();
+        if !g.done {
+            return None;
+        }
+        Some(
+            g.result
+                .take()
+                .unwrap_or_else(|| Err(Error::Msg("ticket result already taken".into()))),
+        )
     }
 
     /// Withdraw the request: atomically remove it from whichever
@@ -1092,24 +1197,22 @@ impl Ingress {
         Ingress { inner, joins: Mutex::new(joins) }
     }
 
-    /// Accept or shed one request. Non-blocking: on acceptance the request
-    /// is queued and the caller gets a [`Ticket`]; on shed the caller gets
-    /// a retryable [`Error::Shed`] immediately. `session: None` opens a
-    /// fresh session. `timeout` is the request's end-to-end deadline,
-    /// counted from admission.
-    pub fn submit(
-        &self,
-        kind: WorkflowKind,
-        session: Option<SessionId>,
-        input: Value,
-        timeout: Duration,
-    ) -> Result<Ticket> {
-        self.submit_inner(kind, input, None, timeout, SubmitOpts { session, tenant: None })
+    /// Accept or shed one request — the single front-door entry point
+    /// (the HTTP serving plane, the loadgen and every suite funnel
+    /// through here; see [`SubmitRequest`] for what a submission
+    /// carries). Non-blocking: on acceptance the request is queued and
+    /// the caller gets a [`Ticket`]; on shed the caller gets a retryable
+    /// [`Error::Shed`] immediately. The deadline is counted from
+    /// admission.
+    pub fn submit(&self, req: SubmitRequest) -> Result<Ticket> {
+        let SubmitRequest { kind, input, driver, session, tenant, timeout } = req;
+        self.submit_inner(kind, input, driver, timeout, SubmitOpts { session, tenant })
     }
 
-    /// [`Self::submit`] with explicit [`SubmitOpts`] — the multi-tenant
-    /// entry point: the request is charged to `opts.tenant`'s token
-    /// bucket and queued in that tenant's DRR sub-queue.
+    /// Pre-`SubmitRequest` multi-tenant submit. Identical behaviour to
+    /// `submit(SubmitRequest::workflow(kind).input(input).deadline(timeout)
+    /// ...)` with `opts` unpacked onto the builder.
+    #[deprecated(note = "build a `SubmitRequest` and call `Ingress::submit`")]
     pub fn submit_with(
         &self,
         kind: WorkflowKind,
@@ -1120,12 +1223,9 @@ impl Ingress {
         self.submit_inner(kind, input, None, timeout, opts)
     }
 
-    /// Like [`Self::submit`], but with a caller-built [`Driver`] instead
-    /// of the workflow's standard one — the serving-side analog of
-    /// "drivers are ordinary code": any resumable state machine can be
-    /// admitted, scheduled, expired and cancelled like the built-ins.
-    /// (The deterministic scheduler tests inject
-    /// [`crate::testkit::ScriptedEngine`] drivers through this.)
+    /// Pre-`SubmitRequest` custom-driver submit. Identical behaviour to
+    /// `submit(SubmitRequest::workflow(kind).driver(driver)...)`.
+    #[deprecated(note = "build a `SubmitRequest` and call `Ingress::submit`")]
     pub fn submit_driver(
         &self,
         kind: WorkflowKind,
@@ -1142,9 +1242,9 @@ impl Ingress {
         )
     }
 
-    /// [`Self::submit_driver`] with explicit [`SubmitOpts`] (the
-    /// deterministic fairness suite submits scripted drivers per tenant
-    /// through this).
+    /// Pre-`SubmitRequest` custom-driver + options submit. Identical
+    /// behaviour to the equivalent [`SubmitRequest`] chain.
+    #[deprecated(note = "build a `SubmitRequest` and call `Ingress::submit`")]
     pub fn submit_driver_with(
         &self,
         kind: WorkflowKind,
@@ -1331,13 +1431,18 @@ mod tests {
         json!({"prompt": "hello", "class": "chat"})
     }
 
+    /// The common builder chain, shortened for the suites below.
+    fn req(kind: WorkflowKind, input: Value, timeout: Duration) -> SubmitRequest {
+        SubmitRequest::workflow(kind).input(input).deadline(timeout)
+    }
+
     #[test]
     fn submits_complete_through_the_scheduler() {
         let d = fast_router();
         let ing = Ingress::start_with(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, 4);
         let timeout = Duration::from_secs(20);
         let tickets: Vec<Ticket> = (0..8)
-            .map(|_| ing.submit(WorkflowKind::Router, None, router_input(), timeout).unwrap())
+            .map(|_| ing.submit(req(WorkflowKind::Router, router_input(), timeout)).unwrap())
             .collect();
         for t in &tickets {
             let out = t.wait(timeout).unwrap();
@@ -1378,7 +1483,7 @@ mod tests {
         let mut tickets = Vec::new();
         let mut sheds = 0;
         for _ in 0..40 {
-            match ing.submit(WorkflowKind::Router, None, router_input(), timeout) {
+            match ing.submit(req(WorkflowKind::Router, router_input(), timeout)) {
                 Ok(t) => tickets.push(t),
                 Err(e) => {
                     // fails fast with a retryable shed error
@@ -1405,7 +1510,7 @@ mod tests {
         let d = fast_router();
         let ing = Ingress::start_with(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, 1);
         let t = ing
-            .submit(WorkflowKind::Router, None, router_input(), Duration::ZERO)
+            .submit(req(WorkflowKind::Router, router_input(), Duration::ZERO))
             .unwrap();
         let err = t.wait(Duration::from_secs(5)).unwrap_err();
         assert!(matches!(err, Error::Deadline(..)), "{err}");
@@ -1429,7 +1534,7 @@ mod tests {
         );
         let timeout = Duration::from_secs(20);
         let tickets: Vec<Ticket> = (0..4)
-            .map(|_| ing.submit(WorkflowKind::Router, None, router_input(), timeout).unwrap())
+            .map(|_| ing.submit(req(WorkflowKind::Router, router_input(), timeout)).unwrap())
             .collect();
         for t in &tickets {
             t.wait(timeout).unwrap();
@@ -1462,7 +1567,7 @@ mod tests {
         let ing = Ingress::start_with(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, 1);
         let timeout = Duration::from_secs(30);
         let tickets: Vec<Ticket> = (0..10)
-            .map(|_| ing.submit(WorkflowKind::Router, None, router_input(), timeout).unwrap())
+            .map(|_| ing.submit(req(WorkflowKind::Router, router_input(), timeout)).unwrap())
             .collect();
         ing.stop();
         let failures = tickets
@@ -1481,7 +1586,7 @@ mod tests {
         let d = fast_router();
         let ing = Ingress::start_with(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, 1);
         let err = ing
-            .submit(WorkflowKind::Swe, None, json!({"task": "t"}), Duration::from_secs(1))
+            .submit(req(WorkflowKind::Swe, json!({"task": "t"}), Duration::from_secs(1)))
             .unwrap_err();
         assert!(matches!(err, Error::Config(..)), "{err}");
         ing.stop();
@@ -1495,7 +1600,11 @@ mod tests {
         let eng = ScriptedEngine::new();
         let timeout = Duration::from_secs(10);
         let t = ing
-            .submit_driver(WorkflowKind::Router, None, eng.driver("custom", 1), timeout)
+            .submit(
+                SubmitRequest::workflow(WorkflowKind::Router)
+                    .driver(eng.driver("custom", 1))
+                    .deadline(timeout),
+            )
             .unwrap();
         assert!(eng.wait_created(1, Duration::from_secs(5)), "scripted call must be issued");
         eng.cell(0).resolve(json!("done"), 0);
@@ -1514,7 +1623,11 @@ mod tests {
         let eng = ScriptedEngine::new();
         let timeout = Duration::from_secs(30);
         let t = ing
-            .submit_driver(WorkflowKind::Router, None, eng.driver("doomed", 1), timeout)
+            .submit(
+                SubmitRequest::workflow(WorkflowKind::Router)
+                    .driver(eng.driver("doomed", 1))
+                    .deadline(timeout),
+            )
             .unwrap();
         assert!(eng.wait_created(1, Duration::from_secs(5)));
         assert!(t.cancel(), "a parked request must be cancellable");
@@ -1546,9 +1659,9 @@ mod tests {
         let d = Deployment::launch(cfg).unwrap();
         let ing = Ingress::start_with(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, 2);
         let timeout = Duration::from_secs(20);
-        let t1 = ing.submit(WorkflowKind::Router, None, router_input(), timeout).unwrap();
+        let t1 = ing.submit(req(WorkflowKind::Router, router_input(), timeout)).unwrap();
         let t2 = ing
-            .submit_with(WorkflowKind::Router, router_input(), timeout, SubmitOpts::tenant("x"))
+            .submit(req(WorkflowKind::Router, router_input(), timeout).tenant("x"))
             .unwrap();
         assert_eq!(t1.tenant, TenantId(0));
         assert_eq!(t2.tenant, TenantId(0), "unnamed table: any name collapses onto it");
@@ -1591,12 +1704,7 @@ mod tests {
         let mut hog_tickets = Vec::new();
         let mut hog_sheds = 0;
         for _ in 0..5 {
-            match ing.submit_with(
-                WorkflowKind::Router,
-                router_input(),
-                timeout,
-                SubmitOpts::tenant("hog"),
-            ) {
+            match ing.submit(req(WorkflowKind::Router, router_input(), timeout).tenant("hog")) {
                 Ok(t) => {
                     assert_eq!(t.tenant, TenantId(0), "tenant stamped at admission");
                     hog_tickets.push(t);
@@ -1613,13 +1721,8 @@ mod tests {
         // the meek tenant is untouched by the hog's exhausted bucket
         let meek: Vec<Ticket> = (0..3)
             .map(|_| {
-                ing.submit_with(
-                    WorkflowKind::Router,
-                    router_input(),
-                    timeout,
-                    SubmitOpts::tenant("meek"),
-                )
-                .unwrap()
+                ing.submit(req(WorkflowKind::Router, router_input(), timeout).tenant("meek"))
+                    .unwrap()
             })
             .collect();
         assert_eq!(meek[0].tenant, TenantId(1));
@@ -1635,9 +1738,89 @@ mod tests {
         assert_eq!(m.shed, 3, "aggregate shed = tenant sum");
         // typos must not silently share someone else's bucket
         let err = ing
-            .submit_with(WorkflowKind::Router, router_input(), timeout, SubmitOpts::tenant("hgo"))
+            .submit(req(WorkflowKind::Router, router_input(), timeout).tenant("hgo"))
             .unwrap_err();
         assert!(matches!(err, Error::Config(..)), "{err}");
+        ing.stop();
+        d.shutdown();
+    }
+
+    #[test]
+    fn submit_request_builder_defaults_and_overrides() {
+        let r = SubmitRequest::workflow(WorkflowKind::Router);
+        assert!(matches!(r.input, Value::Null));
+        assert!(r.driver.is_none());
+        assert!(r.session.is_none());
+        assert!(r.tenant.is_none());
+        assert_eq!(r.timeout, SubmitRequest::DEFAULT_DEADLINE);
+        let r = r.input(router_input()).tenant("hog").deadline(Duration::from_secs(5));
+        assert_eq!(r.tenant.as_deref(), Some("hog"));
+        assert_eq!(r.timeout, Duration::from_secs(5));
+        assert!(r.input.get("prompt").as_str().is_some());
+    }
+
+    /// The one-PR deprecation contract: every old entry point must behave
+    /// exactly like the `SubmitRequest` chain that replaces it.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_match_the_builder_path() {
+        let d = fast_router();
+        let ing = Ingress::start_with(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, 4);
+        let timeout = Duration::from_secs(20);
+
+        // submit_with(kind, input, timeout, opts) == builder with the
+        // same session: both tickets continue the caller's session and
+        // land on the same (implicit) tenant.
+        let sess = d.new_session();
+        let old = ing
+            .submit_with(
+                WorkflowKind::Router,
+                router_input(),
+                timeout,
+                SubmitOpts { session: Some(sess), tenant: None },
+            )
+            .unwrap();
+        let new = ing
+            .submit(req(WorkflowKind::Router, router_input(), timeout).session(sess))
+            .unwrap();
+        assert_eq!(old.session, sess);
+        assert_eq!(new.session, sess);
+        assert_eq!(old.tenant, new.tenant);
+        old.wait(timeout).unwrap();
+        new.wait(timeout).unwrap();
+
+        // submit_driver / submit_driver_with == builder.driver(..): all
+        // three admit a scripted driver that completes identically.
+        let eng = ScriptedEngine::new();
+        let t_old = ing
+            .submit_driver(WorkflowKind::Router, None, eng.driver("shim", 1), timeout)
+            .unwrap();
+        let t_with = ing
+            .submit_driver_with(
+                WorkflowKind::Router,
+                eng.driver("shim", 1),
+                timeout,
+                SubmitOpts::default(),
+            )
+            .unwrap();
+        let t_new = ing
+            .submit(
+                SubmitRequest::workflow(WorkflowKind::Router)
+                    .driver(eng.driver("shim", 1))
+                    .deadline(timeout),
+            )
+            .unwrap();
+        assert!(eng.wait_created(3, Duration::from_secs(5)), "all three drivers must run");
+        for i in 0..3 {
+            eng.cell(i).resolve(json!("done"), 0);
+        }
+        for t in [t_old, t_with, t_new] {
+            let out = t.wait(Duration::from_secs(5)).unwrap();
+            assert_eq!(out.get("scripted").as_str(), Some("shim"));
+        }
+        let m = ing.metrics(WorkflowKind::Router).unwrap();
+        assert_eq!(m.completed, 5, "both surfaces feed the same counters");
+        assert_eq!(m.in_flight, 0, "no table leak via either surface");
         ing.stop();
         d.shutdown();
     }

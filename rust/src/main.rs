@@ -8,13 +8,20 @@
 //!               [--check-only]            # writes/validates BENCH_*.json
 //! nalar serve   --workflow router|financial|swe [--system nalar|...] [--secs 30]
 //!               [--rps N] [--config path.json]
-//!               # hold a deployment open behind the ingress front door
+//!               [--listen 127.0.0.1:8080] [--port-file P] [--stop-file P]
+//!               [--time-scale F]
+//!               # hold a deployment open behind the ingress front door;
+//!               # --listen serves the HTTP/1.1 wire protocol (DESIGN.md §9)
+//!               # instead of in-process self-traffic: --port-file writes
+//!               # the bound port (for `--listen 127.0.0.1:0`), --stop-file
+//!               # shuts down cleanly when the named file appears, and the
+//!               # exit status asserts zero leaked connections
 //! nalar loadgen --workload router|financial|swe [--rps 20,40,80 | 20:160:20]
 //!               [--systems nalar,ayo,crew,autogen] [--secs N] [--quick]
 //!               [--hc-smoke] [--workers N] [--cancel-rate 0.1]
 //!               [--schedule fifo,deadline_slack]
 //!               [--tenants noisy | name:share[:weight],...] [--out DIR]
-//!               [--config path.json] [--check-only]
+//!               [--config path.json] [--check-only] [--remote HOST:PORT]
 //!               # open-loop saturation sweep -> BENCH_rps_sweep.json;
 //!               # --hc-smoke gates on every admitted request completing
 //!               # (and no scheduler-table leak) with a 4-thread
@@ -24,7 +31,9 @@
 //!               # scheduling axis (FIFO vs SRTF tail latency);
 //!               # --tenants splits the offered load across tenants
 //!               # (DRR weights + per-tenant goodput rows — `noisy` is
-//!               # the 10x noisy-neighbor profile at equal weights)
+//!               # the 10x noisy-neighbor profile at equal weights);
+//!               # --remote drives a live `nalar serve --listen` socket
+//!               # over HTTP instead of an in-process deployment
 //! ```
 
 use std::path::PathBuf;
@@ -34,7 +43,8 @@ use nalar::baselines::SystemUnderTest;
 use nalar::bench::{self, BenchOpts};
 use nalar::config::DeploymentConfig;
 use nalar::ingress::loadgen::{self, LoadgenOpts};
-use nalar::ingress::Ingress;
+use nalar::ingress::{Ingress, SubmitRequest};
+use nalar::server::http::HttpServer;
 use nalar::server::Deployment;
 use nalar::util::cli::Args;
 use nalar::util::rng::Rng;
@@ -78,11 +88,12 @@ fn main() -> nalar::Result<()> {
                 "usage: nalar <run|info|bench|serve|loadgen> [--workflow financial|router|swe] \
                  [--system nalar|ayo|crew|autogen] [--rps N] [--secs N] [--config file.json] \
                  | bench [--quick] [--only fig9,fig10,table4,sec62] [--out DIR] [--check-only] \
-                 | serve [--workflow ...] [--secs N] [--rps N] \
+                 | serve [--workflow ...] [--secs N] [--rps N] [--listen ADDR] \
+                 [--port-file P] [--stop-file P] [--time-scale F] \
                  | loadgen [--workload router|financial|swe] [--rps LIST|START:END:STEP] \
                  [--systems csv] [--secs N] [--quick] [--hc-smoke] [--workers N] \
                  [--cancel-rate F] [--schedule csv] [--tenants noisy|name:share[:weight],...] \
-                 [--out DIR] [--check-only]"
+                 [--out DIR] [--check-only] [--remote HOST:PORT]"
             );
             Ok(())
         }
@@ -176,17 +187,26 @@ fn cmd_bench(args: &Args) -> nalar::Result<()> {
 }
 
 /// `nalar serve`: hold a deployment open behind the ingress front door,
-/// printing per-second front-door telemetry. `--rps N` feeds it an
-/// open-loop self-traffic stream — a stand-in for the HTTP wire protocol,
-/// which is a ROADMAP follow-on (submissions would arrive over a socket
-/// instead).
+/// printing per-second front-door telemetry. Two traffic sources:
+/// `--listen ADDR` starts the HTTP/1.1 serving plane (DESIGN.md §9) so
+/// submissions arrive over a real socket; `--rps N` feeds an in-process
+/// open-loop self-traffic stream (the pre-wire behaviour).
 fn cmd_serve(args: &Args) -> nalar::Result<()> {
     let wf = parse_workflow(&args.str_or("workflow", "router"))?;
     let system = parse_system(&args.str_or("system", "nalar"))?;
-    let cfg = load_config(args, wf)?;
+    let mut cfg = load_config(args, wf)?;
+    if let Some(ts) = args.get("time-scale") {
+        cfg.time_scale = ts
+            .parse()
+            .map_err(|_| nalar::Error::Config(format!("bad --time-scale `{ts}`")))?;
+    }
     let time_scale = cfg.time_scale;
     let d = Deployment::launch_as(cfg, system)?;
-    let ingress = Ingress::start(&d, &[wf]);
+    let ingress = std::sync::Arc::new(Ingress::start(&d, &[wf]));
+    if let Some(listen) = args.get("listen") {
+        let listen = listen.to_string();
+        return serve_http(args, d, ingress, wf, &listen);
+    }
     let secs = args.u64_or("secs", 30);
     let rps = args.f64_or("rps", 0.0);
     let timeout = Duration::from_secs_f64(
@@ -214,7 +234,9 @@ fn cmd_serve(args: &Args) -> nalar::Result<()> {
                     }
                     let progress = (start.elapsed().as_secs_f64() / window.as_secs_f64()).min(1.0);
                     let input = input_for(wf, progress, 0, &mut rng);
-                    let _ = ingress.submit(wf, None, input, timeout); // fire and forget
+                    // fire and forget
+                    let _ = ingress
+                        .submit(SubmitRequest::workflow(wf).input(input).deadline(timeout));
                 }
             });
         }
@@ -252,6 +274,79 @@ fn cmd_serve(args: &Args) -> nalar::Result<()> {
     });
     ingress.stop();
     d.shutdown();
+    Ok(())
+}
+
+/// `nalar serve --listen`: the HTTP serving plane. Runs until `--secs`
+/// elapses or the `--stop-file` path appears (the poll-based stand-in for
+/// signal handling in a zero-dependency build), then asserts a clean
+/// shutdown: a nonzero exit if any accepted connection leaked — the gate
+/// the `serve-smoke` CI job relies on.
+fn serve_http(
+    args: &Args,
+    d: Deployment,
+    ingress: std::sync::Arc<Ingress>,
+    wf: WorkflowKind,
+    listen: &str,
+) -> nalar::Result<()> {
+    let server = HttpServer::start(&d, ingress.clone(), &[wf], listen)?;
+    let addr = server.addr();
+    println!(
+        "[serve] listening on http://{addr} — POST /v1/workflows/{}/requests, \
+         GET /metrics (time_scale {})",
+        wf.name(),
+        d.cfg().time_scale
+    );
+    if let Some(path) = args.get("port-file") {
+        std::fs::write(path, format!("{}\n", addr.port()))?;
+    }
+    let secs = args.u64_or("secs", 0); // 0 = until the stop file appears
+    let stop_file = args.get("stop-file").map(PathBuf::from);
+    let started = Instant::now();
+    let mut last_print = Instant::now();
+    loop {
+        std::thread::sleep(Duration::from_millis(200));
+        if let Some(f) = &stop_file {
+            if f.exists() {
+                println!("[serve] stop file present, shutting down");
+                break;
+            }
+        }
+        if secs > 0 && started.elapsed() >= Duration::from_secs(secs) {
+            break;
+        }
+        // safety net when neither bound was given: don't serve forever
+        if secs == 0 && stop_file.is_none() && started.elapsed() >= Duration::from_secs(3600) {
+            break;
+        }
+        if last_print.elapsed() >= Duration::from_secs(1) {
+            last_print = Instant::now();
+            if let Some(m) = ingress.metrics(wf) {
+                println!(
+                    "[serve] conns {} depth {} in-flight {} accepted {} shed {} completed {} \
+                     failed {} expired {} cancelled {}",
+                    server.open_connections(),
+                    m.depth,
+                    m.in_flight,
+                    m.accepted,
+                    m.shed,
+                    m.completed,
+                    m.failed,
+                    m.expired_in_queue,
+                    m.cancelled
+                );
+            }
+        }
+    }
+    let leaked = server.stop();
+    ingress.stop();
+    d.shutdown();
+    if leaked != 0 {
+        return Err(nalar::Error::State(format!(
+            "{leaked} HTTP connection(s) leaked at shutdown"
+        )));
+    }
+    println!("[serve] clean shutdown: 0 leaked connections");
     Ok(())
 }
 
@@ -341,6 +436,7 @@ fn cmd_loadgen(args: &Args) -> nalar::Result<()> {
         opts.time_scale = Some(scale);
     }
     opts.seed = args.u64_or("seed", opts.seed);
+    opts.remote = args.get("remote").map(String::from);
     let path = loadgen::run(&opts)?;
     println!("rps sweep written: {}", path.display());
     Ok(())

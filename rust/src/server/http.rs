@@ -1,0 +1,877 @@
+//! The network serving plane: a dependency-free HTTP/1.1 front door over
+//! the ingress scheduler (`nalar serve --listen <addr>`).
+//!
+//! Everything the wire layer does maps 1:1 onto machinery that already
+//! exists in-process — this module adds sockets and parsing, not policy:
+//!
+//! * `POST /v1/workflows/{kind}/requests` builds a
+//!   [`SubmitRequest`](crate::ingress::SubmitRequest) (tenant from
+//!   `X-Nalar-Tenant`, deadline from `X-Nalar-Deadline-Ms`, payload from
+//!   the body) and calls the one [`Ingress::submit`] entry point. By
+//!   default it waits for the outcome (`200` + result); with
+//!   `X-Nalar-Wait: 0` it parks the [`Ticket`] in a registry and answers
+//!   `202` + request id immediately.
+//! * `GET /v1/requests/{id}` polls a parked ticket ([`Ticket::try_take`]):
+//!   `202` while live, the mapped terminal status once done.
+//! * `DELETE /v1/requests/{id}` is [`Ticket::cancel`] — `200` when the
+//!   cancel was delivered, `409` when the request already finished.
+//! * `GET /metrics` hand-serializes the per-tenant
+//!   [`IngressMetrics`](crate::coordinator::IngressMetrics) snapshots.
+//!
+//! Status codes and `Retry-After` come from the single wire-mapping
+//! authority [`Error::http_status`] / [`Error::retry_after`] — the HTTP
+//! layer never invents its own mapping (DESIGN.md §9).
+//!
+//! The connection machinery is a small fixed pool, sized by
+//! [`HttpSettings`]: `acceptors` threads poll a non-blocking listener and
+//! hand accepted sockets to `workers` connection workers over a channel.
+//! Each worker owns one persistent connection at a time: it reads with a
+//! short timeout (so the stop flag is honored promptly), feeds bytes to
+//! the incremental [`parse_request`] parser (split-across-reads requests
+//! just return [`Parsed::NeedMore`]), serves pipelined requests from the
+//! leftover buffer, and keeps the connection open until the client closes
+//! it, sends `Connection: close`, idles out, or breaks framing. An
+//! `open_connections` gauge counts accepted-but-unfinished sockets;
+//! [`HttpServer::stop`] reports it so callers (the serve-smoke CI gate)
+//! can assert zero leaked connections at shutdown.
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::HttpSettings;
+use crate::error::{Error, Result};
+use crate::futures::Value;
+use crate::ingress::{Ingress, SubmitRequest, Ticket};
+use crate::json;
+use crate::server::Deployment;
+use crate::workflow::WorkflowKind;
+
+/// Deadline when the client sends no `X-Nalar-Deadline-Ms`. Matches
+/// [`SubmitRequest::DEFAULT_DEADLINE`].
+const DEFAULT_DEADLINE_MS: u64 = 30_000;
+/// Slack past the request deadline a synchronous POST waits before giving
+/// up on the scheduler: expiry is the scheduler's call (it fulfils the
+/// ticket with `Error::Deadline` → `408`), the wire just needs a bound.
+const WAIT_GRACE: Duration = Duration::from_secs(5);
+/// Read timeout per attempt: the granularity at which a blocked
+/// connection worker re-checks the stop flag.
+const READ_TIMEOUT: Duration = Duration::from_millis(250);
+/// Keep-alive connections idle longer than this are closed.
+const IDLE_TIMEOUT: Duration = Duration::from_secs(30);
+/// Parked tickets kept findable by `GET /v1/requests/{id}`. Above this,
+/// inserting prunes tickets that already finished (a client that parks
+/// work and never polls it forfeits the result, not server memory).
+const REGISTRY_CAP: usize = 8192;
+
+// --------------------------------------------------------------- parsing
+
+/// One parsed request. Header names are lowercased at parse time; the
+/// body is raw bytes (the JSON layer above decides what they mean).
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Client asked for `Connection: close`.
+    pub close: bool,
+}
+
+impl Request {
+    /// Case-insensitive header lookup (names are stored lowercased).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// What [`parse_request`] made of the buffer so far.
+#[derive(Debug)]
+pub enum Parsed {
+    /// The buffer holds no complete request yet — read more bytes.
+    NeedMore,
+    /// One complete request, occupying the first `usize` bytes of the
+    /// buffer (drain them; what follows is the next pipelined request).
+    Request(Request, usize),
+    /// Unrecoverable framing error: answer with this status + message and
+    /// close the connection (byte sync with the client is lost).
+    Error(u16, String),
+}
+
+fn find(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Incremental HTTP/1.1 request parser. Pure function of the buffer —
+/// callers append reads and re-parse, so requests split across reads are
+/// just a sequence of [`Parsed::NeedMore`]. Enforces `max_header` (→
+/// `431`) and `max_body` (→ `413`) before buffering unbounded input.
+pub fn parse_request(buf: &[u8], max_header: usize, max_body: usize) -> Parsed {
+    let head_end = match find(buf, b"\r\n\r\n") {
+        Some(i) => i,
+        None => {
+            if buf.len() > max_header {
+                return Parsed::Error(431, format!("headers exceed {max_header} bytes"));
+            }
+            return Parsed::NeedMore;
+        }
+    };
+    if head_end > max_header {
+        return Parsed::Error(431, format!("headers exceed {max_header} bytes"));
+    }
+    let head = match std::str::from_utf8(&buf[..head_end]) {
+        Ok(s) => s,
+        Err(_) => return Parsed::Error(400, "request head is not UTF-8".into()),
+    };
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, path, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(p), Some(v), None) => (m, p, v),
+            _ => return Parsed::Error(400, format!("malformed request line `{request_line}`")),
+        };
+    if !version.starts_with("HTTP/1.") {
+        return Parsed::Error(400, format!("unsupported protocol `{version}`"));
+    }
+    if !path.starts_with('/') {
+        return Parsed::Error(400, format!("malformed request target `{path}`"));
+    }
+    let mut headers: Vec<(String, String)> = Vec::new();
+    for line in lines {
+        match line.split_once(':') {
+            Some((k, v)) => headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string())),
+            None => return Parsed::Error(400, format!("malformed header line `{line}`")),
+        }
+    }
+    let header = |name: &str| {
+        headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    };
+    if header("transfer-encoding").is_some() {
+        return Parsed::Error(501, "transfer-encoding is not supported".into());
+    }
+    let body_len = match header("content-length") {
+        None => 0,
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => return Parsed::Error(400, format!("invalid content-length `{v}`")),
+        },
+    };
+    if body_len > max_body {
+        return Parsed::Error(413, format!("body of {body_len} bytes exceeds {max_body}"));
+    }
+    let body_start = head_end + 4;
+    if buf.len() < body_start + body_len {
+        return Parsed::NeedMore;
+    }
+    let close = header("connection").map(|v| v.eq_ignore_ascii_case("close")).unwrap_or(false);
+    let req = Request {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body: buf[body_start..body_start + body_len].to_vec(),
+        close,
+    };
+    Parsed::Request(req, body_start + body_len)
+}
+
+// -------------------------------------------------------------- response
+
+/// One response on its way out. `close` forces `Connection: close` (set
+/// on framing errors, where request byte sync is lost).
+struct Response {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: String,
+    close: bool,
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        502 => "Bad Gateway",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+fn json_response(status: u16, body: Value) -> Response {
+    Response { status, headers: Vec::new(), body: body.to_string(), close: false }
+}
+
+fn error_response(status: u16, msg: &str, close: bool) -> Response {
+    let mut r = json_response(status, json!({"error": msg}));
+    r.close = close;
+    r
+}
+
+/// The wire mapping for a runtime error: status from
+/// [`Error::http_status`], plus `Retry-After` on a shed so a backing-off
+/// client knows when the token bucket refills one token.
+fn error_to_response(e: &Error) -> Response {
+    let status = e.http_status();
+    let mut r = json_response(status, json!({"error": e.to_string(), "retryable": e.retryable()}));
+    if status == 429 {
+        let secs = e.retry_after().as_secs_f64().ceil().max(1.0) as u64;
+        r.headers.push(("retry-after".into(), secs.to_string()));
+    }
+    r
+}
+
+fn write_response(stream: &mut TcpStream, r: &Response) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n",
+        r.status,
+        reason(r.status),
+        r.body.len()
+    );
+    for (k, v) in &r.headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    if r.close {
+        head.push_str("connection: close\r\n");
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(r.body.as_bytes())?;
+    stream.flush()
+}
+
+// ---------------------------------------------------------------- server
+
+struct State {
+    d: Deployment,
+    ingress: Arc<Ingress>,
+    kinds: Vec<WorkflowKind>,
+    opts: HttpSettings,
+    stop: AtomicBool,
+    /// Accepted-but-unfinished sockets; must read 0 after a clean stop.
+    open: AtomicUsize,
+    /// Parked tickets (`X-Nalar-Wait: 0` submits) by request id.
+    registry: Mutex<HashMap<u64, Ticket>>,
+}
+
+/// A running HTTP front door. Stop it with [`HttpServer::stop`]; dropping
+/// without stopping leaves threads serving until the process exits.
+pub struct HttpServer {
+    addr: SocketAddr,
+    state: Arc<State>,
+    joins: Vec<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `listen` (e.g. `127.0.0.1:8080`, or port `0` for an ephemeral
+    /// port — read the real one back from [`HttpServer::addr`]) and start
+    /// the acceptor/worker pool. Pool sizing and parser caps come from
+    /// the deployment's `ingress.http` settings.
+    pub fn start(
+        d: &Deployment,
+        ingress: Arc<Ingress>,
+        kinds: &[WorkflowKind],
+        listen: &str,
+    ) -> Result<HttpServer> {
+        let listener = TcpListener::bind(listen)
+            .map_err(|e| Error::Config(format!("cannot bind `{listen}`: {e}")))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let opts = d.cfg().ingress.http.clone();
+        let state = Arc::new(State {
+            d: d.clone(),
+            ingress,
+            kinds: kinds.to_vec(),
+            opts,
+            stop: AtomicBool::new(false),
+            open: AtomicUsize::new(0),
+            registry: Mutex::new(HashMap::new()),
+        });
+        let (tx, rx) = std::sync::mpsc::channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+        let listener = Arc::new(listener);
+        let mut joins = Vec::new();
+        for w in 0..state.opts.workers {
+            let state = state.clone();
+            let rx = rx.clone();
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("nalar-http-conn-{w}"))
+                    .spawn(move || conn_worker(&state, &rx))
+                    .map_err(|e| Error::Msg(e.to_string()))?,
+            );
+        }
+        for a in 0..state.opts.acceptors {
+            let state = state.clone();
+            let listener = listener.clone();
+            let tx = tx.clone();
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("nalar-http-accept-{a}"))
+                    .spawn(move || acceptor(&state, &listener, &tx))
+                    .map_err(|e| Error::Msg(e.to_string()))?,
+            );
+        }
+        drop(tx); // workers see Disconnected once every acceptor exits
+        Ok(HttpServer { addr, state, joins })
+    }
+
+    /// The bound address (resolves `:0` to the real ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Accepted-but-unfinished connections right now.
+    pub fn open_connections(&self) -> usize {
+        self.state.open.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting, drain the pool, join every thread. Returns the
+    /// number of connections still open after the drain — 0 on a clean
+    /// shutdown, and the serve-smoke CI gate fails on anything else.
+    pub fn stop(mut self) -> usize {
+        self.state.stop.store(true, Ordering::Relaxed);
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+        self.state.open.load(Ordering::Relaxed)
+    }
+}
+
+fn acceptor(state: &State, listener: &TcpListener, tx: &Sender<TcpStream>) {
+    while !state.stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                state.open.fetch_add(1, Ordering::Relaxed);
+                if tx.send(stream).is_err() {
+                    // worker pool gone: count the drop and bail
+                    state.open.fetch_sub(1, Ordering::Relaxed);
+                    return;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+fn conn_worker(state: &State, rx: &Arc<Mutex<Receiver<TcpStream>>>) {
+    loop {
+        let next = rx.lock().unwrap().recv_timeout(Duration::from_millis(50));
+        match next {
+            Ok(stream) => {
+                if state.stop.load(Ordering::Relaxed) {
+                    // accepted but never served: drop it, keep the gauge honest
+                    state.open.fetch_sub(1, Ordering::Relaxed);
+                    continue;
+                }
+                serve_conn(state, stream);
+                state.open.fetch_sub(1, Ordering::Relaxed);
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if state.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+/// One persistent connection, served to completion: incremental reads
+/// feed [`parse_request`]; pipelined requests drain from the leftover
+/// buffer; framing errors answer and close. A client disconnect anywhere
+/// — including mid-body — just ends the loop: nothing was submitted for
+/// a half-received request, so no in-flight slot can leak.
+fn serve_conn(state: &State, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let mut idle = Instant::now();
+    loop {
+        match parse_request(&buf, state.opts.max_header_bytes, state.opts.max_body_bytes) {
+            Parsed::Error(status, msg) => {
+                let _ = write_response(&mut stream, &error_response(status, &msg, true));
+                return;
+            }
+            Parsed::Request(req, consumed) => {
+                buf.drain(..consumed);
+                let mut resp = route(state, &req);
+                resp.close = resp.close || req.close;
+                if write_response(&mut stream, &resp).is_err() || resp.close {
+                    return;
+                }
+                idle = Instant::now();
+            }
+            Parsed::NeedMore => {
+                if state.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                match stream.read(&mut chunk) {
+                    Ok(0) => return, // EOF: clean between requests, abrupt mid-request
+                    Ok(n) => {
+                        buf.extend_from_slice(&chunk[..n]);
+                        idle = Instant::now();
+                    }
+                    Err(e)
+                        if e.kind() == ErrorKind::WouldBlock
+                            || e.kind() == ErrorKind::TimedOut =>
+                    {
+                        if idle.elapsed() > IDLE_TIMEOUT {
+                            return;
+                        }
+                    }
+                    Err(_) => return,
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- routes
+
+fn route(state: &State, req: &Request) -> Response {
+    let path = req.path.as_str();
+    if path == "/metrics" {
+        return match req.method.as_str() {
+            "GET" => metrics_response(state),
+            _ => error_response(405, "use GET", false),
+        };
+    }
+    if path == "/healthz" {
+        return json_response(200, json!({"ok": true}));
+    }
+    if let Some(kind) =
+        path.strip_prefix("/v1/workflows/").and_then(|r| r.strip_suffix("/requests"))
+    {
+        return match req.method.as_str() {
+            "POST" => post_workflow(state, kind, req),
+            _ => error_response(405, "use POST", false),
+        };
+    }
+    if let Some(id) = path.strip_prefix("/v1/requests/") {
+        return match req.method.as_str() {
+            "GET" => poll_request(state, id),
+            "DELETE" => cancel_request(state, id),
+            _ => error_response(405, "use GET or DELETE", false),
+        };
+    }
+    error_response(404, &format!("no route for `{path}`"), false)
+}
+
+fn post_workflow(state: &State, kind: &str, req: &Request) -> Response {
+    let kind = match WorkflowKind::parse(kind) {
+        Some(k) => k,
+        None => return error_response(404, &format!("unknown workflow `{kind}`"), false),
+    };
+    let input = if req.body.is_empty() {
+        Value::Null
+    } else {
+        let text = match std::str::from_utf8(&req.body) {
+            Ok(t) => t,
+            Err(_) => return error_response(400, "body must be UTF-8 JSON", false),
+        };
+        match crate::util::json::parse(text) {
+            Ok(v) => v,
+            Err(e) => return error_response(400, &format!("body: {e}"), false),
+        }
+    };
+    let deadline_ms = match req.header("x-nalar-deadline-ms") {
+        None => DEFAULT_DEADLINE_MS,
+        Some(v) => match v.parse::<u64>() {
+            Ok(ms) if ms > 0 => ms,
+            _ => {
+                return error_response(
+                    400,
+                    "X-Nalar-Deadline-Ms must be a positive integer",
+                    false,
+                )
+            }
+        },
+    };
+    let timeout = Duration::from_millis(deadline_ms);
+    let mut sub = SubmitRequest::workflow(kind).input(input).deadline(timeout);
+    if let Some(t) = req.header("x-nalar-tenant") {
+        sub = sub.tenant(t);
+    }
+    // `X-Nalar-Wait: 0` = park: answer 202 + id now, let the client poll.
+    let park = matches!(req.header("x-nalar-wait"), Some("0") | Some("false"));
+    let ticket = match state.ingress.submit(sub) {
+        Ok(t) => t,
+        Err(e) => return error_to_response(&e),
+    };
+    let id = ticket.request.0;
+    if park {
+        register(state, ticket);
+        return json_response(202, json!({"request": id, "status": "accepted"}));
+    }
+    let out = ticket.wait(timeout + WAIT_GRACE);
+    finished_response(id, out, ticket.latency())
+}
+
+fn finished_response(id: u64, out: Result<Value>, latency: Option<Duration>) -> Response {
+    match out {
+        Ok(v) => {
+            let ms = latency.map(|l| l.as_secs_f64() * 1000.0).unwrap_or(0.0);
+            json_response(200, json!({"request": id, "result": v, "latency_ms": ms}))
+        }
+        Err(e) => error_to_response(&e),
+    }
+}
+
+fn parse_id(id: &str) -> Option<u64> {
+    id.parse::<u64>().ok()
+}
+
+fn poll_request(state: &State, id: &str) -> Response {
+    let id = match parse_id(id) {
+        Some(i) => i,
+        None => return error_response(400, "request id must be an integer", false),
+    };
+    let mut reg = state.registry.lock().unwrap();
+    let ticket = match reg.get(&id) {
+        Some(t) => t,
+        None => return error_response(404, &format!("unknown request id {id}"), false),
+    };
+    match ticket.try_take() {
+        None => json_response(202, json!({"request": id, "status": "running"})),
+        Some(out) => {
+            let latency = ticket.latency();
+            reg.remove(&id);
+            drop(reg);
+            finished_response(id, out, latency)
+        }
+    }
+}
+
+fn cancel_request(state: &State, id: &str) -> Response {
+    let id = match parse_id(id) {
+        Some(i) => i,
+        None => return error_response(400, "request id must be an integer", false),
+    };
+    let mut reg = state.registry.lock().unwrap();
+    let ticket = match reg.get(&id) {
+        Some(t) => t,
+        None => return error_response(404, &format!("unknown request id {id}"), false),
+    };
+    if ticket.cancel() {
+        reg.remove(&id);
+        json_response(200, json!({"request": id, "status": "cancelled"}))
+    } else {
+        // completion/expiry won the race; the result is still pollable
+        error_response(409, "request already finished; poll its result", false)
+    }
+}
+
+fn metrics_response(state: &State) -> Response {
+    let snaps: Vec<Value> =
+        state.kinds.iter().filter_map(|k| state.ingress.metrics(*k)).map(|m| m.to_json()).collect();
+    json_response(
+        200,
+        json!({
+            "time_scale": state.d.cfg().time_scale,
+            "open_connections": state.open.load(Ordering::Relaxed),
+            "parked": state.registry.lock().unwrap().len(),
+            "ingress": snaps
+        }),
+    )
+}
+
+fn register(state: &State, ticket: Ticket) {
+    let mut reg = state.registry.lock().unwrap();
+    if reg.len() >= REGISTRY_CAP {
+        // keep only still-running tickets: finished-but-never-polled
+        // results are forfeited rather than held forever
+        reg.retain(|_, t| t.latency().is_none());
+    }
+    reg.insert(ticket.request.0, ticket);
+}
+
+// ---------------------------------------------------------------- client
+
+/// One parsed response on the client side.
+#[derive(Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl HttpResponse {
+    /// Case-insensitive header lookup (names are stored lowercased).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    pub fn json(&self) -> Result<Value> {
+        Ok(crate::util::json::parse(&self.body)?)
+    }
+}
+
+/// Minimal keep-alive HTTP/1.1 client for `loadgen --remote` and the wire
+/// tests: one persistent connection, sequential request/response, one
+/// transparent reconnect when the server closed a kept-alive socket.
+pub struct HttpClient {
+    addr: String,
+    stream: Option<TcpStream>,
+}
+
+impl HttpClient {
+    pub fn new(addr: impl Into<String>) -> HttpClient {
+        HttpClient { addr: addr.into(), stream: None }
+    }
+
+    fn stream(&mut self) -> std::io::Result<&mut TcpStream> {
+        if self.stream.is_none() {
+            let s = TcpStream::connect(&self.addr)?;
+            s.set_nodelay(true)?;
+            s.set_read_timeout(Some(Duration::from_secs(120)))?;
+            self.stream = Some(s);
+        }
+        Ok(self.stream.as_mut().unwrap())
+    }
+
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &str,
+    ) -> Result<HttpResponse> {
+        let fresh = self.stream.is_none();
+        match self.request_once(method, path, headers, body) {
+            Ok(r) => Ok(r),
+            Err(first) => {
+                // A kept-alive peer may have idled us out between
+                // requests; retry once on a fresh connection. A failure
+                // on an already-fresh connection is real.
+                self.stream = None;
+                if fresh {
+                    return Err(Error::Io(first));
+                }
+                self.request_once(method, path, headers, body).map_err(Error::Io)
+            }
+        }
+    }
+
+    fn request_once(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &str,
+    ) -> std::io::Result<HttpResponse> {
+        let mut head = format!(
+            "{method} {path} HTTP/1.1\r\nhost: nalar\r\ncontent-length: {}\r\n",
+            body.len()
+        );
+        for (k, v) in headers {
+            head.push_str(k);
+            head.push_str(": ");
+            head.push_str(v);
+            head.push_str("\r\n");
+        }
+        head.push_str("\r\n");
+        let stream = self.stream()?;
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(body.as_bytes())?;
+        stream.flush()?;
+        let resp = read_client_response(stream);
+        if resp.is_err() {
+            self.stream = None;
+        }
+        resp
+    }
+}
+
+fn read_client_response(stream: &mut TcpStream) -> std::io::Result<HttpResponse> {
+    let invalid = |m: &str| std::io::Error::new(ErrorKind::InvalidData, m.to_string());
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let head_end = loop {
+        if let Some(i) = find(&buf, b"\r\n\r\n") {
+            break i;
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(std::io::Error::new(ErrorKind::UnexpectedEof, "peer closed mid-response"));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).map_err(|_| invalid("non-UTF-8 head"))?;
+    let mut lines = head.split("\r\n");
+    let status = lines
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| invalid("malformed status line"))?;
+    let mut headers: Vec<(String, String)> = Vec::new();
+    for line in lines {
+        let (k, v) = line.split_once(':').ok_or_else(|| invalid("malformed header"))?;
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    let body_len = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .and_then(|(_, v)| v.parse::<usize>().ok())
+        .unwrap_or(0);
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < body_len {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(std::io::Error::new(ErrorKind::UnexpectedEof, "peer closed mid-body"));
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(body_len);
+    let body = String::from_utf8(body).map_err(|_| invalid("non-UTF-8 body"))?;
+    Ok(HttpResponse { status, headers, body })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const HDR: usize = 16 << 10;
+    const BODY: usize = 1 << 20;
+
+    fn parse(buf: &[u8]) -> Parsed {
+        parse_request(buf, HDR, BODY)
+    }
+
+    #[test]
+    fn parses_a_complete_post() {
+        let raw = b"POST /v1/workflows/router/requests HTTP/1.1\r\n\
+                    X-Nalar-Tenant: meek\r\ncontent-length: 2\r\n\r\n{}";
+        match parse(raw) {
+            Parsed::Request(req, consumed) => {
+                assert_eq!(consumed, raw.len());
+                assert_eq!(req.method, "POST");
+                assert_eq!(req.path, "/v1/workflows/router/requests");
+                assert_eq!(req.header("x-nalar-tenant"), Some("meek"));
+                assert_eq!(req.header("X-NALAR-TENANT"), Some("meek"));
+                assert_eq!(req.body, b"{}");
+                assert!(!req.close);
+            }
+            p => panic!("expected a request, got {p:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_request_lines_are_400() {
+        for raw in [
+            &b"GARBAGE\r\n\r\n"[..],
+            &b"GET /x\r\n\r\n"[..],
+            &b"GET /x HTTP/1.1 extra\r\n\r\n"[..],
+            &b"GET x HTTP/1.1\r\n\r\n"[..],
+            &b"GET /x SMTP/1.0\r\n\r\n"[..],
+        ] {
+            match parse(raw) {
+                Parsed::Error(400, _) => {}
+                p => panic!("{:?} must be a 400, got {p:?}", String::from_utf8_lossy(raw)),
+            }
+        }
+    }
+
+    #[test]
+    fn split_across_reads_is_need_more_then_complete() {
+        let raw = b"GET /metrics HTTP/1.1\r\nhost: x\r\n\r\n";
+        // every prefix short of the full request just asks for more bytes
+        for cut in 0..raw.len() {
+            assert!(
+                matches!(parse(&raw[..cut]), Parsed::NeedMore),
+                "prefix of {cut} bytes must be NeedMore"
+            );
+        }
+        assert!(matches!(parse(raw), Parsed::Request(..)));
+        // a body split across reads behaves the same way
+        let post = b"POST /x HTTP/1.1\r\ncontent-length: 5\r\n\r\nhel";
+        assert!(matches!(parse(post), Parsed::NeedMore));
+        let full = b"POST /x HTTP/1.1\r\ncontent-length: 5\r\n\r\nhello";
+        match parse(full) {
+            Parsed::Request(req, n) => {
+                assert_eq!(req.body, b"hello");
+                assert_eq!(n, full.len());
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_headers_are_431_even_unterminated() {
+        // terminated but over the cap
+        let mut raw = b"GET /x HTTP/1.1\r\nbig: ".to_vec();
+        raw.extend_from_slice(&vec![b'a'; HDR + 10]);
+        raw.extend_from_slice(b"\r\n\r\n");
+        assert!(matches!(parse(&raw), Parsed::Error(431, _)));
+        // unterminated: the parser must not buffer forever waiting for
+        // a terminator that never comes
+        let unterminated = vec![b'a'; HDR + 10];
+        assert!(matches!(parse(&unterminated), Parsed::Error(431, _)));
+    }
+
+    #[test]
+    fn oversized_and_malformed_bodies_are_rejected() {
+        let big = format!("POST /x HTTP/1.1\r\ncontent-length: {}\r\n\r\n", BODY + 1);
+        assert!(matches!(parse(big.as_bytes()), Parsed::Error(413, _)));
+        let bad = b"POST /x HTTP/1.1\r\ncontent-length: nope\r\n\r\n";
+        assert!(matches!(parse(bad), Parsed::Error(400, _)));
+        let chunked = b"POST /x HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n";
+        assert!(matches!(parse(chunked), Parsed::Error(501, _)));
+    }
+
+    #[test]
+    fn pipelined_requests_parse_in_sequence() {
+        let raw = b"GET /healthz HTTP/1.1\r\n\r\nPOST /x HTTP/1.1\r\ncontent-length: 2\r\n\r\nhi";
+        let (first, consumed) = match parse(raw) {
+            Parsed::Request(r, n) => (r, n),
+            p => panic!("{p:?}"),
+        };
+        assert_eq!(first.path, "/healthz");
+        match parse(&raw[consumed..]) {
+            Parsed::Request(second, n) => {
+                assert_eq!(second.path, "/x");
+                assert_eq!(second.body, b"hi");
+                assert_eq!(consumed + n, raw.len());
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn connection_close_is_honored() {
+        let raw = b"GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n";
+        match parse(raw) {
+            Parsed::Request(req, _) => assert!(req.close),
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_header_lines_are_400() {
+        let raw = b"GET /x HTTP/1.1\r\nthis line has no colon\r\n\r\n";
+        assert!(matches!(parse(raw), Parsed::Error(400, _)));
+    }
+}

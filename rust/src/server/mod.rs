@@ -8,6 +8,8 @@
 //! Workflow drivers get a [`CallCtx`] per request and run on caller
 //! threads; `kill`/`provision` lifecycle hooks route back here.
 
+pub mod http;
+
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::{Arc, Mutex};

@@ -16,7 +16,9 @@ use std::time::{Duration, Instant};
 use nalar::config::TenantSettings;
 use nalar::error::Error;
 use nalar::ids::TenantId;
-use nalar::ingress::{AdmissionPolicy, Ingress, SchedulePolicy, SchedulerOpts, SubmitOpts, Ticket};
+use nalar::ingress::{
+    AdmissionPolicy, Ingress, SchedulePolicy, SchedulerOpts, SubmitRequest, Ticket,
+};
 use nalar::server::Deployment;
 use nalar::testkit::{Clock, Gate, ScriptedEngine};
 use nalar::workflow::WorkflowKind;
@@ -118,11 +120,10 @@ fn run_noisy_neighbor_trace(tenancy: bool) -> TraceOutcome {
     let eng = ScriptedEngine::new();
     let gate = Gate::new();
     let blocker = ing
-        .submit_driver(
-            WorkflowKind::Router,
-            None,
-            eng.gated_driver("blocker", 0, gate.clone()),
-            Duration::from_secs(100_000),
+        .submit(
+            SubmitRequest::workflow(WorkflowKind::Router)
+                .driver(eng.gated_driver("blocker", 0, gate.clone()))
+                .deadline(Duration::from_secs(100_000)),
         )
         .unwrap();
     settle("blocker holds the worker", || ing.in_flight(WorkflowKind::Router) == 1);
@@ -131,21 +132,21 @@ fn run_noisy_neighbor_trace(tenancy: bool) -> TraceOutcome {
     for block in 0..4 {
         for i in 0..10 {
             let t = ing
-                .submit_driver_with(
-                    WorkflowKind::Router,
-                    eng.driver(&format!("hog-{block}-{i}"), 1),
-                    deadline,
-                    SubmitOpts::tenant("hog"),
+                .submit(
+                    SubmitRequest::workflow(WorkflowKind::Router)
+                        .driver(eng.driver(&format!("hog-{block}-{i}"), 1))
+                        .deadline(deadline)
+                        .tenant("hog"),
                 )
                 .unwrap();
             tickets.push((t, HOG));
         }
         let t = ing
-            .submit_driver_with(
-                WorkflowKind::Router,
-                eng.driver(&format!("meek-{block}"), 1),
-                deadline,
-                SubmitOpts::tenant("meek"),
+            .submit(
+                SubmitRequest::workflow(WorkflowKind::Router)
+                    .driver(eng.driver(&format!("meek-{block}"), 1))
+                    .deadline(deadline)
+                    .tenant("meek"),
             )
             .unwrap();
         tickets.push((t, MEEK));
@@ -252,11 +253,10 @@ fn weighted_drr_follows_the_three_to_one_quanta() {
     // its pop empties that sub-queue, so `a` forfeits the rest of its
     // first granted quantum (the DRR empty-queue rule).
     let blocker = ing
-        .submit_driver(
-            WorkflowKind::Router,
-            None,
-            eng.gated_driver("blocker", 0, gate.clone()),
-            long,
+        .submit(
+            SubmitRequest::workflow(WorkflowKind::Router)
+                .driver(eng.gated_driver("blocker", 0, gate.clone()))
+                .deadline(long),
         )
         .unwrap();
     settle("blocker holds the worker", || ing.in_flight(WorkflowKind::Router) == 1);
@@ -264,11 +264,11 @@ fn weighted_drr_follows_the_three_to_one_quanta() {
     for i in 0..8 {
         for name in ["a", "b"] {
             let t = ing
-                .submit_driver_with(
-                    WorkflowKind::Router,
-                    eng.driver(&format!("{name}{i}"), 1),
-                    long,
-                    SubmitOpts::tenant(name),
+                .submit(
+                    SubmitRequest::workflow(WorkflowKind::Router)
+                        .driver(eng.driver(&format!("{name}{i}"), 1))
+                        .deadline(long)
+                        .tenant(name),
                 )
                 .unwrap();
             tickets.push(t);
@@ -319,36 +319,35 @@ fn cancel_debits_the_cancelling_tenants_sub_queue_only() {
     let gate = Gate::new();
     let long = Duration::from_secs(1000);
     let blocker = ing
-        .submit_driver(
-            WorkflowKind::Router,
-            None,
-            eng.gated_driver("blocker", 0, gate.clone()),
-            long,
+        .submit(
+            SubmitRequest::workflow(WorkflowKind::Router)
+                .driver(eng.gated_driver("blocker", 0, gate.clone()))
+                .deadline(long),
         )
         .unwrap();
     settle("blocker occupies the slot", || ing.in_flight(WorkflowKind::Router) == 1);
     let hog_keep = ing
-        .submit_driver_with(
-            WorkflowKind::Router,
-            eng.driver("hog-keep", 1),
-            long,
-            SubmitOpts::tenant("hog"),
+        .submit(
+            SubmitRequest::workflow(WorkflowKind::Router)
+                .driver(eng.driver("hog-keep", 1))
+                .deadline(long)
+                .tenant("hog"),
         )
         .unwrap();
     let hog_doomed = ing
-        .submit_driver_with(
-            WorkflowKind::Router,
-            eng.driver("hog-doomed", 1),
-            long,
-            SubmitOpts::tenant("hog"),
+        .submit(
+            SubmitRequest::workflow(WorkflowKind::Router)
+                .driver(eng.driver("hog-doomed", 1))
+                .deadline(long)
+                .tenant("hog"),
         )
         .unwrap();
     let meek = ing
-        .submit_driver_with(
-            WorkflowKind::Router,
-            eng.driver("meek-0", 1),
-            long,
-            SubmitOpts::tenant("meek"),
+        .submit(
+            SubmitRequest::workflow(WorkflowKind::Router)
+                .driver(eng.driver("meek-0", 1))
+                .deadline(long)
+                .tenant("meek"),
         )
         .unwrap();
     assert_eq!(ing.depth(WorkflowKind::Router), 3);

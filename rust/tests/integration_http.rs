@@ -1,0 +1,339 @@
+//! Socket-level integration tests for the HTTP serving plane: a real
+//! `HttpServer` bound to an ephemeral port, driven through `HttpClient`
+//! round trips and raw `TcpStream` abuse. These prove the wire contract
+//! end to end — admission headers, park/poll/cancel lifecycle, the
+//! status-code mapping (`429` + `Retry-After`, `408`, `409`, `404`) —
+//! and the operational invariants: malformed or abandoned connections
+//! never panic a worker, never leak an in-flight slot, and `stop()`
+//! reports zero open connections once every client is gone.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use nalar::ingress::{AdmissionPolicy, Ingress, SchedulerOpts};
+use nalar::server::http::{HttpClient, HttpResponse, HttpServer};
+use nalar::server::Deployment;
+use nalar::workflow::WorkflowKind;
+
+/// Router deployment + ingress + HTTP server on an ephemeral port.
+/// Capacity policies stay out (a reallocation kill would fail futures
+/// retryably, orthogonal to the wire contract).
+fn serve(
+    time_scale: f64,
+    admission: AdmissionPolicy,
+    workers: usize,
+    max_in_flight: usize,
+) -> (Deployment, Arc<Ingress>, HttpServer) {
+    let mut cfg = WorkflowKind::Router.config();
+    cfg.time_scale = time_scale;
+    cfg.control.global_period_ms = 10;
+    cfg.policies = vec!["load_balance".into()];
+    let d = Deployment::launch(cfg).unwrap();
+    let ing = Arc::new(Ingress::start_with_opts(
+        &d,
+        &[WorkflowKind::Router],
+        admission,
+        SchedulerOpts::new(workers, max_in_flight),
+    ));
+    let srv = HttpServer::start(&d, ing.clone(), &[WorkflowKind::Router], "127.0.0.1:0").unwrap();
+    (d, ing, srv)
+}
+
+/// Block (wall clock, bounded) until `cond` holds.
+fn settle(what: &str, cond: impl Fn() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < Duration::from_secs(10), "timed out settling: {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Poll `GET /v1/requests/{id}` until it stops answering `202 running`.
+fn poll_until_terminal(c: &mut HttpClient, id: u64) -> HttpResponse {
+    let t0 = Instant::now();
+    loop {
+        let r = c.request("GET", &format!("/v1/requests/{id}"), &[], "").unwrap();
+        if r.status != 202 {
+            return r;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(30), "request {id} never became terminal");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Park a submit (`X-Nalar-Wait: 0`) and return the assigned request id.
+fn park(c: &mut HttpClient, deadline_ms: &str) -> u64 {
+    let r = c
+        .request(
+            "POST",
+            "/v1/workflows/router/requests",
+            &[("x-nalar-wait", "0"), ("x-nalar-deadline-ms", deadline_ms)],
+            r#"{"prompt": "park me", "class": "chat"}"#,
+        )
+        .unwrap();
+    assert_eq!(r.status, 202, "park submit must answer 202: {}", r.body);
+    let v = r.json().unwrap();
+    assert_eq!(v.get("status").as_str(), Some("accepted"));
+    v.get("request").as_u64().expect("202 carries the request id")
+}
+
+/// Tear down in the documented order and assert the clean-shutdown gate.
+fn teardown(d: Deployment, ing: Arc<Ingress>, srv: HttpServer) {
+    settle("connections close", || srv.open_connections() == 0);
+    assert_eq!(srv.stop(), 0, "no connection may survive stop()");
+    ing.stop();
+    d.shutdown();
+}
+
+#[test]
+fn sync_post_round_trips_the_result_and_metrics_report_it() {
+    let (d, ing, srv) = serve(0.002, AdmissionPolicy::Unbounded, 2, 64);
+    let mut c = HttpClient::new(srv.addr().to_string());
+
+    let health = c.request("GET", "/healthz", &[], "").unwrap();
+    assert_eq!(health.status, 200);
+
+    let r = c
+        .request(
+            "POST",
+            "/v1/workflows/router/requests",
+            &[("x-nalar-deadline-ms", "60000")],
+            r#"{"prompt": "classify me", "class": "chat"}"#,
+        )
+        .unwrap();
+    assert_eq!(r.status, 200, "sync submit waits for the result: {}", r.body);
+    let v = r.json().unwrap();
+    assert!(v.get("request").as_u64().is_some(), "response carries the request id");
+    assert!(!v.get("result").is_null(), "response carries the workflow output");
+    assert!(v.get("latency_ms").as_f64().is_some());
+
+    let m = c.request("GET", "/metrics", &[], "").unwrap();
+    assert_eq!(m.status, 200);
+    let mv = m.json().unwrap();
+    assert!(mv.get("time_scale").as_f64().is_some());
+    assert!(mv.get("open_connections").as_u64().is_some());
+    let ingress = mv.get("ingress").as_arr().expect("per-workflow snapshots").clone();
+    let router = ingress
+        .iter()
+        .find(|e| e.get("workflow").as_str() == Some("router"))
+        .expect("router snapshot");
+    assert_eq!(router.get("completed").as_u64(), Some(1));
+    assert!(router.get("tenants").as_arr().is_some_and(|t| !t.is_empty()));
+
+    teardown(d, ing, srv);
+}
+
+#[test]
+fn park_poll_and_delete_follow_the_ticket_lifecycle() {
+    // One worker, one in-flight slot, slow service: submits after the
+    // first queue deterministically, so a DELETE can land pre-start.
+    let (d, ing, srv) = serve(0.1, AdmissionPolicy::Unbounded, 1, 1);
+    let mut c = HttpClient::new(srv.addr().to_string());
+
+    let r1 = park(&mut c, "120000");
+    let r2 = park(&mut c, "120000");
+    let r3 = park(&mut c, "120000");
+
+    // r3 is still queued behind r1 (in flight) and r2: cancel delivers.
+    let del = c.request("DELETE", &format!("/v1/requests/{r3}"), &[], "").unwrap();
+    assert_eq!(del.status, 200, "queued request must be cancellable: {}", del.body);
+    let gone = c.request("GET", &format!("/v1/requests/{r3}"), &[], "").unwrap();
+    assert_eq!(gone.status, 404, "a delivered DELETE consumes the parked ticket");
+
+    // r1 completes; its terminal GET consumes the registry entry.
+    let done = poll_until_terminal(&mut c, r1);
+    assert_eq!(done.status, 200, "{}", done.body);
+    assert_eq!(done.json().unwrap().get("request").as_u64(), Some(r1));
+    let again = c.request("GET", &format!("/v1/requests/{r1}"), &[], "").unwrap();
+    assert_eq!(again.status, 404, "a delivered result consumes the parked ticket");
+    assert_eq!(poll_until_terminal(&mut c, r2).status, 200);
+
+    // Cancel-after-completion: park r4, wait (via /metrics) for it to
+    // finish unpolled, then DELETE — 409, and the result stays claimable.
+    let r4 = park(&mut c, "120000");
+    settle("r4 completes server-side", || {
+        ing.metrics(WorkflowKind::Router).unwrap().completed >= 3
+    });
+    let late = c.request("DELETE", &format!("/v1/requests/{r4}"), &[], "").unwrap();
+    assert_eq!(late.status, 409, "cancel after completion reports the lost race");
+    let res = c.request("GET", &format!("/v1/requests/{r4}"), &[], "").unwrap();
+    assert_eq!(res.status, 200, "a failed cancel must not eat the result");
+
+    // Unknown ids: both verbs answer 404.
+    assert_eq!(c.request("GET", "/v1/requests/999999999", &[], "").unwrap().status, 404);
+    assert_eq!(c.request("DELETE", "/v1/requests/999999999", &[], "").unwrap().status, 404);
+
+    // Exactly one terminal outcome each: 3 completed + 1 cancelled.
+    settle("counters agree", || {
+        let m = ing.metrics(WorkflowKind::Router).unwrap();
+        m.completed == 3 && m.cancelled == 1 && m.failed == 0 && m.in_flight == 0 && m.depth == 0
+    });
+    teardown(d, ing, srv);
+}
+
+#[test]
+fn wire_statuses_map_sheds_deadlines_and_bad_requests() {
+    // Token bucket: one burst token, then sheds — the 429 contract.
+    let (d, ing, srv) =
+        serve(0.1, AdmissionPolicy::TokenBucket { rate: 2.0, burst: 1.0 }, 1, 8);
+    let mut c = HttpClient::new(srv.addr().to_string());
+    let _admitted = park(&mut c, "120000");
+    let shed = c
+        .request(
+            "POST",
+            "/v1/workflows/router/requests",
+            &[("x-nalar-wait", "0"), ("x-nalar-deadline-ms", "120000")],
+            r#"{"prompt": "shed me", "class": "chat"}"#,
+        )
+        .unwrap();
+    assert_eq!(shed.status, 429, "an empty token bucket sheds: {}", shed.body);
+    let retry: u64 = shed
+        .header("retry-after")
+        .expect("429 must carry Retry-After")
+        .parse()
+        .expect("Retry-After is whole seconds");
+    assert!(retry >= 1, "ceil(1/rate) at rate 2.0 is 1s");
+    let sv = shed.json().unwrap();
+    assert_eq!(sv.get("retryable").as_bool(), Some(true), "sheds are retryable");
+
+    // 408: a 1ms deadline expires before the slow service finishes; the
+    // synchronous POST maps the scheduler's Deadline error onto the wire.
+    let expired = c
+        .request(
+            "POST",
+            "/v1/workflows/router/requests",
+            &[("x-nalar-deadline-ms", "1")],
+            r#"{"prompt": "too slow", "class": "chat"}"#,
+        )
+        .unwrap();
+    assert_eq!(expired.status, 408, "{}", expired.body);
+
+    // Client errors: bad deadline header, non-JSON body, unknown
+    // workflow kind, method not allowed.
+    let bad_hdr = c
+        .request(
+            "POST",
+            "/v1/workflows/router/requests",
+            &[("x-nalar-deadline-ms", "zero")],
+            "{}",
+        )
+        .unwrap();
+    assert_eq!(bad_hdr.status, 400);
+    let bad_body = c
+        .request("POST", "/v1/workflows/router/requests", &[], "not json")
+        .unwrap();
+    assert_eq!(bad_body.status, 400);
+    let unknown = c.request("POST", "/v1/workflows/nope/requests", &[], "{}").unwrap();
+    assert_eq!(unknown.status, 404);
+    let bad_method = c.request("POST", "/metrics", &[], "{}").unwrap();
+    assert_eq!(bad_method.status, 405);
+
+    // The shed/expiry traffic drains fully before teardown.
+    settle("tables drain", || {
+        let m = ing.metrics(WorkflowKind::Router).unwrap();
+        m.in_flight == 0 && m.depth == 0
+    });
+    teardown(d, ing, srv);
+}
+
+// --------------------------------------------------------- raw sockets
+
+fn find(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    hay.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Read one HTTP response off a raw socket: status code + body.
+fn read_response(s: &mut TcpStream) -> (u16, String) {
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 1024];
+    let head_end = loop {
+        if let Some(i) = find(&buf, b"\r\n\r\n") {
+            break i;
+        }
+        let n = s.read(&mut tmp).unwrap();
+        assert!(n > 0, "server closed before a full response head");
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = String::from_utf8(buf[..head_end].to_vec()).unwrap();
+    let status: u16 = head.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let clen: usize = head
+        .lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                v.trim().parse().ok()
+            } else {
+                None
+            }
+        })
+        .unwrap_or(0);
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < clen {
+        let n = s.read(&mut tmp).unwrap();
+        assert!(n > 0, "server closed mid-body");
+        body.extend_from_slice(&tmp[..n]);
+    }
+    (status, String::from_utf8_lossy(&body[..clen]).to_string())
+}
+
+#[test]
+fn raw_socket_abuse_never_panics_or_leaks() {
+    let (d, ing, srv) = serve(0.002, AdmissionPolicy::Unbounded, 2, 64);
+    let addr = srv.addr();
+
+    // Garbage request line: one 400, then the server closes the socket.
+    let mut garbage = TcpStream::connect(addr).unwrap();
+    garbage.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    garbage.write_all(b"NOT-AN-HTTP-LINE\r\n\r\n").unwrap();
+    assert_eq!(read_response(&mut garbage).0, 400);
+    drop(garbage);
+
+    // Oversized headers: the server answers 431 without waiting for a
+    // terminator and closes. It may close with some of our flood still
+    // unread (an RST that can discard the response in flight), so accept
+    // a reset too — the parser unit tests pin the 431 itself; this path
+    // proves no panic and no leak.
+    let mut oversized = TcpStream::connect(addr).unwrap();
+    oversized.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let _ = oversized.write_all(b"GET /healthz HTTP/1.1\r\nx-big: ");
+    let _ = oversized.write_all(&vec![b'a'; 20 << 10]);
+    let mut flood_reply = Vec::new();
+    let _ = oversized.read_to_end(&mut flood_reply);
+    if !flood_reply.is_empty() {
+        assert!(
+            flood_reply.starts_with(b"HTTP/1.1 431"),
+            "oversized headers answer 431, got: {}",
+            String::from_utf8_lossy(&flood_reply[..flood_reply.len().min(64)])
+        );
+    }
+    drop(oversized);
+
+    // Abrupt disconnect mid-body: nothing was submitted, nothing leaks.
+    let mut abandoned = TcpStream::connect(addr).unwrap();
+    abandoned
+        .write_all(
+            b"POST /v1/workflows/router/requests HTTP/1.1\r\ncontent-length: 100\r\n\r\n{\"pro",
+        )
+        .unwrap();
+    drop(abandoned);
+
+    // Pipelined requests on one socket: both answered, in order.
+    let mut pipelined = TcpStream::connect(addr).unwrap();
+    pipelined.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    pipelined
+        .write_all(b"GET /healthz HTTP/1.1\r\n\r\nGET /metrics HTTP/1.1\r\n\r\n")
+        .unwrap();
+    let (s1, _) = read_response(&mut pipelined);
+    let (s2, body2) = read_response(&mut pipelined);
+    assert_eq!((s1, s2), (200, 200), "pipelined requests are served in sequence");
+    assert!(body2.contains("ingress"), "second response is the metrics document");
+    drop(pipelined);
+
+    // The abuse left no half-admitted work and no open connection.
+    let m = ing.metrics(WorkflowKind::Router).unwrap();
+    assert_eq!((m.in_flight, m.depth), (0, 0), "no in-flight slot may leak");
+    assert_eq!(m.accepted, 0, "none of the abuse reached admission");
+    teardown(d, ing, srv);
+}

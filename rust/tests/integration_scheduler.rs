@@ -15,7 +15,9 @@ use std::time::{Duration, Instant};
 
 use nalar::config::DeploymentConfig;
 use nalar::error::Error;
-use nalar::ingress::{AdmissionPolicy, Ingress, SchedulePolicy, SchedulerOpts, Ticket};
+use nalar::ingress::{
+    AdmissionPolicy, Ingress, SchedulePolicy, SchedulerOpts, SubmitRequest, Ticket,
+};
 use nalar::json;
 use nalar::server::Deployment;
 use nalar::testkit::{Clock, Gate, ScriptedEngine};
@@ -46,10 +48,9 @@ fn four_threads_complete_512_concurrent_requests() {
         .map(|i| {
             let class = if i % 4 == 0 { "coder" } else { "chat" };
             ing.submit(
-                WorkflowKind::Router,
-                None,
-                json!({"prompt": "multiplex me", "class": class}),
-                timeout,
+                SubmitRequest::workflow(WorkflowKind::Router)
+                    .input(json!({"prompt": "multiplex me", "class": class}))
+                    .deadline(timeout),
             )
             .unwrap()
         })
@@ -136,10 +137,9 @@ fn stalled_agent_type_parks_without_wedging_other_workflows() {
     let stalled: Vec<Ticket> = (0..6)
         .map(|_| {
             ing.submit(
-                WorkflowKind::Router,
-                None,
-                json!({"prompt": "hang", "class": "chat"}),
-                long,
+                SubmitRequest::workflow(WorkflowKind::Router)
+                    .input(json!({"prompt": "hang", "class": "chat"}))
+                    .deadline(long),
             )
             .unwrap()
         })
@@ -156,7 +156,12 @@ fn stalled_agent_type_parks_without_wedging_other_workflows() {
     // An unrelated workflow must make progress on the same two threads.
     let swe: Vec<Ticket> = (0..6)
         .map(|_| {
-            ing.submit(WorkflowKind::Swe, None, json!({"task": "isolate me"}), long).unwrap()
+            ing.submit(
+                SubmitRequest::workflow(WorkflowKind::Swe)
+                    .input(json!({"task": "isolate me"}))
+                    .deadline(long),
+            )
+            .unwrap()
         })
         .collect();
     for t in &swe {
@@ -241,11 +246,10 @@ fn cancel_vs_complete_yields_exactly_one_terminal_outcome() {
     let (mut ok, mut cancelled) = (0u64, 0u64);
     for i in 0..rounds {
         let t = ing
-            .submit_driver(
-                WorkflowKind::Router,
-                None,
-                eng.driver(&format!("r{i}"), 1),
-                Duration::from_secs(1000),
+            .submit(
+                SubmitRequest::workflow(WorkflowKind::Router)
+                    .driver(eng.driver(&format!("r{i}"), 1))
+                    .deadline(Duration::from_secs(1000)),
             )
             .unwrap();
         assert!(eng.wait_created(i + 1, Duration::from_secs(5)), "round {i} never started");
@@ -289,11 +293,10 @@ fn cancel_vs_deadline_expiry_yields_exactly_one_terminal_outcome() {
     let (mut expired, mut cancelled) = (0u64, 0u64);
     for i in 0..rounds {
         let t = ing
-            .submit_driver(
-                WorkflowKind::Router,
-                None,
-                eng.driver(&format!("r{i}"), 1),
-                Duration::from_secs(10), // virtual seconds
+            .submit(
+                SubmitRequest::workflow(WorkflowKind::Router)
+                    .driver(eng.driver(&format!("r{i}"), 1))
+                    .deadline(Duration::from_secs(10)), // virtual seconds
             )
             .unwrap();
         assert!(eng.wait_created(i + 1, Duration::from_secs(5)), "round {i} never parked");
@@ -331,7 +334,11 @@ fn double_cancel_and_cancel_after_completion_change_nothing() {
     let long = Duration::from_secs(1000);
 
     let t1 = ing
-        .submit_driver(WorkflowKind::Router, None, eng.driver("victim", 1), long)
+        .submit(
+            SubmitRequest::workflow(WorkflowKind::Router)
+                .driver(eng.driver("victim", 1))
+                .deadline(long),
+        )
         .unwrap();
     assert!(eng.wait_created(1, Duration::from_secs(5)));
     assert!(t1.cancel(), "first cancel is delivered");
@@ -339,7 +346,11 @@ fn double_cancel_and_cancel_after_completion_change_nothing() {
     assert!(matches!(t1.wait(Duration::from_secs(5)), Err(Error::Cancelled)));
 
     let t2 = ing
-        .submit_driver(WorkflowKind::Router, None, eng.driver("survivor", 1), long)
+        .submit(
+            SubmitRequest::workflow(WorkflowKind::Router)
+                .driver(eng.driver("survivor", 1))
+                .deadline(long),
+        )
         .unwrap();
     assert!(eng.wait_created(2, Duration::from_secs(5)));
     eng.cell(1).resolve(json!("done"), 0);
@@ -372,16 +383,19 @@ fn cancel_while_queued_never_starts_the_driver() {
     // slot, so the victim cannot start.
     let gate = Gate::new();
     let blocker = ing
-        .submit_driver(
-            WorkflowKind::Router,
-            None,
-            eng.gated_driver("blocker", 0, gate.clone()),
-            long,
+        .submit(
+            SubmitRequest::workflow(WorkflowKind::Router)
+                .driver(eng.gated_driver("blocker", 0, gate.clone()))
+                .deadline(long),
         )
         .unwrap();
     settle("blocker occupies the slot", || ing.in_flight(WorkflowKind::Router) == 1);
     let victim = ing
-        .submit_driver(WorkflowKind::Router, None, eng.driver("victim", 1), long)
+        .submit(
+            SubmitRequest::workflow(WorkflowKind::Router)
+                .driver(eng.driver("victim", 1))
+                .deadline(long),
+        )
         .unwrap();
     assert_eq!(ing.depth(WorkflowKind::Router), 1, "victim must be queued");
     assert!(victim.cancel());
@@ -412,24 +426,35 @@ fn deadline_slack_drains_ready_work_most_urgent_first() {
     let eng = ScriptedEngine::new();
     // Reverse-urgency submit order, so FIFO would be wrong.
     let far = ing
-        .submit_driver(WorkflowKind::Router, None, eng.driver("far", 1), Duration::from_secs(1000))
+        .submit(
+            SubmitRequest::workflow(WorkflowKind::Router)
+                .driver(eng.driver("far", 1))
+                .deadline(Duration::from_secs(1000)),
+        )
         .unwrap();
     let mid = ing
-        .submit_driver(WorkflowKind::Router, None, eng.driver("mid", 1), Duration::from_secs(500))
+        .submit(
+            SubmitRequest::workflow(WorkflowKind::Router)
+                .driver(eng.driver("mid", 1))
+                .deadline(Duration::from_secs(500)),
+        )
         .unwrap();
     let near = ing
-        .submit_driver(WorkflowKind::Router, None, eng.driver("near", 1), Duration::from_secs(100))
+        .submit(
+            SubmitRequest::workflow(WorkflowKind::Router)
+                .driver(eng.driver("near", 1))
+                .deadline(Duration::from_secs(100)),
+        )
         .unwrap();
     assert!(eng.wait_created(3, Duration::from_secs(5)));
     settle("all three parked", || ing.in_flight(WorkflowKind::Router) == 3);
     // Hold the worker, then wake all three in reverse-urgency order.
     let gate = Gate::new();
     let blocker = ing
-        .submit_driver(
-            WorkflowKind::Router,
-            None,
-            eng.gated_driver("blocker", 0, gate.clone()),
-            Duration::from_secs(1000),
+        .submit(
+            SubmitRequest::workflow(WorkflowKind::Router)
+                .driver(eng.gated_driver("blocker", 0, gate.clone()))
+                .deadline(Duration::from_secs(1000)),
         )
         .unwrap();
     settle("worker committed to the blocker", || ing.in_flight(WorkflowKind::Router) == 4);
@@ -491,11 +516,10 @@ fn run_mixed_deadline_trace(schedule: SchedulePolicy) -> usize {
     let eng = ScriptedEngine::new();
     let gate = Gate::new();
     let blocker = ing
-        .submit_driver(
-            WorkflowKind::Router,
-            None,
-            eng.gated_driver("blocker", 0, gate.clone()),
-            Duration::from_secs(100_000),
+        .submit(
+            SubmitRequest::workflow(WorkflowKind::Router)
+                .driver(eng.gated_driver("blocker", 0, gate.clone()))
+                .deadline(Duration::from_secs(100_000)),
         )
         .unwrap();
     settle("blocker holds the worker", || ing.in_flight(WorkflowKind::Router) == 1);
@@ -506,8 +530,12 @@ fn run_mixed_deadline_trace(schedule: SchedulePolicy) -> usize {
             } else {
                 Duration::from_secs(1000) // generous
             };
-            ing.submit_driver(WorkflowKind::Router, None, eng.driver(&format!("r{i}"), 1), timeout)
-                .unwrap()
+            ing.submit(
+                SubmitRequest::workflow(WorkflowKind::Router)
+                    .driver(eng.driver(&format!("r{i}"), 1))
+                    .deadline(timeout),
+            )
+            .unwrap()
         })
         .collect();
     assert_eq!(ing.depth(WorkflowKind::Router), 40, "whole trace queued before service starts");

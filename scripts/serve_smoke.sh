@@ -1,0 +1,84 @@
+#!/usr/bin/env bash
+# serve-smoke: end-to-end gate for the HTTP serving plane (DESIGN.md §9).
+#
+# Boots `nalar serve --listen 127.0.0.1:0` as a real process, drives it
+# with `nalar loadgen --remote` (async-park submits over the wire, DELETE
+# cancels via --cancel-rate), validates the resulting BENCH_rps_sweep.json
+# against the nalar-bench/v1 schema (transport must be "http"), then stops
+# the server via its stop file and asserts the process exits 0 — which the
+# server only does when zero accepted connections leaked at shutdown.
+#
+# Zero-dependency by design: bash + coreutils + the nalar binary.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+BIN=${NALAR_BIN:-target/release/nalar}
+OUT=${SERVE_SMOKE_OUT:-serve-smoke}
+TMP=$(mktemp -d)
+SERVE_PID=
+
+cleanup() {
+    if [[ -n "$SERVE_PID" ]] && kill -0 "$SERVE_PID" 2>/dev/null; then
+        kill "$SERVE_PID" 2>/dev/null || true
+        wait "$SERVE_PID" 2>/dev/null || true
+    fi
+    rm -rf "$TMP"
+}
+trap cleanup EXIT
+
+fail() {
+    echo "serve-smoke: FAIL — $*" >&2
+    echo "--- serve log ---" >&2
+    cat "$TMP/serve.log" >&2 || true
+    exit 1
+}
+
+if [[ ! -x "$BIN" ]]; then
+    echo "serve-smoke: building $BIN"
+    cargo build --release --bin nalar
+fi
+mkdir -p "$OUT"
+
+# 1. Serve on an ephemeral port; the bound port lands in the port file.
+#    time_scale matches the loadgen --quick profile (the client reads the
+#    authoritative value back from GET /metrics before pacing).
+echo "serve-smoke: starting $BIN serve --listen 127.0.0.1:0"
+"$BIN" serve --workflow router --listen 127.0.0.1:0 \
+    --port-file "$TMP/port" --stop-file "$TMP/stop" \
+    --time-scale 0.002 >"$TMP/serve.log" 2>&1 &
+SERVE_PID=$!
+
+for _ in $(seq 1 300); do
+    [[ -s "$TMP/port" ]] && break
+    kill -0 "$SERVE_PID" 2>/dev/null || fail "server died before binding"
+    sleep 0.1
+done
+[[ -s "$TMP/port" ]] || fail "server never wrote its port file"
+PORT=$(tr -d '[:space:]' <"$TMP/port")
+echo "serve-smoke: server up on 127.0.0.1:$PORT (pid $SERVE_PID)"
+
+# 2. Quick open-loop sweep over the wire: async-park POSTs, GET polls,
+#    seeded DELETE cancels. A nonzero exit here means a wire-protocol or
+#    drain violation (lost request, missing Retry-After, leaked slot).
+"$BIN" loadgen --quick --remote "127.0.0.1:$PORT" --cancel-rate 0.05 \
+    --out "$OUT" || fail "remote loadgen sweep failed"
+
+# 3. Schema gate: the report must validate as nalar-bench/v1 rps_sweep,
+#    and every point must record the http transport.
+"$BIN" loadgen --check-only --out "$OUT" || fail "report schema validation failed"
+grep -q '"transport": *"http"' "$OUT/BENCH_rps_sweep.json" \
+    || fail "report does not record transport=http"
+
+# 4. Clean shutdown: touch the stop file, require exit code 0. The server
+#    exits nonzero iff HttpServer::stop() found leaked connections.
+touch "$TMP/stop"
+if ! wait "$SERVE_PID"; then
+    SERVE_PID=
+    fail "server exited nonzero (leaked connections?)"
+fi
+SERVE_PID=
+grep -q "clean shutdown: 0 leaked connections" "$TMP/serve.log" \
+    || fail "server log missing the clean-shutdown line"
+
+echo "serve-smoke: PASS — wire sweep valid, clean shutdown, 0 leaked connections"
