@@ -203,6 +203,7 @@ pub fn validate(report: &Value) -> Result<()> {
             "cancelled",
             "schedule",
             "tenants",
+            "breakdown",
             "goodput_rps",
             "shed_rate",
         ],
@@ -245,6 +246,25 @@ pub fn validate(report: &Value) -> Result<()> {
                     return Err(fail(format!(
                         "{bench} point {i}: `tenants` must be a non-empty map"
                     )))
+                }
+            }
+            // The per-stage latency decomposition (DESIGN.md §10): one
+            // entry per stage, each with its own quantiles and fold count
+            // — the fields the saturation analysis reads to tell
+            // queueing delay from service time.
+            for stage in crate::metrics::STAGE_NAMES {
+                let s = p.get("breakdown").get(stage);
+                for q in ["p50", "p95", "p99"] {
+                    if s.get(q).as_f64().is_none() {
+                        return Err(fail(format!(
+                            "{bench} point {i}: breakdown.{stage}.{q} not numeric"
+                        )));
+                    }
+                }
+                if s.get("count").as_u64().is_none() {
+                    return Err(fail(format!(
+                        "{bench} point {i}: breakdown.{stage}.count not an integer"
+                    )));
                 }
             }
         }
@@ -751,6 +771,19 @@ mod tests {
         }})
     }
 
+    /// A full five-stage decomposition, one entry per
+    /// [`crate::metrics::STAGE_NAMES`].
+    fn breakdown_map() -> Value {
+        let mut m = crate::util::json::Map::new();
+        for stage in crate::metrics::STAGE_NAMES {
+            m.insert(
+                stage.to_string(),
+                json!({"p50": 0.1, "p95": 0.4, "p99": 0.9, "count": 600}),
+            );
+        }
+        Value::Obj(m)
+    }
+
     #[test]
     fn validate_accepts_rps_sweep_points() {
         let mut p = json!({
@@ -762,10 +795,17 @@ mod tests {
         });
         p.insert("latency", lat());
         p.insert("tenants", tenants_map());
+        p.insert("breakdown", breakdown_map());
         validate(&minimal_report("rps_sweep", p.clone())).unwrap();
         // both transports validate; anything else is rejected
         p.insert("transport", "http");
         validate(&minimal_report("rps_sweep", p.clone())).unwrap();
+        // a decomposition missing a stage (or a stage's count) fails
+        let mut partial = p.clone();
+        partial.insert("breakdown", json!({"queue_wait": {"p50": 0.1, "p95": 0.4, "p99": 0.9,
+            "count": 600}}));
+        let err = validate(&minimal_report("rps_sweep", partial)).unwrap_err();
+        assert!(err.to_string().contains("breakdown.sched_delay"), "{err}");
         p.insert("transport", "carrier-pigeon");
         let err = validate(&minimal_report("rps_sweep", p)).unwrap_err();
         assert!(err.to_string().contains("transport"), "{err}");
@@ -796,6 +836,7 @@ mod tests {
                 "goodput_rps": 75.0, "shed_rate": 0.047
             });
             p.insert("latency", lat());
+            p.insert("breakdown", breakdown_map());
             p
         };
         // pre-tenancy reports (no map at all) fail

@@ -225,6 +225,9 @@ pub struct IngressSettings {
     pub tenants: Vec<TenantSettings>,
     /// HTTP serving-plane sizing (`nalar serve --listen`).
     pub http: HttpSettings,
+    /// Request-tracing flight recorder (`ingress.trace`; see
+    /// [`crate::trace`] and DESIGN.md §10).
+    pub trace: TraceSettings,
 }
 
 impl Default for IngressSettings {
@@ -239,7 +242,26 @@ impl Default for IngressSettings {
             token_burst: 32.0,
             tenants: Vec::new(),
             http: HttpSettings::default(),
+            trace: TraceSettings::default(),
         }
+    }
+}
+
+/// Flight-recorder sizing (`ingress.trace`). The recorder is a bounded
+/// ring sharded across 32 locks ([`crate::trace::FlightRecorder`]);
+/// `capacity` is the *total* event budget, split evenly across shards.
+/// Memory is `capacity × sizeof(TraceEvent)` ≈ `capacity × 40 B` — the
+/// default 65536 events is ~2.6 MB per node, about 8000 requests of
+/// 8-event timelines before overwrite. 0 disables tracing entirely
+/// (the sink becomes a no-op; the stage-latency histograms still fold).
+#[derive(Debug, Clone)]
+pub struct TraceSettings {
+    pub capacity: usize,
+}
+
+impl Default for TraceSettings {
+    fn default() -> Self {
+        TraceSettings { capacity: 65536 }
     }
 }
 
@@ -364,6 +386,12 @@ impl DeploymentConfig {
                     max_body_bytes: h.u64_or("max_body_bytes", dh.max_body_bytes as u64) as usize,
                 }
             };
+            let trace = TraceSettings {
+                capacity: i
+                    .get("trace")
+                    .u64_or("capacity", TraceSettings::default().capacity as u64)
+                    as usize,
+            };
             IngressSettings {
                 policy: i.str_or("policy", &di.policy).to_string(),
                 schedule: i.str_or("schedule", &di.schedule).to_string(),
@@ -374,6 +402,7 @@ impl DeploymentConfig {
                 token_burst: i.f64_or("token_burst", di.token_burst),
                 tenants,
                 http,
+                trace,
             }
         };
         let agents = v
@@ -671,6 +700,21 @@ mod tests {
             );
             assert!(DeploymentConfig::from_json(&y).is_err(), "must reject: {what}");
         }
+    }
+
+    #[test]
+    fn trace_block_parses_with_zero_meaning_disabled() {
+        let y = r#"{"ingress": {"trace": {"capacity": 1024}},
+                    "agents": [{"name": "a", "kind": "llm", "methods": ["m"]}]}"#;
+        let c = DeploymentConfig::from_json(y).unwrap();
+        assert_eq!(c.ingress.trace.capacity, 1024);
+        // no trace block = default recorder budget
+        let none = DeploymentConfig::from_json(MINIMAL).unwrap();
+        assert_eq!(none.ingress.trace.capacity, 65536);
+        // 0 is valid: tracing off, not an error
+        let off = r#"{"ingress": {"trace": {"capacity": 0}},
+                      "agents": [{"name": "a", "kind": "llm"}]}"#;
+        assert_eq!(DeploymentConfig::from_json(off).unwrap().ingress.trace.capacity, 0);
     }
 
     #[test]

@@ -26,6 +26,7 @@ use crate::ids::{InstanceId, NodeId, SessionId};
 use crate::json;
 use crate::nodestore::{keys, NodeStore, StoreDirectory, Subscription};
 use crate::state::kvcache::KvCacheManager;
+use crate::trace::{SharedSink, TraceKind};
 use crate::transport::{Bus, CallMsg, Message, MigratePayload};
 
 /// Queue ordering installed by the global controller (`policy/{instance}`).
@@ -86,6 +87,11 @@ pub struct ComponentController {
     order: LocalOrder,
     policy_sub: Subscription,
     stop: Arc<AtomicBool>,
+    /// Flight-recorder handle (late-bound: the ingress scheduler installs
+    /// the recorder after instances spawn; see `server::Deployment`).
+    /// Engine dispatch/complete events overlay executor service onto the
+    /// per-request timelines the scheduler writes.
+    trace: SharedSink,
     // telemetry
     completed: u64,
     failed: u64,
@@ -109,6 +115,7 @@ impl ComponentController {
         router: Arc<Router>,
         loads: &LoadMap,
         graph: Arc<DepGraph>,
+        trace: SharedSink,
     ) -> InstanceHandle {
         let inbox = bus.register(id.clone(), node);
         let load = loads.register(id.clone());
@@ -133,6 +140,7 @@ impl ComponentController {
             order: LocalOrder::Fcfs,
             policy_sub,
             stop: stop.clone(),
+            trace,
             completed: 0,
             failed: 0,
             migrated_in: 0,
@@ -289,6 +297,10 @@ impl ComponentController {
             let tag = self.next_tag;
             self.next_tag += 1;
             let meta = msg.cell.meta();
+            // Dispatch/complete pairs carry the *future id* as detail —
+            // globally unique, so concurrent calls of one request on
+            // different instances still pair up in `stage_durations`.
+            self.trace.record(meta.request, TraceKind::EngineDispatch, msg.cell.id.0);
             core.admit(EngineReq {
                 tag,
                 session: meta.session,
@@ -311,6 +323,10 @@ impl ComponentController {
         for d in done {
             let Some(msg) = self.inflight.remove(&d.tag) else { continue };
             self.load.active.fetch_sub(1, Ordering::Relaxed);
+            // Recorded before resolve: resolution fires the ingress waker
+            // inline on this thread, and the completion must precede the
+            // Resumed event it causes on the request's timeline.
+            self.trace.record(msg.cell.meta().request, TraceKind::EngineComplete, msg.cell.id.0);
             match d.result {
                 Ok(out) => {
                     self.completed += 1;
@@ -340,12 +356,14 @@ impl ComponentController {
         msg.cell.mark_running();
         self.load.active.fetch_add(1, Ordering::Relaxed);
         let meta = msg.cell.meta();
+        self.trace.record(meta.request, TraceKind::EngineDispatch, msg.cell.id.0);
         let t0 = Instant::now();
         let Backend::Tool(tool) = &mut self.backend else { unreachable!() };
         let result = tool.execute(&meta.method, &msg.args);
         let service = t0.elapsed();
         self.busy_ewma = 0.9 * self.busy_ewma + 0.1 * (service.as_secs_f64() * 20.0).min(1.0);
         self.load.active.fetch_sub(1, Ordering::Relaxed);
+        self.trace.record(meta.request, TraceKind::EngineComplete, msg.cell.id.0);
         match result {
             Ok(v) => {
                 self.completed += 1;

@@ -21,7 +21,15 @@ use crate::coordinator::{IngressMetrics, InstanceMetrics};
 use crate::futures::{FutureState, FutureTable};
 use crate::ids::{InstanceId, NodeId};
 use crate::nodestore::{keys, StoreDirectory};
+use crate::trace::Ring;
 use crate::transport::{Bus, Message};
+
+/// How many loop timings the controller retains (Fig-10 reporting reads
+/// a recent window, not the full history — an always-on deployment at a
+/// 100ms period would otherwise grow this vector ~35K entries/hour for
+/// its whole life). Same overwrite-oldest [`Ring`] as the trace
+/// flight recorder; evictions are counted, not silent.
+pub const TIMINGS_CAP: usize = 512;
 
 /// One instance's slice of the cluster view.
 #[derive(Debug, Clone)]
@@ -100,7 +108,7 @@ pub struct GlobalController {
     table: Arc<FutureTable>,
     policies: Mutex<Vec<Box<dyn Policy>>>,
     provision: Arc<ProvisionFn>,
-    pub timings: Mutex<Vec<LoopTiming>>,
+    timings: Mutex<Ring<LoopTiming>>,
 }
 
 impl GlobalController {
@@ -121,7 +129,7 @@ impl GlobalController {
             table,
             policies: Mutex::new(policies),
             provision,
-            timings: Mutex::new(Vec::new()),
+            timings: Mutex::new(Ring::new(TIMINGS_CAP)),
         })
     }
 
@@ -249,9 +257,16 @@ impl GlobalController {
         }
     }
 
-    /// Snapshot of every recorded loop timing (Fig-10 reporting).
+    /// Snapshot of the retained loop timings, oldest first (Fig-10
+    /// reporting; at most [`TIMINGS_CAP`] entries — older ticks have been
+    /// overwritten, see [`Self::timings_evicted`]).
     pub fn timings_snapshot(&self) -> Vec<LoopTiming> {
-        self.timings.lock().unwrap().clone()
+        self.timings.lock().unwrap().iter().copied().collect()
+    }
+
+    /// Timings evicted by the bounded ring (0 until the cap is reached).
+    pub fn timings_evicted(&self) -> u64 {
+        self.timings.lock().unwrap().dropped()
     }
 
     /// Run the periodic loop until `stop` (spawned by the deployment).
@@ -455,6 +470,19 @@ mod tests {
         let (g, _bus, _stores, _t) = mk_global(vec![]);
         let t = g.tick();
         assert!(t.total() < Duration::from_secs(1));
-        assert_eq!(g.timings.lock().unwrap().len(), 1);
+        assert_eq!(g.timings_snapshot().len(), 1);
+        assert_eq!(g.timings_evicted(), 0);
+    }
+
+    #[test]
+    fn timings_storage_is_bounded_at_capacity() {
+        let (g, _bus, _stores, _t) = mk_global(vec![]);
+        let extra = 5;
+        for _ in 0..TIMINGS_CAP + extra {
+            g.tick();
+        }
+        let snap = g.timings_snapshot();
+        assert_eq!(snap.len(), TIMINGS_CAP, "ring must enforce its capacity");
+        assert_eq!(g.timings_evicted(), extra as u64, "evictions are counted");
     }
 }

@@ -29,6 +29,7 @@ pub use policy::{make_policy, Policy, PolicyApi, PolicyCmd};
 pub use router::{LoadMap, Router};
 
 use crate::ids::SessionId;
+use crate::metrics::StageBreakdown;
 
 /// Telemetry one component controller pushes per tick (node store
 /// `metrics/{instance}`). This is what the global controller aggregates.
@@ -93,6 +94,15 @@ pub struct IngressMetrics {
     /// deployment configures no `ingress.tenants` block. The aggregate
     /// counters above are the sums of these.
     pub tenants: Vec<TenantMetrics>,
+    /// Per-stage latency decomposition of completed requests (p50/p95/p99
+    /// for queue-wait, sched-delay, poll-time, future-wait and
+    /// engine-service, in seconds; DESIGN.md §10). The aggregate over all
+    /// tenants — exact, merged bucket-wise from the per-tenant histograms
+    /// — so overload policies see *queueing delay*, not just depth.
+    pub breakdown: StageBreakdown,
+    /// Trace events overwritten by flight-recorder ring overflow (0 when
+    /// tracing is disabled or the recorder is keeping up).
+    pub trace_dropped: u64,
 }
 
 impl IngressMetrics {
@@ -116,7 +126,9 @@ impl IngressMetrics {
             "failed": self.failed,
             "cancelled": self.cancelled,
             "expired_in_queue": self.expired_in_queue,
-            "tenants": tenants
+            "tenants": tenants,
+            "breakdown": self.breakdown.to_json(),
+            "trace_dropped": self.trace_dropped
         })
     }
 }
@@ -141,6 +153,9 @@ pub struct TenantMetrics {
     pub failed: u64,
     pub expired_in_queue: u64,
     pub cancelled: u64,
+    /// This tenant's own per-stage latency decomposition (same component
+    /// set as [`IngressMetrics::breakdown`]).
+    pub breakdown: StageBreakdown,
 }
 
 impl TenantMetrics {
@@ -155,7 +170,8 @@ impl TenantMetrics {
             "completed": self.completed,
             "failed": self.failed,
             "expired_in_queue": self.expired_in_queue,
-            "cancelled": self.cancelled
+            "cancelled": self.cancelled,
+            "breakdown": self.breakdown.to_json()
         })
     }
 }

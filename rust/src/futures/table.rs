@@ -138,6 +138,25 @@ impl FutureTable {
         self.by_request.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
+    /// Total engine service time (µs) across `request`'s futures — the
+    /// `engine_service` component of the per-stage latency breakdown
+    /// (DESIGN.md §10). Reads the `by_request` index without consuming
+    /// it, so the ingress scheduler must call this *before*
+    /// [`Self::on_request_complete`]. Futures already GC'd are misses and
+    /// contribute nothing (their service time was stamped at resolution,
+    /// so a sufficiently aggressive GC undercounts — acceptable for a
+    /// latency decomposition, never wrong for accounting that ran).
+    pub fn request_service_us(&self, request: RequestId) -> u64 {
+        let ids: Vec<FutureId> = self
+            .request_shard(request)
+            .lock()
+            .unwrap()
+            .get(&request)
+            .cloned()
+            .unwrap_or_default();
+        ids.into_iter().filter_map(|id| self.get(id)).map(|cell| cell.service_us()).sum()
+    }
+
     /// Drop terminal futures older than keeping is useful; returns count
     /// removed. (The paper scales to 131K live futures; GC keeps bench
     /// memory bounded.)
@@ -248,6 +267,22 @@ mod tests {
         assert_eq!(t.request_index_len(), 1, "index waits for the request hook");
         assert_eq!(t.fail_request(RequestId(9), "late cancel"), 0, "stale id is a miss");
         assert_eq!(t.request_index_len(), 0);
+    }
+
+    #[test]
+    fn request_service_us_sums_without_consuming_the_index() {
+        let t = FutureTable::new();
+        t.insert(cell_for(1, 7));
+        t.insert(cell_for(2, 7));
+        t.insert(cell_for(3, 8)); // other request: not counted
+        t.get(FutureId(1)).unwrap().resolve(crate::json!(1), 1_500);
+        t.get(FutureId(2)).unwrap().resolve(crate::json!(2), 500);
+        t.get(FutureId(3)).unwrap().resolve(crate::json!(3), 9_999);
+        assert_eq!(t.request_service_us(RequestId(7)), 2_000);
+        assert_eq!(t.request_service_us(RequestId(7)), 2_000, "read-only: repeatable");
+        assert_eq!(t.request_index_len(), 2, "index intact");
+        t.on_request_complete(RequestId(7));
+        assert_eq!(t.request_service_us(RequestId(7)), 0, "evicted request sums to zero");
     }
 
     #[test]

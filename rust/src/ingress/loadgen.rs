@@ -622,6 +622,10 @@ fn run_point(
     });
     p.insert("latency", tail_rec.summary_scaled(paper).to_json());
     p.insert("latency_ok", ok_rec.summary_scaled(paper).to_json());
+    // Per-stage latency decomposition (queue-wait / sched-delay / poll /
+    // future-wait / engine-service, DESIGN.md §10) of this point's
+    // completions, in paper seconds like the latency summaries.
+    p.insert("breakdown", m_end.breakdown.scaled(paper).to_json());
     // Per-tenant rows (client-side attribution; see `mix` above): the
     // ROADMAP's "report per-tenant goodput in the rps_sweep schema".
     // `missed` is deadline misses — the starvation signal the
@@ -927,6 +931,22 @@ fn run_point_remote(opts: &LoadgenOpts, rps: f64, addr: &str) -> Result<Value> {
     });
     p.insert("latency", tail_rec.summary_scaled(paper).to_json());
     p.insert("latency_ok", ok_rec.summary_scaled(paper).to_json());
+    // Per-stage decomposition from the server's snapshot, rescaled to
+    // paper seconds. Histogram buckets cannot be differenced the way the
+    // counters above are, so remote points carry the server's cumulative
+    // distribution up to this point — comparable across a sweep only in
+    // aggregate, unlike the per-point inproc breakdowns.
+    let src = m1.get("breakdown");
+    let mut bd = json_util::Map::new();
+    for stage in crate::metrics::STAGE_NAMES {
+        let stat = src.get(stage);
+        let mut row = json!({ "count": stat.get("count").as_u64().unwrap_or(0) });
+        row.insert("p50", stat.get("p50").as_f64().unwrap_or(0.0) * paper);
+        row.insert("p95", stat.get("p95").as_f64().unwrap_or(0.0) * paper);
+        row.insert("p99", stat.get("p99").as_f64().unwrap_or(0.0) * paper);
+        bd.insert(stage.to_string(), row);
+    }
+    p.insert("breakdown", Value::Obj(bd));
     let mut tmap = json_util::Map::new();
     for (i, t) in mix.iter().enumerate() {
         let mut row = json!({
@@ -978,6 +998,19 @@ mod tests {
         assert_eq!(p.get("schedule").as_str(), Some("fifo"), "config default ordering");
         assert!(p.get("ingress_workers").as_u64().unwrap() >= 1);
         assert!(p.get("latency").get("p99").as_f64().is_some());
+        // per-stage decomposition: all five components present, and the
+        // fold saw every completion
+        let bd = p.get("breakdown").as_obj().expect("breakdown map required");
+        assert_eq!(bd.len(), crate::metrics::STAGE_NAMES.len());
+        for stage in crate::metrics::STAGE_NAMES {
+            let row = p.get("breakdown").get(stage);
+            assert!(row.get("p95").as_f64().is_some(), "{stage} needs quantiles");
+            // folds once per server-side success: at least the
+            // within-deadline completions, never more than was offered
+            let count = row.get("count").as_u64().unwrap();
+            assert!(count >= p.get("completed").as_u64().unwrap(), "{stage} undercounted");
+            assert!(count <= p.get("offered").as_u64().unwrap(), "{stage} overcounted");
+        }
         // no --tenants: the per-tenant map still exists, with everything
         // attributed to the single logical `default` tenant
         let tenants = p.get("tenants").as_obj().expect("tenants map required");

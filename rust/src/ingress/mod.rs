@@ -45,6 +45,15 @@
 //!   [`crate::coordinator::GlobalController::collect`] aggregates them so
 //!   overload-aware policies (e.g.
 //!   [`crate::coordinator::policies::OverloadProvision`]) can react.
+//! * every lifecycle transition is **traced** ([`crate::trace`]): the
+//!   scheduler records admitted / queued / scheduled / polling / parked /
+//!   resumed / terminal events into a bounded flight recorder
+//!   (`trace.capacity`, [`SchedulerOpts::trace`]), and each completed
+//!   request's per-stage decomposition — queue-wait, sched-delay,
+//!   poll-time, future-wait, engine-service — folds into per-(workflow,
+//!   tenant) log-bucket histograms surfaced through
+//!   [`IngressMetrics::breakdown`], so policies see *queueing delay*,
+//!   not just depth (DESIGN.md §10).
 //!
 //! **Request lifecycle.** A ticket observes exactly one terminal outcome,
 //! however the race between completion, deadline expiry and cancellation
@@ -78,8 +87,10 @@ use crate::coordinator::{IngressMetrics, TenantMetrics};
 use crate::error::{Error, Result};
 use crate::futures::{FutureCell, Value};
 use crate::ids::{NodeId, RequestId, SessionId, TenantId};
+use crate::metrics::{merge_breakdowns, StageHistograms};
 use crate::nodestore::keys;
 use crate::server::Deployment;
+use crate::trace::{TraceKind, TraceSink};
 use crate::util::clock::Clock;
 use crate::workflow::{driver_for, Driver, Env, Step, WorkflowKind};
 
@@ -121,25 +132,6 @@ impl TicketCell {
         drop(g);
         self.cv.notify_all();
         first
-    }
-}
-
-/// Per-submit options for the deprecated [`Ingress::submit_with`] /
-/// [`Ingress::submit_driver_with`] shims. New code carries these fields
-/// on [`SubmitRequest`] instead; this struct remains only so the old
-/// signatures stay callable for one deprecation cycle.
-#[derive(Debug, Clone, Default)]
-pub struct SubmitOpts {
-    /// Existing session to continue (`None` opens a fresh one).
-    pub session: Option<SessionId>,
-    /// Tenant to charge the request to (see [`SubmitRequest::tenant`]).
-    pub tenant: Option<String>,
-}
-
-impl SubmitOpts {
-    /// Charge the request to the named tenant.
-    pub fn tenant(name: &str) -> SubmitOpts {
-        SubmitOpts { session: None, tenant: Some(name.to_string()) }
     }
 }
 
@@ -314,7 +306,7 @@ impl Ticket {
 }
 
 /// One admitted request waiting to start (driver not yet built, unless
-/// the caller handed one in via [`Ingress::submit_driver`]).
+/// the caller handed one in via [`SubmitRequest::driver`]).
 struct Queued {
     session: SessionId,
     request: RequestId,
@@ -357,6 +349,22 @@ struct InFlight {
     /// When the request entered each stage; folded into [`StageStats`]
     /// at (successful) completion.
     stage_entered: Vec<(u32, Instant)>,
+    /// Per-stage latency accumulators (DESIGN.md §10), maintained at the
+    /// same transitions the trace events mark so the decomposition is
+    /// exact on a virtual clock: submit→scheduled, time spent runnable
+    /// in the ready queue, time inside `Driver::poll`, and time parked
+    /// on future wakers. `queue_wait + sched_delay + poll_time +
+    /// future_wait` = end-to-end latency up to clock granularity.
+    queue_wait: Duration,
+    sched_delay: Duration,
+    poll_time: Duration,
+    future_wait: Duration,
+    /// When this continuation entered the ready queue (drained into
+    /// `sched_delay` on pop).
+    ready_since: Option<Instant>,
+    /// When this continuation parked (drained into `future_wait` on
+    /// wake/nudge).
+    parked_at: Option<Instant>,
 }
 
 /// A request whose deadline expired before completion, collected by the
@@ -368,10 +376,11 @@ struct Lapsed {
     submitted: Instant,
     timeout: Duration,
     cell: Arc<TicketCell>,
-    /// `Some` if the request had started (a driver ran and may have
-    /// outstanding futures to bulk-fail); `None` for in-queue expiries,
+    request: RequestId,
+    /// True if the request had started (a driver ran and may have
+    /// outstanding futures to bulk-fail); false for in-queue expiries,
     /// which never issued a call.
-    request: Option<RequestId>,
+    started: bool,
 }
 
 /// Scheduler state under one lock: admission queues feed the in-flight
@@ -444,11 +453,22 @@ pub struct SchedulerOpts {
     /// scheduler tests inject [`crate::testkit::Clock::manual`] so
     /// deadlines and sweeps are driven by `advance()`, not `sleep()`.
     pub clock: Clock,
+    /// Trace sink override; `None` = build a fresh flight recorder sized
+    /// by the deployment config's `ingress.trace.capacity` (0 disables
+    /// tracing) on [`Self::clock`]. Timelines recorded on a virtual
+    /// clock are fully deterministic.
+    pub trace: Option<TraceSink>,
 }
 
 impl SchedulerOpts {
     pub fn new(workers: usize, max_in_flight: usize) -> SchedulerOpts {
-        SchedulerOpts { workers, max_in_flight, schedule: None, clock: Clock::wall() }
+        SchedulerOpts {
+            workers,
+            max_in_flight,
+            schedule: None,
+            clock: Clock::wall(),
+            trace: None,
+        }
     }
 }
 
@@ -503,6 +523,14 @@ struct IngressInner {
     /// `deadline_slack` policy's remaining-work estimate. Locked after
     /// `sched` when both are needed (never the other way around).
     stage_stats: Vec<Mutex<StageStats>>,
+    /// Per-(workflow, tenant) latency-decomposition histograms: completed
+    /// requests fold their queue-wait / sched-delay / poll-time /
+    /// future-wait / engine-service durations here (lock-free relaxed
+    /// increments; [`crate::metrics::Histogram`]).
+    breakdown: Vec<Vec<StageHistograms>>,
+    /// The flight recorder every lifecycle transition writes into
+    /// (disabled = every record is a no-op branch).
+    trace: TraceSink,
     schedule: SchedulePolicy,
     clock: Clock,
     workers: usize,
@@ -524,7 +552,7 @@ impl IngressInner {
     /// Resolve a submitted tenant name to its table index. `None` = the
     /// first tenant; unknown names error on a configured table and
     /// collapse onto the implicit single `default` otherwise (see
-    /// [`SubmitOpts::tenant`]).
+    /// [`SubmitRequest::tenant`]).
     fn tenant_index(&self, name: Option<&str>) -> Result<usize> {
         let Some(name) = name else { return Ok(0) };
         if !self.tenants_configured {
@@ -563,8 +591,13 @@ impl IngressInner {
                 failed: self.failed[idx][t].load(Ordering::Relaxed),
                 expired_in_queue: self.expired_in_queue[idx][t].load(Ordering::Relaxed),
                 cancelled: self.cancelled[idx][t].load(Ordering::Relaxed),
+                breakdown: self.breakdown[idx][t].breakdown(),
             })
             .collect();
+        // Aggregate breakdown: merged bucket-wise from the per-tenant
+        // histograms (exact — the bucket layout is shared), not an
+        // average of quantiles.
+        let parts: Vec<_> = self.breakdown[idx].iter().map(|h| h.snapshots()).collect();
         IngressMetrics {
             workflow: self.kinds[idx].name().to_string(),
             depth: tenant_depths.iter().sum(),
@@ -580,6 +613,8 @@ impl IngressInner {
             expired_in_queue: tenants.iter().map(|t| t.expired_in_queue).sum(),
             cancelled: tenants.iter().map(|t| t.cancelled).sum(),
             tenants,
+            breakdown: merge_breakdowns(&parts),
+            trace_dropped: self.trace.dropped(),
         }
     }
 
@@ -620,7 +655,11 @@ impl IngressInner {
                 est_remaining: self.stage_stats[f.idx].lock().unwrap().estimate(f.stage),
             }),
         )?;
-        s.ready.remove(chosen)
+        let mut f = s.ready.remove(chosen)?;
+        if let Some(since) = f.ready_since.take() {
+            f.sched_delay += now.saturating_duration_since(since);
+        }
+        Some(f)
     }
 
     /// Pop the next admission-queue entry of workflow `idx`: deficit
@@ -674,7 +713,12 @@ impl IngressInner {
                     // to (bounded backoff; see `SchedState::nudge`)
                     let nudge: Vec<u64> = s.nudge.drain(..).collect();
                     for rid in nudge {
-                        if let Some(f) = s.parked.remove(&rid) {
+                        if let Some(mut f) = s.parked.remove(&rid) {
+                            if let Some(at) = f.parked_at.take() {
+                                f.future_wait += now.saturating_duration_since(at);
+                            }
+                            f.ready_since = Some(now);
+                            self.trace.record(f.request, TraceKind::Resumed, 0);
                             s.ready.push_back(f);
                         }
                     }
@@ -739,7 +783,8 @@ impl IngressInner {
                             submitted: job.submitted,
                             timeout: job.timeout,
                             cell: job.cell,
-                            request: None,
+                            request: job.request,
+                            started: false,
                         });
                     } else {
                         kept.push_back(job);
@@ -771,7 +816,8 @@ impl IngressInner {
                     submitted: f.submitted,
                     timeout: f.timeout,
                     cell: f.cell,
-                    request: Some(f.request),
+                    request: f.request,
+                    started: true,
                 });
             } else {
                 i += 1;
@@ -791,7 +837,8 @@ impl IngressInner {
                 submitted: f.submitted,
                 timeout: f.timeout,
                 cell: f.cell,
-                request: Some(f.request),
+                request: f.request,
+                started: true,
             });
         }
     }
@@ -805,16 +852,17 @@ impl IngressInner {
     /// arbitrates, the counters follow the winner.
     fn fail_lapsed(&self, lapsed: Vec<Lapsed>) {
         for l in lapsed {
-            if let Some(request) = l.request {
-                self.d.table().fail_request(request, "request deadline expired");
+            if l.started {
+                self.d.table().fail_request(l.request, "request deadline expired");
             }
             let waited = self.since(l.submitted);
             if l.cell.fulfil(Err(Error::Deadline(l.timeout)), waited) {
-                if l.request.is_none() {
+                if !l.started {
                     self.expired_in_queue[l.idx][l.tenant].fetch_add(1, Ordering::Relaxed);
                 } else {
                     self.failed[l.idx][l.tenant].fetch_add(1, Ordering::Relaxed);
                 }
+                self.trace.record(l.request, TraceKind::Expired, 0);
             }
             self.maybe_publish(l.idx);
         }
@@ -874,6 +922,7 @@ impl IngressInner {
             Found::Queued(job) => {
                 if job.cell.fulfil(Err(Error::Cancelled), self.since(job.submitted)) {
                     self.cancelled[idx][job.tenant].fetch_add(1, Ordering::Relaxed);
+                    self.trace.record(job.request, TraceKind::Cancelled, 0);
                 }
                 self.maybe_publish(idx);
                 true
@@ -895,6 +944,7 @@ impl IngressInner {
         self.d.table().fail_request(f.request, "request cancelled");
         if f.cell.fulfil(Err(Error::Cancelled), self.since(f.submitted)) {
             self.cancelled[f.idx][f.tenant].fetch_add(1, Ordering::Relaxed);
+            self.trace.record(f.request, TraceKind::Cancelled, 0);
         }
         self.maybe_publish(f.idx);
         self.cv.notify_one(); // in-flight capacity freed
@@ -915,11 +965,13 @@ impl IngressInner {
             }
             if job.cell.fulfil(Err(Error::Deadline(job.timeout)), this.since(job.submitted)) {
                 this.expired_in_queue[idx][job.tenant].fetch_add(1, Ordering::Relaxed);
+                this.trace.record(job.request, TraceKind::Expired, 0);
             }
             this.maybe_publish(idx);
             this.cv.notify_one(); // in-flight capacity freed
             return;
         }
+        this.trace.record(job.request, TraceKind::Scheduled, 0);
         let env = Env::with_request(&this.d, job.session, job.request);
         let driver = match job.driver.take() {
             Some(driver) => driver,
@@ -940,6 +992,12 @@ impl IngressInner {
                 subscribed: HashSet::new(),
                 stage: 0,
                 stage_entered: vec![(0, now)],
+                queue_wait: now.saturating_duration_since(job.submitted),
+                sched_delay: Duration::ZERO,
+                poll_time: Duration::ZERO,
+                future_wait: Duration::ZERO,
+                ready_since: None,
+                parked_at: None,
             },
         );
     }
@@ -947,7 +1005,8 @@ impl IngressInner {
     /// Poll one continuation: advance it as far as readiness allows, then
     /// either finish it or park it under waker subscriptions.
     fn run_poll(this: &Arc<Self>, mut f: InFlight) {
-        if this.clock.now() >= f.deadline {
+        let poll_started = this.clock.now();
+        if poll_started >= f.deadline {
             let timeout = f.timeout;
             // same abandonment as the sweep path: dead calls must not
             // keep engine slots or wakers alive
@@ -955,10 +1014,15 @@ impl IngressInner {
             this.finish(f, Err(Error::Deadline(timeout)));
             return;
         }
-        match f.driver.poll(&f.env) {
+        this.trace.record(f.request, TraceKind::Polling, f.stage as u64);
+        let step = f.driver.poll(&f.env);
+        let after = this.clock.now();
+        f.poll_time += after.saturating_duration_since(poll_started);
+        match step {
             Step::Done(result) => this.finish(f, result),
             Step::Pending { waiting_on } => {
                 let rid = f.request.0;
+                let first_wait = waiting_on.first().map_or(0, |id| id.0);
                 // Track stage progress for the scheduling policies (the
                 // driver advanced as far as readiness allowed before
                 // suspending, so `stage()` is current).
@@ -995,10 +1059,18 @@ impl IngressInner {
                         Some(f)
                     } else if s.woken.remove(&rid) {
                         // a waker fired mid-poll: run again rather than
-                        // risk a lost wakeup
+                        // risk a lost wakeup. Traced as a zero-length
+                        // park + resume so the event-derived and
+                        // accumulator decompositions agree: the requeue
+                        // wait is sched-delay in both.
+                        f.ready_since = Some(after);
+                        this.trace.record(f.request, TraceKind::Parked, first_wait);
+                        this.trace.record(f.request, TraceKind::Resumed, 0);
                         s.ready.push_back(f);
                         None
                     } else {
+                        f.parked_at = Some(after);
+                        this.trace.record(f.request, TraceKind::Parked, first_wait);
                         s.parked.insert(rid, f);
                         if !can_wake {
                             // nothing is subscribable (a shouldn't-happen:
@@ -1034,8 +1106,14 @@ impl IngressInner {
     /// Waker target: move a parked continuation to the ready queue. Fired
     /// by future resolution from component-controller threads.
     fn wake(&self, rid: u64) {
+        let now = self.clock.now();
         let mut s = self.sched.lock().unwrap();
-        if let Some(f) = s.parked.remove(&rid) {
+        if let Some(mut f) = s.parked.remove(&rid) {
+            if let Some(at) = f.parked_at.take() {
+                f.future_wait += now.saturating_duration_since(at);
+            }
+            f.ready_since = Some(now);
+            self.trace.record(f.request, TraceKind::Resumed, 0);
             s.ready.push_back(f);
             drop(s);
             self.cv.notify_one();
@@ -1055,6 +1133,9 @@ impl IngressInner {
             s.cancelled.remove(&f.request.0); // completion won the race
             s.in_flight[f.idx] -= 1;
         }
+        // Engine-service total must be read *before* the completion hook
+        // evicts the per-request future index.
+        let service_us = self.d.table().request_service_us(f.request);
         // Request-completion hook: evict the per-request future index —
         // the request is terminal, nothing will `fail_request` it, and
         // the index must not grow unboundedly (futures::table).
@@ -1070,9 +1151,24 @@ impl IngressInner {
                 stats.observe(*stage, now.saturating_duration_since(*entered));
             }
         }
-        if f.cell.fulfil(result, now.saturating_duration_since(f.submitted)) {
+        let latency = now.saturating_duration_since(f.submitted);
+        if f.cell.fulfil(result, latency) {
             let ctr = if ok { &self.completed } else { &self.failed };
             ctr[f.idx][f.tenant].fetch_add(1, Ordering::Relaxed);
+            if ok {
+                // Fold the decomposition into the per-(workflow, tenant)
+                // histograms (successes only, matching `StageStats` —
+                // truncated failures would skew the quantiles low).
+                self.breakdown[f.idx][f.tenant].record_ns(
+                    f.queue_wait.as_nanos() as u64,
+                    f.sched_delay.as_nanos() as u64,
+                    f.poll_time.as_nanos() as u64,
+                    f.future_wait.as_nanos() as u64,
+                    service_us * 1_000,
+                );
+            }
+            let kind = if ok { TraceKind::Done } else { TraceKind::Failed };
+            self.trace.record(f.request, kind, latency.as_nanos() as u64);
         }
         self.maybe_publish(f.idx);
         self.cv.notify_one(); // in-flight capacity freed: admit more
@@ -1139,6 +1235,17 @@ impl Ingress {
         let per_tenant_u64 = |_: &WorkflowKind| -> Vec<AtomicU64> {
             weights.iter().map(|_| AtomicU64::new(0)).collect()
         };
+        // The flight recorder: explicit sink if the caller injected one
+        // (tests share a recorder across assertions), else a fresh one
+        // sized by `ingress.trace.capacity` on the scheduler's clock.
+        // Installed into the deployment's shared slot so component
+        // controllers overlay engine dispatch/complete events onto the
+        // same timelines.
+        let trace = opts
+            .trace
+            .clone()
+            .unwrap_or_else(|| TraceSink::recording(d.cfg().ingress.trace.capacity, clock.clone()));
+        d.trace_slot().install(trace.clone());
         let inner = Arc::new(IngressInner {
             d: d.clone(),
             kinds: kinds.to_vec(),
@@ -1175,6 +1282,11 @@ impl Ingress {
             expired_in_queue: kinds.iter().map(per_tenant_u64).collect(),
             cancelled: kinds.iter().map(per_tenant_u64).collect(),
             stage_stats: kinds.iter().map(|_| Mutex::new(StageStats::new())).collect(),
+            breakdown: kinds
+                .iter()
+                .map(|_| weights.iter().map(|_| StageHistograms::new()).collect())
+                .collect(),
+            trace,
             schedule,
             clock,
             workers,
@@ -1206,68 +1318,11 @@ impl Ingress {
     /// admission.
     pub fn submit(&self, req: SubmitRequest) -> Result<Ticket> {
         let SubmitRequest { kind, input, driver, session, tenant, timeout } = req;
-        self.submit_inner(kind, input, driver, timeout, SubmitOpts { session, tenant })
-    }
-
-    /// Pre-`SubmitRequest` multi-tenant submit. Identical behaviour to
-    /// `submit(SubmitRequest::workflow(kind).input(input).deadline(timeout)
-    /// ...)` with `opts` unpacked onto the builder.
-    #[deprecated(note = "build a `SubmitRequest` and call `Ingress::submit`")]
-    pub fn submit_with(
-        &self,
-        kind: WorkflowKind,
-        input: Value,
-        timeout: Duration,
-        opts: SubmitOpts,
-    ) -> Result<Ticket> {
-        self.submit_inner(kind, input, None, timeout, opts)
-    }
-
-    /// Pre-`SubmitRequest` custom-driver submit. Identical behaviour to
-    /// `submit(SubmitRequest::workflow(kind).driver(driver)...)`.
-    #[deprecated(note = "build a `SubmitRequest` and call `Ingress::submit`")]
-    pub fn submit_driver(
-        &self,
-        kind: WorkflowKind,
-        session: Option<SessionId>,
-        driver: Box<dyn Driver>,
-        timeout: Duration,
-    ) -> Result<Ticket> {
-        self.submit_inner(
-            kind,
-            Value::Null,
-            Some(driver),
-            timeout,
-            SubmitOpts { session, tenant: None },
-        )
-    }
-
-    /// Pre-`SubmitRequest` custom-driver + options submit. Identical
-    /// behaviour to the equivalent [`SubmitRequest`] chain.
-    #[deprecated(note = "build a `SubmitRequest` and call `Ingress::submit`")]
-    pub fn submit_driver_with(
-        &self,
-        kind: WorkflowKind,
-        driver: Box<dyn Driver>,
-        timeout: Duration,
-        opts: SubmitOpts,
-    ) -> Result<Ticket> {
-        self.submit_inner(kind, Value::Null, Some(driver), timeout, opts)
-    }
-
-    fn submit_inner(
-        &self,
-        kind: WorkflowKind,
-        input: Value,
-        driver: Option<Box<dyn Driver>>,
-        timeout: Duration,
-        opts: SubmitOpts,
-    ) -> Result<Ticket> {
         let inner = &self.inner;
         let idx = inner
             .kind_index(kind)
             .ok_or_else(|| Error::Config(format!("ingress does not serve `{}`", kind.name())))?;
-        let tenant = inner.tenant_index(opts.tenant.as_deref())?;
+        let tenant = inner.tenant_index(tenant.as_deref())?;
         let verdict = {
             let mut s = inner.sched.lock().unwrap();
             // Checked under the scheduler lock: `stop` drains the queues
@@ -1293,9 +1348,14 @@ impl Ingress {
             inner.tenant_adm[idx][tenant].record(decision.is_ok());
             match decision {
                 Ok(()) => {
-                    let session = opts.session.unwrap_or_else(|| inner.d.new_session());
+                    let session = session.unwrap_or_else(|| inner.d.new_session());
                     let request = inner.d.new_request_id();
                     let cell = TicketCell::new();
+                    // First two timeline events, recorded inside the sched
+                    // lock so they cannot interleave after `Scheduled` from
+                    // a racing worker that pops the job immediately.
+                    inner.trace.record(request, TraceKind::Admitted, 0);
+                    inner.trace.record(request, TraceKind::Queued, tenant as u64);
                     s.queues[idx][tenant].push_back(Queued {
                         session,
                         request,
@@ -1351,6 +1411,13 @@ impl Ingress {
         Some(self.inner.snapshot(self.inner.kind_index(kind)?))
     }
 
+    /// The flight recorder this scheduler writes span timelines into
+    /// (disabled sink when `ingress.trace.capacity` is 0). The HTTP trace
+    /// endpoint and the `nalar trace` waterfall read timelines from here.
+    pub fn trace(&self) -> &TraceSink {
+        &self.inner.trace
+    }
+
     /// Stop the scheduler: workers finish the poll they are executing;
     /// everything queued or parked fails fast (reported, not masked — §5).
     /// Idempotent; also runs on drop.
@@ -1388,6 +1455,7 @@ impl Ingress {
             let waited = self.inner.since(job.submitted);
             if job.cell.fulfil(Err(Error::Shed(kind, "ingress stopped".into())), waited) {
                 self.inner.failed[idx][job.tenant].fetch_add(1, Ordering::Relaxed);
+                self.inner.trace.record(job.request, TraceKind::Shed, 0);
             }
         }
         for f in inflight {
@@ -1400,6 +1468,7 @@ impl Ingress {
             let waited = self.inner.since(f.submitted);
             if f.cell.fulfil(Err(Error::Shed(kind, "ingress stopped".into())), waited) {
                 self.inner.failed[f.idx][f.tenant].fetch_add(1, Ordering::Relaxed);
+                self.inner.trace.record(f.request, TraceKind::Shed, 0);
             }
         }
         for idx in 0..self.inner.kinds.len() {
@@ -1575,9 +1644,7 @@ mod tests {
             .filter(|t| t.wait(Duration::from_secs(1)).is_err())
             .count();
         assert!(failures >= 1, "queued work must fail fast at shutdown");
-        assert!(ing
-            .submit(WorkflowKind::Router, None, router_input(), timeout)
-            .is_err());
+        assert!(ing.submit(req(WorkflowKind::Router, router_input(), timeout)).is_err());
         d.shutdown();
     }
 
@@ -1759,68 +1826,191 @@ mod tests {
         assert!(r.input.get("prompt").as_str().is_some());
     }
 
-    /// The one-PR deprecation contract: every old entry point must behave
-    /// exactly like the `SubmitRequest` chain that replaces it.
+    /// The builder is the only submit surface (the pre-`SubmitRequest`
+    /// shims are gone): session continuation, custom drivers and the
+    /// default chain all flow through `submit` and feed one counter set.
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_match_the_builder_path() {
+    fn builder_is_the_single_submit_surface() {
         let d = fast_router();
         let ing = Ingress::start_with(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, 4);
         let timeout = Duration::from_secs(20);
 
-        // submit_with(kind, input, timeout, opts) == builder with the
-        // same session: both tickets continue the caller's session and
-        // land on the same (implicit) tenant.
+        // Session continuation: a builder submit with `.session(..)` keeps
+        // the caller's session; one without mints a fresh one.
         let sess = d.new_session();
-        let old = ing
-            .submit_with(
-                WorkflowKind::Router,
-                router_input(),
-                timeout,
-                SubmitOpts { session: Some(sess), tenant: None },
-            )
-            .unwrap();
-        let new = ing
+        let cont = ing
             .submit(req(WorkflowKind::Router, router_input(), timeout).session(sess))
             .unwrap();
-        assert_eq!(old.session, sess);
-        assert_eq!(new.session, sess);
-        assert_eq!(old.tenant, new.tenant);
-        old.wait(timeout).unwrap();
-        new.wait(timeout).unwrap();
+        let fresh = ing.submit(req(WorkflowKind::Router, router_input(), timeout)).unwrap();
+        assert_eq!(cont.session, sess);
+        assert_ne!(fresh.session, sess);
+        assert_eq!(cont.tenant, fresh.tenant, "both land on the implicit tenant");
+        cont.wait(timeout).unwrap();
+        fresh.wait(timeout).unwrap();
 
-        // submit_driver / submit_driver_with == builder.driver(..): all
-        // three admit a scripted driver that completes identically.
+        // Custom drivers ride the same path: `.driver(..)` replaces the
+        // workflow's built-in driver without a separate entry point.
         let eng = ScriptedEngine::new();
-        let t_old = ing
-            .submit_driver(WorkflowKind::Router, None, eng.driver("shim", 1), timeout)
-            .unwrap();
-        let t_with = ing
-            .submit_driver_with(
-                WorkflowKind::Router,
-                eng.driver("shim", 1),
-                timeout,
-                SubmitOpts::default(),
-            )
-            .unwrap();
-        let t_new = ing
+        let t_a = ing
             .submit(
                 SubmitRequest::workflow(WorkflowKind::Router)
                     .driver(eng.driver("shim", 1))
                     .deadline(timeout),
             )
             .unwrap();
-        assert!(eng.wait_created(3, Duration::from_secs(5)), "all three drivers must run");
-        for i in 0..3 {
+        let t_b = ing
+            .submit(
+                SubmitRequest::workflow(WorkflowKind::Router)
+                    .driver(eng.driver("shim", 1))
+                    .deadline(timeout),
+            )
+            .unwrap();
+        assert!(eng.wait_created(2, Duration::from_secs(5)), "both drivers must run");
+        for i in 0..2 {
             eng.cell(i).resolve(json!("done"), 0);
         }
-        for t in [t_old, t_with, t_new] {
+        for t in [t_a, t_b] {
             let out = t.wait(Duration::from_secs(5)).unwrap();
             assert_eq!(out.get("scripted").as_str(), Some("shim"));
         }
         let m = ing.metrics(WorkflowKind::Router).unwrap();
-        assert_eq!(m.completed, 5, "both surfaces feed the same counters");
+        assert_eq!(m.completed, 4, "every surface feeds the same counters");
         assert_eq!(m.in_flight, 0, "no table leak via either surface");
+        ing.stop();
+        d.shutdown();
+    }
+
+    /// Tentpole acceptance: on a virtual clock the span timeline is exact
+    /// — every lifecycle event lands at a known instant, and the
+    /// event-derived stage decomposition sums to the ticket's reported
+    /// latency with zero slack (the clock only moves when the test says
+    /// so, so "within clock granularity" collapses to equality).
+    #[test]
+    fn trace_timeline_is_exact_on_a_virtual_clock() {
+        use crate::trace::stage_durations;
+        let (clock, v) = Clock::manual();
+        let d = fast_router();
+        let trace = TraceSink::recording(4096, clock.clone());
+        let mut opts = SchedulerOpts::new(1, 1);
+        opts.clock = clock.clone();
+        opts.trace = Some(trace.clone());
+        let ing =
+            Ingress::start_with_opts(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, opts);
+        let eng = ScriptedEngine::new();
+        let timeout = Duration::from_secs(60);
+        // One worker, in-flight bound 1: r1 runs first and r2 sits in the
+        // admission queue until r1 finishes — so r2's queue wait is
+        // exactly the virtual time r1 spends parked on its future.
+        let t1 = ing
+            .submit(
+                SubmitRequest::workflow(WorkflowKind::Router)
+                    .driver(eng.driver("r1", 1))
+                    .deadline(timeout),
+            )
+            .unwrap();
+        let t2 = ing
+            .submit(
+                SubmitRequest::workflow(WorkflowKind::Router)
+                    .driver(eng.driver("r2", 1))
+                    .deadline(timeout),
+            )
+            .unwrap();
+        // Timeline-driven sync (wall-bounded): the Parked event is
+        // recorded under the scheduler lock, so once it is visible the
+        // request is parked and virtual time can advance safely.
+        let wait_parked = |t: &Ticket| {
+            for _ in 0..4000 {
+                if trace.timeline(t.request).iter().any(|e| e.kind == TraceKind::Parked) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            panic!("request never parked");
+        };
+        wait_parked(&t1); // r1 issued its scripted call at t=0 and parked
+        v.advance(Duration::from_secs(2)); // r1 future-wait
+        eng.cell(0).resolve(json!("a"), 1_500_000); // 1.5 s engine service
+        t1.wait(Duration::from_secs(10)).unwrap();
+        wait_parked(&t2); // freed slot admitted r2; it parked at t=2 s
+        v.advance(Duration::from_secs(3)); // r2 future-wait
+        eng.cell(1).resolve(json!("b"), 250_000);
+        t2.wait(Duration::from_secs(10)).unwrap();
+
+        let sec = |n: u64| Duration::from_secs(n).as_nanos() as u64;
+        let shape = vec![
+            TraceKind::Admitted,
+            TraceKind::Queued,
+            TraceKind::Scheduled,
+            TraceKind::Polling,
+            TraceKind::Parked,
+            TraceKind::Resumed,
+            TraceKind::Polling,
+            TraceKind::Done,
+        ];
+        let tl1 = trace.timeline(t1.request);
+        assert_eq!(tl1.iter().map(|e| e.kind).collect::<Vec<_>>(), shape);
+        assert_eq!(
+            tl1.iter().map(|e| e.clock_ns).collect::<Vec<_>>(),
+            vec![0, 0, 0, 0, 0, sec(2), sec(2), sec(2)],
+        );
+        let s1 = stage_durations(&tl1);
+        assert_eq!(s1.future_wait_ns, sec(2));
+        assert_eq!(s1.queue_wait_ns + s1.sched_delay_ns + s1.poll_ns, 0);
+        assert_eq!(s1.sum_ns(), t1.latency().unwrap().as_nanos() as u64);
+
+        let tl2 = trace.timeline(t2.request);
+        assert_eq!(tl2.iter().map(|e| e.kind).collect::<Vec<_>>(), shape, "same lifecycle");
+        assert_eq!(
+            tl2.iter().map(|e| e.clock_ns).collect::<Vec<_>>(),
+            vec![0, 0, sec(2), sec(2), sec(2), sec(5), sec(5), sec(5)],
+        );
+        let s2 = stage_durations(&tl2);
+        assert_eq!(s2.queue_wait_ns, sec(2), "r2 queued behind r1");
+        assert_eq!(s2.future_wait_ns, sec(3));
+        assert_eq!(s2.sum_ns(), sec(5));
+        assert_eq!(s2.sum_ns(), t2.latency().unwrap().as_nanos() as u64);
+        assert_eq!(trace.dropped(), 0);
+
+        // The same completions fed the per-stage histograms: each
+        // quantile lands in the log-spaced bucket holding the exact value
+        // (upper bound within a ×1.3 bucket width of it).
+        let m = ing.metrics(WorkflowKind::Router).unwrap();
+        let b = &m.breakdown;
+        assert_eq!(b.queue_wait.count, 2);
+        assert!(b.queue_wait.p95 >= 2.0 && b.queue_wait.p95 <= 2.0 * 1.3, "{}", b.queue_wait.p95);
+        assert!(
+            b.future_wait.p95 >= 3.0 && b.future_wait.p95 <= 3.0 * 1.3,
+            "{}",
+            b.future_wait.p95
+        );
+        assert!(
+            b.engine_service.p95 >= 1.5 && b.engine_service.p95 <= 1.5 * 1.3,
+            "{}",
+            b.engine_service.p95
+        );
+        assert!(b.poll_time.p99 <= 2e-6, "virtual poll time is zero: {}", b.poll_time.p99);
+        assert_eq!(m.trace_dropped, 0);
+        ing.stop();
+        d.shutdown();
+    }
+
+    /// Tracing off (`capacity` 0 → disabled sink): requests still serve,
+    /// timelines are just empty — the recorder is strictly an observer.
+    #[test]
+    fn disabled_trace_sink_serves_without_timelines() {
+        let d = fast_router();
+        let mut opts = SchedulerOpts::new(2, 8);
+        opts.trace = Some(TraceSink::disabled());
+        let ing =
+            Ingress::start_with_opts(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, opts);
+        let timeout = Duration::from_secs(20);
+        let t = ing.submit(req(WorkflowKind::Router, router_input(), timeout)).unwrap();
+        t.wait(timeout).unwrap();
+        assert!(ing.trace().timeline(t.request).is_empty());
+        assert!(!ing.trace().enabled());
+        let m = ing.metrics(WorkflowKind::Router).unwrap();
+        assert_eq!(m.trace_dropped, 0);
+        assert_eq!(m.breakdown.queue_wait.count, 1, "histograms fold regardless of tracing");
         ing.stop();
         d.shutdown();
     }

@@ -40,6 +40,7 @@
 //! | [`runtime`] | impl | PJRT loader/executor for the AOT artifacts |
 //! | [`vectorstore`] | impl | cosine top-k index (ChromaDB substitute) |
 //! | [`ingress`] | §6 | open-loop front door: admission + event-driven scheduler |
+//! | [`trace`] | §5 | per-request span timelines + the bounded flight recorder |
 //! | [`workflow`] | §6 | the three evaluation workflows as resumable drivers |
 //! | [`workload`] | §6 | arrival processes + synthetic corpora |
 //! | [`baselines`] | §6 | Ayo/CrewAI/AutoGen-like serving modes |
@@ -60,6 +61,7 @@ pub mod runtime;
 pub mod server;
 pub mod state;
 pub mod testkit;
+pub mod trace;
 pub mod transport;
 pub mod util;
 pub mod vectorstore;

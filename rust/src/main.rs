@@ -34,6 +34,12 @@
 //!               # the 10x noisy-neighbor profile at equal weights);
 //!               # --remote drives a live `nalar serve --listen` socket
 //!               # over HTTP instead of an in-process deployment
+//! nalar trace   --workflow router|financial|swe [--system nalar|...]
+//!               [--requests N] [--k N] [--config path.json] [--time-scale F]
+//!               # run N requests through the ingress front door and print
+//!               # span-timeline waterfalls for the k slowest (DESIGN.md
+//!               # §10): every lifecycle event with its offset, plus the
+//!               # per-stage latency decomposition
 //! ```
 
 use std::path::PathBuf;
@@ -83,9 +89,11 @@ fn main() -> nalar::Result<()> {
         Some("bench") => cmd_bench(&args),
         Some("serve") => cmd_serve(&args),
         Some("loadgen") => cmd_loadgen(&args),
+        Some("trace") => cmd_trace(&args),
         _ => {
             eprintln!(
-                "usage: nalar <run|info|bench|serve|loadgen> [--workflow financial|router|swe] \
+                "usage: nalar <run|info|bench|serve|loadgen|trace> \
+                 [--workflow financial|router|swe] \
                  [--system nalar|ayo|crew|autogen] [--rps N] [--secs N] [--config file.json] \
                  | bench [--quick] [--only fig9,fig10,table4,sec62] [--out DIR] [--check-only] \
                  | serve [--workflow ...] [--secs N] [--rps N] [--listen ADDR] \
@@ -93,7 +101,8 @@ fn main() -> nalar::Result<()> {
                  | loadgen [--workload router|financial|swe] [--rps LIST|START:END:STEP] \
                  [--systems csv] [--secs N] [--quick] [--hc-smoke] [--workers N] \
                  [--cancel-rate F] [--schedule csv] [--tenants noisy|name:share[:weight],...] \
-                 [--out DIR] [--check-only] [--remote HOST:PORT]"
+                 [--out DIR] [--check-only] [--remote HOST:PORT] \
+                 | trace [--workflow ...] [--requests N] [--k N] [--time-scale F]"
             );
             Ok(())
         }
@@ -348,6 +357,112 @@ fn serve_http(
     }
     println!("[serve] clean shutdown: 0 leaked connections");
     Ok(())
+}
+
+/// `nalar trace`: run a handful of requests through the ingress front
+/// door and print the span-timeline waterfall of the k slowest — the CLI
+/// view of the flight recorder behind `GET /v1/requests/{id}/trace`
+/// (DESIGN.md §10).
+fn cmd_trace(args: &Args) -> nalar::Result<()> {
+    let wf = parse_workflow(&args.str_or("workflow", "router"))?;
+    let system = parse_system(&args.str_or("system", "nalar"))?;
+    let mut cfg = load_config(args, wf)?;
+    if let Some(ts) = args.get("time-scale") {
+        cfg.time_scale = ts
+            .parse()
+            .map_err(|_| nalar::Error::Config(format!("bad --time-scale `{ts}`")))?;
+    }
+    let time_scale = cfg.time_scale;
+    let d = Deployment::launch_as(cfg, system)?;
+    let ingress = std::sync::Arc::new(Ingress::start(&d, &[wf]));
+    let n = args.usize_or("requests", 12).max(1);
+    let k = args.usize_or("k", 5).max(1);
+    let timeout = Duration::from_secs_f64(
+        (args.f64_or("timeout-paper-s", 30.0) * time_scale).max(0.001),
+    );
+    let mut rng = Rng::new(args.u64_or("seed", 7));
+    println!(
+        "tracing {n} `{}` request(s) on {} (time_scale {time_scale}, k = {k} slowest)",
+        wf.name(),
+        system.name()
+    );
+    let mut tickets = Vec::with_capacity(n);
+    for i in 0..n {
+        let input = input_for(wf, i as f64 / n as f64, 0, &mut rng);
+        tickets.push(ingress.submit(SubmitRequest::workflow(wf).input(input).deadline(timeout))?);
+    }
+    // settle everything first so the waterfalls describe finished requests
+    let mut rows: Vec<(usize, Duration, bool)> = Vec::with_capacity(n);
+    for (i, t) in tickets.iter().enumerate() {
+        let ok = t.wait(timeout + Duration::from_secs(5)).is_ok();
+        rows.push((i, t.latency().unwrap_or_default(), ok));
+    }
+    rows.sort_by(|a, b| b.1.cmp(&a.1));
+    let sink = ingress.trace();
+    if !sink.enabled() {
+        println!("tracing is disabled (ingress.trace.capacity = 0): no timelines to print");
+    }
+    for (rank, (i, latency, ok)) in rows.iter().take(k).enumerate() {
+        let t = &tickets[*i];
+        let events = sink.timeline(t.request);
+        println!(
+            "\n#{} request {}  latency {:.3}ms  {}",
+            rank + 1,
+            t.request.0,
+            latency.as_secs_f64() * 1e3,
+            if *ok { "ok" } else { "failed" }
+        );
+        if events.is_empty() {
+            println!("   (no timeline — flight recorder overwrote it or tracing is off)");
+            continue;
+        }
+        print_waterfall(&events);
+    }
+    let dropped = sink.dropped();
+    if dropped > 0 {
+        println!(
+            "\n(flight recorder overwrote {dropped} event(s); raise ingress.trace.capacity \
+             for complete timelines)"
+        );
+    }
+    ingress.stop();
+    d.shutdown();
+    Ok(())
+}
+
+/// Render one request's span timeline as an ASCII waterfall: every event
+/// with its offset from admission, a `#` bar spanning the gap to the next
+/// event, and the folded per-stage decomposition underneath.
+fn print_waterfall(events: &[nalar::trace::TraceEvent]) {
+    const COLS: f64 = 40.0;
+    let total_ns = events.last().map(|e| e.clock_ns).unwrap_or(0).max(1) as f64;
+    for (i, e) in events.iter().enumerate() {
+        let next_ns = events.get(i + 1).map(|n| n.clock_ns).unwrap_or(e.clock_ns);
+        let lead = (((e.clock_ns as f64 / total_ns) * COLS).round() as usize).min(COLS as usize);
+        // every non-final event gets at least one cell so zero-length
+        // gaps (virtual clocks, sub-granularity stages) stay visible
+        let span = ((((next_ns - e.clock_ns) as f64 / total_ns) * COLS).round() as usize)
+            .max(usize::from(i + 1 < events.len()))
+            .min(COLS as usize - lead);
+        println!(
+            "   {:>10.3}ms  {:<22} |{}{}{}|",
+            e.clock_ns as f64 / 1e6,
+            format!("{} ({})", e.kind.name(), e.detail),
+            " ".repeat(lead),
+            "#".repeat(span),
+            " ".repeat((COLS as usize).saturating_sub(lead + span)),
+        );
+    }
+    let s = nalar::trace::stage_durations(events);
+    println!(
+        "   stages: queue_wait {:.3}ms | sched_delay {:.3}ms | poll {:.3}ms | \
+         future_wait {:.3}ms | engine_service {:.3}ms",
+        s.queue_wait_ns as f64 / 1e6,
+        s.sched_delay_ns as f64 / 1e6,
+        s.poll_ns as f64 / 1e6,
+        s.future_wait_ns as f64 / 1e6,
+        s.engine_service_ns as f64 / 1e6
+    );
 }
 
 /// `nalar loadgen`: the open-loop saturation sweep through the ingress

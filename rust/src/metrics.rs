@@ -6,6 +6,7 @@
 //! `summary_scaled` converts the testbed's scaled milliseconds back into
 //! "paper-equivalent" seconds (see DESIGN.md §3 substitution table).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -126,6 +127,258 @@ pub fn shed_rate(shed: u64, offered: u64) -> f64 {
     }
 }
 
+/// Number of log-spaced buckets in a [`Histogram`].
+pub const HIST_BUCKETS: usize = 80;
+/// Lowest bucket upper bound, in seconds (1µs).
+pub const HIST_BASE: f64 = 1e-6;
+/// Bucket-to-bucket growth factor. `HIST_BASE * HIST_GROWTH^79 ≈ 1123 s`,
+/// so 80 buckets span 1µs .. ~19 minutes with ~30% relative resolution.
+pub const HIST_GROWTH: f64 = 1.3;
+
+/// A fixed-layout, lock-free latency histogram: [`HIST_BUCKETS`]
+/// log-spaced buckets (upper bound of bucket *i* = `HIST_BASE *
+/// HIST_GROWTH^i`; the last bucket also absorbs everything above it).
+/// `record` is one float log + one relaxed atomic increment — safe on the
+/// request completion path. Quantiles are read from a [`HistogramSnapshot`].
+#[derive(Debug)]
+pub struct Histogram {
+    counts: Vec<AtomicU64>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram { counts: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect() }
+    }
+
+    /// Index of the first bucket whose upper bound is >= `secs`.
+    fn bucket(secs: f64) -> usize {
+        if !(secs > HIST_BASE) {
+            return 0;
+        }
+        let idx = ((secs / HIST_BASE).ln() / HIST_GROWTH.ln()).ceil();
+        (idx as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Upper bound of bucket `i`, in seconds (the quantile estimate a
+    /// sample in that bucket reports — a conservative over-estimate).
+    pub fn bound(i: usize) -> f64 {
+        HIST_BASE * HIST_GROWTH.powi(i as i32)
+    }
+
+    pub fn record(&self, secs: f64) {
+        let secs = if secs.is_finite() && secs > 0.0 { secs } else { 0.0 };
+        self.counts[Self::bucket(secs)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_secs_f64());
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let counts: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let count = counts.iter().sum();
+        HistogramSnapshot { counts, count }
+    }
+}
+
+/// A point-in-time copy of a [`Histogram`]'s buckets. Snapshots from
+/// different tenants/nodes merge by bucket-wise addition — the layout is
+/// fixed, so merging is exact (no re-bucketing error).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub counts: Vec<u64>,
+    pub count: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        HistogramSnapshot { counts: vec![0; HIST_BUCKETS], count: 0 }
+    }
+}
+
+impl HistogramSnapshot {
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+    }
+
+    /// Quantile estimate: upper bound of the bucket holding the q-th
+    /// sample (0.0 when empty).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((self.count as f64) * q).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Histogram::bound(i);
+            }
+        }
+        Histogram::bound(HIST_BUCKETS - 1)
+    }
+
+    /// Reduce to the fixed p50/p95/p99 stat the telemetry plane carries.
+    pub fn stat(&self) -> StageStat {
+        StageStat {
+            p50: self.quantile(0.50),
+            p95: self.quantile(0.95),
+            p99: self.quantile(0.99),
+            count: self.count,
+        }
+    }
+}
+
+/// p50/p95/p99 + sample count for one latency component, in seconds.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct StageStat {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub count: u64,
+}
+
+impl StageStat {
+    pub fn scaled(&self, scale: f64) -> StageStat {
+        StageStat {
+            p50: self.p50 * scale,
+            p95: self.p95 * scale,
+            p99: self.p99 * scale,
+            count: self.count,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        crate::json!({
+            "p50": self.p50,
+            "p95": self.p95,
+            "p99": self.p99,
+            "count": self.count
+        })
+    }
+}
+
+/// The five-component request-latency decomposition (DESIGN.md §10):
+/// queue-wait, sched-delay, poll-time and future-wait partition the
+/// end-to-end latency; engine-service overlaps future-wait (the request
+/// is parked while an engine serves its calls) and rides alongside.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct StageBreakdown {
+    pub queue_wait: StageStat,
+    pub sched_delay: StageStat,
+    pub poll_time: StageStat,
+    pub future_wait: StageStat,
+    pub engine_service: StageStat,
+}
+
+/// The stable component order/naming used in reports and exposition.
+pub const STAGE_NAMES: [&str; 5] =
+    ["queue_wait", "sched_delay", "poll_time", "future_wait", "engine_service"];
+
+impl StageBreakdown {
+    pub fn components(&self) -> [(&'static str, &StageStat); 5] {
+        [
+            (STAGE_NAMES[0], &self.queue_wait),
+            (STAGE_NAMES[1], &self.sched_delay),
+            (STAGE_NAMES[2], &self.poll_time),
+            (STAGE_NAMES[3], &self.future_wait),
+            (STAGE_NAMES[4], &self.engine_service),
+        ]
+    }
+
+    pub fn scaled(&self, scale: f64) -> StageBreakdown {
+        StageBreakdown {
+            queue_wait: self.queue_wait.scaled(scale),
+            sched_delay: self.sched_delay.scaled(scale),
+            poll_time: self.poll_time.scaled(scale),
+            future_wait: self.future_wait.scaled(scale),
+            engine_service: self.engine_service.scaled(scale),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = crate::json!({});
+        for (name, stat) in self.components() {
+            v.insert(name, stat.to_json());
+        }
+        v
+    }
+}
+
+/// One (workflow, tenant) cell's live histograms — what completed
+/// requests fold their [`crate::trace::StageDurations`] into.
+#[derive(Debug, Default)]
+pub struct StageHistograms {
+    pub queue_wait: Histogram,
+    pub sched_delay: Histogram,
+    pub poll_time: Histogram,
+    pub future_wait: Histogram,
+    pub engine_service: Histogram,
+}
+
+impl StageHistograms {
+    pub fn new() -> StageHistograms {
+        StageHistograms::default()
+    }
+
+    /// Record one completed request's decomposition (durations in ns).
+    pub fn record_ns(&self, queue: u64, sched: u64, poll: u64, wait: u64, engine: u64) {
+        self.queue_wait.record(queue as f64 / 1e9);
+        self.sched_delay.record(sched as f64 / 1e9);
+        self.poll_time.record(poll as f64 / 1e9);
+        self.future_wait.record(wait as f64 / 1e9);
+        self.engine_service.record(engine as f64 / 1e9);
+    }
+
+    pub fn snapshots(&self) -> [HistogramSnapshot; 5] {
+        [
+            self.queue_wait.snapshot(),
+            self.sched_delay.snapshot(),
+            self.poll_time.snapshot(),
+            self.future_wait.snapshot(),
+            self.engine_service.snapshot(),
+        ]
+    }
+
+    pub fn breakdown(&self) -> StageBreakdown {
+        let [q, s, p, w, e] = self.snapshots();
+        StageBreakdown {
+            queue_wait: q.stat(),
+            sched_delay: s.stat(),
+            poll_time: p.stat(),
+            future_wait: w.stat(),
+            engine_service: e.stat(),
+        }
+    }
+}
+
+/// Merge per-tenant snapshot arrays into one aggregate breakdown.
+pub fn merge_breakdowns(parts: &[[HistogramSnapshot; 5]]) -> StageBreakdown {
+    let mut merged: [HistogramSnapshot; 5] = Default::default();
+    for part in parts {
+        for (m, p) in merged.iter_mut().zip(part.iter()) {
+            m.merge(p);
+        }
+    }
+    let [q, s, p, w, e] = merged;
+    StageBreakdown {
+        queue_wait: q.stat(),
+        sched_delay: s.stat(),
+        poll_time: p.stat(),
+        future_wait: w.stat(),
+        engine_service: e.stat(),
+    }
+}
+
 /// Per-instance serving counters pushed into the node store as telemetry.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct Counters {
@@ -200,6 +453,71 @@ mod tests {
     fn busy_fraction_capped() {
         let c = Counters { busy_time_us: 2_000_000, ..Default::default() };
         assert_eq!(c.busy_fraction(Duration::from_secs(1)), 1.0);
+    }
+
+    #[test]
+    fn histogram_buckets_are_monotonic_and_bounded() {
+        // every sample lands in a bucket whose bound is >= the sample
+        // and < GROWTH * sample (log-bucket relative-error contract)
+        for secs in [1e-7, 1e-6, 3.1e-5, 0.004, 0.25, 7.0, 900.0] {
+            let h = Histogram::new();
+            h.record(secs);
+            let s = h.snapshot();
+            assert_eq!(s.count, 1);
+            let est = s.quantile(0.5);
+            assert!(est >= secs * 0.999 || est >= HIST_BASE, "{secs} -> {est}");
+            if secs > HIST_BASE && secs < Histogram::bound(HIST_BUCKETS - 2) {
+                assert!(est <= secs * HIST_GROWTH * 1.001, "{secs} -> {est}");
+            }
+        }
+        // above-range samples clamp into the last bucket, never panic
+        let h = Histogram::new();
+        h.record(1e9);
+        assert_eq!(h.snapshot().quantile(0.99), Histogram::bound(HIST_BUCKETS - 1));
+    }
+
+    #[test]
+    fn histogram_quantiles_order_and_merge_exactly() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for i in 1..=50 {
+            a.record(i as f64 * 1e-3); // 1..50 ms
+            b.record(i as f64 * 1e-2); // 10..500 ms
+        }
+        let (sa, sb) = (a.snapshot(), b.snapshot());
+        assert!(sa.quantile(0.5) <= sa.quantile(0.95));
+        assert!(sa.quantile(0.95) <= sa.quantile(0.99));
+        let mut merged = sa.clone();
+        merged.merge(&sb);
+        assert_eq!(merged.count, 100);
+        // the merged median sits between the two sources' medians
+        assert!(merged.quantile(0.5) >= sa.quantile(0.5));
+        assert!(merged.quantile(0.5) <= sb.quantile(0.5));
+        let stat = merged.stat();
+        assert_eq!(stat.count, 100);
+        assert!(stat.p50 <= stat.p95 && stat.p95 <= stat.p99);
+    }
+
+    #[test]
+    fn stage_histograms_fold_and_expose_breakdown_json() {
+        let sh = StageHistograms::new();
+        sh.record_ns(2_000_000, 0, 1_000_000, 7_000_000, 6_500_000);
+        sh.record_ns(4_000_000, 0, 1_000_000, 9_000_000, 8_500_000);
+        let bd = sh.breakdown();
+        assert_eq!(bd.queue_wait.count, 2);
+        assert!(bd.queue_wait.p50 >= 0.002 && bd.queue_wait.p50 <= 0.002 * HIST_GROWTH);
+        assert!(bd.future_wait.p99 >= 0.009);
+        let v = bd.scaled(10.0).to_json();
+        for name in STAGE_NAMES {
+            let stat = v.get(name);
+            assert!(!stat.is_null(), "missing `{name}`");
+            for q in ["p50", "p95", "p99", "count"] {
+                assert!(!stat.get(q).is_null(), "missing `{name}.{q}`");
+            }
+        }
+        assert_eq!(v.get("queue_wait").get("count").as_u64(), Some(2), "scale keeps counts");
+        let agg = merge_breakdowns(&[sh.snapshots(), sh.snapshots()]);
+        assert_eq!(agg.poll_time.count, 4, "aggregate = bucket-wise sum");
     }
 
     #[test]

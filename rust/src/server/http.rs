@@ -16,7 +16,14 @@
 //! * `DELETE /v1/requests/{id}` is [`Ticket::cancel`] — `200` when the
 //!   cancel was delivered, `409` when the request already finished.
 //! * `GET /metrics` hand-serializes the per-tenant
-//!   [`IngressMetrics`](crate::coordinator::IngressMetrics) snapshots.
+//!   [`IngressMetrics`](crate::coordinator::IngressMetrics) snapshots;
+//!   `GET /metrics?format=prom` renders the same snapshots as
+//!   Prometheus-style text exposition ([`prom_exposition`]) for scrapers.
+//! * `GET /v1/requests/{id}/trace` returns the request's span timeline
+//!   from the flight recorder ([`crate::trace`]) plus its per-stage
+//!   decomposition — while the request runs, and after it finishes until
+//!   the terminal result is consumed (the same consumption semantics the
+//!   result registry has: polling the terminal result evicts the trace).
 //!
 //! Status codes and `Retry-After` come from the single wire-mapping
 //! authority [`Error::http_status`] / [`Error::retry_after`] — the HTTP
@@ -45,11 +52,14 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::config::HttpSettings;
+use crate::coordinator::IngressMetrics;
 use crate::error::{Error, Result};
 use crate::futures::Value;
+use crate::ids::RequestId;
 use crate::ingress::{Ingress, SubmitRequest, Ticket};
 use crate::json;
 use crate::server::Deployment;
+use crate::trace::stage_durations;
 use crate::workflow::WorkflowKind;
 
 /// Deadline when the client sends no `X-Nalar-Deadline-Ms`. Matches
@@ -190,6 +200,8 @@ struct Response {
     headers: Vec<(String, String)>,
     body: String,
     close: bool,
+    /// `application/json` everywhere except the Prometheus exposition.
+    content_type: &'static str,
 }
 
 fn reason(status: u16) -> &'static str {
@@ -214,7 +226,23 @@ fn reason(status: u16) -> &'static str {
 }
 
 fn json_response(status: u16, body: Value) -> Response {
-    Response { status, headers: Vec::new(), body: body.to_string(), close: false }
+    Response {
+        status,
+        headers: Vec::new(),
+        body: body.to_string(),
+        close: false,
+        content_type: "application/json",
+    }
+}
+
+fn text_response(status: u16, body: String) -> Response {
+    Response {
+        status,
+        headers: Vec::new(),
+        body,
+        close: false,
+        content_type: "text/plain; version=0.0.4",
+    }
 }
 
 fn error_response(status: u16, msg: &str, close: bool) -> Response {
@@ -238,9 +266,10 @@ fn error_to_response(e: &Error) -> Response {
 
 fn write_response(stream: &mut TcpStream, r: &Response) -> std::io::Result<()> {
     let mut head = format!(
-        "HTTP/1.1 {} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n",
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\n",
         r.status,
         reason(r.status),
+        r.content_type,
         r.body.len()
     );
     for (k, v) in &r.headers {
@@ -452,9 +481,15 @@ fn serve_conn(state: &State, mut stream: TcpStream) {
 // ---------------------------------------------------------------- routes
 
 fn route(state: &State, req: &Request) -> Response {
-    let path = req.path.as_str();
+    // Split the query string off the route path (`/metrics?format=prom`
+    // routes like `/metrics`); handlers that care parse `query`.
+    let (path, query) = match req.path.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (req.path.as_str(), ""),
+    };
     if path == "/metrics" {
         return match req.method.as_str() {
+            "GET" if has_query(query, "format", "prom") => prom_response(state),
             "GET" => metrics_response(state),
             _ => error_response(405, "use GET", false),
         };
@@ -470,6 +505,12 @@ fn route(state: &State, req: &Request) -> Response {
             _ => error_response(405, "use POST", false),
         };
     }
+    if let Some(id) = path.strip_prefix("/v1/requests/").and_then(|r| r.strip_suffix("/trace")) {
+        return match req.method.as_str() {
+            "GET" => trace_request(state, id),
+            _ => error_response(405, "use GET", false),
+        };
+    }
     if let Some(id) = path.strip_prefix("/v1/requests/") {
         return match req.method.as_str() {
             "GET" => poll_request(state, id),
@@ -478,6 +519,11 @@ fn route(state: &State, req: &Request) -> Response {
         };
     }
     error_response(404, &format!("no route for `{path}`"), false)
+}
+
+/// `key=value` membership in an `&`-separated query string.
+fn has_query(query: &str, key: &str, value: &str) -> bool {
+    query.split('&').any(|kv| kv.split_once('=') == Some((key, value)))
 }
 
 fn post_workflow(state: &State, kind: &str, req: &Request) -> Response {
@@ -560,9 +606,57 @@ fn poll_request(state: &State, id: &str) -> Response {
             let latency = ticket.latency();
             reg.remove(&id);
             drop(reg);
+            // Result consumption evicts the trace too (same lifetime as
+            // the registry entry): after this, `/trace` answers 404.
+            state.ingress.trace().forget(RequestId(id));
             finished_response(id, out, latency)
         }
     }
+}
+
+/// `GET /v1/requests/{id}/trace`: the request's span timeline from the
+/// flight recorder, plus the per-stage decomposition derived from it.
+/// Available while the request runs and until its terminal result is
+/// consumed (or the bounded ring overwrites it); 404 afterwards.
+fn trace_request(state: &State, id: &str) -> Response {
+    let id = match parse_id(id) {
+        Some(i) => i,
+        None => return error_response(400, "request id must be an integer", false),
+    };
+    let sink = state.ingress.trace();
+    let events = sink.timeline(RequestId(id));
+    if events.is_empty() {
+        let why = if sink.enabled() { "no trace for request" } else { "tracing is disabled" };
+        return error_response(404, &format!("{why} {id}"), false);
+    }
+    let stages = stage_durations(&events);
+    let events: Vec<Value> = events
+        .iter()
+        .map(|e| {
+            json!({
+                "seq": e.seq,
+                "t_ns": e.clock_ns,
+                "kind": e.kind.name(),
+                "detail": e.detail
+            })
+        })
+        .collect();
+    json_response(
+        200,
+        json!({
+            "request": id,
+            "events": events,
+            "dropped": sink.dropped(),
+            "stages": {
+                "queue_wait_ns": stages.queue_wait_ns,
+                "sched_delay_ns": stages.sched_delay_ns,
+                "poll_ns": stages.poll_ns,
+                "future_wait_ns": stages.future_wait_ns,
+                "engine_service_ns": stages.engine_service_ns,
+                "total_ns": stages.total_ns
+            }
+        }),
+    )
 }
 
 fn cancel_request(state: &State, id: &str) -> Response {
@@ -577,6 +671,10 @@ fn cancel_request(state: &State, id: &str) -> Response {
     };
     if ticket.cancel() {
         reg.remove(&id);
+        drop(reg);
+        // a delivered DELETE consumes the parked ticket; its trace
+        // follows the same lifetime as the registry entry
+        state.ingress.trace().forget(RequestId(id));
         json_response(200, json!({"request": id, "status": "cancelled"}))
     } else {
         // completion/expiry won the race; the result is still pollable
@@ -596,6 +694,142 @@ fn metrics_response(state: &State) -> Response {
             "ingress": snaps
         }),
     )
+}
+
+fn prom_response(state: &State) -> Response {
+    let snaps: Vec<IngressMetrics> =
+        state.kinds.iter().filter_map(|k| state.ingress.metrics(*k)).collect();
+    text_response(200, prom_exposition(&snaps))
+}
+
+/// Render ingress snapshots as Prometheus text exposition (the
+/// `GET /metrics?format=prom` body). Pure function so the format is unit
+/// testable without sockets. Counters carry `{workflow,tenant}` labels;
+/// stage-latency quantiles carry `{workflow,stage,quantile}` (in seconds,
+/// aggregated over tenants — the log-bucketed p50/p95/p99, not a real
+/// summary, hence `gauge`).
+pub fn prom_exposition(metrics: &[IngressMetrics]) -> String {
+    fn family<V: std::fmt::Display>(
+        out: &mut String,
+        name: &str,
+        kind: &str,
+        help: &str,
+        rows: &[(String, V)],
+    ) {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+        for (labels, v) in rows {
+            out.push_str(&format!("{name}{{{labels}}} {v}\n"));
+        }
+    }
+    let mut out = String::new();
+    let tenant_rows = |pick: &dyn Fn(&crate::coordinator::TenantMetrics) -> u64| {
+        metrics
+            .iter()
+            .flat_map(|m| {
+                m.tenants.iter().map(move |t| {
+                    (format!("workflow=\"{}\",tenant=\"{}\"", m.workflow, t.tenant), pick(t))
+                })
+            })
+            .collect::<Vec<_>>()
+    };
+    let per_workflow = |pick: &dyn Fn(&IngressMetrics) -> u64| {
+        metrics
+            .iter()
+            .map(|m| (format!("workflow=\"{}\"", m.workflow), pick(m)))
+            .collect::<Vec<_>>()
+    };
+    family(
+        &mut out,
+        "nalar_ingress_accepted_total",
+        "counter",
+        "requests past admission",
+        &tenant_rows(&|t| t.accepted),
+    );
+    family(
+        &mut out,
+        "nalar_ingress_shed_total",
+        "counter",
+        "requests shed at admission",
+        &tenant_rows(&|t| t.shed),
+    );
+    family(
+        &mut out,
+        "nalar_ingress_completed_total",
+        "counter",
+        "requests finished ok",
+        &tenant_rows(&|t| t.completed),
+    );
+    family(
+        &mut out,
+        "nalar_ingress_failed_total",
+        "counter",
+        "requests failed after start",
+        &tenant_rows(&|t| t.failed),
+    );
+    family(
+        &mut out,
+        "nalar_ingress_cancelled_total",
+        "counter",
+        "requests withdrawn by their caller",
+        &tenant_rows(&|t| t.cancelled),
+    );
+    family(
+        &mut out,
+        "nalar_ingress_expired_in_queue_total",
+        "counter",
+        "deadline expiries before start",
+        &tenant_rows(&|t| t.expired_in_queue),
+    );
+    family(
+        &mut out,
+        "nalar_trace_dropped_total",
+        "counter",
+        "trace events overwritten by ring overflow",
+        &per_workflow(&|m| m.trace_dropped),
+    );
+    family(
+        &mut out,
+        "nalar_ingress_queue_depth",
+        "gauge",
+        "requests waiting in the admission queue",
+        &per_workflow(&|m| m.depth as u64),
+    );
+    family(
+        &mut out,
+        "nalar_ingress_in_flight",
+        "gauge",
+        "started-but-unfinished requests",
+        &per_workflow(&|m| m.in_flight as u64),
+    );
+    let mut stage_rows: Vec<(String, f64)> = Vec::new();
+    let mut stage_counts: Vec<(String, u64)> = Vec::new();
+    for m in metrics {
+        for (stage, stat) in m.breakdown.components() {
+            for (q, v) in [("0.5", stat.p50), ("0.95", stat.p95), ("0.99", stat.p99)] {
+                stage_rows.push((
+                    format!("workflow=\"{}\",stage=\"{stage}\",quantile=\"{q}\"", m.workflow),
+                    v,
+                ));
+            }
+            stage_counts
+                .push((format!("workflow=\"{}\",stage=\"{stage}\"", m.workflow), stat.count));
+        }
+    }
+    family(
+        &mut out,
+        "nalar_stage_latency_seconds",
+        "gauge",
+        "per-stage request-latency quantiles (log-bucketed)",
+        &stage_rows,
+    );
+    family(
+        &mut out,
+        "nalar_stage_latency_count",
+        "counter",
+        "completions folded per stage",
+        &stage_counts,
+    );
+    out
 }
 
 fn register(state: &State, ticket: Ticket) {
@@ -759,6 +993,36 @@ mod tests {
 
     fn parse(buf: &[u8]) -> Parsed {
         parse_request(buf, HDR, BODY)
+    }
+
+    #[test]
+    fn prom_exposition_is_well_formed() {
+        let m = IngressMetrics {
+            workflow: "router".into(),
+            depth: 3,
+            accepted: 10,
+            trace_dropped: 2,
+            tenants: vec![crate::coordinator::TenantMetrics {
+                tenant: "default".into(),
+                accepted: 10,
+                completed: 9,
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        let text = prom_exposition(&[m]);
+        for line in text.lines() {
+            assert!(line.starts_with("# ") || line.starts_with("nalar_"), "bad line: {line}");
+        }
+        assert!(text
+            .contains("nalar_ingress_accepted_total{workflow=\"router\",tenant=\"default\"} 10\n"));
+        assert!(text.contains("nalar_ingress_queue_depth{workflow=\"router\"} 3\n"));
+        assert!(text.contains("nalar_trace_dropped_total{workflow=\"router\"} 2\n"));
+        assert!(text.contains("stage=\"queue_wait\",quantile=\"0.95\""));
+        let svc = "nalar_stage_latency_count{workflow=\"router\",stage=\"engine_service\"} 0\n";
+        assert!(text.contains(svc));
+        // one TYPE header per family, each declared exactly once
+        assert_eq!(text.lines().filter(|l| l.starts_with("# TYPE ")).count(), 11);
     }
 
     #[test]

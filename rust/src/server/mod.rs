@@ -29,6 +29,7 @@ use crate::metrics::LatencyRecorder;
 use crate::nodestore::StoreDirectory;
 use crate::runtime::PjrtModel;
 use crate::state::kvcache::{KvCacheManager, KvPolicy};
+use crate::trace::SharedSink;
 use crate::transport::Bus;
 use crate::vectorstore::VectorStore;
 
@@ -58,6 +59,12 @@ struct Inner {
     global_stop: Arc<AtomicBool>,
     global_join: Mutex<Option<std::thread::JoinHandle<()>>>,
     pub latency: LatencyRecorder,
+    /// Late-bound flight-recorder slot: component controllers hold a
+    /// clone from spawn time, and the ingress scheduler installs the
+    /// actual recorder when it starts — so engine dispatch/complete
+    /// events land on the same per-request timelines the scheduler
+    /// writes (a disabled no-op sink until then).
+    trace: SharedSink,
 }
 
 impl Deployment {
@@ -97,6 +104,7 @@ impl Deployment {
             global_stop: Arc::new(AtomicBool::new(false)),
             global_join: Mutex::new(None),
             latency: LatencyRecorder::new(),
+            trace: SharedSink::new(),
         });
 
         let d = Deployment { inner };
@@ -212,6 +220,7 @@ impl Deployment {
             self.inner.router.clone(),
             &self.inner.loads,
             self.inner.graph.clone(),
+            self.inner.trace.clone(),
         );
         self.inner.instances.lock().unwrap().push(handle);
         Ok(id)
@@ -281,6 +290,12 @@ impl Deployment {
     }
     pub fn loads(&self) -> &LoadMap {
         &self.inner.loads
+    }
+    /// The shared flight-recorder slot ([`SharedSink`]): the ingress
+    /// scheduler installs its recorder here at start, component
+    /// controllers read through it per event.
+    pub fn trace_slot(&self) -> &SharedSink {
+        &self.inner.trace
     }
 
     /// Snapshot of the deployment-lifetime latency recorder in

@@ -1,0 +1,568 @@
+//! End-to-end request tracing: span timelines + a bounded flight recorder.
+//!
+//! The counters the front door has published since PR 2 answer *how many*
+//! requests were admitted / shed / completed; this module answers *where a
+//! single request spent its time*. Every lifecycle transition (admitted →
+//! queued → scheduled → polling → parked-on-future → resumed → terminal)
+//! is recorded as a [`TraceEvent`] into a [`FlightRecorder`]: a bounded,
+//! lock-sharded ring of recent events, sharded by `RequestId` exactly like
+//! `futures::table::FutureTable` so two requests on different shards never
+//! contend. The recorder is *behind the wire*: `GET /v1/requests/{id}/trace`
+//! serves a request's timeline and `nalar trace` prints a waterfall of the
+//! slowest requests (DESIGN.md §10).
+//!
+//! Hot-path discipline: recording one event is one shard-mutex acquisition
+//! and one `VecDeque` write into pre-allocated storage — no allocation, no
+//! global lock, no unbounded growth. When a shard's ring is full the oldest
+//! event is overwritten and a dropped-events counter increments, so the
+//! recorder degrades by forgetting history, never by growing.
+//!
+//! [`Ring`] is the generic bounded buffer underneath; the global
+//! controller's loop-timing log reuses it (`coordinator::global`).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use crate::ids::RequestId;
+use crate::util::clock::Clock;
+
+/// Shard count for the flight recorder (same constant and keying rule as
+/// `FutureTable`: shard = `request.0 % SHARDS`). All events of one request
+/// land in one shard, so a timeline read locks exactly one mutex.
+pub const SHARDS: usize = 32;
+
+/// One request-lifecycle transition. `detail` is kind-dependent: the
+/// tenant index for `Queued`, the first awaited `FutureId` for `Parked`,
+/// the engine-call tag for `EngineDispatch`/`EngineComplete` (with the
+/// busy-time in microseconds on complete), and 0 elsewhere.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub request: RequestId,
+    /// Shard-monotonic sequence number: strictly increasing for the
+    /// events of one request (they share a shard), *not* contiguous —
+    /// other requests on the same shard interleave the counter.
+    pub seq: u64,
+    /// Nanoseconds since the recorder's epoch, read from the injected
+    /// [`Clock`] — a virtual clock makes whole timelines deterministic.
+    pub clock_ns: u64,
+    pub kind: TraceKind,
+    pub detail: u64,
+}
+
+/// The event taxonomy (DESIGN.md §10). One request's timeline is
+/// `Admitted, Queued, Scheduled, (Polling, Parked, Resumed)*, Polling,
+/// terminal`, with `EngineDispatch`/`EngineComplete` overlaying the
+/// parked spans from the component-controller side.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Passed admission control; a `RequestId` exists from here on.
+    Admitted,
+    /// Entered its tenant's sub-queue (`detail` = tenant index).
+    Queued,
+    /// Popped from the queue by a scheduler worker (queue-wait ends).
+    Scheduled,
+    /// A driver poll began (`detail` = the driver's current stage).
+    Polling,
+    /// The poll returned `Pending`; the continuation parked
+    /// (`detail` = the first awaited future id).
+    Parked,
+    /// A waker (or sweep nudge) moved the continuation back to ready.
+    Resumed,
+    /// An engine/tool call for this request started service
+    /// (`detail` = the component-controller call tag).
+    EngineDispatch,
+    /// The call finished (`detail` = busy time in microseconds).
+    EngineComplete,
+    /// Terminal: completed successfully (`detail` = latency in ns).
+    Done,
+    /// Terminal: the driver returned an error (`detail` = latency ns).
+    Failed,
+    /// Terminal: shed after admission (ingress shutdown drain).
+    Shed,
+    /// Terminal: deadline passed (queued or parked).
+    Expired,
+    /// Terminal: withdrawn via `Ticket::cancel`.
+    Cancelled,
+}
+
+impl TraceKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceKind::Admitted => "admitted",
+            TraceKind::Queued => "queued",
+            TraceKind::Scheduled => "scheduled",
+            TraceKind::Polling => "polling",
+            TraceKind::Parked => "parked",
+            TraceKind::Resumed => "resumed",
+            TraceKind::EngineDispatch => "engine_dispatch",
+            TraceKind::EngineComplete => "engine_complete",
+            TraceKind::Done => "done",
+            TraceKind::Failed => "failed",
+            TraceKind::Shed => "shed",
+            TraceKind::Expired => "expired",
+            TraceKind::Cancelled => "cancelled",
+        }
+    }
+
+    /// Terminal kinds end a timeline; at most one per request
+    /// (exactly-one-terminal-outcome, `ingress::TicketCell`).
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            TraceKind::Done
+                | TraceKind::Failed
+                | TraceKind::Shed
+                | TraceKind::Expired
+                | TraceKind::Cancelled
+        )
+    }
+}
+
+/// A fixed-capacity overwrite-oldest buffer. `push` beyond capacity
+/// evicts the oldest entry and counts it as dropped; storage is
+/// pre-allocated at construction so a push never allocates.
+#[derive(Debug)]
+pub struct Ring<T> {
+    cap: usize,
+    buf: VecDeque<T>,
+    written: u64,
+    dropped: u64,
+}
+
+impl<T> Ring<T> {
+    pub fn new(cap: usize) -> Ring<T> {
+        let cap = cap.max(1);
+        Ring { cap, buf: VecDeque::with_capacity(cap), written: 0, dropped: 0 }
+    }
+
+    /// Append, evicting the oldest entry if full. Returns the value's
+    /// all-time write index (0-based, monotonic).
+    pub fn push(&mut self, v: T) -> u64 {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(v);
+        let seq = self.written;
+        self.written += 1;
+        seq
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Entries evicted by overflow (selective `retain` removals are a
+    /// deliberate forget, not data loss, and are not counted here).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// All-time number of pushes.
+    pub fn written(&self) -> u64 {
+        self.written
+    }
+
+    /// Oldest-to-newest iteration over what is still buffered.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.buf.iter()
+    }
+
+    /// Keep only entries matching the predicate (used to evict a
+    /// consumed request's events without touching its shard-mates).
+    pub fn retain(&mut self, f: impl FnMut(&T) -> bool) {
+        self.buf.retain(f);
+    }
+}
+
+/// The bounded per-node event store. `capacity` is split evenly across
+/// [`SHARDS`] rings (per-shard capacity = `ceil(capacity / SHARDS)`, min
+/// 1), so total retention is at least the configured capacity and a hot
+/// shard cannot starve the others' history.
+pub struct FlightRecorder {
+    clock: Clock,
+    epoch: Instant,
+    shards: Vec<Mutex<Ring<TraceEvent>>>,
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize, clock: Clock) -> FlightRecorder {
+        let per_shard = (capacity.max(1) + SHARDS - 1) / SHARDS;
+        let epoch = clock.now();
+        FlightRecorder {
+            clock,
+            epoch,
+            shards: (0..SHARDS).map(|_| Mutex::new(Ring::new(per_shard))).collect(),
+        }
+    }
+
+    fn shard(&self, request: RequestId) -> &Mutex<Ring<TraceEvent>> {
+        &self.shards[(request.0 as usize) % SHARDS]
+    }
+
+    /// Record one transition. One shard lock + one ring write; the
+    /// timestamp is read from the injected clock before locking.
+    pub fn record(&self, request: RequestId, kind: TraceKind, detail: u64) {
+        let clock_ns = self.clock.now().saturating_duration_since(self.epoch).as_nanos() as u64;
+        let mut ring = self.shard(request).lock().unwrap();
+        let seq = ring.written();
+        ring.push(TraceEvent { request, seq, clock_ns, kind, detail });
+    }
+
+    /// The still-buffered events of one request, oldest first.
+    pub fn timeline(&self, request: RequestId) -> Vec<TraceEvent> {
+        let ring = self.shard(request).lock().unwrap();
+        ring.iter().filter(|e| e.request == request).copied().collect()
+    }
+
+    /// Evict one request's events (trace consumed over the wire — same
+    /// lifecycle as the PR-6 ticket registry's consume-on-read).
+    pub fn forget(&self, request: RequestId) {
+        let mut ring = self.shard(request).lock().unwrap();
+        ring.retain(|e| e.request != request);
+    }
+
+    /// Total events overwritten by ring overflow across all shards.
+    pub fn dropped(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap().dropped()).sum()
+    }
+
+    /// Total events ever recorded across all shards.
+    pub fn written(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap().written()).sum()
+    }
+
+    /// Total retained capacity (per-shard capacity × shard count).
+    pub fn capacity(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().capacity()).sum()
+    }
+
+    /// Request ids with at least one buffered event (the `nalar trace`
+    /// waterfall scans this; not a hot-path operation).
+    pub fn requests(&self) -> Vec<RequestId> {
+        let mut ids: Vec<RequestId> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.lock().unwrap().iter().map(|e| e.request).collect::<Vec<_>>())
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+}
+
+/// The handle threaded through `SchedulerOpts` into every transition
+/// site. `disabled()` makes every call a no-op (a `None` check, no lock),
+/// so tracing can be configured off with zero hot-path cost.
+#[derive(Clone, Default)]
+pub struct TraceSink(Option<Arc<FlightRecorder>>);
+
+impl TraceSink {
+    /// A sink that records nothing (the `trace.capacity = 0` setting).
+    pub fn disabled() -> TraceSink {
+        TraceSink(None)
+    }
+
+    /// A sink backed by a fresh recorder of `capacity` events total.
+    /// `capacity == 0` means disabled.
+    pub fn recording(capacity: usize, clock: Clock) -> TraceSink {
+        if capacity == 0 {
+            TraceSink(None)
+        } else {
+            TraceSink(Some(Arc::new(FlightRecorder::new(capacity, clock))))
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    pub fn record(&self, request: RequestId, kind: TraceKind, detail: u64) {
+        if let Some(r) = &self.0 {
+            r.record(request, kind, detail);
+        }
+    }
+
+    pub fn timeline(&self, request: RequestId) -> Vec<TraceEvent> {
+        match &self.0 {
+            Some(r) => r.timeline(request),
+            None => Vec::new(),
+        }
+    }
+
+    pub fn forget(&self, request: RequestId) {
+        if let Some(r) = &self.0 {
+            r.forget(request);
+        }
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.0.as_ref().map_or(0, |r| r.dropped())
+    }
+
+    pub fn recorder(&self) -> Option<&Arc<FlightRecorder>> {
+        self.0.as_ref()
+    }
+}
+
+/// A late-installable sink slot. Component controllers are spawned when
+/// the deployment launches — before any `Ingress` (which owns the
+/// recorder) exists — so they hold a `SharedSink` whose inner sink the
+/// ingress installs at start. Reads take the `RwLock` read path only.
+#[derive(Clone, Default)]
+pub struct SharedSink(Arc<RwLock<TraceSink>>);
+
+impl SharedSink {
+    pub fn new() -> SharedSink {
+        SharedSink::default()
+    }
+
+    /// Point every holder of this slot at `sink` (idempotent; a second
+    /// ingress on the same deployment takes over the slot).
+    pub fn install(&self, sink: TraceSink) {
+        *self.0.write().unwrap() = sink;
+    }
+
+    pub fn record(&self, request: RequestId, kind: TraceKind, detail: u64) {
+        self.0.read().unwrap().record(request, kind, detail);
+    }
+
+    pub fn get(&self) -> TraceSink {
+        self.0.read().unwrap().clone()
+    }
+}
+
+/// Per-component wall-time decomposition of one timeline, in
+/// nanoseconds. `queue_wait + sched_delay + poll + future_wait` covers
+/// admission → terminal up to clock granularity; `engine_service`
+/// overlaps `future_wait` (the request is parked while an engine serves
+/// its call) and is reported alongside, not summed.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct StageDurations {
+    pub queue_wait_ns: u64,
+    pub sched_delay_ns: u64,
+    pub poll_ns: u64,
+    pub future_wait_ns: u64,
+    pub engine_service_ns: u64,
+    /// First event → terminal event (0 if the timeline is still open).
+    pub total_ns: u64,
+}
+
+impl StageDurations {
+    /// The four additive components (excludes the overlapping
+    /// `engine_service`).
+    pub fn sum_ns(&self) -> u64 {
+        self.queue_wait_ns + self.sched_delay_ns + self.poll_ns + self.future_wait_ns
+    }
+}
+
+/// Fold a timeline into its per-stage decomposition. Walks the
+/// state-entering events in order, attributing each gap to the state it
+/// was spent in; `EngineDispatch`/`EngineComplete` pairs (matched by
+/// `detail` tag) accumulate `engine_service` as an overlay.
+pub fn stage_durations(events: &[TraceEvent]) -> StageDurations {
+    let mut out = StageDurations::default();
+    let mut prev: Option<(TraceKind, u64)> = None;
+    let mut dispatched: Vec<(u64, u64)> = Vec::new(); // (tag, dispatch ns)
+    let mut first_ns: Option<u64> = None;
+    for e in events {
+        match e.kind {
+            TraceKind::EngineDispatch => {
+                dispatched.push((e.detail, e.clock_ns));
+                continue; // overlay: not a scheduler state transition
+            }
+            TraceKind::EngineComplete => {
+                if let Some(pos) = dispatched.iter().position(|(tag, _)| *tag == e.detail) {
+                    let (_, at) = dispatched.swap_remove(pos);
+                    out.engine_service_ns += e.clock_ns.saturating_sub(at);
+                }
+                continue;
+            }
+            _ => {}
+        }
+        first_ns.get_or_insert(e.clock_ns);
+        if let Some((kind, at)) = prev {
+            let gap = e.clock_ns.saturating_sub(at);
+            match kind {
+                // Admitted → Queued is the same lock acquisition; the
+                // gap (if any) counts as queue wait.
+                TraceKind::Admitted | TraceKind::Queued => out.queue_wait_ns += gap,
+                // Scheduled → first poll, and Resumed → re-poll: time
+                // spent runnable but waiting for a worker.
+                TraceKind::Scheduled | TraceKind::Resumed => out.sched_delay_ns += gap,
+                TraceKind::Polling => out.poll_ns += gap,
+                TraceKind::Parked => out.future_wait_ns += gap,
+                _ => {}
+            }
+        }
+        if e.kind.is_terminal() {
+            if let Some(first) = first_ns {
+                out.total_ns = e.clock_ns.saturating_sub(first);
+            }
+            prev = None;
+        } else {
+            prev = Some((e.kind, e.clock_ns));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let mut r: Ring<u32> = Ring::new(4);
+        for i in 0..6u32 {
+            let seq = r.push(i);
+            assert_eq!(seq, i as u64, "push returns the all-time write index");
+        }
+        assert_eq!(r.len(), 4, "bounded at capacity");
+        assert_eq!(r.capacity(), 4);
+        assert_eq!(r.dropped(), 2, "two evictions counted");
+        assert_eq!(r.written(), 6);
+        let kept: Vec<u32> = r.iter().copied().collect();
+        assert_eq!(kept, vec![2, 3, 4, 5], "oldest entries were the ones evicted");
+    }
+
+    #[test]
+    fn ring_retain_is_not_a_drop() {
+        let mut r: Ring<u32> = Ring::new(8);
+        for i in 0..5u32 {
+            r.push(i);
+        }
+        r.retain(|v| v % 2 == 0);
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 0, "selective forget is not overflow loss");
+    }
+
+    #[test]
+    fn recorder_bounds_per_shard_and_counts_drops() {
+        let (clock, _v) = Clock::manual();
+        // capacity 32 over 32 shards = exactly 1 event retained per shard
+        let rec = FlightRecorder::new(32, clock);
+        let rid = RequestId(7);
+        rec.record(rid, TraceKind::Admitted, 0);
+        rec.record(rid, TraceKind::Queued, 0);
+        rec.record(rid, TraceKind::Done, 0);
+        let tl = rec.timeline(rid);
+        assert_eq!(tl.len(), 1, "ring kept only the newest event");
+        assert_eq!(tl[0].kind, TraceKind::Done);
+        assert_eq!(rec.dropped(), 2, "both evictions counted");
+        assert_eq!(rec.written(), 3);
+    }
+
+    #[test]
+    fn recorder_timelines_are_per_request_and_virtual_clock_stamped() {
+        let (clock, v) = Clock::manual();
+        let rec = FlightRecorder::new(1024, clock);
+        let a = RequestId(1);
+        let b = RequestId(1 + SHARDS as u64); // same shard as `a` on purpose
+        rec.record(a, TraceKind::Admitted, 0);
+        v.advance(Duration::from_millis(5));
+        rec.record(b, TraceKind::Admitted, 0);
+        v.advance(Duration::from_millis(5));
+        rec.record(a, TraceKind::Done, 0);
+        let tl = rec.timeline(a);
+        assert_eq!(tl.len(), 2, "shard-mate `b` is filtered out");
+        assert_eq!(tl[0].kind, TraceKind::Admitted);
+        assert_eq!(tl[0].clock_ns, 0);
+        assert_eq!(tl[1].kind, TraceKind::Done);
+        assert_eq!(tl[1].clock_ns, 10_000_000, "virtual clock stamps exactly");
+        assert!(tl[0].seq < tl[1].seq, "seq orders a request's events");
+        rec.forget(a);
+        assert!(rec.timeline(a).is_empty());
+        assert_eq!(rec.timeline(b).len(), 1, "forget is per-request, not per-shard");
+        assert_eq!(rec.dropped(), 0);
+    }
+
+    #[test]
+    fn disabled_sink_is_a_no_op() {
+        let sink = TraceSink::disabled();
+        assert!(!sink.enabled());
+        sink.record(RequestId(1), TraceKind::Admitted, 0);
+        assert!(sink.timeline(RequestId(1)).is_empty());
+        assert_eq!(sink.dropped(), 0);
+        let zero = TraceSink::recording(0, Clock::wall());
+        assert!(!zero.enabled(), "capacity 0 means disabled");
+    }
+
+    #[test]
+    fn shared_sink_installs_late() {
+        let shared = SharedSink::new();
+        shared.record(RequestId(3), TraceKind::EngineDispatch, 9); // pre-install: dropped
+        let (clock, _v) = Clock::manual();
+        let sink = TraceSink::recording(256, clock);
+        shared.install(sink.clone());
+        shared.record(RequestId(3), TraceKind::EngineDispatch, 9);
+        assert_eq!(sink.timeline(RequestId(3)).len(), 1, "post-install events land");
+    }
+
+    #[test]
+    fn stage_durations_decompose_a_timeline() {
+        let r = RequestId(0);
+        let ev = |seq: u64, ms: u64, kind: TraceKind, detail: u64| TraceEvent {
+            request: r,
+            seq,
+            clock_ns: ms * 1_000_000,
+            kind,
+            detail,
+        };
+        let tl = vec![
+            ev(0, 0, TraceKind::Admitted, 0),
+            ev(1, 0, TraceKind::Queued, 0),
+            ev(2, 4, TraceKind::Scheduled, 0),  // queue_wait 4ms
+            ev(3, 4, TraceKind::Polling, 0),    // sched_delay 0
+            ev(4, 6, TraceKind::Parked, 11),    // poll 2ms
+            ev(5, 6, TraceKind::EngineDispatch, 1),
+            ev(6, 14, TraceKind::EngineComplete, 1), // engine 8ms (overlay)
+            ev(7, 16, TraceKind::Resumed, 0),   // future_wait 10ms
+            ev(8, 17, TraceKind::Polling, 1),   // sched_delay 1ms
+            ev(9, 18, TraceKind::Done, 0),      // poll 1ms
+        ];
+        let s = stage_durations(&tl);
+        assert_eq!(s.queue_wait_ns, 4_000_000);
+        assert_eq!(s.sched_delay_ns, 1_000_000);
+        assert_eq!(s.poll_ns, 3_000_000);
+        assert_eq!(s.future_wait_ns, 10_000_000);
+        assert_eq!(s.engine_service_ns, 8_000_000);
+        assert_eq!(s.total_ns, 18_000_000);
+        assert_eq!(s.sum_ns(), s.total_ns, "additive components cover the timeline");
+    }
+
+    #[test]
+    fn terminal_kinds_are_exactly_the_five_outcomes() {
+        for k in [
+            TraceKind::Done,
+            TraceKind::Failed,
+            TraceKind::Shed,
+            TraceKind::Expired,
+            TraceKind::Cancelled,
+        ] {
+            assert!(k.is_terminal(), "{}", k.name());
+        }
+        for k in [
+            TraceKind::Admitted,
+            TraceKind::Queued,
+            TraceKind::Scheduled,
+            TraceKind::Polling,
+            TraceKind::Parked,
+            TraceKind::Resumed,
+            TraceKind::EngineDispatch,
+            TraceKind::EngineComplete,
+        ] {
+            assert!(!k.is_terminal(), "{}", k.name());
+        }
+    }
+}

@@ -238,6 +238,85 @@ fn wire_statuses_map_sheds_deadlines_and_bad_requests() {
     teardown(d, ing, srv);
 }
 
+#[test]
+fn trace_endpoint_tracks_the_request_lifetime_and_prom_exposes() {
+    // One slow worker so the parked request is observably running when
+    // the first trace GET lands.
+    let (d, ing, srv) = serve(0.1, AdmissionPolicy::Unbounded, 1, 1);
+    let mut c = HttpClient::new(srv.addr().to_string());
+
+    let id = park(&mut c, "120000");
+
+    // Running: the timeline already holds the admission events (recorded
+    // before the 202 was written), plus the stage decomposition so far.
+    let live = c.request("GET", &format!("/v1/requests/{id}/trace"), &[], "").unwrap();
+    assert_eq!(live.status, 200, "a running request has a trace: {}", live.body);
+    let lv = live.json().unwrap();
+    assert_eq!(lv.get("request").as_u64(), Some(id));
+    let kinds: Vec<String> = lv
+        .get("events")
+        .as_arr()
+        .expect("events array")
+        .iter()
+        .map(|e| e.get("kind").as_str().unwrap().to_string())
+        .collect();
+    assert!(kinds.first().is_some_and(|k| k == "admitted"), "{kinds:?}");
+    assert!(kinds.contains(&"queued".to_string()), "{kinds:?}");
+    assert!(lv.get("stages").get("total_ns").as_u64().is_some());
+
+    // Terminal but unconsumed: the trace persists and ends in `done`.
+    settle("request completes server-side", || {
+        ing.metrics(WorkflowKind::Router).unwrap().completed >= 1
+    });
+    let done = c.request("GET", &format!("/v1/requests/{id}/trace"), &[], "").unwrap();
+    assert_eq!(done.status, 200, "{}", done.body);
+    let dv = done.json().unwrap();
+    let last = dv.get("events").as_arr().unwrap().last().cloned().expect("events");
+    assert_eq!(last.get("kind").as_str(), Some("done"), "terminal event recorded");
+    let stages = dv.get("stages");
+    let parts = stages.get("queue_wait_ns").as_u64().unwrap()
+        + stages.get("sched_delay_ns").as_u64().unwrap()
+        + stages.get("poll_ns").as_u64().unwrap()
+        + stages.get("future_wait_ns").as_u64().unwrap();
+    assert_eq!(
+        Some(parts),
+        stages.get("total_ns").as_u64(),
+        "additive stages partition the timeline"
+    );
+
+    // Consuming the result evicts the trace with the registry entry.
+    assert_eq!(poll_until_terminal(&mut c, id).status, 200);
+    let gone = c.request("GET", &format!("/v1/requests/{id}/trace"), &[], "").unwrap();
+    assert_eq!(gone.status, 404, "result consumption evicts the trace");
+    assert_eq!(
+        c.request("GET", "/v1/requests/zzz/trace", &[], "").unwrap().status,
+        400,
+        "non-integer ids are client errors"
+    );
+
+    // The Prometheus rendering of the same counters, behind ?format=prom.
+    let prom = c.request("GET", "/metrics?format=prom", &[], "").unwrap();
+    assert_eq!(prom.status, 200);
+    assert!(
+        prom.header("content-type").is_some_and(|ct| ct.starts_with("text/plain")),
+        "prom exposition is text, not JSON"
+    );
+    for line in prom.body.lines() {
+        assert!(line.starts_with("# ") || line.starts_with("nalar_"), "bad line: {line}");
+    }
+    assert!(
+        prom.body
+            .contains("nalar_ingress_completed_total{workflow=\"router\",tenant=\"default\"} 1"),
+        "{}",
+        prom.body
+    );
+    assert!(prom.body.contains("nalar_stage_latency_seconds{workflow=\"router\""));
+    // the JSON document still answers on the bare path
+    assert_eq!(c.request("GET", "/metrics", &[], "").unwrap().status, 200);
+
+    teardown(d, ing, srv);
+}
+
 // --------------------------------------------------------- raw sockets
 
 fn find(hay: &[u8], needle: &[u8]) -> Option<usize> {

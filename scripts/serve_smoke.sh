@@ -4,9 +4,11 @@
 # Boots `nalar serve --listen 127.0.0.1:0` as a real process, drives it
 # with `nalar loadgen --remote` (async-park submits over the wire, DELETE
 # cancels via --cancel-rate), validates the resulting BENCH_rps_sweep.json
-# against the nalar-bench/v1 schema (transport must be "http"), then stops
-# the server via its stop file and asserts the process exits 0 — which the
-# server only does when zero accepted connections leaked at shutdown.
+# against the nalar-bench/v1 schema (transport must be "http"), checks the
+# observability surfaces (`GET /metrics?format=prom`, a request's
+# `/trace` timeline — DESIGN.md §10), then stops the server via its stop
+# file and asserts the process exits 0 — which the server only does when
+# zero accepted connections leaked at shutdown.
 #
 # Zero-dependency by design: bash + coreutils + the nalar binary.
 set -euo pipefail
@@ -70,7 +72,40 @@ echo "serve-smoke: server up on 127.0.0.1:$PORT (pid $SERVE_PID)"
 grep -q '"transport": *"http"' "$OUT/BENCH_rps_sweep.json" \
     || fail "report does not record transport=http"
 
-# 4. Clean shutdown: touch the stop file, require exit code 0. The server
+# 4. Observability surfaces (DESIGN.md §10), via /dev/tcp so the gate
+#    stays zero-dependency: the Prometheus exposition must render, and a
+#    fresh request must yield a retrievable span timeline.
+http_get() {
+    # one HTTP/1.1 GET over /dev/tcp; prints status line + headers + body
+    exec 3<>"/dev/tcp/127.0.0.1/$PORT" \
+        || fail "cannot open /dev/tcp to 127.0.0.1:$PORT"
+    printf 'GET %s HTTP/1.1\r\nHost: 127.0.0.1\r\nConnection: close\r\n\r\n' "$1" >&3
+    cat <&3
+    exec 3<&- 3>&-
+}
+http_get "/metrics?format=prom" >"$TMP/prom" 2>/dev/null
+grep -q '^nalar_ingress_completed_total' "$TMP/prom" \
+    || fail "prom exposition missing nalar_ counters"
+grep -q '^nalar_stage_latency_seconds' "$TMP/prom" \
+    || fail "prom exposition missing the stage-latency breakdown"
+
+# Async-park one request, pull its id out of the 202, fetch its trace.
+exec 3<>"/dev/tcp/127.0.0.1/$PORT" || fail "cannot open submit connection"
+BODY='{"prompt": "trace me", "class": "chat"}'
+printf 'POST /v1/workflows/router/requests HTTP/1.1\r\nHost: 127.0.0.1\r\nX-Nalar-Wait: 0\r\nX-Nalar-Deadline-Ms: 60000\r\nContent-Length: %s\r\nConnection: close\r\n\r\n%s' \
+    "${#BODY}" "$BODY" >&3
+cat <&3 >"$TMP/submit"
+exec 3<&- 3>&-
+grep -q '202' "$TMP/submit" || fail "async-park submit did not answer 202"
+REQ_ID=$(grep -o '"request": *[0-9]*' "$TMP/submit" | grep -o '[0-9]*' | head -1)
+[[ -n "$REQ_ID" ]] || fail "202 body carried no request id"
+http_get "/v1/requests/$REQ_ID/trace" >"$TMP/trace" 2>/dev/null
+grep -q '"events"' "$TMP/trace" || fail "request $REQ_ID has no span timeline"
+grep -q '"queue_wait_ns"' "$TMP/trace" \
+    || fail "trace response missing the stage decomposition"
+echo "serve-smoke: prom exposition + request $REQ_ID trace OK"
+
+# 5. Clean shutdown: touch the stop file, require exit code 0. The server
 #    exits nonzero iff HttpServer::stop() found leaked connections.
 touch "$TMP/stop"
 if ! wait "$SERVE_PID"; then
@@ -81,4 +116,4 @@ SERVE_PID=
 grep -q "clean shutdown: 0 leaked connections" "$TMP/serve.log" \
     || fail "server log missing the clean-shutdown line"
 
-echo "serve-smoke: PASS — wire sweep valid, clean shutdown, 0 leaked connections"
+echo "serve-smoke: PASS — wire sweep valid, prom + trace served, clean shutdown, 0 leaked connections"
