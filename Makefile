@@ -1,6 +1,6 @@
 # Local entrypoints — identical to what CI runs (.github/workflows/ci.yml).
 
-.PHONY: build test test-scheduler test-fairness fmt clippy lint bench bench-quick loadgen loadgen-quick loadgen-hc serve-smoke artifacts clean
+.PHONY: build test test-scheduler test-fairness fmt clippy lint bench bench-quick bench-contention bench-contention-quick loadgen loadgen-quick loadgen-hc serve-smoke artifacts clean
 
 build:
 	cargo build --release --all-targets
@@ -42,6 +42,19 @@ bench:
 bench-quick:
 	cargo run --release -- bench --quick
 	cargo run --release -- bench --check-only
+
+# Scheduler lock-scaling microbenchmark (ISSUE 8): sweeps worker threads
+# × workflow shards × tenants, reporting submit/wake/poll/complete
+# throughput and p99 shard-lock hold time -> BENCH_contention.json at the
+# repo root. The full profile records the lock-scaling curve later PRs
+# regress against (minutes); the quick profile is the CI smoke.
+bench-contention:
+	cargo run --release -- bench contention
+	cargo run --release -- bench contention --check-only
+
+bench-contention-quick:
+	cargo run --release -- bench contention --quick
+	cargo run --release -- bench contention --check-only
 
 # Full §6 saturation sweep through the ingress front door: writes
 # BENCH_rps_sweep.json at the repo root (minutes).

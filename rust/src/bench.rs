@@ -28,15 +28,20 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::baselines::SystemUnderTest;
+use crate::config::TenantSettings;
 use crate::coordinator::policy::make_policy;
 use crate::coordinator::{GlobalController, InstanceMetrics, LoadMap, Router};
 use crate::error::{Error, Result};
 use crate::futures::{FutureCell, FutureMeta, FutureTable};
 use crate::ids::{AgentType, FutureId, InstanceId, Location, NodeId, RequestId, SessionId};
+use crate::ingress::{
+    AdmissionPolicy, HoldOp, HoldStats, Ingress, SchedulerOpts, SubmitRequest, Ticket,
+};
 use crate::json;
 use crate::metrics::LatencyRecorder;
 use crate::nodestore::{keys, StoreDirectory};
 use crate::server::Deployment;
+use crate::testkit::ScriptedEngine;
 use crate::transport::{Bus, Message};
 use crate::util::bench::Table;
 use crate::util::json::Value;
@@ -53,6 +58,12 @@ pub const ALL: &[&str] = &["fig9", "fig10", "table4", "sec62"];
 /// The §6 saturation sweep written by `nalar loadgen` (not part of
 /// [`ALL`]: it has its own subcommand), validated by the same schema gate.
 pub const RPS_SWEEP: &str = "rps_sweep";
+
+/// The scheduler lock-scaling microbenchmark written by `nalar bench
+/// contention` (own subcommand, like [`RPS_SWEEP`]): submit/wake/poll/
+/// complete throughput and p99 shard-lock hold time across worker-thread
+/// × workflow × tenant sweeps. Schema arm `contention/v1`.
+pub const CONTENTION: &str = "contention";
 
 /// Options for one `nalar bench` invocation.
 #[derive(Debug, Clone)]
@@ -92,10 +103,12 @@ fn check_known(names: &[String], known: &[&str]) -> Result<()> {
     Ok(())
 }
 
-/// Every report name the schema gate accepts (`ALL` + the loadgen sweep).
+/// Every report name the schema gate accepts (`ALL` + the loadgen sweep
+/// + the contention sweep).
 fn known_reports() -> Vec<&'static str> {
     let mut v = ALL.to_vec();
     v.push(RPS_SWEEP);
+    v.push(CONTENTION);
     v
 }
 
@@ -184,6 +197,12 @@ pub fn validate(report: &Value) -> Result<()> {
     if points.is_empty() {
         return Err(fail("`points` is empty".into()));
     }
+    // The contention report versions its point shape explicitly so later
+    // PRs can evolve the hold-time fields without silently invalidating
+    // recorded lock-scaling curves.
+    if bench == CONTENTION && report.get("arm").as_str() != Some("contention/v1") {
+        return Err(fail("contention report: `arm` must be \"contention/v1\"".into()));
+    }
     let required: &[&str] = match bench {
         "fig9" => &["workflow", "system", "rps_wall", "rps_paper", "completed", "failed"],
         "fig10" => &["nodes", "agents", "futures"],
@@ -206,6 +225,18 @@ pub fn validate(report: &Value) -> Result<()> {
             "breakdown",
             "goodput_rps",
             "shed_rate",
+        ],
+        "contention" => &[
+            "threads",
+            "workflows",
+            "tenants",
+            "total",
+            "completed",
+            "submit_per_s",
+            "poll_per_s",
+            "complete_per_s",
+            "wake_per_s",
+            "hold",
         ],
         other => return Err(fail(format!("unknown bench `{other}`"))),
     };
@@ -264,6 +295,26 @@ pub fn validate(report: &Value) -> Result<()> {
                 if s.get("count").as_u64().is_none() {
                     return Err(fail(format!(
                         "{bench} point {i}: breakdown.{stage}.count not an integer"
+                    )));
+                }
+            }
+        }
+        // Each point of the lock-scaling curve carries a per-op
+        // critical-section hold-time block; p99 hold-ns is the headline
+        // the curve regresses against.
+        if bench == "contention" {
+            for op in ["submit", "wake", "poll", "complete", "sweep"] {
+                let h = p.get("hold").get(op);
+                for q in ["p50_ns", "p95_ns", "p99_ns"] {
+                    if h.get(q).as_f64().is_none() {
+                        return Err(fail(format!(
+                            "{bench} point {i}: hold.{op}.{q} not numeric"
+                        )));
+                    }
+                }
+                if h.get("count").as_u64().is_none() {
+                    return Err(fail(format!(
+                        "{bench} point {i}: hold.{op}.count not an integer"
                     )));
                 }
             }
@@ -720,6 +771,191 @@ pub fn sec62(quick: bool) -> Result<Value> {
     Ok(report("sec62", quick, "paper_s", points))
 }
 
+// ------------------------------------------------------------- contention
+
+/// One cell of the lock-scaling sweep: `threads` submitter threads race a
+/// same-sized scheduler pool over `nkinds` workflow shards split across
+/// `ntenants` tenants. Every request is a scripted one-wait driver (see
+/// [`crate::testkit::ScriptedEngine`]); a resolver thread plays the
+/// engine, resolving each scripted call the moment it exists, so every
+/// request exercises the full hot path exactly once: one submit, two
+/// polls, one wake, one completion. Returns one schema point.
+fn contention_point(threads: usize, nkinds: usize, ntenants: usize, total: usize) -> Result<Value> {
+    let all_kinds = [WorkflowKind::Router, WorkflowKind::Financial, WorkflowKind::Swe];
+    let kinds: Vec<WorkflowKind> = all_kinds[..nkinds].to_vec();
+    let tenant_names: Vec<String> = (0..ntenants).map(|t| format!("t{t}")).collect();
+    let mut cfg = WorkflowKind::Router.config();
+    cfg.time_scale = 0.0005;
+    if ntenants > 1 {
+        // Equal-weight tenants with no token bucket: the DRR still splits
+        // every shard's queue per tenant (the structure under test) while
+        // admission stays unbounded — no submit may shed.
+        cfg.ingress.tenants = tenant_names
+            .iter()
+            .map(|name| TenantSettings { name: name.clone(), ..TenantSettings::default() })
+            .collect();
+    }
+    let d = Deployment::launch(cfg)?;
+    let hold = HoldStats::new();
+    let mut opts = SchedulerOpts::new(threads, total.max(1));
+    opts.hold = Some(hold.clone());
+    let ing = Ingress::start_with_opts(&d, &kinds, AdmissionPolicy::Unbounded, opts);
+    let eng = ScriptedEngine::new();
+    let deadline = Duration::from_secs(120);
+
+    let t0 = Instant::now();
+    let mut tickets: Vec<Ticket> = Vec::with_capacity(total);
+    let mut submit_secs = 0.0f64;
+    let mut resolved = true;
+    std::thread::scope(|s| {
+        let mut subs = Vec::new();
+        for w in 0..threads {
+            let eng = eng.clone();
+            let ing = &ing;
+            let kinds = &kinds;
+            let tenant_names = &tenant_names;
+            subs.push(s.spawn(move || {
+                let t = Instant::now();
+                let mut out = Vec::new();
+                let mut i = w;
+                while i < total {
+                    let mut req = SubmitRequest::workflow(kinds[i % kinds.len()])
+                        .driver(eng.driver(&format!("c{i}"), 1))
+                        .deadline(deadline);
+                    if tenant_names.len() > 1 {
+                        req = req.tenant(tenant_names[i % tenant_names.len()].clone());
+                    }
+                    out.push(ing.submit(req).expect("unbounded admission must accept"));
+                    i += threads;
+                }
+                (out, t.elapsed().as_secs_f64())
+            }));
+        }
+        let resolver = {
+            let eng = eng.clone();
+            s.spawn(move || {
+                for i in 0..total {
+                    if !eng.wait_created(i + 1, Duration::from_secs(60)) {
+                        return false;
+                    }
+                    eng.cell(i).resolve(json!({"ok": true}), 1);
+                }
+                true
+            })
+        };
+        for h in subs {
+            let (out, secs) = h.join().expect("submitter panicked");
+            tickets.extend(out);
+            submit_secs = submit_secs.max(secs);
+        }
+        resolved = resolver.join().expect("resolver panicked");
+    });
+    if !resolved {
+        return Err(Error::Msg("contention bench: scripted calls never appeared".into()));
+    }
+    let rec = LatencyRecorder::new();
+    let mut completed = 0usize;
+    for t in &tickets {
+        t.wait(deadline)?;
+        completed += 1;
+        if let Some(l) = t.latency() {
+            rec.record(l);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    ing.stop();
+    d.shutdown();
+
+    // Per-op critical-section hold times: the histograms record
+    // microseconds, so quantile * 1000 is nanoseconds.
+    let mut holds = json!({});
+    for (name, op) in [
+        ("submit", HoldOp::Submit),
+        ("wake", HoldOp::Wake),
+        ("poll", HoldOp::Poll),
+        ("complete", HoldOp::Complete),
+        ("sweep", HoldOp::Sweep),
+    ] {
+        let st = hold.snapshot(op).stat();
+        holds.insert(
+            name,
+            json!({
+                "count": st.count,
+                "p50_ns": st.p50 * 1000.0,
+                "p95_ns": st.p95 * 1000.0,
+                "p99_ns": st.p99 * 1000.0
+            }),
+        );
+    }
+    let mut p = json!({
+        "threads": threads,
+        "workflows": kinds.len(),
+        "tenants": tenant_names.len(),
+        "total": total,
+        "completed": completed,
+        "wall_s": wall,
+        "submit_per_s": total as f64 / submit_secs.max(1e-9),
+        "poll_per_s": 2.0 * total as f64 / wall,
+        "complete_per_s": completed as f64 / wall,
+        "wake_per_s": total as f64 / wall
+    });
+    p.insert("hold", holds);
+    p.insert("latency", rec.summary_scaled(1e6).to_json());
+    Ok(p)
+}
+
+/// `nalar bench contention`: the scheduler lock-scaling microbenchmark.
+/// Sweeps worker-thread count × workflow (= shard) count × tenant count
+/// and reports submit/wake/poll/complete throughput plus per-op p99
+/// shard-lock hold time ([`crate::ingress::HoldStats`]) — the curve every
+/// later PR regresses against (ROADMAP "sharded front door + hot-path
+/// contention overhaul").
+pub fn contention(quick: bool) -> Result<Value> {
+    let threads: &[usize] = if quick { &[1, 2, 4] } else { &[1, 2, 4, 8, 16] };
+    let workflows: &[usize] = if quick { &[1] } else { &[1, 3] };
+    let tenants: &[usize] = &[1, 4];
+    let per_point = if quick { 240 } else { 2000 };
+
+    let mut table =
+        Table::new(&["threads", "wfs", "tenants", "submit/s", "complete/s", "poll p99 hold(ns)"]);
+    let mut points = Vec::new();
+    for &nw in workflows {
+        for &nt in tenants {
+            for &th in threads {
+                let p = contention_point(th, nw, nt, per_point)?;
+                table.row(&[
+                    th.to_string(),
+                    nw.to_string(),
+                    nt.to_string(),
+                    format!("{:.0}", p.get("submit_per_s").as_f64().unwrap_or(0.0)),
+                    format!("{:.0}", p.get("complete_per_s").as_f64().unwrap_or(0.0)),
+                    format!(
+                        "{:.0}",
+                        p.get("hold").get("poll").get("p99_ns").as_f64().unwrap_or(0.0)
+                    ),
+                ]);
+                points.push(p);
+            }
+        }
+    }
+    println!("\n=== Contention — shard-lock scaling ===");
+    table.print();
+    let mut r = report(CONTENTION, quick, "us", points);
+    r.insert("arm", "contention/v1");
+    Ok(r)
+}
+
+/// Run the contention sweep, schema-validate it, and write
+/// `BENCH_contention.json` (the `nalar bench contention` subcommand).
+pub fn run_contention(quick: bool, out_dir: &Path) -> Result<PathBuf> {
+    let t0 = Instant::now();
+    let r = contention(quick)?;
+    validate(&r)?;
+    let path = write_report(out_dir, CONTENTION, &r)?;
+    println!("[bench] contention done in {:.1?} -> {}", t0.elapsed(), path.display());
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -852,6 +1088,70 @@ mod tests {
             "completed": 5, "shed": 0}}));
         let err = validate(&minimal_report("rps_sweep", no_goodput)).unwrap_err();
         assert!(err.to_string().contains("goodput_rps"), "{err}");
+    }
+
+    /// A full per-op hold block, one entry per [`HoldOp`].
+    fn hold_map() -> Value {
+        let mut m = crate::util::json::Map::new();
+        for op in ["submit", "wake", "poll", "complete", "sweep"] {
+            m.insert(
+                op.to_string(),
+                json!({"count": 240, "p50_ns": 120.0, "p95_ns": 900.0, "p99_ns": 2400.0}),
+            );
+        }
+        Value::Obj(m)
+    }
+
+    #[test]
+    fn validate_accepts_contention_points() {
+        let mut p = json!({
+            "threads": 4, "workflows": 1, "tenants": 4, "total": 240, "completed": 240,
+            "wall_s": 0.5, "submit_per_s": 1000.0, "poll_per_s": 960.0,
+            "complete_per_s": 480.0, "wake_per_s": 480.0
+        });
+        p.insert("hold", hold_map());
+        p.insert("latency", lat());
+        // the report must carry the `contention/v1` arm tag
+        let untagged = minimal_report(CONTENTION, p.clone());
+        let err = validate(&untagged).unwrap_err();
+        assert!(err.to_string().contains("contention/v1"), "{err}");
+        let mut r = minimal_report(CONTENTION, p.clone());
+        r.insert("arm", "contention/v1");
+        validate(&r).unwrap();
+        // a hold block missing an op (or its p99) fails
+        let mut partial = p.clone();
+        partial.insert(
+            "hold",
+            json!({"submit": {"count": 1, "p50_ns": 1.0, "p95_ns": 1.0, "p99_ns": 1.0}}),
+        );
+        let mut bad = minimal_report(CONTENTION, partial);
+        bad.insert("arm", "contention/v1");
+        let err = validate(&bad).unwrap_err();
+        assert!(err.to_string().contains("hold.wake"), "{err}");
+        // a point missing a sweep coordinate fails
+        let mut missing = json!({"workflows": 1, "tenants": 1});
+        missing.insert("hold", hold_map());
+        missing.insert("latency", lat());
+        let mut bad = minimal_report(CONTENTION, missing);
+        bad.insert("arm", "contention/v1");
+        let err = validate(&bad).unwrap_err();
+        assert!(err.to_string().contains("threads"), "{err}");
+    }
+
+    #[test]
+    fn contention_point_reports_throughput_and_holds() {
+        // One small real cell: 2 submitters × 2 tenants × 40 requests
+        // through the sharded scheduler with hold instrumentation on.
+        let p = contention_point(2, 1, 2, 40).unwrap();
+        let mut r = minimal_report(CONTENTION, p);
+        r.insert("arm", "contention/v1");
+        validate(&r).unwrap();
+        let p = &r.get("points").as_arr().unwrap()[0];
+        assert_eq!(p.get("completed").as_u64(), Some(40));
+        assert!(p.get("submit_per_s").as_f64().unwrap() > 0.0);
+        // every submit held the shard lock exactly once
+        assert_eq!(p.get("hold").get("submit").get("count").as_u64(), Some(40));
+        assert!(p.get("hold").get("poll").get("count").as_u64().unwrap() >= 80);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Sharded registry of live futures (per node).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use std::sync::{Mutex, RwLock};
@@ -31,6 +32,13 @@ pub struct FutureTable {
     /// and the request's end — lookups just miss; only the eviction hook
     /// removes the entry.
     by_request: Vec<Mutex<HashMap<RequestId, Vec<FutureId>>>>,
+    /// Live cell count across all shards, maintained at insert/remove/GC
+    /// (each update happens while the touched shard's write lock is
+    /// held, so the counter agrees with the maps at every quiescent
+    /// point). [`FutureTable::len`] reads this — snapshot and leak-gate
+    /// paths must not lock all 32 shards just to sum sizes; the summed
+    /// walk survives only inside [`FutureTable::debug_assert_len`].
+    live: AtomicUsize,
 }
 
 impl Default for FutureTable {
@@ -44,6 +52,7 @@ impl FutureTable {
         FutureTable {
             shards: (0..SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
             by_request: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            live: AtomicUsize::new(0),
         }
     }
 
@@ -57,7 +66,12 @@ impl FutureTable {
 
     pub fn insert(&self, cell: Arc<FutureCell>) {
         let (id, request) = (cell.id, cell.with_meta(|m| m.request));
-        self.shard(id).write().unwrap().insert(id, cell);
+        {
+            let mut m = self.shard(id).write().unwrap();
+            if m.insert(id, cell).is_none() {
+                self.live.fetch_add(1, Ordering::Relaxed);
+            }
+        }
         self.request_shard(request).lock().unwrap().entry(request).or_default().push(id);
     }
 
@@ -66,15 +80,38 @@ impl FutureTable {
     }
 
     pub fn remove(&self, id: FutureId) -> Option<Arc<FutureCell>> {
-        self.shard(id).write().unwrap().remove(&id)
+        let mut m = self.shard(id).write().unwrap();
+        let cell = m.remove(&id);
+        if cell.is_some() {
+            self.live.fetch_sub(1, Ordering::Relaxed);
+        }
+        cell
     }
 
+    /// Live cell count — one atomic load (this rides the telemetry
+    /// snapshot and leak-gate paths; see the `live` field).
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+        self.live.load(Ordering::Relaxed)
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Cross-check the O(1) counter against the authoritative summed
+    /// walk over all shards (debug builds only — the walk takes every
+    /// shard lock, which is the cost the counter exists to avoid). Only
+    /// meaningful at quiescent points: the two reads are not atomic
+    /// together under concurrent mutation.
+    pub fn debug_assert_len(&self) {
+        if cfg!(debug_assertions) {
+            let walked: usize = self.shards.iter().map(|s| s.read().unwrap().len()).sum();
+            assert_eq!(
+                self.len(),
+                walked,
+                "FutureTable live counter diverged from the shard walk"
+            );
+        }
     }
 
     /// Count by state (telemetry snapshot for the global controller).
@@ -166,7 +203,11 @@ impl FutureTable {
             let mut m = shard.write().unwrap();
             let before = m.len();
             m.retain(|_, c| !matches!(c.state(), FutureState::Ready | FutureState::Failed));
-            removed += before - m.len();
+            let reaped = before - m.len();
+            if reaped > 0 {
+                self.live.fetch_sub(reaped, Ordering::Relaxed);
+            }
+            removed += reaped;
         }
         removed
     }
@@ -203,6 +244,9 @@ mod tests {
         assert!(t.remove(FutureId(1)).is_some());
         assert!(t.get(FutureId(1)).is_none());
         assert_eq!(t.len(), 1);
+        assert!(t.remove(FutureId(1)).is_none(), "double remove is a miss");
+        assert_eq!(t.len(), 1, "a miss must not decrement the live counter");
+        t.debug_assert_len();
     }
 
     #[test]
@@ -220,6 +264,7 @@ mod tests {
         assert_eq!(counts[&FutureState::Created], 6);
         assert_eq!(t.gc_terminal(), 4);
         assert_eq!(t.len(), 6);
+        t.debug_assert_len();
     }
 
     #[test]

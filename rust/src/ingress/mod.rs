@@ -79,15 +79,15 @@ pub use fairness::Drr;
 pub use schedule::SchedulePolicy;
 
 use std::collections::{HashMap, HashSet, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, Weak};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{IngressMetrics, TenantMetrics};
 use crate::error::{Error, Result};
 use crate::futures::{FutureCell, Value};
 use crate::ids::{NodeId, RequestId, SessionId, TenantId};
-use crate::metrics::{merge_breakdowns, StageHistograms};
+use crate::metrics::{merge_breakdowns, Histogram, HistogramSnapshot, StageHistograms};
 use crate::nodestore::keys;
 use crate::server::Deployment;
 use crate::trace::{TraceKind, TraceSink};
@@ -232,7 +232,8 @@ pub struct Ticket {
     /// Tenant the request was charged to, stamped at admission.
     pub tenant: TenantId,
     cell: Arc<TicketCell>,
-    /// Workflow-queue index, so `cancel` knows where to look.
+    /// Workflow shard index: `cancel` keys into the owning scheduler
+    /// lock domain by `(idx, request)` — no global request→shard map.
     idx: usize,
     /// Back-reference to the scheduler (weak: a ticket outliving its
     /// ingress must not keep the scheduler alive, and `cancel` on a dead
@@ -383,16 +384,22 @@ struct Lapsed {
     started: bool,
 }
 
-/// Scheduler state under one lock: admission queues feed the in-flight
-/// table; wakers move parked continuations to the ready queue.
-struct SchedState {
-    /// Admission queues: `queues[workflow][tenant]` — one sub-queue per
-    /// tenant per entry of `kinds`, served weighted-fair by `drr`.
-    /// Contention is negligible at front-door rates and a single lock
-    /// keeps pop-fairness trivial.
-    queues: Vec<Vec<VecDeque<Queued>>>,
-    /// Per-workflow deficit-round-robin state over the tenant sub-queues.
-    drr: Vec<Drr>,
+/// Scheduler state for ONE workflow entry — its own lock domain (a
+/// "shard"). Submits, wakeups, pops, cancels and mid-poll race
+/// resolution for different workflows touch different shards and never
+/// contend; only `stop` and the deadline sweep visit every shard, and
+/// they take the locks one at a time (never two shard locks at once, so
+/// there is no lock-ordering hazard). Within one shard the semantics are
+/// identical to the old single-lock scheduler — which is what keeps the
+/// deterministic fairness/ordering suites passing unchanged. Cross-shard
+/// gauges (`depth`, `in_flight`) live as atomics on [`IngressInner`] so
+/// the metrics read path never touches a shard lock (DESIGN.md §11).
+struct ShardState {
+    /// Admission sub-queues, one per tenant, served weighted-fair by
+    /// `drr`.
+    queues: Vec<VecDeque<Queued>>,
+    /// Deficit-round-robin state over the tenant sub-queues.
+    drr: Drr,
     /// Runnable continuations (woken or freshly admitted). Pop order is
     /// the configured [`SchedulePolicy`], not necessarily front-first.
     ready: VecDeque<InFlight>,
@@ -410,23 +417,100 @@ struct SchedState {
     /// shouldn't-happen): the next sweep re-polls them — a bounded 0..5ms
     /// backoff instead of a hot requeue loop.
     nudge: Vec<u64>,
-    /// Every started-but-unfinished request id (ready + parked + polling).
+    /// Every started-but-unfinished request id of this workflow (ready +
+    /// parked + polling). Wakers and cancels key into the owning shard by
+    /// `(workflow index, RequestId)` — both are carried by the
+    /// [`Ticket`] and the waker closure, so no global request→shard map
+    /// exists anywhere.
     live: HashSet<u64>,
-    /// Started-but-unfinished count per workflow (the `in_flight` gauge).
-    in_flight: Vec<usize>,
-    /// Next deadline sweep over parked + queued work.
-    next_sweep: Instant,
 }
 
-impl SchedState {
-    fn total_in_flight(&self) -> usize {
-        self.live.len()
+/// Which hot-path operation a shard-lock acquisition serves — the key
+/// the contention bench's critical-section hold-time histograms are
+/// split by (`nalar bench contention`).
+#[derive(Clone, Copy, Debug)]
+pub enum HoldOp {
+    Submit,
+    Wake,
+    Poll,
+    Complete,
+    Sweep,
+}
+
+/// Per-op shard-lock hold-time histograms, recorded in microseconds by
+/// [`HoldGuard`] on drop. Only installed by the contention bench (via
+/// [`SchedulerOpts::hold`]); in production the slot is `None` and the
+/// only hot-path cost is one `Option` check per lock acquisition.
+pub struct HoldStats {
+    submit: Histogram,
+    wake: Histogram,
+    poll: Histogram,
+    complete: Histogram,
+    sweep: Histogram,
+}
+
+impl HoldStats {
+    pub fn new() -> Arc<HoldStats> {
+        Arc::new(HoldStats {
+            submit: Histogram::new(),
+            wake: Histogram::new(),
+            poll: Histogram::new(),
+            complete: Histogram::new(),
+            sweep: Histogram::new(),
+        })
     }
 
-    /// Total queued requests of one workflow (across its tenant
-    /// sub-queues) — the depth the shared admission cap bounds.
-    fn depth(&self, idx: usize) -> usize {
-        self.queues[idx].iter().map(|q| q.len()).sum()
+    fn hist(&self, op: HoldOp) -> &Histogram {
+        match op {
+            HoldOp::Submit => &self.submit,
+            HoldOp::Wake => &self.wake,
+            HoldOp::Poll => &self.poll,
+            HoldOp::Complete => &self.complete,
+            HoldOp::Sweep => &self.sweep,
+        }
+    }
+
+    /// Snapshot one op's hold-time histogram. Samples are recorded in
+    /// microseconds (the histogram's native 1e-6..1123 range then spans
+    /// sub-ns..1.1ms holds), so `quantile(q) * 1000.0` is nanoseconds.
+    pub fn snapshot(&self, op: HoldOp) -> HistogramSnapshot {
+        self.hist(op).snapshot()
+    }
+}
+
+impl std::fmt::Debug for HoldStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("HoldStats")
+    }
+}
+
+/// A locked scheduler shard. When hold-time instrumentation is installed
+/// the acquisition instant is stamped here and the critical-section
+/// duration recorded on drop — measuring *hold* time (what other threads
+/// would wait behind), not acquisition wait.
+struct HoldGuard<'a> {
+    g: MutexGuard<'a, ShardState>,
+    since: Option<(Instant, HoldOp, &'a HoldStats)>,
+}
+
+impl std::ops::Deref for HoldGuard<'_> {
+    type Target = ShardState;
+    fn deref(&self) -> &ShardState {
+        &self.g
+    }
+}
+
+impl std::ops::DerefMut for HoldGuard<'_> {
+    fn deref_mut(&mut self) -> &mut ShardState {
+        &mut self.g
+    }
+}
+
+impl Drop for HoldGuard<'_> {
+    fn drop(&mut self) {
+        if let Some((t0, op, h)) = self.since.take() {
+            h.hist(op).record(t0.elapsed().as_secs_f64() * 1e6);
+        }
     }
 }
 
@@ -458,6 +542,9 @@ pub struct SchedulerOpts {
     /// tracing) on [`Self::clock`]. Timelines recorded on a virtual
     /// clock are fully deterministic.
     pub trace: Option<TraceSink>,
+    /// Shard-lock hold-time instrumentation (`nalar bench contention`).
+    /// `None` (the default, and production) records nothing.
+    pub hold: Option<Arc<HoldStats>>,
 }
 
 impl SchedulerOpts {
@@ -468,6 +555,7 @@ impl SchedulerOpts {
             schedule: None,
             clock: Clock::wall(),
             trace: None,
+            hold: None,
         }
     }
 }
@@ -498,7 +586,17 @@ struct IngressInner {
     /// (false = the implicit single-tenant table, where any submitted
     /// tenant name collapses onto it instead of erroring).
     tenants_configured: bool,
-    sched: Mutex<SchedState>,
+    /// One scheduler lock domain per entry of `kinds` (see
+    /// [`ShardState`]). Always acquired through [`Self::lock_shard`].
+    shards: Vec<Mutex<ShardState>>,
+    /// Event-sequence counter paired with `cv` for idle parking. Workers
+    /// read it before scanning the shards and wait only if it is
+    /// unchanged when they take this mutex again; every notifier bumps it
+    /// under the mutex first — so a submit/wake/completion landing
+    /// between a worker's scan and its wait is never a lost wakeup (the
+    /// single-lock scheduler got this for free by waiting on the same
+    /// mutex everything else took).
+    events: Mutex<u64>,
     cv: Condvar,
     /// Shared per-workflow admission policy (the bounded cap / workflow
     /// token bucket). Decision-only: accept/shed are counted on the
@@ -521,7 +619,8 @@ struct IngressInner {
     cancelled: Vec<Vec<AtomicU64>>,
     /// Per-workflow per-stage time-to-completion EWMAs — the
     /// `deadline_slack` policy's remaining-work estimate. Locked after
-    /// `sched` when both are needed (never the other way around).
+    /// the owning shard when both are needed (never the other way
+    /// around).
     stage_stats: Vec<Mutex<StageStats>>,
     /// Per-(workflow, tenant) latency-decomposition histograms: completed
     /// requests fold their queue-wait / sched-delay / poll-time /
@@ -535,7 +634,33 @@ struct IngressInner {
     clock: Clock,
     workers: usize,
     max_in_flight: usize,
-    last_publish: Vec<Mutex<Instant>>,
+    /// Queued-request count per (workflow, tenant). Mutated only while
+    /// holding the owning shard's lock (so the bounded-cap admission
+    /// check stays exact), but *read* lock-free by the metrics path —
+    /// `snapshot`, `publish`, `GET /metrics`, `depth()` never take a
+    /// shard lock.
+    depth_gauge: Vec<Vec<AtomicUsize>>,
+    /// Started-but-unfinished count per workflow (the `in_flight` gauge),
+    /// same mutate-under-shard-lock / read-lock-free discipline.
+    in_flight_gauge: Vec<AtomicUsize>,
+    /// Started-but-unfinished requests across all shards. The
+    /// `max_in_flight` bound is enforced by CAS reservation
+    /// ([`Self::try_reserve_total`]) so it is exact even though no global
+    /// lock exists any more.
+    total_in_flight: AtomicUsize,
+    /// Epoch all monotonic-nanos atomics below count from (`clock.now()`
+    /// at construction — the scheduler's clock, so virtual-clock tests
+    /// drive these through `advance()` exactly like deadlines).
+    epoch: Instant,
+    /// Next deadline sweep, as nanos since `epoch`. A worker claims a due
+    /// sweep by CAS — exactly one runs it.
+    next_sweep: AtomicU64,
+    /// Per-workflow publish throttle, as nanos since `epoch`, advanced by
+    /// CAS — exactly one racing publisher wins each [`PUBLISH_PERIOD`].
+    last_publish: Vec<AtomicU64>,
+    /// Shard-lock hold-time instrumentation (bench-only; `None` in
+    /// production).
+    hold: Option<Arc<HoldStats>>,
     stop: AtomicBool,
 }
 
@@ -547,6 +672,77 @@ impl IngressInner {
     /// Submit-to-now on the scheduler's clock (virtual in tests).
     fn since(&self, submitted: Instant) -> Duration {
         self.clock.now().saturating_duration_since(submitted)
+    }
+
+    /// Acquire workflow `idx`'s shard lock, tagged with the hot-path op
+    /// it serves so the contention bench can split hold times per op.
+    fn lock_shard(&self, idx: usize, op: HoldOp) -> HoldGuard<'_> {
+        let g = self.shards[idx].lock().unwrap();
+        let since = self.hold.as_deref().map(|h| (Instant::now(), op, h));
+        HoldGuard { g, since }
+    }
+
+    /// Signal the worker pool that new work (or capacity) exists: bump
+    /// the event sequence under its mutex, then notify. See
+    /// `IngressInner::events` for why the bump must happen under the
+    /// mutex.
+    fn notify(&self, all: bool) {
+        *self.events.lock().unwrap() += 1;
+        if all {
+            self.cv.notify_all();
+        } else {
+            self.cv.notify_one();
+        }
+    }
+
+    /// Total queued requests of one workflow (across its tenant
+    /// sub-queues) — the depth the shared admission cap bounds. Lock-free
+    /// (the gauges are only mutated under the owning shard's lock, so the
+    /// admission check — which holds that lock — still sees an exact
+    /// value).
+    fn depth_of(&self, idx: usize) -> usize {
+        self.depth_gauge[idx].iter().map(|g| g.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Reserve one global in-flight slot if the pool is below
+    /// `max_in_flight`. CAS keeps the bound exact: two workers racing the
+    /// last slot cannot both win it.
+    fn try_reserve_total(&self) -> bool {
+        self.total_in_flight
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| {
+                (n < self.max_in_flight).then_some(n + 1)
+            })
+            .is_ok()
+    }
+
+    fn release_total(&self) {
+        self.total_in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// A started request of workflow `idx` reached a terminal outcome:
+    /// free its in-flight slot and drop the workflow gauge. Called before
+    /// the ticket is fulfilled, so a caller returning from `wait()`
+    /// observes the gauges already settled.
+    fn drop_in_flight(&self, idx: usize) {
+        self.in_flight_gauge[idx].fetch_sub(1, Ordering::Relaxed);
+        self.release_total();
+    }
+
+    /// Claim the deadline sweep if it is due; the CAS guarantees exactly
+    /// one worker runs each due sweep.
+    fn try_claim_sweep(&self) -> bool {
+        let now_ns = self.clock.nanos_since(self.epoch);
+        let due = self.next_sweep.load(Ordering::Relaxed);
+        now_ns >= due
+            && self
+                .next_sweep
+                .compare_exchange(
+                    due,
+                    now_ns + SWEEP_PERIOD.as_nanos() as u64,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                )
+                .is_ok()
     }
 
     /// Resolve a submitted tenant name to its table index. `None` = the
@@ -572,11 +768,15 @@ impl IngressInner {
     /// pre-tenancy schema fields keep their exact meaning.
     fn snapshot(&self, idx: usize) -> IngressMetrics {
         let adm = &self.admission[idx];
-        let (tenant_depths, in_flight) = {
-            let s = self.sched.lock().unwrap();
-            let depths: Vec<usize> = s.queues[idx].iter().map(|q| q.len()).collect();
-            (depths, s.in_flight[idx])
-        };
+        // The whole metrics read path — this fn, `publish`, HTTP
+        // `GET /metrics`, `ClusterView::collect`, `depth`, `in_flight` —
+        // reads monotonic atomics and lock-free histogram snapshots
+        // only. A shard lock held arbitrarily long by a busy scheduler
+        // must never stall telemetry (enforced by the
+        // `metrics_read_path_never_takes_a_shard_lock` test).
+        let tenant_depths: Vec<usize> =
+            self.depth_gauge[idx].iter().map(|g| g.load(Ordering::Relaxed)).collect();
+        let in_flight = self.in_flight_gauge[idx].load(Ordering::Relaxed);
         let tenants: Vec<TenantMetrics> = self
             .tenants
             .iter()
@@ -628,21 +828,28 @@ impl IngressInner {
 
     /// Throttled [`Self::publish`]: at most one store write per queue per
     /// [`PUBLISH_PERIOD`]. Lifecycle edges (start/stop) publish directly.
+    /// Lock-free: a monotonic-nanos compare-and-swap on the scheduler's
+    /// clock — exactly one racing publisher wins each period, losers pay
+    /// one atomic load. Virtual-clock tests drive the throttle through
+    /// `advance()` like every other timer.
     fn maybe_publish(&self, idx: usize) {
-        {
-            let mut last = self.last_publish[idx].lock().unwrap();
-            if last.elapsed() < PUBLISH_PERIOD {
-                return;
-            }
-            *last = Instant::now();
+        let now_ns = self.clock.nanos_since(self.epoch);
+        let last = self.last_publish[idx].load(Ordering::Relaxed);
+        if now_ns.saturating_sub(last) < PUBLISH_PERIOD.as_nanos() as u64 {
+            return;
         }
-        self.publish(idx);
+        if self.last_publish[idx]
+            .compare_exchange(last, now_ns, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+        {
+            self.publish(idx);
+        }
     }
 
     /// Pop the next ready continuation per the scheduling policy. The
     /// slack estimate is re-read against the current `now` on every pop —
     /// pushed-time priorities would go stale while a request sat ready.
-    fn pop_ready(&self, s: &mut SchedState, now: Instant) -> Option<InFlight> {
+    fn pop_ready(&self, s: &mut ShardState, idx: usize, now: Instant) -> Option<InFlight> {
         if s.ready.is_empty() {
             return None;
         }
@@ -652,7 +859,7 @@ impl IngressInner {
             s.ready.iter().map(|f| Key {
                 deadline: f.deadline,
                 stage: f.stage,
-                est_remaining: self.stage_stats[f.idx].lock().unwrap().estimate(f.stage),
+                est_remaining: self.stage_stats[idx].lock().unwrap().estimate(f.stage),
             }),
         )?;
         let mut f = s.ready.remove(chosen)?;
@@ -669,48 +876,52 @@ impl IngressInner {
     /// Queued requests are all stage 0, so `stage` ordering degrades to
     /// FIFO here and `deadline_slack` to EDF with a whole-request
     /// estimate.
-    fn pop_queued(&self, s: &mut SchedState, idx: usize, now: Instant) -> Option<Queued> {
-        let backlog: Vec<usize> = s.queues[idx].iter().map(|q| q.len()).collect();
-        let tenant = s.drr[idx].next(&backlog)?;
+    fn pop_queued(&self, s: &mut ShardState, idx: usize, now: Instant) -> Option<Queued> {
+        let backlog: Vec<usize> = s.queues.iter().map(|q| q.len()).collect();
+        let tenant = s.drr.next(&backlog)?;
         let est = self.stage_stats[idx].lock().unwrap().estimate(0);
         let chosen = pick(
             self.schedule,
             now,
-            s.queues[idx][tenant]
+            s.queues[tenant]
                 .iter()
                 .map(|j| Key { deadline: j.deadline, stage: 0, est_remaining: est }),
         )?;
-        let job = s.queues[idx][tenant].remove(chosen);
-        if s.queues[idx][tenant].is_empty() {
+        let job = s.queues[tenant].remove(chosen);
+        if job.is_some() {
+            self.depth_gauge[idx][tenant].fetch_sub(1, Ordering::Relaxed);
+        }
+        if s.queues[tenant].is_empty() {
             // the pop drained this tenant: forfeit its banked deficit
             // (classic DRR empty-queue rule — same as the cancel/expiry
             // paths), or a bursty tenant submitting between pops would
             // bank up to quantum−1 of entitlement earned while idle
-            s.drr[idx].on_empty(tenant);
+            s.drr.on_empty(tenant);
         }
         job
     }
 
     /// Scheduler worker: multiplexes the in-flight table. Priority order
-    /// per iteration: overdue deadline sweep, then woken continuations,
-    /// then admission (bounded by `max_in_flight`), else park on the
-    /// condvar until an event or the next sweep is due.
+    /// per iteration: overdue deadline sweep (one worker claims it by
+    /// CAS, then walks the shards one at a time), then woken
+    /// continuations, then admission (bounded by `max_in_flight` via CAS
+    /// reservation), else park on the condvar until an event or the next
+    /// sweep is due.
     fn worker_loop(self: Arc<Self>, worker: usize) {
         let nkinds = self.kinds.len();
-        let mut rot = worker; // stagger the admission scan start per worker
+        let mut rot = worker; // stagger the shard scan start per worker
         loop {
+            if self.stop.load(Ordering::Relaxed) {
+                return;
+            }
             let mut lapsed = Vec::new();
-            let task = {
-                let mut s = self.sched.lock().unwrap();
-                if self.stop.load(Ordering::Relaxed) {
-                    return;
-                }
+            if self.try_claim_sweep() {
                 let now = self.clock.now();
-                if now >= s.next_sweep {
-                    s.next_sweep = now + SWEEP_PERIOD;
-                    Self::collect_lapsed(&mut s, now, &mut lapsed);
+                for idx in 0..nkinds {
+                    let mut s = self.lock_shard(idx, HoldOp::Sweep);
+                    self.collect_lapsed(&mut s, idx, now, &mut lapsed);
                     // re-poll continuations that had nothing to subscribe
-                    // to (bounded backoff; see `SchedState::nudge`)
+                    // to (bounded backoff; see `ShardState::nudge`)
                     let nudge: Vec<u64> = s.nudge.drain(..).collect();
                     for rid in nudge {
                         if let Some(mut f) = s.parked.remove(&rid) {
@@ -723,80 +934,96 @@ impl IngressInner {
                         }
                     }
                 }
-                if let Some(f) = self.pop_ready(&mut s, now) {
-                    Some(Task::Poll(f))
-                } else {
-                    let mut admitted = None;
-                    if s.total_in_flight() < self.max_in_flight {
-                        for i in 0..nkinds {
-                            let idx = (rot + i) % nkinds;
-                            if let Some(job) = self.pop_queued(&mut s, idx, now) {
-                                admitted = Some((idx, job));
-                                break;
-                            }
-                        }
-                    }
-                    match admitted {
-                        Some((idx, job)) => {
-                            rot = rot.wrapping_add(1);
-                            s.live.insert(job.request.0);
-                            s.in_flight[idx] += 1;
-                            Some(Task::Admit(idx, job))
-                        }
-                        None => {
-                            // idle, or at the in-flight cap: park until a
-                            // submit/waker/capacity event or the next sweep
-                            // — unless this iteration collected lapsed
-                            // work, which must be failed fast first
-                            if lapsed.is_empty() {
-                                let _ = self.cv.wait_timeout(s, SWEEP_PERIOD).unwrap();
-                            }
-                            None
-                        }
+            }
+            let had_lapsed = !lapsed.is_empty();
+            self.fail_lapsed(lapsed);
+            // Event sequence read *before* the work scan: anything
+            // arriving after this read bumps it, so the idle wait below
+            // re-checks instead of sleeping through the event.
+            let seq = *self.events.lock().unwrap();
+            let now = self.clock.now();
+            let mut task = None;
+            for i in 0..nkinds {
+                let idx = (rot + i) % nkinds;
+                let mut s = self.lock_shard(idx, HoldOp::Poll);
+                if let Some(f) = self.pop_ready(&mut s, idx, now) {
+                    task = Some(Task::Poll(f));
+                    break;
+                }
+            }
+            if task.is_none() && self.try_reserve_total() {
+                for i in 0..nkinds {
+                    let idx = (rot + i) % nkinds;
+                    let mut s = self.lock_shard(idx, HoldOp::Poll);
+                    if let Some(job) = self.pop_queued(&mut s, idx, now) {
+                        s.live.insert(job.request.0);
+                        self.in_flight_gauge[idx].fetch_add(1, Ordering::Relaxed);
+                        rot = rot.wrapping_add(1);
+                        task = Some(Task::Admit(idx, job));
+                        break;
                     }
                 }
-            };
-            self.fail_lapsed(lapsed);
+                if task.is_none() {
+                    // reserved a slot but every admission queue was empty
+                    self.release_total();
+                }
+            }
             match task {
                 Some(Task::Poll(f)) => Self::run_poll(&self, f),
                 Some(Task::Admit(idx, job)) => Self::admit(&self, idx, job),
-                None => {}
+                None => {
+                    // idle, or at the in-flight cap: park until a
+                    // submit/waker/capacity event or the next sweep is
+                    // due — unless this iteration collected lapsed work,
+                    // which was failed fast above and may have freed
+                    // capacity worth re-scanning for at once.
+                    if !had_lapsed {
+                        let g = self.events.lock().unwrap();
+                        if *g == seq {
+                            let _ = self.cv.wait_timeout(g, SWEEP_PERIOD).unwrap();
+                        }
+                    }
+                }
             }
         }
     }
 
-    /// Collect every queued/parked request whose deadline has passed
-    /// (fulfilment happens outside the lock, in [`Self::fail_lapsed`]).
-    fn collect_lapsed(s: &mut SchedState, now: Instant, out: &mut Vec<Lapsed>) {
-        for idx in 0..s.queues.len() {
-            for tenant in 0..s.queues[idx].len() {
-                let q = &mut s.queues[idx][tenant];
-                if q.iter().all(|j| j.deadline > now) {
-                    continue;
+    /// Collect every queued/parked request of one shard whose deadline
+    /// has passed (fulfilment happens outside the lock, in
+    /// [`Self::fail_lapsed`]). The sweep visits shards one at a time —
+    /// an expiry freeing capacity in shard 0 may let a racing worker
+    /// admit an already-expired queued job from a not-yet-swept shard,
+    /// but `admit` checks the deadline first and counts it identically
+    /// (`expired_in_queue`), so the outcome is race-invariant.
+    fn collect_lapsed(&self, s: &mut ShardState, idx: usize, now: Instant, out: &mut Vec<Lapsed>) {
+        for tenant in 0..s.queues.len() {
+            let q = &mut s.queues[tenant];
+            if q.iter().all(|j| j.deadline > now) {
+                continue;
+            }
+            let mut kept = VecDeque::with_capacity(q.len());
+            for job in q.drain(..) {
+                if job.deadline <= now {
+                    self.depth_gauge[idx][job.tenant].fetch_sub(1, Ordering::Relaxed);
+                    out.push(Lapsed {
+                        idx,
+                        tenant: job.tenant,
+                        submitted: job.submitted,
+                        timeout: job.timeout,
+                        cell: job.cell,
+                        request: job.request,
+                        started: false,
+                    });
+                } else {
+                    kept.push_back(job);
                 }
-                let mut kept = VecDeque::with_capacity(q.len());
-                for job in q.drain(..) {
-                    if job.deadline <= now {
-                        out.push(Lapsed {
-                            idx,
-                            tenant: job.tenant,
-                            submitted: job.submitted,
-                            timeout: job.timeout,
-                            cell: job.cell,
-                            request: job.request,
-                            started: false,
-                        });
-                    } else {
-                        kept.push_back(job);
-                    }
-                }
-                let emptied = kept.is_empty();
-                *q = kept;
-                if emptied {
-                    // expiry emptied this tenant's sub-queue: it must not
-                    // bank its granted-but-unused DRR deficit
-                    s.drr[idx].on_empty(tenant);
-                }
+            }
+            let emptied = kept.is_empty();
+            *q = kept;
+            if emptied {
+                // expiry emptied this tenant's sub-queue: it must not
+                // bank its granted-but-unused DRR deficit
+                s.drr.on_empty(tenant);
             }
         }
         // Ready entries expire too: a non-FIFO policy (`stage`) may defer
@@ -809,9 +1036,9 @@ impl IngressInner {
                 s.live.remove(&f.request.0);
                 s.woken.remove(&f.request.0);
                 s.cancelled.remove(&f.request.0);
-                s.in_flight[f.idx] -= 1;
+                self.drop_in_flight(idx);
                 out.push(Lapsed {
-                    idx: f.idx,
+                    idx,
                     tenant: f.tenant,
                     submitted: f.submitted,
                     timeout: f.timeout,
@@ -830,9 +1057,9 @@ impl IngressInner {
             s.live.remove(&rid);
             s.woken.remove(&rid);
             s.cancelled.remove(&rid);
-            s.in_flight[f.idx] -= 1;
+            self.drop_in_flight(idx);
             out.push(Lapsed {
-                idx: f.idx,
+                idx,
                 tenant: f.tenant,
                 submitted: f.submitted,
                 timeout: f.timeout,
@@ -874,7 +1101,8 @@ impl IngressInner {
     /// live). Exactly-one-terminal-outcome holds because every terminal
     /// path owns its entry exclusively: a request is in at most one of
     /// {queue, ready, parked, being-polled}, and removal happens under
-    /// the scheduler lock.
+    /// its workflow's shard lock (the ticket carries `idx`, so the cancel
+    /// keys straight into the owning shard).
     fn cancel(&self, idx: usize, request: RequestId) -> bool {
         let rid = request.0;
         enum Found {
@@ -886,28 +1114,29 @@ impl IngressInner {
             Gone,
         }
         let found = {
-            let mut s = self.sched.lock().unwrap();
-            let queued_at = s.queues[idx].iter().enumerate().find_map(|(t, q)| {
+            let mut s = self.lock_shard(idx, HoldOp::Complete);
+            let queued_at = s.queues.iter().enumerate().find_map(|(t, q)| {
                 q.iter().position(|j| j.request.0 == rid).map(|pos| (t, pos))
             });
             if let Some((tenant, pos)) = queued_at {
-                let job = s.queues[idx][tenant].remove(pos).expect("position just found");
-                if s.queues[idx][tenant].is_empty() {
+                let job = s.queues[tenant].remove(pos).expect("position just found");
+                self.depth_gauge[idx][tenant].fetch_sub(1, Ordering::Relaxed);
+                if s.queues[tenant].is_empty() {
                     // cancel drained this tenant's sub-queue: forfeit its
                     // banked DRR deficit (same rule as the expiry sweep)
-                    s.drr[idx].on_empty(tenant);
+                    s.drr.on_empty(tenant);
                 }
                 Found::Queued(job)
             } else if let Some(f) = s.parked.remove(&rid) {
                 s.live.remove(&rid);
                 s.woken.remove(&rid);
-                s.in_flight[f.idx] -= 1;
+                self.drop_in_flight(idx);
                 Found::Started(f)
             } else if let Some(pos) = s.ready.iter().position(|f| f.request.0 == rid) {
                 let f = s.ready.remove(pos).expect("position just found");
                 s.live.remove(&rid);
                 s.woken.remove(&rid);
-                s.in_flight[f.idx] -= 1;
+                self.drop_in_flight(idx);
                 Found::Started(f)
             } else if s.live.contains(&rid) {
                 // Being polled right now — the only moment a live request
@@ -947,7 +1176,7 @@ impl IngressInner {
             self.trace.record(f.request, TraceKind::Cancelled, 0);
         }
         self.maybe_publish(f.idx);
-        self.cv.notify_one(); // in-flight capacity freed
+        self.notify(false); // in-flight capacity freed
     }
 
     /// Start one admitted request: build its resumable driver (unless the
@@ -958,17 +1187,17 @@ impl IngressInner {
         if now >= job.deadline {
             // expired while queued: fail fast, never build the driver
             {
-                let mut s = this.sched.lock().unwrap();
+                let mut s = this.lock_shard(idx, HoldOp::Complete);
                 s.live.remove(&job.request.0);
                 s.cancelled.remove(&job.request.0);
-                s.in_flight[idx] -= 1;
+                this.drop_in_flight(idx);
             }
             if job.cell.fulfil(Err(Error::Deadline(job.timeout)), this.since(job.submitted)) {
                 this.expired_in_queue[idx][job.tenant].fetch_add(1, Ordering::Relaxed);
                 this.trace.record(job.request, TraceKind::Expired, 0);
             }
             this.maybe_publish(idx);
-            this.cv.notify_one(); // in-flight capacity freed
+            this.notify(false); // in-flight capacity freed
             return;
         }
         this.trace.record(job.request, TraceKind::Scheduled, 0);
@@ -1022,6 +1251,7 @@ impl IngressInner {
             Step::Done(result) => this.finish(f, result),
             Step::Pending { waiting_on } => {
                 let rid = f.request.0;
+                let shard = f.idx;
                 let first_wait = waiting_on.first().map_or(0, |id| id.0);
                 // Track stage progress for the scheduling policies (the
                 // driver advanced as far as readiness allowed before
@@ -1049,13 +1279,13 @@ impl IngressInner {
                     }
                 }
                 let cancelled = {
-                    let mut s = this.sched.lock().unwrap();
+                    let mut s = this.lock_shard(shard, HoldOp::Poll);
                     if s.cancelled.remove(&rid) {
                         // a cancel landed mid-poll: this request parks
                         // nowhere — it is terminal now
                         s.live.remove(&rid);
                         s.woken.remove(&rid);
-                        s.in_flight[f.idx] -= 1;
+                        this.drop_in_flight(shard);
                         Some(f)
                     } else if s.woken.remove(&rid) {
                         // a waker fired mid-poll: run again rather than
@@ -1091,11 +1321,13 @@ impl IngressInner {
                 // holds a Weak ref: a strong one would cycle (table →
                 // cell → waker → scheduler → deployment → table) and leak
                 // the whole deployment through any never-terminal cell.
+                // It captures the shard index alongside the request id,
+                // so the wake keys straight into the owning lock domain.
                 for cell in cells {
                     let inner = Arc::downgrade(this);
                     cell.subscribe(Box::new(move || {
                         if let Some(inner) = inner.upgrade() {
-                            inner.wake(rid);
+                            inner.wake(shard, rid);
                         }
                     }));
                 }
@@ -1104,10 +1336,12 @@ impl IngressInner {
     }
 
     /// Waker target: move a parked continuation to the ready queue. Fired
-    /// by future resolution from component-controller threads.
-    fn wake(&self, rid: u64) {
+    /// by future resolution from component-controller threads. Touches
+    /// only the owning shard's lock (`idx` was captured when the waker
+    /// subscribed).
+    fn wake(&self, idx: usize, rid: u64) {
         let now = self.clock.now();
-        let mut s = self.sched.lock().unwrap();
+        let mut s = self.lock_shard(idx, HoldOp::Wake);
         if let Some(mut f) = s.parked.remove(&rid) {
             if let Some(at) = f.parked_at.take() {
                 f.future_wait += now.saturating_duration_since(at);
@@ -1116,7 +1350,7 @@ impl IngressInner {
             self.trace.record(f.request, TraceKind::Resumed, 0);
             s.ready.push_back(f);
             drop(s);
-            self.cv.notify_one();
+            self.notify(false);
         } else if s.live.contains(&rid) {
             // being polled right now: record the wakeup for the poller
             s.woken.insert(rid);
@@ -1127,11 +1361,11 @@ impl IngressInner {
     /// Account and fulfil one finished request.
     fn finish(&self, f: InFlight, result: Result<Value>) {
         {
-            let mut s = self.sched.lock().unwrap();
+            let mut s = self.lock_shard(f.idx, HoldOp::Complete);
             s.live.remove(&f.request.0);
             s.woken.remove(&f.request.0);
             s.cancelled.remove(&f.request.0); // completion won the race
-            s.in_flight[f.idx] -= 1;
+            self.drop_in_flight(f.idx);
         }
         // Engine-service total must be read *before* the completion hook
         // evicts the per-request future index.
@@ -1171,7 +1405,7 @@ impl IngressInner {
             self.trace.record(f.request, kind, latency.as_nanos() as u64);
         }
         self.maybe_publish(f.idx);
-        self.cv.notify_one(); // in-flight capacity freed: admit more
+        self.notify(false); // in-flight capacity freed: admit more
     }
 }
 
@@ -1246,26 +1480,28 @@ impl Ingress {
             .clone()
             .unwrap_or_else(|| TraceSink::recording(d.cfg().ingress.trace.capacity, clock.clone()));
         d.trace_slot().install(trace.clone());
+        let epoch = clock.now();
         let inner = Arc::new(IngressInner {
             d: d.clone(),
             kinds: kinds.to_vec(),
             tenants,
             tenants_configured,
-            sched: Mutex::new(SchedState {
-                queues: kinds
-                    .iter()
-                    .map(|_| weights.iter().map(|_| VecDeque::new()).collect())
-                    .collect(),
-                drr: kinds.iter().map(|_| Drr::new(&weights)).collect(),
-                ready: VecDeque::new(),
-                parked: HashMap::new(),
-                woken: HashSet::new(),
-                cancelled: HashSet::new(),
-                nudge: Vec::new(),
-                live: HashSet::new(),
-                in_flight: vec![0; kinds.len()],
-                next_sweep: clock.now() + SWEEP_PERIOD,
-            }),
+            shards: kinds
+                .iter()
+                .map(|_| {
+                    Mutex::new(ShardState {
+                        queues: weights.iter().map(|_| VecDeque::new()).collect(),
+                        drr: Drr::new(&weights),
+                        ready: VecDeque::new(),
+                        parked: HashMap::new(),
+                        woken: HashSet::new(),
+                        cancelled: HashSet::new(),
+                        nudge: Vec::new(),
+                        live: HashSet::new(),
+                    })
+                })
+                .collect(),
+            events: Mutex::new(0),
             cv: Condvar::new(),
             admission: kinds.iter().map(|_| AdmissionController::new(policy.clone())).collect(),
             tenant_adm: kinds
@@ -1291,7 +1527,16 @@ impl Ingress {
             clock,
             workers,
             max_in_flight: opts.max_in_flight.max(1),
-            last_publish: kinds.iter().map(|_| Mutex::new(Instant::now())).collect(),
+            depth_gauge: kinds
+                .iter()
+                .map(|_| weights.iter().map(|_| AtomicUsize::new(0)).collect())
+                .collect(),
+            in_flight_gauge: kinds.iter().map(|_| AtomicUsize::new(0)).collect(),
+            total_in_flight: AtomicUsize::new(0),
+            epoch,
+            next_sweep: AtomicU64::new(SWEEP_PERIOD.as_nanos() as u64),
+            last_publish: kinds.iter().map(|_| AtomicU64::new(0)).collect(),
+            hold: opts.hold.clone(),
             stop: AtomicBool::new(false),
         });
         let joins = (0..workers)
@@ -1324,11 +1569,12 @@ impl Ingress {
             .ok_or_else(|| Error::Config(format!("ingress does not serve `{}`", kind.name())))?;
         let tenant = inner.tenant_index(tenant.as_deref())?;
         let verdict = {
-            let mut s = inner.sched.lock().unwrap();
-            // Checked under the scheduler lock: `stop` drains the queues
-            // under this same lock after setting the flag, so a submit
-            // either lands before the drain (and is failed by it) or
-            // observes the flag here — no ticket is ever left unfulfilled.
+            let mut s = inner.lock_shard(idx, HoldOp::Submit);
+            // Checked under the shard lock: `stop` drains each shard
+            // under its own lock after setting the flag, so a submit
+            // either lands before that shard's drain (and is failed by
+            // it) or observes the flag here — no ticket is ever left
+            // unfulfilled.
             if inner.stop.load(Ordering::Relaxed) {
                 return Err(Error::Shed(kind.name().into(), "ingress stopped".into()));
             }
@@ -1339,24 +1585,28 @@ impl Ingress {
             // queued depth, then the tenant's own bucket — and the final
             // verdict is counted exactly once, on the tenant's
             // controller (the aggregate counters are per-tenant sums).
+            // The depth gauge only moves under this shard's lock, so the
+            // bounded-cap check is as exact as it was under one big lock.
             let now = inner.clock.now();
-            let decision = inner.admission[idx].decide_at(s.depth(idx), now).and_then(|()| {
-                inner.tenant_adm[idx][tenant].decide_at(0, now).map_err(|reason| {
-                    format!("tenant `{}`: {reason}", inner.tenants[tenant].name)
-                })
-            });
+            let decision = inner.admission[idx].decide_at(inner.depth_of(idx), now).and_then(
+                |()| {
+                    inner.tenant_adm[idx][tenant].decide_at(0, now).map_err(|reason| {
+                        format!("tenant `{}`: {reason}", inner.tenants[tenant].name)
+                    })
+                },
+            );
             inner.tenant_adm[idx][tenant].record(decision.is_ok());
             match decision {
                 Ok(()) => {
                     let session = session.unwrap_or_else(|| inner.d.new_session());
                     let request = inner.d.new_request_id();
                     let cell = TicketCell::new();
-                    // First two timeline events, recorded inside the sched
+                    // First two timeline events, recorded inside the shard
                     // lock so they cannot interleave after `Scheduled` from
                     // a racing worker that pops the job immediately.
                     inner.trace.record(request, TraceKind::Admitted, 0);
                     inner.trace.record(request, TraceKind::Queued, tenant as u64);
-                    s.queues[idx][tenant].push_back(Queued {
+                    s.queues[tenant].push_back(Queued {
                         session,
                         request,
                         tenant,
@@ -1367,6 +1617,7 @@ impl Ingress {
                         timeout,
                         cell: cell.clone(),
                     });
+                    inner.depth_gauge[idx][tenant].fetch_add(1, Ordering::Relaxed);
                     Ok(Ticket {
                         request,
                         session,
@@ -1380,27 +1631,29 @@ impl Ingress {
             }
         };
         if verdict.is_ok() {
-            inner.cv.notify_one();
+            inner.notify(false);
         }
         inner.maybe_publish(idx);
         verdict
     }
 
     /// Current depth of a workflow's admission queue (requests not yet
-    /// started; started work is [`Self::in_flight`]).
+    /// started; started work is [`Self::in_flight`]). Reads the atomic
+    /// gauge — no shard lock, so the HTTP `/metrics` and `/healthz`
+    /// handlers can never stall behind a busy scheduler.
     pub fn depth(&self, kind: WorkflowKind) -> usize {
         match self.inner.kind_index(kind) {
-            Some(idx) => self.inner.sched.lock().unwrap().depth(idx),
+            Some(idx) => self.inner.depth_of(idx),
             None => 0,
         }
     }
 
     /// Started-but-unfinished requests for a workflow (the multiplexing
     /// gauge: in-flight ÷ workers is how many requests each thread is
-    /// carrying).
+    /// carrying). Lock-free, like [`Self::depth`].
     pub fn in_flight(&self, kind: WorkflowKind) -> usize {
         match self.inner.kind_index(kind) {
-            Some(idx) => self.inner.sched.lock().unwrap().in_flight[idx],
+            Some(idx) => self.inner.in_flight_gauge[idx].load(Ordering::Relaxed),
             None => 0,
         }
     }
@@ -1423,31 +1676,38 @@ impl Ingress {
     /// Idempotent; also runs on drop.
     pub fn stop(&self) {
         self.inner.stop.store(true, Ordering::Relaxed);
-        self.inner.cv.notify_all();
+        self.inner.notify(true);
         for j in self.joins.lock().unwrap().drain(..) {
             let _ = j.join();
         }
-        // Drain under the scheduler lock (pairs with the stop check in
-        // `submit`), fulfil outside it.
+        // Drain shard by shard, each under its own lock (pairs with the
+        // stop check in `submit` — the flag is already set, so a submit
+        // racing a drain either lands before it and is failed by it, or
+        // observes the flag and sheds), fulfil outside the locks. Workers
+        // are already joined, so nothing is mid-poll: `live` is exactly
+        // ready + parked.
         let (queued, inflight): (Vec<(usize, Queued)>, Vec<InFlight>) = {
-            let mut s = self.inner.sched.lock().unwrap();
             let mut queued = Vec::new();
-            for (i, tqs) in s.queues.iter_mut().enumerate() {
-                for dq in tqs.iter_mut() {
+            let mut inflight: Vec<InFlight> = Vec::new();
+            for idx in 0..self.inner.kinds.len() {
+                let mut s = self.inner.lock_shard(idx, HoldOp::Complete);
+                for (tenant, dq) in s.queues.iter_mut().enumerate() {
                     for j in dq.drain(..) {
-                        queued.push((i, j));
+                        self.inner.depth_gauge[idx][tenant].fetch_sub(1, Ordering::Relaxed);
+                        queued.push((idx, j));
                     }
                 }
+                let drained = s.ready.len() + s.parked.len();
+                inflight.extend(s.ready.drain(..));
+                inflight.extend(s.parked.drain().map(|(_, f)| f));
+                for _ in 0..drained {
+                    self.inner.drop_in_flight(idx);
+                }
+                s.live.clear();
+                s.woken.clear();
+                s.cancelled.clear();
+                s.nudge.clear();
             }
-            let mut inflight: Vec<InFlight> = s.ready.drain(..).collect();
-            inflight.extend(s.parked.drain().map(|(_, f)| f));
-            for f in &inflight {
-                s.live.remove(&f.request.0);
-                s.in_flight[f.idx] -= 1;
-            }
-            s.woken.clear();
-            s.cancelled.clear();
-            s.nudge.clear();
             (queued, inflight)
         };
         for (idx, job) in queued {
@@ -2011,6 +2271,43 @@ mod tests {
         let m = ing.metrics(WorkflowKind::Router).unwrap();
         assert_eq!(m.trace_dropped, 0);
         assert_eq!(m.breakdown.queue_wait.count, 1, "histograms fold regardless of tracing");
+        ing.stop();
+        d.shutdown();
+    }
+
+    /// ISSUE 8 acceptance: no scheduler-shard lock is acquired anywhere on
+    /// the metrics read path. This thread *holds* a shard lock while
+    /// another thread runs the full read path — snapshot (what
+    /// `ing.metrics` and `GET /metrics` serve), publish (the coordinator
+    /// collect path), and the depth / in-flight gauges — and must see it
+    /// complete. If any of those ever re-acquires a shard lock, the
+    /// reader blocks and the receive below times out.
+    #[test]
+    fn metrics_read_path_never_takes_a_shard_lock() {
+        let d = fast_router();
+        let ing = Ingress::start_with(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, 2);
+        let timeout = Duration::from_secs(20);
+        let t = ing.submit(req(WorkflowKind::Router, router_input(), timeout)).unwrap();
+        t.wait(timeout).unwrap();
+
+        let guard = ing.inner.shards[0].lock().unwrap();
+        let inner = ing.inner.clone();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let reader = std::thread::spawn(move || {
+            let m = inner.snapshot(0);
+            inner.publish(0);
+            let depth = inner.depth_of(0);
+            let in_flight = inner.in_flight_gauge[0].load(Ordering::Relaxed);
+            tx.send((m.completed, depth, in_flight)).unwrap();
+        });
+        let (completed, depth, in_flight) = rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("metrics read path blocked behind a held shard lock");
+        assert_eq!(completed, 1);
+        assert_eq!(depth, 0);
+        assert_eq!(in_flight, 0, "the drained gauge is served from atomics");
+        drop(guard);
+        reader.join().unwrap();
         ing.stop();
         d.shutdown();
     }

@@ -6,6 +6,11 @@
 //! nalar info    [--config path.json]      # validate + describe a deployment
 //! nalar bench   [--quick] [--only fig9,fig10,table4,sec62] [--out DIR]
 //!               [--check-only]            # writes/validates BENCH_*.json
+//! nalar bench contention [--quick] [--out DIR] [--check-only]
+//!               # scheduler lock-scaling microbenchmark: sweeps worker
+//!               # threads × workflow shards × tenants, reporting
+//!               # submit/wake/poll/complete throughput and p99
+//!               # shard-lock hold time -> BENCH_contention.json
 //! nalar serve   --workflow router|financial|swe [--system nalar|...] [--secs 30]
 //!               [--rps N] [--config path.json]
 //!               [--listen 127.0.0.1:8080] [--port-file P] [--stop-file P]
@@ -96,6 +101,7 @@ fn main() -> nalar::Result<()> {
                  [--workflow financial|router|swe] \
                  [--system nalar|ayo|crew|autogen] [--rps N] [--secs N] [--config file.json] \
                  | bench [--quick] [--only fig9,fig10,table4,sec62] [--out DIR] [--check-only] \
+                 | bench contention [--quick] [--out DIR] [--check-only] \
                  | serve [--workflow ...] [--secs N] [--rps N] [--listen ADDR] \
                  [--port-file P] [--stop-file P] [--time-scale F] \
                  | loadgen [--workload router|financial|swe] [--rps LIST|START:END:STEP] \
@@ -172,6 +178,17 @@ fn cmd_info(args: &Args) -> nalar::Result<()> {
 /// `BENCH_*.json` reports. `--quick` is the CI-smoke profile.
 fn cmd_bench(args: &Args) -> nalar::Result<()> {
     let out_dir = PathBuf::from(args.str_or("out", "."));
+    // `nalar bench contention`: the scheduler lock-scaling microbenchmark
+    // (own subcommand, like `nalar loadgen` — not part of `bench::ALL`).
+    if args.positional.get(1).map(|s| s.as_str()) == Some("contention") {
+        if args.flag("check-only") {
+            return bench::check_files(&out_dir, &[bench::CONTENTION]);
+        }
+        let quick = args.flag("quick") || std::env::var("NALAR_BENCH_QUICK").is_ok();
+        let path = bench::run_contention(quick, &out_dir)?;
+        println!("bench reports written:\n  {}", path.display());
+        return Ok(());
+    }
     let only: Option<Vec<String>> = args
         .get("only")
         .map(|s| s.split(',').map(|p| p.trim().to_string()).collect());

@@ -57,6 +57,15 @@ impl Clock {
             Some(v) => v.now(),
         }
     }
+
+    /// Monotonic nanoseconds since `epoch` on this clock's time axis
+    /// (saturating at zero for pre-epoch instants). The ingress publish
+    /// and sweep throttles store these in atomics and advance them by
+    /// compare-and-swap — lock-free, and still driven by `advance()` on
+    /// a virtual clock exactly like deadlines are.
+    pub fn nanos_since(&self, epoch: Instant) -> u64 {
+        self.now().saturating_duration_since(epoch).as_nanos() as u64
+    }
 }
 
 impl std::fmt::Debug for Clock {
@@ -86,5 +95,16 @@ mod tests {
         let t0 = clock.now();
         std::thread::sleep(Duration::from_millis(2));
         assert!(clock.now() > t0);
+    }
+
+    #[test]
+    fn nanos_since_follows_the_virtual_axis_and_saturates() {
+        let (clock, v) = Clock::manual();
+        let epoch = clock.now();
+        assert_eq!(clock.nanos_since(epoch), 0);
+        v.advance(Duration::from_millis(25));
+        assert_eq!(clock.nanos_since(epoch), 25_000_000);
+        // a pre-epoch reference saturates instead of wrapping
+        assert_eq!(clock.nanos_since(epoch + Duration::from_secs(1)), 0);
     }
 }

@@ -563,3 +563,93 @@ fn run_mixed_deadline_trace(schedule: SchedulePolicy) -> usize {
     d.shutdown();
     misses
 }
+
+/// Cross-shard stop/sweep drain (ISSUE 8): three workflows — three
+/// scheduler lock domains — each carrying one parked request about to
+/// expire, one parked request that will complete, and one queued request
+/// the in-flight cap keeps waiting. One virtual-clock jump sweeps every
+/// shard (the sweep visits lock domains one at a time); after the dust
+/// settles, every shard's tables, the atomic gauges, and the future
+/// index must all reach zero — sharding must not let any domain leak.
+#[test]
+fn cross_shard_stop_and_sweep_drain_every_shard_and_the_future_index() {
+    let d = fast_router();
+    let (clock, vclock) = Clock::manual();
+    let kinds = [WorkflowKind::Router, WorkflowKind::Financial, WorkflowKind::Swe];
+    let mut opts = SchedulerOpts::new(2, 6); // cap = exactly the parked set
+    opts.clock = clock;
+    let ing = Ingress::start_with_opts(&d, &kinds, AdmissionPolicy::Unbounded, opts);
+    let eng = ScriptedEngine::new();
+    let submit = |kind: WorkflowKind, label: &str, deadline: Duration| {
+        ing.submit(
+            SubmitRequest::workflow(kind)
+                .driver(eng.driver(label, 1))
+                .deadline(deadline),
+        )
+        .unwrap()
+    };
+    // Per shard: one short-deadline and one long-deadline request; all
+    // six fit the in-flight cap, start, and park on their scripted call.
+    let mut shorts = Vec::new();
+    let mut longs = Vec::new();
+    for kind in kinds {
+        shorts.push(submit(kind, &format!("{}-short", kind.name()), Duration::from_secs(1)));
+        longs.push(submit(kind, &format!("{}-long", kind.name()), Duration::from_secs(3600)));
+    }
+    assert!(eng.wait_created(6, Duration::from_secs(5)), "all six must park");
+    // Per shard: one more short-deadline request — the cap is reached,
+    // so it waits in the queue and will expire there.
+    let queued: Vec<Ticket> = kinds
+        .iter()
+        .map(|&kind| submit(kind, &format!("{}-queued", kind.name()), Duration::from_secs(1)))
+        .collect();
+    // One clock jump expires every short deadline in every shard. The
+    // sweep fails the parked shorts (freeing capacity shard by shard);
+    // the queued shorts are counted `expired_in_queue` whether the sweep
+    // collects them or a newly freed worker admits them first — `admit`
+    // checks the deadline before building the driver.
+    vclock.advance(Duration::from_secs(2));
+    for t in &shorts {
+        match t.wait(Duration::from_secs(5)) {
+            Err(Error::Deadline(_)) => {}
+            other => panic!("parked short must expire, got {other:?}"),
+        }
+    }
+    for t in &queued {
+        match t.wait(Duration::from_secs(5)) {
+            Err(Error::Deadline(_)) => {}
+            other => panic!("queued short must expire, got {other:?}"),
+        }
+    }
+    // Resolve all six scripted calls: the failed shorts' cells are
+    // already failed (resolve is a lost race, a no-op), the longs wake,
+    // finish, and complete.
+    for i in 0..6 {
+        eng.cell(i).resolve(json!(1), 0);
+    }
+    for t in &longs {
+        t.wait(Duration::from_secs(5)).unwrap();
+    }
+    // Every lock domain drained, and the counters split per shard the
+    // same way: 1 completed, 1 failed (parked expiry), 1 expired in queue.
+    for kind in kinds {
+        settle("per-shard counters settle", || {
+            let m = ing.metrics(kind).unwrap();
+            m.completed == 1 && m.failed == 1 && m.expired_in_queue == 1
+        });
+        assert_drained(&ing, kind);
+        let m = ing.metrics(kind).unwrap();
+        assert_eq!(m.accepted, 3, "{}", kind.name());
+        assert_eq!(m.cancelled, 0, "{}", kind.name());
+    }
+    // The future index drained with the shards: terminal requests must
+    // not leave per-request entries behind.
+    settle("future index drains", || d.table().request_index_len() == 0);
+    ing.stop();
+    // After stop, GC leaves the future table itself empty — and the
+    // atomic live-count agrees with a full shard walk.
+    d.table().gc_terminal();
+    assert_eq!(d.table().len(), 0, "no live futures survive the drain");
+    d.table().debug_assert_len();
+    d.shutdown();
+}
