@@ -1,6 +1,6 @@
 # Local entrypoints — identical to what CI runs (.github/workflows/ci.yml).
 
-.PHONY: build test test-scheduler test-fairness fmt clippy lint bench bench-quick bench-contention bench-contention-quick loadgen loadgen-quick loadgen-hc serve-smoke artifacts clean
+.PHONY: build test test-scheduler test-fairness fmt clippy lint bench bench-quick bench-contention bench-contention-quick bench-recovery bench-recovery-quick loadgen loadgen-quick loadgen-hc serve-smoke artifacts clean
 
 build:
 	cargo build --release --all-targets
@@ -55,6 +55,20 @@ bench-contention:
 bench-contention-quick:
 	cargo run --release -- bench contention --quick
 	cargo run --release -- bench contention --check-only
+
+# Kill-and-recover benchmark (ISSUE 9): journals a run, halts with
+# requests in flight, replays the journal into a fresh deployment and
+# drives the recovered requests to completion -> BENCH_recovery.json
+# (schema arm recovery/v1; the validator enforces count conservation).
+# The full profile sweeps the always/batch/never fsync policies; the
+# quick profile is the CI recovery-smoke.
+bench-recovery:
+	cargo run --release -- bench recovery
+	cargo run --release -- bench recovery --check-only
+
+bench-recovery-quick:
+	cargo run --release -- bench recovery --quick
+	cargo run --release -- bench recovery --check-only
 
 # Full §6 saturation sweep through the ingress front door: writes
 # BENCH_rps_sweep.json at the repo root (minutes).

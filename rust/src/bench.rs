@@ -37,6 +37,7 @@ use crate::ids::{AgentType, FutureId, InstanceId, Location, NodeId, RequestId, S
 use crate::ingress::{
     AdmissionPolicy, HoldOp, HoldStats, Ingress, SchedulerOpts, SubmitRequest, Ticket,
 };
+use crate::journal::{FsyncPolicy, JournalSink};
 use crate::json;
 use crate::metrics::LatencyRecorder;
 use crate::nodestore::{keys, StoreDirectory};
@@ -64,6 +65,14 @@ pub const RPS_SWEEP: &str = "rps_sweep";
 /// complete throughput and p99 shard-lock hold time across worker-thread
 /// × workflow × tenant sweeps. Schema arm `contention/v1`.
 pub const CONTENTION: &str = "contention";
+
+/// The kill-and-recover scenario written by `nalar bench recovery` (own
+/// subcommand, like [`CONTENTION`]): a journal-enabled ingress is killed
+/// mid-load ([`Ingress::halt`]), its journal replayed into a fresh
+/// ingress ([`Ingress::recover_with`]), and every replayed request is
+/// driven to completion. One point per fsync policy. Schema arm
+/// `recovery/v1`.
+pub const RECOVERY: &str = "recovery";
 
 /// Options for one `nalar bench` invocation.
 #[derive(Debug, Clone)]
@@ -104,11 +113,12 @@ fn check_known(names: &[String], known: &[&str]) -> Result<()> {
 }
 
 /// Every report name the schema gate accepts (`ALL` + the loadgen sweep
-/// + the contention sweep).
+/// + the contention and recovery sweeps).
 fn known_reports() -> Vec<&'static str> {
     let mut v = ALL.to_vec();
     v.push(RPS_SWEEP);
     v.push(CONTENTION);
+    v.push(RECOVERY);
     v
 }
 
@@ -203,6 +213,11 @@ pub fn validate(report: &Value) -> Result<()> {
     if bench == CONTENTION && report.get("arm").as_str() != Some("contention/v1") {
         return Err(fail("contention report: `arm` must be \"contention/v1\"".into()));
     }
+    // Same deal for the kill-and-recover scenario: the point shape is
+    // versioned so the recorded recovery curves stay interpretable.
+    if bench == RECOVERY && report.get("arm").as_str() != Some("recovery/v1") {
+        return Err(fail("recovery report: `arm` must be \"recovery/v1\"".into()));
+    }
     let required: &[&str] = match bench {
         "fig9" => &["workflow", "system", "rps_wall", "rps_paper", "completed", "failed"],
         "fig10" => &["nodes", "agents", "futures"],
@@ -237,6 +252,18 @@ pub fn validate(report: &Value) -> Result<()> {
             "complete_per_s",
             "wake_per_s",
             "hold",
+        ],
+        "recovery" => &[
+            "fsync",
+            "submitted",
+            "completed_before_crash",
+            "inflight_at_crash",
+            "skipped_complete",
+            "recovered",
+            "recovered_completed",
+            "lost",
+            "corrupt",
+            "replay_ms",
         ],
         other => return Err(fail(format!("unknown bench `{other}`"))),
     };
@@ -317,6 +344,31 @@ pub fn validate(report: &Value) -> Result<()> {
                         "{bench} point {i}: hold.{op}.count not an integer"
                     )));
                 }
+            }
+        }
+        // Recovery points must conserve requests: everything admitted is
+        // either terminal before the crash or in flight at it, and every
+        // in-flight request is either replayed or accounted lost.
+        if bench == RECOVERY {
+            let n = |k: &str| p.get(k).as_u64();
+            let (Some(sub), Some(done), Some(inflight), Some(rec), Some(lost)) = (
+                n("submitted"),
+                n("completed_before_crash"),
+                n("inflight_at_crash"),
+                n("recovered"),
+                n("lost"),
+            ) else {
+                return Err(fail(format!("{bench} point {i}: counts must be integers")));
+            };
+            if done + inflight != sub || rec + lost != inflight {
+                return Err(fail(format!(
+                    "{bench} point {i}: counts don't conserve \
+                     (submitted = completed_before_crash + inflight_at_crash, \
+                     inflight_at_crash = recovered + lost)"
+                )));
+            }
+            if p.get("replay_ms").as_f64().is_none() {
+                return Err(fail(format!("{bench} point {i}: replay_ms not numeric")));
             }
         }
         let lat = p.get("latency");
@@ -956,6 +1008,173 @@ pub fn run_contention(quick: bool, out_dir: &Path) -> Result<PathBuf> {
     Ok(path)
 }
 
+// --------------------------------------------------------------- recovery
+
+/// One kill-and-recover cell. Phase 1 runs a journal-enabled ingress
+/// under `fsync`, submits `total` one-wait scripted requests, resolves
+/// the first `pre` of them (their terminal outcomes reach the journal),
+/// then kills the node with [`Ingress::halt`] — no drain, no shed, the
+/// crash-realistic stop. Phase 2 folds the journal
+/// ([`crate::journal::load`]), replays it into a fresh deployment
+/// ([`Ingress::recover_with`]), re-resolves every re-issued scripted
+/// call, and drives all survivors to completion. Returns one schema
+/// point; the `latency` block is the recovered requests'
+/// replay-to-terminal time in milliseconds.
+fn recovery_point(total: usize, pre: usize, fsync: FsyncPolicy) -> Result<Value> {
+    let path = std::env::temp_dir().join(format!(
+        "nalar-bench-recovery-{}-{}-{total}.jsonl",
+        std::process::id(),
+        fsync.name()
+    ));
+    let _ = std::fs::remove_file(&path);
+    let kinds = [WorkflowKind::Router];
+    let deadline = Duration::from_secs(120);
+
+    // Phase 1: load the node, then kill it mid-flight.
+    let mut cfg = WorkflowKind::Router.config();
+    cfg.time_scale = 0.0005;
+    let d = Deployment::launch(cfg)?;
+    let mut opts = SchedulerOpts::new(2, total.max(1));
+    opts.journal = JournalSink::open(&path, fsync)?;
+    let ing = Ingress::start_with_opts(&d, &kinds, AdmissionPolicy::Unbounded, opts);
+    let eng = ScriptedEngine::new();
+    let mut tickets: Vec<Ticket> = Vec::with_capacity(total);
+    for i in 0..total {
+        let req = SubmitRequest::workflow(WorkflowKind::Router)
+            .driver(eng.driver(&format!("r{i}"), 1))
+            .deadline(deadline);
+        tickets.push(ing.submit(req)?);
+    }
+    if !eng.wait_created(total, Duration::from_secs(60)) {
+        return Err(Error::Msg("recovery bench: scripted calls never appeared".into()));
+    }
+    for i in 0..pre {
+        eng.cell(i).resolve(json!({"ok": true}), 1);
+    }
+    // Wait until the `pre` resolved requests reach terminal (their
+    // records hit the journal); everything else stays parked — in
+    // flight at the crash by construction.
+    let t0 = Instant::now();
+    let mut done = vec![false; total];
+    let mut finished = 0usize;
+    while finished < pre && t0.elapsed() < Duration::from_secs(60) {
+        for (i, t) in tickets.iter().enumerate() {
+            if !done[i] && t.try_take().is_some() {
+                done[i] = true;
+                finished += 1;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    if finished < pre {
+        return Err(Error::Msg("recovery bench: pre-crash completions never landed".into()));
+    }
+    ing.halt();
+    d.shutdown();
+    drop(tickets); // the dead node's callers are gone too
+
+    // Phase 2: fold the journal and replay it into a fresh node.
+    let plan = crate::journal::load(&path)?;
+    let completed_before = plan.completed;
+    let inflight_at_crash = plan.inflight.len();
+    let mut cfg2 = WorkflowKind::Router.config();
+    cfg2.time_scale = 0.0005;
+    let d2 = Deployment::launch(cfg2)?;
+    let mut opts2 = SchedulerOpts::new(2, total.max(1));
+    opts2.journal = JournalSink::open(&path, fsync)?;
+    let ing2 = Ingress::start_with_opts(&d2, &kinds, AdmissionPolicy::Unbounded, opts2);
+    let eng2 = ScriptedEngine::new();
+    let t_replay = Instant::now();
+    let outcome = ing2.recover_with(&plan, |_, _, _| eng2.driver("replay", 1));
+    let replay_ms = t_replay.elapsed().as_secs_f64() * 1e3;
+    let stats = outcome.stats.clone();
+    if stats.recovered > 0 {
+        if !eng2.wait_created(stats.recovered, Duration::from_secs(60)) {
+            return Err(Error::Msg("recovery bench: replayed calls never re-issued".into()));
+        }
+        for i in 0..stats.recovered {
+            eng2.cell(i).resolve(json!({"ok": true}), 1);
+        }
+    }
+    let rec = LatencyRecorder::new();
+    let mut recovered_completed = 0usize;
+    for t in &outcome.tickets {
+        t.wait(deadline)?;
+        recovered_completed += 1;
+        if let Some(l) = t.latency() {
+            rec.record(l);
+        }
+    }
+    if recovered_completed == 0 {
+        rec.record(Duration::ZERO); // the schema needs quantiles even for an empty replay
+    }
+    ing2.stop();
+    d2.shutdown();
+    let _ = std::fs::remove_file(&path);
+
+    let mut p = json!({
+        "fsync": fsync.name(),
+        "submitted": total,
+        "completed_before_crash": completed_before,
+        "inflight_at_crash": inflight_at_crash,
+        "skipped_complete": stats.skipped_complete,
+        "recovered": stats.recovered,
+        "recovered_completed": recovered_completed,
+        "lost": stats.lost,
+        "corrupt": stats.corrupt,
+        "replay_ms": replay_ms
+    });
+    p.insert("latency", rec.summary_scaled(1e3).to_json());
+    Ok(p)
+}
+
+/// `nalar bench recovery`: the kill-and-recover scenario (ROADMAP
+/// "durable request journal"). One point per fsync policy, so the
+/// report shows what each durability level costs and that replay is
+/// lossless under all of them (`lost` stays 0, counts conserve — the
+/// schema gate enforces both).
+pub fn recovery(quick: bool) -> Result<Value> {
+    let (total, pre) = if quick { (64, 16) } else { (512, 128) };
+    let policies: &[FsyncPolicy] = if quick {
+        &[FsyncPolicy::Batch]
+    } else {
+        &[FsyncPolicy::Always, FsyncPolicy::Batch, FsyncPolicy::Never]
+    };
+    let mut table = Table::new(&[
+        "fsync", "submitted", "done@crash", "inflight", "recovered", "lost", "replay(ms)",
+    ]);
+    let mut points = Vec::new();
+    for &f in policies {
+        let p = recovery_point(total, pre, f)?;
+        table.row(&[
+            f.name().to_string(),
+            p.get("submitted").as_u64().unwrap_or(0).to_string(),
+            p.get("completed_before_crash").as_u64().unwrap_or(0).to_string(),
+            p.get("inflight_at_crash").as_u64().unwrap_or(0).to_string(),
+            p.get("recovered").as_u64().unwrap_or(0).to_string(),
+            p.get("lost").as_u64().unwrap_or(0).to_string(),
+            format!("{:.1}", p.get("replay_ms").as_f64().unwrap_or(0.0)),
+        ]);
+        points.push(p);
+    }
+    println!("\n=== Recovery — kill-and-recover via the request journal ===");
+    table.print();
+    let mut r = report(RECOVERY, quick, "ms", points);
+    r.insert("arm", "recovery/v1");
+    Ok(r)
+}
+
+/// Run the kill-and-recover scenario, schema-validate it, and write
+/// `BENCH_recovery.json` (the `nalar bench recovery` subcommand).
+pub fn run_recovery(quick: bool, out_dir: &Path) -> Result<PathBuf> {
+    let t0 = Instant::now();
+    let r = recovery(quick)?;
+    validate(&r)?;
+    let path = write_report(out_dir, RECOVERY, &r)?;
+    println!("[bench] recovery done in {:.1?} -> {}", t0.elapsed(), path.display());
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1152,6 +1371,62 @@ mod tests {
         // every submit held the shard lock exactly once
         assert_eq!(p.get("hold").get("submit").get("count").as_u64(), Some(40));
         assert!(p.get("hold").get("poll").get("count").as_u64().unwrap() >= 80);
+    }
+
+    /// A well-formed recovery point: 64 submitted, 16 terminal before
+    /// the crash, all 48 survivors replayed and completed.
+    fn recovery_base_point() -> Value {
+        let mut p = json!({
+            "fsync": "batch", "submitted": 64, "completed_before_crash": 16,
+            "inflight_at_crash": 48, "skipped_complete": 16, "recovered": 48,
+            "recovered_completed": 48, "lost": 0, "corrupt": 0, "replay_ms": 3.5
+        });
+        p.insert("latency", lat());
+        p
+    }
+
+    #[test]
+    fn validate_accepts_recovery_points() {
+        // the report must carry the `recovery/v1` arm tag
+        let untagged = minimal_report(RECOVERY, recovery_base_point());
+        let err = validate(&untagged).unwrap_err();
+        assert!(err.to_string().contains("recovery/v1"), "{err}");
+        let mut r = minimal_report(RECOVERY, recovery_base_point());
+        r.insert("arm", "recovery/v1");
+        validate(&r).unwrap();
+        // a missing required key fails
+        let mut missing = recovery_base_point();
+        missing.insert("replay_ms", Value::Null);
+        let mut bad = minimal_report(RECOVERY, missing);
+        bad.insert("arm", "recovery/v1");
+        let err = validate(&bad).unwrap_err();
+        assert!(err.to_string().contains("replay_ms"), "{err}");
+        // counts that don't conserve fail: a replayed request can't
+        // appear from (or vanish into) nowhere
+        let mut skewed = recovery_base_point();
+        skewed.insert("recovered", 47u64);
+        let mut bad = minimal_report(RECOVERY, skewed);
+        bad.insert("arm", "recovery/v1");
+        let err = validate(&bad).unwrap_err();
+        assert!(err.to_string().contains("conserve"), "{err}");
+    }
+
+    #[test]
+    fn recovery_point_kills_and_recovers() {
+        // One small real cell: 12 scripted requests, 4 resolved before
+        // the halt, the other 8 replayed from the journal and driven to
+        // completion on the fresh node.
+        let p = recovery_point(12, 4, FsyncPolicy::Never).unwrap();
+        let mut r = minimal_report(RECOVERY, p);
+        r.insert("arm", "recovery/v1");
+        validate(&r).unwrap();
+        let p = &r.get("points").as_arr().unwrap()[0];
+        assert_eq!(p.get("completed_before_crash").as_u64(), Some(4));
+        assert_eq!(p.get("inflight_at_crash").as_u64(), Some(8));
+        assert_eq!(p.get("recovered").as_u64(), Some(8));
+        assert_eq!(p.get("recovered_completed").as_u64(), Some(8));
+        assert_eq!(p.get("lost").as_u64(), Some(0));
+        assert_eq!(p.get("corrupt").as_u64(), Some(0));
     }
 
     #[test]

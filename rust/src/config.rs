@@ -228,6 +228,9 @@ pub struct IngressSettings {
     /// Request-tracing flight recorder (`ingress.trace`; see
     /// [`crate::trace`] and DESIGN.md §10).
     pub trace: TraceSettings,
+    /// Durable request journal (`ingress.journal`; see [`crate::journal`]
+    /// and DESIGN.md §12). Disabled unless a path is set.
+    pub journal: JournalSettings,
 }
 
 impl Default for IngressSettings {
@@ -243,7 +246,30 @@ impl Default for IngressSettings {
             tenants: Vec::new(),
             http: HttpSettings::default(),
             trace: TraceSettings::default(),
+            journal: JournalSettings::default(),
         }
+    }
+}
+
+/// Durable request journal (`ingress.journal`). When `path` is set,
+/// every front-door request appends its lifecycle records there
+/// ([`crate::journal`]), and `Ingress::start` replays the file on boot —
+/// completed requests skipped, in-flight ones re-admitted. An empty
+/// `path` (the default) disables journaling entirely: the serving hot
+/// path pays one enum-discriminant branch per record site.
+#[derive(Debug, Clone)]
+pub struct JournalSettings {
+    /// Append-only journal file. Empty = journaling off.
+    pub path: String,
+    /// Durability: `always` (fsync per record) | `batch` (fsync every 64
+    /// records — the default) | `never` (flush to the OS only; survives
+    /// process death, not power loss). See `journal::FsyncPolicy`.
+    pub fsync: String,
+}
+
+impl Default for JournalSettings {
+    fn default() -> Self {
+        JournalSettings { path: String::new(), fsync: "batch".into() }
     }
 }
 
@@ -392,6 +418,14 @@ impl DeploymentConfig {
                     .u64_or("capacity", TraceSettings::default().capacity as u64)
                     as usize,
             };
+            let journal = {
+                let j = i.get("journal");
+                let dj = JournalSettings::default();
+                JournalSettings {
+                    path: j.str_or("path", &dj.path).to_string(),
+                    fsync: j.str_or("fsync", &dj.fsync).to_string(),
+                }
+            };
             IngressSettings {
                 policy: i.str_or("policy", &di.policy).to_string(),
                 schedule: i.str_or("schedule", &di.schedule).to_string(),
@@ -403,6 +437,7 @@ impl DeploymentConfig {
                 tenants,
                 http,
                 trace,
+                journal,
             }
         };
         let agents = v
@@ -556,6 +591,12 @@ impl DeploymentConfig {
         }
         if self.ingress.http.max_body_bytes == 0 {
             return Err(Error::Config("ingress.http.max_body_bytes must be >= 1".into()));
+        }
+        // `FsyncPolicy::parse` owns the fsync names (same one-authority
+        // rule as admission/schedule above); checked even with journaling
+        // off so a typo surfaces before the path is ever set.
+        if let Err(e) = crate::journal::FsyncPolicy::parse(&self.ingress.journal.fsync) {
+            return Err(e);
         }
         let mut tenant_names = std::collections::HashSet::new();
         for t in &self.ingress.tenants {
@@ -715,6 +756,24 @@ mod tests {
         let off = r#"{"ingress": {"trace": {"capacity": 0}},
                       "agents": [{"name": "a", "kind": "llm"}]}"#;
         assert_eq!(DeploymentConfig::from_json(off).unwrap().ingress.trace.capacity, 0);
+    }
+
+    #[test]
+    fn journal_block_parses_with_empty_path_meaning_disabled() {
+        let y = r#"{"ingress": {"journal": {"path": "/tmp/n.journal", "fsync": "always"}},
+                    "agents": [{"name": "a", "kind": "llm", "methods": ["m"]}]}"#;
+        let c = DeploymentConfig::from_json(y).unwrap();
+        assert_eq!(c.ingress.journal.path, "/tmp/n.journal");
+        assert_eq!(c.ingress.journal.fsync, "always");
+        // no journal block = disabled (empty path), batch durability
+        let none = DeploymentConfig::from_json(MINIMAL).unwrap();
+        assert!(none.ingress.journal.path.is_empty());
+        assert_eq!(none.ingress.journal.fsync, "batch");
+        // fsync typos fail at load time, even with journaling off
+        let bad = r#"{"ingress": {"journal": {"fsync": "sometimes"}},
+                      "agents": [{"name": "a", "kind": "llm"}]}"#;
+        let err = DeploymentConfig::from_json(bad).unwrap_err();
+        assert!(err.to_string().contains("journal.fsync"), "{err}");
     }
 
     #[test]

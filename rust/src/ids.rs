@@ -157,6 +157,17 @@ impl IdGen {
     pub fn future(&self) -> FutureId {
         FutureId(self.future.fetch_add(1, Ordering::Relaxed))
     }
+
+    /// Advance every counter past the given high-water marks (journal
+    /// replay: ids observed in the log must never be re-minted for fresh
+    /// work, or a replayed request and a new one would collide in the
+    /// future index / trace registry). Monotonic — a stale plan can
+    /// never move a counter backwards.
+    pub fn advance_past(&self, session: u64, request: u64, future: u64) {
+        self.session.fetch_max(session + 1, Ordering::Relaxed);
+        self.request.fetch_max(request + 1, Ordering::Relaxed);
+        self.future.fetch_max(future + 1, Ordering::Relaxed);
+    }
 }
 
 #[cfg(test)]
@@ -179,6 +190,18 @@ mod tests {
         let a = g.future();
         let b = g.future();
         assert!(b.0 > a.0);
+    }
+
+    #[test]
+    fn advance_past_never_reminting_replayed_ids() {
+        let g = IdGen::new();
+        g.advance_past(10, 20, 30);
+        assert_eq!(g.session().0, 11);
+        assert_eq!(g.request().0, 21);
+        assert_eq!(g.future().0, 31);
+        // monotonic: a stale (lower) plan cannot rewind the counters
+        g.advance_past(0, 0, 0);
+        assert_eq!(g.request().0, 22);
     }
 
     #[test]

@@ -87,12 +87,13 @@ use crate::coordinator::{IngressMetrics, TenantMetrics};
 use crate::error::{Error, Result};
 use crate::futures::{FutureCell, Value};
 use crate::ids::{NodeId, RequestId, SessionId, TenantId};
+use crate::journal::{self, JournalSink, RecoveryPlan};
 use crate::metrics::{merge_breakdowns, Histogram, HistogramSnapshot, StageHistograms};
 use crate::nodestore::keys;
 use crate::server::Deployment;
 use crate::trace::{TraceKind, TraceSink};
 use crate::util::clock::Clock;
-use crate::workflow::{driver_for, Driver, Env, Step, WorkflowKind};
+use crate::workflow::{driver_for, restore_driver, Driver, Env, Step, WorkflowKind};
 
 use schedule::{pick, Key, StageStats};
 
@@ -160,6 +161,7 @@ pub struct SubmitRequest {
     session: Option<SessionId>,
     tenant: Option<String>,
     timeout: Duration,
+    retain_trace: bool,
 }
 
 impl SubmitRequest {
@@ -176,6 +178,7 @@ impl SubmitRequest {
             session: None,
             tenant: None,
             timeout: Self::DEFAULT_DEADLINE,
+            retain_trace: false,
         }
     }
 
@@ -220,6 +223,17 @@ impl SubmitRequest {
     /// End-to-end deadline, counted from admission.
     pub fn deadline(mut self, timeout: Duration) -> Self {
         self.timeout = timeout;
+        self
+    }
+
+    /// Keep the request's flight-recorder timeline past its terminal
+    /// outcome. Default off: in-proc submits evict their timeline as soon
+    /// as the terminal event is recorded (after the histogram fold), so
+    /// normal local churn never rolls the bounded ring — only consumers
+    /// with a later read of the timeline (the HTTP plane, which evicts on
+    /// registry consumption instead; `nalar trace`) opt in.
+    pub fn retain_trace(mut self) -> Self {
+        self.retain_trace = true;
         self
     }
 }
@@ -321,6 +335,9 @@ struct Queued {
     deadline: Instant,
     timeout: Duration,
     cell: Arc<TicketCell>,
+    /// See [`SubmitRequest::retain_trace`] — carried to the terminal
+    /// path, which evicts the timeline unless set.
+    retain_trace: bool,
 }
 
 /// One started request: a stored continuation, not a thread's stack. This
@@ -338,6 +355,8 @@ struct InFlight {
     deadline: Instant,
     timeout: Duration,
     cell: Arc<TicketCell>,
+    /// See [`SubmitRequest::retain_trace`].
+    retain_trace: bool,
     /// Futures this request already holds a waker on: each is subscribed
     /// at most once per request, so a join pending through many wake
     /// cycles doesn't accumulate duplicate wakers (and their spurious
@@ -378,6 +397,8 @@ struct Lapsed {
     timeout: Duration,
     cell: Arc<TicketCell>,
     request: RequestId,
+    /// See [`SubmitRequest::retain_trace`].
+    retain_trace: bool,
     /// True if the request had started (a driver ran and may have
     /// outstanding futures to bulk-fail); false for in-queue expiries,
     /// which never issued a call.
@@ -545,6 +566,10 @@ pub struct SchedulerOpts {
     /// Shard-lock hold-time instrumentation (`nalar bench contention`).
     /// `None` (the default, and production) records nothing.
     pub hold: Option<Arc<HoldStats>>,
+    /// Durable request journal ([`crate::journal`]); disabled by default.
+    /// [`Ingress::start`] opens it from `ingress.journal.path` and
+    /// replays the existing log before serving.
+    pub journal: JournalSink,
 }
 
 impl SchedulerOpts {
@@ -556,6 +581,7 @@ impl SchedulerOpts {
             clock: Clock::wall(),
             trace: None,
             hold: None,
+            journal: JournalSink::disabled(),
         }
     }
 }
@@ -661,6 +687,10 @@ struct IngressInner {
     /// Shard-lock hold-time instrumentation (bench-only; `None` in
     /// production).
     hold: Option<Arc<HoldStats>>,
+    /// Durable request journal every lifecycle transition appends to
+    /// (disabled = one enum-discriminant branch per site). Emission
+    /// sites mirror the trace sink's; DESIGN.md §12 has the taxonomy.
+    journal: JournalSink,
     stop: AtomicBool,
 }
 
@@ -1012,6 +1042,7 @@ impl IngressInner {
                         timeout: job.timeout,
                         cell: job.cell,
                         request: job.request,
+                        retain_trace: job.retain_trace,
                         started: false,
                     });
                 } else {
@@ -1044,6 +1075,7 @@ impl IngressInner {
                     timeout: f.timeout,
                     cell: f.cell,
                     request: f.request,
+                    retain_trace: f.retain_trace,
                     started: true,
                 });
             } else {
@@ -1065,6 +1097,7 @@ impl IngressInner {
                 timeout: f.timeout,
                 cell: f.cell,
                 request: f.request,
+                retain_trace: f.retain_trace,
                 started: true,
             });
         }
@@ -1090,6 +1123,10 @@ impl IngressInner {
                     self.failed[l.idx][l.tenant].fetch_add(1, Ordering::Relaxed);
                 }
                 self.trace.record(l.request, TraceKind::Expired, 0);
+                self.journal.append(&journal::terminal(l.request.0, "expired", Value::Null));
+                if !l.retain_trace {
+                    self.trace.forget(l.request);
+                }
             }
             self.maybe_publish(l.idx);
         }
@@ -1152,6 +1189,14 @@ impl IngressInner {
                 if job.cell.fulfil(Err(Error::Cancelled), self.since(job.submitted)) {
                     self.cancelled[idx][job.tenant].fetch_add(1, Ordering::Relaxed);
                     self.trace.record(job.request, TraceKind::Cancelled, 0);
+                    self.journal.append(&journal::terminal(
+                        job.request.0,
+                        "cancelled",
+                        Value::Null,
+                    ));
+                    if !job.retain_trace {
+                        self.trace.forget(job.request);
+                    }
                 }
                 self.maybe_publish(idx);
                 true
@@ -1174,6 +1219,10 @@ impl IngressInner {
         if f.cell.fulfil(Err(Error::Cancelled), self.since(f.submitted)) {
             self.cancelled[f.idx][f.tenant].fetch_add(1, Ordering::Relaxed);
             self.trace.record(f.request, TraceKind::Cancelled, 0);
+            self.journal.append(&journal::terminal(f.request.0, "cancelled", Value::Null));
+            if !f.retain_trace {
+                self.trace.forget(f.request);
+            }
         }
         self.maybe_publish(f.idx);
         self.notify(false); // in-flight capacity freed
@@ -1195,12 +1244,17 @@ impl IngressInner {
             if job.cell.fulfil(Err(Error::Deadline(job.timeout)), this.since(job.submitted)) {
                 this.expired_in_queue[idx][job.tenant].fetch_add(1, Ordering::Relaxed);
                 this.trace.record(job.request, TraceKind::Expired, 0);
+                this.journal.append(&journal::terminal(job.request.0, "expired", Value::Null));
+                if !job.retain_trace {
+                    this.trace.forget(job.request);
+                }
             }
             this.maybe_publish(idx);
             this.notify(false); // in-flight capacity freed
             return;
         }
         this.trace.record(job.request, TraceKind::Scheduled, 0);
+        this.journal.append(&journal::started(job.request.0));
         let env = Env::with_request(&this.d, job.session, job.request);
         let driver = match job.driver.take() {
             Some(driver) => driver,
@@ -1218,6 +1272,7 @@ impl IngressInner {
                 deadline: job.deadline,
                 timeout: job.timeout,
                 cell: job.cell,
+                retain_trace: job.retain_trace,
                 subscribed: HashSet::new(),
                 stage: 0,
                 stage_entered: vec![(0, now)],
@@ -1261,11 +1316,21 @@ impl IngressInner {
                     f.stage = stage;
                     f.stage_entered.push((stage, this.clock.now()));
                 }
+                // Journal snapshot, serialized *outside* the shard lock
+                // (driver state can be arbitrarily large) but appended
+                // inside it, only on the branch that actually parks — a
+                // mid-poll wakeup re-runs instead and needs no record.
+                let snapshot = if this.journal.enabled() {
+                    let waiting: Vec<u64> = waiting_on.iter().map(|id| id.0).collect();
+                    Some(journal::parked(rid, f.stage, f.driver.serialize_state(), &waiting))
+                } else {
+                    None
+                };
                 // Resolve the not-yet-subscribed cells *before* parking:
                 // once parked, another worker may take the continuation at
                 // any moment. Already-subscribed futures keep their
                 // original waker (one per future per request).
-                let mut cells: Vec<Arc<FutureCell>> = Vec::new();
+                let mut cells: Vec<(u64, Arc<FutureCell>)> = Vec::new();
                 let mut can_wake = false;
                 for id in &waiting_on {
                     if f.subscribed.contains(&id.0) {
@@ -1274,7 +1339,7 @@ impl IngressInner {
                     }
                     if let Some(cell) = this.d.table().get(*id) {
                         f.subscribed.insert(id.0);
-                        cells.push(cell);
+                        cells.push((id.0, cell));
                         can_wake = true;
                     }
                 }
@@ -1301,6 +1366,9 @@ impl IngressInner {
                     } else {
                         f.parked_at = Some(after);
                         this.trace.record(f.request, TraceKind::Parked, first_wait);
+                        if let Some(rec) = &snapshot {
+                            this.journal.append(rec);
+                        }
                         s.parked.insert(rid, f);
                         if !can_wake {
                             // nothing is subscribable (a shouldn't-happen:
@@ -1323,10 +1391,14 @@ impl IngressInner {
                 // the whole deployment through any never-terminal cell.
                 // It captures the shard index alongside the request id,
                 // so the wake keys straight into the owning lock domain.
-                for cell in cells {
+                for (fid, cell) in cells {
                     let inner = Arc::downgrade(this);
                     cell.subscribe(Box::new(move || {
                         if let Some(inner) = inner.upgrade() {
+                            // Journal the resolution *before* the wake: a
+                            // crash between the two replays conservatively
+                            // (the future is re-issued), never optimistically.
+                            inner.journal.append(&journal::resolved(rid, fid));
                             inner.wake(shard, rid);
                         }
                     }));
@@ -1386,6 +1458,18 @@ impl IngressInner {
             }
         }
         let latency = now.saturating_duration_since(f.submitted);
+        // Built before `fulfil` consumes the result; appended only if this
+        // path won the terminal race (the journal, like the counters,
+        // records exactly one terminal outcome per request).
+        let term = if self.journal.enabled() {
+            let (outcome, detail) = match &result {
+                Ok(v) => ("done", v.clone()),
+                Err(e) => ("failed", Value::Str(e.to_string())),
+            };
+            Some(journal::terminal(f.request.0, outcome, detail))
+        } else {
+            None
+        };
         if f.cell.fulfil(result, latency) {
             let ctr = if ok { &self.completed } else { &self.failed };
             ctr[f.idx][f.tenant].fetch_add(1, Ordering::Relaxed);
@@ -1403,24 +1487,91 @@ impl IngressInner {
             }
             let kind = if ok { TraceKind::Done } else { TraceKind::Failed };
             self.trace.record(f.request, kind, latency.as_nanos() as u64);
+            if let Some(rec) = &term {
+                self.journal.append(rec);
+            }
+            // Terminal in-proc exit: the histogram fold above already
+            // consumed the decomposition, so the timeline is dead weight
+            // in the bounded ring unless the submitter opted in
+            // ([`SubmitRequest::retain_trace`] — the HTTP plane, which
+            // evicts on registry consumption instead).
+            if !f.retain_trace {
+                self.trace.forget(f.request);
+            }
         }
         self.maybe_publish(f.idx);
         self.notify(false); // in-flight capacity freed: admit more
     }
 }
 
+/// What one journal replay did ([`Ingress::recover`]), surfaced through
+/// [`Ingress::recovery`] and the recovery bench's report.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryStats {
+    /// In-flight requests re-admitted (tickets re-issued).
+    pub recovered: usize,
+    /// Requests the journal proved terminal — skipped, not re-run.
+    pub skipped_complete: u64,
+    /// In-flight requests that could not be replayed (workflow not served
+    /// by this ingress, or unknown tenant on a configured table).
+    pub lost: usize,
+    /// Corrupt / torn / orphaned journal lines tolerated during load.
+    pub corrupt: u64,
+}
+
+/// [`Ingress::recover`]'s result: fresh tickets for the re-admitted
+/// requests (original [`RequestId`]s — callers polling by id keep
+/// working) plus the replay accounting.
+pub struct RecoveryOutcome {
+    pub tickets: Vec<Ticket>,
+    pub stats: RecoveryStats,
+}
+
 /// See module docs.
 pub struct Ingress {
     inner: Arc<IngressInner>,
     joins: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Stats of the startup replay [`Self::start`] ran (None = no journal
+    /// configured, or an explicit `start_with*` that skipped recovery).
+    recovery: Mutex<Option<RecoveryStats>>,
 }
 
 impl Ingress {
     /// Start a front door for `kinds` using the deployment's configured
-    /// admission settings (`DeploymentConfig.ingress`).
+    /// admission settings (`DeploymentConfig.ingress`). If
+    /// `ingress.journal.path` is set, the existing journal is replayed
+    /// first — completed requests are skipped, in-flight ones re-admitted
+    /// ([`Self::recover`], stats via [`Self::recovery`]) — and every
+    /// lifecycle transition of the new run is journaled there.
     pub fn start(d: &Deployment, kinds: &[WorkflowKind]) -> Ingress {
         let s = &d.cfg().ingress;
-        Self::start_with(d, kinds, AdmissionPolicy::from_settings(s), s.workers)
+        let policy = AdmissionPolicy::from_settings(s);
+        if s.journal.path.is_empty() {
+            return Self::start_with(d, kinds, policy, s.workers);
+        }
+        let path = std::path::PathBuf::from(&s.journal.path);
+        // A journal that fails to load or open degrades the node to
+        // non-durable serving, loudly — it never blocks startup (report,
+        // don't mask: the operator sees it, requests still flow).
+        let plan = journal::load(&path).unwrap_or_else(|e| {
+            eprintln!("journal: load {} failed ({e}); starting with an empty plan", path.display());
+            RecoveryPlan::default()
+        });
+        let fsync = journal::FsyncPolicy::parse(&s.journal.fsync)
+            .unwrap_or(journal::FsyncPolicy::Batch);
+        let sink = JournalSink::open(&path, fsync).unwrap_or_else(|e| {
+            eprintln!("journal: open {} failed ({e}); journaling disabled", path.display());
+            JournalSink::disabled()
+        });
+        let mut opts = SchedulerOpts::new(s.workers, s.max_in_flight);
+        opts.journal = sink;
+        let ing = Self::start_with_opts(d, kinds, policy, opts);
+        // Replayed tickets are dropped: recovered requests complete
+        // headless (their terminal outcome lands in the journal and the
+        // counters); wire callers re-poll by request id after reconnect.
+        let outcome = ing.recover(&plan);
+        *ing.recovery.lock().unwrap() = Some(outcome.stats);
+        ing
     }
 
     /// Start with an explicit admission policy and scheduler thread count
@@ -1537,6 +1688,7 @@ impl Ingress {
             next_sweep: AtomicU64::new(SWEEP_PERIOD.as_nanos() as u64),
             last_publish: kinds.iter().map(|_| AtomicU64::new(0)).collect(),
             hold: opts.hold.clone(),
+            journal: opts.journal.clone(),
             stop: AtomicBool::new(false),
         });
         let joins = (0..workers)
@@ -1551,7 +1703,7 @@ impl Ingress {
         for idx in 0..kinds.len() {
             inner.publish(idx); // make the queue visible to policies at once
         }
-        Ingress { inner, joins: Mutex::new(joins) }
+        Ingress { inner, joins: Mutex::new(joins), recovery: Mutex::new(None) }
     }
 
     /// Accept or shed one request — the single front-door entry point
@@ -1562,7 +1714,7 @@ impl Ingress {
     /// [`Error::Shed`] immediately. The deadline is counted from
     /// admission.
     pub fn submit(&self, req: SubmitRequest) -> Result<Ticket> {
-        let SubmitRequest { kind, input, driver, session, tenant, timeout } = req;
+        let SubmitRequest { kind, input, driver, session, tenant, timeout, retain_trace } = req;
         let inner = &self.inner;
         let idx = inner
             .kind_index(kind)
@@ -1606,6 +1758,17 @@ impl Ingress {
                     // a racing worker that pops the job immediately.
                     inner.trace.record(request, TraceKind::Admitted, 0);
                     inner.trace.record(request, TraceKind::Queued, tenant as u64);
+                    // Admission record under the shard lock: file order =
+                    // admission order, and no later record of this request
+                    // (started/parked/terminal) can precede it.
+                    inner.journal.append(&journal::admitted(
+                        request.0,
+                        session.0,
+                        &inner.tenants[tenant].name,
+                        kind.name(),
+                        &input,
+                        timeout.as_millis() as u64,
+                    ));
                     s.queues[tenant].push_back(Queued {
                         session,
                         request,
@@ -1616,6 +1779,7 @@ impl Ingress {
                         deadline: now + timeout,
                         timeout,
                         cell: cell.clone(),
+                        retain_trace,
                     });
                     inner.depth_gauge[idx][tenant].fetch_add(1, Ordering::Relaxed);
                     Ok(Ticket {
@@ -1671,6 +1835,132 @@ impl Ingress {
         &self.inner.trace
     }
 
+    /// The durable request journal this scheduler appends to (disabled
+    /// unless [`SchedulerOpts::journal`] or `ingress.journal.path`
+    /// installed one).
+    pub fn journal(&self) -> &JournalSink {
+        &self.inner.journal
+    }
+
+    /// Stats of the startup journal replay, when [`Self::start`] ran one.
+    pub fn recovery(&self) -> Option<RecoveryStats> {
+        self.recovery.lock().unwrap().clone()
+    }
+
+    /// Replay a crashed node's [`RecoveryPlan`] into this (fresh) ingress
+    /// with the standard driver factory ([`restore_driver`]).
+    pub fn recover(&self, plan: &RecoveryPlan) -> RecoveryOutcome {
+        self.recover_with(plan, |kind, input, state| restore_driver(kind, input, state))
+    }
+
+    /// Replay with a caller-supplied driver factory `(kind, input,
+    /// snapshot) -> Driver` — how the deterministic replay suites inject
+    /// [`crate::testkit::ScriptedEngine`] drivers. Replay invariants
+    /// (DESIGN.md §12):
+    ///
+    /// * **Original ids.** Re-admitted requests keep their journaled
+    ///   `RequestId`/`SessionId`, and the id generators are advanced past
+    ///   every journaled id first — new work never collides with replayed
+    ///   work.
+    /// * **Exactly one terminal outcome, across incarnations.** Requests
+    ///   with a journaled terminal record are skipped entirely. In-flight
+    ///   ones are re-admitted with a *fresh* ticket cell; their pre-crash
+    ///   futures are failed (`superseded by recovery`) so a late resolve
+    ///   hits the resolve-after-fail drop path instead of waking a ghost.
+    /// * **Futures re-issue, never resurrect.** A `parked` snapshot
+    ///   records the driver's resume point; its re-built driver re-issues
+    ///   that stage's calls afresh. Journaled `resolved` records are
+    ///   advisory (crash-window forensics), not replayed state.
+    /// * **Deadlines restart at recovery.** The journaled budget is
+    ///   re-counted from the replay instant — the dead node's wall time is
+    ///   not this node's, and instantly expiring every survivor would make
+    ///   recovery a mass failure.
+    /// * Admission policy is bypassed (each request was already admitted
+    ///   once); the accept is still counted so tenant counters stay
+    ///   consistent with queue contents.
+    pub fn recover_with(
+        &self,
+        plan: &RecoveryPlan,
+        mut factory: impl FnMut(WorkflowKind, &Value, &Value) -> Box<dyn Driver>,
+    ) -> RecoveryOutcome {
+        let inner = &self.inner;
+        inner.d.advance_ids(plan.max_session, plan.max_request, plan.max_future);
+        let mut stats = RecoveryStats {
+            skipped_complete: plan.completed,
+            corrupt: plan.corrupt,
+            ..RecoveryStats::default()
+        };
+        let mut tickets = Vec::new();
+        let mut touched: HashSet<usize> = HashSet::new();
+        let now = inner.clock.now();
+        for entry in &plan.inflight {
+            let Some(idx) = inner.kinds.iter().position(|k| k.name() == entry.workflow) else {
+                stats.lost += 1;
+                continue;
+            };
+            let tenant = if inner.tenants_configured {
+                match inner.tenants.iter().position(|t| t.name == entry.tenant) {
+                    Some(t) => t,
+                    None => {
+                        stats.lost += 1;
+                        continue;
+                    }
+                }
+            } else {
+                0
+            };
+            let request = RequestId(entry.request);
+            inner.d.table().fail_request(request, "superseded by recovery");
+            let driver = factory(inner.kinds[idx], &entry.input, &entry.state);
+            let timeout = Duration::from_millis(entry.timeout_ms);
+            let cell = TicketCell::new();
+            {
+                let mut s = inner.lock_shard(idx, HoldOp::Submit);
+                inner.trace.record(request, TraceKind::Admitted, 0);
+                inner.trace.record(request, TraceKind::Queued, tenant as u64);
+                // Fresh admission record: `load` is latest-admit-wins, so
+                // a second crash replays from this incarnation's state.
+                inner.journal.append(&journal::admitted(
+                    entry.request,
+                    entry.session,
+                    &inner.tenants[tenant].name,
+                    &entry.workflow,
+                    &entry.input,
+                    entry.timeout_ms,
+                ));
+                s.queues[tenant].push_back(Queued {
+                    session: SessionId(entry.session),
+                    request,
+                    tenant,
+                    input: entry.input.clone(),
+                    driver: Some(driver),
+                    submitted: now,
+                    deadline: now + timeout,
+                    timeout,
+                    cell: cell.clone(),
+                    retain_trace: false,
+                });
+                inner.depth_gauge[idx][tenant].fetch_add(1, Ordering::Relaxed);
+            }
+            inner.tenant_adm[idx][tenant].record(true);
+            touched.insert(idx);
+            stats.recovered += 1;
+            tickets.push(Ticket {
+                request,
+                session: SessionId(entry.session),
+                tenant: TenantId(tenant as u64),
+                cell,
+                idx,
+                inner: Arc::downgrade(&self.inner),
+            });
+        }
+        inner.notify(true);
+        for idx in touched {
+            inner.publish(idx);
+        }
+        RecoveryOutcome { tickets, stats }
+    }
+
     /// Stop the scheduler: workers finish the poll they are executing;
     /// everything queued or parked fails fast (reported, not masked — §5).
     /// Idempotent; also runs on drop.
@@ -1716,6 +2006,7 @@ impl Ingress {
             if job.cell.fulfil(Err(Error::Shed(kind, "ingress stopped".into())), waited) {
                 self.inner.failed[idx][job.tenant].fetch_add(1, Ordering::Relaxed);
                 self.inner.trace.record(job.request, TraceKind::Shed, 0);
+                self.inner.journal.append(&journal::terminal(job.request.0, "shed", Value::Null));
             }
         }
         for f in inflight {
@@ -1729,11 +2020,51 @@ impl Ingress {
             if f.cell.fulfil(Err(Error::Shed(kind, "ingress stopped".into())), waited) {
                 self.inner.failed[f.idx][f.tenant].fetch_add(1, Ordering::Relaxed);
                 self.inner.trace.record(f.request, TraceKind::Shed, 0);
+                self.inner.journal.append(&journal::terminal(f.request.0, "shed", Value::Null));
             }
         }
+        // A graceful stop journals a terminal for everything it drained,
+        // so a restart over the same journal recovers nothing — recovery
+        // is for crashes ([`Self::halt`]), not shutdowns.
+        self.inner.journal.sync();
         for idx in 0..self.inner.kinds.len() {
             self.inner.publish(idx);
         }
+    }
+
+    /// Simulated crash (`nalar bench recovery`, the replay suites): stop
+    /// the workers and *abandon* every queued and in-flight request — no
+    /// ticket is fulfilled, no terminal outcome is journaled. Exactly what
+    /// power loss leaves behind: a journal whose last record for each live
+    /// request is `admitted`/`started`/`parked`, which is what
+    /// [`Self::recover`] replays on the next start. The journal is synced
+    /// so the crash point is durable; the in-memory tables are cleared so
+    /// the subsequent `Drop`-driven [`Self::stop`] finds nothing to shed.
+    pub fn halt(&self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        self.inner.notify(true);
+        for j in self.joins.lock().unwrap().drain(..) {
+            let _ = j.join();
+        }
+        for idx in 0..self.inner.kinds.len() {
+            let mut s = self.inner.lock_shard(idx, HoldOp::Complete);
+            for (tenant, dq) in s.queues.iter_mut().enumerate() {
+                for _ in dq.drain(..) {
+                    self.inner.depth_gauge[idx][tenant].fetch_sub(1, Ordering::Relaxed);
+                }
+            }
+            let drained = s.ready.len() + s.parked.len();
+            s.ready.clear();
+            s.parked.clear();
+            for _ in 0..drained {
+                self.inner.drop_in_flight(idx);
+            }
+            s.live.clear();
+            s.woken.clear();
+            s.cancelled.clear();
+            s.nudge.clear();
+        }
+        self.inner.journal.sync();
     }
 }
 
@@ -2310,5 +2641,192 @@ mod tests {
         reader.join().unwrap();
         ing.stop();
         d.shutdown();
+    }
+
+    /// Satellite fix: an in-proc submit's timeline is evicted at its
+    /// terminal outcome (after the histogram fold) — completed local
+    /// requests must not squat in the bounded ring until eviction rolls
+    /// over live entries — while `.retain_trace()` (the HTTP plane's
+    /// mode, which evicts on registry consumption) keeps it.
+    #[test]
+    fn in_proc_terminal_exit_evicts_the_timeline_unless_retained() {
+        let d = fast_router();
+        let ing = Ingress::start_with(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, 2);
+        let timeout = Duration::from_secs(20);
+        let t = ing.submit(req(WorkflowKind::Router, router_input(), timeout)).unwrap();
+        t.wait(timeout).unwrap();
+        // The ticket is fulfilled a hair before the forget runs; poll
+        // (wall-bounded) rather than race it.
+        let mut evicted = false;
+        for _ in 0..4000 {
+            if ing.trace().timeline(t.request).is_empty() {
+                evicted = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(evicted, "a completed local request's timeline must be gone");
+        assert!(ing.trace().enabled(), "eviction is not a disabled sink");
+
+        let kept = ing
+            .submit(req(WorkflowKind::Router, router_input(), timeout).retain_trace())
+            .unwrap();
+        kept.wait(timeout).unwrap();
+        let tl = ing.trace().timeline(kept.request);
+        assert!(
+            tl.iter().any(|e| e.kind == TraceKind::Done),
+            "retain_trace keeps the full timeline through the terminal event"
+        );
+        let m = ing.metrics(WorkflowKind::Router).unwrap();
+        assert_eq!(m.trace_dropped, 0, "eviction is a forget, never a ring drop");
+        assert_eq!(m.breakdown.queue_wait.count, 2, "histograms folded before eviction");
+        ing.stop();
+        d.shutdown();
+    }
+
+    /// Fresh path for a journal file under the OS temp dir (no toolchain
+    /// for tempfile crates — pid + tag keeps parallel test runs apart).
+    fn temp_journal(tag: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("nalar-journal-test-{}-{tag}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    /// Terminal-record lines of a journal file, verbatim.
+    fn terminal_lines(path: &std::path::Path) -> Vec<String> {
+        std::fs::read_to_string(path)
+            .unwrap_or_default()
+            .lines()
+            .filter(|l| l.contains("\"t\":\"terminal\""))
+            .map(|l| l.to_string())
+            .collect()
+    }
+
+    /// Tentpole acceptance: a run that crashes mid-request and recovers
+    /// journals a terminal record *byte-identical* to an uninterrupted
+    /// reference run's — same request id (replay keeps originals), same
+    /// outcome, same result value — with zero leaked scheduler slots or
+    /// future-index entries after recovery.
+    #[test]
+    fn journal_replay_reproduces_identical_terminal_outcomes() {
+        let timeout = Duration::from_secs(60);
+        let submit_scripted = |ing: &Ingress, eng: &Arc<ScriptedEngine>| {
+            ing.submit(
+                SubmitRequest::workflow(WorkflowKind::Router)
+                    .driver(eng.driver("r1", 1))
+                    .deadline(timeout),
+            )
+            .unwrap()
+        };
+        let wait_parked = |ing: &Ingress, t: &Ticket| {
+            for _ in 0..4000 {
+                if ing.trace().timeline(t.request).iter().any(|e| e.kind == TraceKind::Parked) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            panic!("request never parked");
+        };
+
+        // Reference: the same submission, served without interruption.
+        let ref_path = temp_journal("ref");
+        {
+            let d = fast_router();
+            let mut opts = SchedulerOpts::new(1, 4);
+            opts.journal = JournalSink::open(&ref_path, journal::FsyncPolicy::Always).unwrap();
+            let ing = Ingress::start_with_opts(
+                &d,
+                &[WorkflowKind::Router],
+                AdmissionPolicy::Unbounded,
+                opts,
+            );
+            let eng = ScriptedEngine::new();
+            let t = submit_scripted(&ing, &eng);
+            assert!(eng.wait_created(1, Duration::from_secs(5)));
+            eng.cell(0).resolve(json!("a"), 0);
+            t.wait(Duration::from_secs(10)).unwrap();
+            ing.stop();
+            d.shutdown();
+        }
+
+        // Crash run: identical submission, node halted while parked.
+        let crash_path = temp_journal("crash");
+        {
+            let d = fast_router();
+            let mut opts = SchedulerOpts::new(1, 4);
+            opts.journal = JournalSink::open(&crash_path, journal::FsyncPolicy::Always).unwrap();
+            let ing = Ingress::start_with_opts(
+                &d,
+                &[WorkflowKind::Router],
+                AdmissionPolicy::Unbounded,
+                opts,
+            );
+            let eng = ScriptedEngine::new();
+            let t = submit_scripted(&ing, &eng);
+            assert!(eng.wait_created(1, Duration::from_secs(5)));
+            wait_parked(&ing, &t);
+            ing.halt(); // simulated power loss: no terminal journaled
+            assert!(t.try_take().is_none(), "a crash fulfils nothing");
+            d.shutdown();
+        }
+
+        // Recovery incarnation: fresh deployment (fresh id generators —
+        // a new process), same journal.
+        let plan = journal::load(&crash_path).unwrap();
+        assert_eq!(plan.inflight.len(), 1, "the parked request is in-flight in the journal");
+        assert_eq!(plan.completed, 0);
+        let d2 = fast_router();
+        let mut opts = SchedulerOpts::new(1, 4);
+        opts.journal = JournalSink::open(&crash_path, journal::FsyncPolicy::Always).unwrap();
+        let ing2 = Ingress::start_with_opts(
+            &d2,
+            &[WorkflowKind::Router],
+            AdmissionPolicy::Unbounded,
+            opts,
+        );
+        let eng2 = ScriptedEngine::new();
+        let outcome = ing2.recover_with(&plan, |_, _, _| eng2.driver("r1", 1));
+        assert_eq!(outcome.stats.recovered, 1);
+        assert_eq!(outcome.stats.lost, 0);
+        assert_eq!(outcome.stats.corrupt, 0);
+        let t2 = &outcome.tickets[0];
+        assert_eq!(t2.request.0, plan.inflight[0].request, "replay keeps the original id");
+        assert!(
+            d2.new_request_id().0 > plan.max_request,
+            "fresh ids are advanced past every replayed one"
+        );
+        assert!(eng2.wait_created(1, Duration::from_secs(5)), "replay re-issues the future");
+        eng2.cell(0).resolve(json!("a"), 0);
+        let out = t2.wait(Duration::from_secs(10)).unwrap();
+        assert_eq!(out.get("scripted").as_str(), Some("r1"));
+        // Bookkeeping lands an instant after fulfilment: settle, bounded.
+        for _ in 0..4000 {
+            let m = ing2.metrics(WorkflowKind::Router).unwrap();
+            if m.completed == 1
+                && (m.depth, m.in_flight) == (0, 0)
+                && d2.table().request_index_len() == 0
+            {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let m = ing2.metrics(WorkflowKind::Router).unwrap();
+        assert_eq!(m.completed, 1);
+        assert_eq!((m.depth, m.in_flight), (0, 0), "no leaked scheduler slots");
+        assert_eq!(d2.table().request_index_len(), 0, "no leaked future-index entries");
+        ing2.stop();
+        d2.shutdown();
+
+        // Byte-identical terminal outcomes across the crash.
+        let reference = terminal_lines(&ref_path);
+        assert_eq!(reference.len(), 1, "the reference run journals exactly one terminal record");
+        assert_eq!(
+            reference,
+            terminal_lines(&crash_path),
+            "recovery must reproduce the uninterrupted run's terminal record, byte for byte"
+        );
+        let _ = std::fs::remove_file(&ref_path);
+        let _ = std::fs::remove_file(&crash_path);
     }
 }

@@ -1,0 +1,575 @@
+//! Durable request journal: the append-only event log crash recovery
+//! replays (DESIGN.md §12).
+//!
+//! Every front-door request leaves a per-node trail of JSON-lines
+//! records here — admission (with its tenant/queue assignment), start,
+//! stage transitions (with the driver's serialized continuation state
+//! and the future ids it parked on), future resolutions, and exactly
+//! one terminal outcome. On restart, [`load`] folds the log into a
+//! [`RecoveryPlan`]: requests whose terminal record made it to disk are
+//! *skipped* (their outcome already reached the caller — replaying them
+//! would double-execute side effects), requests that were in flight
+//! when the node died are *re-admitted* with their original
+//! request/session ids and re-parked by the scheduler, re-issuing the
+//! stage's unresolved futures instead of failing the request.
+//!
+//! Design points, in the order they matter:
+//!
+//! * **Append-only, one JSON object per line.** A torn final line —
+//!   the normal signature of a crash mid-append — parses as garbage
+//!   and is *tolerated*: [`load`] counts it (`corrupt`) and keeps
+//!   going. Everything before the tear is intact because records are
+//!   only ever appended.
+//! * **Per-request causal order is file order.** The `admitted` record
+//!   is written under the owning scheduler shard's lock, before any
+//!   worker can pop the request, so it strictly precedes every other
+//!   record of that request. Recovery re-admissions append a *fresh*
+//!   `admitted` record for the same request id — latest-admit-wins in
+//!   [`load`], which is what lets one journal file span any number of
+//!   crash/recover cycles.
+//! * **Exactly one terminal record.** Terminal appends are gated on
+//!   winning the ticket's `fulfil` race (the same arbitration the
+//!   counters use), so however completion, expiry and cancellation
+//!   race, the journal agrees with the ticket.
+//! * **Fsync policy** ([`FsyncPolicy`], config `ingress.journal.fsync`):
+//!   `always` syncs every record (crash-consistent to the last record,
+//!   slowest), `batch` syncs every [`BATCH_SYNC_EVERY`] records
+//!   (bounded loss window), `never` only flushes to the OS (survives
+//!   process death, not power loss). All three flush the userspace
+//!   buffer per record, so an in-process reader — and the kill-and-
+//!   recover bench — always sees a complete prefix.
+//!
+//! The writer is deliberately dumb: no index, no compaction, no mmap.
+//! Recovery cost is one sequential read, and the file is bounded in
+//! practice by rotation at the deployment layer (out of scope here —
+//! see DESIGN.md §12 for the rotation story).
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+/// How often the `batch` policy issues an fsync, in records.
+pub const BATCH_SYNC_EVERY: u64 = 64;
+
+/// Durability level for journal appends (`ingress.journal.fsync`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// fsync every record: the journal is crash-consistent to the last
+    /// appended record, at one disk sync per lifecycle event.
+    Always,
+    /// fsync every [`BATCH_SYNC_EVERY`] records: bounded loss window on
+    /// power loss, near-`never` throughput. The default.
+    Batch,
+    /// Flush to the OS only: survives process death (SIGKILL), not
+    /// kernel panic or power loss.
+    Never,
+}
+
+impl FsyncPolicy {
+    pub fn parse(name: &str) -> Result<FsyncPolicy> {
+        match name {
+            "always" => Ok(FsyncPolicy::Always),
+            "batch" => Ok(FsyncPolicy::Batch),
+            "never" => Ok(FsyncPolicy::Never),
+            other => Err(Error::Config(format!(
+                "ingress.journal.fsync must be `always`, `batch` or `never`, got `{other}`"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FsyncPolicy::Always => "always",
+            FsyncPolicy::Batch => "batch",
+            FsyncPolicy::Never => "never",
+        }
+    }
+}
+
+struct Writer {
+    out: BufWriter<File>,
+    /// Records appended since the last sync (the `batch` counter).
+    since_sync: u64,
+}
+
+/// An open append-only journal file. Shared by every scheduler shard;
+/// appends serialize on one internal mutex (a single fd has one append
+/// position anyway).
+pub struct Journal {
+    path: PathBuf,
+    fsync: FsyncPolicy,
+    w: Mutex<Writer>,
+    records: AtomicU64,
+    errors: AtomicU64,
+}
+
+impl Journal {
+    /// Open (creating if absent) `path` for appending. An existing file
+    /// is *kept* — recovery appends to the same log it replayed, so one
+    /// file spans crash/recover cycles.
+    pub fn open(path: &Path, fsync: FsyncPolicy) -> Result<Arc<Journal>> {
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .map_err(Error::Io)?;
+        Ok(Arc::new(Journal {
+            path: path.to_path_buf(),
+            fsync,
+            w: Mutex::new(Writer { out: BufWriter::new(file), since_sync: 0 }),
+            records: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+        }))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Records appended through this handle (not counting what the file
+    /// already held when opened).
+    pub fn records(&self) -> u64 {
+        self.records.load(Ordering::Relaxed)
+    }
+
+    /// Append failures since open. A failing journal must not take the
+    /// serving path down with it — appends report here (and once to
+    /// stderr) instead of panicking; durability is degraded, serving is
+    /// not.
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    /// Append one record as a single compact JSON line, then flush and
+    /// (per policy) sync.
+    pub fn append(&self, rec: &Value) {
+        let mut g = self.w.lock().unwrap();
+        let r = writeln!(g.out, "{rec}").and_then(|()| g.out.flush()).and_then(|()| {
+            g.since_sync += 1;
+            let due = match self.fsync {
+                FsyncPolicy::Always => true,
+                FsyncPolicy::Batch => g.since_sync >= BATCH_SYNC_EVERY,
+                FsyncPolicy::Never => false,
+            };
+            if due {
+                g.since_sync = 0;
+                g.out.get_ref().sync_data()
+            } else {
+                Ok(())
+            }
+        });
+        drop(g);
+        match r {
+            Ok(()) => {
+                self.records.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => {
+                if self.errors.fetch_add(1, Ordering::Relaxed) == 0 {
+                    eprintln!("journal: append to {} failed: {e}", self.path.display());
+                }
+            }
+        }
+    }
+
+    /// Force an fsync now (shutdown path for `batch`/`never`).
+    pub fn sync(&self) {
+        let mut g = self.w.lock().unwrap();
+        g.since_sync = 0;
+        let _ = g.out.flush().and_then(|()| g.out.get_ref().sync_data());
+    }
+}
+
+/// The journal slot every scheduler hot path writes through: `Disabled`
+/// (the default — every append is one enum-discriminant branch) or an
+/// open [`Journal`]. Mirrors [`crate::trace::TraceSink`]'s shape so
+/// call sites guard expensive record construction with
+/// [`Self::enabled`].
+#[derive(Clone)]
+pub enum JournalSink {
+    Disabled,
+    Writing(Arc<Journal>),
+}
+
+impl std::fmt::Debug for JournalSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JournalSink::Disabled => f.write_str("JournalSink::Disabled"),
+            JournalSink::Writing(j) => write!(f, "JournalSink({})", j.path().display()),
+        }
+    }
+}
+
+impl JournalSink {
+    pub fn disabled() -> JournalSink {
+        JournalSink::Disabled
+    }
+
+    /// Open `path` for appending and wrap it as a sink.
+    pub fn open(path: &Path, fsync: FsyncPolicy) -> Result<JournalSink> {
+        Ok(JournalSink::Writing(Journal::open(path, fsync)?))
+    }
+
+    pub fn enabled(&self) -> bool {
+        matches!(self, JournalSink::Writing(_))
+    }
+
+    pub fn append(&self, rec: &Value) {
+        if let JournalSink::Writing(j) = self {
+            j.append(rec);
+        }
+    }
+
+    pub fn sync(&self) {
+        if let JournalSink::Writing(j) = self {
+            j.sync();
+        }
+    }
+
+    pub fn journal(&self) -> Option<&Arc<Journal>> {
+        match self {
+            JournalSink::Writing(j) => Some(j),
+            JournalSink::Disabled => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Record taxonomy (constructors keep every emission site on one schema;
+// DESIGN.md §12 documents the wire shape).
+
+fn record(t: &str, request: u64) -> Value {
+    let mut r = Value::Obj(json::Map::new());
+    r.insert("t", t);
+    r.insert("request", request);
+    r
+}
+
+/// Admission: the request exists, charged to `tenant` in `workflow`'s
+/// queue. Carries everything re-admission needs to rebuild the request
+/// from scratch.
+pub fn admitted(
+    request: u64,
+    session: u64,
+    tenant: &str,
+    workflow: &str,
+    input: &Value,
+    timeout_ms: u64,
+) -> Value {
+    let mut r = record("admitted", request);
+    r.insert("session", session);
+    r.insert("tenant", tenant);
+    r.insert("workflow", workflow);
+    r.insert("input", input.clone());
+    r.insert("timeout_ms", timeout_ms);
+    r
+}
+
+/// The scheduler popped the request and built (or restored) its driver.
+pub fn started(request: u64) -> Value {
+    record("started", request)
+}
+
+/// The driver suspended at `stage`: `state` is its serialized
+/// continuation ([`crate::workflow::Driver::serialize_state`]),
+/// `waiting` the future ids it parked on. The *latest* parked record
+/// wins at replay — it supersedes earlier stages.
+pub fn parked(request: u64, stage: u32, state: Value, waiting: &[u64]) -> Value {
+    let mut r = record("parked", request);
+    r.insert("stage", stage);
+    r.insert("state", state);
+    r.insert("waiting", waiting);
+    r
+}
+
+/// A future the request parked on reached a terminal state (the waker
+/// fired). Evidence for the crash window between a resolve and the
+/// requester's resume; replay re-issues the stage's futures afresh
+/// rather than trusting this record, so a resolve that raced the crash
+/// is never double-consumed.
+pub fn resolved(request: u64, future: u64) -> Value {
+    let mut r = record("resolved", request);
+    r.insert("future", future);
+    r
+}
+
+/// The request's single terminal outcome. `outcome` is one of
+/// `done | failed | expired | cancelled | shed`; `detail` is the result
+/// value for `done` and the error string otherwise. Exactly one of
+/// these per request per (crash-free) lifetime — gated on winning the
+/// ticket's fulfil race.
+pub fn terminal(request: u64, outcome: &str, detail: Value) -> Value {
+    let mut r = record("terminal", request);
+    r.insert("outcome", outcome);
+    r.insert("detail", detail);
+    r
+}
+
+// ---------------------------------------------------------------------
+// Replay.
+
+/// One in-flight request reconstructed from the journal: everything
+/// re-admission needs. `state`/`stage` are from its latest `parked`
+/// record (`Null`/0 if it never parked — it replays from the workflow
+/// input alone).
+#[derive(Debug)]
+pub struct ReplayEntry {
+    pub request: u64,
+    pub session: u64,
+    pub tenant: String,
+    pub workflow: String,
+    pub input: Value,
+    pub timeout_ms: u64,
+    pub stage: u32,
+    pub state: Value,
+}
+
+/// What [`load`] recovered from a journal file.
+#[derive(Debug, Default)]
+pub struct RecoveryPlan {
+    /// Requests admitted but without a terminal record: re-admit these.
+    /// Ordered by request id (admission order — ids are monotonic).
+    pub inflight: Vec<ReplayEntry>,
+    /// Requests whose terminal outcome reached the journal: skipped
+    /// (their caller already has the result).
+    pub completed: u64,
+    /// Unparseable or malformed lines — normally the single torn line a
+    /// crash leaves at the tail.
+    pub corrupt: u64,
+    /// Highest ids observed anywhere in the log. The recovering node
+    /// advances its generators past these so fresh ids never collide
+    /// with replayed ones.
+    pub max_session: u64,
+    pub max_request: u64,
+    pub max_future: u64,
+}
+
+#[derive(Default)]
+struct PendingEntry {
+    admitted: bool,
+    session: u64,
+    tenant: String,
+    workflow: String,
+    input: Value,
+    timeout_ms: u64,
+    stage: u32,
+    state: Value,
+    terminal: bool,
+}
+
+/// Fold a journal file into a [`RecoveryPlan`]. A missing file is an
+/// empty plan (first boot); unreadable *content* is tolerated line by
+/// line (counted `corrupt`), because the one guaranteed artifact of a
+/// crash is a torn final line.
+pub fn load(path: &Path) -> Result<RecoveryPlan> {
+    let file = match File::open(path) {
+        Ok(f) => f,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(RecoveryPlan::default()),
+        Err(e) => return Err(Error::Io(e)),
+    };
+    let mut plan = RecoveryPlan::default();
+    let mut entries: BTreeMap<u64, PendingEntry> = BTreeMap::new();
+    let mut reader = BufReader::new(file);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {}
+            Err(e) => return Err(Error::Io(e)),
+        }
+        let text = line.trim();
+        if text.is_empty() {
+            continue;
+        }
+        let Ok(rec) = json::parse(text) else {
+            plan.corrupt += 1;
+            continue;
+        };
+        let (Some(request), Some(t)) = (rec.get("request").as_u64(), rec.get("t").as_str())
+        else {
+            plan.corrupt += 1;
+            continue;
+        };
+        plan.max_request = plan.max_request.max(request);
+        match t {
+            "admitted" => {
+                let session = rec.u64_or("session", 0);
+                plan.max_session = plan.max_session.max(session);
+                let e = entries.entry(request).or_default();
+                // Latest-admit-wins: a re-admission after recovery
+                // restarts this request's lifecycle in the same file.
+                e.admitted = true;
+                e.terminal = false;
+                e.session = session;
+                e.tenant = rec.str_or("tenant", "default").to_string();
+                e.workflow = rec.str_or("workflow", "").to_string();
+                e.input = rec.get("input").clone();
+                e.timeout_ms = rec.u64_or("timeout_ms", 0);
+                e.stage = 0;
+                e.state = Value::Null;
+            }
+            "started" => {}
+            "parked" => {
+                if let Value::Arr(ids) = rec.get("waiting") {
+                    for id in ids {
+                        plan.max_future = plan.max_future.max(id.as_u64().unwrap_or(0));
+                    }
+                }
+                if let Some(e) = entries.get_mut(&request) {
+                    e.stage = rec.u64_or("stage", 0) as u32;
+                    e.state = rec.get("state").clone();
+                }
+            }
+            "resolved" => {
+                plan.max_future = plan.max_future.max(rec.u64_or("future", 0));
+            }
+            "terminal" => {
+                entries.entry(request).or_default().terminal = true;
+            }
+            _ => plan.corrupt += 1,
+        }
+    }
+    for (request, e) in entries {
+        if e.terminal {
+            plan.completed += 1;
+        } else if e.admitted {
+            plan.inflight.push(ReplayEntry {
+                request,
+                session: e.session,
+                tenant: e.tenant,
+                workflow: e.workflow,
+                input: e.input,
+                timeout_ms: e.timeout_ms,
+                stage: e.stage,
+                state: e.state,
+            });
+        } else {
+            // records for a request whose admission never hit the disk
+            // (lost to an fsync window): nothing to replay
+            plan.corrupt += 1;
+        }
+    }
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("nalar-journal-{}-{name}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn fsync_policy_parses_and_rejects() {
+        assert_eq!(FsyncPolicy::parse("always").unwrap(), FsyncPolicy::Always);
+        assert_eq!(FsyncPolicy::parse("batch").unwrap(), FsyncPolicy::Batch);
+        assert_eq!(FsyncPolicy::parse("never").unwrap(), FsyncPolicy::Never);
+        assert_eq!(FsyncPolicy::Batch.name(), "batch");
+        let err = FsyncPolicy::parse("sometimes").unwrap_err();
+        assert!(matches!(err, Error::Config(..)), "{err}");
+    }
+
+    #[test]
+    fn missing_file_is_an_empty_plan() {
+        let plan = load(Path::new("/nonexistent/nalar-test-journal.jsonl")).unwrap();
+        assert!(plan.inflight.is_empty());
+        assert_eq!((plan.completed, plan.corrupt), (0, 0));
+    }
+
+    #[test]
+    fn append_load_roundtrip_separates_completed_from_inflight() {
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let j = Journal::open(&path, FsyncPolicy::Never).unwrap();
+        // request 1: full lifecycle, terminal on disk -> skipped
+        j.append(&admitted(1, 10, "default", "router", &json!({"prompt": "a"}), 30_000));
+        j.append(&started(1));
+        j.append(&parked(1, 1, json!({"at": "classify"}), &[100]));
+        j.append(&resolved(1, 100));
+        j.append(&terminal(1, "done", json!({"reply": "ok"})));
+        // request 2: parked mid-flight, no terminal -> replayed
+        j.append(&admitted(2, 11, "meek", "router", &json!({"prompt": "b"}), 5_000));
+        j.append(&started(2));
+        j.append(&parked(2, 2, json!({"at": "chat"}), &[101, 102]));
+        assert_eq!(j.records(), 8);
+        assert_eq!(j.errors(), 0);
+        drop(j);
+        let plan = load(&path).unwrap();
+        assert_eq!(plan.completed, 1);
+        assert_eq!(plan.corrupt, 0);
+        assert_eq!(plan.inflight.len(), 1);
+        let e = &plan.inflight[0];
+        assert_eq!((e.request, e.session), (2, 11));
+        assert_eq!(e.tenant, "meek");
+        assert_eq!(e.workflow, "router");
+        assert_eq!(e.timeout_ms, 5_000);
+        assert_eq!(e.stage, 2);
+        assert_eq!(e.state.get("at").as_str(), Some("chat"));
+        assert_eq!(e.input.get("prompt").as_str(), Some("b"));
+        assert_eq!(plan.max_session, 11);
+        assert_eq!(plan.max_request, 2);
+        assert_eq!(plan.max_future, 102, "waker-side futures count into the high-water mark");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_tail_is_tolerated_not_fatal() {
+        let path = tmp("torn");
+        let _ = std::fs::remove_file(&path);
+        let j = Journal::open(&path, FsyncPolicy::Always).unwrap();
+        j.append(&admitted(7, 3, "default", "swe", &json!({"task": "t"}), 1_000));
+        drop(j);
+        // simulate a crash mid-append: a half-written final line
+        use std::io::Write as _;
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"{\"t\": \"termi").unwrap();
+        drop(f);
+        let plan = load(&path).unwrap();
+        assert_eq!(plan.corrupt, 1, "the torn line is counted, not fatal");
+        assert_eq!(plan.inflight.len(), 1, "the intact prefix still replays");
+        assert_eq!(plan.inflight[0].request, 7);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn latest_admission_wins_across_recovery_cycles() {
+        let path = tmp("cycles");
+        let _ = std::fs::remove_file(&path);
+        let j = Journal::open(&path, FsyncPolicy::Batch).unwrap();
+        // first lifetime: parked, then the node died
+        j.append(&admitted(5, 2, "default", "financial", &json!({"question": "q"}), 9_000));
+        j.append(&parked(5, 1, json!({"at": "join"}), &[50]));
+        // recovery re-admitted it into the same file, and it completed
+        j.append(&admitted(5, 2, "default", "financial", &json!({"question": "q"}), 9_000));
+        j.append(&terminal(5, "done", json!("summary")));
+        drop(j);
+        let plan = load(&path).unwrap();
+        assert_eq!(plan.completed, 1, "the re-admitted lifecycle reached terminal");
+        assert!(plan.inflight.is_empty(), "nothing left to replay");
+        // ...and a third lifetime would start from a clean slate again
+        let j = Journal::open(&path, FsyncPolicy::Batch).unwrap();
+        j.append(&admitted(5, 2, "default", "financial", &json!({"question": "q"}), 9_000));
+        drop(j);
+        let plan = load(&path).unwrap();
+        assert_eq!(plan.completed, 0);
+        assert_eq!(plan.inflight.len(), 1, "latest admission reopens the request");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn disabled_sink_is_a_no_op() {
+        let sink = JournalSink::disabled();
+        assert!(!sink.enabled());
+        sink.append(&terminal(1, "done", Value::Null)); // must not panic
+        sink.sync();
+        assert!(sink.journal().is_none());
+    }
+}

@@ -40,6 +40,7 @@
 //! | [`runtime`] | impl | PJRT loader/executor for the AOT artifacts |
 //! | [`vectorstore`] | impl | cosine top-k index (ChromaDB substitute) |
 //! | [`ingress`] | §6 | open-loop front door: admission + event-driven scheduler |
+//! | [`journal`] | §5 | durable request journal + crash recovery replay |
 //! | [`trace`] | §5 | per-request span timelines + the bounded flight recorder |
 //! | [`workflow`] | §6 | the three evaluation workflows as resumable drivers |
 //! | [`workload`] | §6 | arrival processes + synthetic corpora |
@@ -55,6 +56,7 @@ pub mod error;
 pub mod futures;
 pub mod ids;
 pub mod ingress;
+pub mod journal;
 pub mod metrics;
 pub mod nodestore;
 pub mod runtime;

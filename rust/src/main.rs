@@ -11,8 +11,13 @@
 //!               # threads × workflow shards × tenants, reporting
 //!               # submit/wake/poll/complete throughput and p99
 //!               # shard-lock hold time -> BENCH_contention.json
+//! nalar bench recovery [--quick] [--out DIR] [--check-only]
+//!               # kill-and-recover scenario: a journal-enabled ingress is
+//!               # halted mid-load, the journal replayed into a fresh node,
+//!               # every survivor driven to completion (DESIGN.md §12)
+//!               # -> BENCH_recovery.json
 //! nalar serve   --workflow router|financial|swe [--system nalar|...] [--secs 30]
-//!               [--rps N] [--config path.json]
+//!               [--rps N] [--config path.json] [--journal PATH]
 //!               [--listen 127.0.0.1:8080] [--port-file P] [--stop-file P]
 //!               [--time-scale F]
 //!               # hold a deployment open behind the ingress front door;
@@ -20,7 +25,10 @@
 //!               # instead of in-process self-traffic: --port-file writes
 //!               # the bound port (for `--listen 127.0.0.1:0`), --stop-file
 //!               # shuts down cleanly when the named file appears, and the
-//!               # exit status asserts zero leaked connections
+//!               # exit status asserts zero leaked connections;
+//!               # --journal enables the durable request journal at PATH —
+//!               # on startup an existing journal is replayed (crash
+//!               # recovery, DESIGN.md §12) and the replay stats printed
 //! nalar loadgen --workload router|financial|swe [--rps 20,40,80 | 20:160:20]
 //!               [--systems nalar,ayo,crew,autogen] [--secs N] [--quick]
 //!               [--hc-smoke] [--workers N] [--cancel-rate 0.1]
@@ -102,8 +110,9 @@ fn main() -> nalar::Result<()> {
                  [--system nalar|ayo|crew|autogen] [--rps N] [--secs N] [--config file.json] \
                  | bench [--quick] [--only fig9,fig10,table4,sec62] [--out DIR] [--check-only] \
                  | bench contention [--quick] [--out DIR] [--check-only] \
+                 | bench recovery [--quick] [--out DIR] [--check-only] \
                  | serve [--workflow ...] [--secs N] [--rps N] [--listen ADDR] \
-                 [--port-file P] [--stop-file P] [--time-scale F] \
+                 [--journal PATH] [--port-file P] [--stop-file P] [--time-scale F] \
                  | loadgen [--workload router|financial|swe] [--rps LIST|START:END:STEP] \
                  [--systems csv] [--secs N] [--quick] [--hc-smoke] [--workers N] \
                  [--cancel-rate F] [--schedule csv] [--tenants noisy|name:share[:weight],...] \
@@ -189,6 +198,18 @@ fn cmd_bench(args: &Args) -> nalar::Result<()> {
         println!("bench reports written:\n  {}", path.display());
         return Ok(());
     }
+    // `nalar bench recovery`: the kill-and-recover scenario (also its own
+    // subcommand — it needs a journal file and a deliberate halt, not the
+    // steady-state harness the figure benches share).
+    if args.positional.get(1).map(|s| s.as_str()) == Some("recovery") {
+        if args.flag("check-only") {
+            return bench::check_files(&out_dir, &[bench::RECOVERY]);
+        }
+        let quick = args.flag("quick") || std::env::var("NALAR_BENCH_QUICK").is_ok();
+        let path = bench::run_recovery(quick, &out_dir)?;
+        println!("bench reports written:\n  {}", path.display());
+        return Ok(());
+    }
     let only: Option<Vec<String>> = args
         .get("only")
         .map(|s| s.split(',').map(|p| p.trim().to_string()).collect());
@@ -226,9 +247,22 @@ fn cmd_serve(args: &Args) -> nalar::Result<()> {
             .parse()
             .map_err(|_| nalar::Error::Config(format!("bad --time-scale `{ts}`")))?;
     }
+    // --journal PATH: durable request journal + crash recovery. An
+    // existing file at PATH is replayed by `Ingress::start` before the
+    // front door opens (DESIGN.md §12).
+    if let Some(journal) = args.get("journal") {
+        cfg.ingress.journal.path = journal.to_string();
+    }
     let time_scale = cfg.time_scale;
     let d = Deployment::launch_as(cfg, system)?;
     let ingress = std::sync::Arc::new(Ingress::start(&d, &[wf]));
+    if let Some(r) = ingress.recovery() {
+        println!(
+            "[serve] journal replay: {} request(s) recovered, {} already terminal \
+             (skipped), {} lost, {} corrupt line(s)",
+            r.recovered, r.skipped_complete, r.lost, r.corrupt
+        );
+    }
     if let Some(listen) = args.get("listen") {
         let listen = listen.to_string();
         return serve_http(args, d, ingress, wf, &listen);

@@ -557,7 +557,11 @@ fn post_workflow(state: &State, kind: &str, req: &Request) -> Response {
         },
     };
     let timeout = Duration::from_millis(deadline_ms);
-    let mut sub = SubmitRequest::workflow(kind).input(input).deadline(timeout);
+    // Wire submits keep their timeline past the terminal exit: the
+    // registry owns the trace lifetime here (`/trace` answers until the
+    // result is consumed), so opt out of the in-proc terminal eviction.
+    let mut sub =
+        SubmitRequest::workflow(kind).input(input).deadline(timeout).retain_trace();
     if let Some(t) = req.header("x-nalar-tenant") {
         sub = sub.tenant(t);
     }
@@ -866,7 +870,10 @@ impl HttpResponse {
 
 /// Minimal keep-alive HTTP/1.1 client for `loadgen --remote` and the wire
 /// tests: one persistent connection, sequential request/response, one
-/// transparent reconnect when the server closed a kept-alive socket.
+/// transparent reconnect when the server closed a kept-alive socket —
+/// for idempotent methods only. Non-idempotent requests (POST) surface
+/// the transport error instead: the dead socket may have carried an
+/// already-admitted submit, and replaying it would double-submit.
 pub struct HttpClient {
     addr: String,
     stream: Option<TcpStream>,
@@ -895,6 +902,12 @@ impl HttpClient {
         body: &str,
     ) -> Result<HttpResponse> {
         let fresh = self.stream.is_none();
+        // Only idempotent methods may be replayed transparently. A POST
+        // whose pooled connection died after the bytes left the client
+        // may already have been admitted server-side — re-sending it
+        // would double-submit the workflow. The caller sees the error
+        // and decides (poll, resubmit with its own dedup, give up).
+        let idempotent = matches!(method, "GET" | "HEAD" | "DELETE");
         match self.request_once(method, path, headers, body) {
             Ok(r) => Ok(r),
             Err(first) => {
@@ -902,7 +915,7 @@ impl HttpClient {
                 // requests; retry once on a fresh connection. A failure
                 // on an already-fresh connection is real.
                 self.stream = None;
-                if fresh {
+                if fresh || !idempotent {
                     return Err(Error::Io(first));
                 }
                 self.request_once(method, path, headers, body).map_err(Error::Io)
@@ -1137,5 +1150,79 @@ mod tests {
     fn malformed_header_lines_are_400() {
         let raw = b"GET /x HTTP/1.1\r\nthis line has no colon\r\n\r\n";
         assert!(matches!(parse(raw), Parsed::Error(400, _)));
+    }
+
+    /// A one-request-per-connection server: every accepted socket serves
+    /// exactly one request (counting it), answers 200, and closes — the
+    /// shape of a keep-alive peer that idles clients out between
+    /// requests. Returns the served-request counter.
+    fn close_after_serve_server(conns: usize) -> (SocketAddr, Arc<AtomicUsize>, JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let served = Arc::new(AtomicUsize::new(0));
+        let counter = served.clone();
+        let handle = std::thread::spawn(move || {
+            for _ in 0..conns {
+                let (mut s, _) = match listener.accept() {
+                    Ok(x) => x,
+                    Err(_) => return,
+                };
+                let mut buf = Vec::new();
+                let mut chunk = [0u8; 1024];
+                loop {
+                    match parse_request(&buf, HDR, BODY) {
+                        Parsed::Request(..) => {
+                            counter.fetch_add(1, Ordering::SeqCst);
+                            let body = "{\"ok\":true}";
+                            let head = format!(
+                                "HTTP/1.1 200 OK\r\ncontent-type: application/json\r\n\
+                                 content-length: {}\r\n\r\n",
+                                body.len()
+                            );
+                            let _ = s.write_all(head.as_bytes());
+                            let _ = s.write_all(body.as_bytes());
+                            let _ = s.flush();
+                            break; // drop the stream: the socket closes
+                        }
+                        Parsed::NeedMore => match s.read(&mut chunk) {
+                            Ok(0) => break,
+                            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+                            Err(_) => break,
+                        },
+                        Parsed::Error(..) => break,
+                    }
+                }
+            }
+        });
+        (addr, served, handle)
+    }
+
+    #[test]
+    fn stale_pooled_post_surfaces_the_error_instead_of_resubmitting() {
+        let (addr, served, handle) = close_after_serve_server(3);
+        let mut client = HttpClient::new(addr.to_string());
+        // First POST lands on a fresh connection and succeeds.
+        let r = client.request("POST", "/v1/workflows/router/requests", &[], "{}").unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(served.load(Ordering::SeqCst), 1);
+        // The server closed that socket after admitting. A second POST
+        // reuses the pooled connection, hits the stale socket, and must
+        // surface the error: the bytes may already have been admitted
+        // server-side, so a transparent replay would double-submit.
+        let err = client.request("POST", "/v1/workflows/router/requests", &[], "{}");
+        assert!(err.is_err(), "stale-connection POST must error, got {err:?}");
+        assert_eq!(served.load(Ordering::SeqCst), 1, "the POST must not be replayed");
+        // Idempotent methods still reconnect transparently: this GET
+        // lands fresh (the failed POST dropped the pooled stream)...
+        let r = client.request("GET", "/healthz", &[], "").unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(served.load(Ordering::SeqCst), 2);
+        // ...and the next GET exercises the actual retry path: pooled
+        // stream is stale again, the client replays on a fresh socket.
+        let r = client.request("GET", "/healthz", &[], "").unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(served.load(Ordering::SeqCst), 3);
+        drop(client);
+        handle.join().unwrap();
     }
 }

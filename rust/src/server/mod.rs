@@ -238,6 +238,14 @@ impl Deployment {
         self.inner.ids.request()
     }
 
+    /// Journal-replay hook: advance the id generators past the highest
+    /// session/request/future ids observed in a recovered journal, so
+    /// fresh ids minted after recovery never collide with replayed ones
+    /// (see [`crate::journal::RecoveryPlan`]).
+    pub fn advance_ids(&self, session: u64, request: u64, future: u64) {
+        self.inner.ids.advance_past(session, request, future);
+    }
+
     /// New request context for a workflow driver.
     pub fn ctx(&self, session: SessionId) -> CallCtx {
         let request: RequestId = self.inner.ids.request();

@@ -53,6 +53,19 @@ pub trait Driver: Send {
     fn stage(&self) -> u32 {
         0
     }
+
+    /// Serialize the current suspension point as plain JSON for the
+    /// durable request journal. The snapshot records the *resume point* —
+    /// which stage to re-enter and the data needed to re-issue that
+    /// stage's agent calls — never in-flight future handles, because
+    /// futures do not survive a crash; replay re-issues them afresh
+    /// ([`restore_driver`]). `Null` (the default) means "no resumable
+    /// snapshot": replay falls back to restarting the request from its
+    /// first stage, which is always correct (stages are agent calls the
+    /// driver could also have retried), just slower.
+    fn serialize_state(&self) -> Value {
+        Value::Null
+    }
 }
 
 /// Instantiate the resumable driver for one admitted request.
@@ -61,6 +74,18 @@ pub fn driver_for(kind: WorkflowKind, input: &Value) -> Box<dyn Driver> {
         WorkflowKind::Financial => Box::new(financial::FinancialDriver::new(input)),
         WorkflowKind::Router => Box::new(router::RouterDriver::new(input)),
         WorkflowKind::Swe => Box::new(swe::SweDriver::new(input)),
+    }
+}
+
+/// Re-instantiate a driver from a journaled suspension point
+/// ([`Driver::serialize_state`]). A `Null` or unrecognized snapshot falls
+/// back to [`driver_for`]'s fresh driver — the replayed request then
+/// restarts from its first stage instead of resuming mid-flight.
+pub fn restore_driver(kind: WorkflowKind, input: &Value, state: &Value) -> Box<dyn Driver> {
+    match kind {
+        WorkflowKind::Financial => Box::new(financial::FinancialDriver::restore(input, state)),
+        WorkflowKind::Router => Box::new(router::RouterDriver::restore(input, state)),
+        WorkflowKind::Swe => Box::new(swe::SweDriver::restore(input, state)),
     }
 }
 

@@ -32,8 +32,13 @@ enum State {
     Start,
     /// Fan-out in flight; the join suspends on every unresolved future.
     Join { specialists: Vec<FutureHandle>, web: FutureHandle },
-    /// Summary call in flight.
-    Summarize { summary: FutureHandle },
+    /// Summary call in flight. The composed prompt (question + specialist
+    /// outputs + web digest) rides along so a journaled snapshot can
+    /// re-issue the summary without re-running the fan-out.
+    Summarize { summary: FutureHandle, prompt: String },
+    /// Journal-replay re-entry point ([`FinancialDriver::restore`]): the
+    /// first poll re-issues the summary call afresh.
+    Resume { prompt: String },
     Finished,
 }
 
@@ -54,6 +59,19 @@ impl FinancialDriver {
             max_new: input.get("max_new").as_usize().unwrap_or(128),
             state: State::Start,
         }
+    }
+
+    /// Rebuild a driver from a [`Driver::serialize_state`] snapshot. The
+    /// fan-out join (or an unrecognized snapshot) restarts from `Start` —
+    /// partially resolved specialists died with the node, so the whole
+    /// fan-out re-issues; a summarize snapshot re-enters directly with
+    /// the already-composed prompt.
+    pub fn restore(input: &Value, state: &Value) -> FinancialDriver {
+        let mut d = FinancialDriver::new(input);
+        if state.str_or("stage", "") == "summarize" {
+            d.state = State::Resume { prompt: state.str_or("prompt", "").to_string() };
+        }
+        d
     }
 }
 
@@ -124,26 +142,24 @@ impl Driver for FinancialDriver {
                     let history_tokens = 48 * history.len(); // prior summaries in the KV context
 
                     let deps: Vec<_> = specialists.iter().map(|f| f.id()).collect();
+                    let prompt =
+                        format!("{}\n{}\n{web_part}", self.question, parts.join("\n"));
                     let summary = env.ctx.deeper().agent("analyst").call_with(
                         "summarize",
                         json!({
-                            "prompt": format!(
-                                "{}\n{}\n{web_part}",
-                                self.question,
-                                parts.join("\n")
-                            ),
+                            "prompt": prompt.as_str(),
                             "max_new_tokens": self.max_new,
                             "history_tokens": history_tokens,
                         }),
                         &deps,
                         0,
                     );
-                    self.state = State::Summarize { summary };
+                    self.state = State::Summarize { summary, prompt };
                 }
-                State::Summarize { summary } => match summary.try_value() {
+                State::Summarize { summary, prompt } => match summary.try_value() {
                     None => {
                         let id = summary.id();
-                        self.state = State::Summarize { summary };
+                        self.state = State::Summarize { summary, prompt };
                         return Step::Pending { waiting_on: vec![id] };
                     }
                     Some(Err(e)) => return Step::Done(Err(e)),
@@ -161,6 +177,25 @@ impl Driver for FinancialDriver {
                         })));
                     }
                 },
+                State::Resume { prompt } => {
+                    // Replay re-issues the summary call afresh: the
+                    // specialist outputs are already baked into the
+                    // snapshotted prompt, so only the final call reruns
+                    // (no deps — the producing futures died in the crash).
+                    let history = env.state_list("history");
+                    let history_tokens = 48 * history.len();
+                    let summary = env.ctx.deeper().agent("analyst").call_with(
+                        "summarize",
+                        json!({
+                            "prompt": prompt.as_str(),
+                            "max_new_tokens": self.max_new,
+                            "history_tokens": history_tokens,
+                        }),
+                        &[],
+                        0,
+                    );
+                    self.state = State::Summarize { summary, prompt };
+                }
                 State::Finished => {
                     return Step::Done(Err(Error::msg("financial driver polled after completion")))
                 }
@@ -173,8 +208,20 @@ impl Driver for FinancialDriver {
         match self.state {
             State::Start => 0,
             State::Join { .. } => 1,
-            State::Summarize { .. } => 2,
+            State::Summarize { .. } | State::Resume { .. } => 2,
             State::Finished => 3,
+        }
+    }
+
+    fn serialize_state(&self) -> Value {
+        match &self.state {
+            // A mid-join crash re-runs the whole fan-out: resolved
+            // specialist values lived only in the dead node's memory.
+            State::Start | State::Join { .. } => json!({"stage": "join"}),
+            State::Summarize { prompt, .. } | State::Resume { prompt } => {
+                json!({"stage": "summarize", "prompt": prompt.as_str()})
+            }
+            State::Finished => Value::Null,
         }
     }
 }
@@ -246,6 +293,25 @@ mod tests {
             panic!("fan-out cannot be done on the first poll");
         };
         assert_eq!(waiting_on.len(), 4, "3 specialists + web search");
+        d.shutdown();
+    }
+
+    #[test]
+    fn restore_resumes_the_summary_without_refanning_out() {
+        let mut cfg = WorkflowKind::Financial.config();
+        cfg.time_scale = 0.0005;
+        let d = Deployment::launch(cfg).unwrap();
+        let env = Env::new(&d, d.new_session());
+        let input = json!({"question": "q"});
+        // Fan-out snapshots restart from the top...
+        assert_eq!(FinancialDriver::restore(&input, &json!({"stage": "join"})).stage(), 0);
+        // ...but a summarize snapshot re-enters stage 2 with the composed
+        // prompt and completes (history still appends the turn).
+        let snap = json!({"stage": "summarize", "prompt": "q\nstocks up\nbonds flat"});
+        let mut drv = FinancialDriver::restore(&input, &snap);
+        assert_eq!(drv.stage(), 2, "snapshot re-enters the summary stage");
+        let out = drive_blocking(&mut drv, &env, Duration::from_secs(20)).unwrap();
+        assert_eq!(out.get("turn").as_i64(), Some(1));
         d.shutdown();
     }
 }

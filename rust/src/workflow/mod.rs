@@ -17,7 +17,7 @@ pub mod harness;
 pub mod router;
 pub mod swe;
 
-pub use driver::{drive_blocking, driver_for, Driver, Step};
+pub use driver::{drive_blocking, driver_for, restore_driver, Driver, Step};
 pub use harness::{run_open_loop, RunConfig, RunStats};
 
 use std::time::Duration;

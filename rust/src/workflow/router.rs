@@ -34,7 +34,12 @@ enum State {
     /// Coder branch: the implementation is in flight.
     Implement { code: FutureHandle },
     /// Coder branch: the test run over the implementation is in flight.
-    Test { test: FutureHandle },
+    /// The implementation text rides along so a journaled snapshot can
+    /// re-issue the test run without re-implementing.
+    Test { test: FutureHandle, code: String },
+    /// Journal-replay re-entry point ([`RouterDriver::restore`]): the
+    /// first poll re-issues the interrupted stage's call afresh.
+    Resume { stage: String, code: String },
     Finished,
 }
 
@@ -54,6 +59,22 @@ impl RouterDriver {
             class: input.get("class").as_str().unwrap_or("chat").to_string(),
             state: State::Start,
         }
+    }
+
+    /// Rebuild a driver from a [`Driver::serialize_state`] snapshot.
+    /// Classification (or an unrecognized snapshot) restarts from
+    /// `Start` — re-issuing the classify call *is* the resume; later
+    /// stages re-enter directly, skipping the work already banked.
+    pub fn restore(input: &Value, state: &Value) -> RouterDriver {
+        let mut d = RouterDriver::new(input);
+        let stage = state.str_or("stage", "");
+        if matches!(stage, "chat" | "implement" | "test") {
+            d.state = State::Resume {
+                stage: stage.to_string(),
+                code: state.str_or("code", "").to_string(),
+            };
+        }
+        d
     }
 }
 
@@ -116,22 +137,20 @@ impl Driver for RouterDriver {
                     }
                     Some(Err(e)) => return Step::Done(Err(e)),
                     Some(Ok(code_out)) => {
+                        let text = code_out.get("text").as_str().unwrap_or("").to_string();
                         let test = env.ctx.deeper().agent("test_harness").call_with(
                             "unit_test",
-                            json!({
-                                "code": code_out.get("text").as_str().unwrap_or(""),
-                                "attempt": 0,
-                            }),
+                            json!({"code": text.as_str(), "attempt": 0}),
                             &[code.id()],
                             0,
                         );
-                        self.state = State::Test { test };
+                        self.state = State::Test { test, code: text };
                     }
                 },
-                State::Test { test } => match test.try_value() {
+                State::Test { test, code } => match test.try_value() {
                     None => {
                         let id = test.id();
-                        self.state = State::Test { test };
+                        self.state = State::Test { test, code };
                         return Step::Pending { waiting_on: vec![id] };
                     }
                     Some(Err(e)) => return Step::Done(Err(e)),
@@ -142,6 +161,42 @@ impl Driver for RouterDriver {
                         })))
                     }
                 },
+                State::Resume { stage, code } => {
+                    // Replay re-issues the interrupted stage's call afresh:
+                    // the pre-crash future died with the node, and retrying
+                    // an agent call is exactly what the driver would have
+                    // done on failure anyway (§5 "driver decides").
+                    let deeper = env.ctx.deeper();
+                    match stage.as_str() {
+                        "chat" => {
+                            let reply = deeper.agent("chat").call(
+                                "reply",
+                                json!({"prompt": self.prompt.as_str(), "max_new_tokens": 96}),
+                            );
+                            self.state = State::Chat { reply };
+                        }
+                        "implement" => {
+                            let code = deeper.agent("coder").call(
+                                "implement",
+                                json!({"prompt": self.prompt.as_str(), "max_new_tokens": 192}),
+                            );
+                            self.state = State::Implement { code };
+                        }
+                        "test" => {
+                            // The implementation survived in the snapshot;
+                            // only the test run is re-issued (no dep: the
+                            // producing future did not survive the crash).
+                            let test = deeper.agent("test_harness").call_with(
+                                "unit_test",
+                                json!({"code": code.as_str(), "attempt": 0}),
+                                &[],
+                                0,
+                            );
+                            self.state = State::Test { test, code };
+                        }
+                        _ => self.state = State::Start,
+                    }
+                }
                 State::Finished => {
                     return Step::Done(Err(Error::msg("router driver polled after completion")))
                 }
@@ -153,12 +208,32 @@ impl Driver for RouterDriver {
     /// test run 3 — later stages have less remaining work (front-door
     /// SRTF).
     fn stage(&self) -> u32 {
-        match self.state {
+        match &self.state {
             State::Start => 0,
             State::Classify { .. } => 1,
             State::Chat { .. } | State::Implement { .. } => 2,
             State::Test { .. } => 3,
+            State::Resume { stage, .. } => match stage.as_str() {
+                "chat" | "implement" => 2,
+                "test" => 3,
+                _ => 0,
+            },
             State::Finished => 4,
+        }
+    }
+
+    fn serialize_state(&self) -> Value {
+        match &self.state {
+            // Classification in flight resumes by re-classifying — which
+            // is the same as starting over, so both snapshot alike.
+            State::Start | State::Classify { .. } => json!({"stage": "classify"}),
+            State::Chat { .. } => json!({"stage": "chat"}),
+            State::Implement { .. } => json!({"stage": "implement"}),
+            State::Test { code, .. } => json!({"stage": "test", "code": code.as_str()}),
+            State::Resume { stage, code } => {
+                json!({"stage": stage.as_str(), "code": code.as_str()})
+            }
+            State::Finished => Value::Null,
         }
     }
 }
@@ -216,6 +291,31 @@ mod tests {
             panic!("still pending");
         };
         assert_eq!(waiting_on, vec![classify_id]);
+        d.shutdown();
+    }
+
+    #[test]
+    fn restore_reenters_the_snapshotted_stage() {
+        let mut cfg = WorkflowKind::Router.config();
+        cfg.time_scale = 0.0005;
+        let d = Deployment::launch(cfg).unwrap();
+        let env = Env::new(&d, d.new_session());
+        let input = json!({"prompt": "fix bug", "class": "coder"});
+
+        // A fresh driver snapshots as "classify" (nothing banked yet); a
+        // null snapshot restores to exactly that.
+        let fresh = RouterDriver::new(&input);
+        assert_eq!(fresh.serialize_state().get("stage").as_str(), Some("classify"));
+        assert_eq!(RouterDriver::restore(&input, &Value::Null).stage(), 0);
+
+        // A test-stage snapshot carries the implementation text: the
+        // restored driver skips classify + implement and re-issues only
+        // the test run — then completes end to end.
+        let snap = json!({"stage": "test", "code": "fn main() {}"});
+        let mut restored = RouterDriver::restore(&input, &snap);
+        assert_eq!(restored.stage(), 3, "snapshot re-enters the test stage");
+        let out = drive_blocking(&mut restored, &env, Duration::from_secs(20)).unwrap();
+        assert_eq!(out.get("branch").as_str(), Some("coder"));
         d.shutdown();
     }
 }

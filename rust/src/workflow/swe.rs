@@ -48,6 +48,10 @@ enum State {
     Plan { plan: FutureHandle },
     /// #2/#3 — subtasks in flight; failures relaunch in place.
     Loop(Work),
+    /// Journal-replay re-entry point ([`SweDriver::restore`]): completed
+    /// subtasks stay banked; the first poll relaunches only the
+    /// unfinished ones at their recorded attempt counts.
+    Resume { done: Vec<bool>, attempts: Vec<u32>, total: u32 },
     Finished,
 }
 
@@ -63,6 +67,32 @@ impl SweDriver {
             task: input.get("task").as_str().unwrap_or("fix the bug").to_string(),
             state: State::Start,
         }
+    }
+
+    /// Rebuild a driver from a [`Driver::serialize_state`] snapshot. A
+    /// planning-stage (or unrecognized) snapshot restarts from `Start`;
+    /// a loop snapshot keeps passed subtasks done and relaunches only the
+    /// unfinished ones, each at its recorded attempt count so the retry
+    /// budget (`MAX_RETRIES`) carries across the crash.
+    pub fn restore(input: &Value, state: &Value) -> SweDriver {
+        let mut d = SweDriver::new(input);
+        if state.str_or("stage", "") == "loop" {
+            if let Value::Arr(flags) = state.get("done") {
+                let done: Vec<bool> =
+                    flags.iter().map(|f| f.as_bool().unwrap_or(false)).collect();
+                let attempts: Vec<u32> = match state.get("attempts") {
+                    Value::Arr(a) => {
+                        a.iter().map(|v| v.as_u64().unwrap_or(0) as u32).collect()
+                    }
+                    _ => vec![0; done.len()],
+                };
+                if !done.is_empty() {
+                    let total = state.u64_or("total", done.len() as u64) as u32;
+                    d.state = State::Resume { done, attempts, total };
+                }
+            }
+        }
+        d
     }
 
     /// Launch (or relaunch) one subtask: documentation lookup feeding the
@@ -183,6 +213,36 @@ impl Driver for SweDriver {
                     self.state = State::Loop(w);
                     return Step::Pending { waiting_on: waiting };
                 }
+                State::Resume { done, attempts, total } => {
+                    if done.iter().all(|d| *d) {
+                        // Crash landed after the last test passed but
+                        // before the merge was journaled terminal.
+                        return Step::Done(Ok(json!({
+                            "task": self.task.as_str(),
+                            "subtasks": done.len(),
+                            "attempts": total,
+                        })));
+                    }
+                    // Relaunch only the unfinished subtasks (their
+                    // pre-crash futures died with the node); passed slots
+                    // keep a never-polled placeholder handle — the loop
+                    // checks `done[i]` before touching `runs[i]`.
+                    let fresh: Vec<(usize, SubtaskRun)> = (0..done.len())
+                        .filter(|i| !done[*i])
+                        .map(|i| {
+                            let attempt = attempts.get(i).copied().unwrap_or(0);
+                            (i, self.launch_subtask(env, i, attempt, None))
+                        })
+                        .collect();
+                    let placeholder = fresh[0].1.test.clone();
+                    let mut runs: Vec<SubtaskRun> = (0..done.len())
+                        .map(|_| SubtaskRun { test: placeholder.clone(), attempt: 0 })
+                        .collect();
+                    for (i, run) in fresh {
+                        runs[i] = run;
+                    }
+                    self.state = State::Loop(Work { runs, done, total_attempts: total });
+                }
                 State::Finished => {
                     return Step::Done(Err(Error::msg("swe driver polled after completion")))
                 }
@@ -198,7 +258,29 @@ impl Driver for SweDriver {
             State::Start => 0,
             State::Plan { .. } => 1,
             State::Loop(w) => 2 + w.done.iter().filter(|d| **d).count() as u32,
+            State::Resume { done, .. } => 2 + done.iter().filter(|d| **d).count() as u32,
             State::Finished => u32::MAX,
+        }
+    }
+
+    fn serialize_state(&self) -> Value {
+        match &self.state {
+            // Planning resumes by re-planning: the subtask count is
+            // derived from the plan output, which died with the node.
+            State::Start | State::Plan { .. } => json!({"stage": "plan"}),
+            State::Loop(w) => json!({
+                "stage": "loop",
+                "done": w.done.clone(),
+                "attempts": w.runs.iter().map(|r| r.attempt).collect::<Vec<u32>>(),
+                "total": w.total_attempts,
+            }),
+            State::Resume { done, attempts, total } => json!({
+                "stage": "loop",
+                "done": done.clone(),
+                "attempts": attempts.clone(),
+                "total": *total,
+            }),
+            State::Finished => Value::Null,
         }
     }
 }
@@ -247,6 +329,36 @@ mod tests {
             max_retry = max_retry.max(c.meta().retry_count);
         });
         assert!(max_retry >= 1, "no retried futures recorded");
+        d.shutdown();
+    }
+
+    #[test]
+    fn restore_relaunches_only_unfinished_subtasks() {
+        let mut cfg = WorkflowKind::Swe.config();
+        cfg.time_scale = 0.0005;
+        let d = Deployment::launch(cfg).unwrap();
+        let env = Env::new(&d, d.new_session());
+        let input = json!({"task": "t"});
+        // Two of three subtasks already passed before the crash. The
+        // restored driver banks the two and drives only the last one
+        // (still at attempt 0, full retry budget) to completion.
+        let snap = json!({
+            "stage": "loop",
+            "done": [true, true, false],
+            "attempts": [0, 1, 0],
+            "total": 4,
+        });
+        let mut drv = SweDriver::restore(&input, &snap);
+        assert_eq!(drv.stage(), 4, "2 banked subtasks on top of the loop base");
+        let out = drive_blocking(&mut drv, &env, Duration::from_secs(30)).unwrap();
+        assert_eq!(out.get("subtasks").as_u64(), Some(3));
+        assert!(out.get("attempts").as_u64().unwrap() >= 4);
+        // A snapshot whose every subtask passed completes without any
+        // relaunch at all.
+        let all_done = json!({"stage": "loop", "done": [true], "attempts": [0], "total": 1});
+        let mut done_drv = SweDriver::restore(&input, &all_done);
+        let out2 = drive_blocking(&mut done_drv, &env, Duration::from_secs(5)).unwrap();
+        assert_eq!(out2.get("attempts").as_u64(), Some(1));
         d.shutdown();
     }
 }

@@ -18,6 +18,7 @@ use nalar::error::Error;
 use nalar::ingress::{
     AdmissionPolicy, Ingress, SchedulePolicy, SchedulerOpts, SubmitRequest, Ticket,
 };
+use nalar::journal::{self, FsyncPolicy, JournalSink};
 use nalar::json;
 use nalar::server::Deployment;
 use nalar::testkit::{Clock, Gate, ScriptedEngine};
@@ -652,4 +653,80 @@ fn cross_shard_stop_and_sweep_drain_every_shard_and_the_future_index() {
     assert_eq!(d.table().len(), 0, "no live futures survive the drain");
     d.table().debug_assert_len();
     d.shutdown();
+}
+
+/// Crash-replay race (ISSUE 9): the node dies in the window between an
+/// engine-side future resolve and the requester's resume. The journal
+/// records the resolve but no terminal; replay must re-issue the stage's
+/// future afresh and produce exactly one terminal outcome — the
+/// crash-window resolve must never double-resolve the request (the
+/// resolve-after-fail drop semantics hold across a restart).
+#[test]
+fn crash_between_resolve_and_resume_replays_without_double_resolution() {
+    let path = std::env::temp_dir()
+        .join(format!("nalar-itest-crashrace-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+
+    // Incarnation 1: park one scripted request, then die before it can
+    // resume.
+    let d = fast_router();
+    let mut opts = SchedulerOpts::new(1, 4);
+    opts.journal = JournalSink::open(&path, FsyncPolicy::Always).unwrap();
+    let ing =
+        Ingress::start_with_opts(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, opts);
+    let eng = ScriptedEngine::new();
+    let t = ing
+        .submit(
+            SubmitRequest::workflow(WorkflowKind::Router)
+                .driver(eng.driver("race", 1))
+                .deadline(Duration::from_secs(600)),
+        )
+        .unwrap();
+    assert!(eng.wait_created(1, Duration::from_secs(5)));
+    // admitted + started + parked must all be durable before the crash
+    settle("parked record journaled", || ing.journal().journal().unwrap().records() >= 3);
+    ing.halt();
+    // The engine resolves the future AFTER the node died — the exact
+    // crash window. The subscribed waker still journals a `resolved`
+    // record, but no scheduler is left to resume the request.
+    eng.cell(0).resolve(json!("late"), 0);
+    ing.journal().sync();
+    assert!(t.try_take().is_none(), "a crashed node fulfils nothing");
+    drop(ing);
+    d.shutdown();
+
+    // Replay: the resolve is advisory, not a terminal — the request is
+    // still in flight in the journal and replays onto a fresh node.
+    let plan = journal::load(&path).unwrap();
+    assert_eq!(plan.completed, 0, "a resolve is not a terminal outcome");
+    assert_eq!(plan.inflight.len(), 1);
+    let d2 = fast_router();
+    let mut opts2 = SchedulerOpts::new(1, 4);
+    opts2.journal = JournalSink::open(&path, FsyncPolicy::Always).unwrap();
+    let ing2 =
+        Ingress::start_with_opts(&d2, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, opts2);
+    let eng2 = ScriptedEngine::new();
+    let outcome = ing2.recover_with(&plan, |_, _, _| eng2.driver("race", 1));
+    assert_eq!((outcome.stats.recovered, outcome.stats.lost), (1, 0));
+    let t2 = &outcome.tickets[0];
+    // The replayed stage re-issues its future afresh; the dead
+    // incarnation's cell was spent in the dead incarnation's table and
+    // is never consumed twice.
+    assert!(eng2.wait_created(1, Duration::from_secs(5)), "the stage's future is re-issued");
+    eng2.cell(0).resolve(json!("fresh"), 0);
+    let out = t2.wait(Duration::from_secs(10)).unwrap();
+    assert_eq!(out.get("scripted").as_str(), Some("race"));
+    assert_drained(&ing2, WorkflowKind::Router);
+    settle("future index drains", || d2.table().request_index_len() == 0);
+    ing2.stop();
+    d2.shutdown();
+
+    // Exactly one terminal record for the request across both
+    // incarnations: the crash-window resolve did not double-complete it.
+    let text = std::fs::read_to_string(&path).unwrap();
+    let terminals = text.lines().filter(|l| l.contains("\"t\":\"terminal\"")).count();
+    assert_eq!(terminals, 1, "exactly one terminal outcome across the crash");
+    let resolves = text.lines().filter(|l| l.contains("\"t\":\"resolved\"")).count();
+    assert!(resolves >= 2, "both the crash-window and the replayed resolve are journaled");
+    let _ = std::fs::remove_file(&path);
 }
