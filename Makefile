@@ -1,6 +1,6 @@
 # Local entrypoints — identical to what CI runs (.github/workflows/ci.yml).
 
-.PHONY: build test test-scheduler test-fairness fmt clippy lint bench bench-quick bench-contention bench-contention-quick bench-recovery bench-recovery-quick loadgen loadgen-quick loadgen-hc serve-smoke artifacts clean
+.PHONY: build test test-scheduler test-fairness fmt clippy lint bench bench-quick bench-contention bench-contention-quick bench-recovery bench-recovery-quick bench-routing bench-routing-quick loadgen loadgen-quick loadgen-hc serve-smoke artifacts clean
 
 build:
 	cargo build --release --all-targets
@@ -69,6 +69,20 @@ bench-recovery:
 bench-recovery-quick:
 	cargo run --release -- bench recovery --quick
 	cargo run --release -- bench recovery --check-only
+
+# JIT model-routing gate (ISSUE 10): jit vs the fixed-large pin on the
+# router workflow across an rps sweep, identical three-variant
+# latency/quality curve on both arms -> BENCH_routing.json (schema arm
+# routing/v1). The run errors unless jit beats the pin on goodput at the
+# shared quality floor for at least one swept rate; the quick profile is
+# the CI routing-smoke.
+bench-routing:
+	cargo run --release -- bench routing
+	cargo run --release -- bench routing --check-only
+
+bench-routing-quick:
+	cargo run --release -- bench routing --quick
+	cargo run --release -- bench routing --check-only
 
 # Full §6 saturation sweep through the ingress front door: writes
 # BENCH_rps_sweep.json at the repo root (minutes).

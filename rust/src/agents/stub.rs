@@ -16,6 +16,7 @@ use crate::coordinator::Router;
 use crate::error::{Error, Result};
 use crate::futures::{DepGraph, FutureCell, FutureHandle, FutureMeta, FutureTable, Value};
 use crate::ids::{AgentType, FutureId, IdGen, Location, RequestId, SessionId};
+use crate::ingress::routing::RouteHint;
 use crate::transport::{Bus, CallMsg, Message};
 
 /// Shared runtime context the stubs operate against (cheap clone).
@@ -31,6 +32,10 @@ pub struct CallCtx {
     pub table: Arc<FutureTable>,
     pub ids: Arc<IdGen>,
     pub cfg: Arc<DeploymentConfig>,
+    /// The request's JIT-routing hint (DESIGN.md §13): the ingress stamps
+    /// its per-dispatch variant decision here and stubs copy it into each
+    /// call's args. `None` when routing is off — calls go out unrouted.
+    pub route: Option<Arc<RouteHint>>,
 }
 
 impl CallCtx {
@@ -73,6 +78,19 @@ impl AgentStub {
         deps: &[FutureId],
         retry_count: u32,
     ) -> FutureHandle {
+        // Stamp the front door's freshest routing decision into the call
+        // args (a driver fanning out several calls from one poll stamps
+        // each with the same decision); the component controller re-checks
+        // it against the current quality floor at engine admit. `consume`
+        // (not `variant`) so per-variant dispatch counters tick exactly
+        // once per issued call.
+        let mut args = args;
+        if let Some(hint) = &self.ctx.route {
+            if let Some((variant, urgent)) = hint.consume() {
+                args.insert("variant", variant);
+                args.insert("urgent", urgent);
+            }
+        }
         let id = self.ctx.ids.future();
         let mut meta = FutureMeta::new(
             id,
@@ -163,6 +181,7 @@ mod tests {
             table: Arc::new(FutureTable::new()),
             ids: Arc::new(IdGen::new()),
             cfg: Arc::new(cfg),
+            route: None,
         };
         (ctx, rx)
     }
@@ -201,6 +220,29 @@ mod tests {
         let (ctx, _rx) = ctx_with_instance();
         let f = ctx.agent("dev").call("not_a_method", json!({}));
         assert!(matches!(f.try_value(), Some(Err(_))));
+    }
+
+    #[test]
+    fn routing_hint_stamps_call_args() {
+        use crate::config::ModelVariant;
+        use crate::ingress::routing::{Decision, RouteHint, RouteMode, RouteState};
+        let (mut ctx, rx) = ctx_with_instance();
+        let variants = vec![
+            ModelVariant { name: "fast".into(), latency_mult: 0.35, quality: 0.82 },
+            ModelVariant { name: "base".into(), latency_mult: 1.0, quality: 0.92 },
+        ];
+        let rs = RouteState::new(RouteMode::Jit, &variants).unwrap();
+        let hint = RouteHint::new(rs);
+        hint.set(Decision { variant: 0, urgent: true });
+        ctx.route = Some(hint);
+        ctx.agent("dev").call("implement", json!({"prompt": "x"}));
+        match rx.try_recv().unwrap() {
+            Message::Call(c) => {
+                assert_eq!(c.args.get("variant").as_str(), Some("fast"));
+                assert_eq!(c.args.get("urgent").as_bool(), Some(true));
+            }
+            _ => panic!(),
+        }
     }
 
     #[test]

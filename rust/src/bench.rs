@@ -28,12 +28,13 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::baselines::SystemUnderTest;
-use crate::config::TenantSettings;
+use crate::config::{ModelVariant, TenantSettings};
 use crate::coordinator::policy::make_policy;
 use crate::coordinator::{GlobalController, InstanceMetrics, LoadMap, Router};
 use crate::error::{Error, Result};
 use crate::futures::{FutureCell, FutureMeta, FutureTable};
 use crate::ids::{AgentType, FutureId, InstanceId, Location, NodeId, RequestId, SessionId};
+use crate::ingress::loadgen::{run_point, LoadgenOpts};
 use crate::ingress::{
     AdmissionPolicy, HoldOp, HoldStats, Ingress, SchedulerOpts, SubmitRequest, Ticket,
 };
@@ -73,6 +74,15 @@ pub const CONTENTION: &str = "contention";
 /// driven to completion. One point per fsync policy. Schema arm
 /// `recovery/v1`.
 pub const RECOVERY: &str = "recovery";
+
+/// The JIT-model-routing comparison written by `nalar bench routing`
+/// (own subcommand, like [`RECOVERY`]): the identical open-loop RPS
+/// point run once per routing arm — `jit` against a `fixed-large` pin —
+/// over a three-variant latency/quality table, reporting goodput and
+/// dispatch-weighted mean quality per arm. The run itself gates on jit
+/// achieving strictly higher goodput than the pin on at least one swept
+/// rate (DESIGN.md §13). Schema arm `routing/v1`.
+pub const ROUTING: &str = "routing";
 
 /// Options for one `nalar bench` invocation.
 #[derive(Debug, Clone)]
@@ -119,6 +129,7 @@ fn known_reports() -> Vec<&'static str> {
     v.push(RPS_SWEEP);
     v.push(CONTENTION);
     v.push(RECOVERY);
+    v.push(ROUTING);
     v
 }
 
@@ -218,6 +229,11 @@ pub fn validate(report: &Value) -> Result<()> {
     if bench == RECOVERY && report.get("arm").as_str() != Some("recovery/v1") {
         return Err(fail("recovery report: `arm` must be \"recovery/v1\"".into()));
     }
+    // And the routing comparison: its quality accounting columns are the
+    // part later PRs must not silently drop.
+    if bench == ROUTING && report.get("arm").as_str() != Some("routing/v1") {
+        return Err(fail("routing report: `arm` must be \"routing/v1\"".into()));
+    }
     let required: &[&str] = match bench {
         "fig9" => &["workflow", "system", "rps_wall", "rps_paper", "completed", "failed"],
         "fig10" => &["nodes", "agents", "futures"],
@@ -264,6 +280,19 @@ pub fn validate(report: &Value) -> Result<()> {
             "lost",
             "corrupt",
             "replay_ms",
+        ],
+        "routing" => &[
+            "workflow",
+            "system",
+            "route",
+            "rps_wall",
+            "offered",
+            "completed",
+            "shed",
+            "expired_in_queue",
+            "goodput_rps",
+            "quality_floor",
+            "quality_mean",
         ],
         other => return Err(fail(format!("unknown bench `{other}`"))),
     };
@@ -369,6 +398,24 @@ pub fn validate(report: &Value) -> Result<()> {
             }
             if p.get("replay_ms").as_f64().is_none() {
                 return Err(fail(format!("{bench} point {i}: replay_ms not numeric")));
+            }
+        }
+        // A routing arm must actually have dispatched through its variant
+        // table: the per-variant split is what the quality accounting and
+        // the goodput-at-equal-quality claim rest on.
+        if bench == ROUTING {
+            match p.get("variants").as_obj() {
+                Some(m) if !m.is_empty() => {}
+                _ => {
+                    return Err(fail(format!(
+                        "{bench} point {i}: `variants` must be a non-empty map"
+                    )))
+                }
+            }
+            for q in ["quality_floor", "quality_mean"] {
+                if p.get(q).as_f64().is_none() {
+                    return Err(fail(format!("{bench} point {i}: {q} not numeric")));
+                }
             }
         }
         let lat = p.get("latency");
@@ -1175,6 +1222,131 @@ pub fn run_recovery(quick: bool, out_dir: &Path) -> Result<PathBuf> {
     Ok(path)
 }
 
+// ---------------------------------------------------------------- routing
+
+/// The bench's three-variant latency/quality curve (also the reference
+/// table in `configs/*.json` and DESIGN.md §13): a fast draft-class
+/// model, the calibrated base profile, and a large high-quality model.
+fn routing_variants() -> Vec<ModelVariant> {
+    vec![
+        ModelVariant { name: "fast".into(), latency_mult: 0.35, quality: 0.82 },
+        ModelVariant { name: "base".into(), latency_mult: 1.0, quality: 0.92 },
+        ModelVariant { name: "large".into(), latency_mult: 2.2, quality: 0.99 },
+    ]
+}
+
+/// Dispatch-weighted mean quality of one arm's per-variant counts (0.0
+/// before anything was dispatched — the validator's non-empty-map check
+/// keeps that out of written reports).
+fn quality_mean(variants: &[ModelVariant], counts: &Value) -> f64 {
+    let mut n = 0.0f64;
+    let mut sum = 0.0f64;
+    for v in variants {
+        let c = counts.get(&v.name).as_f64().unwrap_or(0.0);
+        n += c;
+        sum += c * v.quality;
+    }
+    if n > 0.0 {
+        sum / n
+    } else {
+        0.0
+    }
+}
+
+/// `nalar bench routing`: the JIT-routing goodput comparison (DESIGN.md
+/// §13). Each swept rate runs the identical open-loop point twice — once
+/// pinned to the large variant (`fixed-large`: every call pays 2.2x
+/// latency for 0.99 quality) and once under `jit` with the `jit_route`
+/// policy tuning the thresholds — against a deadline sized so the base
+/// curve fits comfortably and the pinned-large curve does not. The run
+/// errors unless jit achieves strictly higher goodput than the pin on at
+/// least one swept rate: the claim this subcommand exists to measure.
+pub fn routing(quick: bool) -> Result<Value> {
+    let variants = routing_variants();
+    let floor = crate::coordinator::policies::JitRoute::default().quality_floor;
+    let rates: Vec<f64> = if quick { vec![60.0, 120.0] } else { vec![40.0, 80.0, 120.0, 160.0] };
+    let routes = ["fixed-large", "jit"];
+    let mut table = Table::new(&[
+        "route", "rps", "offered", "ok", "shed", "expired", "goodput", "quality", "p50(s)",
+        "p99(s)",
+    ]);
+    let mut points = Vec::new();
+    let mut jit_beats_pin = false;
+    for &rps in &rates {
+        let mut goodputs = [0.0f64; 2];
+        for (ri, route) in routes.iter().enumerate() {
+            let opts = LoadgenOpts {
+                systems: vec![SystemUnderTest::Nalar],
+                rates: vec![rps],
+                secs: if quick { 1 } else { 4 },
+                session_pool: 16,
+                // ~1.3 paper-s for the base chat path, ~3.6 for the base
+                // coder path: a 4 paper-s deadline admits the base curve
+                // and rejects most of the 2.2x one.
+                timeout_paper_s: 4.0,
+                // 80ms wall deadlines: tight enough to discriminate, wide
+                // enough that scheduler jitter doesn't decide the arms.
+                time_scale: Some(0.02),
+                // Pin the policy list so both arms run identical control:
+                // `jit_route` is inert on the pinned arm (it only tunes
+                // front doors whose route is `jit`), and the provisioning
+                // / realloc policies would add cross-arm noise.
+                policies: Some(vec!["load_balance".into(), "jit_route".into()]),
+                variants: Some(variants.clone()),
+                ..LoadgenOpts::quick(WorkflowKind::Router)
+            };
+            let mut p = run_point(&opts, rps, SystemUnderTest::Nalar, None, Some(route))?;
+            let q = quality_mean(&variants, p.get("variants"));
+            p.insert("quality_floor", floor);
+            p.insert("quality_mean", q);
+            goodputs[ri] = p.get("goodput_rps").as_f64().unwrap_or(0.0);
+            table.row(&[
+                route.to_string(),
+                format!("{rps:.0}"),
+                p.get("offered").as_u64().unwrap_or(0).to_string(),
+                p.get("completed").as_u64().unwrap_or(0).to_string(),
+                p.get("shed").as_u64().unwrap_or(0).to_string(),
+                p.get("expired_in_queue").as_u64().unwrap_or(0).to_string(),
+                format!("{:.1}", goodputs[ri]),
+                format!("{q:.3}"),
+                format!("{:.1}", p.get("latency").get("p50").as_f64().unwrap_or(0.0)),
+                format!("{:.1}", p.get("latency").get("p99").as_f64().unwrap_or(0.0)),
+            ]);
+            points.push(p);
+        }
+        println!(
+            "[bench/routing] @ {rps:.0} rps: jit {:.1} vs fixed-large {:.1} goodput rps",
+            goodputs[1], goodputs[0]
+        );
+        if goodputs[1] > goodputs[0] {
+            jit_beats_pin = true;
+        }
+    }
+    println!("\n=== Routing — jit vs fixed-large at quality floor {floor} ===");
+    table.print();
+    if !jit_beats_pin {
+        return Err(Error::Msg(
+            "routing bench: jit never beat the fixed-large pin on goodput at any swept rate"
+                .into(),
+        ));
+    }
+    let mut r = report(ROUTING, quick, "paper_s", points);
+    r.insert("arm", "routing/v1");
+    r.insert("quality_floor", floor);
+    Ok(r)
+}
+
+/// Run the routing comparison, schema-validate it, and write
+/// `BENCH_routing.json` (the `nalar bench routing` subcommand).
+pub fn run_routing(quick: bool, out_dir: &Path) -> Result<PathBuf> {
+    let t0 = Instant::now();
+    let r = routing(quick)?;
+    validate(&r)?;
+    let path = write_report(out_dir, ROUTING, &r)?;
+    println!("[bench] routing done in {:.1?} -> {}", t0.elapsed(), path.display());
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1427,6 +1599,80 @@ mod tests {
         assert_eq!(p.get("recovered_completed").as_u64(), Some(8));
         assert_eq!(p.get("lost").as_u64(), Some(0));
         assert_eq!(p.get("corrupt").as_u64(), Some(0));
+    }
+
+    /// A well-formed routing point: a jit arm that dispatched across all
+    /// three variants under the 0.9 floor.
+    fn routing_base_point() -> Value {
+        let mut p = json!({
+            "workflow": "router", "system": "NALAR", "route": "jit",
+            "rps_wall": 60.0, "offered": 60, "completed": 55, "shed": 2,
+            "expired_in_queue": 3, "goodput_rps": 55.0,
+            "quality_floor": 0.9, "quality_mean": 0.93
+        });
+        p.insert("variants", json!({"fast": 5, "base": 40, "large": 10}));
+        p.insert("latency", lat());
+        p
+    }
+
+    #[test]
+    fn validate_accepts_routing_points() {
+        // the report must carry the `routing/v1` arm tag
+        let untagged = minimal_report(ROUTING, routing_base_point());
+        let err = validate(&untagged).unwrap_err();
+        assert!(err.to_string().contains("routing/v1"), "{err}");
+        let mut r = minimal_report(ROUTING, routing_base_point());
+        r.insert("arm", "routing/v1");
+        validate(&r).unwrap();
+        // an empty per-variant map fails: a routed arm must dispatch
+        let mut empty = routing_base_point();
+        empty.insert("variants", json!({}));
+        let mut bad = minimal_report(ROUTING, empty);
+        bad.insert("arm", "routing/v1");
+        let err = validate(&bad).unwrap_err();
+        assert!(err.to_string().contains("variants"), "{err}");
+        // the quality accounting columns are required and numeric
+        let mut missing = routing_base_point();
+        missing.insert("quality_mean", Value::Null);
+        let mut bad = minimal_report(ROUTING, missing);
+        bad.insert("arm", "routing/v1");
+        let err = validate(&bad).unwrap_err();
+        assert!(err.to_string().contains("quality_mean"), "{err}");
+    }
+
+    #[test]
+    fn quality_mean_weighs_dispatches() {
+        let vs = routing_variants();
+        let counts = json!({"fast": 1, "base": 0, "large": 1});
+        let q = quality_mean(&vs, &counts);
+        assert!((q - (0.82 + 0.99) / 2.0).abs() < 1e-9, "{q}");
+        assert_eq!(quality_mean(&vs, &json!({})), 0.0, "no dispatches: 0");
+    }
+
+    #[test]
+    fn routing_point_routes_and_counts_dispatches() {
+        // One real low-rate jit cell through the loadgen point runner:
+        // the injected variant table must reach the engine and every
+        // dispatch must land in the per-variant split.
+        let opts = LoadgenOpts {
+            systems: vec![SystemUnderTest::Nalar],
+            rates: vec![20.0],
+            session_pool: 8,
+            timeout_paper_s: 30.0,
+            time_scale: Some(0.005),
+            policies: Some(vec!["load_balance".into(), "jit_route".into()]),
+            variants: Some(routing_variants()),
+            ..LoadgenOpts::quick(WorkflowKind::Router)
+        };
+        let p = run_point(&opts, 20.0, SystemUnderTest::Nalar, None, Some("jit")).unwrap();
+        assert_eq!(p.get("route").as_str(), Some("jit"));
+        assert!(p.get("completed").as_u64().unwrap() > 0, "uncontended point must complete");
+        let vm = p.get("variants").as_obj().expect("per-variant map");
+        let mut total = 0u64;
+        for (_, n) in vm {
+            total += n.as_u64().unwrap_or(0);
+        }
+        assert!(total > 0, "a jit arm must count its dispatches");
     }
 
     #[test]

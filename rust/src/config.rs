@@ -201,6 +201,12 @@ pub struct IngressSettings {
     /// forced to `fifo` by `baselines::SystemUnderTest::apply` — none of
     /// the compared systems schedules its front door.
     pub schedule: String,
+    /// Per-call model routing: `fixed` (no routing — the pre-variant
+    /// behaviour, default) | `jit` (pick a variant per call from deadline
+    /// slack at dispatch time, DESIGN.md §13) | `fixed-<variant>` (pin
+    /// every call to one named variant — the bench's comparison arms).
+    /// Anything but `fixed` requires `engine.variants` to be non-empty.
+    pub route: String,
     /// Bounded-queue capacity per workflow queue.
     pub queue_cap: usize,
     /// Scheduler OS threads. This bounds *threads*, not in-flight
@@ -238,6 +244,7 @@ impl Default for IngressSettings {
         IngressSettings {
             policy: "bounded".into(),
             schedule: "fifo".into(),
+            route: "fixed".into(),
             queue_cap: 256,
             workers: 8,
             max_in_flight: 1024,
@@ -321,6 +328,21 @@ impl Default for HttpSettings {
     }
 }
 
+/// One named model variant behind the engine class (`engine.variants[]`,
+/// DESIGN.md §13). Variants share an engine's batch former and KV plumbing
+/// but trade service time against answer quality — the JIT router picks
+/// one per call at dispatch time from the request's deadline slack.
+#[derive(Debug, Clone)]
+pub struct ModelVariant {
+    pub name: String,
+    /// Service-time multiplier applied to the agent's latency profile
+    /// (1.0 = the profile as written; < 1 is a faster, cheaper model).
+    pub latency_mult: f64,
+    /// Answer-quality score in (0, 1] folded into the bench's quality
+    /// accounting (goodput at equal quality / quality at equal goodput).
+    pub quality: f64,
+}
+
 /// LLM engine settings (vLLM substitute).
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -333,6 +355,10 @@ pub struct EngineConfig {
     pub kv_policy: String,
     /// Artifacts directory for the pjrt executor.
     pub artifacts_dir: String,
+    /// Named model variants selectable per call (`ingress.route`). Empty
+    /// (the default) means no variants exist and routing is inert — every
+    /// call runs the agent's profile curve exactly as before.
+    pub variants: Vec<ModelVariant>,
 }
 
 impl Default for EngineConfig {
@@ -344,7 +370,14 @@ impl Default for EngineConfig {
             kv_dram_bytes: 512 << 20,
             kv_policy: "hint".into(),
             artifacts_dir: "artifacts".into(),
+            variants: Vec::new(),
         }
+    }
+}
+
+impl EngineConfig {
+    pub fn variant(&self, name: &str) -> Option<&ModelVariant> {
+        self.variants.iter().find(|v| v.name == name)
     }
 }
 
@@ -372,6 +405,19 @@ impl DeploymentConfig {
         };
         let engine = {
             let e = v.get("engine");
+            let variants = e
+                .get("variants")
+                .as_arr()
+                .map(|a| {
+                    a.iter()
+                        .map(|m| ModelVariant {
+                            name: m.str_or("name", "").to_string(),
+                            latency_mult: m.f64_or("latency_mult", 1.0),
+                            quality: m.f64_or("quality", 1.0),
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
             EngineConfig {
                 max_batch: e.u64_or("max_batch", 8) as usize,
                 executor: e.str_or("executor", "sim").to_string(),
@@ -379,6 +425,7 @@ impl DeploymentConfig {
                 kv_dram_bytes: e.u64_or("kv_dram_bytes", 512 << 20),
                 kv_policy: e.str_or("kv_policy", "hint").to_string(),
                 artifacts_dir: e.str_or("artifacts_dir", "artifacts").to_string(),
+                variants,
             }
         };
         let ingress = {
@@ -429,6 +476,7 @@ impl DeploymentConfig {
             IngressSettings {
                 policy: i.str_or("policy", &di.policy).to_string(),
                 schedule: i.str_or("schedule", &di.schedule).to_string(),
+                route: i.str_or("route", &di.route).to_string(),
                 queue_cap: i.u64_or("queue_cap", di.queue_cap as u64) as usize,
                 workers: i.u64_or("workers", di.workers as u64) as usize,
                 max_in_flight: i.u64_or("max_in_flight", di.max_in_flight as u64) as usize,
@@ -573,6 +621,57 @@ impl DeploymentConfig {
                 "unknown ingress schedule `{}` (known: fifo, deadline_slack, stage)",
                 self.ingress.schedule
             )));
+        }
+        // `RouteMode::parse` owns the route names (same one-authority rule);
+        // referential checks against `engine.variants` live here too.
+        let route = crate::ingress::RouteMode::parse(&self.ingress.route).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown ingress route `{}` (known: fixed, jit, fixed-<variant>)",
+                self.ingress.route
+            ))
+        })?;
+        let mut variant_names = std::collections::HashSet::new();
+        for mv in &self.engine.variants {
+            if mv.name.is_empty() {
+                return Err(Error::Config("engine variant with empty name".into()));
+            }
+            if !variant_names.insert(&mv.name) {
+                return Err(Error::Config(format!("duplicate engine variant `{}`", mv.name)));
+            }
+            if !(mv.latency_mult > 0.0 && mv.latency_mult.is_finite()) {
+                return Err(Error::Config(format!(
+                    "variant `{}`: latency_mult must be a finite number > 0",
+                    mv.name
+                )));
+            }
+            if !(mv.quality > 0.0 && mv.quality <= 1.0) {
+                return Err(Error::Config(format!(
+                    "variant `{}`: quality must be in (0, 1]",
+                    mv.name
+                )));
+            }
+        }
+        match &route {
+            crate::ingress::RouteMode::Fixed(None) => {}
+            crate::ingress::RouteMode::Jit if self.engine.variants.is_empty() => {
+                return Err(Error::Config(
+                    "ingress route `jit` requires engine.variants to be declared".into(),
+                ));
+            }
+            crate::ingress::RouteMode::Fixed(Some(name))
+                if self.engine.variant(name).is_none() =>
+            {
+                return Err(Error::Config(format!(
+                    "ingress route pins unknown variant `{name}` (declared: {})",
+                    self.engine
+                        .variants
+                        .iter()
+                        .map(|v| v.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )));
+            }
+            _ => {}
         }
         if self.ingress.workers == 0 {
             return Err(Error::Config("ingress.workers must be >= 1".into()));
@@ -788,6 +887,63 @@ mod tests {
         ] {
             let y = format!(
                 r#"{{"ingress": {{"tenants": {tenants}}},
+                     "agents": [{{"name": "x", "kind": "llm"}}]}}"#
+            );
+            assert!(DeploymentConfig::from_json(&y).is_err(), "must reject: {what}");
+        }
+    }
+
+    #[test]
+    fn variants_block_parses_and_validates() {
+        let y = r#"{"engine": {"variants": [
+                      {"name": "fast", "latency_mult": 0.35, "quality": 0.82},
+                      {"name": "base", "latency_mult": 1.0, "quality": 0.92},
+                      {"name": "large", "latency_mult": 2.2, "quality": 0.99}]},
+                    "ingress": {"route": "jit"},
+                    "agents": [{"name": "a", "kind": "llm", "methods": ["m"]}]}"#;
+        let c = DeploymentConfig::from_json(y).unwrap();
+        assert_eq!(c.engine.variants.len(), 3);
+        assert_eq!(c.engine.variant("fast").unwrap().latency_mult, 0.35);
+        assert_eq!(c.ingress.route, "jit");
+        // no variants block = empty table, routing inert, route `fixed`
+        let none = DeploymentConfig::from_json(MINIMAL).unwrap();
+        assert!(none.engine.variants.is_empty());
+        assert_eq!(none.ingress.route, "fixed");
+    }
+
+    #[test]
+    fn rejects_invalid_variants_and_routes() {
+        for (engine, ingress, what) in [
+            (
+                r#"{"variants": [{"name": ""}]}"#,
+                r#"{}"#,
+                "empty variant name",
+            ),
+            (
+                r#"{"variants": [{"name": "a"}, {"name": "a"}]}"#,
+                r#"{}"#,
+                "duplicate variant",
+            ),
+            (
+                r#"{"variants": [{"name": "a", "latency_mult": 0.0}]}"#,
+                r#"{}"#,
+                "zero latency_mult",
+            ),
+            (
+                r#"{"variants": [{"name": "a", "quality": 1.5}]}"#,
+                r#"{}"#,
+                "quality above 1",
+            ),
+            (r#"{}"#, r#"{"route": "jit"}"#, "jit without variants"),
+            (r#"{}"#, r#"{"route": "jitt"}"#, "route typo"),
+            (
+                r#"{"variants": [{"name": "fast"}]}"#,
+                r#"{"route": "fixed-huge"}"#,
+                "pin to unknown variant",
+            ),
+        ] {
+            let y = format!(
+                r#"{{"engine": {engine}, "ingress": {ingress},
                      "agents": [{{"name": "x", "kind": "llm"}}]}}"#
             );
             assert!(DeploymentConfig::from_json(&y).is_err(), "must reject: {what}");

@@ -23,6 +23,7 @@ use crate::coordinator::InstanceMetrics;
 use crate::engine::EngineReq;
 use crate::futures::{DepGraph, FutureState};
 use crate::ids::{InstanceId, NodeId, SessionId};
+use crate::ingress::routing::SharedRoute;
 use crate::json;
 use crate::nodestore::{keys, NodeStore, StoreDirectory, Subscription};
 use crate::state::kvcache::KvCacheManager;
@@ -92,6 +93,11 @@ pub struct ComponentController {
     /// Engine dispatch/complete events overlay executor service onto the
     /// per-request timelines the scheduler writes.
     trace: SharedSink,
+    /// Routing slot (late-bound like `trace`): when the front door installs
+    /// a router, engine admits re-check the stamped variant against the
+    /// *current* quality floor — the local-enforcement half of the
+    /// two-level routing policy (DESIGN.md §13).
+    route: SharedRoute,
     // telemetry
     completed: u64,
     failed: u64,
@@ -116,6 +122,7 @@ impl ComponentController {
         loads: &LoadMap,
         graph: Arc<DepGraph>,
         trace: SharedSink,
+        route: SharedRoute,
     ) -> InstanceHandle {
         let inbox = bus.register(id.clone(), node);
         let load = loads.register(id.clone());
@@ -141,6 +148,7 @@ impl ComponentController {
             policy_sub,
             stop: stop.clone(),
             trace,
+            route,
             completed: 0,
             failed: 0,
             migrated_in: 0,
@@ -301,12 +309,32 @@ impl ComponentController {
             // globally unique, so concurrent calls of one request on
             // different instances still pair up in `stage_durations`.
             self.trace.record(meta.request, TraceKind::EngineDispatch, msg.cell.id.0);
+            // Local routing enforcement: the front door stamped its variant
+            // choice into the call args; re-check it against the current
+            // quality floor (the global controller may have moved it since)
+            // and resolve the variant's service-time multiplier.
+            let (variant, latency_mult) = match self.route.get() {
+                Some(rs) => match msg.args.get("variant").as_str() {
+                    Some(name) if !name.is_empty() => {
+                        let urgent = msg.args.get("urgent").as_bool().unwrap_or(false);
+                        let idx = rs.enforce(name, urgent);
+                        (
+                            Some(rs.variant_name(idx).to_string()),
+                            rs.variants()[idx].latency_mult,
+                        )
+                    }
+                    _ => (None, 1.0),
+                },
+                None => (None, 1.0),
+            };
             core.admit(EngineReq {
                 tag,
                 session: meta.session,
                 prompt: msg.args.get("prompt").as_str().unwrap_or_default().to_string(),
                 history_tokens: msg.args.get("history_tokens").as_usize().unwrap_or(0),
                 max_new_tokens: msg.args.get("max_new_tokens").as_usize().unwrap_or(64),
+                variant,
+                latency_mult,
             });
             self.inflight.insert(tag, msg);
         }

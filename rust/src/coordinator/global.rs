@@ -20,6 +20,7 @@ use crate::coordinator::router::{LoadMap, Router};
 use crate::coordinator::{IngressMetrics, InstanceMetrics};
 use crate::futures::{FutureState, FutureTable};
 use crate::ids::{InstanceId, NodeId};
+use crate::ingress::routing::SharedRoute;
 use crate::nodestore::{keys, StoreDirectory};
 use crate::trace::Ring;
 use crate::transport::{Bus, Message};
@@ -109,6 +110,12 @@ pub struct GlobalController {
     policies: Mutex<Vec<Box<dyn Policy>>>,
     provision: Arc<ProvisionFn>,
     timings: Mutex<Ring<LoopTiming>>,
+    /// The deployment's JIT-routing slot (empty until an `Ingress` with
+    /// variants configured installs a `RouteState`): `RouteControl`
+    /// commands land here. A slot, not a direct reference, for the same
+    /// reason component controllers hold one — the controller outlives
+    /// and predates any particular ingress.
+    route: Mutex<SharedRoute>,
 }
 
 impl GlobalController {
@@ -130,7 +137,16 @@ impl GlobalController {
             policies: Mutex::new(policies),
             provision,
             timings: Mutex::new(Ring::new(TIMINGS_CAP)),
+            route: Mutex::new(SharedRoute::default()),
         })
+    }
+
+    /// Point `RouteControl` commands at the deployment's routing slot
+    /// (the server wires this right after construction; the slot stays
+    /// empty — and the commands no-ops — until an ingress with model
+    /// variants installs its `RouteState`).
+    pub fn set_route_slot(&self, slot: SharedRoute) {
+        *self.route.lock().unwrap() = slot;
     }
 
     /// Aggregate telemetry (the paper's "collecting state": Fig. 10 shows
@@ -233,6 +249,11 @@ impl GlobalController {
                 PolicyCmd::InstallOrder { instance, order } => {
                     if let Some(node) = self.bus.node_of(&instance) {
                         self.stores.node(node).put(&keys::policy(&instance), order);
+                    }
+                }
+                PolicyCmd::RouteControl { slack_fast_s, headroom_large, quality_floor } => {
+                    if let Some(rs) = self.route.lock().unwrap().get() {
+                        rs.set_thresholds(slack_fast_s, headroom_large, quality_floor);
                     }
                 }
             }
@@ -463,6 +484,33 @@ mod tests {
         );
         g.apply(vec![PolicyCmd::Provision { agent: "dev".into() }]);
         assert_eq!(called.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn route_control_lands_in_the_installed_slot() {
+        use crate::config::ModelVariant;
+        use crate::ingress::routing::{RouteMode, RouteState, SharedRoute};
+        let (g, _bus, _stores, _t) = mk_global(vec![]);
+        // empty slot: the command is a no-op, not a panic
+        g.apply(vec![PolicyCmd::RouteControl {
+            slack_fast_s: 1.0,
+            headroom_large: 3.0,
+            quality_floor: 0.5,
+        }]);
+        let slot = SharedRoute::default();
+        g.set_route_slot(slot.clone());
+        let variants = vec![
+            ModelVariant { name: "fast".into(), latency_mult: 0.5, quality: 0.8 },
+            ModelVariant { name: "large".into(), latency_mult: 2.0, quality: 0.99 },
+        ];
+        let rs = RouteState::new(RouteMode::Jit, &variants).unwrap();
+        slot.install(rs.clone());
+        g.apply(vec![PolicyCmd::RouteControl {
+            slack_fast_s: 1.5,
+            headroom_large: 6.0,
+            quality_floor: 0.9,
+        }]);
+        assert_eq!(rs.thresholds(), (1.5, 6.0, 0.9), "thresholds pushed through the slot");
     }
 
     #[test]

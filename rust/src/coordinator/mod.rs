@@ -103,6 +103,14 @@ pub struct IngressMetrics {
     /// Trace events overwritten by flight-recorder ring overflow (0 when
     /// tracing is disabled or the recorder is keeping up).
     pub trace_dropped: u64,
+    /// Routing mode the front door is running ("fixed" when JIT routing
+    /// is off, "jit", or "fixed-<variant>" when pinned; DESIGN.md §13).
+    pub route: String,
+    /// Per-variant dispatch counts `(variant name, calls)` — one entry per
+    /// configured model variant, in config order; empty when the engine
+    /// declares no variants. Counted at hint consumption, so the sum is
+    /// exactly the number of routed engine calls issued.
+    pub variants: Vec<(String, u64)>,
 }
 
 impl IngressMetrics {
@@ -113,6 +121,8 @@ impl IngressMetrics {
         let tenants: Vec<crate::futures::Value> =
             self.tenants.iter().map(TenantMetrics::to_json).collect();
         crate::json!({
+            "route": self.route.clone(),
+            "variants": variants_json(&self.variants),
             "workflow": self.workflow.clone(),
             "depth": self.depth,
             "in_flight": self.in_flight,
@@ -153,6 +163,10 @@ pub struct TenantMetrics {
     pub failed: u64,
     pub expired_in_queue: u64,
     pub cancelled: u64,
+    /// This tenant's per-variant dispatch counts (same entry order as
+    /// [`IngressMetrics::variants`], which is the element-wise sum of
+    /// these rows). Empty when no model variants are configured.
+    pub variants: Vec<(String, u64)>,
     /// This tenant's own per-stage latency decomposition (same component
     /// set as [`IngressMetrics::breakdown`]).
     pub breakdown: StageBreakdown,
@@ -171,7 +185,19 @@ impl TenantMetrics {
             "failed": self.failed,
             "expired_in_queue": self.expired_in_queue,
             "cancelled": self.cancelled,
+            "variants": variants_json(&self.variants),
             "breakdown": self.breakdown.to_json()
         })
     }
+}
+
+/// Wire shape shared by the aggregate and per-tenant variant counters: a
+/// JSON object keyed by variant name (stable, diff-friendly — mirrors how
+/// `breakdown` serializes components).
+fn variants_json(variants: &[(String, u64)]) -> crate::futures::Value {
+    let mut obj = crate::json!({});
+    for (name, n) in variants {
+        obj.insert(name, *n);
+    }
+    obj
 }

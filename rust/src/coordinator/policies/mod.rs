@@ -294,6 +294,72 @@ impl Policy for Lpt {
     }
 }
 
+/// Close the JIT-routing control loop from the global side (DESIGN.md
+/// §13). Steady state: install the operator's thresholds once — urgency
+/// below `slack_fast_s` of deadline slack, the largest variant only past
+/// `headroom_large × estimate`, and a `quality_floor` that keeps healthy
+/// traffic on good variants. Under front-door pressure (fresh sheds /
+/// in-queue expiries or deep queues on a workflow running `route =
+/// "jit"`): push relief thresholds — urgency kicks in a second earlier,
+/// the largest variant needs twice the headroom, and the floor drops to
+/// `relief_floor` so goodput wins over quality until pressure clears.
+/// Component controllers enforce whichever floor is installed at engine
+/// admit; workflows running `fixed` routes are left alone.
+pub struct JitRoute {
+    pub slack_fast_s: f64,
+    pub headroom_large: f64,
+    pub quality_floor: f64,
+    /// Quality floor pushed while the front door is overloaded.
+    pub relief_floor: f64,
+    /// Absolute depth that counts as pressure on unbounded queues.
+    pub depth_abs: usize,
+    last_pressure: u64,
+    installed: Option<(f64, f64, f64)>,
+}
+
+impl Default for JitRoute {
+    fn default() -> Self {
+        JitRoute {
+            slack_fast_s: 0.0,
+            headroom_large: 4.0,
+            quality_floor: 0.9,
+            relief_floor: 0.0,
+            depth_abs: 32,
+            last_pressure: 0,
+            installed: None,
+        }
+    }
+}
+
+impl Policy for JitRoute {
+    fn name(&self) -> &'static str {
+        "jit_route"
+    }
+
+    fn tick(&mut self, view: &ClusterView, api: &mut PolicyApi) {
+        let jit: Vec<_> = view.ingress.iter().filter(|i| i.route == "jit").collect();
+        if jit.is_empty() {
+            return;
+        }
+        let pressure_now: u64 = jit.iter().map(|i| i.shed + i.expired_in_queue).sum();
+        let rising = pressure_now > self.last_pressure;
+        self.last_pressure = pressure_now;
+        let deep = jit
+            .iter()
+            .any(|i| if i.cap > 0 { i.depth * 2 >= i.cap } else { i.depth >= self.depth_abs });
+        let target = if rising || deep {
+            (self.slack_fast_s + 1.0, self.headroom_large * 2.0, self.relief_floor)
+        } else {
+            (self.slack_fast_s, self.headroom_large, self.quality_floor)
+        };
+        // idempotent: re-push only when the target moves
+        if self.installed != Some(target) {
+            api.route_control(target.0, target.1, target.2);
+            self.installed = Some(target);
+        }
+    }
+}
+
 /// Baseline: best-effort FCFS, no control (LangGraph-style, §2.3).
 pub struct Fcfs;
 
@@ -476,6 +542,48 @@ mod tests {
         let mut api = PolicyApi::new();
         p.tick(&v, &mut api);
         assert!(api.commands().is_empty(), "no shed, shallow queue: no action");
+    }
+
+    #[test]
+    fn jit_route_installs_once_and_pushes_relief_under_pressure() {
+        use crate::coordinator::IngressMetrics;
+        let mut p = JitRoute::default();
+        let steady_floor = p.quality_floor;
+        // no workflow running jit: stay silent
+        let mut api = PolicyApi::new();
+        p.tick(&view(vec![]), &mut api);
+        assert!(api.commands().is_empty(), "no jit front door: no commands");
+        // healthy jit ingress: install the steady-state thresholds, once
+        let mut v = view(vec![]);
+        v.ingress = vec![IngressMetrics {
+            workflow: "router".into(),
+            route: "jit".into(),
+            ..Default::default()
+        }];
+        let mut api = PolicyApi::new();
+        p.tick(&v, &mut api);
+        let PolicyCmd::RouteControl { quality_floor, .. } = &api.commands()[0] else {
+            panic!()
+        };
+        assert_eq!(*quality_floor, steady_floor);
+        let mut api = PolicyApi::new();
+        p.tick(&v, &mut api);
+        assert!(api.commands().is_empty(), "unchanged target: no re-install");
+        // sheds tick up: relief thresholds with the floor dropped
+        v.ingress[0].shed = 5;
+        let mut api = PolicyApi::new();
+        p.tick(&v, &mut api);
+        let PolicyCmd::RouteControl { quality_floor, .. } = &api.commands()[0] else {
+            panic!()
+        };
+        assert!(*quality_floor < steady_floor, "pressure must drop the floor");
+        // pressure clears (sheds flat, shallow queue): restore steady state
+        let mut api = PolicyApi::new();
+        p.tick(&v, &mut api);
+        let PolicyCmd::RouteControl { quality_floor, .. } = &api.commands()[0] else {
+            panic!()
+        };
+        assert_eq!(*quality_floor, steady_floor, "recovery restores the floor");
     }
 
     #[test]

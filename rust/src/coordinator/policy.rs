@@ -26,6 +26,12 @@ pub enum PolicyCmd {
     Provision { agent: String },
     /// Install a local queue order at a component controller.
     InstallOrder { instance: InstanceId, order: LocalOrder },
+    /// Tune the JIT model router (DESIGN.md §13): below `slack_fast_s`
+    /// seconds of deadline slack a request goes urgent (fastest variant
+    /// meeting the floor); above `headroom_large × estimate` it may take
+    /// the largest; `quality_floor` is the minimum variant quality
+    /// non-negative-slack dispatches may use.
+    RouteControl { slack_fast_s: f64, headroom_large: f64, quality_floor: f64 },
 }
 
 /// The API handed to `Policy::tick` — method-per-primitive, buffering
@@ -72,6 +78,10 @@ impl PolicyApi {
         self.cmds.push(PolicyCmd::InstallOrder { instance, order });
     }
 
+    pub fn route_control(&mut self, slack_fast_s: f64, headroom_large: f64, quality_floor: f64) {
+        self.cmds.push(PolicyCmd::RouteControl { slack_fast_s, headroom_large, quality_floor });
+    }
+
     pub fn commands(&self) -> &[PolicyCmd] {
         &self.cmds
     }
@@ -101,6 +111,7 @@ pub fn make_policy(name: &str) -> Option<Box<dyn Policy>> {
         "srtf" => Box::new(Srtf::default()),
         "lpt" => Box::new(Lpt::default()),
         "fcfs" => Box::new(Fcfs),
+        "jit_route" => Box::new(JitRoute::default()),
         _ => return None,
     })
 }
@@ -130,6 +141,7 @@ mod tests {
             "srtf",
             "lpt",
             "fcfs",
+            "jit_route",
         ] {
             assert!(make_policy(p).is_some(), "{p} missing");
         }

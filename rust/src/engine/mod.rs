@@ -40,6 +40,12 @@ pub struct EngineReq {
     /// hit the history is *not* recomputed; on a miss it is.
     pub history_tokens: usize,
     pub max_new_tokens: usize,
+    /// Model variant serving this call (JIT routing, DESIGN.md §13);
+    /// `None` = the agent's profile curve as written.
+    pub variant: Option<String>,
+    /// The chosen variant's service-time multiplier (1.0 unrouted): the
+    /// sim core scales prefill cost and decode throughput by it.
+    pub latency_mult: f64,
 }
 
 /// Completion payload.

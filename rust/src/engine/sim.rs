@@ -29,6 +29,13 @@ struct ActiveSeq {
     /// consumed before decoding starts.
     pending_work: Duration,
     kv_outcome: &'static str,
+    /// Routed variant's service-time multiplier (1.0 unrouted). Decode
+    /// throughput scales inversely: a 0.35x variant emits ~3 tokens per
+    /// batch step, a 2.2x variant ~0.45 — so variants of different sizes
+    /// coexist in one continuous batch.
+    mult: f64,
+    /// Fractional decode progress toward the next token (see `mult`).
+    progress: f64,
 }
 
 /// See module docs.
@@ -96,9 +103,19 @@ impl EngineCore for SimCore {
             .rng
             .lognormal_mean(self.profile.mean_output_tokens, self.profile.output_sigma)
             .clamp(1.0, cap) as usize;
-        let pending = self.scaled(
-            self.profile.base_s + self.profile.per_prompt_token_s * prefill_tokens as f64,
-        ) + transfer;
+        // The routed variant scales prefill cost and decode throughput
+        // (JIT routing, DESIGN.md §13); 1.0 = the profile as written.
+        let mult = if req.latency_mult.is_finite() && req.latency_mult > 0.0 {
+            req.latency_mult
+        } else {
+            1.0
+        };
+        let pending = self
+            .scaled(
+                (self.profile.base_s + self.profile.per_prompt_token_s * prefill_tokens as f64)
+                    * mult,
+            )
+            + transfer;
 
         self.active.push(ActiveSeq {
             tag: req.tag,
@@ -108,6 +125,8 @@ impl EngineCore for SimCore {
             generated: 0,
             pending_work: pending,
             kv_outcome,
+            mult,
+            progress: 0.0,
         });
     }
 
@@ -145,7 +164,13 @@ impl EngineCore for SimCore {
                 i += 1;
                 continue;
             }
-            seq.generated += 1;
+            // one batch step advances this sequence by 1/mult tokens:
+            // fast variants emit several, large variants less than one
+            seq.progress += 1.0 / seq.mult;
+            while seq.progress >= 1.0 && seq.generated < seq.target_tokens {
+                seq.progress -= 1.0;
+                seq.generated += 1;
+            }
             if seq.generated >= seq.target_tokens {
                 let seq = self.active.remove(i);
                 done.push(EngineDone {
@@ -207,6 +232,8 @@ mod tests {
             prompt: "analyze".into(),
             history_tokens: 0,
             max_new_tokens: 64,
+            variant: None,
+            latency_mult: 1.0,
         }
     }
 
@@ -278,6 +305,34 @@ mod tests {
             }
         }
         assert_eq!(outcome, "hit");
+    }
+
+    #[test]
+    fn variant_latency_mult_scales_decode_throughput() {
+        // Steps-to-completion must shrink with a fast variant and grow
+        // with a large one; token counts stay the profile's (the variant
+        // changes speed, not output length — same seed, same target).
+        let steps_for = |mult: f64| {
+            let mut c = core(1);
+            c.admit(EngineReq { latency_mult: mult, ..req(0, 0) });
+            let mut steps = 0;
+            let mut tokens = 0;
+            while c.active() > 0 {
+                for d in c.step() {
+                    tokens = d.result.unwrap().generated_tokens;
+                }
+                steps += 1;
+                assert!(steps < 500, "no progress at mult {mult}");
+            }
+            (steps, tokens)
+        };
+        let (s_fast, t_fast) = steps_for(0.25);
+        let (s_base, t_base) = steps_for(1.0);
+        let (s_large, t_large) = steps_for(4.0);
+        assert_eq!(t_fast, t_base, "variant must not change output length");
+        assert_eq!(t_large, t_base, "variant must not change output length");
+        assert!(s_fast < s_base, "fast {s_fast} !< base {s_base}");
+        assert!(s_large > s_base, "large {s_large} !> base {s_base}");
     }
 
     #[test]

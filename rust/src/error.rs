@@ -22,9 +22,14 @@ pub enum Error {
     NoInstance(String),
     UnknownAgent(String),
     /// Admission control rejected the request at the ingress front door
-    /// (`(workflow, reason)`). Always retryable: the request never entered
-    /// the system, so the caller may back off and resubmit.
-    Shed(String, String),
+    /// (`(workflow, reason, retry_rate)`). Always retryable: the request
+    /// never entered the system, so the caller may back off and resubmit.
+    /// `retry_rate` is the shedding token bucket's refill rate in
+    /// requests/second when the shed was a rate limit (`None` for
+    /// queue-full / stopped-ingress sheds) — structured data, so the
+    /// `Retry-After` wire header survives any rewording of the
+    /// human-readable reason.
+    Shed(String, String, Option<f64>),
     /// The request's end-to-end deadline expired before (or while) a
     /// driver ran it.
     Deadline(std::time::Duration),
@@ -51,7 +56,7 @@ impl fmt::Display for Error {
             }
             Error::FutureTimeout(id, after) => write!(f, "future {id} timed out after {after:?}"),
             Error::NoInstance(agent) => write!(f, "no instance available for agent type `{agent}`"),
-            Error::Shed(workflow, reason) => {
+            Error::Shed(workflow, reason, _) => {
                 write!(f, "request shed at ingress for `{workflow}`: {reason}")
             }
             Error::Deadline(after) => write!(f, "request deadline expired after {after:?}"),
@@ -144,21 +149,18 @@ impl Error {
         }
     }
 
-    /// Suggested `Retry-After` for a [`Error::Shed`] response, derived
-    /// from the shed reason. Token-bucket sheds embed their refill rate
-    /// as `rate limit ({rate:.1} rps)` (see `ingress::admission`), which
-    /// inverts to one token's refill time, clamped to [1 ms, 60 s].
-    /// Queue-full and stopped-ingress sheds carry no rate; they (and
-    /// every non-`Shed` error) fall back to a flat 1 s.
+    /// Suggested `Retry-After` for a [`Error::Shed`] response. Token-bucket
+    /// sheds carry their refill rate as structured data on the variant
+    /// (see `ingress::admission::Shed`), which inverts to one token's
+    /// refill time, clamped to [1 ms, 60 s]. Queue-full and
+    /// stopped-ingress sheds carry no rate; they (and every non-`Shed`
+    /// error) fall back to a flat 1 s. The human-readable reason string is
+    /// display-only — rewording it cannot change (or drop) this header.
     pub fn retry_after(&self) -> std::time::Duration {
         const FALLBACK: std::time::Duration = std::time::Duration::from_secs(1);
-        let Error::Shed(_, reason) = self else { return FALLBACK };
-        let Some(tail) = reason.split("rate limit (").nth(1) else { return FALLBACK };
-        let Some(num) = tail.split(" rps").next() else { return FALLBACK };
-        match num.parse::<f64>() {
-            Ok(rate) if rate > 0.0 => {
-                let secs = (1.0 / rate).clamp(0.001, 60.0);
-                std::time::Duration::from_secs_f64(secs)
+        match self {
+            Error::Shed(_, _, Some(rate)) if *rate > 0.0 => {
+                std::time::Duration::from_secs_f64((1.0 / rate).clamp(0.001, 60.0))
             }
             _ => FALLBACK,
         }
@@ -173,7 +175,7 @@ mod tests {
     fn retryable_classification() {
         assert!(Error::FutureTimeout(FutureId(1), std::time::Duration::from_secs(1)).retryable());
         assert!(Error::NoInstance("x".into()).retryable());
-        assert!(Error::Shed("router".into(), "queue full".into()).retryable());
+        assert!(Error::Shed("router".into(), "queue full".into(), None).retryable());
         assert!(Error::Deadline(std::time::Duration::from_secs(3)).retryable());
         assert!(!Error::Cancelled.retryable(), "a cancel must not invite a resubmit");
         assert!(!Error::Config("bad".into()).retryable());
@@ -200,7 +202,7 @@ mod tests {
             (Error::FutureTimeout(FutureId(1), Duration::from_secs(1)), 504),
             (Error::NoInstance("router".into()), 503),
             (Error::UnknownAgent("router".into()), 400),
-            (Error::Shed("router".into(), "queue full (8/8)".into()), 429),
+            (Error::Shed("router".into(), "queue full (8/8)".into(), None), 429),
             (Error::Deadline(Duration::from_secs(1)), 408),
             (Error::Cancelled, 409),
             (Error::InstanceKilled(InstanceId::new("dev", 1)), 503),
@@ -219,23 +221,45 @@ mod tests {
     }
 
     #[test]
-    fn retry_after_inverts_the_token_bucket_rate() {
+    fn retry_after_inverts_the_structured_token_bucket_rate() {
         use std::time::Duration;
-        // Matches the exact reason strings ingress::admission produces.
-        let shed = |r: &str| Error::Shed("router".into(), r.into());
-        assert_eq!(shed("rate limit (2.0 rps)").retry_after(), Duration::from_secs_f64(0.5));
+        let shed = |r: &str, rate: Option<f64>| Error::Shed("router".into(), r.into(), rate);
         assert_eq!(
-            shed("tenant `hog`: rate limit (4.0 rps)").retry_after(),
+            shed("rate limit (2.0 rps)", Some(2.0)).retry_after(),
+            Duration::from_secs_f64(0.5)
+        );
+        assert_eq!(
+            shed("tenant `hog`: rate limit (4.0 rps)", Some(4.0)).retry_after(),
             Duration::from_secs_f64(0.25)
         );
         // clamped: an absurdly slow refill caps at 60 s, a fast one
         // floors at 1 ms
-        assert_eq!(shed("rate limit (0.0 rps)").retry_after(), Duration::from_secs(1));
-        assert_eq!(shed("rate limit (10000.0 rps)").retry_after(), Duration::from_millis(1));
-        // no rate to invert: flat 1 s back-off
-        assert_eq!(shed("queue full (8/8)").retry_after(), Duration::from_secs(1));
-        assert_eq!(shed("ingress stopped").retry_after(), Duration::from_secs(1));
+        assert_eq!(shed("rate limit", Some(1e-9)).retry_after(), Duration::from_secs(60));
+        assert_eq!(shed("rate limit", Some(10000.0)).retry_after(), Duration::from_millis(1));
+        // no rate: flat 1 s back-off
+        assert_eq!(shed("queue full (8/8)", None).retry_after(), Duration::from_secs(1));
+        assert_eq!(shed("ingress stopped", None).retry_after(), Duration::from_secs(1));
         assert_eq!(Error::Cancelled.retry_after(), Duration::from_secs(1));
+    }
+
+    /// Regression (ISSUE 10): the header used to be derived by parsing
+    /// `rate limit ({rate} rps)` out of the display string, so any
+    /// rewording of the reason silently dropped `Retry-After`. The rate is
+    /// structured data now — a reason that mentions no rate at all still
+    /// yields the right header, and a reason that *looks* like the old
+    /// format but carries no structured rate gets the flat fallback.
+    #[test]
+    fn retry_after_survives_reworded_shed_reasons() {
+        use std::time::Duration;
+        let reworded = Error::Shed(
+            "router".into(),
+            "throttled — please slow down and try again".into(),
+            Some(4.0),
+        );
+        assert_eq!(reworded.retry_after(), Duration::from_secs_f64(0.25));
+        let unstructured =
+            Error::Shed("router".into(), "rate limit (4.0 rps)".into(), None);
+        assert_eq!(unstructured.retry_after(), Duration::from_secs(1), "strings are display-only");
     }
 
     #[test]

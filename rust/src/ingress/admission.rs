@@ -93,6 +93,25 @@ impl AdmissionPolicy {
     }
 }
 
+/// A structured shed verdict: the human-readable reason (display only)
+/// plus, when the shedding layer was a token bucket, its refill rate in
+/// requests/second. [`crate::error::Error::retry_after`] inverts the rate
+/// into the `Retry-After` wire header — carrying it as data (rather than
+/// re-parsing the reason string, the old bug) means rewording the reason
+/// can never silently drop the header.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Shed {
+    pub reason: String,
+    /// Token-bucket refill rate (rps) when rate-limited; `None` otherwise.
+    pub retry_rate: Option<f64>,
+}
+
+impl Shed {
+    fn full(reason: String) -> Shed {
+        Shed { reason, retry_rate: None }
+    }
+}
+
 struct Bucket {
     tokens: f64,
     last: Instant,
@@ -125,8 +144,8 @@ impl AdmissionController {
     }
 
     /// Decide for one request given the current queue `depth`. Updates the
-    /// accept/shed counters; `Err` carries the shed reason.
-    pub fn admit(&self, depth: usize) -> Result<(), String> {
+    /// accept/shed counters; `Err` carries the structured shed verdict.
+    pub fn admit(&self, depth: usize) -> Result<(), Shed> {
         self.admit_at(depth, Instant::now())
     }
 
@@ -135,7 +154,7 @@ impl AdmissionController {
     /// virtual clock ([`crate::testkit::Clock`]): refill becomes a pure
     /// function of the timestamps the test chooses. Time never runs
     /// backwards (an older `now` refills nothing).
-    pub fn admit_at(&self, depth: usize, now: Instant) -> Result<(), String> {
+    pub fn admit_at(&self, depth: usize, now: Instant) -> Result<(), Shed> {
         let verdict = self.decide_at(depth, now);
         self.record(verdict.is_ok());
         verdict
@@ -148,12 +167,12 @@ impl AdmissionController {
     /// final verdict in via [`Self::record`]. Token-bucket state still
     /// advances on `Ok` (an admitted request consumed its token even if a
     /// later layer sheds it: conservative under overload).
-    pub fn decide_at(&self, depth: usize, now: Instant) -> Result<(), String> {
+    pub fn decide_at(&self, depth: usize, now: Instant) -> Result<(), Shed> {
         match &self.policy {
             AdmissionPolicy::Unbounded => Ok(()),
             AdmissionPolicy::Bounded { cap } => {
                 if depth >= *cap {
-                    Err(format!("queue full ({depth}/{cap})"))
+                    Err(Shed::full(format!("queue full ({depth}/{cap})")))
                 } else {
                     Ok(())
                 }
@@ -167,9 +186,26 @@ impl AdmissionController {
                     b.tokens -= 1.0;
                     Ok(())
                 } else {
-                    Err(format!("rate limit ({rate:.1} rps)"))
+                    Err(Shed {
+                        reason: format!("rate limit ({rate:.1} rps)"),
+                        retry_rate: Some(*rate),
+                    })
                 }
             }
+        }
+    }
+
+    /// The JIT router's tenant-budget probe (DESIGN.md §13): is this
+    /// tenant's token bucket dry right now? A refill-adjusted peek that
+    /// consumes nothing; policies without a bucket are never over budget.
+    pub fn over_budget(&self, now: Instant) -> bool {
+        match &self.policy {
+            AdmissionPolicy::TokenBucket { rate, burst } => {
+                let b = self.bucket.lock().unwrap();
+                let refill = now.saturating_duration_since(b.last).as_secs_f64() * rate;
+                (b.tokens + refill).min(*burst) < 1.0
+            }
+            _ => false,
         }
     }
 
@@ -216,22 +252,41 @@ mod tests {
         }
     }
 
-    /// Wire contract with `Error::retry_after`: the shed reason is the
-    /// only channel carrying the bucket's refill rate to the HTTP layer,
-    /// so its `rate limit ({rate:.1} rps)` shape must stay parseable.
+    /// Wire contract with `Error::retry_after`: the shed verdict carries
+    /// the bucket's refill rate as structured data (`Shed::retry_rate`),
+    /// so the HTTP layer's `Retry-After` derivation is immune to any
+    /// rewording of the human-readable reason.
     #[test]
-    fn shed_reasons_feed_retry_after_derivation() {
+    fn shed_verdicts_feed_retry_after_derivation() {
         use crate::error::Error;
         let ctl = AdmissionController::new(AdmissionPolicy::TokenBucket { rate: 4.0, burst: 1.0 });
         let now = Instant::now();
         ctl.admit_at(0, now).unwrap();
-        let reason = ctl.admit_at(0, now).unwrap_err();
-        let err = Error::Shed("router".into(), reason);
+        let shed = ctl.admit_at(0, now).unwrap_err();
+        assert_eq!(shed.retry_rate, Some(4.0));
+        let err = Error::Shed("router".into(), shed.reason, shed.retry_rate);
         assert_eq!(err.retry_after(), std::time::Duration::from_secs_f64(0.25));
         let bounded = AdmissionController::new(AdmissionPolicy::Bounded { cap: 1 });
-        let reason = bounded.admit_at(1, now).unwrap_err();
-        let err = Error::Shed("router".into(), reason);
+        let shed = bounded.admit_at(1, now).unwrap_err();
+        assert_eq!(shed.retry_rate, None);
+        let err = Error::Shed("router".into(), shed.reason, shed.retry_rate);
         assert_eq!(err.retry_after(), std::time::Duration::from_secs(1), "no rate: flat 1 s");
+    }
+
+    #[test]
+    fn over_budget_peeks_without_consuming() {
+        let ctl = AdmissionController::new(AdmissionPolicy::TokenBucket { rate: 1e-9, burst: 1.0 });
+        let now = Instant::now();
+        assert!(!ctl.over_budget(now), "initial burst token present");
+        ctl.admit_at(0, now).unwrap();
+        assert!(ctl.over_budget(now), "bucket dry after the burst");
+        // the peek consumed nothing and changed nothing
+        assert!(ctl.over_budget(now));
+        // policies without a bucket are never over budget
+        let b = AdmissionController::new(AdmissionPolicy::Bounded { cap: 1 });
+        assert!(!b.over_budget(now));
+        let u = AdmissionController::new(AdmissionPolicy::Unbounded);
+        assert!(!u.over_budget(now));
     }
 
     #[test]
@@ -279,7 +334,7 @@ mod tests {
         let c = AdmissionController::new(AdmissionPolicy::Bounded { cap: 4 });
         assert!(c.admit(3).is_ok());
         let err = c.admit(4).unwrap_err();
-        assert!(err.contains("queue full"), "{err}");
+        assert!(err.reason.contains("queue full"), "{}", err.reason);
         assert!(c.admit(5).is_err());
         assert_eq!(c.accepted.load(Ordering::Relaxed), 1);
         assert_eq!(c.shed.load(Ordering::Relaxed), 2);
@@ -292,6 +347,7 @@ mod tests {
         assert!(c.admit(0).is_ok());
         assert!(c.admit(0).is_ok());
         let err = c.admit(0).unwrap_err();
-        assert!(err.contains("rate limit"), "{err}");
+        assert!(err.reason.contains("rate limit"), "{}", err.reason);
+        assert_eq!(err.retry_rate, Some(1e-9));
     }
 }

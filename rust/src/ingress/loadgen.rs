@@ -19,10 +19,10 @@ use std::time::{Duration, Instant};
 
 use crate::baselines::SystemUnderTest;
 use crate::bench;
-use crate::config::{DeploymentConfig, TenantSettings};
+use crate::config::{DeploymentConfig, ModelVariant, TenantSettings};
 use crate::error::{Error, Result};
 use crate::ids::SessionId;
-use crate::ingress::{Ingress, SchedulePolicy, SubmitRequest, Ticket};
+use crate::ingress::{Ingress, RouteMode, SchedulePolicy, SubmitRequest, Ticket};
 use crate::json;
 use crate::metrics::{goodput, shed_rate, LatencyRecorder};
 use crate::server::http::HttpClient;
@@ -54,6 +54,51 @@ pub fn noisy_neighbor() -> Vec<TenantLoad> {
         TenantLoad { name: "hog".into(), share: 10.0, weight: 1.0 },
         TenantLoad { name: "meek".into(), share: 1.0, weight: 1.0 },
     ]
+}
+
+/// Parse a `--schedule` axis spec — a comma list of front-door orderings,
+/// e.g. `fifo,deadline_slack`. Every entry is checked against the
+/// scheduler's own name authority ([`SchedulePolicy::parse`]) so a typo
+/// dies at flag-parse time, not minutes into a sweep. Returns `None` on
+/// unknown names, duplicates or an empty spec.
+pub fn parse_schedule_axis(spec: &str) -> Option<Vec<String>> {
+    let mut out: Vec<String> = Vec::new();
+    for part in spec.split(',') {
+        let s = part.trim();
+        SchedulePolicy::parse(s)?;
+        if out.iter().any(|x| x == s) {
+            return None;
+        }
+        out.push(s.to_string());
+    }
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+/// Parse a `--route` axis spec — a comma list of routing modes, e.g.
+/// `fixed,jit` or `jit,fixed-large`. Checked against the router's name
+/// authority ([`RouteMode::parse`]): shape errors die at flag-parse time
+/// (an unknown *variant* in a `fixed-<v>` pin can only be caught against
+/// the deployment's variant table, at launch). Returns `None` on unknown
+/// modes, duplicates or an empty spec.
+pub fn parse_route_axis(spec: &str) -> Option<Vec<String>> {
+    let mut out: Vec<String> = Vec::new();
+    for part in spec.split(',') {
+        let s = part.trim();
+        RouteMode::parse(s)?;
+        if out.iter().any(|x| x == s) {
+            return None;
+        }
+        out.push(s.to_string());
+    }
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
 }
 
 /// Parse a `--tenants` spec: the literal `noisy` (the profile above) or
@@ -136,6 +181,18 @@ pub struct LoadgenOpts {
     /// forced back to `fifo` by `SystemUnderTest::apply`, so the axis
     /// measures NALAR's front-door SRTF against its own FIFO.
     pub schedules: Option<Vec<String>>,
+    /// Routing-mode axis (`--route`): run every (rate, system) point once
+    /// per listed `ingress.route` mode — `jit` against `fixed` /
+    /// `fixed-<variant>` pins is the goodput-at-equal-quality comparison
+    /// `nalar bench routing` runs. None = the config's route. Meaningful
+    /// only when the config declares `engine.variants`; without them every
+    /// mode collapses to the inert fixed path.
+    pub routes: Option<Vec<String>>,
+    /// Override the config's `engine.variants` table (None = keep the
+    /// config's). `nalar bench routing` injects its three-variant curve
+    /// here so both comparison arms run one known latency/quality table
+    /// regardless of what the workflow's builtin config declares.
+    pub variants: Option<Vec<ModelVariant>>,
     /// Multi-tenant offered load (`--tenants`): splits the arrival
     /// stream across named tenants by `share` and installs their DRR
     /// `weight`s into `ingress.tenants`. Baselines are forced back to
@@ -176,6 +233,8 @@ impl LoadgenOpts {
             expect_admitted_complete: false,
             cancel_rate: 0.0,
             schedules: None,
+            routes: None,
+            variants: None,
             tenants: None,
             remote: None,
         }
@@ -203,6 +262,8 @@ impl LoadgenOpts {
             expect_admitted_complete: false,
             cancel_rate: 0.0,
             schedules: None,
+            routes: None,
+            variants: None,
             tenants: None,
             remote: None,
         }
@@ -242,14 +303,25 @@ pub fn run(opts: &LoadgenOpts) -> Result<PathBuf> {
         return Err(Error::Config("loadgen needs at least one rate and one system".into()));
     }
     let mut table = Table::new(&[
-        "system", "sched", "rps", "offered", "ok", "shed", "expired", "cancel", "fail", "goodput",
-        "p50(s)", "p99(s)",
+        "system", "sched", "route", "rps", "offered", "ok", "shed", "expired", "cancel", "fail",
+        "goodput", "p50(s)", "p99(s)",
     ]);
     // The scheduling-policy axis: None = keep whatever the config says.
     let schedules: Vec<Option<String>> = match &opts.schedules {
         Some(list) => list.iter().map(|s| Some(s.clone())).collect(),
         None => vec![None],
     };
+    // The routing-mode axis, same shape; the grid is their product.
+    let routes: Vec<Option<String>> = match &opts.routes {
+        Some(list) => list.iter().map(|r| Some(r.clone())).collect(),
+        None => vec![None],
+    };
+    let mut grid: Vec<(Option<String>, Option<String>)> = Vec::new();
+    for sched in &schedules {
+        for route in &routes {
+            grid.push((sched.clone(), route.clone()));
+        }
+    }
     let mut points = Vec::new();
     // `--remote`: the server owns the deployment (its system, schedule
     // and workers are whatever `nalar serve` launched), so the sweep
@@ -272,15 +344,16 @@ pub fn run(opts: &LoadgenOpts) -> Result<PathBuf> {
     }
     for &rps in &opts.rates {
         for &system in &opts.systems {
-            for (si, sched) in schedules.iter().enumerate() {
-                // Baselines are forced back to `fifo` by `apply`, so every
-                // axis entry would measure the identical configuration —
-                // run each baseline cell once instead of once per entry.
-                if si > 0 && system != SystemUnderTest::Nalar {
+            for (gi, (sched, route)) in grid.iter().enumerate() {
+                // Baselines are forced back to `fifo` by `apply` and have
+                // no model router, so every axis entry would measure the
+                // identical configuration — run each baseline cell once
+                // instead of once per entry.
+                if gi > 0 && system != SystemUnderTest::Nalar {
                     continue;
                 }
                 let t0 = Instant::now();
-                let p = run_point(opts, rps, system, sched.as_deref())?;
+                let p = run_point(opts, rps, system, sched.as_deref(), route.as_deref())?;
                 println!(
                     "[loadgen] {} {} ({}) @ {:.0} rps done in {:.1?}",
                     opts.workflow.name(),
@@ -346,10 +419,11 @@ fn write_sweep(
 }
 
 /// One formatted summary-table row from a report point.
-fn sweep_row(p: &Value) -> [String; 12] {
+fn sweep_row(p: &Value) -> [String; 13] {
     [
         p.get("system").as_str().unwrap_or("?").to_string(),
         p.get("schedule").as_str().unwrap_or("?").to_string(),
+        p.get("route").as_str().unwrap_or("?").to_string(),
         format!("{:.0}", p.get("rps_wall").as_f64().unwrap_or(0.0)),
         p.get("offered").as_u64().unwrap_or(0).to_string(),
         p.get("completed").as_u64().unwrap_or(0).to_string(),
@@ -363,12 +437,15 @@ fn sweep_row(p: &Value) -> [String; 12] {
     ]
 }
 
-/// One (rate, system, schedule) cell of the sweep.
-fn run_point(
+/// One (rate, system, schedule, route) cell of the sweep. `pub(crate)`
+/// so `nalar bench routing` can drive the identical open-loop point once
+/// per routing arm and compare goodput across them.
+pub(crate) fn run_point(
     opts: &LoadgenOpts,
     rps: f64,
     system: SystemUnderTest,
     schedule: Option<&str>,
+    route: Option<&str>,
 ) -> Result<Value> {
     let mut cfg = match &opts.config {
         Some(path) => DeploymentConfig::from_json_file(path)?,
@@ -376,6 +453,9 @@ fn run_point(
     };
     if let Some(ts) = opts.time_scale {
         cfg.time_scale = ts;
+    }
+    if let Some(vs) = &opts.variants {
+        cfg.engine.variants = vs.clone();
     }
     if let Some(w) = opts.workers {
         cfg.ingress.workers = w.max(1);
@@ -405,6 +485,14 @@ fn run_point(
         // back to `fifo` (none of them schedules a front door) and the
         // axis compares NALAR-with-SRTF against NALAR-with-FIFO.
         cfg.ingress.schedule = s.to_string();
+    }
+    if let Some(r) = route {
+        if RouteMode::parse(r).is_none() {
+            return Err(Error::Config(format!(
+                "unknown route `{r}` (known: fixed, jit, fixed-<variant>)"
+            )));
+        }
+        cfg.ingress.route = r.to_string();
     }
     // Apply the system's serving mode FIRST (for NALAR this fills the
     // default policy trio when the config declares none — pushing ours
@@ -613,6 +701,7 @@ fn run_point(
         "cancelled": cancelled,
         "cancel_rate": opts.cancel_rate,
         "schedule": m_end.schedule.as_str(),
+        "route": m_end.route.as_str(),
         "goodput_rps": gput,
         "goodput_frac": gput / rps,
         "shed_rate": shed_rate(shed, offered),
@@ -622,6 +711,13 @@ fn run_point(
     });
     p.insert("latency", tail_rec.summary_scaled(paper).to_json());
     p.insert("latency_ok", ok_rec.summary_scaled(paper).to_json());
+    // Per-variant dispatch counts (JSON object keyed by variant name;
+    // empty when the config declares no model variants).
+    let mut vmap = json_util::Map::new();
+    for (name, n) in &m_end.variants {
+        vmap.insert(name.clone(), Value::Num(*n as f64));
+    }
+    p.insert("variants", Value::Obj(vmap));
     // Per-stage latency decomposition (queue-wait / sched-delay / poll /
     // future-wait / engine-service, DESIGN.md §10) of this point's
     // completions, in paper seconds like the latency summaries.
@@ -922,6 +1018,7 @@ fn run_point_remote(opts: &LoadgenOpts, rps: f64, addr: &str) -> Result<Value> {
         "cancelled": cancelled,
         "cancel_rate": opts.cancel_rate,
         "schedule": m1.get("schedule").as_str().unwrap_or("?"),
+        "route": m1.get("route").as_str().unwrap_or("?"),
         "goodput_rps": gput,
         "goodput_frac": gput / rps,
         "shed_rate": shed_rate(shed, offered),
@@ -996,6 +1093,7 @@ mod tests {
         assert!(p.get("expired_in_queue").as_u64().is_some(), "new-schema field missing");
         assert_eq!(p.get("cancelled").as_u64(), Some(0), "no --cancel-rate: none cancelled");
         assert_eq!(p.get("schedule").as_str(), Some("fifo"), "config default ordering");
+        assert_eq!(p.get("route").as_str(), Some("fixed"), "routing is inert by default");
         assert!(p.get("ingress_workers").as_u64().unwrap() >= 1);
         assert!(p.get("latency").get("p99").as_f64().is_some());
         // per-stage decomposition: all five components present, and the
@@ -1020,6 +1118,41 @@ mod tests {
         assert_eq!(def.get("completed").as_u64(), p.get("completed").as_u64());
         assert!(def.get("goodput_rps").as_f64().unwrap() > 0.0);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn axis_specs_reject_typos_at_parse_time() {
+        // --schedule: every entry checked against the scheduler's own
+        // name authority, so a typo dies at flag-parse time
+        assert_eq!(
+            parse_schedule_axis("fifo,deadline_slack").unwrap(),
+            vec!["fifo".to_string(), "deadline_slack".to_string()]
+        );
+        assert_eq!(parse_schedule_axis(" stage ").unwrap(), vec!["stage".to_string()]);
+        for bad in ["", "fifo,", "sjf", "deadline-slack", "fifo,fifo"] {
+            assert!(parse_schedule_axis(bad).is_none(), "must reject `{bad}`");
+        }
+        // --route: same contract against the router's name authority
+        assert_eq!(
+            parse_route_axis("fixed,jit").unwrap(),
+            vec!["fixed".to_string(), "jit".to_string()]
+        );
+        assert_eq!(parse_route_axis("jit,fixed-large").unwrap().len(), 2);
+        for bad in ["", "jit,", "jti", "fixed-", "adaptive", "jit,jit"] {
+            assert!(parse_route_axis(bad).is_none(), "must reject `{bad}`");
+        }
+    }
+
+    #[test]
+    fn unknown_route_axis_fails_fast() {
+        let opts = LoadgenOpts {
+            systems: vec![SystemUnderTest::Nalar],
+            rates: vec![10.0],
+            routes: Some(vec!["warp".into()]),
+            ..LoadgenOpts::quick(WorkflowKind::Router)
+        };
+        let err = run(&opts).unwrap_err();
+        assert!(err.to_string().contains("unknown route"), "{err}");
     }
 
     #[test]

@@ -72,10 +72,12 @@
 pub mod admission;
 pub mod fairness;
 pub mod loadgen;
+pub mod routing;
 pub mod schedule;
 
 pub use admission::{AdmissionController, AdmissionPolicy};
 pub use fairness::Drr;
+pub use routing::{RouteMode, RouteState, SharedRoute};
 pub use schedule::SchedulePolicy;
 
 use std::collections::{HashMap, HashSet, VecDeque};
@@ -95,6 +97,7 @@ use crate::trace::{TraceKind, TraceSink};
 use crate::util::clock::Clock;
 use crate::workflow::{driver_for, restore_driver, Driver, Env, Step, WorkflowKind};
 
+use routing::RouteHint;
 use schedule::{pick, Key, StageStats};
 
 /// Completion slot shared between a [`Ticket`] and the scheduler.
@@ -351,6 +354,11 @@ struct InFlight {
     tenant: usize,
     driver: Box<dyn Driver>,
     env: Env,
+    /// The request's JIT-routing hint (`None` when routing is off). The
+    /// decision point in `run_poll` refreshes it against the current
+    /// deadline slack before every poll; the agent stubs (and the
+    /// scripted testkit engine) consume it once per issued call.
+    hint: Option<Arc<RouteHint>>,
     submitted: Instant,
     deadline: Instant,
     timeout: Duration,
@@ -403,6 +411,10 @@ struct Lapsed {
     /// outstanding futures to bulk-fail); false for in-queue expiries,
     /// which never issued a call.
     started: bool,
+    /// Stage-entry instants carried over from the in-flight entry (empty
+    /// for in-queue expiries): stages the request *exited* before dying
+    /// still feed [`StageStats`] — see `fold_censored_stages`.
+    stage_entered: Vec<(u32, Instant)>,
 }
 
 /// Scheduler state for ONE workflow entry — its own lock domain (a
@@ -648,6 +660,16 @@ struct IngressInner {
     /// the owning shard when both are needed (never the other way
     /// around).
     stage_stats: Vec<Mutex<StageStats>>,
+    /// The JIT router (`None` = routing off: no variants declared, or
+    /// `ingress.route = "fixed"`) — also installed into the deployment's
+    /// [`SharedRoute`] slot at start so the global and component
+    /// controllers operate on the same instance.
+    route: Option<Arc<RouteState>>,
+    /// Per-(workflow, tenant) per-variant dispatch counters. Each
+    /// request's [`RouteHint`] holds its row's `Arc` (consumption bumps
+    /// it); the metrics snapshot reads them lock-free. Rows are empty
+    /// vectors when routing is off.
+    routed: Vec<Vec<Arc<Vec<AtomicU64>>>>,
     /// Per-(workflow, tenant) latency-decomposition histograms: completed
     /// requests fold their queue-wait / sched-delay / poll-time /
     /// future-wait / engine-service durations here (lock-free relaxed
@@ -821,6 +843,7 @@ impl IngressInner {
                 failed: self.failed[idx][t].load(Ordering::Relaxed),
                 expired_in_queue: self.expired_in_queue[idx][t].load(Ordering::Relaxed),
                 cancelled: self.cancelled[idx][t].load(Ordering::Relaxed),
+                variants: self.variant_counts(idx, t),
                 breakdown: self.breakdown[idx][t].breakdown(),
             })
             .collect();
@@ -828,6 +851,18 @@ impl IngressInner {
         // histograms (exact — the bucket layout is shared), not an
         // average of quantiles.
         let parts: Vec<_> = self.breakdown[idx].iter().map(|h| h.snapshots()).collect();
+        // Aggregate per-variant dispatches = the tenant sum, like every
+        // other counter (empty when routing is off).
+        let mut variants: Vec<(String, u64)> = self
+            .route
+            .as_ref()
+            .map(|rs| rs.variants().iter().map(|v| (v.name.clone(), 0)).collect())
+            .unwrap_or_default();
+        for t in &tenants {
+            for (agg, (_, n)) in variants.iter_mut().zip(&t.variants) {
+                agg.1 += *n;
+            }
+        }
         IngressMetrics {
             workflow: self.kinds[idx].name().to_string(),
             depth: tenant_depths.iter().sum(),
@@ -842,10 +877,24 @@ impl IngressInner {
             failed: tenants.iter().map(|t| t.failed).sum(),
             expired_in_queue: tenants.iter().map(|t| t.expired_in_queue).sum(),
             cancelled: tenants.iter().map(|t| t.cancelled).sum(),
+            route: self.route.as_ref().map_or_else(|| "fixed".into(), |r| r.mode().name()),
+            variants,
             tenants,
             breakdown: merge_breakdowns(&parts),
             trace_dropped: self.trace.dropped(),
         }
+    }
+
+    /// Per-variant dispatch counts of one (workflow, tenant) row, in
+    /// variant declaration order — empty when routing is off. Lock-free
+    /// (metrics read path).
+    fn variant_counts(&self, idx: usize, tenant: usize) -> Vec<(String, u64)> {
+        let Some(rs) = &self.route else { return Vec::new() };
+        rs.variants()
+            .iter()
+            .zip(self.routed[idx][tenant].iter())
+            .map(|(v, c)| (v.name.clone(), c.load(Ordering::Relaxed)))
+            .collect()
     }
 
     /// Push this queue's telemetry into the node store (node 0 hosts the
@@ -1044,6 +1093,7 @@ impl IngressInner {
                         request: job.request,
                         retain_trace: job.retain_trace,
                         started: false,
+                        stage_entered: Vec::new(),
                     });
                 } else {
                     kept.push_back(job);
@@ -1077,6 +1127,7 @@ impl IngressInner {
                     request: f.request,
                     retain_trace: f.retain_trace,
                     started: true,
+                    stage_entered: f.stage_entered,
                 });
             } else {
                 i += 1;
@@ -1099,7 +1150,27 @@ impl IngressInner {
                 request: f.request,
                 retain_trace: f.retain_trace,
                 started: true,
+                stage_entered: f.stage_entered,
             });
+        }
+    }
+
+    /// Censored [`StageStats`] fold for a request that died (expired,
+    /// cancelled, or failed) after finishing at least one stage: every
+    /// stage the request *exited* contributes `died − entered` — a
+    /// conservative lower bound on remaining-from-that-stage (the true
+    /// remaining would be `completion − entered` ≥ that). The stage it
+    /// died inside is skipped: that sample carries no progress signal.
+    /// Without this, a fully overloaded front door (100% expiry) feeds
+    /// the estimator nothing, and the `deadline_slack` policy and the
+    /// JIT router fly blind exactly when they matter most.
+    fn fold_censored_stages(&self, idx: usize, stage_entered: &[(u32, Instant)], died: Instant) {
+        if stage_entered.len() < 2 {
+            return;
+        }
+        let mut stats = self.stage_stats[idx].lock().unwrap();
+        for (stage, entered) in &stage_entered[..stage_entered.len() - 1] {
+            stats.observe(*stage, died.saturating_duration_since(*entered));
         }
     }
 
@@ -1113,6 +1184,7 @@ impl IngressInner {
     fn fail_lapsed(&self, lapsed: Vec<Lapsed>) {
         for l in lapsed {
             if l.started {
+                self.fold_censored_stages(l.idx, &l.stage_entered, self.clock.now());
                 self.d.table().fail_request(l.request, "request deadline expired");
             }
             let waited = self.since(l.submitted);
@@ -1215,6 +1287,7 @@ impl IngressInner {
     /// futures so nothing downstream waits on withdrawn work, fulfil the
     /// ticket, free the in-flight slot.
     fn finish_cancelled(&self, f: InFlight) {
+        self.fold_censored_stages(f.idx, &f.stage_entered, self.clock.now());
         self.d.table().fail_request(f.request, "request cancelled");
         if f.cell.fulfil(Err(Error::Cancelled), self.since(f.submitted)) {
             self.cancelled[f.idx][f.tenant].fetch_add(1, Ordering::Relaxed);
@@ -1255,7 +1328,14 @@ impl IngressInner {
         }
         this.trace.record(job.request, TraceKind::Scheduled, 0);
         this.journal.append(&journal::started(job.request.0));
-        let env = Env::with_request(&this.d, job.session, job.request);
+        let mut env = Env::with_request(&this.d, job.session, job.request);
+        // Per-request routing hint, shared with the env's stubs: the
+        // decision point in `run_poll` stamps it before every poll, and
+        // its consumptions land on this (workflow, tenant)'s counter row.
+        let hint = this.route.as_ref().map(|rs| {
+            RouteHint::with_counters(rs.clone(), Some(this.routed[idx][job.tenant].clone()))
+        });
+        env.ctx.route = hint.clone();
         let driver = match job.driver.take() {
             Some(driver) => driver,
             None => driver_for(this.kinds[idx], &job.input),
@@ -1268,6 +1348,7 @@ impl IngressInner {
                 tenant: job.tenant,
                 driver,
                 env,
+                hint,
                 submitted: job.submitted,
                 deadline: job.deadline,
                 timeout: job.timeout,
@@ -1297,6 +1378,25 @@ impl IngressInner {
             this.d.table().fail_request(f.request, "request deadline expired");
             this.finish(f, Err(Error::Deadline(timeout)));
             return;
+        }
+        // JIT routing decision point (DESIGN.md §13): refresh the hint
+        // against the request's *current* deadline slack right before the
+        // driver runs, so every call it issues from this poll dispatches
+        // under the freshest decision. Slack is signed: remaining
+        // deadline budget minus the stage's remaining-work estimate.
+        if let (Some(rs), Some(hint)) = (&this.route, &f.hint) {
+            let est = this.stage_stats[f.idx].lock().unwrap().estimate(f.stage);
+            let budget = f.deadline.saturating_duration_since(poll_started).as_secs_f64();
+            let slack = budget - est.map_or(0.0, |e| e.as_secs_f64());
+            let over = this.tenant_adm[f.idx][f.tenant].over_budget(poll_started);
+            let prev = hint.get();
+            let dec = rs.decide(Some(slack), est.map(|e| e.as_secs_f64()), over);
+            hint.set(dec);
+            // Traced on decision *change* only, so a steady request's
+            // timeline carries one Routed mark, not one per poll.
+            if prev.map(|p| p.variant) != Some(dec.variant) {
+                this.trace.record(f.request, TraceKind::Routed, dec.variant as u64);
+            }
         }
         this.trace.record(f.request, TraceKind::Polling, f.stage as u64);
         let step = f.driver.poll(&f.env);
@@ -1449,13 +1549,19 @@ impl IngressInner {
         let now = self.clock.now();
         let ok = result.is_ok();
         if ok {
-            // Feed the per-stage remaining-time stats (successes only:
-            // failures truncate "remaining" and would teach the slack
-            // policy that doomed requests finish fast).
+            // Feed the per-stage remaining-time stats with complete
+            // observations.
             let mut stats = self.stage_stats[f.idx].lock().unwrap();
             for (stage, entered) in &f.stage_entered {
                 stats.observe(*stage, now.saturating_duration_since(*entered));
             }
+        } else {
+            // Died mid-flight (deadline expiry on the poll path, driver
+            // error): exited stages still carry real timing — see
+            // `fold_censored_stages`. The stage it died in is excluded,
+            // so a truncated "remaining" never teaches the slack policy
+            // that doomed requests finish fast.
+            self.fold_censored_stages(f.idx, &f.stage_entered, now);
         }
         let latency = now.saturating_duration_since(f.submitted);
         // Built before `fulfil` consumes the result; appended only if this
@@ -1631,6 +1737,16 @@ impl Ingress {
             .clone()
             .unwrap_or_else(|| TraceSink::recording(d.cfg().ingress.trace.capacity, clock.clone()));
         d.trace_slot().install(trace.clone());
+        // The JIT router: built from the validated config and installed
+        // into the deployment's shared slot (late-bound, like the trace
+        // sink) so the global and component controllers operate on the
+        // same instance. `None` — no variants declared, or route "fixed"
+        // — keeps dispatch byte-for-byte the pre-routing path.
+        let route = RouteState::from_config(d.cfg());
+        if let Some(rs) = &route {
+            d.route_slot().install(rs.clone());
+        }
+        let nvariants = route.as_ref().map_or(0, |r| r.variants().len());
         let epoch = clock.now();
         let inner = Arc::new(IngressInner {
             d: d.clone(),
@@ -1669,6 +1785,18 @@ impl Ingress {
             expired_in_queue: kinds.iter().map(per_tenant_u64).collect(),
             cancelled: kinds.iter().map(per_tenant_u64).collect(),
             stage_stats: kinds.iter().map(|_| Mutex::new(StageStats::new())).collect(),
+            route,
+            routed: kinds
+                .iter()
+                .map(|_| {
+                    weights
+                        .iter()
+                        .map(|_| {
+                            Arc::new((0..nvariants).map(|_| AtomicU64::new(0)).collect::<Vec<_>>())
+                        })
+                        .collect()
+                })
+                .collect(),
             breakdown: kinds
                 .iter()
                 .map(|_| weights.iter().map(|_| StageHistograms::new()).collect())
@@ -1728,7 +1856,7 @@ impl Ingress {
             // it) or observes the flag here — no ticket is ever left
             // unfulfilled.
             if inner.stop.load(Ordering::Relaxed) {
-                return Err(Error::Shed(kind.name().into(), "ingress stopped".into()));
+                return Err(Error::Shed(kind.name().into(), "ingress stopped".into(), None));
             }
             // Composed admission, decided against the scheduler's clock
             // (a token bucket must refill on the same time axis deadlines
@@ -1742,8 +1870,17 @@ impl Ingress {
             let now = inner.clock.now();
             let decision = inner.admission[idx].decide_at(inner.depth_of(idx), now).and_then(
                 |()| {
-                    inner.tenant_adm[idx][tenant].decide_at(0, now).map_err(|reason| {
-                        format!("tenant `{}`: {reason}", inner.tenants[tenant].name)
+                    // Prefix the reason with the tenant, keeping the
+                    // structured retry rate intact — `Error::retry_after`
+                    // reads the rate, never the reason string.
+                    inner.tenant_adm[idx][tenant].decide_at(0, now).map_err(|s| {
+                        admission::Shed {
+                            reason: format!(
+                                "tenant `{}`: {}",
+                                inner.tenants[tenant].name, s.reason
+                            ),
+                            ..s
+                        }
                     })
                 },
             );
@@ -1791,7 +1928,7 @@ impl Ingress {
                         inner: Arc::downgrade(&self.inner),
                     })
                 }
-                Err(reason) => Err(Error::Shed(kind.name().into(), reason)),
+                Err(shed) => Err(Error::Shed(kind.name().into(), shed.reason, shed.retry_rate)),
             }
         };
         if verdict.is_ok() {
@@ -2003,7 +2140,7 @@ impl Ingress {
         for (idx, job) in queued {
             let kind = self.inner.kinds[idx].name().to_string();
             let waited = self.inner.since(job.submitted);
-            if job.cell.fulfil(Err(Error::Shed(kind, "ingress stopped".into())), waited) {
+            if job.cell.fulfil(Err(Error::Shed(kind, "ingress stopped".into(), None)), waited) {
                 self.inner.failed[idx][job.tenant].fetch_add(1, Ordering::Relaxed);
                 self.inner.trace.record(job.request, TraceKind::Shed, 0);
                 self.inner.journal.append(&journal::terminal(job.request.0, "shed", Value::Null));
@@ -2017,7 +2154,7 @@ impl Ingress {
             self.inner.d.table().fail_request(f.request, "ingress stopped");
             let kind = self.inner.kinds[f.idx].name().to_string();
             let waited = self.inner.since(f.submitted);
-            if f.cell.fulfil(Err(Error::Shed(kind, "ingress stopped".into())), waited) {
+            if f.cell.fulfil(Err(Error::Shed(kind, "ingress stopped".into(), None)), waited) {
                 self.inner.failed[f.idx][f.tenant].fetch_add(1, Ordering::Relaxed);
                 self.inner.trace.record(f.request, TraceKind::Shed, 0);
                 self.inner.journal.append(&journal::terminal(f.request.0, "shed", Value::Null));
@@ -2828,5 +2965,180 @@ mod tests {
         );
         let _ = std::fs::remove_file(&ref_path);
         let _ = std::fs::remove_file(&crash_path);
+    }
+
+    /// Satellite 1 (ISSUE 10): the slack estimator must keep learning
+    /// under overload. Every request below finishes stage 0 and then dies
+    /// on its deadline — a 100%-expiry trace. The old success-only fold
+    /// fed `StageStats` nothing here, starving the `deadline_slack`
+    /// estimate exactly when overload made it matter; censored folds from
+    /// exited stages make it converge.
+    #[test]
+    fn stage_stats_converge_under_a_total_expiry_trace() {
+        let (clock, v) = Clock::manual();
+        let d = fast_router();
+        let mut opts = SchedulerOpts::new(1, 4);
+        opts.clock = clock.clone();
+        let ing =
+            Ingress::start_with_opts(&d, &[WorkflowKind::Router], AdmissionPolicy::Unbounded, opts);
+        let eng = ScriptedEngine::new();
+        assert!(
+            ing.inner.stage_stats[0].lock().unwrap().estimate(0).is_none(),
+            "fresh estimator"
+        );
+        for i in 0..3 {
+            let t = ing
+                .submit(
+                    SubmitRequest::workflow(WorkflowKind::Router)
+                        .driver(eng.driver("doomed", 2))
+                        .deadline(Duration::from_secs(5)),
+                )
+                .unwrap();
+            assert!(eng.wait_created(2 * i + 1, Duration::from_secs(5)));
+            // finish stage 0 after one virtual second...
+            v.advance(Duration::from_secs(1));
+            eng.cell(2 * i).resolve(json!("s0"), 0);
+            assert!(eng.wait_created(2 * i + 2, Duration::from_secs(5)), "stage 1 call issued");
+            // ...then die parked in stage 1, well past the deadline.
+            v.advance(Duration::from_secs(10));
+            let err = t.wait(Duration::from_secs(5)).unwrap_err();
+            assert!(matches!(err, Error::Deadline(..)), "{err}");
+        }
+        let m = ing.metrics(WorkflowKind::Router).unwrap();
+        assert_eq!(m.completed, 0, "the trace is 100% expiry");
+        assert_eq!(m.failed, 3, "every request died after starting");
+        {
+            let stats = ing.inner.stage_stats[0].lock().unwrap();
+            let est = stats
+                .estimate(0)
+                .expect("censored folds must feed the estimator with zero successes");
+            assert!(est >= Duration::from_secs(1), "lower-bound sample, got {est:?}");
+            assert!(
+                stats.estimate(1).is_none(),
+                "the stage a request died in is excluded (no progress signal)"
+            );
+        }
+        ing.stop();
+        d.shutdown();
+    }
+
+    /// Satellite 4 (ISSUE 10): deterministic router A/B on the virtual
+    /// clock. The same seeded mixed-slack trace runs once pinned to the
+    /// large variant and once under `route = "jit"`: jit routes
+    /// negative-slack requests to the fast variant and strictly reduces
+    /// deadline misses at identical load, the per-variant counters sum
+    /// to the total number of dispatches, and the tables drain to zero.
+    #[test]
+    fn jit_routing_beats_fixed_large_on_a_mixed_slack_trace() {
+        use crate::config::ModelVariant;
+
+        // Alternating tight (1 s) and loose (20 s) deadlines.
+        const TRACE: [u64; 8] = [1, 20, 1, 20, 1, 20, 1, 20];
+        const BASE_SERVICE_S: f64 = 2.0;
+
+        let run = |route: &str| -> (u64, Vec<(String, u64)>, usize) {
+            let (clock, v) = Clock::manual();
+            let mut cfg = WorkflowKind::Router.config();
+            cfg.time_scale = 0.0005;
+            cfg.control.global_period_ms = 10;
+            cfg.engine.variants = vec![
+                ModelVariant { name: "fast".into(), latency_mult: 0.35, quality: 0.82 },
+                ModelVariant { name: "base".into(), latency_mult: 1.0, quality: 0.92 },
+                ModelVariant { name: "large".into(), latency_mult: 2.2, quality: 0.99 },
+            ];
+            cfg.ingress.route = route.into();
+            let d = Deployment::launch(cfg).unwrap();
+            let mut opts = SchedulerOpts::new(2, 8);
+            opts.clock = clock.clone();
+            let ing = Ingress::start_with_opts(
+                &d,
+                &[WorkflowKind::Router],
+                AdmissionPolicy::Unbounded,
+                opts,
+            );
+            let eng = ScriptedEngine::new();
+            let mult_of = |call: usize| -> f64 {
+                match eng.variant_of(call).as_deref() {
+                    Some("fast") => 0.35,
+                    Some("large") => 2.2,
+                    _ => 1.0,
+                }
+            };
+            // Warm the slack estimator with two completed requests so the
+            // decision point has a remaining-work estimate.
+            let mut call = 0;
+            for _ in 0..2 {
+                let t = ing
+                    .submit(
+                        SubmitRequest::workflow(WorkflowKind::Router)
+                            .driver(eng.driver("warm", 1))
+                            .deadline(Duration::from_secs(60)),
+                    )
+                    .unwrap();
+                assert!(eng.wait_created(call + 1, Duration::from_secs(5)));
+                v.advance(Duration::from_secs_f64(BASE_SERVICE_S * mult_of(call)));
+                eng.cell(call).resolve(json!("w"), 0);
+                t.wait(Duration::from_secs(5)).unwrap();
+                call += 1;
+            }
+            // The measured trace: each request issues one call, and the
+            // test plays engine latency as the base service time scaled
+            // by the call's *routed* variant, on the virtual clock — so
+            // the routing decision is what decides each deadline race.
+            let mut misses = 0u64;
+            for deadline_s in TRACE {
+                let t = ing
+                    .submit(
+                        SubmitRequest::workflow(WorkflowKind::Router)
+                            .driver(eng.driver("req", 1))
+                            .deadline(Duration::from_secs(deadline_s)),
+                    )
+                    .unwrap();
+                assert!(eng.wait_created(call + 1, Duration::from_secs(5)));
+                let service = BASE_SERVICE_S * mult_of(call);
+                v.advance(Duration::from_secs_f64(service));
+                if service < deadline_s as f64 {
+                    eng.cell(call).resolve(json!("out"), 0);
+                }
+                if t.wait(Duration::from_secs(5)).is_err() {
+                    misses += 1;
+                }
+                call += 1;
+            }
+            let m = ing.metrics(WorkflowKind::Router).unwrap();
+            assert_eq!(m.route, route, "snapshot reports the configured route");
+            assert_eq!(
+                m.tenants[0].variants, m.variants,
+                "single tenant: aggregate = tenant row"
+            );
+            assert_eq!((m.depth, m.in_flight), (0, 0), "tables drain to zero");
+            let dispatched = eng.created_count();
+            ing.stop();
+            d.shutdown();
+            (misses, m.variants, dispatched)
+        };
+
+        let (fixed_misses, fixed_counts, fixed_calls) = run("fixed-large");
+        let (jit_misses, jit_counts, jit_calls) = run("jit");
+        let total = |c: &[(String, u64)]| c.iter().map(|(_, n)| n).sum::<u64>();
+
+        // Pinned: every dispatch lands on `large`, and all 4 tight
+        // requests (4.4 s of service against a 1 s deadline) miss.
+        assert_eq!(fixed_calls, 10);
+        assert_eq!(total(&fixed_counts), 10, "counters sum to total dispatches");
+        assert_eq!(fixed_counts.iter().find(|(n, _)| n == "large").unwrap().1, 10);
+        assert_eq!(fixed_misses, 4);
+
+        // JIT: identical load, per-call decisions.
+        assert_eq!(jit_calls, 10);
+        assert_eq!(total(&jit_counts), 10, "counters sum to total dispatches");
+        assert!(
+            jit_counts.iter().find(|(n, _)| n == "fast").unwrap().1 >= 1,
+            "jit must route negative-slack requests to the fast variant: {jit_counts:?}"
+        );
+        assert!(
+            jit_misses < fixed_misses,
+            "jit ({jit_misses} misses) must strictly beat fixed-large ({fixed_misses} misses)"
+        );
     }
 }

@@ -1,0 +1,520 @@
+//! Just-in-time model routing on deadline slack (DESIGN.md §13).
+//!
+//! The two-level control story applied to *which model* serves a call:
+//! agent calls no longer bind to a fixed engine class. When the engine
+//! declares named variants (`engine.variants[]` — distinct latency/quality
+//! curves behind one batch former), the front door picks a variant per
+//! call at dispatch time from the request's current deadline slack
+//! (`deadline − now − StageStats::estimate(stage)`) and the tenant's
+//! budget state:
+//!
+//! * slack below the fast threshold, or the tenant's token bucket dry →
+//!   the *fastest* variant that still meets the quality floor (a request
+//!   already past its deadline waives the floor — any answer beats none);
+//! * slack of several multiples of the remaining-work estimate → the
+//!   *highest-quality* variant (headroom is free quality);
+//! * otherwise → the *base* variant (the profile as calibrated).
+//!
+//! The thresholds and the quality floor are global policy: the
+//! `jit_route` policy ([`crate::coordinator::policies`]) adjusts them
+//! from cluster telemetry each tick, and the component controller
+//! enforces the floor locally on every engine admit ([`RouteState::enforce`]).
+//! With no variants declared (every pre-existing config) the router is
+//! never installed and dispatch is byte-for-byte the old fixed path.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::{DeploymentConfig, ModelVariant};
+
+/// Which routing behaviour the front door runs (`ingress.route`). This is
+/// the single name authority shared by config validation, the loadgen
+/// `--route` axis and the CLI — a typo fails at parse time everywhere.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RouteMode {
+    /// No per-call decision. `Fixed(None)` is the pre-variant behaviour
+    /// (no router installed at all); `Fixed(Some(name))` pins every call
+    /// to one named variant — the bench's comparison arms.
+    Fixed(Option<String>),
+    /// Pick a variant per call from deadline slack at dispatch time.
+    Jit,
+}
+
+impl RouteMode {
+    /// Parse a config/CLI name: "fixed" | "jit" | "fixed-<variant>".
+    /// Whether a pinned variant actually exists is checked where the
+    /// variant table is in scope (config validation / [`RouteState::new`]).
+    pub fn parse(s: &str) -> Option<RouteMode> {
+        match s {
+            "fixed" => Some(RouteMode::Fixed(None)),
+            "jit" => Some(RouteMode::Jit),
+            other => other
+                .strip_prefix("fixed-")
+                .filter(|name| !name.is_empty())
+                .map(|name| RouteMode::Fixed(Some(name.to_string()))),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            RouteMode::Fixed(None) => "fixed".into(),
+            RouteMode::Fixed(Some(v)) => format!("fixed-{v}"),
+            RouteMode::Jit => "jit".into(),
+        }
+    }
+}
+
+/// One routing decision: the chosen variant plus whether the request was
+/// urgent (negative slack / tenant over budget) when it was made — urgency
+/// waives the quality floor at local enforcement too.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Decision {
+    pub variant: usize,
+    pub urgent: bool,
+}
+
+/// An f64 stored as atomic bits so policy updates never take a lock on
+/// the dispatch hot path.
+struct AtomicF64(AtomicU64);
+
+impl AtomicF64 {
+    fn new(x: f64) -> AtomicF64 {
+        AtomicF64(AtomicU64::new(x.to_bits()))
+    }
+    fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+    fn set(&self, x: f64) {
+        self.0.store(x.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// Default fast threshold: route to the fast variant once slack dips
+/// below zero — the request will miss its deadline on the current curve.
+pub const DEFAULT_SLACK_FAST_S: f64 = 0.0;
+/// Default headroom multiple: slack above 4x the remaining-work estimate
+/// upgrades to the highest-quality variant.
+pub const DEFAULT_HEADROOM_LARGE: f64 = 4.0;
+/// Default quality floor: none (any declared variant is acceptable).
+pub const DEFAULT_QUALITY_FLOOR: f64 = 0.0;
+
+/// Shared router state: the variant table, the policy-tunable thresholds,
+/// and the global per-variant dispatch counters. One per deployment,
+/// installed into the [`SharedRoute`] slot by `Ingress::start` when the
+/// config declares variants and a non-`fixed` route.
+pub struct RouteState {
+    mode: RouteMode,
+    variants: Vec<ModelVariant>,
+    /// Precomputed indices: min latency_mult / max quality / closest to
+    /// the profile curve (latency_mult nearest 1.0).
+    fastest: usize,
+    largest: usize,
+    base: usize,
+    /// `Fixed(Some(_))` resolved to its index.
+    pinned: Option<usize>,
+    slack_fast_s: AtomicF64,
+    headroom_large: AtomicF64,
+    quality_floor: AtomicF64,
+    /// Per-variant dispatch decisions, cluster-wide (the per-workflow /
+    /// per-tenant split lives on the ingress shard counters).
+    dispatches: Vec<AtomicU64>,
+}
+
+impl RouteState {
+    /// Build from a validated mode + variant table. Returns `None` for
+    /// `Fixed(None)` or an empty table: routing stays uninstalled and the
+    /// dispatch path is exactly the pre-variant one.
+    pub fn new(mode: RouteMode, variants: &[ModelVariant]) -> Option<Arc<RouteState>> {
+        if variants.is_empty() || mode == RouteMode::Fixed(None) {
+            return None;
+        }
+        let arg = |f: &dyn Fn(&ModelVariant) -> f64, max: bool| -> usize {
+            let mut best = 0usize;
+            for (i, v) in variants.iter().enumerate() {
+                let cur = f(&variants[best]);
+                let better = if max { f(v) > cur } else { f(v) < cur };
+                if better {
+                    best = i;
+                }
+            }
+            best
+        };
+        let pinned = match &mode {
+            RouteMode::Fixed(Some(name)) => {
+                Some(variants.iter().position(|v| &v.name == name)?)
+            }
+            _ => None,
+        };
+        Some(Arc::new(RouteState {
+            mode,
+            fastest: arg(&|v| v.latency_mult, false),
+            largest: arg(&|v| v.quality, true),
+            base: arg(&|v| (v.latency_mult.ln()).abs(), false),
+            pinned,
+            slack_fast_s: AtomicF64::new(DEFAULT_SLACK_FAST_S),
+            headroom_large: AtomicF64::new(DEFAULT_HEADROOM_LARGE),
+            quality_floor: AtomicF64::new(DEFAULT_QUALITY_FLOOR),
+            dispatches: variants.iter().map(|_| AtomicU64::new(0)).collect(),
+            variants: variants.to_vec(),
+        }))
+    }
+
+    /// Resolve the deployment's configured route. The config was
+    /// validated, so a pinned name always resolves.
+    pub fn from_config(cfg: &DeploymentConfig) -> Option<Arc<RouteState>> {
+        let mode = RouteMode::parse(&cfg.ingress.route)?;
+        Self::new(mode, &cfg.engine.variants)
+    }
+
+    pub fn mode(&self) -> &RouteMode {
+        &self.mode
+    }
+
+    pub fn variants(&self) -> &[ModelVariant] {
+        &self.variants
+    }
+
+    pub fn variant_name(&self, idx: usize) -> &str {
+        &self.variants[idx].name
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.variants.iter().position(|v| v.name == name)
+    }
+
+    /// Pick a variant for one dispatch. `slack_s` is the request's signed
+    /// deadline slack (`None` before the deadline is known — treated as
+    /// ample); `est_s` the `StageStats` remaining-work estimate.
+    pub fn decide(&self, slack_s: Option<f64>, est_s: Option<f64>, over_budget: bool) -> Decision {
+        if let Some(idx) = self.pinned {
+            return Decision { variant: idx, urgent: false };
+        }
+        let floor = self.quality_floor.get();
+        let slack = slack_s.unwrap_or(f64::INFINITY);
+        let urgent = over_budget || slack < self.slack_fast_s.get();
+        let variant = if urgent {
+            // fastest variant meeting the floor; a request already past
+            // its deadline (or with no floor-meeting variant) takes the
+            // absolute fastest — any answer beats a miss.
+            if slack < 0.0 {
+                self.fastest
+            } else {
+                self.fastest_meeting(floor).unwrap_or(self.fastest)
+            }
+        } else {
+            let headroom = match est_s {
+                Some(est) if est > 0.0 => slack / est,
+                // no estimate yet: only clearly-idle requests upgrade
+                _ => 0.0,
+            };
+            let pick = if headroom > self.headroom_large.get() { self.largest } else { self.base };
+            // the floor binds every non-urgent dispatch
+            if self.variants[pick].quality < floor {
+                self.fastest_meeting(floor).unwrap_or(self.largest)
+            } else {
+                pick
+            }
+        };
+        Decision { variant, urgent }
+    }
+
+    /// Lowest-latency variant whose quality is >= `floor`.
+    fn fastest_meeting(&self, floor: f64) -> Option<usize> {
+        self.variants
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.quality >= floor)
+            .min_by(|a, b| a.1.latency_mult.total_cmp(&b.1.latency_mult))
+            .map(|(i, _)| i)
+    }
+
+    /// Local enforcement at the engine admit path: the component
+    /// controller re-checks the stamped variant against the *current*
+    /// quality floor (the global controller may have raised it since the
+    /// front door decided) and substitutes the cheapest floor-meeting
+    /// variant. Urgent dispatches keep their fast pick.
+    pub fn enforce(&self, name: &str, urgent: bool) -> usize {
+        let idx = self.index_of(name).unwrap_or(self.base);
+        if urgent || self.pinned.is_some() {
+            return idx;
+        }
+        let floor = self.quality_floor.get();
+        if self.variants[idx].quality < floor {
+            self.fastest_meeting(floor).unwrap_or(idx)
+        } else {
+            idx
+        }
+    }
+
+    /// Count one dispatch decision (cluster-wide; the ingress keeps the
+    /// per-workflow/per-tenant split).
+    pub fn note(&self, idx: usize) {
+        self.dispatches[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Per-variant dispatch counts, in variant declaration order.
+    pub fn counts(&self) -> Vec<(String, u64)> {
+        self.variants
+            .iter()
+            .zip(&self.dispatches)
+            .map(|(v, c)| (v.name.clone(), c.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Dispatch-weighted mean quality (the bench's quality accounting),
+    /// `None` before any dispatch was routed.
+    pub fn quality_mean(&self) -> Option<f64> {
+        let mut n = 0u64;
+        let mut sum = 0.0;
+        for (v, c) in self.variants.iter().zip(&self.dispatches) {
+            let c = c.load(Ordering::Relaxed);
+            n += c;
+            sum += c as f64 * v.quality;
+        }
+        (n > 0).then(|| sum / n as f64)
+    }
+
+    pub fn set_thresholds(&self, slack_fast_s: f64, headroom_large: f64, quality_floor: f64) {
+        self.slack_fast_s.set(slack_fast_s);
+        self.headroom_large.set(headroom_large.max(1.0));
+        self.quality_floor.set(quality_floor.clamp(0.0, 1.0));
+    }
+
+    pub fn thresholds(&self) -> (f64, f64, f64) {
+        (self.slack_fast_s.get(), self.headroom_large.get(), self.quality_floor.get())
+    }
+
+    pub fn quality_floor(&self) -> f64 {
+        self.quality_floor.get()
+    }
+}
+
+/// Per-request routing hint: the front door writes the decision here at
+/// each dispatch and the agent stub reads it when issuing the call, so a
+/// driver that fans out several calls from one poll stamps each of them
+/// with the same (freshest) decision. Index 0 means "no decision yet" —
+/// the stub then leaves the call unrouted (profile curve).
+pub struct RouteHint {
+    state: Arc<RouteState>,
+    /// Chosen variant index + 1; 0 = unset.
+    sel: AtomicUsize,
+    urgent: AtomicBool,
+    /// Per-variant dispatch counters of the owning (workflow, tenant) —
+    /// shared with the ingress metrics snapshot, bumped by [`Self::consume`]
+    /// once per stamped call. `None` outside an ingress (unit tests).
+    counters: Option<Arc<Vec<AtomicU64>>>,
+}
+
+impl RouteHint {
+    pub fn new(state: Arc<RouteState>) -> Arc<RouteHint> {
+        Self::with_counters(state, None)
+    }
+
+    /// A hint whose consumptions also land on the given per-variant
+    /// counter slice (the ingress passes its per-(workflow, tenant) row).
+    pub fn with_counters(
+        state: Arc<RouteState>,
+        counters: Option<Arc<Vec<AtomicU64>>>,
+    ) -> Arc<RouteHint> {
+        Arc::new(RouteHint {
+            state,
+            sel: AtomicUsize::new(0),
+            urgent: AtomicBool::new(false),
+            counters,
+        })
+    }
+
+    pub fn state(&self) -> &Arc<RouteState> {
+        &self.state
+    }
+
+    pub fn set(&self, d: Decision) {
+        self.urgent.store(d.urgent, Ordering::Relaxed);
+        self.sel.store(d.variant + 1, Ordering::Release);
+    }
+
+    pub fn get(&self) -> Option<Decision> {
+        match self.sel.load(Ordering::Acquire) {
+            0 => None,
+            n => Some(Decision { variant: n - 1, urgent: self.urgent.load(Ordering::Relaxed) }),
+        }
+    }
+
+    /// The stamped variant's name + urgency — a pure read (assertions,
+    /// display). Dispatch accounting goes through [`Self::consume`].
+    pub fn variant(&self) -> Option<(&str, bool)> {
+        self.get().map(|d| (self.state.variant_name(d.variant), d.urgent))
+    }
+
+    /// Read the stamped decision *and count it as one dispatch*: the
+    /// agent stub (and the scripted testkit engine) call this exactly
+    /// once per issued call, so the per-variant counters sum to the total
+    /// number of routed dispatches — the satellite-4 invariant.
+    pub fn consume(&self) -> Option<(&str, bool)> {
+        let d = self.get()?;
+        self.state.note(d.variant);
+        if let Some(c) = &self.counters {
+            c[d.variant].fetch_add(1, Ordering::Relaxed);
+        }
+        Some((self.state.variant_name(d.variant), d.urgent))
+    }
+}
+
+/// Late-install slot for the deployment's router (mirrors the trace
+/// sink's `SharedSink`): the deployment is built before the ingress
+/// decides whether routing is on, and the global/component controllers
+/// hold clones of this slot from spawn time.
+#[derive(Clone, Default)]
+pub struct SharedRoute {
+    slot: Arc<Mutex<Option<Arc<RouteState>>>>,
+}
+
+impl SharedRoute {
+    pub fn install(&self, state: Arc<RouteState>) {
+        *self.slot.lock().unwrap() = Some(state);
+    }
+
+    pub fn get(&self) -> Option<Arc<RouteState>> {
+        self.slot.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn variants() -> Vec<ModelVariant> {
+        vec![
+            ModelVariant { name: "fast".into(), latency_mult: 0.35, quality: 0.82 },
+            ModelVariant { name: "base".into(), latency_mult: 1.0, quality: 0.92 },
+            ModelVariant { name: "large".into(), latency_mult: 2.2, quality: 0.99 },
+        ]
+    }
+
+    #[test]
+    fn parse_is_the_name_authority() {
+        assert_eq!(RouteMode::parse("fixed"), Some(RouteMode::Fixed(None)));
+        assert_eq!(RouteMode::parse("jit"), Some(RouteMode::Jit));
+        assert_eq!(
+            RouteMode::parse("fixed-large"),
+            Some(RouteMode::Fixed(Some("large".into())))
+        );
+        for typo in ["jitt", "Fixed", "fixed-", "adaptive", ""] {
+            assert!(RouteMode::parse(typo).is_none(), "{typo} must not parse");
+        }
+        // names round-trip
+        for name in ["fixed", "jit", "fixed-large"] {
+            assert_eq!(RouteMode::parse(name).unwrap().name(), name);
+        }
+    }
+
+    #[test]
+    fn no_variants_or_fixed_mode_means_no_router() {
+        assert!(RouteState::new(RouteMode::Jit, &[]).is_none());
+        assert!(RouteState::new(RouteMode::Fixed(None), &variants()).is_none());
+        assert!(RouteState::new(RouteMode::Fixed(Some("nope".into())), &variants()).is_none());
+        assert!(RouteState::new(RouteMode::Jit, &variants()).is_some());
+    }
+
+    #[test]
+    fn jit_routes_by_slack() {
+        let r = RouteState::new(RouteMode::Jit, &variants()).unwrap();
+        // negative slack -> fastest, flagged urgent
+        let d = r.decide(Some(-0.5), Some(2.0), false);
+        assert_eq!((d.variant, d.urgent), (0, true));
+        // ample headroom (slack >> estimate) -> highest quality
+        let d = r.decide(Some(20.0), Some(2.0), false);
+        assert_eq!((d.variant, d.urgent), (2, false));
+        // moderate slack -> base curve
+        let d = r.decide(Some(5.0), Some(2.0), false);
+        assert_eq!((d.variant, d.urgent), (1, false));
+        // no estimate yet: never upgrades, base curve
+        let d = r.decide(Some(100.0), None, false);
+        assert_eq!(d.variant, 1);
+        // tenant over budget -> fast even with slack
+        let d = r.decide(Some(5.0), Some(2.0), true);
+        assert_eq!((d.variant, d.urgent), (0, true));
+    }
+
+    #[test]
+    fn quality_floor_binds_except_when_urgent() {
+        let r = RouteState::new(RouteMode::Jit, &variants()).unwrap();
+        r.set_thresholds(0.0, 4.0, 0.9);
+        // urgent-but-not-expired: fastest variant meeting the floor
+        let d = r.decide(Some(0.5), Some(2.0), true);
+        assert_eq!(r.variant_name(d.variant), "base");
+        // past the deadline the floor is waived: absolute fastest
+        let d = r.decide(Some(-1.0), Some(2.0), false);
+        assert_eq!(r.variant_name(d.variant), "fast");
+        // local enforcement mirrors the same rule
+        assert_eq!(r.variant_name(r.enforce("fast", false)), "base");
+        assert_eq!(r.variant_name(r.enforce("fast", true)), "fast");
+        assert_eq!(r.variant_name(r.enforce("large", false)), "large");
+    }
+
+    #[test]
+    fn pinned_mode_always_picks_its_variant() {
+        let r = RouteState::new(RouteMode::Fixed(Some("large".into())), &variants()).unwrap();
+        for slack in [Some(-5.0), Some(0.5), Some(50.0), None] {
+            let d = r.decide(slack, Some(2.0), false);
+            assert_eq!(r.variant_name(d.variant), "large");
+            assert!(!d.urgent);
+        }
+    }
+
+    #[test]
+    fn counters_and_quality_mean_accumulate() {
+        let r = RouteState::new(RouteMode::Jit, &variants()).unwrap();
+        assert_eq!(r.quality_mean(), None);
+        r.note(0);
+        r.note(0);
+        r.note(2);
+        let counts = r.counts();
+        assert_eq!(counts[0], ("fast".into(), 2));
+        assert_eq!(counts[1], ("base".into(), 0));
+        assert_eq!(counts[2], ("large".into(), 1));
+        let q = r.quality_mean().unwrap();
+        let want = (2.0 * 0.82 + 0.99) / 3.0;
+        assert!((q - want).abs() < 1e-9, "{q} vs {want}");
+    }
+
+    #[test]
+    fn hint_stamps_and_reads_back() {
+        let r = RouteState::new(RouteMode::Jit, &variants()).unwrap();
+        let h = RouteHint::new(r);
+        assert_eq!(h.get(), None);
+        assert_eq!(h.variant(), None);
+        h.set(Decision { variant: 2, urgent: false });
+        assert_eq!(h.variant(), Some(("large", false)));
+        h.set(Decision { variant: 0, urgent: true });
+        assert_eq!(h.variant(), Some(("fast", true)));
+    }
+
+    #[test]
+    fn consume_counts_dispatches_but_variant_reads_are_pure() {
+        let r = RouteState::new(RouteMode::Jit, &variants()).unwrap();
+        let counters: Arc<Vec<AtomicU64>> =
+            Arc::new((0..3).map(|_| AtomicU64::new(0)).collect());
+        let h = RouteHint::with_counters(r.clone(), Some(counters.clone()));
+        assert_eq!(h.consume(), None, "unset hint never counts");
+        h.set(Decision { variant: 1, urgent: false });
+        h.variant();
+        h.variant();
+        assert_eq!(r.counts()[1].1, 0, "pure reads must not count");
+        assert_eq!(h.consume(), Some(("base", false)));
+        assert_eq!(h.consume(), Some(("base", false)));
+        assert_eq!(r.counts()[1].1, 2, "one count per consumed dispatch");
+        assert_eq!(counters[1].load(Ordering::Relaxed), 2, "tenant row tracks the global");
+        assert_eq!(counters[0].load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn shared_slot_installs_late() {
+        let slot = SharedRoute::default();
+        assert!(slot.get().is_none());
+        let r = RouteState::new(RouteMode::Jit, &variants()).unwrap();
+        slot.install(r);
+        assert!(slot.get().is_some());
+        assert!(slot.clone().get().is_some(), "clones share the slot");
+    }
+}

@@ -16,6 +16,12 @@
 //!               # halted mid-load, the journal replayed into a fresh node,
 //!               # every survivor driven to completion (DESIGN.md §12)
 //!               # -> BENCH_recovery.json
+//! nalar bench routing [--quick] [--out DIR] [--check-only]
+//!               # JIT model-routing comparison: the rps sweep run once
+//!               # per routing mode (jit vs fixed-large) on a
+//!               # variant-declaring config, gated on jit achieving
+//!               # strictly higher goodput at an equal quality floor
+//!               # (DESIGN.md §13) -> BENCH_routing.json
 //! nalar serve   --workflow router|financial|swe [--system nalar|...] [--secs 30]
 //!               [--rps N] [--config path.json] [--journal PATH]
 //!               [--listen 127.0.0.1:8080] [--port-file P] [--stop-file P]
@@ -32,7 +38,7 @@
 //! nalar loadgen --workload router|financial|swe [--rps 20,40,80 | 20:160:20]
 //!               [--systems nalar,ayo,crew,autogen] [--secs N] [--quick]
 //!               [--hc-smoke] [--workers N] [--cancel-rate 0.1]
-//!               [--schedule fifo,deadline_slack]
+//!               [--schedule fifo,deadline_slack] [--route fixed,jit]
 //!               [--tenants noisy | name:share[:weight],...] [--out DIR]
 //!               [--config path.json] [--check-only] [--remote HOST:PORT]
 //!               # open-loop saturation sweep -> BENCH_rps_sweep.json;
@@ -42,6 +48,8 @@
 //!               # --cancel-rate withdraws a seeded fraction of admitted
 //!               # requests mid-flight; --schedule adds a front-door
 //!               # scheduling axis (FIFO vs SRTF tail latency);
+//!               # --route adds a model-routing axis (jit vs fixed pins,
+//!               # needs a config declaring engine.variants);
 //!               # --tenants splits the offered load across tenants
 //!               # (DRR weights + per-tenant goodput rows — `noisy` is
 //!               # the 10x noisy-neighbor profile at equal weights);
@@ -207,6 +215,19 @@ fn cmd_bench(args: &Args) -> nalar::Result<()> {
         }
         let quick = args.flag("quick") || std::env::var("NALAR_BENCH_QUICK").is_ok();
         let path = bench::run_recovery(quick, &out_dir)?;
+        println!("bench reports written:\n  {}", path.display());
+        return Ok(());
+    }
+    // `nalar bench routing`: the JIT-routing goodput comparison — the
+    // same rps sweep run per routing mode (jit vs a fixed-large pin) on a
+    // variant-declaring config, gated on jit winning goodput at an equal
+    // quality floor (DESIGN.md §13).
+    if args.positional.get(1).map(|s| s.as_str()) == Some("routing") {
+        if args.flag("check-only") {
+            return bench::check_files(&out_dir, &[bench::ROUTING]);
+        }
+        let quick = args.flag("quick") || std::env::var("NALAR_BENCH_QUICK").is_ok();
+        let path = bench::run_routing(quick, &out_dir)?;
         println!("bench reports written:\n  {}", path.display());
         return Ok(());
     }
@@ -550,20 +571,22 @@ fn cmd_loadgen(args: &Args) -> nalar::Result<()> {
         }
         opts.cancel_rate = rate;
     }
+    // Axis flags go through the subsystem name-authority parsers
+    // (`SchedulePolicy::parse` / `RouteMode::parse`), so a typo dies here
+    // — at flag-parse time — not minutes into a sweep.
     if let Some(csv) = args.get("schedule") {
-        let mut schedules = Vec::new();
-        for name in csv.split(',') {
-            let name = name.trim();
-            if nalar::ingress::SchedulePolicy::parse(name).is_none() {
-                return Err(nalar::Error::Config(format!(
-                    "unknown schedule `{name}` (known: fifo, deadline_slack, stage)"
-                )));
-            }
-            if !schedules.contains(&name.to_string()) {
-                schedules.push(name.to_string());
-            }
-        }
-        opts.schedules = Some(schedules);
+        opts.schedules = Some(loadgen::parse_schedule_axis(csv).ok_or_else(|| {
+            nalar::Error::Config(format!(
+                "bad --schedule `{csv}` (known: fifo, deadline_slack, stage; no duplicates)"
+            ))
+        })?);
+    }
+    if let Some(csv) = args.get("route") {
+        opts.routes = Some(loadgen::parse_route_axis(csv).ok_or_else(|| {
+            nalar::Error::Config(format!(
+                "bad --route `{csv}` (known: fixed, jit, fixed-<variant>; no duplicates)"
+            ))
+        })?);
     }
     if let Some(spec) = args.get("tenants") {
         opts.tenants = Some(loadgen::parse_tenant_mix(spec).ok_or_else(|| {

@@ -25,6 +25,7 @@ use crate::engine::{EngineCore, PjrtCore, SimCore};
 use crate::error::{Error, Result};
 use crate::futures::{DepGraph, FutureTable};
 use crate::ids::{IdGen, InstanceId, NodeId, RequestId, SessionId};
+use crate::ingress::routing::SharedRoute;
 use crate::metrics::LatencyRecorder;
 use crate::nodestore::StoreDirectory;
 use crate::runtime::PjrtModel;
@@ -65,6 +66,11 @@ struct Inner {
     /// events land on the same per-request timelines the scheduler
     /// writes (a disabled no-op sink until then).
     trace: SharedSink,
+    /// Late-bound JIT-routing slot (same pattern as `trace`): the ingress
+    /// installs a [`crate::ingress::routing::RouteState`] here when the
+    /// config declares model variants and a non-`fixed` route. Component
+    /// controllers and the global controller hold clones from spawn time.
+    route: SharedRoute,
 }
 
 impl Deployment {
@@ -105,6 +111,7 @@ impl Deployment {
             global_join: Mutex::new(None),
             latency: LatencyRecorder::new(),
             trace: SharedSink::new(),
+            route: SharedRoute::default(),
         });
 
         let d = Deployment { inner };
@@ -141,6 +148,7 @@ impl Deployment {
             policies,
             provision,
         );
+        global.set_route_slot(self.inner.route.clone());
         *self.inner.global.lock().unwrap() = Some(global.clone());
         let period = Duration::from_millis(cfg.control.global_period_ms);
         let stop = self.inner.global_stop.clone();
@@ -221,6 +229,7 @@ impl Deployment {
             &self.inner.loads,
             self.inner.graph.clone(),
             self.inner.trace.clone(),
+            self.inner.route.clone(),
         );
         self.inner.instances.lock().unwrap().push(handle);
         Ok(id)
@@ -265,6 +274,7 @@ impl Deployment {
             table: self.inner.table.clone(),
             ids: self.inner.ids.clone(),
             cfg: self.inner.cfg.clone(),
+            route: None,
         }
     }
 
@@ -304,6 +314,12 @@ impl Deployment {
     /// controllers read through it per event.
     pub fn trace_slot(&self) -> &SharedSink {
         &self.inner.trace
+    }
+    /// The shared JIT-routing slot ([`SharedRoute`]): the ingress installs
+    /// the deployment's router here at start when the config asks for one;
+    /// component controllers enforce through it per engine admit.
+    pub fn route_slot(&self) -> &SharedRoute {
+        &self.inner.route
     }
 
     /// Snapshot of the deployment-lifetime latency recorder in

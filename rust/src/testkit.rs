@@ -147,6 +147,10 @@ pub struct ScriptedEngine {
 struct ScriptState {
     created: Vec<Arc<FutureCell>>,
     completed: Vec<String>,
+    /// Routed variant each call was dispatched under (None = unrouted),
+    /// in creation order — deterministic routing A/B tests pick each
+    /// call's simulated service time from this.
+    variants: Vec<Option<String>>,
 }
 
 impl ScriptedEngine {
@@ -213,12 +217,28 @@ impl ScriptedEngine {
         self.state.lock().unwrap().created.len()
     }
 
+    /// Routed variant the `i`-th scripted call was dispatched under
+    /// (`None` = unrouted / no decision stamped yet).
+    pub fn variant_of(&self, i: usize) -> Option<String> {
+        self.state.lock().unwrap().variants[i].clone()
+    }
+
     /// Labels of finished drivers, in the order their final poll ran.
     pub fn completions(&self) -> Vec<String> {
         self.state.lock().unwrap().completed.clone()
     }
 
     fn issue(&self, env: &Env, depth: u32) -> Arc<FutureCell> {
+        // Consume the request's routing hint exactly like the real agent
+        // stub does: the per-variant dispatch counters must tick once per
+        // scripted call too, or counters-sum-to-dispatches would not hold
+        // on scripted traces.
+        let variant = env
+            .ctx
+            .route
+            .as_ref()
+            .and_then(|h| h.consume())
+            .map(|(name, _)| name.to_string());
         let id = env.ctx.ids.future();
         let meta = FutureMeta::new(
             id,
@@ -233,6 +253,7 @@ impl ScriptedEngine {
         env.ctx.graph.on_create(id, env.ctx.request, &[], depth);
         let mut s = self.state.lock().unwrap();
         s.created.push(cell.clone());
+        s.variants.push(variant);
         drop(s);
         self.cv.notify_all();
         cell

@@ -69,6 +69,11 @@ pub enum TraceKind {
     Parked,
     /// A waker (or sweep nudge) moved the continuation back to ready.
     Resumed,
+    /// The JIT router changed this request's model-variant decision
+    /// (`detail` = the new variant index; DESIGN.md §13). An annotation,
+    /// not a scheduler state: `stage_durations` skips it so gap
+    /// attribution is unchanged whether routing is on or off.
+    Routed,
     /// An engine/tool call for this request started service
     /// (`detail` = the component-controller call tag).
     EngineDispatch,
@@ -95,6 +100,7 @@ impl TraceKind {
             TraceKind::Polling => "polling",
             TraceKind::Parked => "parked",
             TraceKind::Resumed => "resumed",
+            TraceKind::Routed => "routed",
             TraceKind::EngineDispatch => "engine_dispatch",
             TraceKind::EngineComplete => "engine_complete",
             TraceKind::Done => "done",
@@ -376,6 +382,9 @@ pub fn stage_durations(events: &[TraceEvent]) -> StageDurations {
     let mut first_ns: Option<u64> = None;
     for e in events {
         match e.kind {
+            // annotation, not a state: must not reset `prev` or the gap
+            // following a routing decision would be unattributed
+            TraceKind::Routed => continue,
             TraceKind::EngineDispatch => {
                 dispatched.push((e.detail, e.clock_ns));
                 continue; // overlay: not a scheduler state transition
@@ -559,10 +568,40 @@ mod tests {
             TraceKind::Polling,
             TraceKind::Parked,
             TraceKind::Resumed,
+            TraceKind::Routed,
             TraceKind::EngineDispatch,
             TraceKind::EngineComplete,
         ] {
             assert!(!k.is_terminal(), "{}", k.name());
         }
+    }
+
+    #[test]
+    fn routed_is_an_annotation_not_a_state() {
+        let r = RequestId(0);
+        let ev = |seq: u64, ms: u64, kind: TraceKind, detail: u64| TraceEvent {
+            request: r,
+            seq,
+            clock_ns: ms * 1_000_000,
+            kind,
+            detail,
+        };
+        // Same shape as the decomposition test, with a Routed event
+        // landing mid-poll: the decomposition must be identical.
+        let tl = vec![
+            ev(0, 0, TraceKind::Admitted, 0),
+            ev(1, 0, TraceKind::Queued, 0),
+            ev(2, 4, TraceKind::Scheduled, 0),
+            ev(3, 4, TraceKind::Routed, 2), // skipped by the fold
+            ev(4, 4, TraceKind::Polling, 0),
+            ev(5, 6, TraceKind::Parked, 11),
+            ev(6, 16, TraceKind::Resumed, 0),
+            ev(7, 17, TraceKind::Polling, 1),
+            ev(8, 18, TraceKind::Done, 0),
+        ];
+        let s = stage_durations(&tl);
+        assert_eq!(s.queue_wait_ns, 4_000_000);
+        assert_eq!(s.future_wait_ns, 10_000_000);
+        assert_eq!(s.sum_ns(), s.total_ns, "Routed must not break gap attribution");
     }
 }

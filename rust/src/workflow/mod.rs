@@ -148,8 +148,12 @@ pub mod configs {
   "time_scale": 0.01,
   "seed": 11,
   "control": {"global_period_ms": 40, "hol_threshold_ms": 120},
-  "engine": {"max_batch": 8, "executor": "sim", "kv_policy": "hint"},
-  "ingress": {"policy": "bounded", "schedule": "fifo", "queue_cap": 256, "workers": 8,
+  "engine": {"max_batch": 8, "executor": "sim", "kv_policy": "hint",
+             "variants": [{"name": "fast", "latency_mult": 0.35, "quality": 0.82},
+                          {"name": "base", "latency_mult": 1.0, "quality": 0.92},
+                          {"name": "large", "latency_mult": 2.2, "quality": 0.99}]},
+  "ingress": {"policy": "bounded", "schedule": "fifo", "route": "fixed",
+              "queue_cap": 256, "workers": 8,
               "max_in_flight": 1024,
               "tenants": [{"name": "interactive", "weight": 2},
                           {"name": "batch", "weight": 1}]},
@@ -183,8 +187,12 @@ pub mod configs {
   "time_scale": 0.01,
   "seed": 22,
   "control": {"global_period_ms": 40, "hol_threshold_ms": 120},
-  "engine": {"max_batch": 8, "executor": "sim", "kv_policy": "hint"},
-  "ingress": {"policy": "bounded", "schedule": "fifo", "queue_cap": 256, "workers": 8,
+  "engine": {"max_batch": 8, "executor": "sim", "kv_policy": "hint",
+             "variants": [{"name": "fast", "latency_mult": 0.35, "quality": 0.82},
+                          {"name": "base", "latency_mult": 1.0, "quality": 0.92},
+                          {"name": "large", "latency_mult": 2.2, "quality": 0.99}]},
+  "ingress": {"policy": "bounded", "schedule": "fifo", "route": "fixed",
+              "queue_cap": 256, "workers": 8,
               "max_in_flight": 1024,
               "tenants": [{"name": "interactive", "weight": 2},
                           {"name": "batch", "weight": 1}]},
@@ -215,8 +223,12 @@ pub mod configs {
   "time_scale": 0.01,
   "seed": 33,
   "control": {"global_period_ms": 40, "hol_threshold_ms": 120},
-  "engine": {"max_batch": 8, "executor": "sim", "kv_policy": "hint"},
-  "ingress": {"policy": "bounded", "schedule": "fifo", "queue_cap": 256, "workers": 8,
+  "engine": {"max_batch": 8, "executor": "sim", "kv_policy": "hint",
+             "variants": [{"name": "fast", "latency_mult": 0.35, "quality": 0.82},
+                          {"name": "base", "latency_mult": 1.0, "quality": 0.92},
+                          {"name": "large", "latency_mult": 2.2, "quality": 0.99}]},
+  "ingress": {"policy": "bounded", "schedule": "fifo", "route": "fixed",
+              "queue_cap": 256, "workers": 8,
               "max_in_flight": 1024,
               "tenants": [{"name": "interactive", "weight": 2},
                           {"name": "batch", "weight": 1}]},
